@@ -1,0 +1,119 @@
+//! Autoregressive generation through the `predict` artifact — the
+//! serving-path counterpart of `train_transformer`: load weights, slide a
+//! context window, sample next tokens, all from Rust via PJRT.
+//!
+//! Uses `target/params_trained.bin` when present (written by
+//! `train_transformer`), else the untrained `artifacts/params_init.bin`.
+//! The synthetic corpus is a noisy period-16 cycle, so generation quality
+//! is *measurable*: we report how often the sampled token continues the
+//! cycle.
+//!
+//! ```text
+//! make artifacts
+//! cargo run --release --example train_transformer 300   # optional: train
+//! cargo run --release --example generate_text [n_tokens] [temperature]
+//! ```
+
+use std::path::Path;
+
+use mixnet::runtime::{Runtime, TensorKind};
+use mixnet::util::Rng;
+use mixnet::{Error, Result};
+
+fn load_blob(path: &Path, spec: &mixnet::runtime::ModuleSpec) -> Result<Vec<Vec<f32>>> {
+    let blob = std::fs::read(path)?;
+    let floats: Vec<f32> =
+        blob.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+    let mut out = Vec::new();
+    let mut off = 0usize;
+    for ts in &spec.inputs {
+        if ts.kind == TensorKind::Param {
+            if off + ts.size() > floats.len() {
+                return Err(Error::Runtime(format!("{} too short", path.display())));
+            }
+            out.push(floats[off..off + ts.size()].to_vec());
+            off += ts.size();
+        }
+    }
+    if off != floats.len() {
+        return Err(Error::Runtime(format!("{} has trailing data", path.display())));
+    }
+    Ok(out)
+}
+
+fn main() -> Result<()> {
+    let n_tokens: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(96);
+    let temperature: f32 =
+        std::env::args().nth(2).and_then(|a| a.parse().ok()).unwrap_or(0.7);
+
+    let dir = Path::new("artifacts");
+    let rt = Runtime::cpu()?;
+    let programs = rt.load_dir(dir)?;
+    let predict = programs.get("predict").ok_or_else(|| {
+        Error::Runtime("no 'predict' module — re-run `make artifacts`".into())
+    })?;
+    let spec = predict.spec().clone();
+    let d = &spec.inputs[spec.input_indices(TensorKind::Data)[0]];
+    let (batch, seq) = (d.shape[0], d.shape[1]);
+    let vocab = spec.outputs[0].shape[2];
+
+    let trained = Path::new("target/params_trained.bin");
+    let (params, source) = if trained.exists() {
+        (load_blob(trained, &spec)?, "trained")
+    } else {
+        (load_blob(&dir.join("params_init.bin"), &spec)?, "UNTRAINED (run train_transformer)")
+    };
+    println!("generating {n_tokens} tokens at T={temperature} with {source} weights");
+
+    // seed context: the clean period-16 cycle
+    let period = 16usize;
+    let mut window: Vec<usize> = (0..seq).map(|t| t % period).collect();
+    let mut rng = Rng::seed_from_u64(0xfeed);
+    let mut generated = Vec::with_capacity(n_tokens);
+    let mut continues_cycle = 0usize;
+
+    for _ in 0..n_tokens {
+        // batch slot 0 carries the window; other rows are padding
+        let mut tokens = vec![0.0f32; batch * seq];
+        for (t, &tok) in window.iter().enumerate() {
+            tokens[t] = tok as f32;
+        }
+        let mut inputs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+        inputs.push(&tokens);
+        let logits = &predict.run(&inputs)?[0];
+        // last position of row 0
+        let row = &logits[(seq - 1) * vocab..seq * vocab];
+        // temperature sampling
+        let maxl = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let weights: Vec<f32> =
+            row.iter().map(|l| ((l - maxl) / temperature.max(1e-3)).exp()).collect();
+        let total: f32 = weights.iter().sum();
+        let mut pick = rng.next_f32() * total;
+        let mut next = vocab - 1;
+        for (i, w) in weights.iter().enumerate() {
+            if pick <= *w {
+                next = i;
+                break;
+            }
+            pick -= w;
+        }
+        let expected = (window[seq - 1] + 1) % period;
+        if next == expected {
+            continues_cycle += 1;
+        }
+        generated.push(next);
+        window.rotate_left(1);
+        window[seq - 1] = next;
+    }
+
+    println!("\nfirst 48 generated tokens:");
+    for chunk in generated.iter().take(48).collect::<Vec<_>>().chunks(16) {
+        println!("  {:?}", chunk);
+    }
+    let rate = continues_cycle as f32 / n_tokens as f32;
+    println!("\ncycle-continuation rate: {rate:.2} (noise floor in training data: 0.90)");
+    if source == "trained" {
+        assert!(rate > 0.5, "trained model should follow the cycle, got {rate}");
+    }
+    Ok(())
+}

@@ -1,0 +1,169 @@
+"""AOT lowering: JAX -> HLO text artifacts for the Rust runtime.
+
+Run once by ``make artifacts``::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Produces, in the output directory:
+
+* ``train_step.hlo.txt``  — (params..., tokens, targets) -> (loss, grads...)
+* ``sgd_step.hlo.txt``    — (params..., tokens, targets) -> (loss, new params...)
+* ``eval_step.hlo.txt``   — (params..., tokens, targets) -> (loss,)
+* ``predict.hlo.txt``     — (params..., tokens) -> (logits,)
+* ``params_init.bin``     — concatenated f32-LE initial parameters, in
+  manifest input order (the Rust side splits it by the manifest shapes)
+* ``manifest.txt``        — module signatures (see rust/src/runtime/artifacts.rs)
+
+HLO **text** is the interchange format: jax >= 0.5 serializes protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import Config
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text (return_tuple=True so the
+    Rust side always unwraps one tuple literal)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_str(shape) -> str:
+    return "scalar" if len(shape) == 0 else ",".join(str(d) for d in shape)
+
+
+def build_modules(cfg: Config, lr: float, seed: int):
+    """Positional wrappers around the model's dict-based steps, plus
+    their manifest metadata.  Returns (names, params, modules) where
+    modules is {module_name: (fn, input_specs, output_specs)}."""
+    params = model.init_params(cfg, seed)
+    names = sorted(params)
+
+    def unpack(args):
+        p = dict(zip(names, args[: len(names)]))
+        tokens, targets = args[len(names) :]
+        return p, tokens, targets
+
+    def ts(*args):
+        p, tokens, targets = unpack(args)
+        loss, grads = model.train_step(p, tokens, targets, cfg)
+        return (loss, *[grads[n] for n in names])
+
+    def ss(*args):
+        p, tokens, targets = unpack(args)
+        loss, new_p = model.sgd_step(p, tokens, targets, cfg, lr=lr)
+        return (loss, *[new_p[n] for n in names])
+
+    def es(*args):
+        p, tokens, targets = unpack(args)
+        return (model.eval_step(p, tokens, targets, cfg),)
+
+    def pr(*args):
+        p = dict(zip(names, args[: len(names)]))
+        (tokens,) = args[len(names) :]
+        return (model.forward(p, tokens, cfg),)
+
+    inputs = [(n, "param", params[n].shape) for n in names]
+    inputs.append(("tokens", "data", (cfg.batch, cfg.seq_len)))
+    predict_inputs = list(inputs)
+    inputs.append(("targets", "label", (cfg.batch, cfg.seq_len)))
+
+    loss_out = [("loss", ())]
+    modules = {
+        "train_step": (ts, inputs, loss_out + [(f"grad:{n}", params[n].shape) for n in names]),
+        "sgd_step": (ss, inputs, loss_out + [(f"new:{n}", params[n].shape) for n in names]),
+        "eval_step": (es, inputs, loss_out),
+        "predict": (
+            pr,
+            predict_inputs,
+            [("logits", (cfg.batch, cfg.seq_len, cfg.vocab))],
+        ),
+    }
+    return names, params, modules
+
+
+def lower_all(cfg: Config, lr: float, seed: int, out_dir: str, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    names, params, modules = build_modules(cfg, lr, seed)
+
+    specs = [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in names]
+    specs.append(jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.float32))
+
+    manifest = [
+        "# mixnet artifact manifest v1",
+        f"# transformer-lm: vocab={cfg.vocab} d_model={cfg.d_model} "
+        f"n_heads={cfg.n_heads} n_layers={cfg.n_layers} seq={cfg.seq_len} "
+        f"batch={cfg.batch} lr={lr} seed={seed} "
+        f"params={model.num_params(params)}",
+        "# initial parameters: params_init.bin, f32-LE, param-input order",
+    ]
+    for mod_name, (fn, inputs, outputs) in modules.items():
+        mod_specs = specs if len(inputs) == len(specs) else specs[:-1]
+        lowered = jax.jit(fn).lower(*mod_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{mod_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        if verbose:
+            print(f"  {fname}: {len(text)} chars")
+        manifest.append(f"module {mod_name}")
+        manifest.append(f"hlo {fname}")
+        for nm, kind, shape in inputs:
+            manifest.append(f"input {nm} {kind} {shape_str(shape)}")
+        for nm, shape in outputs:
+            manifest.append(f"output {nm} {shape_str(shape)}")
+        manifest.append("end")
+        manifest.append("")
+
+    import numpy as np
+
+    blob = np.concatenate([np.asarray(params[n], np.float32).ravel() for n in names])
+    blob.tofile(os.path.join(out_dir, "params_init.bin"))
+    if verbose:
+        print(f"  params_init.bin: {blob.size} f32 ({model.num_params(params)} params)")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest))
+    if verbose:
+        print(f"  manifest.txt: {len(modules)} modules")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--vocab", type=int, default=Config.vocab)
+    ap.add_argument("--d-model", type=int, default=Config.d_model)
+    ap.add_argument("--n-heads", type=int, default=Config.n_heads)
+    ap.add_argument("--n-layers", type=int, default=Config.n_layers)
+    ap.add_argument("--seq-len", type=int, default=Config.seq_len)
+    ap.add_argument("--batch", type=int, default=Config.batch)
+    ap.add_argument("--lr", type=float, default=0.25)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = Config(
+        vocab=args.vocab,
+        d_model=args.d_model,
+        n_heads=args.n_heads,
+        n_layers=args.n_layers,
+        seq_len=args.seq_len,
+        batch=args.batch,
+    )
+    print(f"lowering transformer-lm {cfg} -> {args.out_dir}")
+    lower_all(cfg, args.lr, args.seed, args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every Pallas kernel in this package has a reference implementation here
+written with nothing but `jax.numpy`; pytest asserts `assert_allclose`
+between the two across shape/dtype sweeps (see python/tests).
+"""
+
+import jax.numpy as jnp
+
+
+def ref_fused_linear(x, w, b, act="none"):
+    """y = act(x @ w.T + b).
+
+    x: [m, k] float; w: [n, k]; b: [n].  ``act``: "none" | "relu" | "gelu".
+    Accumulation is performed in float32 regardless of input dtype (the
+    MXU contract the Pallas kernel follows).
+    """
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32).T) + b.astype(jnp.float32)
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "gelu":
+        # tanh approximation, matching the kernel
+        y = 0.5 * y * (1.0 + jnp.tanh(0.7978845608028654 * (y + 0.044715 * y**3)))
+    elif act != "none":
+        raise ValueError(f"unknown act '{act}'")
+    return y.astype(x.dtype)
+
+
+def ref_softmax_xent(logits, labels):
+    """(mean loss, probs) of softmax cross-entropy.
+
+    logits: [m, v] float; labels: [m] int (class ids).
+    Numerically stabilized by the row max, in float32.
+    """
+    lg = logits.astype(jnp.float32)
+    m = jnp.max(lg, axis=-1, keepdims=True)
+    e = jnp.exp(lg - m)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    probs = e / z
+    logp = lg - m - jnp.log(z)
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(nll), probs.astype(logits.dtype)

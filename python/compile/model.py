@@ -1,0 +1,238 @@
+"""Layer-2: the JAX compute graph that gets AOT-lowered for the Rust
+coordinator — a decoder-only transformer language model whose hot spots
+(the MLP-block linears and the softmax cross-entropy head) run through
+the Layer-1 Pallas kernels.
+
+Everything here is build-time only: `aot.py` lowers `train_step` /
+`sgd_step` / `eval_step` to HLO text once, and the Rust runtime executes
+the artifacts; Python never touches the training hot path.
+
+The PJRT boundary carries f32 tensors only, so token ids cross it as
+f32 and are cast to int32 on entry.
+"""
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_linear import fused_linear
+from .kernels.softmax_xent import softmax_xent
+
+Params = Dict[str, jax.Array]
+
+
+@dataclass(frozen=True)
+class Config:
+    """Transformer hyper-parameters (defaults sized for a single-core
+    e2e run; scale d_model/n_layers up on real hardware — DESIGN §4)."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_heads: int = 4
+    n_layers: int = 2
+    seq_len: int = 64
+    batch: int = 16
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+# ---------------------------------------------------------------------
+# Pallas-kernel linear with a hand-written VJP.
+#
+# `pallas_call` has no reverse-mode rule, so the fused kernel is wrapped
+# in a custom_vjp whose backward pass re-uses the same kernel for both
+# gradient matmuls (dx = dz @ w, dw = dz.T @ x) — every matmul FLOP in
+# fwd AND bwd flows through the L1 kernel.
+# ---------------------------------------------------------------------
+
+
+def _act_grad(z, act):
+    if act == "none":
+        return jnp.ones_like(z)
+    if act == "relu":
+        return (z > 0).astype(z.dtype)
+    # gelu (tanh approximation) derivative
+    c = 0.7978845608028654
+    t = jnp.tanh(c * (z + 0.044715 * z**3))
+    return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t**2) * c * (1.0 + 3 * 0.044715 * z**2)
+
+
+def _apply_act(z, act):
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "gelu":
+        return 0.5 * z * (1.0 + jnp.tanh(0.7978845608028654 * (z + 0.044715 * z**3)))
+    return z
+
+
+from functools import partial
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear(x, w, b, act="none"):
+    """act(x @ w.T + b) through the Pallas kernel, differentiable."""
+    return fused_linear(x, w, b, act=act)
+
+
+def _linear_fwd(x, w, b, act):
+    z = fused_linear(x, w, b, act="none")
+    return _apply_act(z, act), (x, w, z)
+
+
+def _linear_bwd(act, res, dy):
+    x, w, z = res
+    dz = dy * _act_grad(z, act)
+    zeros_k = jnp.zeros((w.shape[1],), dz.dtype)
+    zeros_n = jnp.zeros((x.shape[1],), dz.dtype)
+    dx = fused_linear(dz, w.T, zeros_k, act="none")      # [m,n]@[n,k]
+    dw = fused_linear(dz.T, x.T, zeros_n, act="none")    # [n,m]@[m,k]
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)
+
+
+@jax.custom_vjp
+def xent(logits, labels):
+    """Mean softmax cross-entropy via the Pallas kernel, differentiable
+    w.r.t. logits.  labels are float class ids (non-differentiable)."""
+    loss, _ = softmax_xent(logits, labels)
+    return loss
+
+
+def _xent_fwd(logits, labels):
+    loss, probs = softmax_xent(logits, labels)
+    return loss, (probs, labels)
+
+
+def _xent_bwd(res, dloss):
+    probs, labels = res
+    m, v = probs.shape
+    onehot = jax.nn.one_hot(labels.astype(jnp.int32), v, dtype=probs.dtype)
+    return (dloss * (probs - onehot) / m, None)
+
+
+xent.defvjp(_xent_fwd, _xent_bwd)
+
+
+# ---------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------
+
+
+def init_params(cfg: Config, seed: int = 0) -> Params:
+    """Initialize all parameters (scaled-normal, GPT-2-style)."""
+    key = jax.random.PRNGKey(seed)
+    p: Params = {}
+
+    def nrm(key, shape, scale):
+        return (scale * jax.random.normal(key, shape)).astype(jnp.float32)
+
+    keys = iter(jax.random.split(key, 6 + 12 * cfg.n_layers))
+    d = cfg.d_model
+    p["tok_emb"] = nrm(next(keys), (cfg.vocab, d), 0.02)
+    p["pos_emb"] = nrm(next(keys), (cfg.seq_len, d), 0.01)
+    for i in range(cfg.n_layers):
+        pre = f"l{i}."
+        p[pre + "ln1_g"] = jnp.ones((d,), jnp.float32)
+        p[pre + "ln1_b"] = jnp.zeros((d,), jnp.float32)
+        for nm in ("wq", "wk", "wv"):
+            p[pre + nm] = nrm(next(keys), (d, d), d**-0.5)
+        p[pre + "wo"] = nrm(next(keys), (d, d), (d * 2 * cfg.n_layers) ** -0.5)
+        p[pre + "ln2_g"] = jnp.ones((d,), jnp.float32)
+        p[pre + "ln2_b"] = jnp.zeros((d,), jnp.float32)
+        p[pre + "fc1_w"] = nrm(next(keys), (cfg.d_ff, d), d**-0.5)
+        p[pre + "fc1_b"] = jnp.zeros((cfg.d_ff,), jnp.float32)
+        p[pre + "fc2_w"] = nrm(next(keys), (d, cfg.d_ff), (cfg.d_ff * 2 * cfg.n_layers) ** -0.5)
+        p[pre + "fc2_b"] = jnp.zeros((d,), jnp.float32)
+    p["lnf_g"] = jnp.ones((d,), jnp.float32)
+    p["lnf_b"] = jnp.zeros((d,), jnp.float32)
+    p["head_w"] = nrm(next(keys), (cfg.vocab, d), d**-0.5)
+    p["head_b"] = jnp.zeros((cfg.vocab,), jnp.float32)
+    return p
+
+
+def num_params(p: Params) -> int:
+    return sum(int(a.size) for a in p.values())
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(x, p, pre, cfg: Config):
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    q = linear(flat, p[pre + "wq"], jnp.zeros((d,), x.dtype))
+    k = linear(flat, p[pre + "wk"], jnp.zeros((d,), x.dtype))
+    v = linear(flat, p[pre + "wv"], jnp.zeros((d,), x.dtype))
+
+    def split(a):
+        return a.reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+    q, k, v = split(q), split(k), split(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (cfg.d_head**0.5)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    y = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    y = y.transpose(0, 2, 1, 3).reshape(b * s, d)
+    y = linear(y, p[pre + "wo"], jnp.zeros((d,), x.dtype))
+    return y.reshape(b, s, d)
+
+
+def forward(p: Params, tokens, cfg: Config):
+    """Logits [b, s, vocab] for f32 token ids [b, s]."""
+    ids = tokens.astype(jnp.int32)
+    b, s = ids.shape
+    x = p["tok_emb"][ids] + p["pos_emb"][None, :s, :]
+    for i in range(cfg.n_layers):
+        pre = f"l{i}."
+        x = x + _attention(_layernorm(x, p[pre + "ln1_g"], p[pre + "ln1_b"]), p, pre, cfg)
+        h = _layernorm(x, p[pre + "ln2_g"], p[pre + "ln2_b"]).reshape(b * s, cfg.d_model)
+        h = linear(h, p[pre + "fc1_w"], p[pre + "fc1_b"], act="gelu")
+        h = linear(h, p[pre + "fc2_w"], p[pre + "fc2_b"])
+        x = x + h.reshape(b, s, cfg.d_model)
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"]).reshape(b * s, cfg.d_model)
+    logits = linear(x, p["head_w"], p["head_b"])
+    return logits.reshape(b, s, cfg.vocab)
+
+
+def loss_fn(p: Params, tokens, targets, cfg: Config):
+    """Mean next-token cross-entropy (targets are f32 class ids)."""
+    logits = forward(p, tokens, cfg)
+    b, s, v = logits.shape
+    return xent(logits.reshape(b * s, v), targets.reshape(b * s))
+
+
+def train_step(p: Params, tokens, targets, cfg: Config):
+    """(loss, grads) — the KVStore-mode artifact (grads leave the step
+    so the Rust coordinator can push them to the parameter server)."""
+    loss, grads = jax.value_and_grad(loss_fn)(p, tokens, targets, cfg)
+    return loss, grads
+
+
+def sgd_step(p: Params, tokens, targets, cfg: Config, lr: float = 0.25):
+    """(loss, new_params) — the single-worker artifact: the SGD update
+    fuses into the lowered program so weights never leave the device
+    between steps on a real accelerator."""
+    loss, grads = jax.value_and_grad(loss_fn)(p, tokens, targets, cfg)
+    new_p = {k: p[k] - lr * grads[k] for k in p}
+    return loss, new_p
+
+
+def eval_step(p: Params, tokens, targets, cfg: Config):
+    """Loss only (validation)."""
+    return loss_fn(p, tokens, targets, cfg)

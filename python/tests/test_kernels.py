@@ -1,0 +1,132 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle, swept
+over shapes/dtypes with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused_linear import fused_linear
+from compile.kernels.ref import ref_fused_linear, ref_softmax_xent
+from compile.kernels.softmax_xent import softmax_xent
+
+RNG = np.random.default_rng(1234)
+
+
+def rand(shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    act=st.sampled_from(["none", "relu", "gelu"]),
+)
+def test_fused_linear_matches_ref_fuzzed_shapes(m, k, n, act):
+    x, w, b = rand((m, k)), rand((n, k)), rand((n,))
+    got = fused_linear(x, w, b, act=act, bm=16, bn=16, bk=16)
+    want = ref_fused_linear(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_linear_dtypes(dtype):
+    x = rand((32, 48)).astype(dtype)
+    w = rand((24, 48)).astype(dtype)
+    b = rand((24,)).astype(dtype)
+    got = fused_linear(x, w, b, act="relu", bm=16, bn=16, bk=16)
+    want = ref_fused_linear(x, w, b, "relu")
+    assert got.dtype == dtype
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 8), (64, 64, 64), (128, 128, 128)])
+def test_fused_linear_tile_shapes_agree(bm, bn, bk):
+    """Block shape is a schedule choice, never a numerics choice."""
+    x, w, b = rand((50, 70)), rand((30, 70)), rand((30,))
+    base = ref_fused_linear(x, w, b, "gelu")
+    got = fused_linear(x, w, b, act="gelu", bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, base, rtol=3e-5, atol=3e-5)
+
+
+def test_fused_linear_tile_aligned_exact_sizes():
+    x, w, b = rand((128, 256)), rand((128, 256)), rand((128,))
+    got = fused_linear(x, w, b)
+    np.testing.assert_allclose(got, ref_fused_linear(x, w, b, "none"), rtol=3e-5, atol=3e-5)
+
+
+def test_fused_linear_f32_accumulation_beats_naive_bf16():
+    """bf16 inputs must accumulate in f32: the sum of many small terms
+    stays accurate where a bf16 accumulator would lose it."""
+    k = 4096
+    x = jnp.full((1, k), 0.01, jnp.bfloat16)
+    w = jnp.full((1, k), 0.01, jnp.bfloat16)
+    b = jnp.zeros((1,), jnp.bfloat16)
+    got = float(fused_linear(x, w, b, bm=1, bn=1, bk=128)[0, 0])
+    # true value ~ 4096 * 1e-4 = 0.4096; bf16 accumulation collapses badly
+    assert abs(got - 0.4096) / 0.4096 < 0.05, got
+
+
+def test_fused_linear_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        fused_linear(rand((4, 8)), rand((3, 9)), rand((3,)))
+    with pytest.raises(ValueError):
+        fused_linear(rand((4, 8)), rand((3, 8)), rand((4,)))
+    with pytest.raises(ValueError):
+        fused_linear(rand((4, 8)), rand((3, 8)), rand((3,)), act="swish")
+
+
+# ---------------------------------------------------------------------
+# softmax_xent
+# ---------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 80), v=st.integers(2, 50))
+def test_softmax_xent_matches_ref_fuzzed_shapes(m, v):
+    logits = rand((m, v), scale=3.0)
+    labels = jnp.asarray(RNG.integers(0, v, size=(m,)), jnp.float32)
+    loss, probs = softmax_xent(logits, labels, bm=16)
+    rloss, rprobs = ref_softmax_xent(logits, labels.astype(jnp.int32))
+    np.testing.assert_allclose(loss, rloss, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(probs, rprobs, rtol=2e-5, atol=2e-6)
+
+
+def test_softmax_xent_rows_sum_to_one():
+    logits = rand((33, 17), scale=5.0)
+    labels = jnp.zeros((33,), jnp.float32)
+    _, probs = softmax_xent(logits, labels, bm=8)
+    np.testing.assert_allclose(np.asarray(probs).sum(axis=1), np.ones(33), rtol=1e-5)
+
+
+def test_softmax_xent_numerical_stability():
+    """Huge logits must not overflow (row-max subtraction)."""
+    logits = jnp.asarray([[1e4, 1e4 - 5.0], [-1e4, -1e4 + 2.0]], jnp.float32)
+    labels = jnp.asarray([0.0, 1.0], jnp.float32)
+    loss, probs = softmax_xent(logits, labels, bm=2)
+    assert np.isfinite(float(loss))
+    assert np.isfinite(np.asarray(probs)).all()
+
+
+def test_softmax_xent_perfect_prediction_near_zero_loss():
+    v = 8
+    labels = jnp.asarray(RNG.integers(0, v, size=(16,)), jnp.float32)
+    logits = 50.0 * jax.nn.one_hot(labels.astype(jnp.int32), v)
+    loss, _ = softmax_xent(logits, labels, bm=8)
+    assert float(loss) < 1e-4
+
+
+def test_softmax_xent_rejects_bad_labels_shape():
+    with pytest.raises(ValueError):
+        softmax_xent(rand((4, 5)), jnp.zeros((3,), jnp.float32))

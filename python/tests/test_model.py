@@ -1,0 +1,138 @@
+"""L2 model correctness: shapes, gradient math through the custom-VJP
+Pallas wrappers, and optimization progress."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.model import Config
+
+TINY = Config(vocab=64, d_model=32, n_heads=2, n_layers=1, seq_len=16, batch=4)
+RNG = np.random.default_rng(7)
+
+
+def batch(cfg, seed=0):
+    r = np.random.default_rng(seed)
+    tok = jnp.asarray(r.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len)), jnp.float32)
+    tgt = jnp.asarray(r.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len)), jnp.float32)
+    return tok, tgt
+
+
+def test_forward_shapes():
+    p = model.init_params(TINY, 0)
+    tok, _ = batch(TINY)
+    logits = model.forward(p, tok, TINY)
+    assert logits.shape == (TINY.batch, TINY.seq_len, TINY.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_initial_loss_near_uniform():
+    """Untrained loss should sit near ln(vocab)."""
+    p = model.init_params(TINY, 0)
+    tok, tgt = batch(TINY)
+    loss = float(model.eval_step(p, tok, tgt, TINY))
+    assert abs(loss - np.log(TINY.vocab)) < 1.0, loss
+
+
+def test_param_count_matches_formula():
+    p = model.init_params(TINY, 0)
+    d, v, s, L = TINY.d_model, TINY.vocab, TINY.seq_len, TINY.n_layers
+    expected = (
+        v * d + s * d  # embeddings
+        + L * (4 * d * d + 2 * d * TINY.d_ff + TINY.d_ff + d + 4 * d)  # blocks
+        + 2 * d  # final ln
+        + v * d + v  # head
+    )
+    assert model.num_params(p) == expected
+
+
+def test_grads_cover_every_param_and_are_finite():
+    p = model.init_params(TINY, 0)
+    tok, tgt = batch(TINY)
+    loss, grads = model.train_step(p, tok, tgt, TINY)
+    assert set(grads) == set(p)
+    for k, g in grads.items():
+        assert g.shape == p[k].shape, k
+        assert np.isfinite(np.asarray(g)).all(), k
+    # embeddings of unused rows must have zero grad
+    used = set(np.asarray(tok, np.int32).ravel().tolist())
+    unused = next(i for i in range(TINY.vocab) if i not in used)
+    np.testing.assert_allclose(np.asarray(grads["tok_emb"])[unused], 0.0)
+
+
+@pytest.mark.parametrize("pname", ["head_b", "l0.fc1_b", "l0.ln1_g"])
+def test_numeric_gradient_check(pname):
+    p = model.init_params(TINY, 0)
+    tok, tgt = batch(TINY)
+    _, grads = model.train_step(p, tok, tgt, TINY)
+    eps = 1e-3
+    idx = 1
+    e = np.zeros(p[pname].shape, np.float32).ravel()
+    e[idx] = eps
+    e = e.reshape(p[pname].shape)
+
+    def loss_at(v):
+        q = dict(p)
+        q[pname] = v
+        return float(model.eval_step(q, tok, tgt, TINY))
+
+    num = (loss_at(p[pname] + e) - loss_at(p[pname] - e)) / (2 * eps)
+    ana = float(np.asarray(grads[pname]).ravel()[idx])
+    assert abs(num - ana) < 5e-3, f"{pname}: numeric {num} vs analytic {ana}"
+
+
+def test_sgd_step_reduces_loss():
+    p = model.init_params(TINY, 0)
+    tok, tgt = batch(TINY)
+    l0, p1 = model.sgd_step(p, tok, tgt, TINY, lr=0.5)
+    l1 = model.eval_step(p1, tok, tgt, TINY)
+    assert float(l1) < float(l0)
+
+
+def test_ten_steps_memorize_batch():
+    cfg = TINY
+    p = model.init_params(cfg, 1)
+    tok, tgt = batch(cfg, seed=3)
+    losses = []
+    for _ in range(10):
+        loss, p = model.sgd_step(p, tok, tgt, cfg, lr=0.5)
+        losses.append(float(loss))
+    assert losses[-1] < 0.6 * losses[0], losses
+
+
+def test_train_and_sgd_steps_agree():
+    """sgd_step must equal train_step + manual update."""
+    p = model.init_params(TINY, 0)
+    tok, tgt = batch(TINY)
+    lr = 0.1
+    loss_a, grads = model.train_step(p, tok, tgt, TINY)
+    manual = {k: p[k] - lr * grads[k] for k in p}
+    loss_b, fused = model.sgd_step(p, tok, tgt, TINY, lr=lr)
+    np.testing.assert_allclose(float(loss_a), float(loss_b), rtol=1e-6)
+    for k in p:
+        np.testing.assert_allclose(
+            np.asarray(manual[k]), np.asarray(fused[k]), rtol=1e-5, atol=1e-6
+        )
+
+
+def test_causality():
+    """Changing a future token must not affect past logits."""
+    p = model.init_params(TINY, 0)
+    tok, _ = batch(TINY)
+    logits_a = model.forward(p, tok, TINY)
+    tok_b = tok.at[:, -1].set((tok[:, -1] + 1) % TINY.vocab)
+    logits_b = model.forward(p, tok_b, TINY)
+    np.testing.assert_allclose(
+        np.asarray(logits_a)[:, :-1], np.asarray(logits_b)[:, :-1], atol=1e-5
+    )
+
+
+def test_deterministic_init():
+    a = model.init_params(TINY, 42)
+    b = model.init_params(TINY, 42)
+    c = model.init_params(TINY, 43)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    assert any(not np.array_equal(np.asarray(a[k]), np.asarray(c[k])) for k in a)

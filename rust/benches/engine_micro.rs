@@ -1,0 +1,90 @@
+//! Engine microbenchmarks: scheduling overhead per op, parallelism
+//! discovery, and the cost of dependency tracking — the substrate
+//! numbers behind E1/E4/E5.
+//!
+//! ```text
+//! cargo bench --bench engine_micro
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use mixnet::engine::{create, EngineKind};
+use mixnet::ndarray::NDArray;
+use mixnet::util::bench::{print_table, Bencher};
+
+fn main() {
+    let b = Bencher::micro();
+    let mut rows = Vec::new();
+
+    // ---- raw push+execute overhead (empty ops) ----------------------
+    for kind in [EngineKind::Threaded, EngineKind::Naive] {
+        let engine = create(kind, 2);
+        let v = engine.new_var();
+        let n = 1000usize;
+        let stats = b.run("overhead", || {
+            let c = Arc::new(AtomicUsize::new(0));
+            for _ in 0..n {
+                let c = Arc::clone(&c);
+                engine.push("noop", vec![], vec![v], Box::new(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+            engine.wait_all();
+        });
+        rows.push(vec![
+            format!("{kind:?} push+run x1000 (serial chain)"),
+            format!("{:.1} us/op", stats.median_s() * 1e6 / n as f64),
+        ]);
+    }
+
+    // ---- independent ops: parallelism discovery ---------------------
+    let engine = create(EngineKind::Threaded, 2);
+    let vars: Vec<_> = (0..64).map(|_| engine.new_var()).collect();
+    let stats = b.run("independent", || {
+        for v in &vars {
+            engine.push("spin", vec![], vec![*v], Box::new(|| {
+                std::hint::black_box((0..2000).sum::<u64>());
+            }));
+        }
+        engine.wait_all();
+    });
+    rows.push(vec![
+        "64 independent ops (threaded, 2 workers)".into(),
+        format!("{:.1} us total", stats.median_s() * 1e6),
+    ]);
+
+    // ---- NDArray op through the full lazy path ----------------------
+    let x = NDArray::randn(&[256, 256], 0.0, 1.0, 3);
+    let stats = b.run("ndarray-lazy", || {
+        let y = x.add_scalar(1.0);
+        y.wait_to_read();
+    });
+    rows.push(vec![
+        "NDArray add_scalar 256x256 (push+run+wait)".into(),
+        format!("{:.1} us", stats.median_s() * 1e6),
+    ]);
+
+    // ---- dependency fan-in (diamond) ---------------------------------
+    let engine = create(EngineKind::Threaded, 2);
+    let stats = b.run("diamond", || {
+        let a = engine.new_var();
+        let b1 = engine.new_var();
+        let b2 = engine.new_var();
+        let d = engine.new_var();
+        engine.push("a", vec![], vec![a], Box::new(|| {}));
+        engine.push("b1", vec![a], vec![b1], Box::new(|| {}));
+        engine.push("b2", vec![a], vec![b2], Box::new(|| {}));
+        engine.push("d", vec![b1, b2], vec![d], Box::new(|| {}));
+        engine.wait_all();
+        for v in [a, b1, b2, d] {
+            engine.delete_var(v);
+        }
+    });
+    rows.push(vec![
+        "diamond a->(b1,b2)->d (4 ops + var lifecycle)".into(),
+        format!("{:.1} us", stats.median_s() * 1e6),
+    ]);
+
+    print_table("engine microbenchmarks", &["case", "cost"], &rows);
+}

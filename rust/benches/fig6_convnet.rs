@@ -1,0 +1,165 @@
+//! Figure 6 — "convnet-benchmarks": forward and forward+backward time
+//! per batch under the four execution modes of DESIGN E1.
+//!
+//! The paper compares MXNet / Torch7 / Caffe / TensorFlow on a GTX 980.
+//! We hold the compute substrate constant (our native CPU kernels) and
+//! vary exactly what the paper credits for the differences:
+//!
+//! * `mxnet`      — engine-lazy scheduling + fused elementwise ops
+//! * `torch-caffe`— concrete (eager) execution + fused ops
+//! * `tf-like`    — engine-lazy, unfused
+//! * `tf-old`     — concrete, unfused, one extra copy per op, and the
+//!                  *reference* (previous-generation) GEMM kernels — the
+//!                  stand-in for TensorFlow's older-CUDNN handicap
+//!
+//! Expected shape: the first two within ~10%, `tf-old` ~2x slower.
+//! Inputs are spatially scaled (`@64`, batch 16) to fit a single-core
+//! budget — DESIGN §4; ratios, not absolute times, are the claim.
+//!
+//! ```text
+//! cargo bench --bench fig6_convnet            # all workloads
+//! FIG6_MODELS=mlp,simple-cnn cargo bench --bench fig6_convnet
+//! ```
+
+use std::collections::HashMap;
+
+
+use mixnet::engine::{create, EngineKind};
+use mixnet::executor::{BindConfig, Executor};
+use mixnet::graph::{Entry, Graph, Op};
+use mixnet::models::by_name;
+use mixnet::ndarray::NDArray;
+use mixnet::util::bench::{print_table, Bencher};
+
+/// Rebuild `graph` with an Identity node after every compute op — the
+/// "extra copy per op" handicap of the `tf-old` mode.
+fn insert_copies(graph: &Graph) -> Graph {
+    let mut out = Graph::new();
+    // old entry -> new entry (post-copy)
+    let mut map: HashMap<Entry, Entry> = HashMap::new();
+    for (id, node) in graph.nodes.iter().enumerate() {
+        let inputs: Vec<Entry> = node.inputs.iter().map(|e| map[e]).collect();
+        let new_id = out.add_node(node.op.clone(), node.name.clone(), inputs);
+        let n_out = graph.num_outputs_of(id);
+        // no copy after the loss head: autodiff seeds from SoftmaxOutput
+        if node.op.is_variable() || matches!(node.op, Op::SoftmaxOutput) {
+            for o in 0..n_out {
+                map.insert(Entry { node: id, out: o }, Entry { node: new_id, out: o });
+            }
+            continue;
+        }
+        for o in 0..n_out {
+            let copy = out.add_node(
+                Op::Identity,
+                format!("{}_copy{o}", node.name),
+                vec![Entry { node: new_id, out: o }],
+            );
+            map.insert(Entry { node: id, out: o }, Entry::new(copy));
+        }
+    }
+    out.outputs = graph.outputs.iter().map(|e| map[e]).collect();
+    out.num_forward = out.nodes.len();
+    out
+}
+
+fn bind(
+    model: &str,
+    batch: usize,
+    kind: EngineKind,
+    fuse: bool,
+    extra_copy: bool,
+    training: bool,
+) -> Executor {
+    let m = by_name(model).unwrap();
+    let engine = create(kind, mixnet::engine::default_threads());
+    let mut graph = mixnet::symbol::Symbol::to_graph(std::slice::from_ref(&m.symbol));
+    if extra_copy {
+        graph = insert_copies(&graph);
+    }
+    let var_shapes = m.var_shapes(batch).unwrap();
+    let mut rng_seed = 3u64;
+    let args: HashMap<String, NDArray> = var_shapes
+        .iter()
+        .map(|(name, shape)| {
+            rng_seed += 1;
+            let arr = if name.ends_with("_label") {
+                let v: Vec<f32> =
+                    (0..batch).map(|i| (i % m.num_classes) as f32).collect();
+                NDArray::from_vec_on(shape, v, engine.clone())
+            } else if name.ends_with("_gamma") {
+                NDArray::from_vec_on(
+                    shape,
+                    vec![1.0; shape.iter().product()],
+                    engine.clone(),
+                )
+            } else {
+                NDArray::randn_on(shape, 0.0, 0.05, rng_seed, engine.clone())
+            };
+            (name.clone(), arr)
+        })
+        .collect();
+    let grad_names: Vec<&str> = var_shapes
+        .keys()
+        .filter(|n| *n != "data" && !n.ends_with("_label"))
+        .map(|s| s.as_str())
+        .collect();
+    Executor::bind_graph(
+        graph,
+        engine,
+        args,
+        if training { &grad_names } else { &[] },
+        BindConfig { training, fuse, ..Default::default() },
+    )
+    .unwrap()
+}
+
+fn main() {
+    let models_env = std::env::var("FIG6_MODELS")
+        .unwrap_or_else(|_| "mlp,simple-cnn,alexnet@64".to_string());
+    let models: Vec<&str> = models_env.split(',').collect();
+    let batch: usize =
+        std::env::var("FIG6_BATCH").ok().and_then(|s| s.parse().ok()).unwrap_or(16);
+    let modes: [(&str, EngineKind, bool, bool); 4] = [
+        ("mxnet", EngineKind::Threaded, true, false),
+        ("torch-caffe", EngineKind::Naive, true, false),
+        ("tf-like", EngineKind::Threaded, false, false),
+        ("tf-old", EngineKind::Naive, false, true),
+    ];
+    let b = Bencher { warmup: 1, samples: 5, max_total: std::time::Duration::from_secs(30) };
+
+    for training in [false, true] {
+        let title = if training { "forward+backward" } else { "forward" };
+        let mut rows = Vec::new();
+        for model in &models {
+            let mut row = vec![model.to_string()];
+            let mut base_ms = 0.0;
+            for (mode_name, kind, fuse, extra) in modes {
+                let exec = bind(model, batch, kind, fuse, extra, training);
+                // `extra` marks the old-kernel-library mode
+                mixnet::ndarray::kernels::set_reference_kernels(extra);
+                let stats = b.run(&format!("{model}/{mode_name}"), || {
+                    if training {
+                        exec.forward_backward().unwrap();
+                    } else {
+                        exec.forward();
+                    }
+                    exec.wait();
+                });
+                mixnet::ndarray::kernels::set_reference_kernels(false);
+                let ms = stats.median_ms();
+                if mode_name == "mxnet" {
+                    base_ms = ms;
+                }
+                row.push(format!("{ms:.1} ({:.2}x)", ms / base_ms.max(1e-9)));
+            }
+            rows.push(row);
+        }
+        print_table(
+            &format!("Figure 6 — {title} ms/batch (batch {batch}, ratio vs mxnet)"),
+            &["network", "mxnet", "torch-caffe", "tf-like", "tf-old"],
+            &rows,
+        );
+        println!();
+    }
+    println!("paper shape: mxnet ~ torch/caffe; tf-old ~2x slower");
+}

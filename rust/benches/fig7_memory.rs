@@ -1,0 +1,74 @@
+//! Figure 7 — internal memory under the allocation strategies, for
+//! prediction (forward) and training (forward+backward), batch 64.
+//!
+//! Unlike the wall-time benches this is exact, not sampled: the planner
+//! is deterministic.  Also reports planning *time* per graph (the
+//! paper's claim that the heuristics are linear-time).
+//!
+//! ```text
+//! cargo bench --bench fig7_memory           # table + paper deltas
+//! FIG7_FULLRES=1 cargo bench --bench fig7_memory   # 224x224 inputs
+//! ```
+
+use std::time::Instant;
+
+use mixnet::graph::autodiff::build_backward;
+use mixnet::graph::memory::{default_external, plan_memory, validate_plan, AllocStrategy};
+use mixnet::graph::{infer_shapes, Entry};
+use mixnet::models::by_name;
+use mixnet::util::bench::print_table;
+
+fn main() {
+    let batch = 64usize;
+    let fullres = std::env::var("FIG7_FULLRES").is_ok();
+    let models: Vec<String> = ["alexnet", "inception-bn", "vgg-11", "vgg-16"]
+        .iter()
+        .map(|m| if fullres { m.to_string() } else { format!("{m}@64") })
+        .collect();
+
+    for training in [false, true] {
+        let title = if training { "training (fwd+bwd)" } else { "prediction (fwd)" };
+        let mut rows = Vec::new();
+        for name in &models {
+            let m = by_name(name).unwrap();
+            let (mut graph, vs) = m.graph(batch).unwrap();
+            let mut extra: Vec<Entry> = vec![];
+            if training {
+                let wrt: Vec<_> = graph
+                    .variables()
+                    .into_iter()
+                    .filter(|&v| {
+                        let n = &graph.nodes[v].name;
+                        n != "data" && !n.ends_with("_label")
+                    })
+                    .collect();
+                let gi = build_backward(&mut graph, &wrt).unwrap();
+                extra = gi.var_grads.values().copied().collect();
+            }
+            let shapes = infer_shapes(&graph, &vs).unwrap();
+            let external = default_external(&graph, &extra);
+            let mut row = vec![name.clone(), format!("{}", graph.nodes.len())];
+            let mut baseline = 0.0f64;
+            for strategy in AllocStrategy::all() {
+                let t0 = Instant::now();
+                let plan = plan_memory(&graph, &shapes, &external, strategy);
+                let plan_us = t0.elapsed().as_micros();
+                validate_plan(&graph, &shapes, &external, &plan).expect("plan must be sound");
+                let mb = plan.bytes_mb();
+                if strategy == AllocStrategy::None {
+                    baseline = mb;
+                }
+                row.push(format!("{mb:.0} ({:.1}x, {plan_us}us)", baseline / mb.max(1e-9)));
+            }
+            rows.push(row);
+        }
+        print_table(
+            &format!("Figure 7 — internal MB, batch {batch}, {title}"),
+            &["network", "nodes", "none", "inplace", "co-share", "both"],
+            &rows,
+        );
+        println!();
+    }
+    println!("paper: combined ~2x reduction for training, ~4x for prediction;");
+    println!("planning stays linear: time scales with node count, not node count^2");
+}

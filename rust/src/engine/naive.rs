@@ -1,0 +1,86 @@
+//! The eager, inline engine — *concrete execution* per Table 1.
+//!
+//! `push` runs the operation immediately on the calling thread, exactly
+//! like numpy/Torch7/Caffe execute statements.  Dependencies are trivially
+//! satisfied because everything is sequential.  This engine is
+//!
+//! * the baseline for the Figure 6 execution-model comparison, and
+//! * the oracle in engine correctness tests (any schedule the threaded
+//!   engine produces must compute the same values the naive one does).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{Engine, EngineKind, OpFn, VarHandle};
+
+/// Eager inline execution engine.
+#[derive(Default)]
+pub struct NaiveEngine {
+    executed: AtomicU64,
+}
+
+impl NaiveEngine {
+    /// Create a naive engine.
+    pub fn new() -> Self {
+        NaiveEngine { executed: AtomicU64::new(0) }
+    }
+
+    /// Number of ops executed since creation.
+    pub fn ops_executed(&self) -> u64 {
+        self.executed.load(Ordering::Relaxed)
+    }
+}
+
+impl Engine for NaiveEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Naive
+    }
+
+    fn new_var(&self) -> VarHandle {
+        VarHandle(super::alloc_var_id())
+    }
+
+    fn push(&self, _name: &'static str, _read: Vec<VarHandle>, _write: Vec<VarHandle>, func: OpFn) {
+        func();
+        self.executed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn wait_for_var(&self, _var: VarHandle) {}
+
+    fn wait_all(&self) {}
+
+    fn delete_var(&self, _var: VarHandle) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_is_synchronous() {
+        let eng = NaiveEngine::new();
+        let hit = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hit);
+        eng.push("op", vec![], vec![], Box::new(move || {
+            h.store(1, Ordering::SeqCst);
+        }));
+        // No wait needed: already done.
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+        assert_eq!(eng.ops_executed(), 1);
+    }
+
+    #[test]
+    fn preserves_program_order() {
+        let eng = NaiveEngine::new();
+        let v = eng.new_var();
+        let log = Arc::new(std::sync::Mutex::new(Vec::new()));
+        for i in 0..10 {
+            let l = Arc::clone(&log);
+            eng.push("op", vec![], vec![v], Box::new(move || {
+                l.lock().unwrap().push(i);
+            }));
+        }
+        assert_eq!(*log.lock().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+}

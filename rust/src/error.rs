@@ -1,0 +1,55 @@
+//! Crate-wide error type.
+
+/// Result alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Error type covering every subsystem.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Shape inference or shape mismatch failure.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Graph construction / binding errors (unknown argument, cycle, ...).
+    #[error("graph error: {0}")]
+    Graph(String),
+
+    /// Executor binding errors.
+    #[error("bind error: {0}")]
+    Bind(String),
+
+    /// KVStore errors (unknown key, wire protocol, ...).
+    #[error("kvstore error: {0}")]
+    KvStore(String),
+
+    /// Data I/O errors (RecordIO corruption, ...).
+    #[error("io error: {0}")]
+    DataIo(String),
+
+    /// PJRT runtime errors.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Configuration / CLI errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Underlying std::io error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Shorthand constructor for a shape error.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+    /// Shorthand constructor for a graph error.
+    pub fn graph(msg: impl Into<String>) -> Self {
+        Error::Graph(msg.into())
+    }
+    /// Shorthand constructor for a kvstore error.
+    pub fn kv(msg: impl Into<String>) -> Self {
+        Error::KvStore(msg.into())
+    }
+}

@@ -1,0 +1,732 @@
+//! Native CPU operator dispatch for the graph executor.
+//!
+//! Maps each graph [`Op`] onto the raw kernels in
+//! [`crate::ndarray::kernels`].  Supports in-place execution: when the
+//! memory planner assigns an output to one of the node's input buffers
+//! (the *inplace* strategy), the executor passes `None` for that input and
+//! the handler mutates the output buffer directly — the data is already
+//! there.
+
+use crate::graph::{FusedStep, Op};
+use crate::ndarray::kernels as k;
+use crate::util::Rng;
+
+/// Everything an operator needs to run one node.
+pub struct OpArgs<'a> {
+    /// Input buffers; `None` when the input aliases output 0 (inplace).
+    pub in_data: Vec<Option<&'a [f32]>>,
+    /// Input shapes (always present, aliased or not).
+    pub in_shapes: Vec<Vec<usize>>,
+    /// Output buffers (exact entry sizes).
+    pub out: Vec<&'a mut [f32]>,
+    /// Output shapes.
+    pub out_shapes: Vec<Vec<usize>>,
+    /// Scratch workspace if the op requested one.
+    pub workspace: Option<&'a mut [f32]>,
+    /// Training mode (dropout active).
+    pub training: bool,
+    /// Step counter (dropout mask seeds).
+    pub step: u64,
+}
+
+fn dims2(s: &[usize]) -> (usize, usize) {
+    (s[0], s[1..].iter().product())
+}
+
+fn nchw(s: &[usize]) -> (usize, usize, usize, usize) {
+    (s[0], s[1], s[2], s[3])
+}
+
+/// Execute one graph node on the CPU.
+///
+/// Panics on malformed arguments — shape inference has validated the
+/// graph before execution, so violations are bugs, not user errors.
+pub fn execute(op: &Op, mut a: OpArgs<'_>) {
+    match op {
+        Op::Variable => unreachable!("variables are bound, not executed"),
+        Op::FullyConnected { .. } => {
+            let (m, kk) = dims2(&a.in_shapes[0]);
+            let n = a.in_shapes[1][0]; // weight [n, k]
+            let x = a.in_data[0].expect("fc x");
+            let w = a.in_data[1].expect("fc w");
+            let b = a.in_data[2].expect("fc b");
+            k::gemm_nt(x, w, a.out[0], m, kk, n, 0.0);
+            k::bias_add(a.out[0], b, m, n);
+        }
+        Op::FullyConnectedBackward => {
+            // (dy, x, w) -> (dx, dw, db)
+            let (m, h) = dims2(&a.in_shapes[0]);
+            let (_, kk) = dims2(&a.in_shapes[1]);
+            let dy = a.in_data[0].expect("dy");
+            let x = a.in_data[1].expect("x");
+            let w = a.in_data[2].expect("w");
+            let (dx, rest) = a.out.split_at_mut(1);
+            let (dw, db) = rest.split_at_mut(1);
+            k::gemm(dy, w, dx[0], m, h, kk, 0.0); // dx = dy @ w
+            k::gemm_tn(dy, x, dw[0], h, m, kk, 0.0); // dw = dy^T @ x
+            k::bias_grad(dy, db[0], m, h, 0.0);
+        }
+        Op::Convolution { num_filter, kernel, stride, pad } => {
+            let (n, c, h, w) = nchw(&a.in_shapes[0]);
+            let (oh, ow) = (
+                k::conv_out(h, *kernel, *stride, *pad),
+                k::conv_out(w, *kernel, *stride, *pad),
+            );
+            let x = a.in_data[0].expect("conv x");
+            let wt = a.in_data[1].expect("conv w");
+            let b = a.in_data[2].expect("conv b");
+            let cols = a.workspace.as_deref_mut().expect("conv workspace");
+            let ckk = c * kernel * kernel;
+            let spatial = oh * ow;
+            for img in 0..n {
+                k::im2col(
+                    &x[img * c * h * w..(img + 1) * c * h * w],
+                    cols,
+                    c,
+                    h,
+                    w,
+                    *kernel,
+                    *kernel,
+                    *stride,
+                    *pad,
+                );
+                let y_img = &mut a.out[0][img * num_filter * spatial..(img + 1) * num_filter * spatial];
+                k::gemm(wt, cols, y_img, *num_filter, ckk, spatial, 0.0);
+                // per-channel bias over spatial
+                for f in 0..*num_filter {
+                    let row = &mut y_img[f * spatial..(f + 1) * spatial];
+                    let bf = b[f];
+                    for v in row.iter_mut() {
+                        *v += bf;
+                    }
+                }
+            }
+        }
+        Op::ConvolutionBackward { kernel, stride, pad } => {
+            // (dy, x, w) -> (dx, dw, db)
+            let (n, f, oh, ow) = nchw(&a.in_shapes[0]);
+            let (_, c, h, w) = nchw(&a.in_shapes[1]);
+            let dy = a.in_data[0].expect("dy");
+            let x = a.in_data[1].expect("x");
+            let wt = a.in_data[2].expect("w");
+            let cols = a.workspace.as_deref_mut().expect("convbwd workspace");
+            let ckk = c * kernel * kernel;
+            let spatial = oh * ow;
+            let (dx, rest) = a.out.split_at_mut(1);
+            let (dw, db) = rest.split_at_mut(1);
+            dw[0].fill(0.0);
+            db[0].fill(0.0);
+            for img in 0..n {
+                let dy_img = &dy[img * f * spatial..(img + 1) * f * spatial];
+                // dw += dy_img @ cols^T  (cols from x)
+                k::im2col(
+                    &x[img * c * h * w..(img + 1) * c * h * w],
+                    cols,
+                    c,
+                    h,
+                    w,
+                    *kernel,
+                    *kernel,
+                    *stride,
+                    *pad,
+                );
+                k::gemm_nt(dy_img, cols, dw[0], f, spatial, ckk, 1.0);
+                // db += rowsum over spatial
+                for ff in 0..f {
+                    let mut s = 0.0;
+                    for v in &dy_img[ff * spatial..(ff + 1) * spatial] {
+                        s += v;
+                    }
+                    db[0][ff] += s;
+                }
+                // dcols = w^T @ dy_img ; dx_img = col2im(dcols)
+                k::gemm_tn(wt, dy_img, cols, ckk, f, spatial, 0.0);
+                k::col2im(
+                    cols,
+                    &mut dx[0][img * c * h * w..(img + 1) * c * h * w],
+                    c,
+                    h,
+                    w,
+                    *kernel,
+                    *kernel,
+                    *stride,
+                    *pad,
+                );
+            }
+        }
+        Op::Activation { kind } => match a.in_data[0] {
+            Some(x) => k::act_forward(*kind, x, a.out[0]),
+            None => {
+                // inplace: data already in out
+                let out = &mut *a.out[0];
+                match kind {
+                    k::ActKind::Relu => {
+                        for v in out.iter_mut() {
+                            *v = v.max(0.0);
+                        }
+                    }
+                    k::ActKind::Tanh => {
+                        for v in out.iter_mut() {
+                            *v = v.tanh();
+                        }
+                    }
+                    k::ActKind::Sigmoid => {
+                        for v in out.iter_mut() {
+                            *v = 1.0 / (1.0 + (-*v).exp());
+                        }
+                    }
+                }
+            }
+        },
+        Op::ActivationBackward { kind } => {
+            // (dy, y) -> dx ; dy may be inplace with dx
+            let y = a.in_data[1].expect("act y");
+            match a.in_data[0] {
+                Some(dy) => k::act_backward(*kind, dy, y, a.out[0]),
+                None => {
+                    let dx = &mut *a.out[0];
+                    match kind {
+                        k::ActKind::Relu => {
+                            for i in 0..dx.len() {
+                                if y[i] <= 0.0 {
+                                    dx[i] = 0.0;
+                                }
+                            }
+                        }
+                        k::ActKind::Tanh => {
+                            for i in 0..dx.len() {
+                                dx[i] *= 1.0 - y[i] * y[i];
+                            }
+                        }
+                        k::ActKind::Sigmoid => {
+                            for i in 0..dx.len() {
+                                dx[i] *= y[i] * (1.0 - y[i]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Op::Pooling { kind, kernel, stride, pad } => {
+            let (n, c, h, w) = nchw(&a.in_shapes[0]);
+            let x = a.in_data[0].expect("pool x");
+            let (y, am) = a.out.split_at_mut(1);
+            k::pool_forward(*kind, x, y[0], am[0], n, c, h, w, *kernel, *stride, *pad);
+        }
+        Op::PoolingBackward { kind, kernel, stride, pad } => {
+            let (n, c, h, w) = nchw(&a.in_shapes[2]);
+            let dy = a.in_data[0].expect("pool dy");
+            let am = a.in_data[1].expect("pool argmax");
+            k::pool_backward(*kind, dy, am, a.out[0], n, c, h, w, *kernel, *stride, *pad);
+        }
+        Op::BatchNorm { eps } => {
+            let s = &a.in_shapes[0];
+            let (n, c, spatial) = if s.len() >= 3 {
+                (s[0], s[1], s[2..].iter().product())
+            } else {
+                (s[0], s[1], 1)
+            };
+            let x = a.in_data[0].expect("bn x");
+            let gamma = a.in_data[1].expect("bn gamma");
+            let beta = a.in_data[2].expect("bn beta");
+            let (y, rest) = a.out.split_at_mut(1);
+            let (sm, si) = rest.split_at_mut(1);
+            k::batchnorm_forward(x, gamma, beta, y[0], sm[0], si[0], n, c, spatial, *eps);
+        }
+        Op::BatchNormBackward => {
+            let s = &a.in_shapes[1];
+            let (n, c, spatial) = if s.len() >= 3 {
+                (s[0], s[1], s[2..].iter().product())
+            } else {
+                (s[0], s[1], 1)
+            };
+            let dy = a.in_data[0].expect("bn dy");
+            let x = a.in_data[1].expect("bn x");
+            let gamma = a.in_data[2].expect("bn gamma");
+            let sm = a.in_data[3].expect("bn mean");
+            let si = a.in_data[4].expect("bn invstd");
+            let (dx, rest) = a.out.split_at_mut(1);
+            let (dg, db) = rest.split_at_mut(1);
+            k::batchnorm_backward(x, dy, gamma, sm, si, dx[0], dg[0], db[0], n, c, spatial);
+        }
+        Op::Flatten | Op::Identity => match a.in_data[0] {
+            Some(x) => a.out[0].copy_from_slice(x),
+            None => {} // inplace: nothing to do
+        },
+        Op::FlattenBackward => match a.in_data[0] {
+            Some(dy) => a.out[0].copy_from_slice(dy),
+            None => {}
+        },
+        Op::Elemwise { op } => {
+            // Either input may alias the output (inplace plan); when both
+            // do (x + x with inplace) the op degenerates to out (op) out.
+            let apply_rhs = |out: &mut [f32], b: &[f32]| match op {
+                k::EwBinary::Add => {
+                    for i in 0..out.len() {
+                        out[i] += b[i];
+                    }
+                }
+                k::EwBinary::Sub => {
+                    for i in 0..out.len() {
+                        out[i] -= b[i];
+                    }
+                }
+                k::EwBinary::Mul => {
+                    for i in 0..out.len() {
+                        out[i] *= b[i];
+                    }
+                }
+                k::EwBinary::Div => {
+                    for i in 0..out.len() {
+                        out[i] /= b[i];
+                    }
+                }
+            };
+            match (a.in_data[0], a.in_data[1]) {
+                (Some(x), Some(b)) => k::ew_binary(*op, x, b, a.out[0]),
+                (None, Some(b)) => apply_rhs(a.out[0], b),
+                (Some(x), None) => {
+                    // out aliases b: out = x (op) out, done in place
+                    let out = &mut *a.out[0];
+                    match op {
+                        k::EwBinary::Add => {
+                            for i in 0..out.len() {
+                                out[i] = x[i] + out[i];
+                            }
+                        }
+                        k::EwBinary::Sub => {
+                            for i in 0..out.len() {
+                                out[i] = x[i] - out[i];
+                            }
+                        }
+                        k::EwBinary::Mul => {
+                            for i in 0..out.len() {
+                                out[i] = x[i] * out[i];
+                            }
+                        }
+                        k::EwBinary::Div => {
+                            for i in 0..out.len() {
+                                out[i] = x[i] / out[i];
+                            }
+                        }
+                    }
+                }
+                (None, None) => {
+                    // x == b == out
+                    let out = &mut *a.out[0];
+                    match op {
+                        k::EwBinary::Add => {
+                            for v in out.iter_mut() {
+                                *v += *v;
+                            }
+                        }
+                        k::EwBinary::Sub => out.fill(0.0),
+                        k::EwBinary::Mul => {
+                            for v in out.iter_mut() {
+                                *v *= *v;
+                            }
+                        }
+                        k::EwBinary::Div => out.fill(1.0),
+                    }
+                }
+            }
+        }
+        Op::AddScalar { s } => match a.in_data[0] {
+            Some(x) => {
+                for i in 0..x.len() {
+                    a.out[0][i] = x[i] + s;
+                }
+            }
+            None => {
+                for v in a.out[0].iter_mut() {
+                    *v += s;
+                }
+            }
+        },
+        Op::MulScalar { s } => match a.in_data[0] {
+            Some(x) => {
+                for i in 0..x.len() {
+                    a.out[0][i] = x[i] * s;
+                }
+            }
+            None => {
+                for v in a.out[0].iter_mut() {
+                    *v *= s;
+                }
+            }
+        },
+        Op::AddN => {
+            if let Some(x) = a.in_data[0] {
+                a.out[0].copy_from_slice(x);
+            }
+            for i in 1..a.in_data.len() {
+                match a.in_data[i] {
+                    Some(x) => k::axpy(1.0, x, a.out[0]),
+                    // operand aliases out: out += out
+                    None => {
+                        for v in a.out[0].iter_mut() {
+                            *v += *v;
+                        }
+                    }
+                }
+            }
+        }
+        Op::Concat => {
+            // NCHW channel concat
+            let out_shape = a.out_shapes[0].clone();
+            let n = out_shape[0];
+            let spatial: usize = out_shape[2..].iter().product::<usize>().max(1);
+            let out_c = out_shape[1];
+            let mut ch_off = 0usize;
+            for (idx, xin) in a.in_data.iter().enumerate() {
+                let x = xin.expect("concat input");
+                let ci = a.in_shapes[idx][1];
+                for img in 0..n {
+                    let src = &x[img * ci * spatial..(img + 1) * ci * spatial];
+                    let dst = &mut a.out[0][(img * out_c + ch_off) * spatial
+                        ..(img * out_c + ch_off + ci) * spatial];
+                    dst.copy_from_slice(src);
+                }
+                ch_off += ci;
+            }
+        }
+        Op::ConcatBackward => {
+            // (dy, x_1..x_k) -> (dx_1..dx_k)
+            let dy = a.in_data[0].expect("concat dy");
+            let dy_shape = a.in_shapes[0].clone();
+            let n = dy_shape[0];
+            let total_c = dy_shape[1];
+            let spatial: usize = dy_shape[2..].iter().product::<usize>().max(1);
+            let mut ch_off = 0usize;
+            for (oidx, out) in a.out.iter_mut().enumerate() {
+                let ci = a.out_shapes[oidx][1];
+                for img in 0..n {
+                    let src = &dy[(img * total_c + ch_off) * spatial
+                        ..(img * total_c + ch_off + ci) * spatial];
+                    let dst = &mut out[img * ci * spatial..(img + 1) * ci * spatial];
+                    dst.copy_from_slice(src);
+                }
+                ch_off += ci;
+            }
+        }
+        Op::Dropout { p, seed } => {
+            let (y, mask) = {
+                let (y, m) = a.out.split_at_mut(1);
+                (&mut *y[0], &mut *m[0])
+            };
+            if !a.training || *p <= 0.0 {
+                if let Some(x) = a.in_data[0] {
+                    y.copy_from_slice(x);
+                }
+                mask.fill(1.0);
+            } else {
+                let scale = 1.0 / (1.0 - p);
+                let mut rng = Rng::seed_from_u64(seed ^ a.step.wrapping_mul(0x9E3779B9));
+                match a.in_data[0] {
+                    Some(x) => {
+                        for i in 0..y.len() {
+                            let keep = rng.next_f32() >= *p;
+                            mask[i] = if keep { scale } else { 0.0 };
+                            y[i] = x[i] * mask[i];
+                        }
+                    }
+                    None => {
+                        for i in 0..y.len() {
+                            let keep = rng.next_f32() >= *p;
+                            mask[i] = if keep { scale } else { 0.0 };
+                            y[i] *= mask[i];
+                        }
+                    }
+                }
+            }
+        }
+        Op::DropoutBackward => {
+            let mask = a.in_data[1].expect("dropout mask");
+            match a.in_data[0] {
+                Some(dy) => {
+                    for i in 0..dy.len() {
+                        a.out[0][i] = dy[i] * mask[i];
+                    }
+                }
+                None => {
+                    for (v, m) in a.out[0].iter_mut().zip(mask) {
+                        *v *= m;
+                    }
+                }
+            }
+        }
+        Op::SoftmaxOutput => {
+            let (m, n) = dims2(&a.in_shapes[0]);
+            let x = a.in_data[0].expect("softmax x");
+            k::softmax_rows(x, a.out[0], m, n);
+        }
+        Op::SoftmaxOutputBackward => {
+            let (m, n) = dims2(&a.in_shapes[0]);
+            let probs = a.in_data[0].expect("probs");
+            let labels = a.in_data[1].expect("labels");
+            k::softmax_xent_backward(probs, labels, a.out[0], m, n);
+        }
+        Op::FusedElemwise { steps } => {
+            // seed the accumulator
+            if let Some(x) = a.in_data[0] {
+                a.out[0].copy_from_slice(x);
+            }
+            let mut extra = 1usize;
+            for st in steps {
+                match st {
+                    FusedStep::Act(kind) => {
+                        let out = &mut *a.out[0];
+                        match kind {
+                            k::ActKind::Relu => {
+                                for v in out.iter_mut() {
+                                    *v = v.max(0.0);
+                                }
+                            }
+                            k::ActKind::Tanh => {
+                                for v in out.iter_mut() {
+                                    *v = v.tanh();
+                                }
+                            }
+                            k::ActKind::Sigmoid => {
+                                for v in out.iter_mut() {
+                                    *v = 1.0 / (1.0 + (-*v).exp());
+                                }
+                            }
+                        }
+                    }
+                    FusedStep::AddScalar(s) => {
+                        for v in a.out[0].iter_mut() {
+                            *v += s;
+                        }
+                    }
+                    FusedStep::MulScalar(s) => {
+                        for v in a.out[0].iter_mut() {
+                            *v *= s;
+                        }
+                    }
+                    FusedStep::Binary(op) => {
+                        let operand = a.in_data[extra];
+                        extra += 1;
+                        let out = &mut *a.out[0];
+                        let b: &[f32] = match operand {
+                            Some(b) => b,
+                            None => {
+                                // operand aliases out: apply out (op) out
+                                match op {
+                                    k::EwBinary::Add => {
+                                        for v in out.iter_mut() {
+                                            *v += *v;
+                                        }
+                                    }
+                                    k::EwBinary::Sub => out.fill(0.0),
+                                    k::EwBinary::Mul => {
+                                        for v in out.iter_mut() {
+                                            *v *= *v;
+                                        }
+                                    }
+                                    k::EwBinary::Div => out.fill(1.0),
+                                }
+                                continue;
+                            }
+                        };
+                        match op {
+                            k::EwBinary::Add => {
+                                for i in 0..out.len() {
+                                    out[i] += b[i];
+                                }
+                            }
+                            k::EwBinary::Sub => {
+                                for i in 0..out.len() {
+                                    out[i] -= b[i];
+                                }
+                            }
+                            k::EwBinary::Mul => {
+                                for i in 0..out.len() {
+                                    out[i] *= b[i];
+                                }
+                            }
+                            k::EwBinary::Div => {
+                                for i in 0..out.len() {
+                                    out[i] /= b[i];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_unary(op: &Op, x: Vec<f32>, shape: Vec<usize>) -> Vec<f32> {
+        let mut out = vec![0.0; x.len()];
+        execute(
+            op,
+            OpArgs {
+                in_data: vec![Some(&x)],
+                in_shapes: vec![shape.clone()],
+                out: vec![&mut out],
+                out_shapes: vec![shape],
+                workspace: None,
+                training: true,
+                step: 0,
+            },
+        );
+        out
+    }
+
+    #[test]
+    fn fc_forward_known_values() {
+        // x [1,2] @ w^T [3,2] + b
+        let x = vec![1.0, 2.0];
+        let w = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let b = vec![0.5, -0.5, 0.0];
+        let mut y = vec![0.0; 3];
+        execute(
+            &Op::FullyConnected { num_hidden: 3 },
+            OpArgs {
+                in_data: vec![Some(&x), Some(&w), Some(&b)],
+                in_shapes: vec![vec![1, 2], vec![3, 2], vec![3]],
+                out: vec![&mut y],
+                out_shapes: vec![vec![1, 3]],
+                workspace: None,
+                training: true,
+                step: 0,
+            },
+        );
+        assert_eq!(y, vec![1.5, 1.5, 3.0]);
+    }
+
+    #[test]
+    fn relu_inplace_matches_copy() {
+        let x = vec![-1.0, 2.0, -3.0, 4.0];
+        let copy = run_unary(&Op::Activation { kind: k::ActKind::Relu }, x.clone(), vec![4]);
+        // inplace path
+        let mut out = x.clone();
+        execute(
+            &Op::Activation { kind: k::ActKind::Relu },
+            OpArgs {
+                in_data: vec![None],
+                in_shapes: vec![vec![4]],
+                out: vec![&mut out],
+                out_shapes: vec![vec![4]],
+                workspace: None,
+                training: true,
+                step: 0,
+            },
+        );
+        assert_eq!(copy, out);
+    }
+
+    #[test]
+    fn dropout_eval_is_identity() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![0.0; 3];
+        let mut m = vec![0.0; 3];
+        execute(
+            &Op::Dropout { p: 0.5, seed: 1 },
+            OpArgs {
+                in_data: vec![Some(&x)],
+                in_shapes: vec![vec![3]],
+                out: vec![&mut y, &mut m],
+                out_shapes: vec![vec![3], vec![3]],
+                workspace: None,
+                training: false,
+                step: 0,
+            },
+        );
+        assert_eq!(y, x);
+        assert_eq!(m, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn dropout_train_masks_and_scales() {
+        let x = vec![1.0; 1000];
+        let mut y = vec![0.0; 1000];
+        let mut m = vec![0.0; 1000];
+        execute(
+            &Op::Dropout { p: 0.5, seed: 7 },
+            OpArgs {
+                in_data: vec![Some(&x)],
+                in_shapes: vec![vec![1000]],
+                out: vec![&mut y, &mut m],
+                out_shapes: vec![vec![1000], vec![1000]],
+                workspace: None,
+                training: true,
+                step: 3,
+            },
+        );
+        let kept = y.iter().filter(|&&v| v > 0.0).count();
+        assert!((300..700).contains(&kept), "kept {kept}");
+        for v in &y {
+            assert!(*v == 0.0 || (*v - 2.0).abs() < 1e-6);
+        }
+        // E[y] ~ 1
+        let mean: f32 = y.iter().sum::<f32>() / 1000.0;
+        assert!((mean - 1.0).abs() < 0.15, "{mean}");
+    }
+
+    #[test]
+    fn concat_and_backward_roundtrip() {
+        // 1 image, channels 1+2, spatial 2x1
+        let x1 = vec![1.0, 2.0];
+        let x2 = vec![3.0, 4.0, 5.0, 6.0];
+        let mut y = vec![0.0; 6];
+        execute(
+            &Op::Concat,
+            OpArgs {
+                in_data: vec![Some(&x1), Some(&x2)],
+                in_shapes: vec![vec![1, 1, 2, 1], vec![1, 2, 2, 1]],
+                out: vec![&mut y],
+                out_shapes: vec![vec![1, 3, 2, 1]],
+                workspace: None,
+                training: true,
+                step: 0,
+            },
+        );
+        assert_eq!(y, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mut d1 = vec![0.0; 2];
+        let mut d2 = vec![0.0; 4];
+        execute(
+            &Op::ConcatBackward,
+            OpArgs {
+                in_data: vec![Some(&y), Some(&x1), Some(&x2)],
+                in_shapes: vec![vec![1, 3, 2, 1], vec![1, 1, 2, 1], vec![1, 2, 2, 1]],
+                out: vec![&mut d1, &mut d2],
+                out_shapes: vec![vec![1, 1, 2, 1], vec![1, 2, 2, 1]],
+                workspace: None,
+                training: true,
+                step: 0,
+            },
+        );
+        assert_eq!(d1, x1);
+        assert_eq!(d2, x2);
+    }
+
+    #[test]
+    fn conv_forward_identity_kernel() {
+        // 1x1 conv with identity weight reproduces input
+        let x: Vec<f32> = (0..8).map(|v| v as f32).collect(); // [1,2,2,2]
+        let w = vec![1.0, 0.0, 0.0, 1.0]; // [2,2,1,1]
+        let b = vec![0.0, 0.0];
+        let mut y = vec![0.0; 8];
+        let mut ws = vec![0.0; 2 * 4];
+        execute(
+            &Op::Convolution { num_filter: 2, kernel: 1, stride: 1, pad: 0 },
+            OpArgs {
+                in_data: vec![Some(&x), Some(&w), Some(&b)],
+                in_shapes: vec![vec![1, 2, 2, 2], vec![2, 2, 1, 1], vec![2]],
+                out: vec![&mut y],
+                out_shapes: vec![vec![1, 2, 2, 2]],
+                workspace: Some(&mut ws),
+                training: true,
+                step: 0,
+            },
+        );
+        assert_eq!(y, x);
+    }
+}

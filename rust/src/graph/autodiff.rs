@@ -1,0 +1,349 @@
+//! Symbolic auto-differentiation ("backward" in paper §2.1).
+//!
+//! [`build_backward`] appends gradient nodes to a forward graph, producing
+//! the combined forward+backward graph of Figure 4.  Gradients flow in
+//! reverse topological order; fan-out is handled by summing partials with
+//! an `AddN` node; "big op" gradients are dedicated `*Backward` operators
+//! so the executor can dispatch them to the optimized kernels.
+
+use std::collections::HashMap;
+
+use super::{Entry, Graph, NodeId, Op};
+use crate::error::{Error, Result};
+use crate::ndarray::kernels::EwBinary;
+
+/// Result of differentiating a graph.
+#[derive(Debug, Clone)]
+pub struct GradInfo {
+    /// Gradient entry for each requested variable, keyed by node id.
+    pub var_grads: HashMap<NodeId, Entry>,
+}
+
+/// Append the backward pass for `graph` (mutating it) and return the
+/// gradient entries for `wrt` (variable node ids).
+///
+/// The loss head must be a `SoftmaxOutput` output (its gradient is the
+/// fused `prob - onehot` of `SoftmaxOutputBackward`); additional heads are
+/// treated as non-differentiated outputs.
+pub fn build_backward(graph: &mut Graph, wrt: &[NodeId]) -> Result<GradInfo> {
+    graph.num_forward = graph.nodes.len();
+    let num_forward = graph.num_forward;
+
+    // Partial gradients accumulated per forward entry.
+    let mut partials: HashMap<Entry, Vec<Entry>> = HashMap::new();
+
+    // Seed: every SoftmaxOutput head contributes its fused backward.
+    let heads: Vec<Entry> = graph.outputs.clone();
+    for head in &heads {
+        let node = &graph.nodes[head.node];
+        if let Op::SoftmaxOutput = node.op {
+            let prob = *head;
+            let label = node.inputs[1];
+            let x = node.inputs[0];
+            let name = format!("{}_backward", node.name);
+            let bid = graph.add_node(Op::SoftmaxOutputBackward, name, vec![prob, label]);
+            partials.entry(x).or_default().push(Entry::new(bid));
+        }
+    }
+    if partials.is_empty() {
+        return Err(Error::graph(
+            "build_backward: no SoftmaxOutput head found to seed gradients",
+        ));
+    }
+
+    // Sum partials into a single gradient entry.
+    fn reduce(graph: &mut Graph, entry: Entry, parts: Vec<Entry>) -> Entry {
+        if parts.len() == 1 {
+            parts[0]
+        } else {
+            let name = format!("sum_grad_{}_{}", entry.node, entry.out);
+            Entry::new(graph.add_node(Op::AddN, name, parts))
+        }
+    }
+
+    // Walk forward nodes in reverse; each node whose output grad is known
+    // emits input grads.
+    for nid in (0..num_forward).rev() {
+        let op = graph.nodes[nid].op.clone();
+        if op.is_variable() {
+            continue;
+        }
+        // Collect gradients of this node's outputs (if any are needed).
+        let nout = graph.num_outputs_of(nid);
+        let mut out_grads: Vec<Option<Entry>> = Vec::with_capacity(nout);
+        for out in 0..nout {
+            let e = Entry { node: nid, out };
+            out_grads.push(match partials.remove(&e) {
+                Some(parts) => Some(reduce(graph, e, parts)),
+                None => None,
+            });
+        }
+        if out_grads.iter().all(|g| g.is_none()) {
+            continue;
+        }
+        let inputs = graph.nodes[nid].inputs.clone();
+        let name = graph.nodes[nid].name.clone();
+        let dy = out_grads[0];
+
+        match op {
+            Op::SoftmaxOutput => {
+                // Seeded above; nothing else flows through (label has no grad).
+            }
+            Op::FullyConnected { .. } => {
+                let dy = dy.expect("fc grad");
+                let bid = graph.add_node(
+                    Op::FullyConnectedBackward,
+                    format!("{name}_backward"),
+                    vec![dy, inputs[0], inputs[1]],
+                );
+                for (i, &inp) in inputs.iter().enumerate().take(3) {
+                    partials.entry(inp).or_default().push(Entry { node: bid, out: i });
+                }
+            }
+            Op::Convolution { kernel, stride, pad, .. } => {
+                let dy = dy.expect("conv grad");
+                let bid = graph.add_node(
+                    Op::ConvolutionBackward { kernel, stride, pad },
+                    format!("{name}_backward"),
+                    vec![dy, inputs[0], inputs[1]],
+                );
+                for (i, &inp) in inputs.iter().enumerate().take(3) {
+                    partials.entry(inp).or_default().push(Entry { node: bid, out: i });
+                }
+            }
+            Op::Activation { kind } => {
+                let dy = dy.expect("act grad");
+                let y = Entry::new(nid);
+                let bid = graph.add_node(
+                    Op::ActivationBackward { kind },
+                    format!("{name}_backward"),
+                    vec![dy, y],
+                );
+                partials.entry(inputs[0]).or_default().push(Entry::new(bid));
+            }
+            Op::Pooling { kind, kernel, stride, pad } => {
+                let dy = dy.expect("pool grad");
+                let argmax = Entry { node: nid, out: 1 };
+                let bid = graph.add_node(
+                    Op::PoolingBackward { kind, kernel, stride, pad },
+                    format!("{name}_backward"),
+                    vec![dy, argmax, inputs[0]],
+                );
+                partials.entry(inputs[0]).or_default().push(Entry::new(bid));
+            }
+            Op::BatchNorm { .. } => {
+                let dy = dy.expect("bn grad");
+                let mean = Entry { node: nid, out: 1 };
+                let invstd = Entry { node: nid, out: 2 };
+                let bid = graph.add_node(
+                    Op::BatchNormBackward,
+                    format!("{name}_backward"),
+                    vec![dy, inputs[0], inputs[1], mean, invstd],
+                );
+                partials.entry(inputs[0]).or_default().push(Entry { node: bid, out: 0 });
+                partials.entry(inputs[1]).or_default().push(Entry { node: bid, out: 1 });
+                partials.entry(inputs[2]).or_default().push(Entry { node: bid, out: 2 });
+            }
+            Op::Flatten => {
+                let dy = dy.expect("flatten grad");
+                let bid = graph.add_node(
+                    Op::FlattenBackward,
+                    format!("{name}_backward"),
+                    vec![dy, inputs[0]],
+                );
+                partials.entry(inputs[0]).or_default().push(Entry::new(bid));
+            }
+            Op::Elemwise { op: ew } => {
+                let dy = dy.expect("elemwise grad");
+                match ew {
+                    EwBinary::Add => {
+                        partials.entry(inputs[0]).or_default().push(dy);
+                        partials.entry(inputs[1]).or_default().push(dy);
+                    }
+                    EwBinary::Sub => {
+                        partials.entry(inputs[0]).or_default().push(dy);
+                        let neg = graph.add_node(
+                            Op::MulScalar { s: -1.0 },
+                            format!("{name}_bwd_neg"),
+                            vec![dy],
+                        );
+                        partials.entry(inputs[1]).or_default().push(Entry::new(neg));
+                    }
+                    EwBinary::Mul => {
+                        let da = graph.add_node(
+                            Op::Elemwise { op: EwBinary::Mul },
+                            format!("{name}_bwd_da"),
+                            vec![dy, inputs[1]],
+                        );
+                        let db = graph.add_node(
+                            Op::Elemwise { op: EwBinary::Mul },
+                            format!("{name}_bwd_db"),
+                            vec![dy, inputs[0]],
+                        );
+                        partials.entry(inputs[0]).or_default().push(Entry::new(da));
+                        partials.entry(inputs[1]).or_default().push(Entry::new(db));
+                    }
+                    EwBinary::Div => {
+                        // da = dy / b ; db = -dy * a / b^2 = -(da * y) where
+                        // y = a/b is this node's output.
+                        let da = graph.add_node(
+                            Op::Elemwise { op: EwBinary::Div },
+                            format!("{name}_bwd_da"),
+                            vec![dy, inputs[1]],
+                        );
+                        let day = graph.add_node(
+                            Op::Elemwise { op: EwBinary::Mul },
+                            format!("{name}_bwd_day"),
+                            vec![Entry::new(da), Entry::new(nid)],
+                        );
+                        let db = graph.add_node(
+                            Op::MulScalar { s: -1.0 },
+                            format!("{name}_bwd_db"),
+                            vec![Entry::new(day)],
+                        );
+                        partials.entry(inputs[0]).or_default().push(Entry::new(da));
+                        partials.entry(inputs[1]).or_default().push(Entry::new(db));
+                    }
+                }
+            }
+            Op::AddScalar { .. } => {
+                let dy = dy.expect("addscalar grad");
+                partials.entry(inputs[0]).or_default().push(dy);
+            }
+            Op::MulScalar { s } => {
+                let dy = dy.expect("mulscalar grad");
+                let bid =
+                    graph.add_node(Op::MulScalar { s }, format!("{name}_bwd"), vec![dy]);
+                partials.entry(inputs[0]).or_default().push(Entry::new(bid));
+            }
+            Op::Identity => {
+                let dy = dy.expect("identity grad");
+                partials.entry(inputs[0]).or_default().push(dy);
+            }
+            Op::AddN => {
+                let dy = dy.expect("addn grad");
+                for &inp in &inputs {
+                    partials.entry(inp).or_default().push(dy);
+                }
+            }
+            Op::Concat => {
+                let dy = dy.expect("concat grad");
+                let mut bins = vec![dy];
+                bins.extend(inputs.iter().copied());
+                let bid =
+                    graph.add_node(Op::ConcatBackward, format!("{name}_backward"), bins);
+                for (i, &inp) in inputs.iter().enumerate() {
+                    partials.entry(inp).or_default().push(Entry { node: bid, out: i });
+                }
+            }
+            Op::Dropout { .. } => {
+                let dy = dy.expect("dropout grad");
+                let mask = Entry { node: nid, out: 1 };
+                let bid = graph.add_node(
+                    Op::DropoutBackward,
+                    format!("{name}_backward"),
+                    vec![dy, mask],
+                );
+                partials.entry(inputs[0]).or_default().push(Entry::new(bid));
+            }
+            Op::FusedElemwise { .. } => {
+                return Err(Error::graph(
+                    "FusedElemwise appears before autodiff; fuse after building backward",
+                ));
+            }
+            // Backward-of-backward unsupported (paper doesn't need it).
+            _ => {
+                return Err(Error::graph(format!(
+                    "cannot differentiate through {}",
+                    op.type_name()
+                )));
+            }
+        }
+    }
+
+    // Materialize variable gradients.
+    let mut var_grads = HashMap::new();
+    for &vid in wrt {
+        if !graph.nodes[vid].op.is_variable() {
+            return Err(Error::graph(format!("node {vid} is not a variable")));
+        }
+        let e = Entry::new(vid);
+        if let Some(parts) = partials.remove(&e) {
+            let g = reduce(graph, e, parts);
+            var_grads.insert(vid, g);
+        }
+    }
+    Ok(GradInfo { var_grads })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::tests::mlp_graph;
+    use crate::graph::infer_shapes;
+
+    #[test]
+    fn mlp_backward_produces_all_param_grads() {
+        let (mut g, vs) = mlp_graph(16);
+        let params: Vec<NodeId> = ["fc1_weight", "fc1_bias", "fc2_weight", "fc2_bias"]
+            .iter()
+            .map(|n| g.find_variable(n).unwrap())
+            .collect();
+        let gi = build_backward(&mut g, &params).unwrap();
+        assert_eq!(gi.var_grads.len(), 4);
+        g.validate().unwrap();
+        // Shapes of gradients match parameter shapes.
+        let shapes = infer_shapes(&g, &vs).unwrap();
+        for (&vid, &ge) in &gi.var_grads {
+            assert_eq!(shapes[vid][0], shapes[ge.node][ge.out], "grad shape mismatch");
+        }
+        assert!(g.num_forward < g.nodes.len());
+    }
+
+    #[test]
+    fn data_grad_available_too() {
+        let (mut g, _vs) = mlp_graph(4);
+        let data = g.find_variable("data").unwrap();
+        let gi = build_backward(&mut g, &[data]).unwrap();
+        assert!(gi.var_grads.contains_key(&data));
+    }
+
+    #[test]
+    fn no_softmax_head_errors() {
+        let mut g = Graph::new();
+        let a = g.add_variable("a");
+        let b = g.add_node(Op::AddScalar { s: 1.0 }, "b", vec![Entry::new(a)]);
+        g.outputs = vec![Entry::new(b)];
+        assert!(build_backward(&mut g, &[a]).is_err());
+    }
+
+    #[test]
+    fn fanout_grads_summed_with_addn() {
+        // y = softmax(fc(x + x)): x used twice via Elemwise Add of the
+        // same entry -> grads must be summed.
+        use crate::ndarray::kernels::EwBinary;
+        let mut g = Graph::new();
+        let x = g.add_variable("x");
+        let w = g.add_variable("w");
+        let b = g.add_variable("b");
+        let label = g.add_variable("label");
+        let two_x = g.add_node(
+            Op::Elemwise { op: EwBinary::Add },
+            "twox",
+            vec![Entry::new(x), Entry::new(x)],
+        );
+        let fc = g.add_node(
+            Op::FullyConnected { num_hidden: 4 },
+            "fc",
+            vec![Entry::new(two_x), Entry::new(w), Entry::new(b)],
+        );
+        let sm =
+            g.add_node(Op::SoftmaxOutput, "sm", vec![Entry::new(fc), Entry::new(label)]);
+        g.outputs = vec![Entry::new(sm)];
+        let gi = build_backward(&mut g, &[x]).unwrap();
+        let ge = gi.var_grads[&x];
+        // Two partials (dy flows twice through Add) must be AddN-reduced.
+        assert!(matches!(g.nodes[ge.node].op, Op::AddN));
+        g.validate().unwrap();
+    }
+}

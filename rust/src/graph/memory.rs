@@ -1,0 +1,485 @@
+//! Graph memory allocation (paper §3.1, evaluated in Figure 7).
+//!
+//! Each internal entry's lifetime — creation to last use — is known once
+//! the graph is fixed, so storage can be reused across entries whose
+//! lifetimes do not intersect.  An optimal assignment costs `O(n^2)`; the
+//! paper proposes two linear-time heuristics, both implemented here:
+//!
+//! * **inplace** — simulate graph traversal keeping a reference count per
+//!   entry; when an op supports identity layout (activations, elementwise,
+//!   flatten, gradient pass-throughs) and its input dies at this node, the
+//!   output reuses the input's buffer.
+//! * **co-share** — entries whose lifetimes are disjoint in the simulated
+//!   schedule share one buffer drawn from a free pool; sharing imposes an
+//!   extra serialization constraint, recorded as a control dependency
+//!   (the executor also gets it for free: co-tenants write the same
+//!   storage tag, so the engine serializes them in program order).
+//!
+//! `Both` composes them, which is what MXNet ships; the paper reports ~2x
+//! internal-memory reduction for training and ~4x for prediction — the
+//! `fig7_memory` bench regenerates that comparison with these exact
+//! planners.
+
+use std::collections::{HashMap, HashSet};
+
+use super::{entry_bytes, workspace_bytes, Entry, Graph, NodeId, ShapeMap};
+
+/// Allocation strategy selector (the four Figure 7 series).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AllocStrategy {
+    /// Every internal entry gets dedicated storage.
+    None,
+    /// Inplace identity reuse only.
+    Inplace,
+    /// Free-pool co-sharing only.
+    CoShare,
+    /// Inplace + co-share (MXNet default).
+    Both,
+}
+
+impl AllocStrategy {
+    /// All strategies, in Figure 7 presentation order.
+    pub fn all() -> [AllocStrategy; 4] {
+        [AllocStrategy::None, AllocStrategy::Inplace, AllocStrategy::CoShare, AllocStrategy::Both]
+    }
+
+    fn inplace(self) -> bool {
+        matches!(self, AllocStrategy::Inplace | AllocStrategy::Both)
+    }
+
+    fn coshare(self) -> bool {
+        matches!(self, AllocStrategy::CoShare | AllocStrategy::Both)
+    }
+}
+
+impl std::fmt::Display for AllocStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            AllocStrategy::None => "none",
+            AllocStrategy::Inplace => "inplace",
+            AllocStrategy::CoShare => "co-share",
+            AllocStrategy::Both => "both",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// A storage assignment for the internal entries of a graph.
+#[derive(Debug, Clone)]
+pub struct MemPlan {
+    /// Storage id per internal entry.
+    pub storage_of: HashMap<Entry, usize>,
+    /// Byte size of each storage block.
+    pub storage_bytes: Vec<usize>,
+    /// Workspace storage id per node that needs scratch space.
+    pub workspace_of: HashMap<NodeId, usize>,
+    /// Total bytes across storage blocks — the Figure 7 metric
+    /// ("internal variables except for the outputs").
+    pub total_internal_bytes: usize,
+    /// Extra ordering constraints implied by sharing: `(later, earlier)`.
+    pub control_deps: Vec<(NodeId, NodeId)>,
+}
+
+impl MemPlan {
+    /// Bytes that a dedicated-everything plan would use (for ratio
+    /// reporting).
+    pub fn bytes_mb(&self) -> f64 {
+        crate::util::mb(self.total_internal_bytes)
+    }
+}
+
+/// Plan storage for every internal entry of `graph`.
+///
+/// `external` entries (variable outputs, requested graph outputs,
+/// gradient outputs read by the optimizer) are excluded from planning and
+/// from the byte total, matching the paper's metric.
+pub fn plan_memory(
+    graph: &Graph,
+    shapes: &ShapeMap,
+    external: &HashSet<Entry>,
+    strategy: AllocStrategy,
+) -> MemPlan {
+    let ws_bytes = workspace_bytes(graph, shapes);
+    let mut rc = graph.entry_refcounts(&[]);
+    // External entries never die for planning purposes.
+    for e in external {
+        rc.insert(*e, usize::MAX / 2);
+    }
+
+    let mut storage_of: HashMap<Entry, usize> = HashMap::new();
+    let mut storage_bytes: Vec<usize> = Vec::new();
+    let mut storage_refs: Vec<usize> = Vec::new();
+    let mut last_releaser: Vec<Option<NodeId>> = Vec::new();
+    let mut workspace_of: HashMap<NodeId, usize> = HashMap::new();
+    let mut control_deps: Vec<(NodeId, NodeId)> = Vec::new();
+    // Free pool: (bytes, storage id); kept sorted by bytes for best-fit.
+    let mut pool: Vec<(usize, usize)> = Vec::new();
+
+    let is_internal =
+        |e: &Entry, graph: &Graph| !external.contains(e) && !graph.nodes[e.node].op.is_variable();
+
+    let alloc = |bytes: usize,
+                     node: NodeId,
+                     pool: &mut Vec<(usize, usize)>,
+                     storage_bytes: &mut Vec<usize>,
+                     storage_refs: &mut Vec<usize>,
+                     last_releaser: &mut Vec<Option<NodeId>>,
+                     control_deps: &mut Vec<(NodeId, NodeId)>,
+                     coshare: bool|
+     -> usize {
+        if coshare {
+            // best fit >= bytes
+            if let Some(pos) = pool
+                .iter()
+                .enumerate()
+                .filter(|(_, (b, _))| *b >= bytes)
+                .min_by_key(|(_, (b, _))| *b)
+                .map(|(i, _)| i)
+            {
+                let (_, sid) = pool.remove(pos);
+                if let Some(rel) = last_releaser[sid] {
+                    control_deps.push((node, rel));
+                }
+                storage_refs[sid] += 1;
+                return sid;
+            }
+            // else grow the largest free block (reduces total footprint
+            // versus always allocating fresh).
+            if let Some(pos) = pool
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, (b, _))| *b)
+                .map(|(i, _)| i)
+            {
+                let (_, sid) = pool.remove(pos);
+                storage_bytes[sid] = bytes;
+                if let Some(rel) = last_releaser[sid] {
+                    control_deps.push((node, rel));
+                }
+                storage_refs[sid] += 1;
+                return sid;
+            }
+        }
+        storage_bytes.push(bytes);
+        storage_refs.push(1);
+        last_releaser.push(None);
+        storage_bytes.len() - 1
+    };
+
+    for (nid, node) in graph.nodes.iter().enumerate() {
+        if node.op.is_variable() {
+            continue;
+        }
+        let nout = graph.num_outputs_of(nid);
+        let mut taken_inputs: HashSet<usize> = HashSet::new();
+        let mut assigned: HashSet<usize> = HashSet::new();
+
+        // 1. inplace identity reuse
+        if strategy.inplace() {
+            for &(iidx, oidx) in node.op.inplace_pairs() {
+                if oidx >= nout || assigned.contains(&oidx) || iidx >= node.inputs.len() {
+                    continue;
+                }
+                let in_e = node.inputs[iidx];
+                let out_e = Entry { node: nid, out: oidx };
+                if external.contains(&out_e) || !is_internal(&in_e, graph) {
+                    continue;
+                }
+                if taken_inputs.contains(&iidx) {
+                    continue;
+                }
+                if rc.get(&in_e).copied().unwrap_or(0) != 1 {
+                    continue; // input still needed elsewhere
+                }
+                let in_bytes = entry_bytes(&shapes[in_e.node][in_e.out]);
+                let out_bytes = entry_bytes(&shapes[nid][oidx]);
+                if in_bytes != out_bytes {
+                    continue;
+                }
+                if let Some(&sid) = storage_of.get(&in_e) {
+                    storage_of.insert(out_e, sid);
+                    storage_refs[sid] += 1;
+                    taken_inputs.insert(iidx);
+                    assigned.insert(oidx);
+                }
+            }
+        }
+
+        // 2. allocate remaining internal outputs
+        for oidx in 0..nout {
+            if assigned.contains(&oidx) {
+                continue;
+            }
+            let out_e = Entry { node: nid, out: oidx };
+            if external.contains(&out_e) {
+                continue;
+            }
+            let bytes = entry_bytes(&shapes[nid][oidx]);
+            if bytes == 0 {
+                continue;
+            }
+            let sid = alloc(
+                bytes,
+                nid,
+                &mut pool,
+                &mut storage_bytes,
+                &mut storage_refs,
+                &mut last_releaser,
+                &mut control_deps,
+                strategy.coshare(),
+            );
+            storage_of.insert(out_e, sid);
+        }
+
+        // 3. workspace for this node (lifetime = the node itself)
+        if ws_bytes[nid] > 0 {
+            let sid = alloc(
+                ws_bytes[nid],
+                nid,
+                &mut pool,
+                &mut storage_bytes,
+                &mut storage_refs,
+                &mut last_releaser,
+                &mut control_deps,
+                strategy.coshare(),
+            );
+            workspace_of.insert(nid, sid);
+            // released immediately after the node runs
+            storage_refs[sid] -= 1;
+            if storage_refs[sid] == 0 {
+                last_releaser[sid] = Some(nid);
+                pool.push((storage_bytes[sid], sid));
+            }
+        }
+
+        // 4. inputs die after their last consumer
+        let mut seen: HashSet<Entry> = HashSet::new();
+        for e in &node.inputs {
+            if !seen.insert(*e) {
+                continue;
+            }
+            if let Some(c) = rc.get_mut(e) {
+                *c = c.saturating_sub(1);
+                if *c == 0 && is_internal(e, graph) {
+                    if let Some(&sid) = storage_of.get(e) {
+                        storage_refs[sid] -= 1;
+                        if storage_refs[sid] == 0 {
+                            last_releaser[sid] = Some(nid);
+                            pool.push((storage_bytes[sid], sid));
+                        }
+                    }
+                }
+            }
+        }
+
+        // 5. outputs nobody consumes die immediately (e.g. pooling argmax
+        // in a forward-only graph)
+        for oidx in 0..nout {
+            let out_e = Entry { node: nid, out: oidx };
+            if external.contains(&out_e) {
+                continue;
+            }
+            if rc.get(&out_e).copied().unwrap_or(0) == 0 {
+                if let Some(&sid) = storage_of.get(&out_e) {
+                    storage_refs[sid] -= 1;
+                    if storage_refs[sid] == 0 {
+                        last_releaser[sid] = Some(nid);
+                        pool.push((storage_bytes[sid], sid));
+                    }
+                }
+            }
+        }
+    }
+
+    let total_internal_bytes = storage_bytes.iter().sum();
+    MemPlan { storage_of, storage_bytes, workspace_of, total_internal_bytes, control_deps }
+}
+
+/// The default external set for an executor: all variable outputs, all
+/// graph outputs, plus any extra entries (e.g. variable gradients).
+pub fn default_external(graph: &Graph, extra: &[Entry]) -> HashSet<Entry> {
+    let mut ext: HashSet<Entry> = HashSet::new();
+    for (id, n) in graph.nodes.iter().enumerate() {
+        if n.op.is_variable() {
+            ext.insert(Entry::new(id));
+        }
+    }
+    for e in &graph.outputs {
+        ext.insert(*e);
+    }
+    for e in extra {
+        ext.insert(*e);
+    }
+    ext
+}
+
+/// Verify a plan never lets two simultaneously-live entries share storage
+/// (used by tests and the property suite).
+pub fn validate_plan(
+    graph: &Graph,
+    shapes: &ShapeMap,
+    external: &HashSet<Entry>,
+    plan: &MemPlan,
+) -> Result<(), String> {
+    // Re-simulate with per-storage current tenant; a storage may host a new
+    // tenant only when the previous one is dead (refcount satisfied) or via
+    // the inplace pair of the consuming node.
+    let mut rc = graph.entry_refcounts(&[]);
+    for e in external {
+        rc.insert(*e, usize::MAX / 2);
+    }
+    let mut live_of_storage: HashMap<usize, HashSet<Entry>> = HashMap::new();
+    for (nid, node) in graph.nodes.iter().enumerate() {
+        if node.op.is_variable() {
+            continue;
+        }
+        // outputs become live
+        for oidx in 0..graph.num_outputs_of(nid) {
+            let e = Entry { node: nid, out: oidx };
+            if let Some(&sid) = plan.storage_of.get(&e) {
+                let live = live_of_storage.entry(sid).or_default();
+                // the only allowed co-residents are inputs of THIS node
+                // being consumed inplace
+                for other in live.iter() {
+                    let is_own_input = node.inputs.contains(other);
+                    if !is_own_input {
+                        return Err(format!(
+                            "storage {sid} hosts {other:?} while {e:?} is written by node {nid}"
+                        ));
+                    }
+                }
+                if entry_bytes(&shapes[e.node][e.out]) > plan.storage_bytes[sid] {
+                    return Err(format!("entry {e:?} exceeds storage {sid}"));
+                }
+                live.insert(e);
+            }
+        }
+        // inputs die
+        let mut seen = HashSet::new();
+        for e in &node.inputs {
+            if !seen.insert(*e) {
+                continue;
+            }
+            if let Some(c) = rc.get_mut(e) {
+                *c = c.saturating_sub(1);
+                if *c == 0 {
+                    if let Some(&sid) = plan.storage_of.get(e) {
+                        live_of_storage.entry(sid).or_default().remove(e);
+                    }
+                }
+            }
+        }
+        // dead-on-arrival outputs
+        for oidx in 0..graph.num_outputs_of(nid) {
+            let e = Entry { node: nid, out: oidx };
+            if rc.get(&e).copied().unwrap_or(0) == 0 {
+                if let Some(&sid) = plan.storage_of.get(&e) {
+                    live_of_storage.entry(sid).or_default().remove(&e);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::autodiff::build_backward;
+    use crate::graph::infer_shapes;
+    use crate::graph::tests::mlp_graph;
+
+    fn strategies_bytes(fwd_only: bool, batch: usize) -> HashMap<AllocStrategy, usize> {
+        let (mut g, vs) = mlp_graph(batch);
+        let mut extra = vec![];
+        if !fwd_only {
+            let params: Vec<_> = ["fc1_weight", "fc1_bias", "fc2_weight", "fc2_bias"]
+                .iter()
+                .map(|n| g.find_variable(n).unwrap())
+                .collect();
+            let gi = build_backward(&mut g, &params).unwrap();
+            extra.extend(gi.var_grads.values().copied());
+        }
+        let shapes = infer_shapes(&g, &vs).unwrap();
+        let ext = default_external(&g, &extra);
+        AllocStrategy::all()
+            .into_iter()
+            .map(|s| {
+                let plan = plan_memory(&g, &shapes, &ext, s);
+                validate_plan(&g, &shapes, &ext, &plan).unwrap();
+                (s, plan.total_internal_bytes)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn strategies_monotone_improvement() {
+        for fwd in [true, false] {
+            let b = strategies_bytes(fwd, 64);
+            assert!(b[&AllocStrategy::Inplace] <= b[&AllocStrategy::None]);
+            assert!(b[&AllocStrategy::CoShare] <= b[&AllocStrategy::None]);
+            assert!(b[&AllocStrategy::Both] <= b[&AllocStrategy::Inplace]);
+            assert!(b[&AllocStrategy::Both] <= b[&AllocStrategy::CoShare]);
+        }
+    }
+
+    #[test]
+    fn inplace_reuses_activation_buffer() {
+        // In the MLP forward, relu1 should share fc1's buffer under inplace.
+        let (g, vs) = mlp_graph(8);
+        let shapes = infer_shapes(&g, &vs).unwrap();
+        let ext = default_external(&g, &[]);
+        let plan = plan_memory(&g, &shapes, &ext, AllocStrategy::Inplace);
+        let fc1 = g.nodes.iter().position(|n| n.name == "fc1").unwrap();
+        let relu = g.nodes.iter().position(|n| n.name == "relu1").unwrap();
+        assert_eq!(
+            plan.storage_of[&Entry::new(fc1)],
+            plan.storage_of[&Entry::new(relu)],
+            "activation must run inplace"
+        );
+    }
+
+    #[test]
+    fn external_entries_not_planned() {
+        let (g, vs) = mlp_graph(8);
+        let shapes = infer_shapes(&g, &vs).unwrap();
+        let ext = default_external(&g, &[]);
+        let plan = plan_memory(&g, &shapes, &ext, AllocStrategy::Both);
+        for e in &ext {
+            assert!(!plan.storage_of.contains_key(e));
+        }
+    }
+
+    #[test]
+    fn coshare_never_exceeds_live_set() {
+        let (mut g, vs) = mlp_graph(16);
+        let params: Vec<_> = ["fc1_weight", "fc1_bias", "fc2_weight", "fc2_bias"]
+            .iter()
+            .map(|n| g.find_variable(n).unwrap())
+            .collect();
+        let gi = build_backward(&mut g, &params).unwrap();
+        let extra: Vec<_> = gi.var_grads.values().copied().collect();
+        let shapes = infer_shapes(&g, &vs).unwrap();
+        let ext = default_external(&g, &extra);
+        for s in AllocStrategy::all() {
+            let plan = plan_memory(&g, &shapes, &ext, s);
+            validate_plan(&g, &shapes, &ext, &plan)
+                .unwrap_or_else(|e| panic!("{s}: {e}"));
+        }
+    }
+
+    #[test]
+    fn prediction_saves_more_than_training() {
+        // The paper's Figure 7 shape: forward-only (prediction) reduction
+        // ratio >= training reduction ratio.
+        let fwd = strategies_bytes(true, 64);
+        let train = strategies_bytes(false, 64);
+        let ratio_fwd = fwd[&AllocStrategy::None] as f64 / fwd[&AllocStrategy::Both] as f64;
+        let ratio_train =
+            train[&AllocStrategy::None] as f64 / train[&AllocStrategy::Both] as f64;
+        assert!(
+            ratio_fwd >= ratio_train * 0.9,
+            "fwd {ratio_fwd:.2} vs train {ratio_train:.2}"
+        );
+    }
+}

@@ -1,0 +1,683 @@
+//! The computation graph IR (paper §3.1).
+//!
+//! A bound symbolic expression is represented as a [`Graph`]: a vector of
+//! [`Node`]s in topological order, each applying an [`Op`] to input
+//! [`Entry`]s (node, output-index pairs).  The graph is the unit on which
+//! the paper's optimizations operate:
+//!
+//! * [`autodiff`] appends the backward pass ("backward" in §2.1),
+//! * [`optimize`] prunes unreached nodes and fuses elementwise chains
+//!   ("graph optimization" in §3.1),
+//! * [`memory`] plans storage with the *inplace* and *co-share* heuristics
+//!   ("memory allocation" in §3.1, Figure 7).
+
+pub mod autodiff;
+pub mod memory;
+pub mod optimize;
+pub mod viz;
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::ndarray::kernels::{ActKind, EwBinary, PoolKind};
+
+/// Node index within a [`Graph`].
+pub type NodeId = usize;
+
+/// A value in the graph: output `out` of node `node`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Entry {
+    /// Producing node.
+    pub node: NodeId,
+    /// Output index of the producing node.
+    pub out: usize,
+}
+
+impl Entry {
+    /// First output of `node`.
+    pub fn new(node: NodeId) -> Self {
+        Entry { node, out: 0 }
+    }
+}
+
+/// One step of a fused elementwise chain (see [`Op::FusedElemwise`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FusedStep {
+    /// Apply an activation.
+    Act(ActKind),
+    /// Add a constant.
+    AddScalar(f32),
+    /// Multiply by a constant.
+    MulScalar(f32),
+    /// Combine with the next extra input elementwise.
+    Binary(EwBinary),
+}
+
+/// Graph operators.
+///
+/// Forward "layer" ops mirror the paper's coarse-grained operators
+/// (§3.1: *"manually implemented well-optimized big operations, such as a
+/// layer in neural network"*); `*Backward` ops are emitted by
+/// [`autodiff`].  Input/output signatures are documented per variant.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Free variable (input data, label, or parameter). No inputs, 1 out.
+    Variable,
+    /// `[b,in] x [hidden,in] x [hidden] -> [b,hidden]` (x, weight, bias).
+    FullyConnected {
+        /// Output width.
+        num_hidden: usize,
+    },
+    /// NCHW convolution: `(x[n,c,h,w], w[f,c,kh,kw], b[f]) -> y[n,f,oh,ow]`.
+    Convolution {
+        /// Number of output filters.
+        num_filter: usize,
+        /// Square kernel size.
+        kernel: usize,
+        /// Stride.
+        stride: usize,
+        /// Zero padding.
+        pad: usize,
+    },
+    /// Elementwise activation: `x -> y`.
+    Activation {
+        /// Which nonlinearity.
+        kind: ActKind,
+    },
+    /// Square pooling: `x[n,c,h,w] -> (y[n,c,oh,ow], argmax[n,c,oh,ow])`.
+    Pooling {
+        /// Max or average.
+        kind: PoolKind,
+        /// Window size.
+        kernel: usize,
+        /// Stride.
+        stride: usize,
+        /// Zero padding.
+        pad: usize,
+    },
+    /// Batch normalization over channel axis:
+    /// `(x, gamma[c], beta[c]) -> (y, save_mean[c], save_invstd[c])`.
+    BatchNorm {
+        /// Numerical-stability epsilon.
+        eps: f32,
+    },
+    /// Collapse trailing dims: `[n, ...] -> [n, prod(...)]`.
+    Flatten,
+    /// Elementwise binary: `(a, b) -> y`.
+    Elemwise {
+        /// Which binary op.
+        op: EwBinary,
+    },
+    /// `x + s`.
+    AddScalar {
+        /// Constant.
+        s: f32,
+    },
+    /// `x * s`.
+    MulScalar {
+        /// Constant.
+        s: f32,
+    },
+    /// Sum of `n` same-shaped inputs (gradient accumulation).
+    AddN,
+    /// Identity / copy.
+    Identity,
+    /// Channel-axis concat of NCHW inputs (the Inception merge).
+    Concat,
+    /// Dropout: `x -> (y, mask)`; `p` is drop probability.
+    Dropout {
+        /// Drop probability.
+        p: f32,
+        /// Seed for mask generation.
+        seed: u64,
+    },
+    /// Softmax over the last axis plus cross-entropy head:
+    /// `(x[b,n], label[b]) -> prob[b,n]`.
+    SoftmaxOutput,
+    /// Optimizer-fused elementwise chain over the first input, consuming
+    /// one extra input per `Binary` step.
+    FusedElemwise {
+        /// Steps applied in order.
+        steps: Vec<FusedStep>,
+    },
+
+    // ----- backward ops (emitted by autodiff) -----
+    /// `(dy, x, w) -> (dx, dw, db)`.
+    FullyConnectedBackward,
+    /// `(dy, x, w) -> (dx, dw, db)`.
+    ConvolutionBackward {
+        /// Forward kernel size.
+        kernel: usize,
+        /// Forward stride.
+        stride: usize,
+        /// Forward padding.
+        pad: usize,
+    },
+    /// `(dy, y) -> dx` (computed from the output, freeing the input).
+    ActivationBackward {
+        /// Which nonlinearity.
+        kind: ActKind,
+    },
+    /// `(dy, argmax, x) -> dx`.
+    PoolingBackward {
+        /// Max or average.
+        kind: PoolKind,
+        /// Window size.
+        kernel: usize,
+        /// Stride.
+        stride: usize,
+        /// Zero padding.
+        pad: usize,
+    },
+    /// `(dy, x, gamma, save_mean, save_invstd) -> (dx, dgamma, dbeta)`.
+    BatchNormBackward,
+    /// `(dy, x) -> dx` (reshape of dy to x's shape).
+    FlattenBackward,
+    /// `(prob, label) -> dx` — combined softmax+CE gradient.
+    SoftmaxOutputBackward,
+    /// `(dy, x_1..x_k) -> (dx_1..dx_k)` — split dy along channels.
+    ConcatBackward,
+    /// `(dy, mask) -> dx`.
+    DropoutBackward,
+}
+
+impl Op {
+    /// Number of outputs this op produces (`k` = input count for
+    /// variadic backward splits).
+    pub fn num_outputs(&self, num_inputs: usize) -> usize {
+        match self {
+            Op::Pooling { .. } | Op::Dropout { .. } => 2,
+            Op::BatchNorm { .. } => 3,
+            Op::FullyConnectedBackward
+            | Op::ConvolutionBackward { .. }
+            | Op::BatchNormBackward => 3,
+            Op::ConcatBackward => num_inputs.saturating_sub(1),
+            _ => 1,
+        }
+    }
+
+    /// Whether this is a `Variable` placeholder.
+    pub fn is_variable(&self) -> bool {
+        matches!(self, Op::Variable)
+    }
+
+    /// Inplace-capable (input_idx, output_idx) identity pairs: the output
+    /// may reuse the input's storage (paper's *inplace* heuristic).
+    pub fn inplace_pairs(&self) -> &'static [(usize, usize)] {
+        match self {
+            Op::Activation { .. }
+            | Op::AddScalar { .. }
+            | Op::MulScalar { .. }
+            | Op::Identity
+            | Op::Flatten
+            | Op::FusedElemwise { .. } => &[(0, 0)],
+            Op::Elemwise { .. } | Op::AddN => &[(0, 0), (1, 0)],
+            Op::ActivationBackward { .. } | Op::FlattenBackward | Op::DropoutBackward => &[(0, 0)],
+            _ => &[],
+        }
+    }
+
+    /// Short name for visualization / profiling.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Op::Variable => "Variable",
+            Op::FullyConnected { .. } => "FullyConnected",
+            Op::Convolution { .. } => "Convolution",
+            Op::Activation { .. } => "Activation",
+            Op::Pooling { .. } => "Pooling",
+            Op::BatchNorm { .. } => "BatchNorm",
+            Op::Flatten => "Flatten",
+            Op::Elemwise { .. } => "Elemwise",
+            Op::AddScalar { .. } => "AddScalar",
+            Op::MulScalar { .. } => "MulScalar",
+            Op::AddN => "AddN",
+            Op::Identity => "Identity",
+            Op::Concat => "Concat",
+            Op::Dropout { .. } => "Dropout",
+            Op::SoftmaxOutput => "SoftmaxOutput",
+            Op::FusedElemwise { .. } => "FusedElemwise",
+            Op::FullyConnectedBackward => "FullyConnectedBackward",
+            Op::ConvolutionBackward { .. } => "ConvolutionBackward",
+            Op::ActivationBackward { .. } => "ActivationBackward",
+            Op::PoolingBackward { .. } => "PoolingBackward",
+            Op::BatchNormBackward => "BatchNormBackward",
+            Op::FlattenBackward => "FlattenBackward",
+            Op::SoftmaxOutputBackward => "SoftmaxOutputBackward",
+            Op::ConcatBackward => "ConcatBackward",
+            Op::DropoutBackward => "DropoutBackward",
+        }
+    }
+}
+
+/// One graph node: an op applied to input entries.
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// The operator.
+    pub op: Op,
+    /// Unique-ish human-readable name (binding key for variables).
+    pub name: String,
+    /// Input values.
+    pub inputs: Vec<Entry>,
+    /// Extra ordering constraints (used by the co-share memory planner).
+    pub control_deps: Vec<NodeId>,
+}
+
+/// A computation graph in topological order.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    /// Nodes; every input entry refers to a lower index.
+    pub nodes: Vec<Node>,
+    /// Requested outputs (forward heads).
+    pub outputs: Vec<Entry>,
+    /// Nodes `>= num_forward` belong to the backward pass (0 = all
+    /// forward).  Set by [`autodiff::build_backward`].
+    pub num_forward: usize,
+}
+
+impl Graph {
+    /// Create an empty graph.
+    pub fn new() -> Self {
+        Graph::default()
+    }
+
+    /// Append a node, returning its id. Inputs must already exist.
+    pub fn add_node(&mut self, op: Op, name: impl Into<String>, inputs: Vec<Entry>) -> NodeId {
+        for e in &inputs {
+            debug_assert!(e.node < self.nodes.len(), "forward reference");
+        }
+        self.nodes.push(Node { op, name: name.into(), inputs, control_deps: vec![] });
+        self.nodes.len() - 1
+    }
+
+    /// Add a `Variable` node.
+    pub fn add_variable(&mut self, name: impl Into<String>) -> NodeId {
+        self.add_node(Op::Variable, name, vec![])
+    }
+
+    /// Ids of all variable nodes, in order.
+    pub fn variables(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.op.is_variable())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Find a variable node by name.
+    pub fn find_variable(&self, name: &str) -> Option<NodeId> {
+        self.nodes.iter().position(|n| n.op.is_variable() && n.name == name)
+    }
+
+    /// Number of outputs of node `id`.
+    pub fn num_outputs_of(&self, id: NodeId) -> usize {
+        self.nodes[id].op.num_outputs(self.nodes[id].inputs.len())
+    }
+
+    /// Per-entry consumer counts (+1 for each appearance in `outputs` and
+    /// in `extra_roots`).
+    pub fn entry_refcounts(&self, extra_roots: &[Entry]) -> HashMap<Entry, usize> {
+        let mut rc: HashMap<Entry, usize> = HashMap::new();
+        for n in &self.nodes {
+            for e in &n.inputs {
+                *rc.entry(*e).or_insert(0) += 1;
+            }
+        }
+        for e in self.outputs.iter().chain(extra_roots) {
+            *rc.entry(*e).or_insert(0) += 1;
+        }
+        rc
+    }
+
+    /// Validate topological ordering (inputs precede consumers).
+    pub fn validate(&self) -> Result<()> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            for e in &n.inputs {
+                if e.node >= i {
+                    return Err(Error::graph(format!(
+                        "node {i} ({}) consumes entry from node {} out of order",
+                        n.name, e.node
+                    )));
+                }
+                let avail = self.num_outputs_of(e.node);
+                if e.out >= avail {
+                    return Err(Error::graph(format!(
+                        "node {i} ({}) reads output {} of node {} which has {avail}",
+                        n.name, e.out, e.node
+                    )));
+                }
+            }
+            for &c in &n.control_deps {
+                if c >= i {
+                    return Err(Error::graph(format!(
+                        "node {i} ({}) has forward control dep on {c}",
+                        n.name
+                    )));
+                }
+            }
+        }
+        for e in &self.outputs {
+            if e.node >= self.nodes.len() {
+                return Err(Error::graph("output references missing node"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Inferred shapes: `shapes[node][out]` is the dims of that entry.
+pub type ShapeMap = Vec<Vec<Vec<usize>>>;
+
+/// Infer every entry's shape from the shapes of `Variable` nodes.
+///
+/// `var_shapes` maps variable *names* to shapes.  Fails if a variable is
+/// missing or an op's constraints are violated.
+pub fn infer_shapes(graph: &Graph, var_shapes: &HashMap<String, Vec<usize>>) -> Result<ShapeMap> {
+    use crate::ndarray::kernels::conv_out;
+    let mut shapes: ShapeMap = Vec::with_capacity(graph.nodes.len());
+    for (id, node) in graph.nodes.iter().enumerate() {
+        let ins: Vec<&Vec<usize>> =
+            node.inputs.iter().map(|e| &shapes[e.node][e.out]).collect();
+        let err = |msg: String| Error::shape(format!("node {id} ({}): {msg}", node.name));
+        let out: Vec<Vec<usize>> = match &node.op {
+            Op::Variable => {
+                let s = var_shapes
+                    .get(&node.name)
+                    .ok_or_else(|| err(format!("no shape bound for variable '{}'", node.name)))?;
+                vec![s.clone()]
+            }
+            Op::FullyConnected { num_hidden } => {
+                if ins.len() != 3 {
+                    return Err(err("FullyConnected needs (x, w, b)".into()));
+                }
+                let b = ins[0][0];
+                let in_dim: usize = ins[0][1..].iter().product();
+                if ins[1] != &vec![*num_hidden, in_dim] {
+                    return Err(err(format!(
+                        "weight shape {:?} != [{num_hidden}, {in_dim}]",
+                        ins[1]
+                    )));
+                }
+                if ins[2] != &vec![*num_hidden] {
+                    return Err(err(format!("bias shape {:?} != [{num_hidden}]", ins[2])));
+                }
+                vec![vec![b, *num_hidden]]
+            }
+            Op::Convolution { num_filter, kernel, stride, pad } => {
+                if ins.len() != 3 || ins[0].len() != 4 {
+                    return Err(err("Convolution needs (x[n,c,h,w], w, b)".into()));
+                }
+                let (n, c, h, w) = (ins[0][0], ins[0][1], ins[0][2], ins[0][3]);
+                if ins[1] != &vec![*num_filter, c, *kernel, *kernel] {
+                    return Err(err(format!(
+                        "weight shape {:?} != [{num_filter}, {c}, {kernel}, {kernel}]",
+                        ins[1]
+                    )));
+                }
+                let oh = conv_out(h, *kernel, *stride, *pad);
+                let ow = conv_out(w, *kernel, *stride, *pad);
+                vec![vec![n, *num_filter, oh, ow]]
+            }
+            Op::Activation { .. } | Op::AddScalar { .. } | Op::MulScalar { .. } | Op::Identity => {
+                vec![ins[0].clone()]
+            }
+            Op::Pooling { kernel, stride, pad, .. } => {
+                if ins[0].len() != 4 {
+                    return Err(err("Pooling needs NCHW".into()));
+                }
+                let (n, c, h, w) = (ins[0][0], ins[0][1], ins[0][2], ins[0][3]);
+                let oh = conv_out(h, *kernel, *stride, *pad);
+                let ow = conv_out(w, *kernel, *stride, *pad);
+                let o = vec![n, c, oh, ow];
+                vec![o.clone(), o]
+            }
+            Op::BatchNorm { .. } => {
+                let c = if ins[0].len() >= 2 { ins[0][1] } else { ins[0][0] };
+                if ins[1] != &vec![c] || ins[2] != &vec![c] {
+                    return Err(err("BatchNorm gamma/beta must be [c]".into()));
+                }
+                vec![ins[0].clone(), vec![c], vec![c]]
+            }
+            Op::Flatten => {
+                let n = ins[0][0];
+                let rest: usize = ins[0][1..].iter().product();
+                vec![vec![n, rest]]
+            }
+            Op::Elemwise { .. } => {
+                if ins[0] != ins[1] {
+                    return Err(err(format!("elemwise shape {:?} vs {:?}", ins[0], ins[1])));
+                }
+                vec![ins[0].clone()]
+            }
+            Op::AddN => {
+                for s in &ins[1..] {
+                    if *s != ins[0] {
+                        return Err(err("AddN inputs must share shape".into()));
+                    }
+                }
+                vec![ins[0].clone()]
+            }
+            Op::Concat => {
+                let first = ins[0].clone();
+                let mut ch = first[1];
+                for s in &ins[1..] {
+                    if s.len() != first.len()
+                        || s[0] != first[0]
+                        || s[2..] != first[2..]
+                    {
+                        return Err(err("Concat inputs differ off-channel".into()));
+                    }
+                    ch += s[1];
+                }
+                let mut o = first;
+                o[1] = ch;
+                vec![o]
+            }
+            Op::Dropout { .. } => vec![ins[0].clone(), ins[0].clone()],
+            Op::SoftmaxOutput => {
+                if ins.len() != 2 || ins[0].len() != 2 {
+                    return Err(err("SoftmaxOutput needs (x[b,n], label[b])".into()));
+                }
+                if ins[1] != &vec![ins[0][0]] {
+                    return Err(err(format!(
+                        "label shape {:?} != [{}]",
+                        ins[1], ins[0][0]
+                    )));
+                }
+                vec![ins[0].clone()]
+            }
+            Op::FusedElemwise { steps } => {
+                let mut extra = 1usize;
+                for st in steps {
+                    if let FusedStep::Binary(_) = st {
+                        if ins.len() <= extra || ins[extra] != ins[0] {
+                            return Err(err("fused binary input shape mismatch".into()));
+                        }
+                        extra += 1;
+                    }
+                }
+                vec![ins[0].clone()]
+            }
+            Op::FullyConnectedBackward => {
+                // (dy, x, w) -> (dx, dw, db)
+                vec![ins[1].clone(), ins[2].clone(), vec![ins[0][1]]]
+            }
+            Op::ConvolutionBackward { .. } => {
+                vec![ins[1].clone(), ins[2].clone(), vec![ins[0][1]]]
+            }
+            Op::ActivationBackward { .. } => vec![ins[0].clone()],
+            Op::PoolingBackward { .. } => vec![ins[2].clone()],
+            Op::BatchNormBackward => {
+                let c = ins[2][0];
+                vec![ins[1].clone(), vec![c], vec![c]]
+            }
+            Op::FlattenBackward => vec![ins[1].clone()],
+            Op::SoftmaxOutputBackward => vec![ins[0].clone()],
+            Op::ConcatBackward => ins[1..].iter().map(|s| (*s).clone()).collect(),
+            Op::DropoutBackward => vec![ins[0].clone()],
+        };
+        shapes.push(out);
+    }
+    Ok(shapes)
+}
+
+/// Bytes of an entry given its dims (f32).
+pub fn entry_bytes(dims: &[usize]) -> usize {
+    dims.iter().product::<usize>() * std::mem::size_of::<f32>()
+}
+
+/// Per-node scratch workspace bytes (the engine's "temporal space"
+/// resource; conv im2col buffers).
+pub fn workspace_bytes(graph: &Graph, shapes: &ShapeMap) -> Vec<usize> {
+    graph
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(id, node)| match &node.op {
+            Op::Convolution { kernel, .. } => {
+                let x = &shapes[node.inputs[0].node][node.inputs[0].out];
+                let y = &shapes[id][0];
+                // per-image columns: [c*k*k, oh*ow]
+                x[1] * kernel * kernel * y[2] * y[3] * 4
+            }
+            Op::ConvolutionBackward { kernel, .. } => {
+                let x = &shapes[node.inputs[1].node][node.inputs[1].out];
+                let dy = &shapes[node.inputs[0].node][node.inputs[0].out];
+                x[1] * kernel * kernel * dy[2] * dy[3] * 4
+            }
+            _ => 0,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build the paper's Figure 2 MLP graph by hand.
+    pub(crate) fn mlp_graph(batch: usize) -> (Graph, HashMap<String, Vec<usize>>) {
+        let mut g = Graph::new();
+        let data = g.add_variable("data");
+        let w1 = g.add_variable("fc1_weight");
+        let b1 = g.add_variable("fc1_bias");
+        let fc1 = g.add_node(
+            Op::FullyConnected { num_hidden: 64 },
+            "fc1",
+            vec![Entry::new(data), Entry::new(w1), Entry::new(b1)],
+        );
+        let relu = g.add_node(Op::Activation { kind: ActKind::Relu }, "relu1", vec![Entry::new(fc1)]);
+        let w2 = g.add_variable("fc2_weight");
+        let b2 = g.add_variable("fc2_bias");
+        let fc2 = g.add_node(
+            Op::FullyConnected { num_hidden: 10 },
+            "fc2",
+            vec![Entry::new(relu), Entry::new(w2), Entry::new(b2)],
+        );
+        let label = g.add_variable("label");
+        let sm = g.add_node(Op::SoftmaxOutput, "softmax", vec![Entry::new(fc2), Entry::new(label)]);
+        g.outputs = vec![Entry::new(sm)];
+        g.num_forward = g.nodes.len();
+        let mut shapes = HashMap::new();
+        shapes.insert("data".into(), vec![batch, 784]);
+        shapes.insert("fc1_weight".into(), vec![64, 784]);
+        shapes.insert("fc1_bias".into(), vec![64]);
+        shapes.insert("fc2_weight".into(), vec![10, 64]);
+        shapes.insert("fc2_bias".into(), vec![10]);
+        shapes.insert("label".into(), vec![batch]);
+        (g, shapes)
+    }
+
+    #[test]
+    fn mlp_shape_inference() {
+        let (g, vs) = mlp_graph(32);
+        g.validate().unwrap();
+        let shapes = infer_shapes(&g, &vs).unwrap();
+        let out = g.outputs[0];
+        assert_eq!(shapes[out.node][out.out], vec![32, 10]);
+    }
+
+    #[test]
+    fn missing_variable_shape_errors() {
+        let (g, mut vs) = mlp_graph(32);
+        vs.remove("fc2_weight");
+        assert!(infer_shapes(&g, &vs).is_err());
+    }
+
+    #[test]
+    fn bad_weight_shape_errors() {
+        let (g, mut vs) = mlp_graph(32);
+        vs.insert("fc1_weight".into(), vec![64, 100]);
+        let e = infer_shapes(&g, &vs).unwrap_err();
+        assert!(format!("{e}").contains("weight shape"));
+    }
+
+    #[test]
+    fn conv_pool_shapes() {
+        let mut g = Graph::new();
+        let data = g.add_variable("data");
+        let w = g.add_variable("w");
+        let b = g.add_variable("b");
+        let conv = g.add_node(
+            Op::Convolution { num_filter: 8, kernel: 3, stride: 1, pad: 1 },
+            "conv",
+            vec![Entry::new(data), Entry::new(w), Entry::new(b)],
+        );
+        let pool = g.add_node(
+            Op::Pooling { kind: PoolKind::Max, kernel: 2, stride: 2, pad: 0 },
+            "pool",
+            vec![Entry::new(conv)],
+        );
+        g.outputs = vec![Entry::new(pool)];
+        g.num_forward = g.nodes.len();
+        let mut vs = HashMap::new();
+        vs.insert("data".into(), vec![4, 3, 32, 32]);
+        vs.insert("w".into(), vec![8, 3, 3, 3]);
+        vs.insert("b".into(), vec![8]);
+        let shapes = infer_shapes(&g, &vs).unwrap();
+        assert_eq!(shapes[conv][0], vec![4, 8, 32, 32]);
+        assert_eq!(shapes[pool][0], vec![4, 8, 16, 16]);
+        let ws = workspace_bytes(&g, &shapes);
+        assert!(ws[conv] > 0);
+        assert_eq!(ws[pool], 0);
+    }
+
+    #[test]
+    fn concat_shapes() {
+        let mut g = Graph::new();
+        let a = g.add_variable("a");
+        let b = g.add_variable("b");
+        let cat = g.add_node(Op::Concat, "cat", vec![Entry::new(a), Entry::new(b)]);
+        g.outputs = vec![Entry::new(cat)];
+        g.num_forward = g.nodes.len();
+        let mut vs = HashMap::new();
+        vs.insert("a".into(), vec![2, 3, 8, 8]);
+        vs.insert("b".into(), vec![2, 5, 8, 8]);
+        let shapes = infer_shapes(&g, &vs).unwrap();
+        assert_eq!(shapes[cat][0], vec![2, 8, 8, 8]);
+    }
+
+    #[test]
+    fn validate_catches_forward_reference() {
+        let mut g = Graph::new();
+        let a = g.add_variable("a");
+        g.nodes.push(Node {
+            op: Op::Identity,
+            name: "bad".into(),
+            inputs: vec![Entry { node: 5, out: 0 }],
+            control_deps: vec![],
+        });
+        let _ = a;
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn refcounts_include_outputs() {
+        let (g, _) = mlp_graph(8);
+        let rc = g.entry_refcounts(&[]);
+        let out = g.outputs[0];
+        assert_eq!(rc[&out], 1);
+        // data feeds fc1 only
+        let data = g.find_variable("data").unwrap();
+        assert_eq!(rc[&Entry::new(data)], 1);
+    }
+}

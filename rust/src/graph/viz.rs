@@ -1,0 +1,51 @@
+//! Graph visualization (paper §2.1 lists visualization among symbol
+//! utilities): Graphviz-dot emission for debugging and docs.
+
+use super::Graph;
+
+/// Render the graph in Graphviz dot format.  Backward nodes get a gray
+/// fill like Figure 4's shading.
+pub fn to_dot(graph: &Graph) -> String {
+    let mut s = String::from("digraph mixnet {\n  rankdir=BT;\n  node [shape=box, fontsize=10];\n");
+    for (id, node) in graph.nodes.iter().enumerate() {
+        let style = if node.op.is_variable() {
+            "shape=ellipse, style=filled, fillcolor=lightblue"
+        } else if graph.num_forward > 0 && id >= graph.num_forward {
+            "style=filled, fillcolor=lightgray"
+        } else {
+            "style=filled, fillcolor=white"
+        };
+        s.push_str(&format!(
+            "  n{id} [label=\"{}\\n{}\", {style}];\n",
+            node.name,
+            node.op.type_name()
+        ));
+    }
+    for (id, node) in graph.nodes.iter().enumerate() {
+        for e in &node.inputs {
+            s.push_str(&format!("  n{} -> n{id};\n", e.node));
+        }
+        for c in &node.control_deps {
+            s.push_str(&format!("  n{c} -> n{id} [style=dashed];\n"));
+        }
+    }
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::tests::mlp_graph;
+
+    #[test]
+    fn dot_contains_all_nodes_and_edges() {
+        let (g, _) = mlp_graph(4);
+        let dot = to_dot(&g);
+        assert!(dot.starts_with("digraph"));
+        for n in &g.nodes {
+            assert!(dot.contains(&n.name), "missing {}", n.name);
+        }
+        assert!(dot.matches(" -> ").count() >= g.nodes.iter().map(|n| n.inputs.len()).sum());
+    }
+}

@@ -1,0 +1,208 @@
+//! Model checkpointing (paper §2.1: *"other functions, such as load,
+//! save, memory estimation, and visualization, are also provided"*).
+//!
+//! A checkpoint is a single binary file holding named f32 tensors with
+//! shapes — the parameter side of MXNet's `save_checkpoint` (the symbol
+//! side is code in this reproduction, so only parameters serialize).
+//!
+//! Format (little-endian): magic u32, count u32, then per tensor:
+//! name (u32 len + utf8), ndim u32, dims u32*, data f32*.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::engine::EngineRef;
+use crate::error::{Error, Result};
+use crate::ndarray::NDArray;
+
+/// Checkpoint file magic + version.
+pub const CKPT_MAGIC: u32 = 0x6d78_6b01;
+
+/// Save named arrays to `path` (sorted by name for determinism).
+pub fn save(path: impl AsRef<Path>, params: &HashMap<String, NDArray>) -> Result<()> {
+    let mut names: Vec<&String> = params.keys().collect();
+    names.sort();
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(&CKPT_MAGIC.to_le_bytes());
+    buf.extend_from_slice(&(names.len() as u32).to_le_bytes());
+    for name in names {
+        let arr = &params[name];
+        let data = arr.to_vec(); // waits for pending engine ops
+        buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(name.as_bytes());
+        buf.extend_from_slice(&(arr.shape().len() as u32).to_le_bytes());
+        for &d in arr.shape() {
+            buf.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for x in &data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Load a checkpoint into new arrays on `engine`.
+pub fn load(path: impl AsRef<Path>, engine: EngineRef) -> Result<HashMap<String, NDArray>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(&path)?.read_to_end(&mut bytes)?;
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > bytes.len() {
+            return Err(Error::DataIo("checkpoint: truncated".into()));
+        }
+        let s = &bytes[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let u32_at = |pos: &mut usize| -> Result<u32> {
+        Ok(u32::from_le_bytes(take(pos, 4)?.try_into().unwrap()))
+    };
+    if u32_at(&mut pos)? != CKPT_MAGIC {
+        return Err(Error::DataIo("checkpoint: bad magic".into()));
+    }
+    let count = u32_at(&mut pos)? as usize;
+    let mut out = HashMap::with_capacity(count);
+    for _ in 0..count {
+        let nlen = u32_at(&mut pos)? as usize;
+        let name = String::from_utf8(take(&mut pos, nlen)?.to_vec())
+            .map_err(|_| Error::DataIo("checkpoint: bad utf8 name".into()))?;
+        let ndim = u32_at(&mut pos)? as usize;
+        if ndim > 8 {
+            return Err(Error::DataIo(format!("checkpoint: ndim {ndim} too large")));
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u32_at(&mut pos)? as usize);
+        }
+        let size: usize = shape.iter().product();
+        let raw = take(&mut pos, size * 4)?;
+        let data: Vec<f32> =
+            raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        out.insert(name, NDArray::from_vec_on(&shape, data, engine.clone()));
+    }
+    if pos != bytes.len() {
+        return Err(Error::DataIo("checkpoint: trailing bytes".into()));
+    }
+    Ok(out)
+}
+
+impl crate::module::Module {
+    /// Save this module's parameters (paper's `save_checkpoint`).
+    pub fn save_params(&self, path: impl AsRef<Path>) -> Result<()> {
+        let map: HashMap<String, NDArray> = self
+            .param_names()
+            .iter()
+            .map(|n| (n.clone(), self.param(n).unwrap().clone()))
+            .collect();
+        save(path, &map)
+    }
+
+    /// Overwrite this module's parameters from a checkpoint (must be
+    /// bound; shapes must match).
+    pub fn load_params(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let engine = self.param(self.param_names().first().ok_or_else(|| {
+            Error::Bind("module has no parameters (bind first)".into())
+        })?).unwrap().engine();
+        let loaded = load(path, engine)?;
+        for name in self.param_names().to_vec() {
+            let src = loaded.get(&name).ok_or_else(|| {
+                Error::DataIo(format!("checkpoint missing parameter '{name}'"))
+            })?;
+            let dst = self.param(&name).unwrap();
+            if dst.shape() != src.shape() {
+                return Err(Error::DataIo(format!(
+                    "checkpoint '{name}': shape {:?} != bound {:?}",
+                    src.shape(),
+                    dst.shape()
+                )));
+            }
+            dst.copy_from_(src);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::default_engine;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("mixnet_ckpt_{}_{tag}.bin", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_preserves_names_shapes_values() {
+        let p = tmp("rt");
+        let mut m = HashMap::new();
+        m.insert("w".to_string(), NDArray::from_vec(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 7.0, -0.25]));
+        m.insert("b".to_string(), NDArray::from_vec(&[3], vec![0.1, 0.2, 0.3]));
+        save(&p, &m).unwrap();
+        let back = load(&p, default_engine()).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back["w"].shape(), &[2, 3]);
+        assert_eq!(back["w"].to_vec(), m["w"].to_vec());
+        assert_eq!(back["b"].to_vec(), m["b"].to_vec());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let p = tmp("magic");
+        save(&p, &HashMap::new()).unwrap();
+        let mut b = std::fs::read(&p).unwrap();
+        b[0] ^= 0xff;
+        std::fs::write(&p, b).unwrap();
+        assert!(load(&p, default_engine()).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let p = tmp("trunc");
+        let mut m = HashMap::new();
+        m.insert("w".to_string(), NDArray::from_vec(&[64], vec![1.0; 64]));
+        save(&p, &m).unwrap();
+        let b = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &b[..b.len() - 10]).unwrap();
+        assert!(load(&p, default_engine()).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn module_save_load_resumes_training() {
+        use crate::executor::BindConfig;
+        use crate::io::{synth::class_clusters, ArrayDataIter};
+        use crate::models::mlp;
+        use crate::module::{Module, UpdateMode};
+        use crate::optimizer::Sgd;
+        use std::sync::Arc;
+
+        let p = tmp("resume");
+        let engine = crate::engine::create(crate::engine::EngineKind::Threaded, 2);
+        let ds = class_clusters(256, 4, 16, 0.3, 9);
+        let mut iter =
+            ArrayDataIter::new(ds.features, ds.labels, &[16], 32, true, engine.clone());
+        let model = mlp(&[32], 16, 4);
+        let shapes = model.param_shapes(32).unwrap();
+        let mut m = Module::new(model.symbol, engine.clone());
+        m.bind(32, &[16], &shapes, BindConfig::default(), 3).unwrap();
+        m.fit(&mut iter, &UpdateMode::Local(Arc::new(Sgd::new(0.4))), 3).unwrap();
+        let acc_before = m.score(&mut iter).unwrap();
+        m.save_params(&p).unwrap();
+
+        // fresh module, load checkpoint: accuracy must carry over
+        let model2 = mlp(&[32], 16, 4);
+        let mut m2 = Module::new(model2.symbol, engine);
+        m2.bind(32, &[16], &shapes, BindConfig::default(), 999).unwrap();
+        let acc_fresh = m2.score(&mut iter).unwrap();
+        m2.load_params(&p).unwrap();
+        let acc_loaded = m2.score(&mut iter).unwrap();
+        assert!(acc_loaded > acc_fresh, "{acc_loaded} vs fresh {acc_fresh}");
+        assert!((acc_loaded - acc_before).abs() < 1e-6);
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,244 @@
+//! Data I/O (paper §2.4): RecordIO packing, data iterators, multi-threaded
+//! prefetching, and synthetic dataset generators (the stand-in for
+//! ILSVRC12 — see DESIGN.md §Substitutions).
+
+pub mod checkpoint;
+pub mod prefetch;
+pub mod recordio;
+pub mod synth;
+
+use crate::engine::EngineRef;
+use crate::error::Result;
+use crate::ndarray::NDArray;
+use crate::util::Rng;
+
+pub use prefetch::PrefetchIter;
+pub use recordio::{Example, RecordReader, RecordWriter};
+
+/// One minibatch: features `[batch, ...]` and labels `[batch]`.
+#[derive(Clone, Debug)]
+pub struct DataBatch {
+    /// Feature tensor.
+    pub data: NDArray,
+    /// Label vector.
+    pub label: NDArray,
+}
+
+/// A stream of minibatches (paper's data iterator).
+pub trait DataIter: Send {
+    /// Next minibatch, or `None` at epoch end.
+    fn next_batch(&mut self) -> Option<DataBatch>;
+    /// Rewind to the start of the epoch (optionally reshuffling).
+    fn reset(&mut self);
+    /// Batch size.
+    fn batch_size(&self) -> usize;
+}
+
+/// In-memory dataset iterator with optional shuffling.
+pub struct ArrayDataIter {
+    features: Vec<f32>,
+    labels: Vec<f32>,
+    feat_shape: Vec<usize>, // per-example shape
+    order: Vec<usize>,
+    cursor: usize,
+    batch: usize,
+    shuffle: bool,
+    rng: Rng,
+    engine: EngineRef,
+}
+
+impl ArrayDataIter {
+    /// Build from flat feature/label buffers. `feat_shape` excludes the
+    /// example dimension.
+    pub fn new(
+        features: Vec<f32>,
+        labels: Vec<f32>,
+        feat_shape: &[usize],
+        batch: usize,
+        shuffle: bool,
+        engine: EngineRef,
+    ) -> Self {
+        let per: usize = feat_shape.iter().product();
+        assert_eq!(features.len() % per, 0);
+        let n = features.len() / per;
+        assert_eq!(labels.len(), n);
+        ArrayDataIter {
+            features,
+            labels,
+            feat_shape: feat_shape.to_vec(),
+            order: (0..n).collect(),
+            cursor: 0,
+            batch,
+            shuffle,
+            rng: Rng::seed_from_u64(0x17e5),
+            engine,
+        }
+    }
+
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// True when the dataset is empty.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+}
+
+impl DataIter for ArrayDataIter {
+    fn next_batch(&mut self) -> Option<DataBatch> {
+        if self.cursor + self.batch > self.order.len() {
+            return None; // drop last partial batch (like MXNet's default)
+        }
+        let per: usize = self.feat_shape.iter().product();
+        let mut data = Vec::with_capacity(self.batch * per);
+        let mut label = Vec::with_capacity(self.batch);
+        for i in 0..self.batch {
+            let idx = self.order[self.cursor + i];
+            data.extend_from_slice(&self.features[idx * per..(idx + 1) * per]);
+            label.push(self.labels[idx]);
+        }
+        self.cursor += self.batch;
+        let mut shape = vec![self.batch];
+        shape.extend_from_slice(&self.feat_shape);
+        Some(DataBatch {
+            data: NDArray::from_vec_on(&shape, data, self.engine.clone()),
+            label: NDArray::from_vec_on(&[self.batch], label, self.engine.clone()),
+        })
+    }
+
+    fn reset(&mut self) {
+        self.cursor = 0;
+        if self.shuffle {
+            self.rng.shuffle(&mut self.order);
+        }
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+}
+
+/// Iterator over a RecordIO file of [`Example`]s (sequential scan per
+/// epoch; pair with [`PrefetchIter`] to hide decode latency).
+pub struct RecordFileIter {
+    path: std::path::PathBuf,
+    reader: RecordReader,
+    batch: usize,
+    engine: EngineRef,
+    feat_shape: Option<Vec<usize>>,
+}
+
+impl RecordFileIter {
+    /// Open a RecordIO file for iteration.
+    pub fn open(path: impl AsRef<std::path::Path>, batch: usize, engine: EngineRef) -> Result<Self> {
+        Ok(RecordFileIter {
+            path: path.as_ref().to_path_buf(),
+            reader: RecordReader::open(&path)?,
+            batch,
+            engine,
+            feat_shape: None,
+        })
+    }
+}
+
+impl DataIter for RecordFileIter {
+    fn next_batch(&mut self) -> Option<DataBatch> {
+        let mut data = Vec::new();
+        let mut label = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let payload = self.reader.next_record().ok()??;
+            let ex = Example::from_bytes(&payload).ok()?;
+            match &self.feat_shape {
+                None => self.feat_shape = Some(ex.shape.clone()),
+                Some(s) => {
+                    if *s != ex.shape {
+                        return None;
+                    }
+                }
+            }
+            data.extend_from_slice(&ex.data);
+            label.push(ex.label);
+        }
+        let mut shape = vec![self.batch];
+        shape.extend_from_slice(self.feat_shape.as_ref().unwrap());
+        Some(DataBatch {
+            data: NDArray::from_vec_on(&shape, data, self.engine.clone()),
+            label: NDArray::from_vec_on(&[self.batch], label, self.engine.clone()),
+        })
+    }
+
+    fn reset(&mut self) {
+        if let Ok(r) = RecordReader::open(&self.path) {
+            self.reader = r;
+        }
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::default_engine;
+
+    #[test]
+    fn array_iter_batches_and_drops_partial() {
+        let eng = default_engine();
+        let n = 10;
+        let feats: Vec<f32> = (0..n * 3).map(|v| v as f32).collect();
+        let labels: Vec<f32> = (0..n).map(|v| v as f32).collect();
+        let mut it = ArrayDataIter::new(feats, labels, &[3], 4, false, eng);
+        let b1 = it.next_batch().unwrap();
+        assert_eq!(b1.data.shape(), &[4, 3]);
+        assert_eq!(b1.label.to_vec(), vec![0.0, 1.0, 2.0, 3.0]);
+        let _b2 = it.next_batch().unwrap();
+        assert!(it.next_batch().is_none(), "partial batch dropped");
+        it.reset();
+        assert!(it.next_batch().is_some());
+    }
+
+    #[test]
+    fn shuffle_changes_order_but_not_multiset() {
+        let eng = default_engine();
+        let n = 32;
+        let feats: Vec<f32> = (0..n).map(|v| v as f32).collect();
+        let labels = feats.clone();
+        let mut it = ArrayDataIter::new(feats, labels, &[1], 32, true, eng);
+        let first = it.next_batch().unwrap().label.to_vec();
+        it.reset();
+        let second = it.next_batch().unwrap().label.to_vec();
+        assert_ne!(first, second, "shuffle should reorder");
+        let mut a = first.clone();
+        let mut b = second.clone();
+        a.sort_by(f32::total_cmp);
+        b.sort_by(f32::total_cmp);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn record_file_iter_roundtrip() {
+        let eng = default_engine();
+        let mut p = std::env::temp_dir();
+        p.push(format!("mixnet_iter_{}.rec", std::process::id()));
+        let mut w = RecordWriter::create(&p).unwrap();
+        for i in 0..6 {
+            let ex = Example { label: i as f32, shape: vec![2], data: vec![i as f32; 2] };
+            w.write_record(&ex.to_bytes()).unwrap();
+        }
+        w.finish().unwrap();
+        let mut it = RecordFileIter::open(&p, 3, eng).unwrap();
+        let b = it.next_batch().unwrap();
+        assert_eq!(b.label.to_vec(), vec![0.0, 1.0, 2.0]);
+        assert_eq!(b.data.shape(), &[3, 2]);
+        let b2 = it.next_batch().unwrap();
+        assert_eq!(b2.label.to_vec(), vec![3.0, 4.0, 5.0]);
+        assert!(it.next_batch().is_none());
+        it.reset();
+        assert!(it.next_batch().is_some());
+        std::fs::remove_file(p).unwrap();
+    }
+}

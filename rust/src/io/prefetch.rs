@@ -1,0 +1,190 @@
+//! Multi-threaded batch prefetching (paper §2.4: *"data pre-fetching and
+//! pre-processing are multi-threaded, reducing overheads due to possible
+//! remote file store reads and/or image decoding"*).
+//!
+//! Wraps any [`DataIter`] with a background producer thread and a bounded
+//! channel, so batch decode overlaps training compute.
+//!
+//! Epoch protocol: every queued item carries the producer's epoch number
+//! and every [`reset`](PrefetchIter::reset) bumps the consumer's expected
+//! epoch, so stale in-flight batches from before a rewind are skipped
+//! exactly — no heuristics about what might still be buffered.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use super::{DataBatch, DataIter};
+
+enum Ctl {
+    Reset,
+    Stop,
+}
+
+/// Background-prefetching wrapper around a [`DataIter`].
+pub struct PrefetchIter {
+    batch_rx: mpsc::Receiver<(u64, Option<DataBatch>)>,
+    ctl_tx: mpsc::Sender<Ctl>,
+    worker: Option<JoinHandle<()>>,
+    batch: usize,
+    /// Epoch the consumer expects; items tagged lower are stale.
+    want_epoch: u64,
+}
+
+impl PrefetchIter {
+    /// Wrap `inner`, keeping up to `depth` decoded batches in flight.
+    pub fn new(mut inner: Box<dyn DataIter>, depth: usize) -> Self {
+        let batch = inner.batch_size();
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<(u64, Option<DataBatch>)>(depth.max(1));
+        let (ctl_tx, ctl_rx) = mpsc::channel::<Ctl>();
+        let worker = std::thread::Builder::new()
+            .name("mixnet-prefetch".into())
+            .spawn(move || {
+                let mut epoch = 0u64;
+                loop {
+                    // apply any pending control first
+                    loop {
+                        match ctl_rx.try_recv() {
+                            Ok(Ctl::Reset) => {
+                                inner.reset();
+                                epoch += 1;
+                            }
+                            Ok(Ctl::Stop) | Err(mpsc::TryRecvError::Disconnected) => return,
+                            Err(mpsc::TryRecvError::Empty) => break,
+                        }
+                    }
+                    let item = inner.next_batch();
+                    let at_end = item.is_none();
+                    if batch_tx.send((epoch, item)).is_err() {
+                        return;
+                    }
+                    if at_end {
+                        // park until a reset or stop arrives
+                        match ctl_rx.recv() {
+                            Ok(Ctl::Reset) => {
+                                inner.reset();
+                                epoch += 1;
+                            }
+                            Ok(Ctl::Stop) | Err(_) => return,
+                        }
+                    }
+                }
+            })
+            .expect("spawn prefetch");
+        PrefetchIter { batch_rx, ctl_tx, worker: Some(worker), batch, want_epoch: 0 }
+    }
+}
+
+impl DataIter for PrefetchIter {
+    fn next_batch(&mut self) -> Option<DataBatch> {
+        loop {
+            let (epoch, item) = self.batch_rx.recv().ok()?;
+            if epoch < self.want_epoch {
+                continue; // stale: produced before the rewind we requested
+            }
+            return item;
+        }
+    }
+
+    fn reset(&mut self) {
+        let _ = self.ctl_tx.send(Ctl::Reset);
+        self.want_epoch += 1;
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+}
+
+impl Drop for PrefetchIter {
+    fn drop(&mut self) {
+        let _ = self.ctl_tx.send(Ctl::Stop);
+        // Unblock a producer stuck on a full channel.
+        while self.batch_rx.try_recv().is_ok() {}
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::default_engine;
+    use crate::io::ArrayDataIter;
+
+    fn small_iter(n: usize, batch: usize) -> Box<dyn DataIter> {
+        let feats: Vec<f32> = (0..n).map(|v| v as f32).collect();
+        let labels = feats.clone();
+        Box::new(ArrayDataIter::new(feats, labels, &[1], batch, false, default_engine()))
+    }
+
+    #[test]
+    fn yields_same_batches_as_inner() {
+        let mut plain = small_iter(12, 4);
+        let mut pre = PrefetchIter::new(small_iter(12, 4), 2);
+        loop {
+            let a = plain.next_batch();
+            let b = pre.next_batch();
+            match (a, b) {
+                (None, None) => break,
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.label.to_vec(), y.label.to_vec());
+                }
+                _ => panic!("length mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn reset_restarts_epoch() {
+        let mut pre = PrefetchIter::new(small_iter(8, 4), 2);
+        let first = pre.next_batch().unwrap().label.to_vec();
+        // consume rest of epoch
+        while pre.next_batch().is_some() {}
+        pre.reset();
+        let again = pre.next_batch().unwrap().label.to_vec();
+        assert_eq!(first, again);
+    }
+
+    #[test]
+    fn mid_epoch_reset_drains_stale_batches() {
+        let mut pre = PrefetchIter::new(small_iter(32, 4), 4);
+        let first = pre.next_batch().unwrap().label.to_vec();
+        pre.reset(); // stale prefetched batches must be discarded
+        let again = pre.next_batch().unwrap().label.to_vec();
+        assert_eq!(first, again, "after reset the epoch restarts");
+    }
+
+    #[test]
+    fn reset_before_first_batch_is_safe() {
+        // The fit() loop resets at every epoch start, including the first,
+        // possibly before the producer has emitted anything.
+        let mut pre = PrefetchIter::new(small_iter(8, 4), 2);
+        pre.reset();
+        let mut n = 0;
+        while pre.next_batch().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 2, "epoch after immediate reset must be complete");
+    }
+
+    #[test]
+    fn many_epochs_like_fit() {
+        // Exactly the fit() access pattern: reset, drain, repeat.
+        let mut pre = PrefetchIter::new(small_iter(16, 4), 3);
+        for _ in 0..5 {
+            pre.reset();
+            let mut n = 0;
+            while pre.next_batch().is_some() {
+                n += 1;
+            }
+            assert_eq!(n, 4);
+        }
+    }
+
+    #[test]
+    fn drop_while_producer_blocked_does_not_hang() {
+        let pre = PrefetchIter::new(small_iter(1000, 4), 1);
+        drop(pre); // must not deadlock
+    }
+}

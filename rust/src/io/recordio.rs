@@ -1,0 +1,212 @@
+//! RecordIO — the paper's packed example format (§2.4: *"tools to pack
+//! arbitrary sized examples into a single compact file to facilitate both
+//! sequential and random seek"*).
+//!
+//! Layout per record: `MAGIC u32 | len u32 | payload | pad to 4 bytes`.
+//! A writer returns the byte offset of every record, forming the index
+//! that enables random seek (shuffled epochs without loading the file).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Record delimiter magic.
+pub const MAGIC: u32 = 0xced7_230a;
+
+/// Sequential writer; collects the seek index.
+pub struct RecordWriter {
+    out: BufWriter<File>,
+    offsets: Vec<u64>,
+    pos: u64,
+}
+
+impl RecordWriter {
+    /// Create/truncate `path`.
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        Ok(RecordWriter { out: BufWriter::new(File::create(path)?), offsets: vec![], pos: 0 })
+    }
+
+    /// Append one record; returns its index.
+    pub fn write_record(&mut self, payload: &[u8]) -> Result<usize> {
+        self.offsets.push(self.pos);
+        self.out.write_all(&MAGIC.to_le_bytes())?;
+        self.out.write_all(&(payload.len() as u32).to_le_bytes())?;
+        self.out.write_all(payload)?;
+        let pad = (4 - payload.len() % 4) % 4;
+        self.out.write_all(&[0u8; 3][..pad])?;
+        self.pos += 8 + payload.len() as u64 + pad as u64;
+        Ok(self.offsets.len() - 1)
+    }
+
+    /// Flush and return the record index (offsets).
+    pub fn finish(mut self) -> Result<Vec<u64>> {
+        self.out.flush()?;
+        Ok(self.offsets)
+    }
+}
+
+/// Reader supporting sequential scan and random seek.
+pub struct RecordReader {
+    input: BufReader<File>,
+}
+
+impl RecordReader {
+    /// Open `path`.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        Ok(RecordReader { input: BufReader::new(File::open(path)?) })
+    }
+
+    /// Read the next record, or `None` at EOF.
+    pub fn next_record(&mut self) -> Result<Option<Vec<u8>>> {
+        let mut hdr = [0u8; 8];
+        match self.input.read_exact(&mut hdr[..4]) {
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+            r => r?,
+        }
+        self.input.read_exact(&mut hdr[4..])?;
+        let magic = u32::from_le_bytes(hdr[..4].try_into().unwrap());
+        if magic != MAGIC {
+            return Err(Error::DataIo(format!("bad magic {magic:#x}")));
+        }
+        let len = u32::from_le_bytes(hdr[4..].try_into().unwrap()) as usize;
+        let mut payload = vec![0u8; len];
+        self.input.read_exact(&mut payload)?;
+        let pad = (4 - len % 4) % 4;
+        if pad > 0 {
+            let mut p = [0u8; 3];
+            self.input.read_exact(&mut p[..pad])?;
+        }
+        Ok(Some(payload))
+    }
+
+    /// Random seek to a record offset (from the writer's index).
+    pub fn seek_record(&mut self, offset: u64) -> Result<Option<Vec<u8>>> {
+        self.input.seek(SeekFrom::Start(offset))?;
+        self.next_record()
+    }
+}
+
+/// A labelled f32 example, the payload our datasets pack into records.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Example {
+    /// Class label (or regression target).
+    pub label: f32,
+    /// Feature dims.
+    pub shape: Vec<usize>,
+    /// Row-major features.
+    pub data: Vec<f32>,
+}
+
+impl Example {
+    /// Serialize to a record payload.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + 4 * self.shape.len() + 4 * self.data.len());
+        out.extend_from_slice(&self.label.to_le_bytes());
+        out.extend_from_slice(&(self.shape.len() as u32).to_le_bytes());
+        for &d in &self.shape {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for &v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize from a record payload.
+    pub fn from_bytes(b: &[u8]) -> Result<Example> {
+        let need = |n: usize| {
+            if b.len() < n {
+                Err(Error::DataIo(format!("example truncated at {n}")))
+            } else {
+                Ok(())
+            }
+        };
+        need(8)?;
+        let label = f32::from_le_bytes(b[0..4].try_into().unwrap());
+        let ndim = u32::from_le_bytes(b[4..8].try_into().unwrap()) as usize;
+        need(8 + 4 * ndim)?;
+        let mut shape = Vec::with_capacity(ndim);
+        for i in 0..ndim {
+            shape.push(u32::from_le_bytes(b[8 + 4 * i..12 + 4 * i].try_into().unwrap()) as usize);
+        }
+        let size: usize = shape.iter().product();
+        let off = 8 + 4 * ndim;
+        need(off + 4 * size)?;
+        let data = (0..size)
+            .map(|i| f32::from_le_bytes(b[off + 4 * i..off + 4 * i + 4].try_into().unwrap()))
+            .collect();
+        Ok(Example { label, shape, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("mixnet_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_sequential() {
+        let path = tmp("seq.rec");
+        let mut w = RecordWriter::create(&path).unwrap();
+        for i in 0..10u32 {
+            w.write_record(&i.to_le_bytes()).unwrap();
+        }
+        let idx = w.finish().unwrap();
+        assert_eq!(idx.len(), 10);
+        let mut r = RecordReader::open(&path).unwrap();
+        for i in 0..10u32 {
+            let rec = r.next_record().unwrap().unwrap();
+            assert_eq!(rec, i.to_le_bytes());
+        }
+        assert!(r.next_record().unwrap().is_none());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn random_seek_via_index() {
+        let path = tmp("seek.rec");
+        let mut w = RecordWriter::create(&path).unwrap();
+        // variable-size payloads to exercise padding
+        for i in 0..20usize {
+            let payload = vec![i as u8; i + 1];
+            w.write_record(&payload).unwrap();
+        }
+        let idx = w.finish().unwrap();
+        let mut r = RecordReader::open(&path).unwrap();
+        for &i in &[7usize, 0, 19, 3] {
+            let rec = r.seek_record(idx[i]).unwrap().unwrap();
+            assert_eq!(rec, vec![i as u8; i + 1]);
+        }
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn corrupt_magic_detected() {
+        let path = tmp("bad.rec");
+        std::fs::write(&path, [0u8; 16]).unwrap();
+        let mut r = RecordReader::open(&path).unwrap();
+        assert!(r.next_record().is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn example_roundtrip() {
+        let ex = Example { label: 3.0, shape: vec![2, 3], data: (0..6).map(|v| v as f32).collect() };
+        let back = Example::from_bytes(&ex.to_bytes()).unwrap();
+        assert_eq!(ex, back);
+    }
+
+    #[test]
+    fn truncated_example_errors() {
+        let ex = Example { label: 1.0, shape: vec![4], data: vec![1.0; 4] };
+        let bytes = ex.to_bytes();
+        assert!(Example::from_bytes(&bytes[..bytes.len() - 2]).is_err());
+    }
+}

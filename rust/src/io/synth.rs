@@ -1,0 +1,173 @@
+//! Synthetic dataset generators — the stand-in for ILSVRC12 and the
+//! convnet-benchmarks inputs (DESIGN.md §Substitutions).
+//!
+//! `class_clusters` draws each class from a Gaussian around a random
+//! class centroid, giving a learnable classification problem whose
+//! difficulty is controlled by the noise/centroid-separation ratio;
+//! `images` produces NCHW tensors the model zoo consumes; both can be
+//! packed into RecordIO via [`write_recordio`].
+
+use crate::error::Result;
+use crate::io::recordio::{Example, RecordWriter};
+use crate::util::Rng;
+
+/// A generated in-memory dataset.
+#[derive(Debug, Clone)]
+pub struct SynthDataset {
+    /// Flat features, `n * prod(feat_shape)`.
+    pub features: Vec<f32>,
+    /// Labels, length `n`.
+    pub labels: Vec<f32>,
+    /// Per-example feature shape.
+    pub feat_shape: Vec<usize>,
+}
+
+impl SynthDataset {
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+}
+
+/// Gaussian class-cluster dataset: `n` examples over `classes` classes in
+/// `dim` dimensions; `noise` is the intra-class std relative to unit
+/// centroid scale.
+pub fn class_clusters(n: usize, classes: usize, dim: usize, noise: f32, seed: u64) -> SynthDataset {
+    let mut rng = Rng::seed_from_u64(seed);
+    let centroids: Vec<f32> = (0..classes * dim).map(|_| rng.normal()).collect();
+    let mut features = Vec::with_capacity(n * dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % classes;
+        for d in 0..dim {
+            features.push(centroids[c * dim + d] + noise * rng.normal());
+        }
+        labels.push(c as f32);
+    }
+    // interleave classes deterministically, then shuffle example order
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut f2 = Vec::with_capacity(n * dim);
+    let mut l2 = Vec::with_capacity(n);
+    for &idx in &order {
+        f2.extend_from_slice(&features[idx * dim..(idx + 1) * dim]);
+        l2.push(labels[idx]);
+    }
+    SynthDataset { features: f2, labels: l2, feat_shape: vec![dim] }
+}
+
+/// Synthetic NCHW image dataset: class-dependent mean patterns plus noise
+/// (exercises the conv stack the same way decoded JPEGs would).
+pub fn images(n: usize, classes: usize, c: usize, h: usize, w: usize, noise: f32, seed: u64) -> SynthDataset {
+    let mut rng = Rng::seed_from_u64(seed);
+    let per = c * h * w;
+    // low-frequency class patterns
+    let patterns: Vec<f32> = (0..classes * per)
+        .map(|i| {
+            let x = (i % w) as f32 / w as f32;
+            let cls = i / per;
+            ((x * (cls + 1) as f32 * std::f32::consts::PI).sin() + rng.normal() * 0.1) * 0.5
+        })
+        .collect();
+    let mut features = Vec::with_capacity(n * per);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let cls = i % classes;
+        for p in 0..per {
+            features.push(patterns[cls * per + p] + noise * rng.normal());
+        }
+        labels.push(cls as f32);
+    }
+    SynthDataset { features, labels, feat_shape: vec![c, h, w] }
+}
+
+/// Pack a dataset into a RecordIO file; returns the record index.
+pub fn write_recordio(ds: &SynthDataset, path: impl AsRef<std::path::Path>) -> Result<Vec<u64>> {
+    let per: usize = ds.feat_shape.iter().product();
+    let mut w = RecordWriter::create(path)?;
+    for i in 0..ds.len() {
+        let ex = Example {
+            label: ds.labels[i],
+            shape: ds.feat_shape.clone(),
+            data: ds.features[i * per..(i + 1) * per].to_vec(),
+        };
+        w.write_record(&ex.to_bytes())?;
+    }
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clusters_are_balanced_and_separable() {
+        let ds = class_clusters(200, 4, 8, 0.1, 42);
+        assert_eq!(ds.len(), 200);
+        // class balance
+        for c in 0..4 {
+            let cnt = ds.labels.iter().filter(|&&l| l == c as f32).count();
+            assert_eq!(cnt, 50);
+        }
+        // nearest-centroid classification should be near perfect at low noise
+        let mut centroids = vec![0.0f32; 4 * 8];
+        let mut counts = [0usize; 4];
+        for i in 0..ds.len() {
+            let c = ds.labels[i] as usize;
+            counts[c] += 1;
+            for d in 0..8 {
+                centroids[c * 8 + d] += ds.features[i * 8 + d];
+            }
+        }
+        for c in 0..4 {
+            for d in 0..8 {
+                centroids[c * 8 + d] /= counts[c] as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..ds.len() {
+            let x = &ds.features[i * 8..(i + 1) * 8];
+            let best = (0..4)
+                .min_by(|&a, &b| {
+                    let da: f32 =
+                        (0..8).map(|d| (x[d] - centroids[a * 8 + d]).powi(2)).sum();
+                    let db: f32 =
+                        (0..8).map(|d| (x[d] - centroids[b * 8 + d]).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == ds.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct > 190, "only {correct}/200 separable");
+    }
+
+    #[test]
+    fn images_shape_and_determinism() {
+        let a = images(10, 3, 1, 8, 8, 0.2, 7);
+        let b = images(10, 3, 1, 8, 8, 0.2, 7);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.feat_shape, vec![1, 8, 8]);
+        assert_eq!(a.features.len(), 10 * 64);
+    }
+
+    #[test]
+    fn recordio_pack_roundtrip() {
+        let ds = class_clusters(10, 2, 4, 0.1, 1);
+        let mut p = std::env::temp_dir();
+        p.push(format!("mixnet_synth_{}.rec", std::process::id()));
+        let idx = write_recordio(&ds, &p).unwrap();
+        assert_eq!(idx.len(), 10);
+        let mut r = crate::io::RecordReader::open(&p).unwrap();
+        let first = Example::from_bytes(&r.next_record().unwrap().unwrap()).unwrap();
+        assert_eq!(first.label, ds.labels[0]);
+        assert_eq!(first.data, &ds.features[0..4]);
+        std::fs::remove_file(p).unwrap();
+    }
+}

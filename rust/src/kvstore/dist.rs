@@ -1,0 +1,351 @@
+//! The two-level distributed KVStore client (paper §3.3, Figure 5).
+//!
+//! Each *machine* (process or thread group) owns one [`DistKVStore`]: a
+//! level-1 aggregator for its local devices whose **merged** gradient is
+//! forwarded to the level-2 [`PsServer`](super::server::PsServer) — one
+//! message per round instead of one per device, the bandwidth reduction
+//! the paper credits to the two-level structure.
+//!
+//! Network I/O runs inside engine operations, so pushes and pulls overlap
+//! with compute exactly like any other scheduled op (§3.3: *"the strategy
+//! ... makes the data synchronization work seamless with computation"*).
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+
+use super::wire::{read_msg, write_msg, Msg};
+use super::{Consistency, KVStore};
+use crate::engine::EngineRef;
+use crate::error::{Error, Result};
+use crate::ndarray::NDArray;
+
+struct KeyState {
+    /// Level-1 accumulation buffer.
+    accum: NDArray,
+    pushed: usize,
+    /// Number of completed level-2 push rounds (the pull watermark).
+    rounds: u64,
+    shape: Vec<usize>,
+}
+
+struct Conn {
+    stream: Mutex<TcpStream>,
+}
+
+impl Conn {
+    fn rpc(&self, msg: &Msg) -> Result<Msg> {
+        let mut s = self.stream.lock().unwrap();
+        write_msg(&mut *s, msg)?;
+        read_msg(&mut *s)
+    }
+}
+
+/// Client-side two-level KVStore.
+pub struct DistKVStore {
+    engine: EngineRef,
+    machine: u32,
+    num_devices: usize,
+    consistency: Consistency,
+    keys: Mutex<HashMap<String, KeyState>>,
+    /// Connection used by engine ops (push/pull).
+    conn: Arc<Conn>,
+    /// Separate connection for barriers so a parked barrier cannot block
+    /// in-flight pull replies.
+    barrier_conn: Arc<Conn>,
+    barrier_round: Mutex<u64>,
+    /// Engine tag owning the wire connection: every push/pull engine op
+    /// *writes* it, so network ops execute in issue order.  Without this
+    /// a later pull (which the server may park until the round completes)
+    /// could run before the push that completes the round — holding the
+    /// connection mutex and deadlocking the machine against itself.
+    conn_var: crate::engine::VarHandle,
+}
+
+impl DistKVStore {
+    /// Connect to the level-2 server.
+    pub fn connect(
+        addr: std::net::SocketAddr,
+        machine: u32,
+        num_devices: usize,
+        consistency: Consistency,
+        engine: EngineRef,
+    ) -> Result<DistKVStore> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let b = TcpStream::connect(addr)?;
+        b.set_nodelay(true).ok();
+        let conn_var = engine.new_var();
+        Ok(DistKVStore {
+            engine,
+            machine,
+            num_devices: num_devices.max(1),
+            consistency,
+            keys: Mutex::new(HashMap::new()),
+            conn: Arc::new(Conn { stream: Mutex::new(stream) }),
+            barrier_conn: Arc::new(Conn { stream: Mutex::new(b) }),
+            barrier_round: Mutex::new(0),
+            conn_var,
+        })
+    }
+
+    /// Epoch barrier across machines (round-robin id).
+    pub fn barrier(&self) -> Result<()> {
+        let id = {
+            let mut r = self.barrier_round.lock().unwrap();
+            *r += 1;
+            *r
+        };
+        match self.barrier_conn.rpc(&Msg::Barrier { id, machine: self.machine })? {
+            Msg::Ack => Ok(()),
+            other => Err(Error::kv(format!("barrier: unexpected reply {other:?}"))),
+        }
+    }
+}
+
+impl KVStore for DistKVStore {
+    fn init(&self, key: &str, value: &NDArray) -> Result<()> {
+        {
+            let mut keys = self.keys.lock().unwrap();
+            if keys.contains_key(key) {
+                return Err(Error::kv(format!("key '{key}' already initialized")));
+            }
+            keys.insert(
+                key.to_string(),
+                KeyState {
+                    accum: NDArray::zeros_on(value.shape(), self.engine.clone()),
+                    pushed: 0,
+                    rounds: 0,
+                    shape: value.shape().to_vec(),
+                },
+            );
+        }
+        // Synchronous init (first writer wins on the server).
+        match self.conn.rpc(&Msg::Init { key: key.to_string(), value: value.to_vec() })? {
+            Msg::Ack => Ok(()),
+            other => Err(Error::kv(format!("init: unexpected reply {other:?}"))),
+        }
+    }
+
+    fn push(&self, key: &str, grad: &NDArray, _device: usize) -> Result<()> {
+        let mut keys = self.keys.lock().unwrap();
+        let st = keys.get_mut(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
+        if st.pushed == 0 {
+            st.accum.zero_();
+        }
+        st.accum.add_(grad); // level-1 aggregation (engine op)
+        st.pushed += 1;
+        if st.pushed == self.num_devices {
+            st.pushed = 0;
+            st.rounds += 1;
+            // level-2: ship ONE aggregated message, inside an engine op
+            // reading the accumulation buffer.
+            let conn = Arc::clone(&self.conn);
+            let key = key.to_string();
+            let machine = self.machine;
+            let accum = st.accum.clone();
+            let storage = accum.storage();
+            self.engine.push(
+                "kv.dist_push",
+                vec![accum.var()],
+                vec![self.conn_var],
+                Box::new(move || {
+                    let value = unsafe { storage.slice() }.to_vec();
+                    let _ = conn.rpc(&Msg::Push { key, value, machine });
+                }),
+            );
+        }
+        Ok(())
+    }
+
+    fn pull(&self, key: &str, out: &NDArray, _device: usize) -> Result<()> {
+        let (after_version, shape) = {
+            let keys = self.keys.lock().unwrap();
+            let st =
+                keys.get(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
+            let v = match self.consistency {
+                Consistency::Sequential => st.rounds,
+                Consistency::Eventual => 0,
+            };
+            (v, st.shape.clone())
+        };
+        if out.shape() != shape.as_slice() {
+            return Err(Error::kv(format!(
+                "pull '{key}': out shape {:?} != {:?}",
+                out.shape(),
+                shape
+            )));
+        }
+        let conn = Arc::clone(&self.conn);
+        let key = key.to_string();
+        let storage = out.storage();
+        self.engine.push(
+            "kv.dist_pull",
+            vec![],
+            vec![out.var(), self.conn_var],
+            Box::new(move || {
+                match conn.rpc(&Msg::Pull { key: key.clone(), after_version }) {
+                    Ok(Msg::Value { value, .. }) => {
+                        let dst = unsafe { storage.slice_mut() };
+                        if dst.len() == value.len() {
+                            dst.copy_from_slice(&value);
+                        }
+                    }
+                    _ => { /* connection failure: leave buffer untouched */ }
+                }
+            }),
+        );
+        Ok(())
+    }
+
+    fn flush(&self) {
+        self.engine.wait_all();
+    }
+
+    fn num_devices(&self) -> usize {
+        self.num_devices
+    }
+
+    fn consistency(&self) -> Consistency {
+        self.consistency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{create, EngineKind};
+    use crate::kvstore::server::{PsServer, ServerUpdater};
+
+    fn plain_updater() -> ServerUpdater {
+        ServerUpdater { lr: 1.0, momentum: 0.0, weight_decay: 0.0, rescale: 1.0 }
+    }
+
+    #[test]
+    fn single_machine_push_pull() {
+        let srv = PsServer::start(0, 1, plain_updater()).unwrap();
+        let engine = create(EngineKind::Threaded, 4);
+        let kv =
+            DistKVStore::connect(srv.addr(), 0, 1, Consistency::Sequential, engine.clone())
+                .unwrap();
+        kv.init("w", &NDArray::from_vec_on(&[2], vec![1.0, 1.0], engine.clone())).unwrap();
+        kv.push("w", &NDArray::from_vec_on(&[2], vec![0.25, 0.5], engine.clone()), 0).unwrap();
+        let out = NDArray::zeros_on(&[2], engine);
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        assert_eq!(out.to_vec(), vec![0.75, 0.5]);
+    }
+
+    #[test]
+    fn level1_aggregation_reduces_messages() {
+        // 4 local devices, 1 machine: the server must see ONE push per
+        // round (plus the init).
+        let srv = PsServer::start(0, 1, plain_updater()).unwrap();
+        let engine = create(EngineKind::Threaded, 4);
+        let kv =
+            DistKVStore::connect(srv.addr(), 0, 4, Consistency::Sequential, engine.clone())
+                .unwrap();
+        kv.init("w", &NDArray::zeros_on(&[8], engine.clone())).unwrap();
+        for d in 0..4 {
+            kv.push("w", &NDArray::from_vec_on(&[8], vec![1.0; 8], engine.clone()), d).unwrap();
+        }
+        let out = NDArray::zeros_on(&[8], engine);
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        // w = 0 - (1+1+1+1) = -4 everywhere
+        assert_eq!(out.to_vec(), vec![-4.0; 8]);
+        // messages: 1 init + 1 aggregated push + 1 pull = 3
+        assert_eq!(srv.messages_received(), 3, "level-1 must aggregate");
+    }
+
+    #[test]
+    fn two_machines_synchronous_round() {
+        let srv = PsServer::start(0, 2, plain_updater()).unwrap();
+        let addr = srv.addr();
+        let handles: Vec<_> = (0..2u32)
+            .map(|m| {
+                std::thread::spawn(move || {
+                    let engine = create(EngineKind::Threaded, 2);
+                    let kv = DistKVStore::connect(
+                        addr,
+                        m,
+                        1,
+                        Consistency::Sequential,
+                        engine.clone(),
+                    )
+                    .unwrap();
+                    kv.init("w", &NDArray::zeros_on(&[1], engine.clone())).unwrap();
+                    kv.push(
+                        "w",
+                        &NDArray::from_vec_on(&[1], vec![(m + 1) as f32], engine.clone()),
+                        0,
+                    )
+                    .unwrap();
+                    let out = NDArray::zeros_on(&[1], engine.clone());
+                    kv.pull("w", &out, 0).unwrap();
+                    kv.flush();
+                    out.to_vec()[0]
+                })
+            })
+            .collect();
+        for h in handles {
+            // w = 0 - (1 + 2) = -3 for both machines
+            assert_eq!(h.join().unwrap(), -3.0);
+        }
+    }
+
+    #[test]
+    fn eventual_pull_is_stale_but_fast() {
+        let srv = PsServer::start(0, 2, plain_updater()).unwrap();
+        let engine = create(EngineKind::Threaded, 2);
+        let kv =
+            DistKVStore::connect(srv.addr(), 0, 1, Consistency::Eventual, engine.clone())
+                .unwrap();
+        kv.init("w", &NDArray::from_vec_on(&[1], vec![9.0], engine.clone())).unwrap();
+        // push once: round incomplete at the server (2 machines expected)
+        kv.push("w", &NDArray::from_vec_on(&[1], vec![1.0], engine.clone()), 0).unwrap();
+        let out = NDArray::zeros_on(&[1], engine);
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush(); // must NOT deadlock despite the incomplete round
+        assert_eq!(out.to_vec(), vec![9.0]);
+    }
+
+    #[test]
+    fn barrier_synchronizes_machines() {
+        let srv = PsServer::start(0, 2, plain_updater()).unwrap();
+        let addr = srv.addr();
+        let t0 = std::time::Instant::now();
+        let hs: Vec<_> = (0..2u32)
+            .map(|m| {
+                std::thread::spawn(move || {
+                    let engine = create(EngineKind::Threaded, 2);
+                    let kv =
+                        DistKVStore::connect(addr, m, 1, Consistency::Sequential, engine)
+                            .unwrap();
+                    if m == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(60));
+                    }
+                    kv.barrier().unwrap();
+                    t0.elapsed()
+                })
+            })
+            .collect();
+        let times: Vec<_> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+        // both exit the barrier only after the slow machine arrives
+        for t in times {
+            assert!(t >= std::time::Duration::from_millis(55), "{t:?}");
+        }
+    }
+
+    #[test]
+    fn pull_shape_mismatch_rejected() {
+        let srv = PsServer::start(0, 1, plain_updater()).unwrap();
+        let engine = create(EngineKind::Threaded, 2);
+        let kv =
+            DistKVStore::connect(srv.addr(), 0, 1, Consistency::Sequential, engine.clone())
+                .unwrap();
+        kv.init("w", &NDArray::zeros_on(&[4], engine.clone())).unwrap();
+        let bad = NDArray::zeros_on(&[5], engine);
+        assert!(kv.pull("w", &bad, 0).is_err());
+    }
+}

@@ -1,0 +1,289 @@
+//! KVStore — data synchronization over devices and machines
+//! (paper §2.3, implementation §3.3).
+//!
+//! Two primitives: **push** a gradient for a key, **pull** the current
+//! weight.  A user-defined *updater* (usually an [`Optimizer`]) merges
+//! pushed values into the stored weight.  Consistency is controlled by a
+//! [`Consistency`] model: `Sequential` pulls observe every push the caller
+//! issued before; `Eventual` pulls return immediately with a possibly
+//! stale snapshot (paper: *"intra- is sequential and inter- is
+//! eventual"*).
+//!
+//! Two implementations:
+//!
+//! * [`LocalKVStore`] — the level-1 server: aggregates pushes from the
+//!   devices (worker threads) of one machine, applies the updater once
+//!   per round.  Push/pull are engine operations, so they schedule
+//!   seamlessly against compute (§3.3: *"we use the engine to schedule
+//!   the KVStore operations"*).
+//! * [`DistKVStore`](dist::DistKVStore) — the two-level structure: a
+//!   level-1 local aggregator whose merged gradient is forwarded to the
+//!   level-2 TCP [server](server), cutting inter-machine bandwidth by the
+//!   per-machine device count.
+
+pub mod dist;
+pub mod server;
+pub mod wire;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::engine::EngineRef;
+use crate::error::{Error, Result};
+use crate::ndarray::NDArray;
+use crate::optimizer::Optimizer;
+
+/// Consistency model for pulls (paper §2.3: *"model divergence is
+/// controlled via consistency model"*).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Consistency {
+    /// A pull observes all pushes issued before it by this worker.
+    Sequential,
+    /// A pull may return a stale snapshot (no blocking).
+    Eventual,
+}
+
+/// The push/pull interface shared by local and distributed stores.
+pub trait KVStore: Send + Sync {
+    /// Register a key with its initial weight value.
+    fn init(&self, key: &str, value: &NDArray) -> Result<()>;
+
+    /// Push a gradient contribution for `key` from device `device`.
+    fn push(&self, key: &str, grad: &NDArray, device: usize) -> Result<()>;
+
+    /// Pull the current weight for `key` into `out`.
+    fn pull(&self, key: &str, out: &NDArray, device: usize) -> Result<()>;
+
+    /// Block until all outstanding store operations have been applied.
+    fn flush(&self);
+
+    /// The number of devices pushing per round.
+    fn num_devices(&self) -> usize;
+
+    /// The consistency model in effect.
+    fn consistency(&self) -> Consistency;
+}
+
+struct KeyState {
+    weight: NDArray,
+    /// Gradient accumulation buffer for the current round.
+    accum: NDArray,
+    /// Devices that have pushed this round.
+    pushed: usize,
+    /// Committed snapshot for eventual-consistency pulls.
+    snapshot: Arc<Mutex<Vec<f32>>>,
+}
+
+/// Level-1 (intra-machine) key-value store over the dependency engine.
+pub struct LocalKVStore {
+    engine: EngineRef,
+    num_devices: usize,
+    consistency: Consistency,
+    updater: Arc<dyn Optimizer>,
+    keys: Mutex<HashMap<String, KeyState>>,
+}
+
+impl LocalKVStore {
+    /// Create a store aggregating `num_devices` pushes per round and
+    /// applying `updater` to merge them.
+    pub fn new(
+        engine: EngineRef,
+        num_devices: usize,
+        updater: Arc<dyn Optimizer>,
+        consistency: Consistency,
+    ) -> Self {
+        LocalKVStore {
+            engine,
+            num_devices: num_devices.max(1),
+            consistency,
+            updater,
+            keys: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
+impl KVStore for LocalKVStore {
+    fn init(&self, key: &str, value: &NDArray) -> Result<()> {
+        let mut keys = self.keys.lock().unwrap();
+        if keys.contains_key(key) {
+            return Err(Error::kv(format!("key '{key}' already initialized")));
+        }
+        let weight = NDArray::zeros_on(value.shape(), self.engine.clone());
+        weight.copy_from_(value);
+        let accum = NDArray::zeros_on(value.shape(), self.engine.clone());
+        let snapshot = Arc::new(Mutex::new(value.to_vec()));
+        keys.insert(key.to_string(), KeyState { weight, accum, pushed: 0, snapshot });
+        Ok(())
+    }
+
+    fn push(&self, key: &str, grad: &NDArray, _device: usize) -> Result<()> {
+        let mut keys = self.keys.lock().unwrap();
+        let st = keys.get_mut(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
+        if st.pushed == 0 {
+            st.accum.zero_();
+        }
+        st.accum.add_(grad);
+        st.pushed += 1;
+        if st.pushed == self.num_devices {
+            st.pushed = 0;
+            // merged gradient ready: run the user updater, then refresh
+            // the eventual-consistency snapshot.
+            self.updater.update(key, &st.weight, &st.accum);
+            let snap = Arc::clone(&st.snapshot);
+            let ws = st.weight.storage();
+            self.engine.push(
+                "kv.snapshot",
+                vec![st.weight.var()],
+                vec![],
+                Box::new(move || {
+                    let mut s = snap.lock().unwrap();
+                    let w = unsafe { ws.slice() };
+                    s.clear();
+                    s.extend_from_slice(w);
+                }),
+            );
+        }
+        Ok(())
+    }
+
+    fn pull(&self, key: &str, out: &NDArray, _device: usize) -> Result<()> {
+        let keys = self.keys.lock().unwrap();
+        let st = keys.get(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
+        match self.consistency {
+            Consistency::Sequential => {
+                // Engine dependency on the weight var orders this pull
+                // after every previously-scheduled update.
+                out.copy_from_(&st.weight);
+            }
+            Consistency::Eventual => {
+                // Snapshot read: no dependency on in-flight updates.
+                let snap = Arc::clone(&st.snapshot);
+                let os = out.storage();
+                self.engine.push(
+                    "kv.pull_eventual",
+                    vec![],
+                    vec![out.var()],
+                    Box::new(move || {
+                        let s = snap.lock().unwrap();
+                        unsafe { os.slice_mut() }.copy_from_slice(&s);
+                    }),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn flush(&self) {
+        self.engine.wait_all();
+    }
+
+    fn num_devices(&self) -> usize {
+        self.num_devices
+    }
+
+    fn consistency(&self) -> Consistency {
+        self.consistency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{create, EngineKind};
+    use crate::optimizer::Sgd;
+
+    fn store(devices: usize, consistency: Consistency) -> (LocalKVStore, EngineRef) {
+        let engine = create(EngineKind::Threaded, 4);
+        let opt = Arc::new(Sgd::new(1.0)); // lr=1 -> w -= sum(grads)
+        (LocalKVStore::new(engine.clone(), devices, opt, consistency), engine)
+    }
+
+    #[test]
+    fn init_push_pull_single_device() {
+        let (kv, e) = store(1, Consistency::Sequential);
+        let w0 = NDArray::from_vec_on(&[2], vec![1.0, 2.0], e.clone());
+        kv.init("w", &w0).unwrap();
+        let g = NDArray::from_vec_on(&[2], vec![0.5, 0.5], e.clone());
+        kv.push("w", &g, 0).unwrap();
+        let out = NDArray::zeros_on(&[2], e);
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        assert_eq!(out.to_vec(), vec![0.5, 1.5]);
+    }
+
+    #[test]
+    fn double_init_rejected() {
+        let (kv, _e) = store(1, Consistency::Sequential);
+        let w = NDArray::ones(&[1]);  // engine-local state untouched by init
+        kv.init("w", &w).unwrap();
+        assert!(kv.init("w", &w).is_err());
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let (kv, _e) = store(1, Consistency::Sequential);
+        let g = NDArray::ones(&[1]);
+        assert!(kv.push("nope", &g, 0).is_err());
+        assert!(kv.pull("nope", &g, 0).is_err());
+    }
+
+    #[test]
+    fn aggregates_across_devices_before_update() {
+        // 4 devices push 1.0 each; lr=1 -> w decreases by 4 per round.
+        let (kv, e) = store(4, Consistency::Sequential);
+        let w0 = NDArray::zeros_on(&[1], e.clone());
+        kv.init("w", &w0).unwrap();
+        for d in 0..4 {
+            let g = NDArray::from_vec_on(&[1], vec![1.0], e.clone());
+            kv.push("w", &g, d).unwrap();
+        }
+        let out = NDArray::zeros_on(&[1], e);
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        assert_eq!(out.to_vec(), vec![-4.0]);
+    }
+
+    #[test]
+    fn partial_round_does_not_update() {
+        let (kv, e) = store(2, Consistency::Sequential);
+        kv.init("w", &NDArray::zeros_on(&[1], e.clone())).unwrap();
+        kv.push("w", &NDArray::from_vec_on(&[1], vec![1.0], e.clone()), 0).unwrap(); // 1 of 2
+        let out = NDArray::zeros_on(&[1], e);
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        assert_eq!(out.to_vec(), vec![0.0], "no update until round completes");
+    }
+
+    #[test]
+    fn paper_training_loop_shape() {
+        // while(1) { kv.pull(w); forward_backward; kv.push(g) } — here a
+        // synthetic gradient descent on f(w)=w^2.
+        let engine = create(EngineKind::Threaded, 4);
+        let opt = Arc::new(Sgd::new(0.1));
+        let kv = LocalKVStore::new(engine.clone(), 1, opt, Consistency::Sequential);
+        kv.init("w", &NDArray::from_vec_on(&[1], vec![4.0], engine.clone())).unwrap();
+        let w = NDArray::zeros_on(&[1], engine.clone());
+        for _ in 0..50 {
+            kv.pull("w", &w, 0).unwrap();
+            let cur = w.to_vec()[0];
+            let g = NDArray::from_vec_on(&[1], vec![2.0 * cur], engine.clone());
+            kv.push("w", &g, 0).unwrap();
+        }
+        kv.flush();
+        kv.pull("w", &w, 0).unwrap();
+        let final_w = w.to_vec()[0];
+        assert!(final_w.abs() < 0.1, "{final_w}");
+    }
+
+    #[test]
+    fn eventual_pull_does_not_block_on_round() {
+        let (kv, e) = store(2, Consistency::Eventual);
+        kv.init("w", &NDArray::from_vec_on(&[1], vec![7.0], e.clone())).unwrap();
+        kv.push("w", &NDArray::from_vec_on(&[1], vec![1.0], e.clone()), 0).unwrap(); // partial round
+        let out = NDArray::zeros_on(&[1], e);
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        // sees the initial snapshot (no committed update yet)
+        assert_eq!(out.to_vec(), vec![7.0]);
+    }
+}

@@ -1,0 +1,421 @@
+//! The level-2 (inter-machine) parameter server (paper §3.3, Figure 5).
+//!
+//! One thread per connection; shared state guarded by a mutex + condvar.
+//! Pushes from the `num_machines` level-1 aggregators are summed per
+//! round, the server-side SGD updater is applied, and the key's version
+//! advances.  Pulls carry an `after_version` watermark: sequential
+//! consistency waits for the watermark, eventual consistency passes 0 and
+//! is served immediately.
+
+use std::collections::HashMap;
+use std::io::ErrorKind;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::wire::{read_msg, write_msg, Msg};
+use crate::error::Result;
+
+/// Server-side updater configuration (plain-SGD on raw f32 buffers; the
+/// server has no engine — it is the paper's dedicated server process).
+#[derive(Debug, Clone, Copy)]
+pub struct ServerUpdater {
+    /// Learning rate.
+    pub lr: f32,
+    /// Momentum coefficient.
+    pub momentum: f32,
+    /// Weight decay.
+    pub weight_decay: f32,
+    /// Gradient rescale (1/num_machines/num_devices typically).
+    pub rescale: f32,
+}
+
+impl Default for ServerUpdater {
+    fn default() -> Self {
+        ServerUpdater { lr: 0.05, momentum: 0.9, weight_decay: 1e-4, rescale: 1.0 }
+    }
+}
+
+struct KeyState {
+    weight: Vec<f32>,
+    velocity: Vec<f32>,
+    accum: Vec<f32>,
+    pushed_by: Vec<bool>,
+    pushed: usize,
+    version: u64,
+}
+
+#[derive(Default)]
+struct ServerState {
+    keys: HashMap<String, KeyState>,
+    barriers: HashMap<u64, usize>,
+    barrier_gen: HashMap<u64, u64>,
+}
+
+struct Shared {
+    state: Mutex<ServerState>,
+    cv: Condvar,
+    updater: ServerUpdater,
+    num_machines: usize,
+    stop: AtomicBool,
+    msgs_in: AtomicU64,
+    bytes_in: AtomicU64,
+}
+
+/// A running parameter server.
+pub struct PsServer {
+    addr: std::net::SocketAddr,
+    shared: Arc<Shared>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl PsServer {
+    /// Bind on `127.0.0.1:port` (0 = ephemeral) and start serving
+    /// `num_machines` level-1 clients.
+    pub fn start(port: u16, num_machines: usize, updater: ServerUpdater) -> Result<PsServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            state: Mutex::new(ServerState::default()),
+            cv: Condvar::new(),
+            updater,
+            num_machines: num_machines.max(1),
+            stop: AtomicBool::new(false),
+            msgs_in: AtomicU64::new(0),
+            bytes_in: AtomicU64::new(0),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept_thread = std::thread::Builder::new()
+            .name("mixnet-ps-accept".into())
+            .spawn(move || {
+                let mut conns: Vec<JoinHandle<()>> = Vec::new();
+                loop {
+                    if accept_shared.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let s = Arc::clone(&accept_shared);
+                            conns.push(
+                                std::thread::Builder::new()
+                                    .name("mixnet-ps-conn".into())
+                                    .spawn(move || serve_conn(stream, s))
+                                    .expect("spawn conn"),
+                            );
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            })
+            .expect("spawn accept");
+        Ok(PsServer { addr, shared, accept_thread: Some(accept_thread) })
+    }
+
+    /// Address clients should connect to.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Total messages received (bandwidth accounting for E3/E5).
+    pub fn messages_received(&self) -> u64 {
+        self.shared.msgs_in.load(Ordering::Relaxed)
+    }
+
+    /// Total payload bytes received.
+    pub fn bytes_received(&self) -> u64 {
+        self.shared.bytes_in.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting and shut down (open connections end on their next
+    /// message or disconnect).
+    pub fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for PsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn apply_update(upd: &ServerUpdater, st: &mut KeyState) {
+    let n = st.weight.len();
+    for i in 0..n {
+        let g = upd.rescale * st.accum[i] + upd.weight_decay * st.weight[i];
+        if upd.momentum != 0.0 {
+            st.velocity[i] = upd.momentum * st.velocity[i] - upd.lr * g;
+            st.weight[i] += st.velocity[i];
+        } else {
+            st.weight[i] -= upd.lr * g;
+        }
+    }
+    st.accum.iter_mut().for_each(|v| *v = 0.0);
+    st.pushed = 0;
+    st.pushed_by.iter_mut().for_each(|b| *b = false);
+    st.version += 1;
+}
+
+fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
+    let mut reader = stream.try_clone().expect("clone stream");
+    let mut writer = stream;
+    loop {
+        // Poll for the next frame with a short timeout so shutdown() can
+        // reap connections that are idle (blocked with no inbound data);
+        // once a frame starts arriving, read it without a deadline.
+        reader.set_read_timeout(Some(std::time::Duration::from_millis(50))).ok();
+        let mut first = [0u8; 1];
+        match reader.peek(&mut first) {
+            Ok(0) => return, // EOF
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+        }
+        reader.set_read_timeout(None).ok();
+        let msg = match read_msg(&mut reader) {
+            Ok(m) => m,
+            Err(_) => return, // disconnect
+        };
+        shared.msgs_in.fetch_add(1, Ordering::Relaxed);
+        match msg {
+            Msg::Init { key, value } => {
+                shared.bytes_in.fetch_add(4 * value.len() as u64, Ordering::Relaxed);
+                let mut st = shared.state.lock().unwrap();
+                st.keys.entry(key).or_insert_with(|| KeyState {
+                    velocity: vec![0.0; value.len()],
+                    accum: vec![0.0; value.len()],
+                    pushed_by: vec![false; shared.num_machines],
+                    pushed: 0,
+                    version: 0,
+                    weight: value,
+                });
+                drop(st);
+                let _ = write_msg(&mut writer, &Msg::Ack);
+            }
+            Msg::Push { key, value, machine } => {
+                shared.bytes_in.fetch_add(4 * value.len() as u64, Ordering::Relaxed);
+                let mut st = shared.state.lock().unwrap();
+                let reply = match st.keys.get_mut(&key) {
+                    None => Msg::Err { msg: format!("unknown key '{key}'") },
+                    Some(ks) => {
+                        let m = machine as usize % shared.num_machines;
+                        if !ks.pushed_by[m] {
+                            ks.pushed_by[m] = true;
+                            ks.pushed += 1;
+                        }
+                        for (a, v) in ks.accum.iter_mut().zip(&value) {
+                            *a += v;
+                        }
+                        if ks.pushed == shared.num_machines {
+                            apply_update(&shared.updater, ks);
+                            shared.cv.notify_all();
+                        }
+                        Msg::Ack
+                    }
+                };
+                drop(st);
+                let _ = write_msg(&mut writer, &reply);
+            }
+            Msg::Pull { key, after_version } => {
+                let mut st = shared.state.lock().unwrap();
+                loop {
+                    match st.keys.get(&key) {
+                        None => {
+                            drop(st);
+                            let _ = write_msg(
+                                &mut writer,
+                                &Msg::Err { msg: format!("unknown key '{key}'") },
+                            );
+                            break;
+                        }
+                        Some(ks) if ks.version >= after_version => {
+                            let reply = Msg::Value {
+                                key: key.clone(),
+                                value: ks.weight.clone(),
+                                version: ks.version,
+                            };
+                            drop(st);
+                            let _ = write_msg(&mut writer, &reply);
+                            break;
+                        }
+                        Some(_) => {
+                            if shared.stop.load(Ordering::SeqCst) {
+                                return;
+                            }
+                            st = shared.cv.wait(st).unwrap();
+                        }
+                    }
+                }
+            }
+            Msg::Barrier { id, machine: _ } => {
+                let mut st = shared.state.lock().unwrap();
+                let gen = *st.barrier_gen.entry(id).or_insert(0);
+                *st.barriers.entry(id).or_insert(0) += 1;
+                if *st.barriers.get(&id).unwrap() >= shared.num_machines {
+                    st.barriers.insert(id, 0);
+                    *st.barrier_gen.entry(id).or_insert(0) += 1;
+                    shared.cv.notify_all();
+                } else {
+                    while *st.barrier_gen.get(&id).unwrap_or(&0) == gen {
+                        if shared.stop.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        st = shared.cv.wait(st).unwrap();
+                    }
+                }
+                drop(st);
+                let _ = write_msg(&mut writer, &Msg::Ack);
+            }
+            Msg::Shutdown => {
+                shared.stop.store(true, Ordering::SeqCst);
+                shared.cv.notify_all();
+                let _ = write_msg(&mut writer, &Msg::Ack);
+                return;
+            }
+            other => {
+                let _ = write_msg(
+                    &mut writer,
+                    &Msg::Err { msg: format!("unexpected message {other:?}") },
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::wire::{read_msg, write_msg};
+
+    fn connect(addr: std::net::SocketAddr) -> TcpStream {
+        TcpStream::connect(addr).unwrap()
+    }
+
+    fn rpc(stream: &mut TcpStream, msg: &Msg) -> Msg {
+        write_msg(stream, msg).unwrap();
+        read_msg(stream).unwrap()
+    }
+
+    #[test]
+    fn init_push_pull_one_machine() {
+        let srv = PsServer::start(
+            0,
+            1,
+            ServerUpdater { lr: 1.0, momentum: 0.0, weight_decay: 0.0, rescale: 1.0 },
+        )
+        .unwrap();
+        let mut c = connect(srv.addr());
+        assert_eq!(rpc(&mut c, &Msg::Init { key: "w".into(), value: vec![1.0, 2.0] }), Msg::Ack);
+        assert_eq!(
+            rpc(&mut c, &Msg::Push { key: "w".into(), value: vec![0.5, 0.5], machine: 0 }),
+            Msg::Ack
+        );
+        match rpc(&mut c, &Msg::Pull { key: "w".into(), after_version: 1 }) {
+            Msg::Value { value, version, .. } => {
+                assert_eq!(value, vec![0.5, 1.5]);
+                assert_eq!(version, 1);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn round_waits_for_all_machines() {
+        let srv = PsServer::start(
+            0,
+            2,
+            ServerUpdater { lr: 1.0, momentum: 0.0, weight_decay: 0.0, rescale: 1.0 },
+        )
+        .unwrap();
+        let addr = srv.addr();
+        let mut c0 = connect(addr);
+        rpc(&mut c0, &Msg::Init { key: "w".into(), value: vec![0.0] });
+        rpc(&mut c0, &Msg::Push { key: "w".into(), value: vec![1.0], machine: 0 });
+        // a sequential pull (after_version=1) must block until machine 1
+        // pushes; do it from a thread.
+        let h = std::thread::spawn(move || {
+            let mut c = connect(addr);
+            match rpc(&mut c, &Msg::Pull { key: "w".into(), after_version: 1 }) {
+                Msg::Value { value, .. } => value[0],
+                other => panic!("{other:?}"),
+            }
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(!h.is_finished(), "pull must wait for the round");
+        let mut c1 = connect(addr);
+        rpc(&mut c1, &Msg::Push { key: "w".into(), value: vec![2.0], machine: 1 });
+        let got = h.join().unwrap();
+        assert_eq!(got, -3.0); // w = 0 - 1*(1+2)
+    }
+
+    #[test]
+    fn eventual_pull_returns_immediately() {
+        let srv = PsServer::start(0, 2, ServerUpdater::default()).unwrap();
+        let mut c = connect(srv.addr());
+        rpc(&mut c, &Msg::Init { key: "w".into(), value: vec![5.0] });
+        rpc(&mut c, &Msg::Push { key: "w".into(), value: vec![1.0], machine: 0 });
+        match rpc(&mut c, &Msg::Pull { key: "w".into(), after_version: 0 }) {
+            Msg::Value { value, version, .. } => {
+                assert_eq!(value, vec![5.0]);
+                assert_eq!(version, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_key_errors() {
+        let srv = PsServer::start(0, 1, ServerUpdater::default()).unwrap();
+        let mut c = connect(srv.addr());
+        match rpc(&mut c, &Msg::Push { key: "nope".into(), value: vec![1.0], machine: 0 }) {
+            Msg::Err { .. } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn barrier_releases_all_machines() {
+        let srv = PsServer::start(0, 3, ServerUpdater::default()).unwrap();
+        let addr = srv.addr();
+        let hs: Vec<_> = (0..3u32)
+            .map(|m| {
+                std::thread::spawn(move || {
+                    let mut c = connect(addr);
+                    rpc(&mut c, &Msg::Barrier { id: 1, machine: m });
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn message_accounting() {
+        let srv = PsServer::start(0, 1, ServerUpdater::default()).unwrap();
+        let mut c = connect(srv.addr());
+        rpc(&mut c, &Msg::Init { key: "w".into(), value: vec![0.0; 100] });
+        rpc(&mut c, &Msg::Push { key: "w".into(), value: vec![0.0; 100], machine: 0 });
+        assert_eq!(srv.messages_received(), 2);
+        assert_eq!(srv.bytes_received(), 800);
+    }
+}

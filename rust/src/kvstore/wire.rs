@@ -1,0 +1,254 @@
+//! Wire protocol for the level-2 parameter server: length-framed binary
+//! messages over TCP.  Hand-rolled (no serde in this image) and versioned
+//! by a magic header so protocol mismatches fail loudly.
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+
+/// Protocol magic + version.
+pub const WIRE_MAGIC: u32 = 0x6d78_0001;
+
+/// Parameter-server messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Register a key with its initial value (first writer wins).
+    Init {
+        /// Parameter key.
+        key: String,
+        /// Initial weight.
+        value: Vec<f32>,
+    },
+    /// Push an (aggregated) gradient from one machine.
+    Push {
+        /// Parameter key.
+        key: String,
+        /// Gradient payload.
+        value: Vec<f32>,
+        /// Sender machine id.
+        machine: u32,
+    },
+    /// Request the weight; served once `version >= after_version`.
+    Pull {
+        /// Parameter key.
+        key: String,
+        /// Minimum version to serve (0 = immediately / eventual).
+        after_version: u64,
+    },
+    /// Weight reply.
+    Value {
+        /// Parameter key.
+        key: String,
+        /// Weight payload.
+        value: Vec<f32>,
+        /// Server-side update count for the key.
+        version: u64,
+    },
+    /// Generic acknowledgement.
+    Ack,
+    /// Error reply.
+    Err {
+        /// Explanation.
+        msg: String,
+    },
+    /// Epoch barrier: released when all machines arrive.
+    Barrier {
+        /// Barrier round id.
+        id: u64,
+        /// Sender machine id.
+        machine: u32,
+    },
+    /// Graceful shutdown request.
+    Shutdown,
+}
+
+impl Msg {
+    fn code(&self) -> u8 {
+        match self {
+            Msg::Init { .. } => 0,
+            Msg::Push { .. } => 1,
+            Msg::Pull { .. } => 2,
+            Msg::Value { .. } => 3,
+            Msg::Ack => 4,
+            Msg::Err { .. } => 5,
+            Msg::Barrier { .. } => 6,
+            Msg::Shutdown => 7,
+        }
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, v: &[f32]) {
+    buf.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            return Err(Error::kv("wire: truncated message"));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|_| Error::kv("wire: bad utf8"))
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(4 * n)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+/// Encode a message to its framed byte representation.
+pub fn encode(msg: &Msg) -> Vec<u8> {
+    let mut body = Vec::new();
+    body.push(msg.code());
+    match msg {
+        Msg::Init { key, value } => {
+            put_str(&mut body, key);
+            put_f32s(&mut body, value);
+        }
+        Msg::Push { key, value, machine } => {
+            put_str(&mut body, key);
+            put_f32s(&mut body, value);
+            body.extend_from_slice(&machine.to_le_bytes());
+        }
+        Msg::Pull { key, after_version } => {
+            put_str(&mut body, key);
+            body.extend_from_slice(&after_version.to_le_bytes());
+        }
+        Msg::Value { key, value, version } => {
+            put_str(&mut body, key);
+            put_f32s(&mut body, value);
+            body.extend_from_slice(&version.to_le_bytes());
+        }
+        Msg::Ack | Msg::Shutdown => {}
+        Msg::Err { msg } => put_str(&mut body, msg),
+        Msg::Barrier { id, machine } => {
+            body.extend_from_slice(&id.to_le_bytes());
+            body.extend_from_slice(&machine.to_le_bytes());
+        }
+    }
+    let mut out = Vec::with_capacity(12 + body.len());
+    out.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Decode one message from a body buffer (without the 8-byte frame
+/// header).
+pub fn decode(body: &[u8]) -> Result<Msg> {
+    let mut c = Cursor { b: body, pos: 0 };
+    let code = c.take(1)?[0];
+    Ok(match code {
+        0 => Msg::Init { key: c.string()?, value: c.f32s()? },
+        1 => Msg::Push { key: c.string()?, value: c.f32s()?, machine: c.u32()? },
+        2 => Msg::Pull { key: c.string()?, after_version: c.u64()? },
+        3 => Msg::Value { key: c.string()?, value: c.f32s()?, version: c.u64()? },
+        4 => Msg::Ack,
+        5 => Msg::Err { msg: c.string()? },
+        6 => Msg::Barrier { id: c.u64()?, machine: c.u32()? },
+        7 => Msg::Shutdown,
+        other => return Err(Error::kv(format!("wire: unknown opcode {other}"))),
+    })
+}
+
+/// Write one framed message to a stream.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
+    let bytes = encode(msg);
+    w.write_all(&bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one framed message from a stream.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg> {
+    let mut hdr = [0u8; 8];
+    r.read_exact(&mut hdr)?;
+    let magic = u32::from_le_bytes(hdr[..4].try_into().unwrap());
+    if magic != WIRE_MAGIC {
+        return Err(Error::kv(format!("wire: bad magic {magic:#x}")));
+    }
+    let len = u32::from_le_bytes(hdr[4..].try_into().unwrap()) as usize;
+    if len > 1 << 30 {
+        return Err(Error::kv(format!("wire: oversized frame {len}")));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    decode(&body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: Msg) {
+        let enc = encode(&m);
+        let dec = decode(&enc[8..]).unwrap();
+        assert_eq!(m, dec);
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(Msg::Init { key: "w1".into(), value: vec![1.0, -2.5] });
+        roundtrip(Msg::Push { key: "w".into(), value: vec![0.0; 17], machine: 3 });
+        roundtrip(Msg::Pull { key: "k".into(), after_version: 42 });
+        roundtrip(Msg::Value { key: "k".into(), value: vec![9.0], version: 7 });
+        roundtrip(Msg::Ack);
+        roundtrip(Msg::Err { msg: "boom".into() });
+        roundtrip(Msg::Barrier { id: 5, machine: 1 });
+        roundtrip(Msg::Shutdown);
+    }
+
+    #[test]
+    fn empty_payload_ok() {
+        roundtrip(Msg::Init { key: "".into(), value: vec![] });
+    }
+
+    #[test]
+    fn stream_roundtrip() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Pull { key: "a".into(), after_version: 1 }).unwrap();
+        write_msg(&mut buf, &Msg::Ack).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_msg(&mut r).unwrap(), Msg::Pull { key: "a".into(), after_version: 1 });
+        assert_eq!(read_msg(&mut r).unwrap(), Msg::Ack);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = encode(&Msg::Ack);
+        buf[0] ^= 0xff;
+        let mut r = &buf[..];
+        assert!(read_msg(&mut r).is_err());
+    }
+
+    #[test]
+    fn truncated_body_rejected() {
+        let enc = encode(&Msg::Init { key: "w".into(), value: vec![1.0] });
+        assert!(decode(&enc[8..enc.len() - 2]).is_err());
+    }
+}

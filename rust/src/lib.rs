@@ -1,0 +1,76 @@
+//! # mixnet — a Rust + JAX + Pallas reproduction of MXNet (2015)
+//!
+//! `mixnet` rebuilds the system described in *"MXNet: A Flexible and
+//! Efficient Machine Learning Library for Heterogeneous Distributed
+//! Systems"* (Chen et al., 2015) as a three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the framework itself: a tag-based
+//!   [dependency engine](engine) that schedules both imperative
+//!   [`NDArray`](ndarray::NDArray) operations and declarative
+//!   [`Symbol`](symbol::Symbol) graphs, a [computation graph](graph) with
+//!   symbolic autodiff and the paper's *inplace* / *co-share* [memory
+//!   planner](graph::memory), a [graph executor](executor), a two-level
+//!   parameter-server [`KVStore`](kvstore), [RecordIO data I/O](io),
+//!   [optimizers](optimizer) and a [training module](module).
+//! * **Layer 2 (build-time Python)** — a JAX transformer / MLP forward +
+//!   backward, AOT-lowered to HLO text in `artifacts/` by
+//!   `python/compile/aot.py`.
+//! * **Layer 1 (build-time Python)** — Pallas kernels for the fused
+//!   linear+activation and softmax-cross-entropy "big ops", validated
+//!   against a pure-jnp oracle.
+//!
+//! The [runtime] module loads the AOT artifacts through PJRT (the `xla`
+//! crate) so that Python never runs on the training hot path.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use mixnet::prelude::*;
+//!
+//! // Imperative NDArray computation, lazily scheduled on the engine:
+//! let a = NDArray::ones(&[2, 3]);
+//! let b = &a * 2.0;
+//! assert_eq!(b.to_vec(), vec![2.0; 6]);
+//!
+//! // Declarative symbolic MLP (see `examples/quickstart.rs` for binding
+//! // and training it):
+//! let mlp = Symbol::var("data")
+//!     .fully_connected("fc1", 64)
+//!     .activation("relu1", Act::Relu)
+//!     .fully_connected("fc2", 10)
+//!     .softmax_output("softmax");
+//! assert_eq!(mlp.name(), "softmax");
+//! ```
+
+pub mod engine;
+pub mod error;
+pub mod executor;
+pub mod graph;
+pub mod io;
+pub mod kvstore;
+pub mod metrics;
+pub mod models;
+pub mod module;
+pub mod ndarray;
+pub mod optimizer;
+pub mod runtime;
+pub mod sim;
+pub mod symbol;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Commonly used items, re-exported for examples and downstream users.
+pub mod prelude {
+    pub use crate::engine::{Engine, EngineKind, EngineRef};
+    pub use crate::error::{Error, Result};
+    pub use crate::executor::Executor;
+    pub use crate::graph::memory::AllocStrategy;
+    pub use crate::graph::Graph;
+    pub use crate::io::{DataBatch, DataIter};
+    pub use crate::kvstore::KVStore;
+    pub use crate::module::Module;
+    pub use crate::ndarray::NDArray;
+    pub use crate::optimizer::{Optimizer, Sgd};
+    pub use crate::symbol::{Act, Symbol};
+}

@@ -1,0 +1,302 @@
+//! `mixnet` — the command-line launcher.
+//!
+//! Roles mirror MXNet's launcher: a level-2 parameter **server**, a
+//! distributed **worker**, single-process **train**, the AOT
+//! **transformer** driver (three-layer path), the memory **memplan**
+//! inspector, and the Figure 8 **sim**.
+//!
+//! ```text
+//! mixnet train --model mlp --epochs 4 --batch 32
+//! mixnet server --port 9700 --machines 2
+//! mixnet worker --server 127.0.0.1:9700 --machine 0 --machines 2
+//! mixnet transformer --steps 100 --artifacts artifacts
+//! mixnet memplan --model vgg-11@64 --batch 64
+//! mixnet sim --machines 10 --passes 12
+//! ```
+
+use std::sync::Arc;
+
+use mixnet::engine::{create, default_threads, EngineKind};
+use mixnet::executor::BindConfig;
+use mixnet::graph::infer_shapes;
+use mixnet::graph::memory::{default_external, plan_memory, AllocStrategy};
+use mixnet::io::{synth, ArrayDataIter};
+use mixnet::kvstore::server::{PsServer, ServerUpdater};
+use mixnet::kvstore::{dist::DistKVStore, Consistency, LocalKVStore};
+use mixnet::models::by_name;
+use mixnet::module::{Module, UpdateMode};
+use mixnet::optimizer::Sgd;
+use mixnet::sim::{graph_flops, simulate, ClusterConfig};
+use mixnet::util::Args;
+use mixnet::{Error, Result};
+
+const USAGE: &str = "\
+mixnet — a Rust+JAX+Pallas reproduction of MXNet (2015)
+
+USAGE: mixnet <command> [options]
+
+COMMANDS:
+  train        train a zoo model on synthetic data (local or via --server)
+                 --model NAME  --epochs N  --batch N  --lr F  --seed N
+                 --classes N   --examples N  --eventual
+  server       run the level-2 parameter server
+                 --port N  --machines N  --lr F  --momentum F
+  worker       join distributed training as one machine
+                 --server ADDR  --machine ID  --machines N  [train opts]
+  transformer  run the AOT three-layer transformer driver
+                 --steps N  --artifacts DIR  --mode sgd|kvstore  --workers N
+  memplan      print the Figure 7 memory table for one model
+                 --model NAME  --batch N  [--training]
+  sim          virtual-time Figure 8 replay
+                 --machines N  --passes N
+  info         version and backend information
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    }
+    match run(argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+const VALUE_KEYS: &[&str] = &[
+    "model", "epochs", "batch", "lr", "seed", "classes", "examples", "port", "machines",
+    "momentum", "server", "machine", "steps", "artifacts", "mode", "workers", "passes",
+];
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let cmd = argv[0].clone();
+    let args = Args::parse(argv.into_iter().skip(1), VALUE_KEYS)?;
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "server" => cmd_server(&args),
+        "worker" => cmd_worker(&args),
+        "transformer" => cmd_transformer(&args),
+        "memplan" => cmd_memplan(&args),
+        "sim" => cmd_sim(&args),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command '{other}' (try `mixnet help`)"))),
+    }
+}
+
+/// Build module + iterator for a zoo model over synthetic data.
+fn setup_training(
+    args: &Args,
+    engine: mixnet::engine::EngineRef,
+    shard_seed: u64,
+) -> Result<(Module, ArrayDataIter)> {
+    let model_name = args.get_str("model", "mlp");
+    let batch: usize = args.get("batch", 32)?;
+    let classes: usize = args.get("classes", 4)?;
+    let examples: usize = args.get("examples", 2048)?;
+    let seed: u64 = args.get("seed", 7)?;
+
+    let m = by_name(&model_name)?;
+    let feat: usize = m.feat_shape.iter().product();
+    let ds = if m.feat_shape.len() == 3 {
+        synth::images(
+            examples,
+            classes.min(m.num_classes),
+            m.feat_shape[0],
+            m.feat_shape[1],
+            m.feat_shape[2],
+            0.3,
+            shard_seed,
+        )
+    } else {
+        synth::class_clusters(examples, classes.min(m.num_classes), feat, 0.3, shard_seed)
+    };
+    let iter = ArrayDataIter::new(
+        ds.features,
+        ds.labels,
+        &m.feat_shape.clone(),
+        batch,
+        true,
+        engine.clone(),
+    );
+    let shapes = m.param_shapes(batch)?;
+    let feat_shape = m.feat_shape.clone();
+    let mut module = Module::new(m.symbol, engine);
+    module.bind(batch, &feat_shape, &shapes, BindConfig::default(), seed)?;
+    Ok((module, iter))
+}
+
+fn report(stats: &[mixnet::module::EpochStats]) {
+    println!("{:>5} {:>9} {:>9} {:>8} {:>8}", "epoch", "loss", "acc", "sec", "batches");
+    for s in stats {
+        println!(
+            "{:>5} {:>9.4} {:>9.3} {:>8.2} {:>8}",
+            s.epoch, s.loss, s.accuracy, s.seconds, s.batches
+        );
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let epochs: usize = args.get("epochs", 4)?;
+    let lr: f32 = args.get("lr", 0.2)?;
+    let engine = create(EngineKind::Threaded, default_threads());
+    let (mut module, mut iter) = setup_training(args, engine.clone(), 0x5eed)?;
+    let mode = if let Some(addr) = args.options.get("server") {
+        let addr: std::net::SocketAddr =
+            addr.parse().map_err(|_| Error::Config(format!("bad --server '{addr}'")))?;
+        let consistency =
+            if args.has("eventual") { Consistency::Eventual } else { Consistency::Sequential };
+        let machine: u32 = args.get("machine", 0)?;
+        let kv = DistKVStore::connect(addr, machine, 1, consistency, engine)?;
+        UpdateMode::KvStore { store: Arc::new(kv), device: 0 }
+    } else {
+        // local level-1 store with a registered SGD updater (§2.3)
+        let kv = LocalKVStore::new(
+            engine,
+            1,
+            Arc::new(Sgd::with_momentum(lr, 0.9, 1e-4)),
+            Consistency::Sequential,
+        );
+        UpdateMode::KvStore { store: Arc::new(kv), device: 0 }
+    };
+    let stats = module.fit(&mut iter, &mode, epochs)?;
+    report(&stats);
+    Ok(())
+}
+
+fn cmd_server(args: &Args) -> Result<()> {
+    let port: u16 = args.get("port", 9700)?;
+    let machines: usize = args.get("machines", 1)?;
+    let lr: f32 = args.get("lr", 0.2)?;
+    let momentum: f32 = args.get("momentum", 0.9)?;
+    let updater = ServerUpdater {
+        lr: lr / machines as f32,
+        momentum,
+        weight_decay: 1e-4,
+        rescale: 1.0,
+    };
+    let server = PsServer::start(port, machines, updater)?;
+    println!("level-2 parameter server on {} for {machines} machine(s)", server.addr());
+    println!("(ctrl-c to stop)");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args.get_str("server", "127.0.0.1:9700");
+    let addr: std::net::SocketAddr =
+        addr.parse().map_err(|_| Error::Config(format!("bad --server '{addr}'")))?;
+    let machine: u32 = args.get("machine", 0)?;
+    let epochs: usize = args.get("epochs", 4)?;
+    let engine = create(EngineKind::Threaded, default_threads());
+    let (mut module, mut iter) =
+        setup_training(args, engine.clone(), 0x5eed + machine as u64)?;
+    let consistency =
+        if args.has("eventual") { Consistency::Eventual } else { Consistency::Sequential };
+    let kv = Arc::new(DistKVStore::connect(addr, machine, 1, consistency, engine)?);
+    let stats = module.fit(
+        &mut iter,
+        &UpdateMode::KvStore { store: kv.clone(), device: 0 },
+        epochs,
+    )?;
+    kv.barrier()?;
+    report(&stats);
+    Ok(())
+}
+
+fn cmd_transformer(args: &Args) -> Result<()> {
+    // Thin wrapper over the example binary's logic: keep one source of
+    // truth by delegating to it.
+    let steps: usize = args.get("steps", 100)?;
+    let mode = args.get_str("mode", "sgd");
+    let workers: usize = args.get("workers", 2)?;
+    let exe = std::env::current_exe()?;
+    let example = exe
+        .parent()
+        .and_then(|p| Some(p.join("examples").join("train_transformer")))
+        .filter(|p| p.exists());
+    match example {
+        Some(path) => {
+            let status = std::process::Command::new(path)
+                .args([steps.to_string(), mode, workers.to_string()])
+                .status()?;
+            if !status.success() {
+                return Err(Error::Runtime("transformer driver failed".into()));
+            }
+            Ok(())
+        }
+        None => Err(Error::Config(
+            "build the driver first: cargo build --release --example train_transformer".into(),
+        )),
+    }
+}
+
+fn cmd_memplan(args: &Args) -> Result<()> {
+    let model = args.get_str("model", "inception-bn@64");
+    let batch: usize = args.get("batch", 64)?;
+    let m = by_name(&model)?;
+    let (mut graph, vs) = m.graph(batch)?;
+    let mut extra = vec![];
+    if args.has("training") {
+        let wrt: Vec<_> = graph
+            .variables()
+            .into_iter()
+            .filter(|&v| {
+                let n = &graph.nodes[v].name;
+                n != "data" && !n.ends_with("_label")
+            })
+            .collect();
+        let gi = mixnet::graph::autodiff::build_backward(&mut graph, &wrt)?;
+        extra = gi.var_grads.values().copied().collect();
+    }
+    let shapes = infer_shapes(&graph, &vs)?;
+    let external = default_external(&graph, &extra);
+    println!("{model} batch {batch}: {} nodes", graph.nodes.len());
+    for strategy in AllocStrategy::all() {
+        let plan = plan_memory(&graph, &shapes, &external, strategy);
+        println!("  {strategy:>8}: {:>8.1} MB internal", plan.bytes_mb());
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let machines: usize = args.get("machines", 10)?;
+    let passes: usize = args.get("passes", 12)?;
+    let m = by_name("inception-bn")?;
+    let (g, vs) = m.graph(1)?;
+    let shapes = infer_shapes(&g, &vs)?;
+    let flops = 3.0 * graph_flops(&g, &shapes);
+    let grad_bytes = m.num_params()? as f64 * 4.0;
+    let mut cfg = ClusterConfig::googlenet_paper(machines, flops, grad_bytes);
+    cfg.passes = passes;
+    println!(
+        "{:>5} {:>10} {:>12} {:>8} {:>10}",
+        "pass", "sec/pass", "cum sec", "acc", "staleness"
+    );
+    for s in simulate(&cfg) {
+        println!(
+            "{:>5} {:>10.0} {:>12.0} {:>8.3} {:>10.2}",
+            s.pass, s.seconds, s.cumulative_seconds, s.accuracy, s.staleness
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("mixnet {} — MXNet (2015) reproduction", env!("CARGO_PKG_VERSION"));
+    println!("engine: threaded, {} default workers", default_threads());
+    match mixnet::runtime::Runtime::cpu() {
+        Ok(rt) => println!("pjrt: {} backend available", rt.platform()),
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    println!("models: mlp, simple-cnn, alexnet, vgg-11, vgg-16, inception-bn (@HW scales input)");
+    Ok(())
+}

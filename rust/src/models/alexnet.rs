@@ -1,0 +1,74 @@
+//! AlexNet (one-tower variant, as in soumith/convnet-benchmarks) — one of
+//! the Figure 6/7 workloads.
+
+use super::Model;
+use crate::symbol::{Act, Pool, Symbol};
+
+/// AlexNet on `hw`x`hw` RGB input (224 reproduces the paper's setting;
+/// smaller values keep topology but shrink spatial extent for CPU-budget
+/// benches — DESIGN §4).
+///
+/// For small inputs the stride-4 stem and the three 3x2 pools need the
+/// spatial size to survive; `hw >= 32` is required.
+pub fn alexnet(num_classes: usize, hw: usize) -> Model {
+    assert!(hw >= 32, "alexnet needs input >= 32x32, got {hw}");
+    let out = Symbol::var("data")
+        .convolution("conv1", 64, 11, 4, 2)
+        .activation("relu1", Act::Relu)
+        .pooling("pool1", Pool::Max, 3, 2, 0)
+        .convolution("conv2", 192, 5, 1, 2)
+        .activation("relu2", Act::Relu)
+        .pooling("pool2", Pool::Max, 3, 2, 0)
+        .convolution("conv3", 384, 3, 1, 1)
+        .activation("relu3", Act::Relu)
+        .convolution("conv4", 256, 3, 1, 1)
+        .activation("relu4", Act::Relu)
+        .convolution("conv5", 256, 3, 1, 1)
+        .activation("relu5", Act::Relu)
+        .pooling("pool5", Pool::Max, 3, 2, 0)
+        .flatten("flat")
+        .fully_connected("fc6", 4096)
+        .activation("relu6", Act::Relu)
+        .dropout("drop6", 0.5)
+        .fully_connected("fc7", 4096)
+        .activation("relu7", Act::Relu)
+        .dropout("drop7", 0.5)
+        .fully_connected("fc8", num_classes)
+        .softmax_output("softmax");
+    Model {
+        name: format!("alexnet@{hw}"),
+        symbol: out,
+        feat_shape: vec![3, hw, hw],
+        num_classes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_224_classic_shapes() {
+        let m = alexnet(1000, 224);
+        let ps = m.param_shapes(32).unwrap();
+        assert_eq!(ps["conv1_weight"], vec![64, 3, 11, 11]);
+        assert_eq!(ps["conv2_weight"], vec![192, 64, 5, 5]);
+        // 224 -> conv/4 55 -> pool 27 -> pool 13 -> pool 6
+        assert_eq!(ps["fc6_weight"], vec![4096, 256 * 6 * 6]);
+        assert_eq!(ps["fc8_weight"], vec![1000, 4096]);
+    }
+
+    #[test]
+    fn alexnet_scales_down() {
+        let m = alexnet(10, 64);
+        let ps = m.param_shapes(4).unwrap();
+        assert_eq!(ps["conv1_weight"], vec![64, 3, 11, 11]);
+        assert!(ps["fc6_weight"][1] > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs input")]
+    fn alexnet_rejects_tiny_input() {
+        alexnet(10, 16);
+    }
+}

@@ -1,0 +1,123 @@
+//! Inception-BN — "googlenet with batch normalization", the network of
+//! the paper's Figure 8 scalability experiment (and a Figure 6/7
+//! workload).  Follows the classic MXNet `inception-bn` example: factory
+//! blocks of (1x1), (1x1 -> 3x3), (1x1 -> double 3x3) and (pool -> 1x1
+//! proj) branches concatenated along channels, with BN after every conv.
+
+use super::Model;
+use crate::symbol::{Act, Pool, Symbol};
+
+/// conv -> BN -> ReLU (the "ConvFactory" of the MXNet example).
+fn conv_bn(
+    x: &Symbol,
+    name: &str,
+    num_filter: usize,
+    kernel: usize,
+    stride: usize,
+    pad: usize,
+) -> Symbol {
+    x.convolution(&format!("{name}_conv"), num_filter, kernel, stride, pad)
+        .batch_norm(&format!("{name}_bn"))
+        .activation(&format!("{name}_relu"), Act::Relu)
+}
+
+/// Inception factory A: 1x1 | 1x1->3x3 | 1x1->3x3->3x3 | pool->1x1proj.
+#[allow(clippy::too_many_arguments)]
+fn inception_a(
+    x: &Symbol,
+    name: &str,
+    f1: usize,
+    f3r: usize,
+    f3: usize,
+    fd3r: usize,
+    fd3: usize,
+    proj: usize,
+    pool: Pool,
+) -> Symbol {
+    let b1 = conv_bn(x, &format!("{name}_1x1"), f1, 1, 1, 0);
+    let b3 = conv_bn(x, &format!("{name}_3x3r"), f3r, 1, 1, 0);
+    let b3 = conv_bn(&b3, &format!("{name}_3x3"), f3, 3, 1, 1);
+    let bd = conv_bn(x, &format!("{name}_d3x3r"), fd3r, 1, 1, 0);
+    let bd = conv_bn(&bd, &format!("{name}_d3x3a"), fd3, 3, 1, 1);
+    let bd = conv_bn(&bd, &format!("{name}_d3x3b"), fd3, 3, 1, 1);
+    let bp = x.pooling(&format!("{name}_pool"), pool, 3, 1, 1);
+    let bp = conv_bn(&bp, &format!("{name}_proj"), proj, 1, 1, 0);
+    Symbol::concat(&format!("{name}_concat"), &[b1, b3, bd, bp])
+}
+
+/// Inception factory B (downsample): 1x1->3x3/2 | 1x1->3x3->3x3/2 | pool/2.
+fn inception_b(x: &Symbol, name: &str, f3r: usize, f3: usize, fd3r: usize, fd3: usize) -> Symbol {
+    let b3 = conv_bn(x, &format!("{name}_3x3r"), f3r, 1, 1, 0);
+    let b3 = conv_bn(&b3, &format!("{name}_3x3"), f3, 3, 2, 1);
+    let bd = conv_bn(x, &format!("{name}_d3x3r"), fd3r, 1, 1, 0);
+    let bd = conv_bn(&bd, &format!("{name}_d3x3a"), fd3, 3, 1, 1);
+    let bd = conv_bn(&bd, &format!("{name}_d3x3b"), fd3, 3, 2, 1);
+    let bp = x.pooling(&format!("{name}_pool"), Pool::Max, 3, 2, 1);
+    Symbol::concat(&format!("{name}_concat"), &[b3, bd, bp])
+}
+
+/// Inception-BN on `hw`x`hw` RGB input (224 reproduces the paper; the
+/// global average pool adapts to the final spatial extent).  `hw` must be
+/// divisible by 32.
+pub fn inception_bn(num_classes: usize, hw: usize) -> Model {
+    assert!(hw >= 32 && hw % 32 == 0, "inception-bn needs input divisible by 32, got {hw}");
+    let data = Symbol::var("data");
+    // stem: 7x7/2 -> pool/2 -> 1x1 -> 3x3 -> pool/2
+    let x = conv_bn(&data, "stem1", 64, 7, 2, 3);
+    let x = x.pooling("stem_pool1", Pool::Max, 3, 2, 1);
+    let x = conv_bn(&x, "stem2r", 64, 1, 1, 0);
+    let x = conv_bn(&x, "stem2", 192, 3, 1, 1);
+    let x = x.pooling("stem_pool2", Pool::Max, 3, 2, 1);
+    // 3a, 3b, 3c
+    let x = inception_a(&x, "in3a", 64, 64, 64, 64, 96, 32, Pool::Avg);
+    let x = inception_a(&x, "in3b", 64, 64, 96, 64, 96, 64, Pool::Avg);
+    let x = inception_b(&x, "in3c", 128, 160, 64, 96);
+    // 4a..4e
+    let x = inception_a(&x, "in4a", 224, 64, 96, 96, 128, 128, Pool::Avg);
+    let x = inception_a(&x, "in4b", 192, 96, 128, 96, 128, 128, Pool::Avg);
+    let x = inception_a(&x, "in4c", 160, 128, 160, 128, 160, 128, Pool::Avg);
+    let x = inception_a(&x, "in4d", 96, 128, 192, 160, 192, 128, Pool::Avg);
+    let x = inception_b(&x, "in4e", 128, 192, 192, 256);
+    // 5a, 5b
+    let x = inception_a(&x, "in5a", 352, 192, 320, 160, 224, 128, Pool::Avg);
+    let x = inception_a(&x, "in5b", 352, 192, 320, 192, 224, 128, Pool::Max);
+    // global average pool over the remaining extent (7 at hw=224)
+    let final_hw = hw / 32;
+    let x = x.pooling("global_pool", Pool::Avg, final_hw, 1, 0);
+    let out = x
+        .flatten("flat")
+        .fully_connected("fc1", num_classes)
+        .softmax_output("softmax");
+    Model {
+        name: format!("inception-bn@{hw}"),
+        symbol: out,
+        feat_shape: vec![3, hw, hw],
+        num_classes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inception_bn_224_shapes() {
+        let m = inception_bn(1000, 224);
+        let ps = m.param_shapes(4).unwrap();
+        assert_eq!(ps["stem1_conv_weight"], vec![64, 3, 7, 7]);
+        // in5b concat = 352 + 320 + 224 + 128 = 1024 channels
+        assert_eq!(ps["fc1_weight"], vec![1000, 1024]);
+        // BN params exist for every conv
+        assert!(ps.contains_key("in4c_3x3_bn_gamma"));
+    }
+
+    #[test]
+    fn inception_channel_arithmetic() {
+        // 3a: 64 + 64 + 96 + 32 = 256; 3b consumes 256.
+        let m = inception_bn(10, 32);
+        let ps = m.param_shapes(2).unwrap();
+        assert_eq!(ps["in3b_1x1_conv_weight"][1], 256);
+        // 3b: 64 + 96 + 96 + 64 = 320; 3c branches consume 320.
+        assert_eq!(ps["in3c_3x3r_conv_weight"][1], 320);
+    }
+}

@@ -1,0 +1,76 @@
+//! The paper's Figure 2 multi-layer perceptron and a small CNN used by
+//! the convergence experiments (E3's scaled GoogLeNet stand-in).
+
+use super::Model;
+use crate::symbol::{Act, Pool, Symbol};
+
+/// Multi-layer perceptron: `data -> [FC -> ReLU]* -> FC -> Softmax`
+/// (the paper's Figure 2, generalized to arbitrary hidden widths).
+pub fn mlp(hidden: &[usize], in_dim: usize, num_classes: usize) -> Model {
+    let mut x = Symbol::var("data");
+    for (i, &h) in hidden.iter().enumerate() {
+        x = x
+            .fully_connected(&format!("fc{}", i + 1), h)
+            .activation(&format!("relu{}", i + 1), Act::Relu);
+    }
+    let out = x
+        .fully_connected(&format!("fc{}", hidden.len() + 1), num_classes)
+        .softmax_output("softmax");
+    Model {
+        name: "mlp".into(),
+        symbol: out,
+        feat_shape: vec![in_dim],
+        num_classes,
+    }
+}
+
+/// Small LeNet-style CNN on `hw`x`hw` single-channel input: the
+/// convergence-experiment workhorse (full GoogLeNet fwd+bwd does not fit
+/// a single-core budget; DESIGN §4 documents the substitution).
+pub fn simple_cnn(num_classes: usize, hw: usize) -> Model {
+    let out = Symbol::var("data")
+        .convolution("conv1", 8, 3, 1, 1)
+        .batch_norm("bn1")
+        .activation("relu1", Act::Relu)
+        .pooling("pool1", Pool::Max, 2, 2, 0)
+        .convolution("conv2", 16, 3, 1, 1)
+        .activation("relu2", Act::Relu)
+        .pooling("pool2", Pool::Max, 2, 2, 0)
+        .flatten("flat")
+        .fully_connected("fc1", 64)
+        .activation("relu3", Act::Relu)
+        .fully_connected("fc2", num_classes)
+        .softmax_output("softmax");
+    Model {
+        name: "simple-cnn".into(),
+        symbol: out,
+        feat_shape: vec![1, hw, hw],
+        num_classes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_param_shapes_solved() {
+        let m = mlp(&[128, 64], 784, 10);
+        let ps = m.param_shapes(32).unwrap();
+        assert_eq!(ps["fc1_weight"], vec![128, 784]);
+        assert_eq!(ps["fc2_weight"], vec![64, 128]);
+        assert_eq!(ps["fc3_weight"], vec![10, 64]);
+        assert_eq!(ps["fc3_bias"], vec![10]);
+        assert!(!ps.contains_key("softmax_label"));
+    }
+
+    #[test]
+    fn simple_cnn_shapes() {
+        let m = simple_cnn(10, 28);
+        let ps = m.param_shapes(8).unwrap();
+        assert_eq!(ps["conv1_weight"], vec![8, 1, 3, 3]);
+        assert_eq!(ps["bn1_gamma"], vec![8]);
+        // 28 -> pool 14 -> pool 7; 16 channels
+        assert_eq!(ps["fc1_weight"], vec![64, 16 * 7 * 7]);
+    }
+}

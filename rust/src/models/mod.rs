@@ -1,0 +1,336 @@
+//! The model zoo (DESIGN S14): graph-structure definitions of the
+//! networks the paper's evaluation uses — the Figure 2 MLP, AlexNet,
+//! VGG and Inception-BN (the "googlenet with batch normalization" of
+//! Figure 8) — plus a small CNN used by the convergence experiments.
+//!
+//! Models are plain [`Symbol`] builders; [`Model::param_shapes`] infers
+//! every parameter's shape from the data shape the same way MXNet's
+//! `infer_shape` does, so callers never hand-write weight dimensions.
+
+pub mod alexnet;
+pub mod inception;
+pub mod mlp;
+pub mod vgg;
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::graph::{Graph, Op};
+use crate::ndarray::kernels::conv_out;
+use crate::symbol::Symbol;
+
+pub use alexnet::alexnet;
+pub use inception::inception_bn;
+pub use mlp::{mlp, simple_cnn};
+pub use vgg::{vgg, VggDepth};
+
+/// A network architecture: its symbol plus the per-example input shape it
+/// expects (`feat_shape`, without the batch axis).
+pub struct Model {
+    /// Human-readable name ("alexnet", "vgg-11", ...).
+    pub name: String,
+    /// The declarative network with a `SoftmaxOutput` head.
+    pub symbol: Symbol,
+    /// Per-example feature shape, e.g. `[3, 224, 224]`.
+    pub feat_shape: Vec<usize>,
+    /// Output classes.
+    pub num_classes: usize,
+}
+
+impl Model {
+    /// Infer the shape of every parameter variable for batch size
+    /// `batch` (MXNet's `infer_shape`).  Excludes `data` and `*_label`.
+    pub fn param_shapes(&self, batch: usize) -> Result<HashMap<String, Vec<usize>>> {
+        let graph = Symbol::to_graph(std::slice::from_ref(&self.symbol));
+        let mut data_shape = vec![batch];
+        data_shape.extend_from_slice(&self.feat_shape);
+        let all = infer_param_shapes(&graph, &data_shape)?;
+        Ok(all
+            .into_iter()
+            .filter(|(k, _)| k != "data" && !k.ends_with("_label"))
+            .collect())
+    }
+
+    /// All variable shapes (including `data` and the label) for `batch`.
+    pub fn var_shapes(&self, batch: usize) -> Result<HashMap<String, Vec<usize>>> {
+        let graph = Symbol::to_graph(std::slice::from_ref(&self.symbol));
+        let mut data_shape = vec![batch];
+        data_shape.extend_from_slice(&self.feat_shape);
+        infer_param_shapes(&graph, &data_shape)
+    }
+
+    /// The forward graph plus a complete variable-shape map for `batch`
+    /// (what the memory-planner benches consume).
+    pub fn graph(&self, batch: usize) -> Result<(Graph, HashMap<String, Vec<usize>>)> {
+        let graph = Symbol::to_graph(std::slice::from_ref(&self.symbol));
+        let shapes = self.var_shapes(batch)?;
+        Ok((graph, shapes))
+    }
+
+    /// Total parameter count for `batch`-independent variables.
+    pub fn num_params(&self) -> Result<usize> {
+        Ok(self
+            .param_shapes(1)?
+            .values()
+            .map(|s| s.iter().product::<usize>())
+            .sum())
+    }
+}
+
+/// Look up a model by name (used by the CLI and benches).
+///
+/// Known names: `mlp`, `alexnet`, `vgg-11`, `vgg-16`, `inception-bn`,
+/// `simple-cnn`.  An optional `@HxW` suffix scales the spatial input
+/// (e.g. `alexnet@64` builds AlexNet topology on 64x64 input) — the
+/// substitution knob the benches use to fit CPU budgets.
+pub fn by_name(spec: &str) -> Result<Model> {
+    let (name, hw) = match spec.split_once('@') {
+        Some((n, s)) => {
+            let hw: usize = s
+                .parse()
+                .map_err(|_| Error::Bind(format!("bad model spec '{spec}'")))?;
+            (n, Some(hw))
+        }
+        None => (spec, None),
+    };
+    match name {
+        "mlp" => Ok(mlp(&[128, 64], 784, 10)),
+        "alexnet" => Ok(alexnet(1000, hw.unwrap_or(224))),
+        "vgg-11" => Ok(vgg(VggDepth::Vgg11, 1000, hw.unwrap_or(224))),
+        "vgg-16" => Ok(vgg(VggDepth::Vgg16, 1000, hw.unwrap_or(224))),
+        "inception-bn" => Ok(inception_bn(1000, hw.unwrap_or(224))),
+        "simple-cnn" => Ok(simple_cnn(10, hw.unwrap_or(28))),
+        other => Err(Error::Bind(format!("unknown model '{other}'"))),
+    }
+}
+
+/// Infer all variable shapes of a *forward* graph given only the data
+/// shape.  Parameter variables (weights, biases, gammas, labels, ...) are
+/// solved from the layer attributes as the walk reaches their consumer —
+/// the forward half of MXNet's bidirectional `infer_shape`.
+pub fn infer_param_shapes(
+    graph: &Graph,
+    data_shape: &[usize],
+) -> Result<HashMap<String, Vec<usize>>> {
+    // shapes[node] = per-output dims, filled in topological order.
+    let mut shapes: Vec<Vec<Vec<usize>>> = vec![vec![]; graph.nodes.len()];
+    let mut vars: HashMap<String, Vec<usize>> = HashMap::new();
+    vars.insert("data".to_string(), data_shape.to_vec());
+
+    // Variables get their shape assigned by their consumer; remember node
+    // id -> name so the consumer can write through.
+    let err = |id: usize, msg: String| {
+        Error::shape(format!("infer_param_shapes node {id} ({}): {msg}", graph.nodes[id].name))
+    };
+
+    fn get_shape(
+        graph: &Graph,
+        shapes: &[Vec<Vec<usize>>],
+        e: &crate::graph::Entry,
+    ) -> Result<Vec<usize>> {
+        let s = &shapes[e.node][..];
+        if e.out >= s.len() || s[e.out].is_empty() {
+            return Err(Error::shape(format!(
+                "shape of '{}' output {} needed before it is known",
+                graph.nodes[e.node].name, e.out
+            )));
+        }
+        Ok(s[e.out].clone())
+    }
+
+    for (id, node) in graph.nodes.iter().enumerate() {
+        macro_rules! get {
+            ($e:expr) => {
+                get_shape(graph, &shapes, $e)
+            };
+        }
+        // Assign a variable-input's shape (must match if already set).
+        macro_rules! set_var {
+            ($entry:expr, $shape:expr) => {{
+                let e = $entry;
+                let shape: Vec<usize> = $shape;
+                let vnode = &graph.nodes[e.node];
+                if !vnode.op.is_variable() {
+                    let got = get!(&e)?;
+                    if got != shape {
+                        return Err(err(id, format!(
+                            "input '{}' has shape {got:?}, expected {shape:?}",
+                            vnode.name
+                        )));
+                    }
+                } else {
+                    match vars.get(&vnode.name) {
+                        Some(prev) if *prev != shape => {
+                            return Err(err(id, format!(
+                                "variable '{}' inferred as {shape:?} but already {prev:?}",
+                                vnode.name
+                            )));
+                        }
+                        _ => {
+                            vars.insert(vnode.name.clone(), shape.clone());
+                        }
+                    }
+                    shapes[e.node] = vec![shape];
+                }
+            }};
+        }
+
+        let out: Vec<Vec<usize>> = match &node.op {
+            Op::Variable => {
+                match vars.get(&node.name) {
+                    Some(s) => vec![s.clone()],
+                    None => vec![], // solved later by a consumer (set_var!)
+                }
+            }
+            Op::FullyConnected { num_hidden } => {
+                let x = get!(&node.inputs[0])?;
+                let in_dim: usize = x[1..].iter().product();
+                set_var!(node.inputs[1], vec![*num_hidden, in_dim]);
+                set_var!(node.inputs[2], vec![*num_hidden]);
+                vec![vec![x[0], *num_hidden]]
+            }
+            Op::Convolution { num_filter, kernel, stride, pad } => {
+                let x = get!(&node.inputs[0])?;
+                if x.len() != 4 {
+                    return Err(err(id, format!("conv input must be NCHW, got {x:?}")));
+                }
+                set_var!(node.inputs[1], vec![*num_filter, x[1], *kernel, *kernel]);
+                set_var!(node.inputs[2], vec![*num_filter]);
+                let oh = conv_out(x[2], *kernel, *stride, *pad);
+                let ow = conv_out(x[3], *kernel, *stride, *pad);
+                if oh == 0 || ow == 0 {
+                    return Err(err(id, format!("conv output collapses to zero from {x:?}")));
+                }
+                vec![vec![x[0], *num_filter, oh, ow]]
+            }
+            Op::BatchNorm { .. } => {
+                let x = get!(&node.inputs[0])?;
+                let c = if x.len() >= 2 { x[1] } else { x[0] };
+                set_var!(node.inputs[1], vec![c]);
+                set_var!(node.inputs[2], vec![c]);
+                vec![x.clone(), vec![c], vec![c]]
+            }
+            Op::SoftmaxOutput => {
+                let x = get!(&node.inputs[0])?;
+                set_var!(node.inputs[1], vec![x[0]]);
+                vec![x]
+            }
+            Op::Activation { .. }
+            | Op::AddScalar { .. }
+            | Op::MulScalar { .. }
+            | Op::Identity => vec![get!(&node.inputs[0])?],
+            Op::Pooling { kernel, stride, pad, .. } => {
+                let x = get!(&node.inputs[0])?;
+                if x.len() != 4 {
+                    return Err(err(id, format!("pool input must be NCHW, got {x:?}")));
+                }
+                let o = vec![
+                    x[0],
+                    x[1],
+                    conv_out(x[2], *kernel, *stride, *pad),
+                    conv_out(x[3], *kernel, *stride, *pad),
+                ];
+                vec![o.clone(), o]
+            }
+            Op::Flatten => {
+                let x = get!(&node.inputs[0])?;
+                vec![vec![x[0], x[1..].iter().product()]]
+            }
+            Op::Dropout { .. } => {
+                let x = get!(&node.inputs[0])?;
+                vec![x.clone(), x]
+            }
+            Op::Elemwise { .. } | Op::AddN => vec![get!(&node.inputs[0])?],
+            Op::Concat => {
+                let first = get!(&node.inputs[0])?;
+                let mut ch = first[1];
+                for e in &node.inputs[1..] {
+                    ch += get!(e)?[1];
+                }
+                let mut o = first;
+                o[1] = ch;
+                vec![o]
+            }
+            other => {
+                return Err(err(id, format!(
+                    "unsupported op {:?} in forward model graph",
+                    other.type_name()
+                )));
+            }
+        };
+        if !node.op.is_variable() || !out.is_empty() {
+            shapes[id] = out;
+        }
+    }
+
+    // Any variable never reached by a consumer is unresolvable.
+    for vid in graph.variables() {
+        let name = &graph.nodes[vid].name;
+        if !vars.contains_key(name) {
+            return Err(Error::shape(format!(
+                "variable '{name}' not solvable from data shape"
+            )));
+        }
+    }
+    Ok(vars)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::infer_shapes;
+
+    /// Every zoo model must (a) solve all parameter shapes from the data
+    /// shape alone and (b) agree with the strict `infer_shapes` pass.
+    #[test]
+    fn zoo_models_shape_check() {
+        for spec in ["mlp", "alexnet", "vgg-11", "vgg-16", "inception-bn", "simple-cnn"] {
+            let m = by_name(spec).unwrap();
+            let (g, vs) = m.graph(4).unwrap();
+            g.validate().unwrap();
+            let shapes = infer_shapes(&g, &vs)
+                .unwrap_or_else(|e| panic!("{spec}: {e}"));
+            let out = g.outputs[0];
+            assert_eq!(
+                shapes[out.node][out.out],
+                vec![4, m.num_classes],
+                "{spec} head shape"
+            );
+        }
+    }
+
+    #[test]
+    fn param_counts_in_expected_range() {
+        // Sanity: published parameter counts (fc-dominated nets match
+        // loosely since we keep the classic layouts).
+        let alex = by_name("alexnet").unwrap().num_params().unwrap();
+        assert!((50_000_000..70_000_000).contains(&alex), "alexnet {alex}");
+        let vgg11 = by_name("vgg-11").unwrap().num_params().unwrap();
+        assert!((120_000_000..140_000_000).contains(&vgg11), "vgg11 {vgg11}");
+        let inc = by_name("inception-bn").unwrap().num_params().unwrap();
+        assert!((10_000_000..20_000_000).contains(&inc), "inception {inc}");
+    }
+
+    #[test]
+    fn scaled_input_spec() {
+        let m = by_name("alexnet@64").unwrap();
+        assert_eq!(m.feat_shape, vec![3, 64, 64]);
+        m.param_shapes(2).unwrap();
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        assert!(by_name("resnet-9000").is_err());
+        assert!(by_name("alexnet@notanum").is_err());
+    }
+
+    #[test]
+    fn unsolvable_variable_detected() {
+        // A variable consumed only by Elemwise can't be solved.
+        let a = Symbol::var("data");
+        let b = Symbol::var("mystery");
+        let c = &a + &b;
+        let g = Symbol::to_graph(&[c]);
+        assert!(infer_param_shapes(&g, &[4, 4]).is_err());
+    }
+}

@@ -1,0 +1,90 @@
+//! VGG (configurations A/11 and D/16) — the paper singles VGG out in
+//! Figure 7 ("even for the most expensive VGG net, training needs less
+//! than 16MB extra").
+
+use super::Model;
+use crate::symbol::{Act, Pool, Symbol};
+
+/// Which VGG configuration to build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VggDepth {
+    /// Configuration A (8 conv + 3 fc).
+    Vgg11,
+    /// Configuration D (13 conv + 3 fc).
+    Vgg16,
+}
+
+/// Per-stage conv counts for each configuration (stages are separated by
+/// 2x2 max-pools; filter widths double per stage: 64..512).
+fn stages(depth: VggDepth) -> [usize; 5] {
+    match depth {
+        VggDepth::Vgg11 => [1, 1, 2, 2, 2],
+        VggDepth::Vgg16 => [2, 2, 3, 3, 3],
+    }
+}
+
+/// VGG on `hw`x`hw` RGB input.  `hw` must be divisible by 32 (five 2x
+/// pools); 224 reproduces the paper's setting.
+pub fn vgg(depth: VggDepth, num_classes: usize, hw: usize) -> Model {
+    assert!(hw >= 32 && hw % 32 == 0, "vgg needs input divisible by 32, got {hw}");
+    let widths = [64usize, 128, 256, 512, 512];
+    let mut x = Symbol::var("data");
+    for (stage, (&n_convs, &width)) in stages(depth).iter().zip(&widths).enumerate() {
+        for c in 0..n_convs {
+            let name = format!("conv{}_{}", stage + 1, c + 1);
+            x = x
+                .convolution(&name, width, 3, 1, 1)
+                .activation(&format!("relu{}_{}", stage + 1, c + 1), Act::Relu);
+        }
+        x = x.pooling(&format!("pool{}", stage + 1), Pool::Max, 2, 2, 0);
+    }
+    let out = x
+        .flatten("flat")
+        .fully_connected("fc6", 4096)
+        .activation("relu6", Act::Relu)
+        .dropout("drop6", 0.5)
+        .fully_connected("fc7", 4096)
+        .activation("relu7", Act::Relu)
+        .dropout("drop7", 0.5)
+        .fully_connected("fc8", num_classes)
+        .softmax_output("softmax");
+    let name = match depth {
+        VggDepth::Vgg11 => "vgg-11",
+        VggDepth::Vgg16 => "vgg-16",
+    };
+    Model {
+        name: format!("{name}@{hw}"),
+        symbol: out,
+        feat_shape: vec![3, hw, hw],
+        num_classes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg11_classic_shapes() {
+        let m = vgg(VggDepth::Vgg11, 1000, 224);
+        let ps = m.param_shapes(64).unwrap();
+        assert_eq!(ps["conv1_1_weight"], vec![64, 3, 3, 3]);
+        assert_eq!(ps["conv5_2_weight"], vec![512, 512, 3, 3]);
+        // 224 / 2^5 = 7
+        assert_eq!(ps["fc6_weight"], vec![4096, 512 * 7 * 7]);
+    }
+
+    #[test]
+    fn vgg16_has_13_convs() {
+        let m = vgg(VggDepth::Vgg16, 1000, 224);
+        let ps = m.param_shapes(2).unwrap();
+        let convs = ps.keys().filter(|k| k.starts_with("conv") && k.ends_with("_weight")).count();
+        assert_eq!(convs, 13);
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible by 32")]
+    fn vgg_rejects_odd_input() {
+        vgg(VggDepth::Vgg11, 10, 100);
+    }
+}

@@ -1,0 +1,948 @@
+//! Raw f32 math kernels on slices.
+//!
+//! These are the CPU "big operations" (paper §3.1: *"we manually
+//! implemented well-optimized big operations, such as a layer in neural
+//! network"*).  Both the imperative [`NDArray`](super::NDArray) methods and
+//! the graph executor's native operator backend dispatch here, so the two
+//! programming paradigms share one set of kernels — exactly the unified-
+//! backend story of the paper.
+//!
+//! Layout conventions: matrices are row-major `[rows, cols]`; images are
+//! NCHW.  All kernels are single-threaded; parallelism comes from the
+//! dependency engine scheduling independent kernels concurrently.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// When set, the GEMM family runs a deliberately *unoptimized* inner loop
+/// (j-i-p order, strided, not vectorizable) — the stand-in for a
+/// previous-generation kernel library (the paper's Figure 6 attributes
+/// TensorFlow's 2x gap to CUDNN v2 vs v3).  See `cargo bench --bench
+/// fig6_convnet`, mode `tf-old`.
+static REFERENCE_MODE: AtomicBool = AtomicBool::new(false);
+
+/// Switch the GEMM family between the optimized and the reference (slow)
+/// implementations.  Affects the whole process; benches only.
+pub fn set_reference_kernels(on: bool) {
+    REFERENCE_MODE.store(on, Ordering::SeqCst);
+}
+
+/// Whether reference (slow) kernels are active.
+pub fn reference_kernels() -> bool {
+    REFERENCE_MODE.load(Ordering::SeqCst)
+}
+
+/// Naive j-i-p GEMM used in reference mode: column-at-a-time with strided
+/// b access — roughly the memory-access pattern cost of an old kernel
+/// generation.  `ta`/`tb` transpose a/b.
+#[inline(never)]
+fn gemm_reference(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    beta: f32,
+    ta: bool,
+    tb: bool,
+) {
+    let ai = |i: usize, p: usize| if ta { a[p * m + i] } else { a[i * k + p] };
+    let bi = |p: usize, j: usize| if tb { b[j * k + p] } else { b[p * n + j] };
+    for j in 0..n {
+        for i in 0..m {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += ai(i, p) * bi(p, j);
+            }
+            let dst = &mut c[i * n + j];
+            *dst = if beta == 0.0 { acc } else { *dst * beta + acc };
+        }
+    }
+}
+
+/// `c = a @ b` where a is `[m,k]`, b is `[k,n]`, c is `[m,n]`.
+/// `beta == 0.0` overwrites c, `beta == 1.0` accumulates.
+pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, beta: f32) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if reference_kernels() {
+        return gemm_reference(a, b, c, m, k, n, beta, false, false);
+    }
+    if beta == 0.0 {
+        c.fill(0.0);
+    } else if beta != 1.0 {
+        for x in c.iter_mut() {
+            *x *= beta;
+        }
+    }
+    // i-k-j loop order: the inner j-loop is a saxpy over contiguous rows of
+    // b and c, which LLVM auto-vectorizes.
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let aip = a[i * k + p];
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += aip * brow[j];
+            }
+        }
+    }
+}
+
+/// Vectorizable dot product: 8 independent accumulator lanes so LLVM can
+/// keep SIMD FMAs in flight without a loop-carried dependence.
+#[inline]
+fn vdot(a: &[f32], b: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for c in 0..chunks {
+        let x = &a[c * 8..c * 8 + 8];
+        let y = &b[c * 8..c * 8 + 8];
+        for l in 0..8 {
+            lanes[l] += x[l] * y[l];
+        }
+    }
+    let mut acc = lanes.iter().sum::<f32>();
+    for p in chunks * 8..a.len() {
+        acc += a[p] * b[p];
+    }
+    acc
+}
+
+/// `c = a @ b^T` where a is `[m,k]`, b is `[n,k]`, c is `[m,n]`.
+///
+/// This is the FullyConnected-forward shape (weights stored `[out, in]`),
+/// i.e. the hottest kernel in training; both operands are traversed
+/// contiguously and the inner dot is lane-parallel (see §Perf).
+pub fn gemm_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, beta: f32) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    if reference_kernels() {
+        return gemm_reference(a, b, c, m, k, n, beta, false, true);
+    }
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let acc = vdot(arow, brow);
+            let dst = &mut c[i * n + j];
+            *dst = if beta == 0.0 { acc } else { *dst * beta + acc };
+        }
+    }
+}
+
+/// `c = a^T @ b` where a is `[k,m]`, b is `[k,n]`, c is `[m,n]`.
+pub fn gemm_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, beta: f32) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if reference_kernels() {
+        return gemm_reference(a, b, c, m, k, n, beta, true, false);
+    }
+    if beta == 0.0 {
+        c.fill(0.0);
+    } else if beta != 1.0 {
+        for x in c.iter_mut() {
+            *x *= beta;
+        }
+    }
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for i in 0..m {
+            let aip = arow[i];
+            if aip == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aip * brow[j];
+            }
+        }
+    }
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = alpha * x + beta * y` (general scaled update).
+pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = alpha * xi + beta * *yi;
+    }
+}
+
+/// Elementwise binary op.
+pub fn ew_binary(op: EwBinary, a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    match op {
+        EwBinary::Add => {
+            for i in 0..a.len() {
+                out[i] = a[i] + b[i];
+            }
+        }
+        EwBinary::Sub => {
+            for i in 0..a.len() {
+                out[i] = a[i] - b[i];
+            }
+        }
+        EwBinary::Mul => {
+            for i in 0..a.len() {
+                out[i] = a[i] * b[i];
+            }
+        }
+        EwBinary::Div => {
+            for i in 0..a.len() {
+                out[i] = a[i] / b[i];
+            }
+        }
+    }
+}
+
+/// Elementwise binary operator selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EwBinary {
+    /// `a + b`
+    Add,
+    /// `a - b`
+    Sub,
+    /// `a * b`
+    Mul,
+    /// `a / b`
+    Div,
+}
+
+/// Activation function selector (paper's `Activation(act_type=...)`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActKind {
+    /// max(0, x)
+    Relu,
+    /// tanh(x)
+    Tanh,
+    /// 1/(1+exp(-x))
+    Sigmoid,
+}
+
+/// Forward activation.
+pub fn act_forward(kind: ActKind, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    match kind {
+        ActKind::Relu => {
+            for i in 0..x.len() {
+                y[i] = x[i].max(0.0);
+            }
+        }
+        ActKind::Tanh => {
+            for i in 0..x.len() {
+                y[i] = x[i].tanh();
+            }
+        }
+        ActKind::Sigmoid => {
+            for i in 0..x.len() {
+                y[i] = 1.0 / (1.0 + (-x[i]).exp());
+            }
+        }
+    }
+}
+
+/// Backward activation: `dx = dy * f'(x)` computed from the *output* `y`
+/// (all three supported activations allow this, which lets the forward
+/// input be freed / reused inplace — important for the memory planner).
+pub fn act_backward(kind: ActKind, dy: &[f32], y: &[f32], dx: &mut [f32]) {
+    debug_assert_eq!(dy.len(), y.len());
+    debug_assert_eq!(dy.len(), dx.len());
+    match kind {
+        ActKind::Relu => {
+            for i in 0..dy.len() {
+                dx[i] = if y[i] > 0.0 { dy[i] } else { 0.0 };
+            }
+        }
+        ActKind::Tanh => {
+            for i in 0..dy.len() {
+                dx[i] = dy[i] * (1.0 - y[i] * y[i]);
+            }
+        }
+        ActKind::Sigmoid => {
+            for i in 0..dy.len() {
+                dx[i] = dy[i] * y[i] * (1.0 - y[i]);
+            }
+        }
+    }
+}
+
+/// Broadcast-add a bias vector of length `n` to each row of `[m,n]`.
+pub fn bias_add(x: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    debug_assert_eq!(x.len(), m * n);
+    debug_assert_eq!(bias.len(), n);
+    for i in 0..m {
+        let row = &mut x[i * n..(i + 1) * n];
+        for j in 0..n {
+            row[j] += bias[j];
+        }
+    }
+}
+
+/// Gradient of bias: column sums of `[m,n]` into `dbias[n]`.
+pub fn bias_grad(dy: &[f32], dbias: &mut [f32], m: usize, n: usize, beta: f32) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(dbias.len(), n);
+    if beta == 0.0 {
+        dbias.fill(0.0);
+    }
+    for i in 0..m {
+        let row = &dy[i * n..(i + 1) * n];
+        for j in 0..n {
+            dbias[j] += row[j];
+        }
+    }
+}
+
+/// Row-wise softmax over `[m,n]`.
+pub fn softmax_rows(x: &[f32], y: &mut [f32], m: usize, n: usize) {
+    debug_assert_eq!(x.len(), m * n);
+    debug_assert_eq!(y.len(), m * n);
+    for i in 0..m {
+        let xr = &x[i * n..(i + 1) * n];
+        let yr = &mut y[i * n..(i + 1) * n];
+        let mx = xr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for j in 0..n {
+            let e = (xr[j] - mx).exp();
+            yr[j] = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for v in yr.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Mean cross-entropy loss given row-softmax probabilities and integer
+/// labels; returns the scalar loss.
+pub fn xent_loss(probs: &[f32], labels: &[f32], m: usize, n: usize) -> f32 {
+    let mut loss = 0.0;
+    for i in 0..m {
+        let t = labels[i] as usize;
+        debug_assert!(t < n);
+        loss -= probs[i * n + t].max(1e-12).ln();
+    }
+    loss / m as f32
+}
+
+/// Gradient of softmax + cross-entropy w.r.t. logits: `(p - onehot)/m`.
+pub fn softmax_xent_backward(probs: &[f32], labels: &[f32], dx: &mut [f32], m: usize, n: usize) {
+    debug_assert_eq!(probs.len(), m * n);
+    debug_assert_eq!(dx.len(), m * n);
+    let scale = 1.0 / m as f32;
+    for i in 0..m {
+        let t = labels[i] as usize;
+        for j in 0..n {
+            let p = probs[i * n + j];
+            dx[i * n + j] = scale * (p - if j == t { 1.0 } else { 0.0 });
+        }
+    }
+}
+
+/// Convolution geometry helper: output spatial size.
+#[inline]
+pub fn conv_out(size: usize, kernel: usize, stride: usize, pad: usize) -> usize {
+    (size + 2 * pad - kernel) / stride + 1
+}
+
+/// im2col for NCHW input, one image: input `[c, h, w]` -> columns
+/// `[c*kh*kw, oh*ow]`.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    img: &[f32],
+    col: &mut [f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) {
+    let oh = conv_out(h, kh, stride, pad);
+    let ow = conv_out(w, kw, stride, pad);
+    debug_assert_eq!(img.len(), c * h * w);
+    debug_assert_eq!(col.len(), c * kh * kw * oh * ow);
+    let mut row = 0usize;
+    for ch in 0..c {
+        let plane = &img[ch * h * w..(ch + 1) * h * w];
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let dst = &mut col[row * oh * ow..(row + 1) * oh * ow];
+                let mut idx = 0usize;
+                for oy in 0..oh {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        dst[idx..idx + ow].fill(0.0);
+                        idx += ow;
+                        continue;
+                    }
+                    let src_row = &plane[iy as usize * w..(iy as usize + 1) * w];
+                    for ox in 0..ow {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        dst[idx] = if ix < 0 || ix >= w as isize {
+                            0.0
+                        } else {
+                            src_row[ix as usize]
+                        };
+                        idx += 1;
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// col2im: scatter-add columns `[c*kh*kw, oh*ow]` back to image `[c,h,w]`.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im(
+    col: &[f32],
+    img: &mut [f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) {
+    let oh = conv_out(h, kh, stride, pad);
+    let ow = conv_out(w, kw, stride, pad);
+    img.fill(0.0);
+    let mut row = 0usize;
+    for ch in 0..c {
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let src = &col[row * oh * ow..(row + 1) * oh * ow];
+                let mut idx = 0usize;
+                for oy in 0..oh {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        idx += ow;
+                        continue;
+                    }
+                    for ox in 0..ow {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix >= 0 && ix < w as isize {
+                            img[ch * h * w + iy as usize * w + ix as usize] += src[idx];
+                        }
+                        idx += 1;
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// Pooling selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    /// max pooling
+    Max,
+    /// average pooling
+    Avg,
+}
+
+/// Pooling forward for one NCHW batch. `argmax` (same size as output)
+/// records winning input indices for max-pool backward; ignored for avg.
+#[allow(clippy::too_many_arguments)]
+pub fn pool_forward(
+    kind: PoolKind,
+    x: &[f32],
+    y: &mut [f32],
+    argmax: &mut [f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) {
+    let oh = conv_out(h, k, stride, pad);
+    let ow = conv_out(w, k, stride, pad);
+    debug_assert_eq!(y.len(), n * c * oh * ow);
+    for img in 0..n {
+        for ch in 0..c {
+            let plane = &x[(img * c + ch) * h * w..(img * c + ch + 1) * h * w];
+            let out_base = (img * c + ch) * oh * ow;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_idx = 0usize;
+                    let mut sum = 0.0f32;
+                    let mut count = 0usize;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let idx = iy as usize * w + ix as usize;
+                            let v = plane[idx];
+                            if v > best {
+                                best = v;
+                                best_idx = idx;
+                            }
+                            sum += v;
+                            count += 1;
+                        }
+                    }
+                    let o = out_base + oy * ow + ox;
+                    match kind {
+                        PoolKind::Max => {
+                            y[o] = best;
+                            argmax[o] = best_idx as f32;
+                        }
+                        PoolKind::Avg => {
+                            y[o] = if count > 0 { sum / count as f32 } else { 0.0 };
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pooling backward.
+#[allow(clippy::too_many_arguments)]
+pub fn pool_backward(
+    kind: PoolKind,
+    dy: &[f32],
+    argmax: &[f32],
+    dx: &mut [f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) {
+    let oh = conv_out(h, k, stride, pad);
+    let ow = conv_out(w, k, stride, pad);
+    dx.fill(0.0);
+    for img in 0..n {
+        for ch in 0..c {
+            let in_base = (img * c + ch) * h * w;
+            let out_base = (img * c + ch) * oh * ow;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let o = out_base + oy * ow + ox;
+                    match kind {
+                        PoolKind::Max => {
+                            dx[in_base + argmax[o] as usize] += dy[o];
+                        }
+                        PoolKind::Avg => {
+                            // distribute evenly over the valid window
+                            let mut cells = Vec::with_capacity(k * k);
+                            for ky in 0..k {
+                                let iy = (oy * stride + ky) as isize - pad as isize;
+                                if iy < 0 || iy >= h as isize {
+                                    continue;
+                                }
+                                for kx in 0..k {
+                                    let ix = (ox * stride + kx) as isize - pad as isize;
+                                    if ix >= 0 && ix < w as isize {
+                                        cells.push(iy as usize * w + ix as usize);
+                                    }
+                                }
+                            }
+                            if !cells.is_empty() {
+                                let g = dy[o] / cells.len() as f32;
+                                for idx in cells {
+                                    dx[in_base + idx] += g;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// BatchNorm forward (training mode) over NCHW, per-channel statistics.
+/// Writes normalized output plus per-channel `save_mean` / `save_invstd`
+/// needed by backward.
+#[allow(clippy::too_many_arguments)]
+pub fn batchnorm_forward(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    y: &mut [f32],
+    save_mean: &mut [f32],
+    save_invstd: &mut [f32],
+    n: usize,
+    c: usize,
+    spatial: usize,
+    eps: f32,
+) {
+    let count = (n * spatial) as f32;
+    for ch in 0..c {
+        let mut mean = 0.0f32;
+        for img in 0..n {
+            let base = (img * c + ch) * spatial;
+            for s in 0..spatial {
+                mean += x[base + s];
+            }
+        }
+        mean /= count;
+        let mut var = 0.0f32;
+        for img in 0..n {
+            let base = (img * c + ch) * spatial;
+            for s in 0..spatial {
+                let d = x[base + s] - mean;
+                var += d * d;
+            }
+        }
+        var /= count;
+        let invstd = 1.0 / (var + eps).sqrt();
+        save_mean[ch] = mean;
+        save_invstd[ch] = invstd;
+        let (g, b) = (gamma[ch], beta[ch]);
+        for img in 0..n {
+            let base = (img * c + ch) * spatial;
+            for s in 0..spatial {
+                y[base + s] = (x[base + s] - mean) * invstd * g + b;
+            }
+        }
+    }
+}
+
+/// BatchNorm backward. Returns gradients for x, gamma, beta.
+#[allow(clippy::too_many_arguments)]
+pub fn batchnorm_backward(
+    x: &[f32],
+    dy: &[f32],
+    gamma: &[f32],
+    save_mean: &[f32],
+    save_invstd: &[f32],
+    dx: &mut [f32],
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+    n: usize,
+    c: usize,
+    spatial: usize,
+) {
+    let count = (n * spatial) as f32;
+    for ch in 0..c {
+        let mean = save_mean[ch];
+        let invstd = save_invstd[ch];
+        let mut sum_dy = 0.0f32;
+        let mut sum_dy_xhat = 0.0f32;
+        for img in 0..n {
+            let base = (img * c + ch) * spatial;
+            for s in 0..spatial {
+                let xhat = (x[base + s] - mean) * invstd;
+                sum_dy += dy[base + s];
+                sum_dy_xhat += dy[base + s] * xhat;
+            }
+        }
+        dgamma[ch] = sum_dy_xhat;
+        dbeta[ch] = sum_dy;
+        let g = gamma[ch];
+        for img in 0..n {
+            let base = (img * c + ch) * spatial;
+            for s in 0..spatial {
+                let xhat = (x[base + s] - mean) * invstd;
+                dx[base + s] =
+                    g * invstd * (dy[base + s] - sum_dy / count - xhat * sum_dy_xhat / count);
+            }
+        }
+    }
+}
+
+/// Row-wise argmax of `[m,n]` into `out[m]`.
+pub fn argmax_rows(x: &[f32], out: &mut [f32], m: usize, n: usize) {
+    for i in 0..m {
+        let row = &x[i * n..(i + 1) * n];
+        let mut best = 0usize;
+        for j in 1..n {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        out[i] = best as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let mut rng = crate::util::Rng::seed_from_u64(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (8, 8, 8), (13, 7, 17)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            let mut c = vec![0.0; m * n];
+            gemm(&a, &b, &mut c, m, k, n, 0.0);
+            let want = naive_gemm(&a, &b, m, k, n);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nt_tn_match_transposed_naive() {
+        let mut rng = crate::util::Rng::seed_from_u64(2);
+        let (m, k, n) = (5, 7, 4);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        // b_t is [n,k]
+        let mut b_t = vec![0.0; n * k];
+        for p in 0..k {
+            for j in 0..n {
+                b_t[j * k + p] = b[p * n + j];
+            }
+        }
+        let mut c1 = vec![0.0; m * n];
+        gemm_nt(&a, &b_t, &mut c1, m, k, n, 0.0);
+        let want = naive_gemm(&a, &b, m, k, n);
+        for (x, y) in c1.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        // a_t is [k,m]
+        let mut a_t = vec![0.0; k * m];
+        for i in 0..m {
+            for p in 0..k {
+                a_t[p * m + i] = a[i * k + p];
+            }
+        }
+        let mut c2 = vec![0.0; m * n];
+        gemm_tn(&a_t, &b, &mut c2, m, k, n, 0.0);
+        for (x, y) in c2.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gemm_beta_accumulates() {
+        let a = [1.0, 0.0, 0.0, 1.0]; // identity 2x2
+        let b = [1.0, 2.0, 3.0, 4.0];
+        let mut c = [10.0, 10.0, 10.0, 10.0];
+        gemm(&a, &b, &mut c, 2, 2, 2, 1.0);
+        assert_eq!(c, [11.0, 12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = [1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        let mut y = [0.0; 6];
+        softmax_rows(&x, &mut y, 2, 3);
+        for i in 0..2 {
+            let s: f32 = y[i * 3..(i + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        // invariant to shift: rows with equal relative offsets equal probs
+        assert!((y[0] - y[3]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_xent_gradient_check() {
+        // numeric gradient of mean CE wrt logits
+        let m = 2;
+        let n = 4;
+        let mut rng = crate::util::Rng::seed_from_u64(5);
+        let logits: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let labels = [1.0, 3.0];
+        let loss_of = |lg: &[f32]| {
+            let mut p = vec![0.0; m * n];
+            softmax_rows(lg, &mut p, m, n);
+            xent_loss(&p, &labels, m, n)
+        };
+        let mut probs = vec![0.0; m * n];
+        softmax_rows(&logits, &mut probs, m, n);
+        let mut grad = vec![0.0; m * n];
+        softmax_xent_backward(&probs, &labels, &mut grad, m, n);
+        let eps = 1e-3;
+        for i in 0..m * n {
+            let mut lp = logits.clone();
+            lp[i] += eps;
+            let mut lm = logits.clone();
+            lm[i] -= eps;
+            let num = (loss_of(&lp) - loss_of(&lm)) / (2.0 * eps);
+            assert!((num - grad[i]).abs() < 1e-3, "i={i}: {num} vs {}", grad[i]);
+        }
+    }
+
+    #[test]
+    fn im2col_col2im_roundtrip_adjoint() {
+        // <im2col(x), y> == <x, col2im(y)> (adjoint property)
+        let (c, h, w, kh, kw, s, p) = (2, 5, 5, 3, 3, 1, 1);
+        let oh = conv_out(h, kh, s, p);
+        let ow = conv_out(w, kw, s, p);
+        let mut rng = crate::util::Rng::seed_from_u64(6);
+        let x: Vec<f32> = (0..c * h * w).map(|_| rng.normal()).collect();
+        let y: Vec<f32> = (0..c * kh * kw * oh * ow).map(|_| rng.normal()).collect();
+        let mut col = vec![0.0; c * kh * kw * oh * ow];
+        im2col(&x, &mut col, c, h, w, kh, kw, s, p);
+        let mut img = vec![0.0; c * h * w];
+        col2im(&y, &mut img, c, h, w, kh, kw, s, p);
+        let lhs: f32 = col.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let rhs: f32 = x.iter().zip(&img).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() / lhs.abs().max(1.0) < 1e-4, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn maxpool_forward_simple() {
+        // 1x1x4x4, k=2, s=2
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let mut y = vec![0.0; 4];
+        let mut am = vec![0.0; 4];
+        pool_forward(PoolKind::Max, &x, &mut y, &mut am, 1, 1, 4, 4, 2, 2, 0);
+        assert_eq!(y, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn avgpool_forward_simple() {
+        let x = vec![1.0, 3.0, 5.0, 7.0]; // 1x1x2x2, k=2 s=2
+        let mut y = vec![0.0; 1];
+        let mut am = vec![0.0; 1];
+        pool_forward(PoolKind::Avg, &x, &mut y, &mut am, 1, 1, 2, 2, 2, 2, 0);
+        assert_eq!(y, vec![4.0]);
+    }
+
+    #[test]
+    fn maxpool_backward_routes_gradient() {
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let mut y = vec![0.0; 4];
+        let mut am = vec![0.0; 4];
+        pool_forward(PoolKind::Max, &x, &mut y, &mut am, 1, 1, 4, 4, 2, 2, 0);
+        let dy = vec![1.0, 2.0, 3.0, 4.0];
+        let mut dx = vec![0.0; 16];
+        pool_backward(PoolKind::Max, &dy, &am, &mut dx, 1, 1, 4, 4, 2, 2, 0);
+        assert_eq!(dx[5], 1.0);
+        assert_eq!(dx[7], 2.0);
+        assert_eq!(dx[13], 3.0);
+        assert_eq!(dx[15], 4.0);
+        assert_eq!(dx.iter().sum::<f32>(), 10.0);
+    }
+
+    #[test]
+    fn batchnorm_normalizes() {
+        let (n, c, sp) = (4, 2, 8);
+        let mut rng = crate::util::Rng::seed_from_u64(7);
+        let x: Vec<f32> = (0..n * c * sp).map(|_| rng.normal_with(3.0, 2.0)).collect();
+        let gamma = vec![1.0; c];
+        let beta = vec![0.0; c];
+        let mut y = vec![0.0; n * c * sp];
+        let mut sm = vec![0.0; c];
+        let mut si = vec![0.0; c];
+        batchnorm_forward(&x, &gamma, &beta, &mut y, &mut sm, &mut si, n, c, sp, 1e-5);
+        // per-channel mean ~0, var ~1
+        for ch in 0..c {
+            let mut mean = 0.0;
+            let mut var = 0.0;
+            let cnt = (n * sp) as f32;
+            for img in 0..n {
+                for s in 0..sp {
+                    mean += y[(img * c + ch) * sp + s];
+                }
+            }
+            mean /= cnt;
+            for img in 0..n {
+                for s in 0..sp {
+                    let d = y[(img * c + ch) * sp + s] - mean;
+                    var += d * d;
+                }
+            }
+            var /= cnt;
+            assert!(mean.abs() < 1e-4, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "var {var}");
+        }
+    }
+
+    #[test]
+    fn batchnorm_gradient_check() {
+        let (n, c, sp) = (2, 1, 3);
+        let mut rng = crate::util::Rng::seed_from_u64(8);
+        let x: Vec<f32> = (0..n * c * sp).map(|_| rng.normal()).collect();
+        let gamma = vec![1.3; c];
+        let beta = vec![0.2; c];
+        let dy: Vec<f32> = (0..n * c * sp).map(|_| rng.normal()).collect();
+        let fwd = |xx: &[f32]| {
+            let mut y = vec![0.0; n * c * sp];
+            let mut sm = vec![0.0; c];
+            let mut si = vec![0.0; c];
+            batchnorm_forward(xx, &gamma, &beta, &mut y, &mut sm, &mut si, n, c, sp, 1e-5);
+            y
+        };
+        let y0 = fwd(&x);
+        let _ = y0;
+        let mut sm = vec![0.0; c];
+        let mut si = vec![0.0; c];
+        let mut y = vec![0.0; n * c * sp];
+        batchnorm_forward(&x, &gamma, &beta, &mut y, &mut sm, &mut si, n, c, sp, 1e-5);
+        let mut dx = vec![0.0; n * c * sp];
+        let mut dg = vec![0.0; c];
+        let mut db = vec![0.0; c];
+        batchnorm_backward(&x, &dy, &gamma, &sm, &si, &mut dx, &mut dg, &mut db, n, c, sp);
+        let eps = 1e-2;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let f = |yy: Vec<f32>| -> f32 { yy.iter().zip(&dy).map(|(a, b)| a * b).sum() };
+            let num = (f(fwd(&xp)) - f(fwd(&xm))) / (2.0 * eps);
+            assert!((num - dx[i]).abs() < 2e-2, "i={i}: {num} vs {}", dx[i]);
+        }
+    }
+
+    #[test]
+    fn bias_add_and_grad() {
+        let mut x = vec![0.0; 6];
+        bias_add(&mut x, &[1.0, 2.0, 3.0], 2, 3);
+        assert_eq!(x, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+        let mut db = vec![0.0; 3];
+        bias_grad(&x, &mut db, 2, 3, 0.0);
+        assert_eq!(db, vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let x = [0.1, 0.9, 0.0, 5.0, -1.0, 2.0];
+        let mut out = [0.0; 2];
+        argmax_rows(&x, &mut out, 2, 3);
+        assert_eq!(out, [1.0, 0.0]);
+    }
+}

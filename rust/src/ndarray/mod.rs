@@ -1,0 +1,359 @@
+//! `NDArray` — imperative tensor computation with lazy evaluation
+//! (paper §2.2).
+//!
+//! Every `NDArray` owns a storage buffer registered with the dependency
+//! engine under a unique tag.  Methods like [`NDArray::add`] do **not**
+//! compute anything on the calling thread: they push an operation reading
+//! the operands' tags and writing the result's tag, and return
+//! immediately.  Reading data out ([`NDArray::to_vec`]) waits for the tag.
+//!
+//! Because symbolic executors push their node operations onto the same
+//! engine with the same tags, imperative updates interleave correctly with
+//! graph execution — `net.forward_backward(); net.w -= eta * net.g` is
+//! scheduled as one dataflow, the paper's headline flexibility claim.
+
+pub mod kernels;
+pub mod ops;
+
+use std::cell::UnsafeCell;
+use std::sync::Arc;
+
+use crate::engine::{default_engine, EngineRef, VarHandle};
+use crate::util::Rng;
+
+/// Raw storage behind an `NDArray`.
+///
+/// Interior mutability is sound because every access goes through the
+/// dependency engine, which guarantees a writer is exclusive and readers
+/// never overlap a writer (the same argument MXNet makes for its NDArray).
+pub struct Storage {
+    data: UnsafeCell<Box<[f32]>>,
+}
+
+// SAFETY: access discipline enforced by the engine (exclusive writes).
+unsafe impl Sync for Storage {}
+unsafe impl Send for Storage {}
+
+impl Storage {
+    fn new(len: usize, fill: f32) -> Arc<Self> {
+        Arc::new(Storage { data: UnsafeCell::new(vec![fill; len].into_boxed_slice()) })
+    }
+
+    fn from_vec(v: Vec<f32>) -> Arc<Self> {
+        Arc::new(Storage { data: UnsafeCell::new(v.into_boxed_slice()) })
+    }
+
+    /// Read access. Caller must hold a read grant from the engine.
+    ///
+    /// # Safety
+    /// Must only be called from an engine op that listed this storage's
+    /// var as a read (or write) dependency, or after `wait_for_var`.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self) -> &[f32] {
+        &*self.data.get()
+    }
+
+    /// Write access. Caller must hold the write grant from the engine.
+    ///
+    /// # Safety
+    /// Must only be called from an engine op that listed this storage's
+    /// var as a write dependency.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self) -> &mut [f32] {
+        &mut *self.data.get()
+    }
+
+    /// Buffer length.
+    pub fn len(&self) -> usize {
+        unsafe { (&raw const *self.data.get()).as_ref().unwrap().len() }
+    }
+
+    /// Whether the buffer is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+struct Inner {
+    shape: Vec<usize>,
+    storage: Arc<Storage>,
+    var: VarHandle,
+    engine: EngineRef,
+    /// For reshape views: keeps the owning array (and thus its engine var)
+    /// alive; a view never deletes the var itself.
+    base: Option<Arc<Inner>>,
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        if self.base.is_none() {
+            self.engine.delete_var(self.var);
+        }
+    }
+}
+
+/// An n-dimensional f32 array with engine-scheduled lazy evaluation.
+#[derive(Clone)]
+pub struct NDArray {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for NDArray {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "NDArray(shape={:?}, var={})", self.shape(), self.var().id())
+    }
+}
+
+impl NDArray {
+    // ---------------------------------------------------------------
+    // constructors
+    // ---------------------------------------------------------------
+
+    fn alloc(shape: &[usize], fill: f32, engine: EngineRef) -> Self {
+        let size: usize = shape.iter().product();
+        let var = engine.new_var();
+        NDArray {
+            inner: Arc::new(Inner {
+                shape: shape.to_vec(),
+                storage: Storage::new(size, fill),
+                var,
+                engine,
+                base: None,
+            }),
+        }
+    }
+
+    /// Zero-filled array on the default engine.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self::zeros_on(shape, default_engine())
+    }
+
+    /// Zero-filled array on a specific engine.
+    pub fn zeros_on(shape: &[usize], engine: EngineRef) -> Self {
+        Self::alloc(shape, 0.0, engine)
+    }
+
+    /// One-filled array.
+    pub fn ones(shape: &[usize]) -> Self {
+        Self::alloc(shape, 1.0, default_engine())
+    }
+
+    /// Constant-filled array.
+    pub fn full(shape: &[usize], value: f32) -> Self {
+        Self::alloc(shape, value, default_engine())
+    }
+
+    /// Array from explicit data (len must equal product of dims).
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        Self::from_vec_on(shape, data, default_engine())
+    }
+
+    /// Array from explicit data on a specific engine.
+    pub fn from_vec_on(shape: &[usize], data: Vec<f32>, engine: EngineRef) -> Self {
+        let size: usize = shape.iter().product();
+        assert_eq!(size, data.len(), "shape {shape:?} vs data len {}", data.len());
+        let var = engine.new_var();
+        NDArray {
+            inner: Arc::new(Inner {
+                shape: shape.to_vec(),
+                storage: Storage::from_vec(data),
+                var,
+                engine,
+                base: None,
+            }),
+        }
+    }
+
+    /// Gaussian-initialized array (engine-scheduled fill).
+    pub fn randn(shape: &[usize], mean: f32, std: f32, seed: u64) -> Self {
+        Self::randn_on(shape, mean, std, seed, default_engine())
+    }
+
+    /// Gaussian-initialized array on a specific engine.
+    pub fn randn_on(shape: &[usize], mean: f32, std: f32, seed: u64, engine: EngineRef) -> Self {
+        let out = Self::alloc(shape, 0.0, engine);
+        let storage = out.storage();
+        out.engine().push(
+            "randn",
+            vec![],
+            vec![out.var()],
+            Box::new(move || {
+                let mut rng = Rng::seed_from_u64(seed);
+                let buf = unsafe { storage.slice_mut() };
+                for v in buf.iter_mut() {
+                    *v = rng.normal_with(mean, std);
+                }
+            }),
+        );
+        out
+    }
+
+    /// Uniform-initialized array in `[lo, hi)`.
+    pub fn uniform(shape: &[usize], lo: f32, hi: f32, seed: u64) -> Self {
+        let out = Self::alloc(shape, 0.0, default_engine());
+        let storage = out.storage();
+        out.engine().push(
+            "uniform",
+            vec![],
+            vec![out.var()],
+            Box::new(move || {
+                let mut rng = Rng::seed_from_u64(seed);
+                let buf = unsafe { storage.slice_mut() };
+                for v in buf.iter_mut() {
+                    *v = rng.uniform(lo, hi);
+                }
+            }),
+        );
+        out
+    }
+
+    // ---------------------------------------------------------------
+    // accessors
+    // ---------------------------------------------------------------
+
+    /// Shape dims.
+    pub fn shape(&self) -> &[usize] {
+        &self.inner.shape
+    }
+
+    /// Total element count.
+    pub fn size(&self) -> usize {
+        self.inner.shape.iter().product()
+    }
+
+    /// Engine tag for this array's storage.
+    pub fn var(&self) -> VarHandle {
+        self.inner.var
+    }
+
+    /// The engine this array is registered with.
+    pub fn engine(&self) -> EngineRef {
+        Arc::clone(&self.inner.engine)
+    }
+
+    /// Shared storage handle (for pushing custom engine ops).
+    pub fn storage(&self) -> Arc<Storage> {
+        Arc::clone(&self.inner.storage)
+    }
+
+    /// Block until all pending writes to this array have completed.
+    pub fn wait_to_read(&self) {
+        self.inner.engine.wait_for_var(self.inner.var);
+    }
+
+    /// Synchronously copy the contents out.
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.wait_to_read();
+        unsafe { self.inner.storage.slice().to_vec() }
+    }
+
+    /// Synchronously read a single element (flattened index).
+    pub fn at(&self, idx: usize) -> f32 {
+        self.wait_to_read();
+        unsafe { self.inner.storage.slice()[idx] }
+    }
+
+    /// Synchronously overwrite contents from a slice.
+    pub fn copy_from_slice_sync(&self, data: &[f32]) {
+        assert_eq!(data.len(), self.size());
+        let storage = self.storage();
+        let data = data.to_vec();
+        self.engine().push(
+            "copy_from",
+            vec![],
+            vec![self.var()],
+            Box::new(move || {
+                unsafe { storage.slice_mut() }.copy_from_slice(&data);
+            }),
+        );
+        self.wait_to_read();
+    }
+
+    /// View this array's storage under a (possibly smaller) shape.
+    ///
+    /// Shares storage **and** engine tag, so dependency tracking covers
+    /// the alias.  Used by the executor to carve per-entry views out of
+    /// co-shared plan storage blocks (the view may use a prefix of the
+    /// block).
+    pub fn alias(&self, shape: &[usize]) -> NDArray {
+        let size: usize = shape.iter().product();
+        assert!(
+            size <= self.inner.storage.len(),
+            "alias {shape:?} exceeds storage of {} elems",
+            self.inner.storage.len()
+        );
+        NDArray {
+            inner: Arc::new(Inner {
+                shape: shape.to_vec(),
+                storage: self.storage(),
+                var: self.inner.var,
+                engine: self.engine(),
+                base: Some(Arc::clone(&self.inner)),
+            }),
+        }
+    }
+
+    /// Reinterpret with a new shape of equal size (shares storage and tag).
+    pub fn reshape(&self, shape: &[usize]) -> NDArray {
+        let size: usize = shape.iter().product();
+        assert_eq!(size, self.size(), "reshape {:?} -> {shape:?}", self.shape());
+        NDArray {
+            inner: Arc::new(Inner {
+                shape: shape.to_vec(),
+                storage: self.storage(),
+                // Sharing the var keeps the dependency story exact: readers
+                // of the view are ordered against writes through the base
+                // and vice versa.  `base` keeps the owner alive so the var
+                // is deleted exactly once, by the owner.
+                var: self.inner.var,
+                engine: self.engine(),
+                base: Some(Arc::clone(&self.inner)),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_to_vec() {
+        let z = NDArray::zeros(&[2, 3]);
+        assert_eq!(z.to_vec(), vec![0.0; 6]);
+        let o = NDArray::ones(&[4]);
+        assert_eq!(o.to_vec(), vec![1.0; 4]);
+        let f = NDArray::full(&[2, 2], 7.5);
+        assert_eq!(f.to_vec(), vec![7.5; 4]);
+        let v = NDArray::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(v.at(3), 4.0);
+    }
+
+    #[test]
+    fn randn_reproducible() {
+        let a = NDArray::randn(&[100], 0.0, 1.0, 42);
+        let b = NDArray::randn(&[100], 0.0, 1.0, 42);
+        assert_eq!(a.to_vec(), b.to_vec());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn from_vec_shape_mismatch_panics() {
+        let _ = NDArray::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn reshape_shares_data() {
+        let a = NDArray::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect());
+        let b = a.reshape(&[3, 2]);
+        assert_eq!(b.shape(), &[3, 2]);
+        assert_eq!(b.to_vec(), a.to_vec());
+    }
+
+    #[test]
+    fn copy_from_slice_roundtrip() {
+        let a = NDArray::zeros(&[3]);
+        a.copy_from_slice_sync(&[1.0, 2.0, 3.0]);
+        assert_eq!(a.to_vec(), vec![1.0, 2.0, 3.0]);
+    }
+}

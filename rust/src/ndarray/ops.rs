@@ -1,0 +1,380 @@
+//! Imperative NDArray operations, all lazily scheduled on the engine.
+//!
+//! Includes operator-trait sugar (`&a + &b`, `&a * 2.0`) and the in-place
+//! mutation ops (`sub_scaled_`, `add_`) that make the paper's imperative
+//! parameter update `w -= eta * g` expressible — and schedulable — next to
+//! symbolic graph execution.
+
+use std::sync::Arc;
+
+use super::kernels::{self, EwBinary};
+use super::NDArray;
+
+impl NDArray {
+    fn binary_ew(&self, other: &NDArray, op: EwBinary, name: &'static str) -> NDArray {
+        assert_eq!(self.shape(), other.shape(), "{name}: shape mismatch");
+        let out = NDArray::zeros_on(self.shape(), self.engine());
+        let (sa, sb, so) = (self.storage(), other.storage(), out.storage());
+        self.engine().push(
+            name,
+            vec![self.var(), other.var()],
+            vec![out.var()],
+            Box::new(move || unsafe {
+                kernels::ew_binary(op, sa.slice(), sb.slice(), so.slice_mut());
+            }),
+        );
+        out
+    }
+
+    /// Elementwise addition (lazy).
+    pub fn add(&self, other: &NDArray) -> NDArray {
+        self.binary_ew(other, EwBinary::Add, "ndarray.add")
+    }
+
+    /// Elementwise subtraction (lazy).
+    pub fn sub(&self, other: &NDArray) -> NDArray {
+        self.binary_ew(other, EwBinary::Sub, "ndarray.sub")
+    }
+
+    /// Elementwise multiplication (lazy).
+    pub fn mul(&self, other: &NDArray) -> NDArray {
+        self.binary_ew(other, EwBinary::Mul, "ndarray.mul")
+    }
+
+    /// Elementwise division (lazy).
+    pub fn div(&self, other: &NDArray) -> NDArray {
+        self.binary_ew(other, EwBinary::Div, "ndarray.div")
+    }
+
+    fn scalar_map(&self, name: &'static str, f: impl Fn(f32) -> f32 + Send + 'static) -> NDArray {
+        let out = NDArray::zeros_on(self.shape(), self.engine());
+        let (sa, so) = (self.storage(), out.storage());
+        self.engine().push(
+            name,
+            vec![self.var()],
+            vec![out.var()],
+            Box::new(move || unsafe {
+                let a = sa.slice();
+                let o = so.slice_mut();
+                for i in 0..a.len() {
+                    o[i] = f(a[i]);
+                }
+            }),
+        );
+        out
+    }
+
+    /// `self + s` elementwise (lazy).
+    pub fn add_scalar(&self, s: f32) -> NDArray {
+        self.scalar_map("ndarray.add_scalar", move |x| x + s)
+    }
+
+    /// `self * s` elementwise (lazy).
+    pub fn mul_scalar(&self, s: f32) -> NDArray {
+        self.scalar_map("ndarray.mul_scalar", move |x| x * s)
+    }
+
+    /// Matrix multiply `[m,k] @ [k,n]` (lazy).
+    pub fn dot(&self, other: &NDArray) -> NDArray {
+        assert_eq!(self.shape().len(), 2, "dot: lhs must be 2-d");
+        assert_eq!(other.shape().len(), 2, "dot: rhs must be 2-d");
+        let (m, k) = (self.shape()[0], self.shape()[1]);
+        let (k2, n) = (other.shape()[0], other.shape()[1]);
+        assert_eq!(k, k2, "dot: inner dims {k} vs {k2}");
+        let out = NDArray::zeros_on(&[m, n], self.engine());
+        let (sa, sb, so) = (self.storage(), other.storage(), out.storage());
+        self.engine().push(
+            "ndarray.dot",
+            vec![self.var(), other.var()],
+            vec![out.var()],
+            Box::new(move || unsafe {
+                kernels::gemm(sa.slice(), sb.slice(), so.slice_mut(), m, k, n, 0.0);
+            }),
+        );
+        out
+    }
+
+    /// Row-wise softmax for a 2-d array (lazy).
+    pub fn softmax(&self) -> NDArray {
+        assert_eq!(self.shape().len(), 2, "softmax: need 2-d");
+        let (m, n) = (self.shape()[0], self.shape()[1]);
+        let out = NDArray::zeros_on(self.shape(), self.engine());
+        let (sa, so) = (self.storage(), out.storage());
+        self.engine().push(
+            "ndarray.softmax",
+            vec![self.var()],
+            vec![out.var()],
+            Box::new(move || unsafe {
+                kernels::softmax_rows(sa.slice(), so.slice_mut(), m, n);
+            }),
+        );
+        out
+    }
+
+    /// Sum of all elements (synchronous scalar).
+    pub fn sum_sync(&self) -> f32 {
+        self.wait_to_read();
+        unsafe { self.storage().slice().iter().sum() }
+    }
+
+    /// Deep copy (lazy).
+    pub fn copy(&self) -> NDArray {
+        let out = NDArray::zeros_on(self.shape(), self.engine());
+        let (sa, so) = (self.storage(), out.storage());
+        self.engine().push(
+            "ndarray.copy",
+            vec![self.var()],
+            vec![out.var()],
+            Box::new(move || unsafe {
+                so.slice_mut().copy_from_slice(sa.slice());
+            }),
+        );
+        out
+    }
+
+    // ---------------------------------------------------------------
+    // in-place mutation ops (the engine's write-dependency feature)
+    // ---------------------------------------------------------------
+
+    /// `self += other` in place (lazy).
+    pub fn add_(&self, other: &NDArray) {
+        assert_eq!(self.shape(), other.shape());
+        let (sa, sb) = (self.storage(), other.storage());
+        self.engine().push(
+            "ndarray.add_",
+            vec![other.var()],
+            vec![self.var()],
+            Box::new(move || unsafe {
+                kernels::axpy(1.0, sb.slice(), sa.slice_mut());
+            }),
+        );
+    }
+
+    /// `self -= alpha * other` in place (lazy) — the SGD update
+    /// `w -= eta * g` from paper §2.2.
+    pub fn sub_scaled_(&self, other: &NDArray, alpha: f32) {
+        assert_eq!(self.shape(), other.shape());
+        let (sa, sb) = (self.storage(), other.storage());
+        self.engine().push(
+            "ndarray.sub_scaled_",
+            vec![other.var()],
+            vec![self.var()],
+            Box::new(move || unsafe {
+                kernels::axpy(-alpha, sb.slice(), sa.slice_mut());
+            }),
+        );
+    }
+
+    /// `self *= s` in place (lazy).
+    pub fn mul_scalar_(&self, s: f32) {
+        let sa = self.storage();
+        self.engine().push(
+            "ndarray.mul_scalar_",
+            vec![],
+            vec![self.var()],
+            Box::new(move || unsafe {
+                for v in sa.slice_mut().iter_mut() {
+                    *v *= s;
+                }
+            }),
+        );
+    }
+
+    /// `self[:] = 0` in place (lazy).
+    pub fn zero_(&self) {
+        let sa = self.storage();
+        self.engine().push(
+            "ndarray.zero_",
+            vec![],
+            vec![self.var()],
+            Box::new(move || unsafe {
+                sa.slice_mut().fill(0.0);
+            }),
+        );
+    }
+
+    /// `self[:] = other` in place (lazy).
+    pub fn copy_from_(&self, other: &NDArray) {
+        assert_eq!(self.size(), other.size());
+        let (sa, sb) = (self.storage(), other.storage());
+        self.engine().push(
+            "ndarray.copy_from_",
+            vec![other.var()],
+            vec![self.var()],
+            Box::new(move || unsafe {
+                sa.slice_mut().copy_from_slice(sb.slice());
+            }),
+        );
+    }
+}
+
+// ----------------------------------------------------------------------
+// operator sugar
+// ----------------------------------------------------------------------
+
+impl std::ops::Add for &NDArray {
+    type Output = NDArray;
+    fn add(self, rhs: Self) -> NDArray {
+        NDArray::add(self, rhs)
+    }
+}
+
+impl std::ops::Sub for &NDArray {
+    type Output = NDArray;
+    fn sub(self, rhs: Self) -> NDArray {
+        NDArray::sub(self, rhs)
+    }
+}
+
+impl std::ops::Mul for &NDArray {
+    type Output = NDArray;
+    fn mul(self, rhs: Self) -> NDArray {
+        NDArray::mul(self, rhs)
+    }
+}
+
+impl std::ops::Div for &NDArray {
+    type Output = NDArray;
+    fn div(self, rhs: Self) -> NDArray {
+        NDArray::div(self, rhs)
+    }
+}
+
+impl std::ops::Add<f32> for &NDArray {
+    type Output = NDArray;
+    fn add(self, rhs: f32) -> NDArray {
+        self.add_scalar(rhs)
+    }
+}
+
+impl std::ops::Mul<f32> for &NDArray {
+    type Output = NDArray;
+    fn mul(self, rhs: f32) -> NDArray {
+        self.mul_scalar(rhs)
+    }
+}
+
+/// Helper for custom user ops: push an arbitrary closure over explicit
+/// read/write arrays (mirrors `mxnet.engine.push`).
+pub fn push_custom(
+    name: &'static str,
+    reads: &[&NDArray],
+    writes: &[&NDArray],
+    f: impl FnOnce(&[Arc<super::Storage>], &[Arc<super::Storage>]) + Send + 'static,
+) {
+    let engine = if let Some(a) = writes.first() {
+        a.engine()
+    } else if let Some(a) = reads.first() {
+        a.engine()
+    } else {
+        crate::engine::default_engine()
+    };
+    let rs: Vec<_> = reads.iter().map(|a| a.storage()).collect();
+    let ws: Vec<_> = writes.iter().map(|a| a.storage()).collect();
+    let rv: Vec<_> = reads.iter().map(|a| a.var()).collect();
+    let wv: Vec<_> = writes.iter().map(|a| a.var()).collect();
+    engine.push(name, rv, wv, Box::new(move || f(&rs, &ws)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_chain() {
+        let a = NDArray::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = NDArray::ones(&[2, 2]);
+        let c = &(&a + &b) * 2.0; // (a+1)*2
+        assert_eq!(c.to_vec(), vec![4.0, 6.0, 8.0, 10.0]);
+        let d = &c - &a;
+        assert_eq!(d.to_vec(), vec![3.0, 4.0, 5.0, 6.0]);
+        let e = &c / &b;
+        assert_eq!(e.to_vec(), c.to_vec());
+        let f = &a * &a;
+        assert_eq!(f.to_vec(), vec![1.0, 4.0, 9.0, 16.0]);
+    }
+
+    #[test]
+    fn dot_matches_manual() {
+        let a = NDArray::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = NDArray::from_vec(&[3, 2], vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.dot(&b);
+        assert_eq!(c.shape(), &[2, 2]);
+        assert_eq!(c.to_vec(), vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn paper_figure3_example() {
+        // Figure 3: a = ones((2,3)); print (a*2).asnumpy()
+        let a = NDArray::ones(&[2, 3]);
+        let b = &a * 2.0;
+        assert_eq!(b.to_vec(), vec![2.0; 6]);
+    }
+
+    #[test]
+    fn sgd_update_in_place() {
+        // w -= eta * g, repeated; engine must serialize the mutations.
+        let w = NDArray::zeros(&[4]);
+        let g = NDArray::ones(&[4]);
+        for _ in 0..10 {
+            w.sub_scaled_(&g, 0.1);
+        }
+        let got = w.to_vec();
+        for v in got {
+            assert!((v + 1.0).abs() < 1e-5, "{v}");
+        }
+    }
+
+    #[test]
+    fn mutation_ordering_with_reads() {
+        // read-after-write and write-after-read interleavings stay in
+        // program order per the engine contract.
+        let a = NDArray::from_vec(&[1], vec![1.0]);
+        let b = a.copy(); // b = 1
+        a.mul_scalar_(10.0); // a = 10
+        let c = a.copy(); // c = 10
+        a.add_(&b); // a = 11
+        assert_eq!(b.to_vec(), vec![1.0]);
+        assert_eq!(c.to_vec(), vec![10.0]);
+        assert_eq!(a.to_vec(), vec![11.0]);
+    }
+
+    #[test]
+    fn zero_and_copy_from() {
+        let a = NDArray::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = NDArray::zeros(&[3]);
+        b.copy_from_(&a);
+        a.zero_();
+        assert_eq!(a.to_vec(), vec![0.0; 3]);
+        assert_eq!(b.to_vec(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn push_custom_op() {
+        let a = NDArray::from_vec(&[2], vec![3.0, 4.0]);
+        let out = NDArray::zeros(&[1]);
+        push_custom("l2norm", &[&a], &[&out], |rs, ws| unsafe {
+            let x = rs[0].slice();
+            let o = ws[0].slice_mut();
+            o[0] = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        });
+        assert_eq!(out.to_vec(), vec![5.0]);
+    }
+
+    #[test]
+    fn many_parallel_chains_consistent() {
+        // Build 8 independent chains; values must all be exact.
+        let chains: Vec<NDArray> = (0..8)
+            .map(|i| {
+                let mut x = NDArray::full(&[16], i as f32);
+                for _ in 0..20 {
+                    x = &x + 1.0;
+                }
+                x
+            })
+            .collect();
+        for (i, x) in chains.iter().enumerate() {
+            assert_eq!(x.to_vec(), vec![i as f32 + 20.0; 16]);
+        }
+    }
+}

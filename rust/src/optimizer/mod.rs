@@ -1,0 +1,264 @@
+//! Optimizers (paper §2.4: *"the training module implements the commonly
+//! used optimization algorithms, such as stochastic gradient descent"*).
+//!
+//! Updates are expressed as in-place engine operations on the weight
+//! arrays (`w -= eta * g` style), so they schedule jointly with graph
+//! execution and KVStore traffic.  An [`Optimizer`] is also what you
+//! register as a [`KVStore`](crate::kvstore) *updater* for data-parallel
+//! training.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::ndarray::NDArray;
+
+/// A stateful parameter optimizer.
+pub trait Optimizer: Send + Sync {
+    /// Apply one update: mutate `weight` given `grad`.  `key` identifies
+    /// the parameter so the optimizer can keep per-key state (momentum,
+    /// moments).
+    fn update(&self, key: &str, weight: &NDArray, grad: &NDArray);
+
+    /// Current learning rate (for logging).
+    fn learning_rate(&self) -> f32;
+
+    /// Override the learning rate (scheduling).
+    fn set_learning_rate(&self, lr: f32);
+}
+
+/// SGD with momentum and weight decay — the configuration of the paper's
+/// scalability experiment (lr=.05, momentum=.9, wd=1e-4).
+pub struct Sgd {
+    lr: Mutex<f32>,
+    /// Momentum coefficient (0 disables the velocity buffer).
+    pub momentum: f32,
+    /// L2 weight decay.
+    pub weight_decay: f32,
+    /// Gradient rescale (e.g. 1/num_workers for aggregated gradients).
+    pub rescale: f32,
+    state: Mutex<HashMap<String, NDArray>>,
+}
+
+impl Sgd {
+    /// Plain SGD.
+    pub fn new(lr: f32) -> Self {
+        Sgd {
+            lr: Mutex::new(lr),
+            momentum: 0.0,
+            weight_decay: 0.0,
+            rescale: 1.0,
+            state: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// SGD with momentum + weight decay (paper's settings).
+    pub fn with_momentum(lr: f32, momentum: f32, weight_decay: f32) -> Self {
+        Sgd { momentum, weight_decay, ..Sgd::new(lr) }
+    }
+
+    /// Set gradient rescale factor.
+    pub fn rescale(mut self, r: f32) -> Self {
+        self.rescale = r;
+        self
+    }
+}
+
+impl Optimizer for Sgd {
+    fn update(&self, key: &str, weight: &NDArray, grad: &NDArray) {
+        let lr = *self.lr.lock().unwrap();
+        let (mom, wd, rescale) = (self.momentum, self.weight_decay, self.rescale);
+        if mom == 0.0 {
+            // w -= lr * (rescale*g + wd*w): one fused engine op.
+            let (ws, gs) = (weight.storage(), grad.storage());
+            weight.engine().push(
+                "sgd.update",
+                vec![grad.var()],
+                vec![weight.var()],
+                Box::new(move || unsafe {
+                    let w = ws.slice_mut();
+                    let g = gs.slice();
+                    for i in 0..w.len() {
+                        w[i] -= lr * (rescale * g[i] + wd * w[i]);
+                    }
+                }),
+            );
+        } else {
+            let mut state = self.state.lock().unwrap();
+            let vel = state
+                .entry(key.to_string())
+                .or_insert_with(|| NDArray::zeros_on(weight.shape(), weight.engine()))
+                .clone();
+            drop(state);
+            // v = mom*v - lr*(rescale*g + wd*w); w += v
+            let (ws, gs, vs) = (weight.storage(), grad.storage(), vel.storage());
+            weight.engine().push(
+                "sgd.momentum_update",
+                vec![grad.var()],
+                vec![weight.var(), vel.var()],
+                Box::new(move || unsafe {
+                    let w = ws.slice_mut();
+                    let g = gs.slice();
+                    let v = vs.slice_mut();
+                    for i in 0..w.len() {
+                        v[i] = mom * v[i] - lr * (rescale * g[i] + wd * w[i]);
+                        w[i] += v[i];
+                    }
+                }),
+            );
+        }
+    }
+
+    fn learning_rate(&self) -> f32 {
+        *self.lr.lock().unwrap()
+    }
+
+    fn set_learning_rate(&self, lr: f32) {
+        *self.lr.lock().unwrap() = lr;
+    }
+}
+
+/// Adam optimizer (per-key first/second moment state).
+pub struct Adam {
+    lr: Mutex<f32>,
+    /// First-moment decay.
+    pub beta1: f32,
+    /// Second-moment decay.
+    pub beta2: f32,
+    /// Numerical epsilon.
+    pub eps: f32,
+    state: Mutex<HashMap<String, (NDArray, NDArray, u64)>>,
+}
+
+impl Adam {
+    /// Adam with standard betas.
+    pub fn new(lr: f32) -> Self {
+        Adam {
+            lr: Mutex::new(lr),
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            state: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn update(&self, key: &str, weight: &NDArray, grad: &NDArray) {
+        let lr = *self.lr.lock().unwrap();
+        let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        let mut state = self.state.lock().unwrap();
+        let entry = state.entry(key.to_string()).or_insert_with(|| {
+            (
+                NDArray::zeros_on(weight.shape(), weight.engine()),
+                NDArray::zeros_on(weight.shape(), weight.engine()),
+                0,
+            )
+        });
+        entry.2 += 1;
+        let t = entry.2;
+        let (m, v) = (entry.0.clone(), entry.1.clone());
+        drop(state);
+        let (ws, gs, ms, vs) = (weight.storage(), grad.storage(), m.storage(), v.storage());
+        weight.engine().push(
+            "adam.update",
+            vec![grad.var()],
+            vec![weight.var(), m.var(), v.var()],
+            Box::new(move || unsafe {
+                let w = ws.slice_mut();
+                let g = gs.slice();
+                let m = ms.slice_mut();
+                let v = vs.slice_mut();
+                let bc1 = 1.0 - b1.powi(t as i32);
+                let bc2 = 1.0 - b2.powi(t as i32);
+                for i in 0..w.len() {
+                    m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+                    v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+                    let mhat = m[i] / bc1;
+                    let vhat = v[i] / bc2;
+                    w[i] -= lr * mhat / (vhat.sqrt() + eps);
+                }
+            }),
+        );
+    }
+
+    fn learning_rate(&self) -> f32 {
+        *self.lr.lock().unwrap()
+    }
+
+    fn set_learning_rate(&self, lr: f32) {
+        *self.lr.lock().unwrap() = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_plain_matches_formula() {
+        let w = NDArray::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let g = NDArray::from_vec(&[3], vec![0.5, 0.5, 0.5]);
+        let opt = Sgd::new(0.1);
+        opt.update("w", &w, &g);
+        let got = w.to_vec();
+        for (x, want) in got.iter().zip([0.95, 1.95, 2.95]) {
+            assert!((x - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sgd_momentum_accumulates_velocity() {
+        let w = NDArray::zeros(&[1]);
+        let g = NDArray::ones(&[1]);
+        let opt = Sgd::with_momentum(0.1, 0.9, 0.0);
+        opt.update("w", &w, &g); // v=-0.1, w=-0.1
+        opt.update("w", &w, &g); // v=-0.19, w=-0.29
+        let got = w.to_vec()[0];
+        assert!((got + 0.29).abs() < 1e-5, "{got}");
+    }
+
+    #[test]
+    fn weight_decay_shrinks_weights() {
+        let w = NDArray::from_vec(&[1], vec![10.0]);
+        let g = NDArray::zeros(&[1]);
+        let opt = Sgd::with_momentum(0.1, 0.0, 0.01);
+        opt.update("w", &w, &g);
+        let got = w.to_vec()[0];
+        assert!(got < 10.0 && got > 9.9, "{got}");
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // minimize f(w) = (w-3)^2 with grad 2(w-3)
+        let w = NDArray::zeros(&[1]);
+        let opt = Adam::new(0.2);
+        for _ in 0..200 {
+            let cur = w.to_vec()[0];
+            let g = NDArray::from_vec(&[1], vec![2.0 * (cur - 3.0)]);
+            opt.update("w", &w, &g);
+        }
+        let got = w.to_vec()[0];
+        assert!((got - 3.0).abs() < 0.1, "{got}");
+    }
+
+    #[test]
+    fn lr_schedule_applied() {
+        let opt = Sgd::new(0.1);
+        opt.set_learning_rate(0.01);
+        assert_eq!(opt.learning_rate(), 0.01);
+    }
+
+    #[test]
+    fn per_key_state_is_independent() {
+        let opt = Sgd::with_momentum(0.1, 0.9, 0.0);
+        let w1 = NDArray::zeros(&[1]);
+        let w2 = NDArray::zeros(&[1]);
+        let g = NDArray::ones(&[1]);
+        opt.update("a", &w1, &g);
+        opt.update("a", &w1, &g);
+        opt.update("b", &w2, &g);
+        // b only took one step: velocity fresh
+        assert!((w2.to_vec()[0] + 0.1).abs() < 1e-6);
+        assert!((w1.to_vec()[0] + 0.29).abs() < 1e-5);
+    }
+}

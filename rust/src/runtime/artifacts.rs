@@ -1,0 +1,254 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes it) and the Rust [runtime](super) (which loads it).
+//!
+//! One manifest (`artifacts/manifest.txt`) describes every AOT-lowered
+//! module in the directory.  The format is a deliberately tiny line
+//! protocol (the crate carries no serde):
+//!
+//! ```text
+//! # mixnet artifact manifest v1
+//! module <name>
+//! hlo <relative-file.hlo.txt>
+//! input <name> <param|data|label> <d0,d1,...>
+//! output <name> <d0,d1,...>
+//! end
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Role of a module input, so generic drivers know what to feed it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorKind {
+    /// Trainable parameter owned by the coordinator.
+    Param,
+    /// Input features of a batch.
+    Data,
+    /// Target labels of a batch.
+    Label,
+}
+
+impl TensorKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "param" => Ok(TensorKind::Param),
+            "data" => Ok(TensorKind::Data),
+            "label" => Ok(TensorKind::Label),
+            other => Err(Error::Runtime(format!("manifest: unknown tensor kind '{other}'"))),
+        }
+    }
+}
+
+/// A named f32 tensor slot of a module.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    /// Slot name (parameter name, "data", "loss", "grad:<param>", ...).
+    pub name: String,
+    /// Role (inputs only; outputs use [`TensorKind::Data`] by convention).
+    pub kind: TensorKind,
+    /// Dimensions.
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Element count.
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered module: its HLO file plus input/output signatures in
+/// positional order.
+#[derive(Debug, Clone)]
+pub struct ModuleSpec {
+    /// Module name ("train_step", "sgd_step", "predict", ...).
+    pub name: String,
+    /// HLO text file, relative to the manifest.
+    pub hlo_file: PathBuf,
+    /// Positional input slots.
+    pub inputs: Vec<TensorSpec>,
+    /// Positional output slots.
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ModuleSpec {
+    /// Indices of inputs with the given kind, in positional order.
+    pub fn input_indices(&self, kind: TensorKind) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.kind == kind)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Position of the output named `name`.
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|t| t.name == name)
+    }
+}
+
+/// All modules described by a manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// Module specs by name.
+    pub modules: HashMap<String, ModuleSpec>,
+    /// Directory the manifest lives in (HLO paths resolve against it).
+    pub dir: PathBuf,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    if s == "scalar" {
+        return Ok(vec![]);
+    }
+    s.split(',')
+        .map(|d| {
+            d.parse::<usize>()
+                .map_err(|_| Error::Runtime(format!("manifest: bad dim '{d}' in '{s}'")))
+        })
+        .collect()
+}
+
+/// Parse manifest text.  `dir` is where relative HLO paths resolve.
+pub fn parse_manifest(text: &str, dir: &Path) -> Result<Manifest> {
+    let mut manifest = Manifest { modules: HashMap::new(), dir: dir.to_path_buf() };
+    let mut cur: Option<ModuleSpec> = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let tag = parts.next().unwrap();
+        let fail = |msg: &str| Error::Runtime(format!("manifest line {}: {msg}", lineno + 1));
+        match tag {
+            "module" => {
+                if cur.is_some() {
+                    return Err(fail("nested module (missing 'end')"));
+                }
+                let name = parts.next().ok_or_else(|| fail("module needs a name"))?;
+                cur = Some(ModuleSpec {
+                    name: name.to_string(),
+                    hlo_file: PathBuf::new(),
+                    inputs: vec![],
+                    outputs: vec![],
+                });
+            }
+            "hlo" => {
+                let m = cur.as_mut().ok_or_else(|| fail("'hlo' outside module"))?;
+                m.hlo_file = PathBuf::from(
+                    parts.next().ok_or_else(|| fail("hlo needs a file"))?,
+                );
+            }
+            "input" => {
+                let m = cur.as_mut().ok_or_else(|| fail("'input' outside module"))?;
+                let name = parts.next().ok_or_else(|| fail("input needs a name"))?;
+                let kind = TensorKind::parse(
+                    parts.next().ok_or_else(|| fail("input needs a kind"))?,
+                )?;
+                let shape =
+                    parse_shape(parts.next().ok_or_else(|| fail("input needs a shape"))?)?;
+                m.inputs.push(TensorSpec { name: name.to_string(), kind, shape });
+            }
+            "output" => {
+                let m = cur.as_mut().ok_or_else(|| fail("'output' outside module"))?;
+                let name = parts.next().ok_or_else(|| fail("output needs a name"))?;
+                let shape =
+                    parse_shape(parts.next().ok_or_else(|| fail("output needs a shape"))?)?;
+                m.outputs.push(TensorSpec {
+                    name: name.to_string(),
+                    kind: TensorKind::Data,
+                    shape,
+                });
+            }
+            "end" => {
+                let m = cur.take().ok_or_else(|| fail("'end' outside module"))?;
+                if m.hlo_file.as_os_str().is_empty() {
+                    return Err(fail("module missing 'hlo' line"));
+                }
+                manifest.modules.insert(m.name.clone(), m);
+            }
+            other => return Err(fail(&format!("unknown tag '{other}'"))),
+        }
+    }
+    if cur.is_some() {
+        return Err(Error::Runtime("manifest: unterminated module".into()));
+    }
+    Ok(manifest)
+}
+
+/// Load `<dir>/manifest.txt`.
+pub fn load_manifest(dir: &Path) -> Result<Manifest> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        Error::Runtime(format!(
+            "cannot read {} (run `make artifacts` first): {e}",
+            path.display()
+        ))
+    })?;
+    parse_manifest(&text, dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# mixnet artifact manifest v1
+module train_step
+hlo train_step.hlo.txt
+input wte param 100,16
+input data data 8,32
+input labels label 8,32
+output loss scalar
+output grad:wte 100,16
+end
+
+module predict
+hlo predict.hlo.txt
+input wte param 100,16
+input data data 8,32
+output logits 8,32,100
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = parse_manifest(SAMPLE, Path::new("/tmp")).unwrap();
+        assert_eq!(m.modules.len(), 2);
+        let ts = &m.modules["train_step"];
+        assert_eq!(ts.inputs.len(), 3);
+        assert_eq!(ts.inputs[0].kind, TensorKind::Param);
+        assert_eq!(ts.inputs[1].kind, TensorKind::Data);
+        assert_eq!(ts.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(ts.outputs[1].shape, vec![100, 16]);
+        assert_eq!(ts.output_index("grad:wte"), Some(1));
+        assert_eq!(ts.input_indices(TensorKind::Param), vec![0]);
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        let bad = "module m\nhlo f.txt\ninput x wat 1\nend\n";
+        assert!(parse_manifest(bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated() {
+        let bad = "module m\nhlo f.txt\n";
+        assert!(parse_manifest(bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_hlo() {
+        let bad = "module m\nend\n";
+        assert!(parse_manifest(bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn tensor_size() {
+        let t = TensorSpec { name: "x".into(), kind: TensorKind::Data, shape: vec![3, 4] };
+        assert_eq!(t.size(), 12);
+    }
+}

@@ -1,0 +1,268 @@
+//! The PJRT runtime (DESIGN S12): loads the HLO-text artifacts produced
+//! by `python/compile/aot.py` and executes them from Rust, so Python
+//! never runs on the training hot path.
+//!
+//! HLO **text** (not a serialized `HloModuleProto`) is the interchange
+//! format: jax >= 0.5 emits protos with 64-bit instruction ids that the
+//! linked xla_extension (0.5.1) rejects; the text parser reassigns ids
+//! and round-trips cleanly (see `/opt/skills` aot recipe).
+//!
+//! ```no_run
+//! use mixnet::runtime::Runtime;
+//! let rt = Runtime::cpu().unwrap();
+//! let programs = rt.load_dir(std::path::Path::new("artifacts")).unwrap();
+//! let step = &programs["train_step"];
+//! // positional f32 inputs per the manifest; outputs in manifest order
+//! # let inputs: Vec<Vec<f32>> = vec![];
+//! let outputs = step.run(&inputs.iter().map(|v| v.as_slice()).collect::<Vec<_>>()).unwrap();
+//! ```
+
+pub mod artifacts;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+pub use artifacts::{load_manifest, Manifest, ModuleSpec, TensorKind, TensorSpec};
+
+use crate::error::{Error, Result};
+
+fn rt(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+/// A PJRT client plus compilation cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime { client: xla::PjRtClient::cpu().map_err(rt)? })
+    }
+
+    /// Backend platform name ("cpu" here; "tpu" on a real pod).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO-text file against `spec`.
+    pub fn load_module(&self, dir: &Path, spec: &ModuleSpec) -> Result<Program> {
+        let path = dir.join(&spec.hlo_file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(rt)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(rt)?;
+        Ok(Program { exe, spec: spec.clone() })
+    }
+
+    /// Load every module listed in `<dir>/manifest.txt`.
+    pub fn load_dir(&self, dir: &Path) -> Result<HashMap<String, Program>> {
+        let manifest = load_manifest(dir)?;
+        manifest
+            .modules
+            .values()
+            .map(|spec| Ok((spec.name.clone(), self.load_module(&manifest.dir, spec)?)))
+            .collect()
+    }
+}
+
+/// A compiled, executable module.
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ModuleSpec,
+}
+
+impl Program {
+    /// The module's signature.
+    pub fn spec(&self) -> &ModuleSpec {
+        &self.spec
+    }
+
+    /// Execute with positional f32 host buffers; returns one `Vec<f32>`
+    /// per manifest output.  Input lengths are validated against the
+    /// manifest shapes.
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "module '{}' expects {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, ts) in inputs.iter().zip(&self.spec.inputs) {
+            if data.len() != ts.size() {
+                return Err(Error::Runtime(format!(
+                    "module '{}' input '{}': {} elements given, shape {:?} needs {}",
+                    self.spec.name,
+                    ts.name,
+                    data.len(),
+                    ts.shape,
+                    ts.size()
+                )));
+            }
+            let lit = xla::Literal::vec1(data);
+            let dims: Vec<i64> = ts.shape.iter().map(|&d| d as i64).collect();
+            literals.push(if ts.shape.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&dims).map_err(rt)?
+            });
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(rt)?;
+        // aot.py lowers with return_tuple=True: one tuple literal holding
+        // every output.
+        let tuple = result[0][0].to_literal_sync().map_err(rt)?;
+        let parts = tuple.to_tuple().map_err(rt)?;
+        if parts.len() != self.spec.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "module '{}': manifest lists {} outputs, HLO returned {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            )));
+        }
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, ts)| {
+                let v: Vec<f32> = lit.to_vec().map_err(rt)?;
+                if v.len() != ts.size() {
+                    return Err(Error::Runtime(format!(
+                        "module '{}' output '{}': got {} elements, expected {}",
+                        self.spec.name,
+                        ts.name,
+                        v.len(),
+                        ts.size()
+                    )));
+                }
+                Ok(v)
+            })
+            .collect()
+    }
+
+    /// Execute by output name: convenience wrapper returning a map.
+    pub fn run_named(&self, inputs: &[&[f32]]) -> Result<HashMap<String, Vec<f32>>> {
+        let outs = self.run(inputs)?;
+        Ok(self
+            .spec
+            .outputs
+            .iter()
+            .map(|t| t.name.clone())
+            .zip(outs)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use artifacts::parse_manifest;
+
+    /// HLO text for `f(x, y) = (x + y, x * y)` over f32[4]; written by
+    /// hand so the runtime tests do not depend on `make artifacts`.
+    const ADD_MUL_HLO: &str = r#"
+HloModule addmul, entry_computation_layout={(f32[4]{0}, f32[4]{0})->(f32[4]{0}, f32[4]{0})}
+
+ENTRY main {
+  x = f32[4]{0} parameter(0)
+  y = f32[4]{0} parameter(1)
+  add = f32[4]{0} add(x, y)
+  mul = f32[4]{0} multiply(x, y)
+  ROOT out = (f32[4]{0}, f32[4]{0}) tuple(add, mul)
+}
+"#;
+
+    fn write_artifacts() -> tempdir::TempDir {
+        let dir = tempdir::TempDir::new();
+        std::fs::write(dir.path().join("addmul.hlo.txt"), ADD_MUL_HLO).unwrap();
+        std::fs::write(
+            dir.path().join("manifest.txt"),
+            "module addmul\nhlo addmul.hlo.txt\ninput x data 4\ninput y data 4\noutput sum 4\noutput prod 4\nend\n",
+        )
+        .unwrap();
+        dir
+    }
+
+    /// Minimal tempdir (no external crate).
+    mod tempdir {
+        pub struct TempDir(std::path::PathBuf);
+        impl TempDir {
+            pub fn new() -> Self {
+                let p = std::env::temp_dir().join(format!(
+                    "mixnet-rt-test-{}-{:?}",
+                    std::process::id(),
+                    std::thread::current().id()
+                ));
+                std::fs::create_dir_all(&p).unwrap();
+                TempDir(p)
+            }
+            pub fn path(&self) -> &std::path::Path {
+                &self.0
+            }
+        }
+        impl Drop for TempDir {
+            fn drop(&mut self) {
+                let _ = std::fs::remove_dir_all(&self.0);
+            }
+        }
+    }
+
+    #[test]
+    fn load_and_execute_hlo_text() {
+        let dir = write_artifacts();
+        let rt = Runtime::cpu().unwrap();
+        let programs = rt.load_dir(dir.path()).unwrap();
+        let p = &programs["addmul"];
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let y = [10.0f32, 20.0, 30.0, 40.0];
+        let outs = p.run(&[&x, &y]).unwrap();
+        assert_eq!(outs[0], vec![11.0, 22.0, 33.0, 44.0]);
+        assert_eq!(outs[1], vec![10.0, 40.0, 90.0, 160.0]);
+        let named = p.run_named(&[&x, &y]).unwrap();
+        assert_eq!(named["prod"][3], 160.0);
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let dir = write_artifacts();
+        let rt = Runtime::cpu().unwrap();
+        let p = &rt.load_dir(dir.path()).unwrap()["addmul"];
+        let x = [1.0f32; 4];
+        assert!(p.run(&[&x]).is_err());
+    }
+
+    #[test]
+    fn wrong_size_rejected() {
+        let dir = write_artifacts();
+        let rt = Runtime::cpu().unwrap();
+        let p = &rt.load_dir(dir.path()).unwrap()["addmul"];
+        let x = [1.0f32; 4];
+        let y = [1.0f32; 3];
+        assert!(p.run(&[&x, &y]).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let rt = Runtime::cpu().unwrap();
+        let err = match rt.load_dir(Path::new("/nonexistent-dir")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected missing-manifest error"),
+        };
+        assert!(format!("{err}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn manifest_sample_roundtrip() {
+        let m = parse_manifest(
+            "module a\nhlo a.hlo.txt\ninput x data 2,2\noutput y 2,2\nend\n",
+            Path::new("."),
+        )
+        .unwrap();
+        assert_eq!(m.modules["a"].inputs[0].shape, vec![2, 2]);
+    }
+}

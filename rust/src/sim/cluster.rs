@@ -1,0 +1,306 @@
+//! Discrete-event simulation of data-parallel training through the
+//! two-level parameter server, in virtual time.
+//!
+//! Each machine repeats the paper's §2.3 loop: compute a batch
+//! (fwd+bwd on its devices in parallel), aggregate device gradients at
+//! the level-1 server (PCIe), exchange the merged gradient with the
+//! level-2 server (NIC).  The level-2 server's NIC is a shared resource:
+//! transfers from different machines serialize, which is what makes
+//! sequential consistency expensive at scale and why the paper runs
+//! inter-machine synchronization with *eventual* consistency.
+//!
+//! Wall-time per pass comes out of the event loop; the accuracy
+//! trajectory uses a calibrated phenomenological law (documented on
+//! [`ClusterConfig`]) because the simulator does not run real gradients.
+
+use super::cost::CostModel;
+
+/// Virtual cluster configuration.
+///
+/// **Accuracy law.**  Validation accuracy after cumulative progress `P`
+/// is `a(P) = a_inf * (1 - exp(-rate * P))`, where one unit of progress
+/// is one parameter update at the single-machine reference batch size.
+/// An update at effective batch `B` contributes `(B/B_ref)^kappa` units
+/// (`kappa < 1`: large batches help sublinearly — the reason Figure 8's
+/// distributed run converges *slower per pass* early), degraded by
+/// `1 / (1 + staleness_penalty * staleness)` under eventual consistency.
+/// Large-batch runs get a slightly higher asymptote `a_inf + batch_gain`
+/// (lower gradient noise at fixed lr), which is what makes the
+/// distributed curve *cross over* after ~10 passes, as in the paper.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of machines.
+    pub machines: usize,
+    /// Hardware rates.
+    pub cost: CostModel,
+    /// fwd+bwd FLOPs for one image.
+    pub flops_per_image: f64,
+    /// Model size in bytes (gradient = weight size).
+    pub grad_bytes: f64,
+    /// Images per device per batch (paper: 36).
+    pub images_per_device: usize,
+    /// Dataset size in images (ILSVRC12: 1.281M).
+    pub dataset_images: usize,
+    /// Data passes (epochs) to simulate.
+    pub passes: usize,
+    /// Inter-machine consistency: `true` = eventual (overlapped comm),
+    /// `false` = sequential (blocking round trip).
+    pub eventual: bool,
+    /// Asymptotic accuracy of the single-machine reference.
+    pub acc_inf: f64,
+    /// Convergence rate per unit progress.
+    pub acc_rate: f64,
+    /// Batch-size efficiency exponent (kappa).
+    pub batch_kappa: f64,
+    /// Extra asymptote for large effective batches.
+    pub batch_gain: f64,
+    /// Accuracy-progress penalty per update of staleness.
+    pub staleness_penalty: f64,
+}
+
+impl ClusterConfig {
+    /// The paper's Figure 8 setting: GoogLeNet-BN-class model on an
+    /// ILSVRC12-sized dataset, g2.8x machines.  `flops_per_image` and
+    /// `grad_bytes` should come from the real model
+    /// ([`crate::models::inception_bn`] via
+    /// [`graph_flops`](super::cost::graph_flops)).
+    pub fn googlenet_paper(machines: usize, flops_per_image: f64, grad_bytes: f64) -> Self {
+        ClusterConfig {
+            machines,
+            cost: CostModel::default(),
+            flops_per_image,
+            grad_bytes,
+            images_per_device: 36,
+            dataset_images: 1_281_167,
+            passes: 15,
+            eventual: machines > 1,
+            acc_inf: 0.66,
+            acc_rate: 0.32,
+            batch_kappa: 0.85,
+            batch_gain: 0.04,
+            staleness_penalty: 0.03,
+        }
+    }
+
+    fn images_per_machine_batch(&self) -> usize {
+        self.images_per_device * self.cost.devices_per_machine
+    }
+}
+
+/// Simulated statistics of one data pass.
+#[derive(Debug, Clone)]
+pub struct PassStat {
+    /// Pass index (1-based, matching the paper's x-axis).
+    pub pass: usize,
+    /// Virtual seconds this pass took.
+    pub seconds: f64,
+    /// Virtual seconds since training started.
+    pub cumulative_seconds: f64,
+    /// Server updates applied during this pass (all machines).
+    pub updates: usize,
+    /// Modeled validation accuracy at the end of the pass.
+    pub accuracy: f64,
+    /// Mean staleness (updates behind) observed by workers this pass.
+    pub staleness: f64,
+}
+
+/// Run the virtual cluster; returns one [`PassStat`] per data pass.
+pub fn simulate(cfg: &ClusterConfig) -> Vec<PassStat> {
+    assert!(cfg.machines >= 1);
+    let per_batch_images = cfg.images_per_machine_batch();
+    let batches_per_pass_per_machine =
+        (cfg.dataset_images / cfg.machines / per_batch_images).max(1);
+
+    // Per-device compute time for its share of the machine batch
+    // (devices run in parallel; level-1 aggregation follows).
+    let compute_s = cfg.cost.compute_time(cfg.flops_per_image * cfg.images_per_device as f64);
+    let l1_s = cfg.cost.level1_time(cfg.grad_bytes);
+    // One machine's push (or pull) occupies the server NIC for:
+    let wire_s = cfg.grad_bytes / cfg.cost.nic_bytes_per_s;
+    let update_s = cfg.cost.server_update_time(cfg.grad_bytes);
+
+    // Event state: per-machine clock & outstanding-comm completion; the
+    // level-2 server NIC frees at `server_free`.
+    let mut machine_clock = vec![0.0f64; cfg.machines];
+    let mut comm_done = vec![0.0f64; cfg.machines];
+    let mut server_free = 0.0f64;
+
+    // Progress accumulator for the accuracy law.
+    let ref_batch = per_batch_images as f64; // single-machine reference
+    let eff_batch = (per_batch_images * cfg.machines) as f64;
+    let per_update_progress = (eff_batch / ref_batch).powf(cfg.batch_kappa);
+    let acc_inf = if cfg.machines > 1 {
+        cfg.acc_inf + cfg.batch_gain * (eff_batch / ref_batch).ln() / 10.0f64.ln()
+    } else {
+        cfg.acc_inf
+    };
+
+    let mut progress = 0.0f64;
+    let mut stats = Vec::with_capacity(cfg.passes);
+    let mut prev_end = 0.0f64;
+
+    for pass in 1..=cfg.passes {
+        let mut staleness_sum = 0.0f64;
+        let mut staleness_n = 0usize;
+        for _batch in 0..batches_per_pass_per_machine {
+            for m in 0..cfg.machines {
+                // devices compute in parallel, then level-1 aggregates
+                let compute_end = machine_clock[m] + compute_s + l1_s;
+                // server round trip: push transfer + update + pull
+                // transfer, serialized on the server NIC.
+                let start = compute_end.max(server_free);
+                let push_end = start + wire_s + cfg.net_latency();
+                let updated = push_end + update_s;
+                let pull_end = updated + wire_s + cfg.net_latency();
+                server_free = pull_end;
+                if cfg.eventual {
+                    // Worker proceeds after local compute; one comm may
+                    // be outstanding (double-buffered weights).
+                    let stale_updates = ((pull_end - compute_end)
+                        / (compute_s + l1_s).max(1e-9))
+                        .max(0.0);
+                    staleness_sum += stale_updates;
+                    staleness_n += 1;
+                    machine_clock[m] = compute_end.max(comm_done[m]);
+                    comm_done[m] = pull_end;
+                } else {
+                    // Sequential: block until the fresh weights arrive.
+                    machine_clock[m] = pull_end;
+                    staleness_n += 1;
+                }
+            }
+        }
+        // A pass ends when the slowest machine finishes (and, for the
+        // sequential model, its last pull has landed).
+        let end = machine_clock
+            .iter()
+            .zip(&comm_done)
+            .map(|(c, d)| c.max(*d))
+            .fold(0.0f64, f64::max);
+        let staleness =
+            if staleness_n > 0 { staleness_sum / staleness_n as f64 } else { 0.0 };
+        let updates = batches_per_pass_per_machine * cfg.machines;
+        progress += updates as f64 / cfg.machines as f64 // server updates per pass
+            * per_update_progress
+            / (1.0 + cfg.staleness_penalty * staleness);
+        // Normalize progress so one single-machine pass is ~1 unit.
+        let unit = cfg.dataset_images as f64 / per_batch_images as f64;
+        let accuracy = acc_inf * (1.0 - (-cfg.acc_rate * progress / unit).exp());
+        stats.push(PassStat {
+            pass,
+            seconds: end - prev_end,
+            cumulative_seconds: end,
+            updates,
+            accuracy,
+            staleness,
+        });
+        prev_end = end;
+    }
+    stats
+}
+
+impl ClusterConfig {
+    fn net_latency(&self) -> f64 {
+        self.cost.net_latency_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_cfg(machines: usize) -> ClusterConfig {
+        // GoogLeNet-BN-class, as measured on our inception graph:
+        // ~12.3 GFLOP fwd+bwd per image, ~11.3M params (45 MB grads).
+        ClusterConfig::googlenet_paper(machines, 12.3e9, 45.2e6)
+    }
+
+    #[test]
+    fn ten_machines_near_linear_speedup() {
+        let one = simulate(&paper_cfg(1));
+        let ten = simulate(&paper_cfg(10));
+        let ratio = one[0].seconds / ten[0].seconds;
+        assert!(
+            (6.0..=12.0).contains(&ratio),
+            "speedup {ratio:.2} outside the paper's ~10x"
+        );
+    }
+
+    #[test]
+    fn accuracy_crossover_around_ten_passes() {
+        let mut c1 = paper_cfg(1);
+        let mut c10 = paper_cfg(10);
+        c1.passes = 30;
+        c10.passes = 30;
+        let a1 = simulate(&c1);
+        let a10 = simulate(&c10);
+        // early: distributed behind; late: ahead (paper Figure 8)
+        assert!(a10[2].accuracy < a1[2].accuracy, "early passes should favor 1 machine");
+        let cross = a1
+            .iter()
+            .zip(&a10)
+            .find(|(s1, s10)| s10.accuracy > s1.accuracy)
+            .map(|(s, _)| s.pass);
+        let cross = cross.expect("no crossover within 30 passes");
+        assert!(
+            (5..=20).contains(&cross),
+            "crossover at pass {cross}, paper shows ~10"
+        );
+    }
+
+    #[test]
+    fn sequential_consistency_is_slower() {
+        // At 10 machines the server NIC saturates and both modes converge
+        // to the wire bound; the consistency gap shows where compute
+        // dominates, so compare at 4 machines (compute-bound regime).
+        let mut seq = paper_cfg(4);
+        seq.eventual = false;
+        let mut evt = paper_cfg(4);
+        evt.eventual = true;
+        let sequential = simulate(&seq);
+        let eventual = simulate(&evt);
+        assert!(
+            sequential[0].seconds > 1.05 * eventual[0].seconds,
+            "seq {} vs evt {}",
+            sequential[0].seconds,
+            eventual[0].seconds
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = simulate(&paper_cfg(10));
+        let b = simulate(&paper_cfg(10));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.seconds, y.seconds);
+            assert_eq!(x.accuracy, y.accuracy);
+        }
+    }
+
+    #[test]
+    fn pass_seconds_in_paper_ballpark() {
+        // Paper: 14k s/pass on one machine, 1.4k on ten. Our defaults
+        // should land within ~3x of those magnitudes.
+        let one = simulate(&paper_cfg(1));
+        assert!(
+            (4_000.0..45_000.0).contains(&one[0].seconds),
+            "1-machine pass {:.0}s",
+            one[0].seconds
+        );
+        let ten = simulate(&paper_cfg(10));
+        assert!(
+            (400.0..4_500.0).contains(&ten[0].seconds),
+            "10-machine pass {:.0}s",
+            ten[0].seconds
+        );
+    }
+
+    #[test]
+    fn staleness_zero_when_sequential() {
+        let mut cfg = paper_cfg(4);
+        cfg.eventual = false;
+        let stats = simulate(&cfg);
+        assert!(stats.iter().all(|s| s.staleness == 0.0));
+    }
+}

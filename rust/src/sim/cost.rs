@@ -1,0 +1,166 @@
+//! Cost model for the cluster simulator: analytic FLOP counts per graph
+//! plus calibrated hardware rates.
+
+use crate::graph::{Graph, Op, ShapeMap};
+
+/// Floating-point operations of one execution of `graph` (both passes if
+/// the graph contains backward nodes).  Convolutions and matmuls dominate;
+/// elementwise ops are counted at one FLOP per output element.
+pub fn graph_flops(graph: &Graph, shapes: &ShapeMap) -> f64 {
+    let mut total = 0.0f64;
+    for (id, node) in graph.nodes.iter().enumerate() {
+        let out_elems = |o: usize| shapes[id][o].iter().product::<usize>() as f64;
+        let in_shape = |i: usize| &shapes[node.inputs[i].node][node.inputs[i].out];
+        total += match &node.op {
+            Op::Variable => 0.0,
+            Op::FullyConnected { num_hidden } => {
+                let x = in_shape(0);
+                let in_dim: f64 = x[1..].iter().product::<usize>() as f64;
+                2.0 * x[0] as f64 * in_dim * *num_hidden as f64
+            }
+            Op::FullyConnectedBackward => {
+                // dx = dy.W, dw = dy^T.x, db = sum(dy): ~2x forward matmul
+                let dy = in_shape(0);
+                let w = in_shape(2);
+                4.0 * dy[0] as f64 * dy[1] as f64 * w[1] as f64
+            }
+            Op::Convolution { kernel, .. } => {
+                let x = in_shape(0);
+                let y = &shapes[id][0];
+                2.0 * y.iter().product::<usize>() as f64
+                    * (x[1] * kernel * kernel) as f64
+            }
+            Op::ConvolutionBackward { kernel, .. } => {
+                let x = in_shape(1);
+                let dy = in_shape(0);
+                4.0 * dy.iter().product::<usize>() as f64
+                    * (x[1] * kernel * kernel) as f64
+            }
+            Op::BatchNorm { .. } | Op::BatchNormBackward => 5.0 * out_elems(0),
+            Op::Pooling { kernel, .. } => out_elems(0) * (kernel * kernel) as f64,
+            Op::PoolingBackward { kernel, .. } => out_elems(0) * (kernel * kernel) as f64,
+            Op::SoftmaxOutput | Op::SoftmaxOutputBackward => 4.0 * out_elems(0),
+            Op::FusedElemwise { steps } => out_elems(0) * steps.len().max(1) as f64,
+            // elementwise family: 1 FLOP per element
+            _ => (0..graph.num_outputs_of(id)).map(out_elems).sum::<f64>(),
+        };
+    }
+    total
+}
+
+/// Calibrated hardware rates for the virtual cluster.
+///
+/// Defaults model the paper's testbed (EC2 g2.8x: 4x GK104, 10 GbE);
+/// [`CostModel::calibrate_compute`] replaces the compute rate with one
+/// measured on this host so that simulated magnitudes derive from real
+/// observations where possible.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Sustained FLOP/s of one device (GPU) on this workload.
+    pub device_flops: f64,
+    /// Devices (GPUs) per machine, aggregated by the level-1 server.
+    pub devices_per_machine: usize,
+    /// Inter-machine NIC bandwidth, bytes/s (10 GbE = 1.25e9).
+    pub nic_bytes_per_s: f64,
+    /// Intra-machine (PCIe) bandwidth, bytes/s, for level-1 aggregation.
+    pub pcie_bytes_per_s: f64,
+    /// Fixed per-message latency, seconds.
+    pub net_latency_s: f64,
+    /// Level-2 server update cost per byte (SGD merge), seconds/byte.
+    pub server_update_s_per_byte: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            // GK104 ~ 3 TFLOP/s peak; convnets sustain ~25-30%.
+            device_flops: 0.8e12,
+            devices_per_machine: 4,
+            nic_bytes_per_s: 1.25e9,
+            pcie_bytes_per_s: 8.0e9,
+            net_latency_s: 0.5e-3,
+            server_update_s_per_byte: 2.0e-11,
+        }
+    }
+}
+
+impl CostModel {
+    /// Replace the device compute rate with a measured one: `flops` of a
+    /// real graph executed in `seconds` on this host (the calibration run
+    /// of `cargo bench --bench fig8_scalability`).
+    pub fn calibrate_compute(mut self, flops: f64, seconds: f64) -> Self {
+        assert!(seconds > 0.0 && flops > 0.0);
+        self.device_flops = flops / seconds;
+        self
+    }
+
+    /// Seconds for one device to compute fwd+bwd of `flops`.
+    pub fn compute_time(&self, flops: f64) -> f64 {
+        flops / self.device_flops
+    }
+
+    /// Seconds for the level-1 server to aggregate `bytes` of gradient
+    /// from its devices over PCIe (tree reduction: each device's copy
+    /// crosses the bus once).
+    pub fn level1_time(&self, bytes: f64) -> f64 {
+        self.devices_per_machine as f64 * bytes / self.pcie_bytes_per_s
+    }
+
+    /// Seconds for one machine's merged gradient to reach the level-2
+    /// server and for updated weights to return, given `sharing` machines
+    /// contending for the server NIC (push + pull).
+    pub fn level2_time(&self, bytes: f64, sharing: usize) -> f64 {
+        2.0 * self.net_latency_s
+            + 2.0 * bytes * sharing as f64 / self.nic_bytes_per_s
+    }
+
+    /// Seconds for the level-2 server to apply a `bytes`-sized update.
+    pub fn server_update_time(&self, bytes: f64) -> f64 {
+        bytes * self.server_update_s_per_byte
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::infer_shapes;
+    use crate::models::by_name;
+
+    #[test]
+    fn flops_scale_with_batch() {
+        let m = by_name("simple-cnn").unwrap();
+        let (g1, s1) = m.graph(8).unwrap();
+        let (g2, s2) = m.graph(16).unwrap();
+        let f1 = graph_flops(&g1, &infer_shapes(&g1, &s1).unwrap());
+        let f2 = graph_flops(&g2, &infer_shapes(&g2, &s2).unwrap());
+        assert!(f2 > 1.8 * f1 && f2 < 2.2 * f1, "f1={f1} f2={f2}");
+    }
+
+    #[test]
+    fn inception_flops_in_published_range() {
+        // GoogLeNet-class forward ~1.6 GFLOP/image at 224x224 (published
+        // ~1.5-2 depending on variant); ours adds BN everywhere.
+        let m = by_name("inception-bn").unwrap();
+        let (g, vs) = m.graph(1).unwrap();
+        let f = graph_flops(&g, &infer_shapes(&g, &vs).unwrap());
+        assert!(
+            (1.0e9..8.0e9).contains(&f),
+            "inception fwd flops {f:.2e} outside sanity range"
+        );
+    }
+
+    #[test]
+    fn calibration_replaces_rate() {
+        let cm = CostModel::default().calibrate_compute(1e9, 0.5);
+        assert_eq!(cm.device_flops, 2e9);
+        assert!((cm.compute_time(4e9) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn level2_scales_with_contention() {
+        let cm = CostModel::default();
+        let t1 = cm.level2_time(1e8, 1);
+        let t10 = cm.level2_time(1e8, 10);
+        assert!(t10 > 9.0 * (t1 - 2.0 * cm.net_latency_s));
+    }
+}

@@ -1,0 +1,21 @@
+//! Virtual-time cluster simulator (DESIGN S13b).
+//!
+//! The paper's Figure 8 trains GoogLeNet-BN on ILSVRC12 across 10 EC2
+//! g2.8x machines (4 GPUs each, 10 GbE).  This host has a single CPU
+//! core, so paper-scale wall-clock curves cannot be measured directly;
+//! instead we (a) run the *real* two-level KVStore path at small scale to
+//! validate correctness and calibrate per-op costs, then (b) replay the
+//! paper's configuration in virtual time with this discrete-event
+//! simulator.  DESIGN §4 documents the substitution.
+//!
+//! * [`cost`] — FLOP counting over computation graphs and the calibrated
+//!   [`CostModel`](cost::CostModel) (compute rate, NIC bandwidth, PCIe).
+//! * [`cluster`] — the event-driven simulation of data-parallel SGD
+//!   through a two-level parameter server, producing per-pass wall time
+//!   and a phenomenological accuracy trajectory.
+
+pub mod cluster;
+pub mod cost;
+
+pub use cluster::{simulate, ClusterConfig, PassStat};
+pub use cost::{graph_flops, CostModel};

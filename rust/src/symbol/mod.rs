@@ -1,0 +1,291 @@
+//! `Symbol` — declarative symbolic expressions (paper §2.1).
+//!
+//! Symbols are immutable expression nodes composed by operators; chaining
+//! layer constructors reproduces the paper's Figure 2 MLP:
+//!
+//! ```
+//! use mixnet::symbol::{Act, Symbol};
+//! let mlp = Symbol::var("data")
+//!     .fully_connected("fc1", 64)
+//!     .activation("relu1", Act::Relu)
+//!     .fully_connected("fc2", 10)
+//!     .softmax_output("softmax");
+//! assert!(mlp.list_arguments().contains(&"fc1_weight".to_string()));
+//! ```
+//!
+//! Layer constructors implicitly create the parameter variables
+//! (`{name}_weight`, `{name}_bias`, ...) exactly like MXNet.  Binding a
+//! symbol converts the shared expression DAG into a [`Graph`] via
+//! hash-consing on node identity ([`Symbol::to_graph`]).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::graph::{Entry, Graph, NodeId, Op};
+use crate::ndarray::kernels::{EwBinary, PoolKind};
+
+pub use crate::ndarray::kernels::ActKind as Act;
+pub use crate::ndarray::kernels::PoolKind as Pool;
+
+struct SymNode {
+    op: Op,
+    name: String,
+    inputs: Vec<Symbol>,
+}
+
+/// A node in the symbolic expression DAG (cheap to clone; shares the
+/// underlying expression).
+#[derive(Clone)]
+pub struct Symbol {
+    node: Arc<SymNode>,
+    out: usize,
+}
+
+impl std::fmt::Debug for Symbol {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Symbol({}:{})", self.node.name, self.out)
+    }
+}
+
+impl Symbol {
+    fn apply(op: Op, name: impl Into<String>, inputs: Vec<Symbol>) -> Symbol {
+        Symbol { node: Arc::new(SymNode { op, name: name.into(), inputs }), out: 0 }
+    }
+
+    /// Select another output of a multi-output node.
+    pub fn output(&self, out: usize) -> Symbol {
+        Symbol { node: Arc::clone(&self.node), out }
+    }
+
+    /// Free variable (paper: `mx.Variable(:data)`).
+    pub fn var(name: impl Into<String>) -> Symbol {
+        Symbol::apply(Op::Variable, name, vec![])
+    }
+
+    /// Name of this symbol's node.
+    pub fn name(&self) -> &str {
+        &self.node.name
+    }
+
+    // ------------------------------------------------------------------
+    // layer constructors (implicit parameter variables, MXNet-style)
+    // ------------------------------------------------------------------
+
+    /// Fully-connected layer; creates `{name}_weight` and `{name}_bias`.
+    pub fn fully_connected(&self, name: &str, num_hidden: usize) -> Symbol {
+        let w = Symbol::var(format!("{name}_weight"));
+        let b = Symbol::var(format!("{name}_bias"));
+        Symbol::apply(
+            Op::FullyConnected { num_hidden },
+            name,
+            vec![self.clone(), w, b],
+        )
+    }
+
+    /// Square convolution; creates `{name}_weight` and `{name}_bias`.
+    pub fn convolution(
+        &self,
+        name: &str,
+        num_filter: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Symbol {
+        let w = Symbol::var(format!("{name}_weight"));
+        let b = Symbol::var(format!("{name}_bias"));
+        Symbol::apply(
+            Op::Convolution { num_filter, kernel, stride, pad },
+            name,
+            vec![self.clone(), w, b],
+        )
+    }
+
+    /// Elementwise activation (paper: `mx.Activation(act_type=:relu)`).
+    pub fn activation(&self, name: &str, kind: Act) -> Symbol {
+        Symbol::apply(Op::Activation { kind }, name, vec![self.clone()])
+    }
+
+    /// Square pooling.
+    pub fn pooling(&self, name: &str, kind: PoolKind, kernel: usize, stride: usize, pad: usize) -> Symbol {
+        Symbol::apply(Op::Pooling { kind, kernel, stride, pad }, name, vec![self.clone()])
+    }
+
+    /// Batch normalization; creates `{name}_gamma` and `{name}_beta`.
+    pub fn batch_norm(&self, name: &str) -> Symbol {
+        let gamma = Symbol::var(format!("{name}_gamma"));
+        let beta = Symbol::var(format!("{name}_beta"));
+        Symbol::apply(Op::BatchNorm { eps: 1e-5 }, name, vec![self.clone(), gamma, beta])
+    }
+
+    /// Collapse to 2-d `[batch, features]`.
+    pub fn flatten(&self, name: &str) -> Symbol {
+        Symbol::apply(Op::Flatten, name, vec![self.clone()])
+    }
+
+    /// Dropout with drop probability `p`.
+    pub fn dropout(&self, name: &str, p: f32) -> Symbol {
+        Symbol::apply(Op::Dropout { p, seed: 0xd06 }, name, vec![self.clone()])
+    }
+
+    /// Softmax + cross-entropy head; creates the `{name}_label` variable.
+    pub fn softmax_output(&self, name: &str) -> Symbol {
+        let label = Symbol::var(format!("{name}_label"));
+        self.softmax_output_with_label(name, &label)
+    }
+
+    /// Softmax head with an explicit label symbol.
+    pub fn softmax_output_with_label(&self, name: &str, label: &Symbol) -> Symbol {
+        Symbol::apply(Op::SoftmaxOutput, name, vec![self.clone(), label.clone()])
+    }
+
+    /// Channel concat (the Inception merge).
+    pub fn concat(name: &str, parts: &[Symbol]) -> Symbol {
+        assert!(!parts.is_empty());
+        Symbol::apply(Op::Concat, name, parts.to_vec())
+    }
+
+    /// `self + s`.
+    pub fn add_scalar(&self, name: &str, s: f32) -> Symbol {
+        Symbol::apply(Op::AddScalar { s }, name, vec![self.clone()])
+    }
+
+    /// `self * s`.
+    pub fn mul_scalar(&self, name: &str, s: f32) -> Symbol {
+        Symbol::apply(Op::MulScalar { s }, name, vec![self.clone()])
+    }
+
+    fn elemwise(&self, other: &Symbol, op: EwBinary, name: &str) -> Symbol {
+        Symbol::apply(Op::Elemwise { op }, name, vec![self.clone(), other.clone()])
+    }
+
+    // ------------------------------------------------------------------
+    // binding support
+    // ------------------------------------------------------------------
+
+    /// Convert symbol DAG(s) to a [`Graph`].  Shared subexpressions are
+    /// deduplicated by node identity.  Returns the graph with `heads` as
+    /// its outputs.
+    pub fn to_graph(heads: &[Symbol]) -> Graph {
+        let mut graph = Graph::new();
+        let mut memo: HashMap<*const SymNode, NodeId> = HashMap::new();
+        fn lower(
+            sym: &Symbol,
+            graph: &mut Graph,
+            memo: &mut HashMap<*const SymNode, NodeId>,
+        ) -> NodeId {
+            let key = Arc::as_ptr(&sym.node);
+            if let Some(&id) = memo.get(&key) {
+                return id;
+            }
+            let inputs: Vec<Entry> = sym
+                .node
+                .inputs
+                .iter()
+                .map(|s| Entry { node: lower(s, graph, memo), out: s.out })
+                .collect();
+            let id = graph.add_node(sym.node.op.clone(), sym.node.name.clone(), inputs);
+            memo.insert(key, id);
+            id
+        }
+        let outputs: Vec<Entry> = heads
+            .iter()
+            .map(|h| Entry { node: lower(h, &mut graph, &mut memo), out: h.out })
+            .collect();
+        graph.outputs = outputs;
+        graph.num_forward = graph.nodes.len();
+        graph
+    }
+
+    /// Names of all argument variables in depth-first order (paper's
+    /// `list_arguments`).
+    pub fn list_arguments(&self) -> Vec<String> {
+        let g = Symbol::to_graph(std::slice::from_ref(self));
+        g.variables().into_iter().map(|id| g.nodes[id].name.clone()).collect()
+    }
+}
+
+impl std::ops::Add for &Symbol {
+    type Output = Symbol;
+    fn add(self, rhs: Self) -> Symbol {
+        self.elemwise(rhs, EwBinary::Add, "_add")
+    }
+}
+
+impl std::ops::Sub for &Symbol {
+    type Output = Symbol;
+    fn sub(self, rhs: Self) -> Symbol {
+        self.elemwise(rhs, EwBinary::Sub, "_sub")
+    }
+}
+
+impl std::ops::Mul for &Symbol {
+    type Output = Symbol;
+    fn mul(self, rhs: Self) -> Symbol {
+        self.elemwise(rhs, EwBinary::Mul, "_mul")
+    }
+}
+
+impl std::ops::Div for &Symbol {
+    type Output = Symbol;
+    fn div(self, rhs: Self) -> Symbol {
+        self.elemwise(rhs, EwBinary::Div, "_div")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure2_mlp_arguments() {
+        let mlp = Symbol::var("data")
+            .fully_connected("fc1", 64)
+            .activation("relu1", Act::Relu)
+            .fully_connected("fc2", 10)
+            .softmax_output("softmax");
+        let args = mlp.list_arguments();
+        assert_eq!(
+            args,
+            vec![
+                "data",
+                "fc1_weight",
+                "fc1_bias",
+                "fc2_weight",
+                "fc2_bias",
+                "softmax_label"
+            ]
+        );
+    }
+
+    #[test]
+    fn shared_subexpression_deduplicated() {
+        let x = Symbol::var("x");
+        let y = x.add_scalar("y", 1.0);
+        let z = &y + &y; // y appears twice but must lower once
+        let g = Symbol::to_graph(&[z]);
+        let count = g.nodes.iter().filter(|n| n.name == "y").count();
+        assert_eq!(count, 1);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn multi_output_selection() {
+        let x = Symbol::var("x");
+        let pool = x.pooling("p", Pool::Max, 2, 2, 0);
+        let mask = pool.output(1);
+        let g = Symbol::to_graph(&[pool.clone(), mask]);
+        assert_eq!(g.outputs[0].out, 0);
+        assert_eq!(g.outputs[1].out, 1);
+        assert_eq!(g.outputs[0].node, g.outputs[1].node);
+    }
+
+    #[test]
+    fn operator_sugar_builds_elemwise() {
+        let a = Symbol::var("a");
+        let b = Symbol::var("b");
+        let c = &(&a * &b) + &a;
+        let g = Symbol::to_graph(&[c]);
+        assert!(g.nodes.iter().any(|n| matches!(n.op, Op::Elemwise { op: EwBinary::Mul })));
+        assert!(g.nodes.iter().any(|n| matches!(n.op, Op::Elemwise { op: EwBinary::Add })));
+    }
+}

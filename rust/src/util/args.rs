@@ -1,0 +1,107 @@
+//! A tiny flag parser for the CLI and benches (the crate is deliberately
+//! dependency-light, so no clap).
+//!
+//! Grammar: `--key value` and `--flag` (boolean), with positionals kept
+//! in order.  Unknown keys are collected so callers can reject them.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// `--key value` pairs.
+    pub options: HashMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (exclude argv[0]).
+    ///
+    /// `value_keys` lists the options that consume a value; anything else
+    /// starting with `--` is a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I, value_keys: &[&str]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if value_keys.contains(&key) {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?;
+                    args.options.insert(key.to_string(), val);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Get an option parsed as `T`, or `default`.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: cannot parse '{v}'"))),
+        }
+    }
+
+    /// Get a string option.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Whether a boolean flag was given.
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let a = Args::parse(
+            v(&["train", "--model", "mlp", "--verbose", "--epochs", "3", "extra"]),
+            &["model", "epochs"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get_str("model", "x"), "mlp");
+        assert_eq!(a.get::<usize>("epochs", 0).unwrap(), 3);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(v(&["--model"]), &["model"]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(v(&[]), &[]).unwrap();
+        assert_eq!(a.get::<usize>("epochs", 7).unwrap(), 7);
+        assert_eq!(a.get_str("model", "mlp"), "mlp");
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = Args::parse(v(&["--epochs", "many"]), &["epochs"]).unwrap();
+        assert!(a.get::<usize>("epochs", 0).is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! A small benchmark harness (criterion is not vendored in this image).
+//!
+//! The `cargo bench` targets under `rust/benches/` are `harness = false`
+//! binaries built on this module: warmup, repeated timed runs, and
+//! median/mean/stddev reporting, plus aligned-table printing used to
+//! regenerate the paper's figures as text tables.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    /// Case label.
+    pub name: String,
+    /// Per-iteration wall times.
+    pub samples: Vec<Duration>,
+}
+
+impl BenchStats {
+    /// Median per-iteration time in seconds.
+    pub fn median_s(&self) -> f64 {
+        let mut v: Vec<f64> = self.samples.iter().map(|d| d.as_secs_f64()).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if v.is_empty() {
+            return f64::NAN;
+        }
+        let mid = v.len() / 2;
+        if v.len() % 2 == 0 {
+            (v[mid - 1] + v[mid]) / 2.0
+        } else {
+            v[mid]
+        }
+    }
+
+    /// Mean per-iteration time in seconds.
+    pub fn mean_s(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().map(|d| d.as_secs_f64()).sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation in seconds.
+    pub fn stddev_s(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let mean = self.mean_s();
+        let var = self
+            .samples
+            .iter()
+            .map(|d| {
+                let x = d.as_secs_f64() - mean;
+                x * x
+            })
+            .sum::<f64>()
+            / (n - 1) as f64;
+        var.sqrt()
+    }
+
+    /// Median in milliseconds.
+    pub fn median_ms(&self) -> f64 {
+        self.median_s() * 1e3
+    }
+}
+
+/// Benchmark runner: warms up then collects `samples` timed iterations of
+/// `f`, bounding total time by `max_total`.
+pub struct Bencher {
+    /// Number of warmup iterations (not recorded).
+    pub warmup: usize,
+    /// Target number of recorded samples.
+    pub samples: usize,
+    /// Total time budget per case; sampling stops early when exceeded.
+    pub max_total: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 2, samples: 10, max_total: Duration::from_secs(20) }
+    }
+}
+
+impl Bencher {
+    /// Quick preset for cheap micro-benchmarks.
+    pub fn micro() -> Self {
+        Bencher { warmup: 10, samples: 50, max_total: Duration::from_secs(10) }
+    }
+
+    /// Run one case.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let start = Instant::now();
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+            if start.elapsed() > self.max_total {
+                break;
+            }
+        }
+        let stats = BenchStats { name: name.to_string(), samples };
+        eprintln!(
+            "  {:<40} median {:>10.3} ms   mean {:>10.3} ms ± {:>7.3} ({} samples)",
+            stats.name,
+            stats.median_ms(),
+            stats.mean_s() * 1e3,
+            stats.stddev_s() * 1e3,
+            stats.samples.len()
+        );
+        stats
+    }
+}
+
+/// Print an aligned text table (used by the figure-regeneration benches).
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        s
+    };
+    let hdr: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    println!("{}", line(&hdr));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+    for row in rows {
+        println!("{}", line(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        let mk = |ms: &[u64]| BenchStats {
+            name: "t".into(),
+            samples: ms.iter().map(|&m| Duration::from_millis(m)).collect(),
+        };
+        assert!((mk(&[1, 2, 3]).median_ms() - 2.0).abs() < 1e-9);
+        assert!((mk(&[1, 2, 3, 4]).median_ms() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stddev_zero_for_single_sample() {
+        let s = BenchStats { name: "t".into(), samples: vec![Duration::from_millis(5)] };
+        assert_eq!(s.stddev_s(), 0.0);
+    }
+
+    #[test]
+    fn runner_collects_samples() {
+        let b = Bencher { warmup: 1, samples: 5, max_total: Duration::from_secs(5) };
+        let stats = b.run("noop", || { std::hint::black_box(1 + 1); });
+        assert_eq!(stats.samples.len(), 5);
+    }
+}

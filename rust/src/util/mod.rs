@@ -1,0 +1,18 @@
+//! Small self-contained substrates: PRNG, thread pool, bench harness and a
+//! mini property-testing helper.  These exist because `mixnet` is
+//! deliberately dependency-light (the paper: *"no other dependency"*).
+
+pub mod args;
+pub mod bench;
+pub mod proptest;
+pub mod rng;
+pub mod threadpool;
+
+pub use args::Args;
+pub use rng::Rng;
+pub use threadpool::ThreadPool;
+
+/// Format a byte count as a human-readable MB string (as used by Figure 7).
+pub fn mb(bytes: usize) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}

@@ -1,0 +1,69 @@
+//! A miniature property-based testing helper (`proptest` is not vendored).
+//!
+//! [`check`] runs a property against many seeded-random cases and, on
+//! failure, reports the seed so the case can be replayed deterministically.
+//! Generators are plain closures over [`Rng`], which keeps shrinking out of
+//! scope but preserves the essential property-testing workflow: random
+//! exploration + reproducible counterexamples.
+
+use super::rng::Rng;
+
+/// Run `prop` against `cases` random inputs drawn by `gen`.
+///
+/// Panics with the failing seed and debug-printed input on the first
+/// counterexample.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let base = 0x6d69786e65742121u64; // deterministic base seed
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Rng::seed_from_u64(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): input = {input:?}");
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result<(), String>` so failures
+/// can carry an explanation.
+pub fn check_explain<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> std::result::Result<(), String>,
+) {
+    let base = 0x6d69786e65742121u64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Rng::seed_from_u64(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}\ninput = {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 100, |r| (r.below(1000) as i64, r.below(1000) as i64), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_reports() {
+        check("always-false", 10, |r| r.below(10), |_| false);
+    }
+}

@@ -1,0 +1,181 @@
+//! A fixed-size worker thread pool.
+//!
+//! The dependency engine dispatches ready operations onto this pool
+//! (MXNet §3.2: *"the engine uses multiple threads to scheduling the
+//! operations for better resource utilization and parallelization"*).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+struct Shared {
+    rx: Mutex<mpsc::Receiver<Msg>>,
+    /// Jobs submitted but not yet finished; guarded by `idle` for wait().
+    inflight: AtomicUsize,
+    idle: (Mutex<()>, Condvar),
+}
+
+/// Fixed-size thread pool with a `wait_idle` barrier.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` worker threads (clamped to >= 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let shared = Arc::new(Shared {
+            rx: Mutex::new(rx),
+            inflight: AtomicUsize::new(0),
+            idle: (Mutex::new(()), Condvar::new()),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("mixnet-worker-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx, shared, workers, size }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job for execution.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait_idle(&self) {
+        let (lock, cvar) = &self.shared.idle;
+        let mut guard = lock.lock().unwrap();
+        while self.shared.inflight.load(Ordering::SeqCst) != 0 {
+            guard = cvar.wait(guard).unwrap();
+        }
+        drop(guard);
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let msg = {
+            let rx = shared.rx.lock().unwrap();
+            rx.recv()
+        };
+        match msg {
+            Ok(Msg::Run(job)) => {
+                job();
+                let prev = shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                if prev == 1 {
+                    let (lock, cvar) = &shared.idle;
+                    let _g = lock.lock().unwrap();
+                    cvar.notify_all();
+                }
+            }
+            Ok(Msg::Shutdown) | Err(_) => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        // The pool can be dropped *from one of its own workers* (the last
+        // op closure may own the last Arc to the engine); joining oneself
+        // would deadlock (EDEADLK), so that worker is detached instead —
+        // it exits on the Shutdown message it already has queued.
+        let me = std::thread::current().id();
+        for w in self.workers.drain(..) {
+            if w.thread().id() != me {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..1000 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn jobs_can_submit_more_jobs() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let counter = Arc::new(AtomicU64::new(0));
+        // A job is not allowed to submit into the same pool it runs on
+        // (the engine never does this either: completion callbacks run on
+        // the scheduler side).  Submit from a separate thread instead.
+        let (tx, rx) = mpsc::channel();
+        {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                tx.send(()).unwrap();
+            });
+        }
+        rx.recv().unwrap();
+        {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn size_clamped_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let done = Arc::new(AtomicU64::new(0));
+        let d = Arc::clone(&done);
+        pool.execute(move || {
+            d.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,126 @@
+//! Integration tests for the two-level parameter server over real TCP:
+//! multi-machine convergence, consistency models, bandwidth accounting,
+//! and failure behavior.
+
+use std::sync::Arc;
+
+use mixnet::engine::{create, EngineKind};
+use mixnet::executor::BindConfig;
+use mixnet::io::{synth::class_clusters, ArrayDataIter};
+use mixnet::kvstore::server::{PsServer, ServerUpdater};
+use mixnet::kvstore::{dist::DistKVStore, Consistency, KVStore};
+use mixnet::models::mlp;
+use mixnet::module::{Module, UpdateMode};
+
+fn updater(machines: usize) -> ServerUpdater {
+    ServerUpdater { lr: 0.4 / machines as f32, momentum: 0.9, weight_decay: 1e-4, rescale: 1.0 }
+}
+
+fn train_machine(
+    addr: std::net::SocketAddr,
+    machine: u32,
+    consistency: Consistency,
+    epochs: usize,
+) -> f32 {
+    let engine = create(EngineKind::Threaded, 2);
+    let kv = Arc::new(DistKVStore::connect(addr, machine, 1, consistency, engine.clone()).unwrap());
+    let ds = class_clusters(512, 4, 16, 0.3, 77 + machine as u64);
+    let mut iter = ArrayDataIter::new(ds.features, ds.labels, &[16], 32, true, engine.clone());
+    let model = mlp(&[32], 16, 4);
+    let shapes = model.param_shapes(32).unwrap();
+    let mut module = Module::new(model.symbol, engine);
+    module.bind(32, &[16], &shapes, BindConfig::default(), 5).unwrap();
+    let stats = module
+        .fit(&mut iter, &UpdateMode::KvStore { store: kv.clone(), device: 0 }, epochs)
+        .unwrap();
+    kv.barrier().unwrap();
+    stats.last().unwrap().accuracy
+}
+
+#[test]
+fn three_machines_converge_sequential() {
+    let machines = 3;
+    let mut server = PsServer::start(0, machines, updater(machines)).unwrap();
+    let addr = server.addr();
+    let handles: Vec<_> = (0..machines as u32)
+        .map(|m| std::thread::spawn(move || train_machine(addr, m, Consistency::Sequential, 3)))
+        .collect();
+    for h in handles {
+        let acc = h.join().unwrap();
+        assert!(acc > 0.85, "accuracy {acc}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn two_machines_converge_eventual() {
+    let machines = 2;
+    let mut server = PsServer::start(0, machines, updater(machines)).unwrap();
+    let addr = server.addr();
+    let handles: Vec<_> = (0..machines as u32)
+        .map(|m| std::thread::spawn(move || train_machine(addr, m, Consistency::Eventual, 4)))
+        .collect();
+    for h in handles {
+        let acc = h.join().unwrap();
+        // eventual consistency trades freshness for speed; must still learn
+        assert!(acc > 0.75, "accuracy {acc}");
+    }
+    server.shutdown();
+}
+
+/// Level-1 aggregation: with d devices per machine the server must see
+/// 1/d of the device pushes (the Figure 5 bandwidth-reduction claim).
+#[test]
+fn bandwidth_reduced_by_device_count() {
+    let mut server = PsServer::start(0, 1, updater(1)).unwrap();
+    let engine = create(EngineKind::Threaded, 2);
+    let devices = 4;
+    let kv =
+        DistKVStore::connect(server.addr(), 0, devices, Consistency::Sequential, engine.clone())
+            .unwrap();
+    let w = mixnet::ndarray::NDArray::zeros_on(&[256], engine.clone());
+    kv.init("w", &w).unwrap();
+    let rounds = 8;
+    for _ in 0..rounds {
+        for d in 0..devices {
+            kv.push("w", &mixnet::ndarray::NDArray::ones(&[256]), d).unwrap();
+        }
+    }
+    kv.flush();
+    // init + one aggregated push per round
+    assert_eq!(server.messages_received(), 1 + rounds);
+    server.shutdown();
+}
+
+/// The server rejects a second init with a different shape but accepts
+/// idempotent re-init (first writer wins).
+#[test]
+fn init_first_writer_wins() {
+    let mut server = PsServer::start(0, 2, updater(2)).unwrap();
+    let e1 = create(EngineKind::Threaded, 2);
+    let e2 = create(EngineKind::Threaded, 2);
+    let kv1 =
+        DistKVStore::connect(server.addr(), 0, 1, Consistency::Sequential, e1.clone()).unwrap();
+    let kv2 =
+        DistKVStore::connect(server.addr(), 1, 1, Consistency::Sequential, e2.clone()).unwrap();
+    kv1.init("w", &mixnet::ndarray::NDArray::from_vec(&[2], vec![5.0, 5.0])).unwrap();
+    // second machine inits the same key with different values: ignored
+    kv2.init("w", &mixnet::ndarray::NDArray::from_vec(&[2], vec![9.0, 9.0])).unwrap();
+    let out = mixnet::ndarray::NDArray::zeros(&[2]);
+    kv2.pull("w", &out, 0).unwrap();
+    kv2.flush();
+    assert_eq!(out.to_vec(), vec![5.0, 5.0], "first writer must win");
+    server.shutdown();
+}
+
+/// Pulling an unknown key must error at the client, not hang.
+#[test]
+fn unknown_key_errors() {
+    let mut server = PsServer::start(0, 1, updater(1)).unwrap();
+    let engine = create(EngineKind::Threaded, 2);
+    let kv =
+        DistKVStore::connect(server.addr(), 0, 1, Consistency::Sequential, engine).unwrap();
+    let out = mixnet::ndarray::NDArray::zeros(&[4]);
+    assert!(kv.pull("ghost", &out, 0).is_err());
+    server.shutdown();
+}

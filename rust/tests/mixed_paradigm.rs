@@ -1,0 +1,148 @@
+//! E0 — the system property behind Tables 1/2: imperative NDArray ops and
+//! declarative Symbol executions schedule **jointly** on one engine, with
+//! correct cross-paradigm dependencies.
+
+use std::collections::HashMap;
+
+use mixnet::engine::{create, EngineKind};
+use mixnet::executor::{BindConfig, Executor};
+use mixnet::ndarray::NDArray;
+use mixnet::symbol::{Act, Symbol};
+
+fn mlp() -> Symbol {
+    Symbol::var("data")
+        .fully_connected("fc1", 16)
+        .activation("relu1", Act::Relu)
+        .fully_connected("fc2", 4)
+        .softmax_output("softmax")
+}
+
+fn args(engine: &mixnet::engine::EngineRef, batch: usize) -> HashMap<String, NDArray> {
+    let mut m = HashMap::new();
+    m.insert("data".into(), NDArray::randn_on(&[batch, 8], 0.0, 1.0, 1, engine.clone()));
+    m.insert("fc1_weight".into(), NDArray::randn_on(&[16, 8], 0.0, 0.3, 2, engine.clone()));
+    m.insert("fc1_bias".into(), NDArray::zeros_on(&[16], engine.clone()));
+    m.insert("fc2_weight".into(), NDArray::randn_on(&[4, 16], 0.0, 0.3, 3, engine.clone()));
+    m.insert("fc2_bias".into(), NDArray::zeros_on(&[4], engine.clone()));
+    m.insert(
+        "softmax_label".into(),
+        NDArray::from_vec_on(&[batch], (0..batch).map(|i| (i % 4) as f32).collect(), engine.clone()),
+    );
+    m
+}
+
+const PARAMS: [&str; 4] = ["fc1_weight", "fc1_bias", "fc2_weight", "fc2_bias"];
+
+/// The paper's §2.2 loop: graph backward followed by imperative updates
+/// with NO explicit synchronization — the engine must order the update
+/// after the gradient write, and the next forward after the update.
+#[test]
+fn imperative_update_ordered_against_graph_ops() {
+    let engine = create(EngineKind::Threaded, 4);
+    let a = args(&engine, 8);
+    let exec =
+        Executor::bind(&mlp(), engine.clone(), a.clone(), &PARAMS, BindConfig::default())
+            .unwrap();
+    let mut losses = vec![];
+    for _ in 0..25 {
+        exec.forward_backward().unwrap();
+        for p in PARAMS {
+            exec.arg(p).unwrap().sub_scaled_(exec.grad(p).unwrap(), 0.3);
+        }
+        // no wait_all: loss read itself must observe a consistent state
+        losses.push(exec.softmax_xent_loss().unwrap());
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.8),
+        "mixed loop failed to optimize: {losses:?}"
+    );
+}
+
+/// An imperative mutation of a bound argument must be visible to the next
+/// symbolic forward (same tag space).
+#[test]
+fn imperative_write_visible_to_symbolic_forward() {
+    let engine = create(EngineKind::Threaded, 4);
+    let a = args(&engine, 4);
+    let exec = Executor::bind(
+        &mlp(),
+        engine.clone(),
+        a.clone(),
+        &[],
+        BindConfig { training: false, ..Default::default() },
+    )
+    .unwrap();
+    exec.forward();
+    let p1 = exec.outputs()[0].to_vec();
+    // zero all weights imperatively -> uniform softmax
+    for p in PARAMS {
+        let w = a.get(p).unwrap();
+        w.mul_scalar_(0.0);
+    }
+    exec.forward();
+    let p2 = exec.outputs()[0].to_vec();
+    assert_ne!(p1, p2);
+    for row in p2.chunks(4) {
+        for v in row {
+            assert!((v - 0.25).abs() < 1e-6, "uniform expected, got {row:?}");
+        }
+    }
+}
+
+/// Two executors and raw NDArray chains on ONE engine must not interfere.
+#[test]
+fn concurrent_executors_and_ndarray_chains() {
+    let engine = create(EngineKind::Threaded, 4);
+    let e1 = Executor::bind(
+        &mlp(),
+        engine.clone(),
+        args(&engine, 8),
+        &PARAMS,
+        BindConfig::default(),
+    )
+    .unwrap();
+    let e2 = Executor::bind(
+        &mlp(),
+        engine.clone(),
+        args(&engine, 8),
+        &PARAMS,
+        BindConfig::default(),
+    )
+    .unwrap();
+    let x = NDArray::full(&[4096], 1.0);
+    for _ in 0..10 {
+        e1.forward_backward().unwrap();
+        e2.forward_backward().unwrap();
+        x.add_(&NDArray::full(&[4096], 0.5));
+    }
+    engine.wait_all();
+    let g1 = e1.grad("fc1_weight").unwrap().to_vec();
+    let g2 = e2.grad("fc1_weight").unwrap().to_vec();
+    assert_eq!(g1, g2, "identical executors must produce identical grads");
+    assert!((x.at(0) - 6.0).abs() < 1e-6);
+}
+
+/// Naive (concrete) and threaded (lazy) engines are semantically
+/// equivalent on the same mixed program.
+#[test]
+fn execution_models_agree_on_mixed_program() {
+    let mut finals = vec![];
+    for kind in [EngineKind::Naive, EngineKind::Threaded] {
+        let engine = create(kind, 4);
+        let a = args(&engine, 8);
+        let exec =
+            Executor::bind(&mlp(), engine.clone(), a.clone(), &PARAMS, BindConfig::default())
+                .unwrap();
+        for _ in 0..5 {
+            exec.forward_backward().unwrap();
+            for p in PARAMS {
+                exec.arg(p).unwrap().sub_scaled_(exec.grad(p).unwrap(), 0.1);
+            }
+        }
+        engine.wait_all();
+        finals.push(a.get("fc1_weight").unwrap().to_vec());
+    }
+    for (x, y) in finals[0].iter().zip(&finals[1]) {
+        assert!((x - y).abs() < 1e-5, "engines diverged: {x} vs {y}");
+    }
+}

@@ -1,0 +1,77 @@
+//! Data-pipeline integration (paper §2.4): synthetic dataset -> RecordIO
+//! file -> prefetching iterator -> training run.
+
+use std::sync::Arc;
+
+use mixnet::engine::{create, EngineKind};
+use mixnet::executor::BindConfig;
+use mixnet::io::synth::{self, write_recordio};
+use mixnet::io::{DataIter, PrefetchIter, RecordFileIter};
+use mixnet::models::mlp;
+use mixnet::module::{Module, UpdateMode};
+use mixnet::optimizer::Sgd;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("mixnet_{}_{name}.rec", std::process::id()))
+}
+
+#[test]
+fn recordio_prefetch_train_end_to_end() {
+    let path = tmp("e2e");
+    let ds = synth::class_clusters(512, 4, 16, 0.3, 11);
+    write_recordio(&ds, &path).unwrap();
+
+    let engine = create(EngineKind::Threaded, 4);
+    let inner = RecordFileIter::open(&path, 32, engine.clone()).unwrap();
+    let mut iter = PrefetchIter::new(Box::new(inner), 4);
+
+    let model = mlp(&[32], 16, 4);
+    let shapes = model.param_shapes(32).unwrap();
+    let mut module = Module::new(model.symbol, engine);
+    module.bind(32, &[16], &shapes, BindConfig::default(), 3).unwrap();
+    let stats = module
+        .fit(&mut iter, &UpdateMode::Local(Arc::new(Sgd::new(0.4))), 4)
+        .unwrap();
+    assert!(stats.last().unwrap().accuracy > 0.9, "{:?}", stats.last());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn prefetch_yields_identical_batches() {
+    let path = tmp("ident");
+    let ds = synth::class_clusters(96, 3, 8, 0.2, 5);
+    write_recordio(&ds, &path).unwrap();
+    let engine = create(EngineKind::Threaded, 2);
+
+    let mut plain = RecordFileIter::open(&path, 16, engine.clone()).unwrap();
+    let mut pref =
+        PrefetchIter::new(Box::new(RecordFileIter::open(&path, 16, engine).unwrap()), 3);
+    loop {
+        match (plain.next_batch(), pref.next_batch()) {
+            (None, None) => break,
+            (Some(a), Some(b)) => {
+                assert_eq!(a.data.to_vec(), b.data.to_vec());
+                assert_eq!(a.label.to_vec(), b.label.to_vec());
+            }
+            (a, b) => panic!("length mismatch: {:?} vs {:?}", a.is_some(), b.is_some()),
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn image_dataset_roundtrip() {
+    let path = tmp("img");
+    let ds = synth::images(64, 4, 1, 8, 8, 0.2, 9);
+    write_recordio(&ds, &path).unwrap();
+    let engine = create(EngineKind::Threaded, 2);
+    let mut it = RecordFileIter::open(&path, 8, engine).unwrap();
+    let mut n = 0;
+    while let Some(b) = it.next_batch() {
+        assert_eq!(b.data.shape(), &[8, 1, 8, 8]);
+        assert!(b.label.to_vec().iter().all(|&l| l < 4.0));
+        n += 1;
+    }
+    assert_eq!(n, 8);
+    std::fs::remove_file(&path).ok();
+}

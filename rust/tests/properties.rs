@@ -1,0 +1,387 @@
+//! Property-based tests over the core invariants (DESIGN deliverable c):
+//! random graphs through the memory planner and executor, random schedules
+//! through both engines, wire-protocol fuzzing, kernel algebra.
+
+use std::collections::HashMap;
+
+use mixnet::engine::{create, EngineKind};
+use mixnet::executor::{BindConfig, Executor};
+use mixnet::graph::memory::{default_external, plan_memory, validate_plan, AllocStrategy};
+use mixnet::graph::{infer_shapes, Entry, Graph, Op};
+use mixnet::kvstore::wire::{decode, encode, Msg};
+use mixnet::ndarray::kernels::{self, ActKind, EwBinary};
+use mixnet::ndarray::NDArray;
+use mixnet::util::proptest::{check, check_explain};
+use mixnet::util::Rng;
+
+/// Random same-shape elementwise DAG over a `[b, d]` input: the planner
+/// and executor must handle arbitrary fan-out/fan-in.
+fn random_ew_graph(rng: &mut Rng, max_nodes: usize) -> (Graph, usize, usize) {
+    let b = 1 + rng.below(4);
+    let d = 1 + rng.below(16);
+    let mut g = Graph::new();
+    let data = g.add_variable("data");
+    let mut entries = vec![Entry::new(data)];
+    let n = 2 + rng.below(max_nodes);
+    for i in 0..n {
+        let a = entries[rng.below(entries.len())];
+        let op = match rng.below(5) {
+            0 => Op::Activation { kind: ActKind::Relu },
+            1 => Op::AddScalar { s: rng.uniform(-1.0, 1.0) },
+            2 => Op::MulScalar { s: rng.uniform(0.5, 1.5) },
+            3 => {
+                let b2 = entries[rng.below(entries.len())];
+                let id = g.add_node(
+                    Op::Elemwise { op: EwBinary::Add },
+                    format!("ew{i}"),
+                    vec![a, b2],
+                );
+                entries.push(Entry::new(id));
+                continue;
+            }
+            _ => Op::Identity,
+        };
+        let id = g.add_node(op, format!("n{i}"), vec![a]);
+        entries.push(Entry::new(id));
+    }
+    // 1-3 outputs picked from the tail
+    let k = 1 + rng.below(3.min(entries.len()));
+    g.outputs = entries[entries.len() - k..].to_vec();
+    g.num_forward = g.nodes.len();
+    (g, b, d)
+}
+
+#[test]
+fn prop_memory_plans_always_validate() {
+    check_explain(
+        "memory-plan-sound",
+        60,
+        |rng| random_ew_graph(rng, 24),
+        |(g, b, d)| {
+            let mut vs = HashMap::new();
+            vs.insert("data".to_string(), vec![*b, *d]);
+            let shapes = infer_shapes(g, &vs).map_err(|e| e.to_string())?;
+            let external = default_external(g, &[]);
+            for strategy in AllocStrategy::all() {
+                let plan = plan_memory(g, &shapes, &external, strategy);
+                validate_plan(g, &shapes, &external, &plan)
+                    .map_err(|e| format!("{strategy}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_alloc_strategies_numerically_equal() {
+    check_explain(
+        "alloc-strategies-equal",
+        30,
+        |rng| {
+            let (g, b, d) = random_ew_graph(rng, 16);
+            let data: Vec<f32> = (0..b * d).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            (g, b, d, data)
+        },
+        |(g, b, d, data)| {
+            let mut baseline: Option<Vec<Vec<f32>>> = None;
+            for strategy in AllocStrategy::all() {
+                for fuse in [false, true] {
+                    let engine = create(EngineKind::Threaded, 2);
+                    let mut args = HashMap::new();
+                    args.insert(
+                        "data".to_string(),
+                        NDArray::from_vec_on(&[*b, *d], data.clone(), engine.clone()),
+                    );
+                    let exec = Executor::bind_graph(
+                        g.clone(),
+                        engine,
+                        args,
+                        &[],
+                        BindConfig { strategy, training: false, fuse },
+                    )
+                    .map_err(|e| e.to_string())?;
+                    exec.forward();
+                    exec.wait();
+                    let outs: Vec<Vec<f32>> =
+                        exec.outputs().iter().map(|o| o.to_vec()).collect();
+                    match &baseline {
+                        None => baseline = Some(outs),
+                        Some(want) => {
+                            for (a, b) in want.iter().zip(&outs) {
+                                for (x, y) in a.iter().zip(b) {
+                                    if (x - y).abs() > 1e-5 {
+                                        return Err(format!(
+                                            "{strategy} fuse={fuse}: {x} != {y}"
+                                        ));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Per-var program order: ops writing one var must run in push order on
+/// BOTH engines (the reproducibility property of §3.2).
+#[test]
+fn prop_engine_write_order_is_program_order() {
+    check_explain(
+        "engine-write-order",
+        20,
+        |rng| {
+            // (n_vars, ops as (write_var, [read_vars...]))
+            let n_vars = 2 + rng.below(6);
+            let ops: Vec<(usize, Vec<usize>)> = (0..30 + rng.below(60))
+                .map(|_| {
+                    let w = rng.below(n_vars);
+                    let reads = (0..rng.below(3)).map(|_| rng.below(n_vars)).collect();
+                    (w, reads)
+                })
+                .collect();
+            (n_vars, ops)
+        },
+        |(n_vars, ops)| {
+            for kind in [EngineKind::Threaded, EngineKind::Naive] {
+                let engine = create(kind, 4);
+                let vars: Vec<_> = (0..*n_vars).map(|_| engine.new_var()).collect();
+                let logs: Vec<_> = (0..*n_vars)
+                    .map(|_| std::sync::Arc::new(std::sync::Mutex::new(Vec::<usize>::new())))
+                    .collect();
+                let mut expected: Vec<Vec<usize>> = vec![vec![]; *n_vars];
+                for (op_id, (w, reads)) in ops.iter().enumerate() {
+                    expected[*w].push(op_id);
+                    let log = std::sync::Arc::clone(&logs[*w]);
+                    engine.push(
+                        "op",
+                        reads.iter().map(|&r| vars[r]).collect(),
+                        vec![vars[*w]],
+                        Box::new(move || log.lock().unwrap().push(op_id)),
+                    );
+                }
+                engine.wait_all();
+                for (v, want) in expected.iter().enumerate() {
+                    let got = logs[v].lock().unwrap().clone();
+                    if got != *want {
+                        return Err(format!(
+                            "{kind:?} var {v}: got {got:?}, want {want:?}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_wire_roundtrip() {
+    check_explain(
+        "wire-roundtrip",
+        200,
+        |rng| {
+            let key: String =
+                (0..rng.below(20)).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
+            let value: Vec<f32> = (0..rng.below(64)).map(|_| rng.uniform(-1e6, 1e6)).collect();
+            match rng.below(6) {
+                0 => Msg::Init { key, value },
+                1 => Msg::Push { key, value, machine: rng.below(1024) as u32 },
+                2 => Msg::Pull { key, after_version: rng.next_u64() },
+                3 => Msg::Value { key, value, version: rng.next_u64() },
+                4 => Msg::Barrier { id: rng.next_u64(), machine: rng.below(64) as u32 },
+                _ => Msg::Err { msg: key },
+            }
+        },
+        |msg| {
+            let enc = encode(msg);
+            let dec = decode(&enc[8..]).map_err(|e| e.to_string())?;
+            if dec != *msg {
+                return Err(format!("roundtrip mismatch: {dec:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Arbitrary corruption of a wire frame must never panic — only error or
+/// decode to some (other) valid message.
+#[test]
+fn prop_wire_fuzz_no_panic() {
+    check(
+        "wire-fuzz",
+        300,
+        |rng| {
+            let mut enc = encode(&Msg::Push {
+                key: "weights".into(),
+                value: vec![1.0; 16],
+                machine: 3,
+            });
+            for _ in 0..1 + rng.below(8) {
+                let i = rng.below(enc.len());
+                enc[i] ^= 1 << rng.below(8);
+            }
+            let cut = 8 + rng.below(enc.len() - 8);
+            (enc, cut)
+        },
+        |(enc, cut)| {
+            let _ = decode(&enc[8..]);
+            let _ = decode(&enc[8..*cut]);
+            true // reaching here without panic is the property
+        },
+    );
+}
+
+/// GEMM algebra: the three variants agree with each other under explicit
+/// transposition, and the reference (slow) kernels agree with the
+/// optimized ones.
+#[test]
+fn prop_gemm_variants_agree() {
+    check_explain(
+        "gemm-agree",
+        40,
+        |rng| {
+            let (m, k, n) = (1 + rng.below(12), 1 + rng.below(12), 1 + rng.below(12));
+            let a: Vec<f32> = (0..m * k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            (m, k, n, a, b)
+        },
+        |(m, k, n, a, b)| {
+            let (m, k, n) = (*m, *k, *n);
+            let mut c0 = vec![0.0; m * n];
+            kernels::gemm(a, b, &mut c0, m, k, n, 0.0);
+            // b^T laid out as [n, k]
+            let mut bt = vec![0.0; n * k];
+            for i in 0..k {
+                for j in 0..n {
+                    bt[j * k + i] = b[i * n + j];
+                }
+            }
+            let mut c1 = vec![0.0; m * n];
+            kernels::gemm_nt(a, &bt, &mut c1, m, k, n, 0.0);
+            // a^T laid out as [k, m]
+            let mut at = vec![0.0; k * m];
+            for i in 0..m {
+                for j in 0..k {
+                    at[j * m + i] = a[i * k + j];
+                }
+            }
+            let mut c2 = vec![0.0; m * n];
+            kernels::gemm_tn(&at, b, &mut c2, m, k, n, 0.0);
+            // reference mode
+            kernels::set_reference_kernels(true);
+            let mut c3 = vec![0.0; m * n];
+            kernels::gemm(a, b, &mut c3, m, k, n, 0.0);
+            kernels::set_reference_kernels(false);
+            for i in 0..m * n {
+                for (name, c) in [("nt", &c1), ("tn", &c2), ("ref", &c3)] {
+                    if (c0[i] - c[i]).abs() > 1e-4 {
+                        return Err(format!("{name}[{i}]: {} vs {}", c0[i], c[i]));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Pruning to a subset of outputs never changes the values of the outputs
+/// that remain (paper §3.1 feature-extraction claim).
+#[test]
+fn prop_prune_preserves_remaining_outputs() {
+    check_explain(
+        "prune-preserves",
+        30,
+        |rng| {
+            let (g, b, d) = random_ew_graph(rng, 20);
+            let data: Vec<f32> = (0..b * d).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            (g, b, d, data)
+        },
+        |(g, b, d, data)| {
+            let run = |graph: Graph, out_idx: usize| -> Result<Vec<f32>, String> {
+                let engine = create(EngineKind::Threaded, 2);
+                let mut args = HashMap::new();
+                args.insert(
+                    "data".to_string(),
+                    NDArray::from_vec_on(&[*b, *d], data.clone(), engine.clone()),
+                );
+                let exec = Executor::bind_graph(
+                    graph,
+                    engine,
+                    args,
+                    &[],
+                    BindConfig { training: false, ..Default::default() },
+                )
+                .map_err(|e| e.to_string())?;
+                exec.forward();
+                exec.wait();
+                Ok(exec.outputs()[out_idx].to_vec())
+            };
+            let full = run(g.clone(), 0)?;
+            let (pruned, remap) =
+                mixnet::graph::optimize::prune(g, &g.outputs[..1]);
+            let mut pg = pruned;
+            pg.outputs = vec![Entry { node: remap[&g.outputs[0].node], out: g.outputs[0].out }];
+            if pg.nodes.len() > g.nodes.len() {
+                return Err("prune grew the graph".into());
+            }
+            let got = run(pg, 0)?;
+            if got != full {
+                return Err("pruned output differs".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// RecordIO: random payload roundtrip and corruption tolerance.
+#[test]
+fn prop_recordio_roundtrip_and_corruption() {
+    use mixnet::io::{RecordReader, RecordWriter};
+    check_explain(
+        "recordio",
+        25,
+        |rng| {
+            let recs: Vec<Vec<u8>> = (0..1 + rng.below(10))
+                .map(|_| (0..rng.below(200)).map(|_| rng.below(256) as u8).collect())
+                .collect();
+            let flip = rng.below(200);
+            (recs, flip)
+        },
+        |(recs, flip)| {
+            let path = std::env::temp_dir().join(format!(
+                "mixnet_prop_{}_{:?}.rec",
+                std::process::id(),
+                std::thread::current().id()
+            ));
+            let mut w = RecordWriter::create(&path).map_err(|e| e.to_string())?;
+            for r in recs {
+                w.write_record(r).map_err(|e| e.to_string())?;
+            }
+            w.finish().map_err(|e| e.to_string())?;
+            // clean read-back
+            let mut rd = RecordReader::open(&path).map_err(|e| e.to_string())?;
+            for r in recs {
+                let got = rd.next_record().map_err(|e| e.to_string())?.ok_or("eof")?;
+                if got != *r {
+                    std::fs::remove_file(&path).ok();
+                    return Err("payload mismatch".into());
+                }
+            }
+            // corruption must not panic
+            let mut bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+            if !bytes.is_empty() {
+                let i = flip % bytes.len();
+                bytes[i] ^= 0xff;
+                std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+                if let Ok(mut rd) = RecordReader::open(&path) {
+                    while let Ok(Some(_)) = rd.next_record() {}
+                }
+            }
+            std::fs::remove_file(&path).ok();
+            Ok(())
+        },
+    );
+}
