@@ -86,5 +86,41 @@ fn main() {
         format!("{:.1} us", stats.median_s() * 1e6),
     ]);
 
+    // ---- inter- vs intra-op cooperation on heavy GEMMs ---------------
+    // One heavy op in flight gets the whole intra-op pool; eight
+    // independent heavy ops split it (budget = pool / heavies), so the
+    // batch should take well under 8x the single-op time on multi-core
+    // hosts while never oversubscribing.
+    let bh = Bencher { warmup: 1, samples: 5, max_total: std::time::Duration::from_secs(20) };
+    let engine = create(EngineKind::Threaded, 4);
+    let sz = 384;
+    let xs: Vec<NDArray> = (0..8)
+        .map(|i| NDArray::randn_on(&[sz, sz], 0.0, 1.0, 20 + i as u64, engine.clone()))
+        .collect();
+    let w = NDArray::randn_on(&[sz, sz], 0.0, 1.0, 40, engine.clone());
+    engine.wait_all();
+    let one = bh.run("one-heavy-gemm", || {
+        let y = xs[0].dot(&w);
+        y.wait_to_read();
+    });
+    rows.push(vec![
+        format!("1 heavy GEMM {sz}^3 (full intra-op pool)"),
+        format!("{:.1} ms", one.median_s() * 1e3),
+    ]);
+    let eight = bh.run("eight-heavy-gemms", || {
+        let ys: Vec<NDArray> = xs.iter().map(|x| x.dot(&w)).collect();
+        for y in &ys {
+            y.wait_to_read();
+        }
+    });
+    rows.push(vec![
+        format!("8 independent GEMMs {sz}^3 (budget-shared)"),
+        format!(
+            "{:.1} ms ({:.2}x one op)",
+            eight.median_s() * 1e3,
+            eight.median_s() / one.median_s()
+        ),
+    ]);
+
     print_table("engine microbenchmarks", &["case", "cost"], &rows);
 }

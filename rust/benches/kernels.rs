@@ -1,0 +1,148 @@
+//! Kernel-level before/after benchmark for the blocked, intra-op-parallel
+//! GEMM backend, emitting machine-readable `BENCH_kernels.json`.
+//!
+//! Cases:
+//! * `gemm-ikj-seed`    — the seed generation's single-threaded i-k-j loop
+//!                        (the "before" baseline)
+//! * `gemm-reference`   — the deliberately slow j-i-p reference kernel
+//! * `gemm@T`           — the blocked/packed kernel pinned to T intra-op
+//!                        threads (T = 1 shows pure blocking gains;
+//!                        higher T shows intra-op scaling)
+//! * `gemm_nt@T` / `gemm_tn@T` — transpose variants at the FC shapes
+//! * `conv2d@T`         — batched im2col convolution forward
+//!
+//! Acceptance targets (ISSUE 1): blocked 1-thread >= 2x `gemm-ikj-seed`
+//! at 512x512x512, and 4-thread >= 2.5x over 1-thread.
+//!
+//! ```text
+//! cargo bench --bench kernels                # full sweep + JSON
+//! BENCH_OUT=/tmp/k.json cargo bench --bench kernels
+//! ```
+
+use mixnet::ndarray::kernels as k;
+use mixnet::util::bench::{print_table, write_bench_json, BenchRecord, Bencher};
+use mixnet::util::{intra_pool, with_intra_budget, Rng};
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn main() {
+    let b = Bencher { warmup: 2, samples: 7, max_total: std::time::Duration::from_secs(25) };
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut rows = Vec::new();
+    let pool_threads = intra_pool().threads();
+    // Pinned thread counts to sweep (dedup keeps the table tidy on small
+    // hosts); 0 threads available never happens (pool clamps to 1).
+    let mut sweeps = vec![1usize, 2, 4, pool_threads];
+    sweeps.sort_unstable();
+    sweeps.dedup();
+    sweeps.retain(|&t| t <= pool_threads);
+
+    // ---- square GEMM: the acceptance-criteria shape ------------------
+    let (m, kk, n) = (512, 512, 512);
+    let flops = 2.0 * (m * kk * n) as f64;
+    let a = randv(m * kk, 1);
+    let bb = randv(kk * n, 2);
+    let mut c = vec![0.0f32; m * n];
+    let shape = format!("{m}x{kk}x{n}");
+
+    let stats = b.run("gemm-ikj-seed", || k::gemm_ikj(&a, &bb, &mut c, m, kk, n, 0.0));
+    let seed_ms = stats.median_ms();
+    records.push(BenchRecord::from_stats("gemm-ikj-seed", &shape, 1, &stats, flops));
+    rows.push(vec!["gemm-ikj-seed".into(), shape.clone(), "1".into(), format!("{seed_ms:.1} ms")]);
+
+    let stats = b.run("gemm-reference", || {
+        k::gemm_reference(&a, &bb, &mut c, m, kk, n, 0.0, false, false)
+    });
+    records.push(BenchRecord::from_stats("gemm-reference", &shape, 1, &stats, flops));
+    rows.push(vec![
+        "gemm-reference".into(),
+        shape.clone(),
+        "1".into(),
+        format!("{:.1} ms", stats.median_ms()),
+    ]);
+
+    let mut blocked_1t_ms = f64::NAN;
+    for &t in &sweeps {
+        let stats = with_intra_budget(t, || {
+            b.run(&format!("gemm@{t}"), || k::gemm(&a, &bb, &mut c, m, kk, n, 0.0))
+        });
+        if t == 1 {
+            blocked_1t_ms = stats.median_ms();
+        }
+        records.push(BenchRecord::from_stats("gemm", &shape, t, &stats, flops));
+        rows.push(vec![
+            "gemm-blocked".into(),
+            shape.clone(),
+            format!("{t}"),
+            format!(
+                "{:.1} ms ({:.2}x seed, {:.2}x 1t)",
+                stats.median_ms(),
+                seed_ms / stats.median_ms(),
+                blocked_1t_ms / stats.median_ms()
+            ),
+        ]);
+    }
+
+    // ---- transpose variants at FC-training shapes --------------------
+    for (name, tm, tk, tn) in
+        [("gemm_nt", 256usize, 1024usize, 256usize), ("gemm_tn", 256, 1024, 256)]
+    {
+        let vflops = 2.0 * (tm * tk * tn) as f64;
+        let vshape = format!("{tm}x{tk}x{tn}");
+        let (x, w) = (randv(tm * tk, 3), randv(tn * tk, 4));
+        let mut y = vec![0.0f32; tm * tn];
+        for &t in &sweeps {
+            let stats = with_intra_budget(t, || {
+                b.run(&format!("{name}@{t}"), || {
+                    if name == "gemm_nt" {
+                        k::gemm_nt(&x, &w, &mut y, tm, tk, tn, 0.0);
+                    } else {
+                        // a^T is [k,m]: reuse x as [tk, tm] layout
+                        k::gemm_tn(&x, &w[..tk * tn], &mut y, tm, tk, tn, 0.0);
+                    }
+                })
+            });
+            records.push(BenchRecord::from_stats(name, &vshape, t, &stats, vflops));
+        }
+    }
+
+    // ---- batched conv forward (fig6's hot op) ------------------------
+    let (cn, cc, ch, cw, cf, ck) = (16, 16, 32, 32, 32, 3);
+    let (oh, ow) = (k::conv_out(ch, ck, 1, 1), k::conv_out(cw, ck, 1, 1));
+    let cflops = 2.0 * (cn * cf * oh * ow * cc * ck * ck) as f64;
+    let cshape = format!("{cn}x{cc}x{ch}x{cw}-f{cf}k{ck}");
+    let x = randv(cn * cc * ch * cw, 5);
+    let wt = randv(cf * cc * ck * ck, 6);
+    let bias = randv(cf, 7);
+    let mut y = vec![0.0f32; cn * cf * oh * ow];
+    for &t in &sweeps {
+        let stats = with_intra_budget(t, || {
+            b.run(&format!("conv2d@{t}"), || {
+                k::conv2d_forward(&x, &wt, &bias, &mut y, cn, cc, ch, cw, cf, ck, 1, 1);
+            })
+        });
+        records.push(BenchRecord::from_stats("conv2d", &cshape, t, &stats, cflops));
+    }
+
+    print_table(
+        "kernel benchmarks (see BENCH_kernels.json for the full sweep)",
+        &["case", "shape", "threads", "result"],
+        &rows,
+    );
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+    let meta = [
+        ("bench", "kernels".to_string()),
+        ("pool_threads", pool_threads.to_string()),
+        (
+            "note",
+            "blocked GEMM vs seed i-k-j baseline; threads = pinned intra-op budget".to_string(),
+        ),
+    ];
+    if let Err(e) = write_bench_json(&out, &meta, &records) {
+        eprintln!("failed to write {out}: {e}");
+    }
+}

@@ -77,6 +77,24 @@ pub trait Engine: Send + Sync {
     /// never blocks on execution.
     fn push(&self, name: &'static str, read: Vec<VarHandle>, write: Vec<VarHandle>, func: OpFn);
 
+    /// Like [`Engine::push`], but with an estimated cost in FLOPs so the
+    /// engine can budget *intra*-op parallelism against *inter*-op
+    /// parallelism (many cheap independent ops → run each serially; one
+    /// big GEMM → let it fan out over the intra-op pool).  Engines that do
+    /// not track cost fall back to plain `push`; pass [`f64::NAN`] when
+    /// the cost is unknown.
+    fn push_costed(
+        &self,
+        name: &'static str,
+        read: Vec<VarHandle>,
+        write: Vec<VarHandle>,
+        cost_flops: f64,
+        func: OpFn,
+    ) {
+        let _ = cost_flops;
+        self.push(name, read, write, func);
+    }
+
     /// Block until all ops pushed so far that touch `var` have completed.
     fn wait_for_var(&self, var: VarHandle);
 
@@ -122,10 +140,9 @@ pub fn default_threads() -> usize {
 /// The process-wide default engine used when callers do not pass one
 /// (mirrors MXNet's global `Engine::Get()`).
 pub fn default_engine() -> EngineRef {
-    use once_cell::sync::Lazy;
-    static GLOBAL: Lazy<EngineRef> =
-        Lazy::new(|| create(EngineKind::Threaded, default_threads()));
-    Arc::clone(&GLOBAL)
+    use std::sync::OnceLock;
+    static GLOBAL: OnceLock<EngineRef> = OnceLock::new();
+    Arc::clone(GLOBAL.get_or_init(|| create(EngineKind::Threaded, default_threads())))
 }
 
 #[cfg(test)]

@@ -53,9 +53,17 @@ struct OpRecord {
     pending: usize,
     reads: Vec<VarId>,
     writes: Vec<VarId>,
+    /// Estimated FLOPs ([`f64::NAN`] = unknown); drives the intra-op
+    /// thread budget at dispatch time.
+    cost: f64,
     #[allow(dead_code)]
     name: &'static str,
 }
+
+/// FLOP estimate above which an op counts as "heavy": it gets a share of
+/// the intra-op pool instead of running on one thread (~0.5 ms of serial
+/// compute at a 2 GFLOP/s single-core floor).
+const HEAVY_FLOPS: f64 = 1e6;
 
 #[derive(Default)]
 struct SchedState {
@@ -72,6 +80,11 @@ struct Inner {
     done: (Mutex<()>, Condvar),
     /// Total ops ever executed (metrics).
     executed: AtomicU64,
+    /// Heavy ops currently dispatched/running: the intra-op pool is
+    /// divided evenly among them so N independent big kernels in flight
+    /// do not oversubscribe the machine (inter-op beats intra-op when
+    /// the graph offers enough parallelism; see DESIGN in rust/README).
+    heavy_inflight: AtomicUsize,
 }
 
 /// Lazy multi-threaded dependency-scheduling engine (the paper's §3.2).
@@ -89,6 +102,7 @@ impl ThreadedEngine {
                 outstanding: AtomicUsize::new(0),
                 done: (Mutex::new(()), Condvar::new()),
                 executed: AtomicU64::new(0),
+                heavy_inflight: AtomicUsize::new(0),
             }),
         }
     }
@@ -153,17 +167,45 @@ impl Inner {
     }
 
     fn dispatch(self: &Arc<Self>, op_idx: usize) {
-        let func = {
+        let (func, cost) = {
             let mut state = self.state.lock().unwrap();
-            state.ops[op_idx].as_mut().expect("op alive").func.take().expect("func present")
+            let rec = state.ops[op_idx].as_mut().expect("op alive");
+            (rec.func.take().expect("func present"), rec.cost)
         };
+        let heavy = cost >= HEAVY_FLOPS;
+        if heavy {
+            self.heavy_inflight.fetch_add(1, Ordering::SeqCst);
+        }
         let inner = Arc::clone(self);
         self.pool.execute(move || {
+            // Serial-vs-parallel dispatch decision: only a *known*-heavy
+            // op receives a share of the intra-op pool, divided evenly by
+            // the heavy ops currently in flight.  Known-light and
+            // unknown-cost ops run on this thread alone — an unknown op
+            // cannot be allowed to recruit the whole pool, or N of them
+            // in flight would oversubscribe the machine while bypassing
+            // the heavy_inflight accounting (callers with genuinely big
+            // ops pass a hint via push_costed, as the executor and
+            // NDArray's compute-bound methods do).  The budget only
+            // bounds *worker count*, never the chunk partition, so
+            // results stay bitwise identical whatever budget is chosen.
+            let budget = if heavy {
+                let total = crate::util::intra_pool().threads();
+                let sharing = inner.heavy_inflight.load(Ordering::SeqCst).max(1);
+                (total / sharing).max(1)
+            } else {
+                1
+            };
+            let prev = crate::util::set_intra_budget(budget);
             // A panicking op must still complete, or its dependents (and
             // every wait_all) would block forever.  The panic is reported
             // and the schedule carries on — matching MXNet, where a failed
             // kernel logs and the engine keeps serving other ops.
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(func));
+            crate::util::set_intra_budget(prev);
+            if heavy {
+                inner.heavy_inflight.fetch_sub(1, Ordering::SeqCst);
+            }
             if let Err(e) = result {
                 let msg = e
                     .downcast_ref::<&str>()
@@ -241,6 +283,17 @@ impl Engine for ThreadedEngine {
     }
 
     fn push(&self, name: &'static str, read: Vec<VarHandle>, write: Vec<VarHandle>, func: OpFn) {
+        self.push_costed(name, read, write, f64::NAN, func);
+    }
+
+    fn push_costed(
+        &self,
+        name: &'static str,
+        read: Vec<VarHandle>,
+        write: Vec<VarHandle>,
+        cost_flops: f64,
+        func: OpFn,
+    ) {
         let (reads, writes) = normalize(read, write);
         self.inner.outstanding.fetch_add(1, Ordering::SeqCst);
         let mut ready = Vec::new();
@@ -254,6 +307,7 @@ impl Engine for ThreadedEngine {
                 pending: reads.len() + writes.len() + 1,
                 reads: reads.clone(),
                 writes: writes.clone(),
+                cost: cost_flops,
                 name,
             };
             op_idx = if let Some(i) = state.free_ops.pop() {
@@ -432,6 +486,61 @@ mod tests {
         }));
         eng.wait_all(); // must not hang
         assert_eq!(ok.load(Ordering::SeqCst), 1, "dependent op must still run");
+    }
+
+    #[test]
+    fn costed_dispatch_budgets_intra_parallelism() {
+        use crate::util::{intra_budget, intra_pool};
+        let eng = ThreadedEngine::new(2);
+        let v = eng.new_var();
+        let light = Arc::new(AtomicUsize::new(0));
+        let heavy = Arc::new(AtomicUsize::new(0));
+        {
+            let l = Arc::clone(&light);
+            eng.push_costed("light", vec![], vec![v], 10.0, Box::new(move || {
+                l.store(intra_budget(), Ordering::SeqCst);
+            }));
+        }
+        {
+            let h = Arc::clone(&heavy);
+            eng.push_costed("heavy", vec![], vec![v], 1e9, Box::new(move || {
+                h.store(intra_budget(), Ordering::SeqCst);
+            }));
+        }
+        eng.wait_all();
+        // Known-cheap op: serial (inter-op parallelism only).
+        assert_eq!(light.load(Ordering::SeqCst), 1);
+        // Sole heavy op in flight: gets the whole intra-op pool.
+        assert_eq!(heavy.load(Ordering::SeqCst), intra_pool().threads());
+    }
+
+    #[test]
+    fn concurrent_heavy_ops_share_the_intra_pool() {
+        use crate::util::{intra_budget, intra_pool};
+        let total = intra_pool().threads();
+        let eng = ThreadedEngine::new(4);
+        let seen_min = Arc::new(AtomicUsize::new(usize::MAX));
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        // Two independent heavy ops held concurrent by a barrier.  The
+        // op whose budget is computed second is guaranteed to observe
+        // both heavies in flight (neither can retire before the barrier
+        // releases), so the *minimum* observed budget must be at most an
+        // even split of the pool.
+        for _ in 0..2 {
+            let v = eng.new_var();
+            let m = Arc::clone(&seen_min);
+            let b = Arc::clone(&barrier);
+            eng.push_costed("heavy", vec![], vec![v], 1e9, Box::new(move || {
+                b.wait();
+                m.fetch_min(intra_budget(), Ordering::SeqCst);
+            }));
+        }
+        eng.wait_all();
+        assert!(
+            seen_min.load(Ordering::SeqCst) <= (total / 2).max(1),
+            "two in-flight heavies should split the pool: saw {} of {total}",
+            seen_min.load(Ordering::SeqCst)
+        );
     }
 
     #[test]

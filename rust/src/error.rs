@@ -1,42 +1,68 @@
 //! Crate-wide error type.
+//!
+//! Hand-implemented `Display`/`Error` (no `thiserror`): the crate is
+//! deliberately dependency-light, matching the paper's "no other
+//! dependency" stance.
 
 /// Result alias used across the crate.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Error type covering every subsystem.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape inference or shape mismatch failure.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Graph construction / binding errors (unknown argument, cycle, ...).
-    #[error("graph error: {0}")]
     Graph(String),
 
     /// Executor binding errors.
-    #[error("bind error: {0}")]
     Bind(String),
 
     /// KVStore errors (unknown key, wire protocol, ...).
-    #[error("kvstore error: {0}")]
     KvStore(String),
 
     /// Data I/O errors (RecordIO corruption, ...).
-    #[error("io error: {0}")]
     DataIo(String),
 
     /// PJRT runtime errors.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Configuration / CLI errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Underlying std::io error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Graph(m) => write!(f, "graph error: {m}"),
+            Error::Bind(m) => write!(f, "bind error: {m}"),
+            Error::KvStore(m) => write!(f, "kvstore error: {m}"),
+            Error::DataIo(m) => write!(f, "io error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -51,5 +77,26 @@ impl Error {
     /// Shorthand constructor for a kvstore error.
     pub fn kv(msg: impl Into<String>) -> Self {
         Error::KvStore(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(format!("{}", Error::shape("bad")), "shape error: bad");
+        assert_eq!(format!("{}", Error::graph("cyc")), "graph error: cyc");
+        assert_eq!(format!("{}", Error::kv("key")), "kvstore error: key");
+        assert_eq!(format!("{}", Error::Runtime("x".into())), "runtime error: x");
+    }
+
+    #[test]
+    fn io_error_wraps_transparently() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(format!("{e}").contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

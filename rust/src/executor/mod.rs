@@ -48,6 +48,9 @@ impl Default for BindConfig {
 struct NodeTemplate {
     op: Op,
     name: &'static str,
+    /// Analytic FLOP estimate (sim::cost::op_flops), handed to the engine
+    /// as the dispatch cost hint for intra-op thread budgeting.
+    cost: f64,
     in_storages: Vec<Arc<Storage>>,
     in_sizes: Vec<usize>,
     in_shapes: Vec<Vec<usize>>,
@@ -222,20 +225,21 @@ impl Executor {
             // control deps from co-share plan are implicit: co-tenant
             // entries share a storage var, serialized by push order.
             read_vars.dedup();
+            let in_shapes: Vec<Vec<usize>> =
+                node.inputs.iter().map(|e| shapes[e.node][e.out].clone()).collect();
+            let out_shapes: Vec<Vec<usize>> = (0..nout).map(|o| shapes[id][o].clone()).collect();
+            let cost = crate::sim::cost::op_flops(&node.op, &in_shapes, &out_shapes);
             templates.push(Some(Arc::new(NodeTemplate {
                 op: node.op.clone(),
                 name: node.op.type_name(),
+                cost,
                 in_storages: ins.iter().map(|a| a.storage()).collect(),
                 in_sizes: ins.iter().map(|a| a.size()).collect(),
-                in_shapes: node
-                    .inputs
-                    .iter()
-                    .map(|e| shapes[e.node][e.out].clone())
-                    .collect(),
+                in_shapes,
                 aliased,
                 out_storages: outs.iter().map(|a| a.storage()).collect(),
                 out_sizes: outs.iter().map(|a| a.size()).collect(),
-                out_shapes: (0..nout).map(|o| shapes[id][o].clone()).collect(),
+                out_shapes,
                 ws,
                 read_vars,
                 write_vars,
@@ -273,10 +277,11 @@ impl Executor {
         };
         let training = self.training;
         let t = Arc::clone(&tmpl);
-        self.engine.push(
+        self.engine.push_costed(
             tmpl.name,
             tmpl.read_vars.clone(),
             tmpl.write_vars.clone(),
+            tmpl.cost,
             Box::new(move || {
                 // SAFETY: the engine granted shared reads on every input
                 // var and exclusive writes on every output/workspace var.

@@ -68,91 +68,28 @@ pub fn execute(op: &Op, mut a: OpArgs<'_>) {
         }
         Op::Convolution { num_filter, kernel, stride, pad } => {
             let (n, c, h, w) = nchw(&a.in_shapes[0]);
-            let (oh, ow) = (
-                k::conv_out(h, *kernel, *stride, *pad),
-                k::conv_out(w, *kernel, *stride, *pad),
-            );
             let x = a.in_data[0].expect("conv x");
             let wt = a.in_data[1].expect("conv w");
             let b = a.in_data[2].expect("conv b");
-            let cols = a.workspace.as_deref_mut().expect("conv workspace");
-            let ckk = c * kernel * kernel;
-            let spatial = oh * ow;
-            for img in 0..n {
-                k::im2col(
-                    &x[img * c * h * w..(img + 1) * c * h * w],
-                    cols,
-                    c,
-                    h,
-                    w,
-                    *kernel,
-                    *kernel,
-                    *stride,
-                    *pad,
-                );
-                let y_img = &mut a.out[0][img * num_filter * spatial..(img + 1) * num_filter * spatial];
-                k::gemm(wt, cols, y_img, *num_filter, ckk, spatial, 0.0);
-                // per-channel bias over spatial
-                for f in 0..*num_filter {
-                    let row = &mut y_img[f * spatial..(f + 1) * spatial];
-                    let bf = b[f];
-                    for v in row.iter_mut() {
-                        *v += bf;
-                    }
-                }
-            }
+            // Image-parallel path with per-thread im2col scratch; the
+            // planner workspace is only needed by the backward pass.
+            k::conv2d_forward(
+                x, wt, b, a.out[0], n, c, h, w, *num_filter, *kernel, *stride, *pad,
+            );
         }
         Op::ConvolutionBackward { kernel, stride, pad } => {
             // (dy, x, w) -> (dx, dw, db)
-            let (n, f, oh, ow) = nchw(&a.in_shapes[0]);
+            let (n, f, _oh, _ow) = nchw(&a.in_shapes[0]);
             let (_, c, h, w) = nchw(&a.in_shapes[1]);
             let dy = a.in_data[0].expect("dy");
             let x = a.in_data[1].expect("x");
             let wt = a.in_data[2].expect("w");
             let cols = a.workspace.as_deref_mut().expect("convbwd workspace");
-            let ckk = c * kernel * kernel;
-            let spatial = oh * ow;
             let (dx, rest) = a.out.split_at_mut(1);
             let (dw, db) = rest.split_at_mut(1);
-            dw[0].fill(0.0);
-            db[0].fill(0.0);
-            for img in 0..n {
-                let dy_img = &dy[img * f * spatial..(img + 1) * f * spatial];
-                // dw += dy_img @ cols^T  (cols from x)
-                k::im2col(
-                    &x[img * c * h * w..(img + 1) * c * h * w],
-                    cols,
-                    c,
-                    h,
-                    w,
-                    *kernel,
-                    *kernel,
-                    *stride,
-                    *pad,
-                );
-                k::gemm_nt(dy_img, cols, dw[0], f, spatial, ckk, 1.0);
-                // db += rowsum over spatial
-                for ff in 0..f {
-                    let mut s = 0.0;
-                    for v in &dy_img[ff * spatial..(ff + 1) * spatial] {
-                        s += v;
-                    }
-                    db[0][ff] += s;
-                }
-                // dcols = w^T @ dy_img ; dx_img = col2im(dcols)
-                k::gemm_tn(wt, dy_img, cols, ckk, f, spatial, 0.0);
-                k::col2im(
-                    cols,
-                    &mut dx[0][img * c * h * w..(img + 1) * c * h * w],
-                    c,
-                    h,
-                    w,
-                    *kernel,
-                    *kernel,
-                    *stride,
-                    *pad,
-                );
-            }
+            k::conv2d_backward(
+                dy, x, wt, dx[0], dw[0], db[0], cols, n, c, h, w, f, *kernel, *stride, *pad,
+            );
         }
         Op::Activation { kind } => match a.in_data[0] {
             Some(x) => k::act_forward(*kind, x, a.out[0]),

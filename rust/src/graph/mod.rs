@@ -527,22 +527,21 @@ pub fn entry_bytes(dims: &[usize]) -> usize {
 }
 
 /// Per-node scratch workspace bytes (the engine's "temporal space"
-/// resource; conv im2col buffers).
+/// resource; conv-backward im2col buffers).
+///
+/// Forward convolution no longer draws on planner workspace: its
+/// image-parallel kernel uses per-thread scratch
+/// (`ndarray::kernels::conv2d_forward`), so charging it here would
+/// report — and lock — a buffer nobody touches.
 pub fn workspace_bytes(graph: &Graph, shapes: &ShapeMap) -> Vec<usize> {
     graph
         .nodes
         .iter()
-        .enumerate()
-        .map(|(id, node)| match &node.op {
-            Op::Convolution { kernel, .. } => {
-                let x = &shapes[node.inputs[0].node][node.inputs[0].out];
-                let y = &shapes[id][0];
-                // per-image columns: [c*k*k, oh*ow]
-                x[1] * kernel * kernel * y[2] * y[3] * 4
-            }
+        .map(|node| match &node.op {
             Op::ConvolutionBackward { kernel, .. } => {
                 let x = &shapes[node.inputs[1].node][node.inputs[1].out];
                 let dy = &shapes[node.inputs[0].node][node.inputs[0].out];
+                // per-image columns: [c*k*k, oh*ow]
                 x[1] * kernel * kernel * dy[2] * dy[3] * 4
             }
             _ => 0,

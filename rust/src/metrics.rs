@@ -2,42 +2,46 @@
 //! coordinator (used by the perf pass and exposed by the CLI).
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
-use once_cell::sync::Lazy;
+fn registry() -> &'static Mutex<HashMap<&'static str, u64>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<&'static str, u64>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
 
-static REGISTRY: Lazy<Mutex<HashMap<&'static str, u64>>> = Lazy::new(|| Mutex::new(HashMap::new()));
-static TIMERS: Lazy<Mutex<HashMap<&'static str, Duration>>> =
-    Lazy::new(|| Mutex::new(HashMap::new()));
+fn timers() -> &'static Mutex<HashMap<&'static str, Duration>> {
+    static TIMERS: OnceLock<Mutex<HashMap<&'static str, Duration>>> = OnceLock::new();
+    TIMERS.get_or_init(|| Mutex::new(HashMap::new()))
+}
 
 /// Increment a named counter.
 pub fn incr(name: &'static str, by: u64) {
-    *REGISTRY.lock().unwrap().entry(name).or_insert(0) += by;
+    *registry().lock().unwrap().entry(name).or_insert(0) += by;
 }
 
 /// Read a counter.
 pub fn get(name: &'static str) -> u64 {
-    REGISTRY.lock().unwrap().get(name).copied().unwrap_or(0)
+    registry().lock().unwrap().get(name).copied().unwrap_or(0)
 }
 
 /// Time a closure, accumulating into a named timer.
 pub fn time<T>(name: &'static str, f: impl FnOnce() -> T) -> T {
     let t0 = Instant::now();
     let out = f();
-    *TIMERS.lock().unwrap().entry(name).or_insert(Duration::ZERO) += t0.elapsed();
+    *timers().lock().unwrap().entry(name).or_insert(Duration::ZERO) += t0.elapsed();
     out
 }
 
 /// Accumulated time for a timer, in seconds.
 pub fn timer_s(name: &'static str) -> f64 {
-    TIMERS.lock().unwrap().get(name).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+    timers().lock().unwrap().get(name).map(|d| d.as_secs_f64()).unwrap_or(0.0)
 }
 
 /// Snapshot all counters and timers as a sorted report.
 pub fn report() -> String {
-    let counters = REGISTRY.lock().unwrap();
-    let timers = TIMERS.lock().unwrap();
+    let counters = registry().lock().unwrap();
+    let timers = timers().lock().unwrap();
     let mut lines: Vec<String> = counters.iter().map(|(k, v)| format!("{k}: {v}")).collect();
     lines.extend(timers.iter().map(|(k, v)| format!("{k}: {:.6}s", v.as_secs_f64())));
     lines.sort();
@@ -46,8 +50,8 @@ pub fn report() -> String {
 
 /// Reset everything (tests).
 pub fn reset() {
-    REGISTRY.lock().unwrap().clear();
-    TIMERS.lock().unwrap().clear();
+    registry().lock().unwrap().clear();
+    timers().lock().unwrap().clear();
 }
 
 #[cfg(test)]

@@ -8,10 +8,35 @@
 //! backend story of the paper.
 //!
 //! Layout conventions: matrices are row-major `[rows, cols]`; images are
-//! NCHW.  All kernels are single-threaded; parallelism comes from the
-//! dependency engine scheduling independent kernels concurrently.
+//! NCHW.
+//!
+//! # Performance architecture
+//!
+//! The GEMM family is a cache-blocked, packed design (BLIS-style): the
+//! operand matrices are cut into `MC x KC` / `KC x NC` blocks, packed into
+//! thread-local contiguous panels sized for L1/L2 residency, and consumed
+//! by an `MR x NR` register-tile micro-kernel whose inner loop is 8-lane
+//! vectorizable.  Big kernels additionally parallelize *within* one
+//! operation via [`crate::util::parallel_for_cost`]: GEMM over row
+//! panels, conv over images, pooling/batchnorm over planes/channels,
+//! softmax over row chunks.
+//!
+//! Two invariants every parallel kernel here maintains:
+//!
+//! 1. **Chunk partitions are pure functions of the problem shape** —
+//!    never of the thread count — and each output element is produced by
+//!    exactly one chunk with a fixed serial instruction order.  Results
+//!    are therefore *bitwise identical* for every intra-op thread count,
+//!    including serial execution.
+//! 2. **Cost gating**: kernels estimate their FLOPs and stay serial below
+//!    [`crate::util::INTRA_MIN_COST`], so small ops never pay fan-out
+//!    latency and the engine's inter-op parallelism remains the primary
+//!    source of concurrency for graphs of small operations.
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::util::parallel_for_cost;
 
 /// When set, the GEMM family runs a deliberately *unoptimized* inner loop
 /// (j-i-p order, strided, not vectorizable) — the stand-in for a
@@ -33,9 +58,10 @@ pub fn reference_kernels() -> bool {
 
 /// Naive j-i-p GEMM used in reference mode: column-at-a-time with strided
 /// b access — roughly the memory-access pattern cost of an old kernel
-/// generation.  `ta`/`tb` transpose a/b.
+/// generation.  `ta`/`tb` transpose a/b.  Also the correctness oracle for
+/// the blocked implementation's property tests.
 #[inline(never)]
-fn gemm_reference(
+pub fn gemm_reference(
     a: &[f32],
     b: &[f32],
     c: &mut [f32],
@@ -60,6 +86,320 @@ fn gemm_reference(
     }
 }
 
+/// The seed generation's single-threaded i-k-j GEMM (saxpy over contiguous
+/// rows of b and c).  Kept as the before/after baseline for `cargo bench
+/// --bench kernels`; the branchy `a[i,p] == 0.0` skip the seed carried has
+/// been removed — it defeated vectorization on dense inputs and mispriced
+/// the baseline.
+pub fn gemm_ikj(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, beta: f32) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    scale_inplace(c, beta);
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let aip = a[i * k + p];
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += aip * brow[j];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Blocked, packed, intra-op-parallel GEMM
+// ---------------------------------------------------------------------
+
+/// Row-panel height of one cache block of A (fits L2 next to a B panel).
+const MC: usize = 64;
+/// Depth of one cache block (packed A panel: MC*KC*4 = 64 KiB).
+const KC: usize = 256;
+/// Column width of one packed B panel (KC*NC*4 = 256 KiB, L2-resident).
+const NC: usize = 256;
+/// Micro-tile rows: 8x8 f32 accumulators live in registers.
+const MR: usize = 8;
+/// Micro-tile columns (one 8-lane vector).
+const NR: usize = 8;
+
+/// Below this FLOP count the packing machinery costs more than it saves;
+/// use the plain loop-nest fast paths.
+const SMALL_GEMM_FLOPS: f64 = 1e5;
+
+thread_local! {
+    /// Per-thread packing buffers (A block, B panel) reused across calls.
+    static PACK_BUFS: RefCell<(Vec<f32>, Vec<f32>)> = const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Mutable-slice smuggler for disjoint-chunk parallel writes.
+///
+/// Every parallel kernel in this module partitions its output into
+/// disjoint index ranges, one per chunk; this wrapper lets the `Fn`
+/// closure reconstruct its chunk's exclusive sub-slice.
+#[derive(Clone, Copy)]
+struct SendMut(*mut f32);
+unsafe impl Send for SendMut {}
+unsafe impl Sync for SendMut {}
+
+impl SendMut {
+    fn new(s: &mut [f32]) -> Self {
+        SendMut(s.as_mut_ptr())
+    }
+
+    /// Reborrow `[off, off + len)` of the wrapped buffer.
+    ///
+    /// # Safety
+    /// Caller must guarantee the range is in bounds and that no two
+    /// concurrent chunks overlap their ranges.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slice(&self, off: usize, len: usize) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(self.0.add(off), len)
+    }
+}
+
+/// `c = beta * c` with the conventional special cases.
+#[inline]
+fn scale_inplace(c: &mut [f32], beta: f32) {
+    if beta == 0.0 {
+        c.fill(0.0);
+    } else if beta != 1.0 {
+        for x in c.iter_mut() {
+            *x *= beta;
+        }
+    }
+}
+
+/// Pack the `mc x kc` block of A starting at `(i0, p0)` into micro-panels
+/// of MR rows: panel-major, then p-major, then MR consecutive row entries
+/// (zero-padded past `mc`).  `a(i, p) = a[i*ras + p*cas]` absorbs the
+/// transpose variants.
+fn pack_a(
+    buf: &mut Vec<f32>,
+    a: &[f32],
+    ras: usize,
+    cas: usize,
+    i0: usize,
+    mc: usize,
+    p0: usize,
+    kc: usize,
+) {
+    buf.clear();
+    buf.reserve(mc.div_ceil(MR) * MR * kc);
+    for ir in (0..mc).step_by(MR) {
+        let rows = MR.min(mc - ir);
+        for p in 0..kc {
+            for r in 0..MR {
+                buf.push(if r < rows {
+                    a[(i0 + ir + r) * ras + (p0 + p) * cas]
+                } else {
+                    0.0
+                });
+            }
+        }
+    }
+}
+
+/// Pack the `kc x nc` panel of B starting at `(p0, j0)` into micro-panels
+/// of NR columns: panel-major, then p-major, then NR consecutive column
+/// entries (zero-padded past `nc`).  `b(p, j) = b[p*rbs + j*cbs]`.
+fn pack_b(
+    buf: &mut Vec<f32>,
+    b: &[f32],
+    rbs: usize,
+    cbs: usize,
+    p0: usize,
+    kc: usize,
+    j0: usize,
+    nc: usize,
+) {
+    buf.clear();
+    buf.reserve(nc.div_ceil(NR) * NR * kc);
+    for jc in (0..nc).step_by(NR) {
+        let cols = NR.min(nc - jc);
+        for p in 0..kc {
+            for j in 0..NR {
+                buf.push(if j < cols {
+                    b[(p0 + p) * rbs + (j0 + jc + j) * cbs]
+                } else {
+                    0.0
+                });
+            }
+        }
+    }
+}
+
+/// The register-tile micro-kernel: `C[rows x cols] += Apanel @ Bpanel`
+/// where the panels are the packed MR/NR layouts above.  The accumulator
+/// block is a fixed `[MR][NR]` array so LLVM keeps it in vector registers
+/// and turns the inner loop into broadcast-FMA over 8 lanes.
+#[inline]
+fn microkernel(
+    apanel: &[f32],
+    bpanel: &[f32],
+    kc: usize,
+    c: &mut [f32],
+    coff: usize,
+    ldc: usize,
+    rows: usize,
+    cols: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let ar: &[f32; MR] = apanel[p * MR..p * MR + MR].try_into().unwrap();
+        let br: &[f32; NR] = bpanel[p * NR..p * NR + NR].try_into().unwrap();
+        for r in 0..MR {
+            let av = ar[r];
+            for j in 0..NR {
+                acc[r][j] += av * br[j];
+            }
+        }
+    }
+    if rows == MR && cols == NR {
+        for r in 0..MR {
+            let crow = &mut c[coff + r * ldc..coff + r * ldc + NR];
+            for (j, dst) in crow.iter_mut().enumerate() {
+                *dst += acc[r][j];
+            }
+        }
+    } else {
+        for r in 0..rows {
+            let crow = &mut c[coff + r * ldc..coff + r * ldc + cols];
+            for (j, dst) in crow.iter_mut().enumerate() {
+                *dst += acc[r][j];
+            }
+        }
+    }
+}
+
+/// Serial blocked GEMM over the row range `[m0, m1)` of the output:
+/// `crows` holds exactly those rows (row `i` of C lives at
+/// `(i - m0) * n`).  Loop order is jc -> pc -> ic so every output element
+/// accumulates its KC-block contributions in the same order regardless of
+/// how `[0, m)` is split across threads — the bitwise-determinism
+/// invariant.
+#[allow(clippy::too_many_arguments)]
+fn gemm_block_rows(
+    a: &[f32],
+    ras: usize,
+    cas: usize,
+    b: &[f32],
+    rbs: usize,
+    cbs: usize,
+    crows: &mut [f32],
+    m0: usize,
+    m1: usize,
+    k: usize,
+    n: usize,
+) {
+    PACK_BUFS.with(|bufs| {
+        let (abuf, bbuf) = &mut *bufs.borrow_mut();
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            for pc in (0..k).step_by(KC) {
+                let kc = KC.min(k - pc);
+                pack_b(bbuf, b, rbs, cbs, pc, kc, jc, nc);
+                for ic in (m0..m1).step_by(MC) {
+                    let mc = MC.min(m1 - ic);
+                    pack_a(abuf, a, ras, cas, ic, mc, pc, kc);
+                    let n_apanels = mc.div_ceil(MR);
+                    let n_bpanels = nc.div_ceil(NR);
+                    for ap in 0..n_apanels {
+                        let rows = MR.min(mc - ap * MR);
+                        let apanel = &abuf[ap * MR * kc..(ap + 1) * MR * kc];
+                        for bp in 0..n_bpanels {
+                            let cols = NR.min(nc - bp * NR);
+                            let bpanel = &bbuf[bp * NR * kc..(bp + 1) * NR * kc];
+                            let coff = (ic - m0 + ap * MR) * n + jc + bp * NR;
+                            microkernel(apanel, bpanel, kc, crows, coff, n, rows, cols);
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Small-shape fast paths: below [`SMALL_GEMM_FLOPS`] the simple loop
+/// nests beat the packing machinery.
+#[allow(clippy::too_many_arguments)]
+fn gemm_small(
+    a: &[f32],
+    ta: bool,
+    b: &[f32],
+    tb: bool,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    beta: f32,
+) {
+    match (ta, tb) {
+        // i-k-j: inner saxpy over contiguous rows of b and c.
+        (false, false) => gemm_ikj(a, b, c, m, k, n, beta),
+        (false, true) => {
+            // both operands row-contiguous: lane-parallel dot per output.
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                for j in 0..n {
+                    let acc = vdot(arow, &b[j * k..(j + 1) * k]);
+                    let dst = &mut c[i * n + j];
+                    *dst = if beta == 0.0 { acc } else { *dst * beta + acc };
+                }
+            }
+        }
+        (true, false) => {
+            // p-i-j: rank-1 updates from rows of a^T and b.
+            scale_inplace(c, beta);
+            for p in 0..k {
+                let arow = &a[p * m..(p + 1) * m];
+                let brow = &b[p * n..(p + 1) * n];
+                for i in 0..m {
+                    let aip = arow[i];
+                    let crow = &mut c[i * n..(i + 1) * n];
+                    for j in 0..n {
+                        crow[j] += aip * brow[j];
+                    }
+                }
+            }
+        }
+        (true, true) => gemm_reference(a, b, c, m, k, n, beta, true, true),
+    }
+}
+
+/// Shared GEMM driver: `C = A' @ B' + beta * C` where the primes denote
+/// the optional transposes.  Dispatches small shapes to plain loop nests
+/// and everything else to the blocked path, parallelized over MC-row
+/// panels of C (each chunk owns a disjoint, contiguous slice of C).
+#[allow(clippy::too_many_arguments)]
+fn gemm_driver(
+    a: &[f32],
+    ta: bool,
+    b: &[f32],
+    tb: bool,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    beta: f32,
+) {
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    if flops < SMALL_GEMM_FLOPS {
+        return gemm_small(a, ta, b, tb, c, m, k, n, beta);
+    }
+    let (ras, cas) = if ta { (1, m) } else { (k, 1) };
+    let (rbs, cbs) = if tb { (1, k) } else { (n, 1) };
+    let cp = SendMut::new(c);
+    parallel_for_cost(m, MC, flops, |rows| {
+        // SAFETY: row ranges from parallel_for are disjoint, and rows
+        // [lo, hi) of row-major C occupy the disjoint slice
+        // [lo*n, hi*n).
+        let crows = unsafe { cp.slice(rows.start * n, (rows.end - rows.start) * n) };
+        scale_inplace(crows, beta);
+        gemm_block_rows(a, ras, cas, b, rbs, cbs, crows, rows.start, rows.end, k, n);
+    });
+}
+
 /// `c = a @ b` where a is `[m,k]`, b is `[k,n]`, c is `[m,n]`.
 /// `beta == 0.0` overwrites c, `beta == 1.0` accumulates.
 pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, beta: f32) {
@@ -69,28 +409,7 @@ pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, b
     if reference_kernels() {
         return gemm_reference(a, b, c, m, k, n, beta, false, false);
     }
-    if beta == 0.0 {
-        c.fill(0.0);
-    } else if beta != 1.0 {
-        for x in c.iter_mut() {
-            *x *= beta;
-        }
-    }
-    // i-k-j loop order: the inner j-loop is a saxpy over contiguous rows of
-    // b and c, which LLVM auto-vectorizes.
-    for i in 0..m {
-        let crow = &mut c[i * n..(i + 1) * n];
-        for p in 0..k {
-            let aip = a[i * k + p];
-            if aip == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            for j in 0..n {
-                crow[j] += aip * brow[j];
-            }
-        }
-    }
+    gemm_driver(a, false, b, false, c, m, k, n, beta);
 }
 
 /// Vectorizable dot product: 8 independent accumulator lanes so LLVM can
@@ -116,8 +435,7 @@ fn vdot(a: &[f32], b: &[f32]) -> f32 {
 /// `c = a @ b^T` where a is `[m,k]`, b is `[n,k]`, c is `[m,n]`.
 ///
 /// This is the FullyConnected-forward shape (weights stored `[out, in]`),
-/// i.e. the hottest kernel in training; both operands are traversed
-/// contiguously and the inner dot is lane-parallel (see §Perf).
+/// i.e. the hottest kernel in training.
 pub fn gemm_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, beta: f32) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
@@ -125,15 +443,7 @@ pub fn gemm_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize
     if reference_kernels() {
         return gemm_reference(a, b, c, m, k, n, beta, false, true);
     }
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let acc = vdot(arow, brow);
-            let dst = &mut c[i * n + j];
-            *dst = if beta == 0.0 { acc } else { *dst * beta + acc };
-        }
-    }
+    gemm_driver(a, false, b, true, c, m, k, n, beta);
 }
 
 /// `c = a^T @ b` where a is `[k,m]`, b is `[k,n]`, c is `[m,n]`.
@@ -144,71 +454,77 @@ pub fn gemm_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize
     if reference_kernels() {
         return gemm_reference(a, b, c, m, k, n, beta, true, false);
     }
-    if beta == 0.0 {
-        c.fill(0.0);
-    } else if beta != 1.0 {
-        for x in c.iter_mut() {
-            *x *= beta;
-        }
-    }
-    for p in 0..k {
-        let arow = &a[p * m..(p + 1) * m];
-        let brow = &b[p * n..(p + 1) * n];
-        for i in 0..m {
-            let aip = arow[i];
-            if aip == 0.0 {
-                continue;
-            }
-            let crow = &mut c[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += aip * brow[j];
-            }
-        }
-    }
+    gemm_driver(a, true, b, false, c, m, k, n, beta);
 }
+
+// ---------------------------------------------------------------------
+// Vector / elementwise kernels
+// ---------------------------------------------------------------------
+
+/// Element chunk size for parallel elementwise sweeps (128 KiB of f32).
+const EW_GRAIN: usize = 32 * 1024;
 
 /// `y += alpha * x`.
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    let yp = SendMut::new(y);
+    let len = x.len();
+    parallel_for_cost(len, EW_GRAIN, len as f64, |r| {
+        let yr = unsafe { yp.slice(r.start, r.end - r.start) };
+        for (yi, xi) in yr.iter_mut().zip(&x[r]) {
+            *yi += alpha * xi;
+        }
+    });
 }
 
 /// `y = alpha * x + beta * y` (general scaled update).
 pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi = alpha * xi + beta * *yi;
-    }
+    let yp = SendMut::new(y);
+    let len = x.len();
+    parallel_for_cost(len, EW_GRAIN, 2.0 * len as f64, |r| {
+        let yr = unsafe { yp.slice(r.start, r.end - r.start) };
+        for (yi, xi) in yr.iter_mut().zip(&x[r]) {
+            *yi = alpha * xi + beta * *yi;
+        }
+    });
 }
 
 /// Elementwise binary op.
 pub fn ew_binary(op: EwBinary, a: &[f32], b: &[f32], out: &mut [f32]) {
     debug_assert_eq!(a.len(), b.len());
     debug_assert_eq!(a.len(), out.len());
-    match op {
-        EwBinary::Add => {
-            for i in 0..a.len() {
-                out[i] = a[i] + b[i];
+    let op_fn = |r: std::ops::Range<usize>, out: &mut [f32]| {
+        let (ar, br) = (&a[r.clone()], &b[r]);
+        match op {
+            EwBinary::Add => {
+                for i in 0..ar.len() {
+                    out[i] = ar[i] + br[i];
+                }
+            }
+            EwBinary::Sub => {
+                for i in 0..ar.len() {
+                    out[i] = ar[i] - br[i];
+                }
+            }
+            EwBinary::Mul => {
+                for i in 0..ar.len() {
+                    out[i] = ar[i] * br[i];
+                }
+            }
+            EwBinary::Div => {
+                for i in 0..ar.len() {
+                    out[i] = ar[i] / br[i];
+                }
             }
         }
-        EwBinary::Sub => {
-            for i in 0..a.len() {
-                out[i] = a[i] - b[i];
-            }
-        }
-        EwBinary::Mul => {
-            for i in 0..a.len() {
-                out[i] = a[i] * b[i];
-            }
-        }
-        EwBinary::Div => {
-            for i in 0..a.len() {
-                out[i] = a[i] / b[i];
-            }
-        }
-    }
+    };
+    let outp = SendMut::new(out);
+    let len = a.len();
+    parallel_for_cost(len, EW_GRAIN, len as f64, |r| {
+        let o = unsafe { outp.slice(r.start, r.end - r.start) };
+        op_fn(r, o);
+    });
 }
 
 /// Elementwise binary operator selector.
@@ -238,23 +554,31 @@ pub enum ActKind {
 /// Forward activation.
 pub fn act_forward(kind: ActKind, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    match kind {
-        ActKind::Relu => {
-            for i in 0..x.len() {
-                y[i] = x[i].max(0.0);
+    let yp = SendMut::new(y);
+    let len = x.len();
+    // tanh/sigmoid cost ~10 flops/element; relu is cheap but uniform
+    // costing keeps the partition identical across kinds.
+    parallel_for_cost(len, EW_GRAIN, 8.0 * len as f64, |r| {
+        let yr = unsafe { yp.slice(r.start, r.end - r.start) };
+        let xr = &x[r];
+        match kind {
+            ActKind::Relu => {
+                for i in 0..xr.len() {
+                    yr[i] = xr[i].max(0.0);
+                }
+            }
+            ActKind::Tanh => {
+                for i in 0..xr.len() {
+                    yr[i] = xr[i].tanh();
+                }
+            }
+            ActKind::Sigmoid => {
+                for i in 0..xr.len() {
+                    yr[i] = 1.0 / (1.0 + (-xr[i]).exp());
+                }
             }
         }
-        ActKind::Tanh => {
-            for i in 0..x.len() {
-                y[i] = x[i].tanh();
-            }
-        }
-        ActKind::Sigmoid => {
-            for i in 0..x.len() {
-                y[i] = 1.0 / (1.0 + (-x[i]).exp());
-            }
-        }
-    }
+    });
 }
 
 /// Backward activation: `dx = dy * f'(x)` computed from the *output* `y`
@@ -263,35 +587,45 @@ pub fn act_forward(kind: ActKind, x: &[f32], y: &mut [f32]) {
 pub fn act_backward(kind: ActKind, dy: &[f32], y: &[f32], dx: &mut [f32]) {
     debug_assert_eq!(dy.len(), y.len());
     debug_assert_eq!(dy.len(), dx.len());
-    match kind {
-        ActKind::Relu => {
-            for i in 0..dy.len() {
-                dx[i] = if y[i] > 0.0 { dy[i] } else { 0.0 };
+    let dxp = SendMut::new(dx);
+    let len = dy.len();
+    parallel_for_cost(len, EW_GRAIN, 3.0 * len as f64, |r| {
+        let dxr = unsafe { dxp.slice(r.start, r.end - r.start) };
+        let (dyr, yr) = (&dy[r.clone()], &y[r]);
+        match kind {
+            ActKind::Relu => {
+                for i in 0..dyr.len() {
+                    dxr[i] = if yr[i] > 0.0 { dyr[i] } else { 0.0 };
+                }
+            }
+            ActKind::Tanh => {
+                for i in 0..dyr.len() {
+                    dxr[i] = dyr[i] * (1.0 - yr[i] * yr[i]);
+                }
+            }
+            ActKind::Sigmoid => {
+                for i in 0..dyr.len() {
+                    dxr[i] = dyr[i] * yr[i] * (1.0 - yr[i]);
+                }
             }
         }
-        ActKind::Tanh => {
-            for i in 0..dy.len() {
-                dx[i] = dy[i] * (1.0 - y[i] * y[i]);
-            }
-        }
-        ActKind::Sigmoid => {
-            for i in 0..dy.len() {
-                dx[i] = dy[i] * y[i] * (1.0 - y[i]);
-            }
-        }
-    }
+    });
 }
 
 /// Broadcast-add a bias vector of length `n` to each row of `[m,n]`.
 pub fn bias_add(x: &mut [f32], bias: &[f32], m: usize, n: usize) {
     debug_assert_eq!(x.len(), m * n);
     debug_assert_eq!(bias.len(), n);
-    for i in 0..m {
-        let row = &mut x[i * n..(i + 1) * n];
-        for j in 0..n {
-            row[j] += bias[j];
+    let xp = SendMut::new(x);
+    parallel_for_cost(m, row_grain(n), (m * n) as f64, |rows| {
+        let xr = unsafe { xp.slice(rows.start * n, (rows.end - rows.start) * n) };
+        for (ri, _) in rows.enumerate() {
+            let row = &mut xr[ri * n..(ri + 1) * n];
+            for j in 0..n {
+                row[j] += bias[j];
+            }
         }
-    }
+    });
 }
 
 /// Gradient of bias: column sums of `[m,n]` into `dbias[n]`.
@@ -309,25 +643,35 @@ pub fn bias_grad(dy: &[f32], dbias: &mut [f32], m: usize, n: usize, beta: f32) {
     }
 }
 
+/// Rows per parallel chunk for row-wise kernels: ~8K elements per chunk,
+/// a pure function of the row width (never of the thread count).
+#[inline]
+fn row_grain(n: usize) -> usize {
+    (8192 / n.max(1)).max(1)
+}
+
 /// Row-wise softmax over `[m,n]`.
 pub fn softmax_rows(x: &[f32], y: &mut [f32], m: usize, n: usize) {
     debug_assert_eq!(x.len(), m * n);
     debug_assert_eq!(y.len(), m * n);
-    for i in 0..m {
-        let xr = &x[i * n..(i + 1) * n];
-        let yr = &mut y[i * n..(i + 1) * n];
-        let mx = xr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0;
-        for j in 0..n {
-            let e = (xr[j] - mx).exp();
-            yr[j] = e;
-            sum += e;
+    let yp = SendMut::new(y);
+    parallel_for_cost(m, row_grain(n), 8.0 * (m * n) as f64, |rows| {
+        for i in rows {
+            let xr = &x[i * n..(i + 1) * n];
+            let yr = unsafe { yp.slice(i * n, n) };
+            let mx = xr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for j in 0..n {
+                let e = (xr[j] - mx).exp();
+                yr[j] = e;
+                sum += e;
+            }
+            let inv = 1.0 / sum;
+            for v in yr.iter_mut() {
+                *v *= inv;
+            }
         }
-        let inv = 1.0 / sum;
-        for v in yr.iter_mut() {
-            *v *= inv;
-        }
-    }
+    });
 }
 
 /// Mean cross-entropy loss given row-softmax probabilities and integer
@@ -347,14 +691,22 @@ pub fn softmax_xent_backward(probs: &[f32], labels: &[f32], dx: &mut [f32], m: u
     debug_assert_eq!(probs.len(), m * n);
     debug_assert_eq!(dx.len(), m * n);
     let scale = 1.0 / m as f32;
-    for i in 0..m {
-        let t = labels[i] as usize;
-        for j in 0..n {
-            let p = probs[i * n + j];
-            dx[i * n + j] = scale * (p - if j == t { 1.0 } else { 0.0 });
+    let dxp = SendMut::new(dx);
+    parallel_for_cost(m, row_grain(n), 2.0 * (m * n) as f64, |rows| {
+        for i in rows {
+            let t = labels[i] as usize;
+            let dxr = unsafe { dxp.slice(i * n, n) };
+            let pr = &probs[i * n..(i + 1) * n];
+            for j in 0..n {
+                dxr[j] = scale * (pr[j] - if j == t { 1.0 } else { 0.0 });
+            }
         }
-    }
+    });
 }
+
+// ---------------------------------------------------------------------
+// Convolution
+// ---------------------------------------------------------------------
 
 /// Convolution geometry helper: output spatial size.
 #[inline]
@@ -453,6 +805,142 @@ pub fn col2im(
     }
 }
 
+thread_local! {
+    /// Per-thread im2col scratch for the image-parallel conv path.
+    static CONV_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// NCHW convolution forward over a whole batch:
+/// `(x[n,c,h,w], w[f,c,k,k], bias[f]) -> y[n,f,oh,ow]`, parallelized over
+/// images (each image runs im2col + GEMM + bias into its own output
+/// slice, with per-thread column scratch).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_forward(
+    x: &[f32],
+    wt: &[f32],
+    bias: &[f32],
+    y: &mut [f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    num_filter: usize,
+    kernel: usize,
+    stride: usize,
+    pad: usize,
+) {
+    let oh = conv_out(h, kernel, stride, pad);
+    let ow = conv_out(w, kernel, stride, pad);
+    let ckk = c * kernel * kernel;
+    let spatial = oh * ow;
+    debug_assert_eq!(x.len(), n * c * h * w);
+    debug_assert_eq!(wt.len(), num_filter * ckk);
+    debug_assert_eq!(bias.len(), num_filter);
+    debug_assert_eq!(y.len(), n * num_filter * spatial);
+    let flops = 2.0 * (n * num_filter * spatial) as f64 * ckk as f64;
+    let yp = SendMut::new(y);
+    parallel_for_cost(n, 1, flops, |imgs| {
+        CONV_SCRATCH.with(|sc| {
+            let cols = &mut *sc.borrow_mut();
+            cols.resize(ckk * spatial, 0.0);
+            for img in imgs {
+                im2col(
+                    &x[img * c * h * w..(img + 1) * c * h * w],
+                    cols,
+                    c,
+                    h,
+                    w,
+                    kernel,
+                    kernel,
+                    stride,
+                    pad,
+                );
+                let y_img = unsafe { yp.slice(img * num_filter * spatial, num_filter * spatial) };
+                gemm(wt, cols, y_img, num_filter, ckk, spatial, 0.0);
+                for f in 0..num_filter {
+                    let row = &mut y_img[f * spatial..(f + 1) * spatial];
+                    let bf = bias[f];
+                    for v in row.iter_mut() {
+                        *v += bf;
+                    }
+                }
+            }
+        });
+    });
+}
+
+/// NCHW convolution backward: `(dy, x, w) -> (dx, dw, db)`.
+///
+/// The image loop is serial because `dw`/`db` accumulate across images;
+/// the heavy inner GEMMs recruit the intra-op pool themselves (they are
+/// not nested inside a parallel region here).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_backward(
+    dy: &[f32],
+    x: &[f32],
+    wt: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    cols: &mut [f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    num_filter: usize,
+    kernel: usize,
+    stride: usize,
+    pad: usize,
+) {
+    let oh = conv_out(h, kernel, stride, pad);
+    let ow = conv_out(w, kernel, stride, pad);
+    let ckk = c * kernel * kernel;
+    let spatial = oh * ow;
+    dw.fill(0.0);
+    db.fill(0.0);
+    for img in 0..n {
+        let dy_img = &dy[img * num_filter * spatial..(img + 1) * num_filter * spatial];
+        // dw += dy_img @ cols^T  (cols from x)
+        im2col(
+            &x[img * c * h * w..(img + 1) * c * h * w],
+            cols,
+            c,
+            h,
+            w,
+            kernel,
+            kernel,
+            stride,
+            pad,
+        );
+        gemm_nt(dy_img, cols, dw, num_filter, spatial, ckk, 1.0);
+        // db += rowsum over spatial
+        for ff in 0..num_filter {
+            let mut s = 0.0;
+            for v in &dy_img[ff * spatial..(ff + 1) * spatial] {
+                s += v;
+            }
+            db[ff] += s;
+        }
+        // dcols = w^T @ dy_img ; dx_img = col2im(dcols)
+        gemm_tn(wt, dy_img, cols, ckk, num_filter, spatial, 0.0);
+        col2im(
+            cols,
+            &mut dx[img * c * h * w..(img + 1) * c * h * w],
+            c,
+            h,
+            w,
+            kernel,
+            kernel,
+            stride,
+            pad,
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pooling
+// ---------------------------------------------------------------------
+
 /// Pooling selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PoolKind {
@@ -464,6 +952,8 @@ pub enum PoolKind {
 
 /// Pooling forward for one NCHW batch. `argmax` (same size as output)
 /// records winning input indices for max-pool backward; ignored for avg.
+/// Parallelized over the `n*c` planes (each plane's output and argmax
+/// slices are disjoint).
 #[allow(clippy::too_many_arguments)]
 pub fn pool_forward(
     kind: PoolKind,
@@ -481,10 +971,25 @@ pub fn pool_forward(
     let oh = conv_out(h, k, stride, pad);
     let ow = conv_out(w, k, stride, pad);
     debug_assert_eq!(y.len(), n * c * oh * ow);
-    for img in 0..n {
-        for ch in 0..c {
-            let plane = &x[(img * c + ch) * h * w..(img * c + ch + 1) * h * w];
-            let out_base = (img * c + ch) * oh * ow;
+    if matches!(kind, PoolKind::Max) {
+        debug_assert_eq!(argmax.len(), n * c * oh * ow);
+    }
+    let planes = n * c;
+    let yp = SendMut::new(y);
+    let amp = SendMut::new(argmax);
+    let cost = (planes * oh * ow * k * k) as f64;
+    parallel_for_cost(planes, 1, cost, |ps| {
+        for p in ps {
+            let plane = &x[p * h * w..(p + 1) * h * w];
+            let yo = unsafe { yp.slice(p * oh * ow, oh * ow) };
+            // Only materialize the argmax slice for max-pooling: avg-pool
+            // callers may legitimately pass an empty buffer (the doc says
+            // it is ignored), and a zero-capacity `&mut` reborrow at a
+            // nonzero offset would be UB.
+            let mut am = match kind {
+                PoolKind::Max => Some(unsafe { amp.slice(p * oh * ow, oh * ow) }),
+                PoolKind::Avg => None,
+            };
             for oy in 0..oh {
                 for ox in 0..ow {
                     let mut best = f32::NEG_INFINITY;
@@ -511,23 +1016,24 @@ pub fn pool_forward(
                             count += 1;
                         }
                     }
-                    let o = out_base + oy * ow + ox;
-                    match kind {
-                        PoolKind::Max => {
-                            y[o] = best;
-                            argmax[o] = best_idx as f32;
+                    let o = oy * ow + ox;
+                    match &mut am {
+                        Some(am) => {
+                            yo[o] = best;
+                            am[o] = best_idx as f32;
                         }
-                        PoolKind::Avg => {
-                            y[o] = if count > 0 { sum / count as f32 } else { 0.0 };
+                        None => {
+                            yo[o] = if count > 0 { sum / count as f32 } else { 0.0 };
                         }
                     }
                 }
             }
         }
-    }
+    });
 }
 
-/// Pooling backward.
+/// Pooling backward, parallelized over planes (each plane zeroes and
+/// scatters into its own `dx` slice).
 #[allow(clippy::too_many_arguments)]
 pub fn pool_backward(
     kind: PoolKind,
@@ -544,17 +1050,20 @@ pub fn pool_backward(
 ) {
     let oh = conv_out(h, k, stride, pad);
     let ow = conv_out(w, k, stride, pad);
-    dx.fill(0.0);
-    for img in 0..n {
-        for ch in 0..c {
-            let in_base = (img * c + ch) * h * w;
-            let out_base = (img * c + ch) * oh * ow;
+    let planes = n * c;
+    let dxp = SendMut::new(dx);
+    let cost = (planes * oh * ow * k * k) as f64;
+    parallel_for_cost(planes, 1, cost, |ps| {
+        for p in ps {
+            let dxo = unsafe { dxp.slice(p * h * w, h * w) };
+            dxo.fill(0.0);
+            let out_base = p * oh * ow;
             for oy in 0..oh {
                 for ox in 0..ow {
                     let o = out_base + oy * ow + ox;
                     match kind {
                         PoolKind::Max => {
-                            dx[in_base + argmax[o] as usize] += dy[o];
+                            dxo[argmax[o] as usize] += dy[o];
                         }
                         PoolKind::Avg => {
                             // distribute evenly over the valid window
@@ -574,7 +1083,7 @@ pub fn pool_backward(
                             if !cells.is_empty() {
                                 let g = dy[o] / cells.len() as f32;
                                 for idx in cells {
-                                    dx[in_base + idx] += g;
+                                    dxo[idx] += g;
                                 }
                             }
                         }
@@ -582,12 +1091,18 @@ pub fn pool_backward(
                 }
             }
         }
-    }
+    });
 }
+
+// ---------------------------------------------------------------------
+// BatchNorm
+// ---------------------------------------------------------------------
 
 /// BatchNorm forward (training mode) over NCHW, per-channel statistics.
 /// Writes normalized output plus per-channel `save_mean` / `save_invstd`
-/// needed by backward.
+/// needed by backward.  Parallelized over channels: each channel's
+/// statistics and output stripes are computed serially by one chunk, so
+/// the reduction order (and thus the bits) never depends on thread count.
 #[allow(clippy::too_many_arguments)]
 pub fn batchnorm_forward(
     x: &[f32],
@@ -602,38 +1117,48 @@ pub fn batchnorm_forward(
     eps: f32,
 ) {
     let count = (n * spatial) as f32;
-    for ch in 0..c {
-        let mut mean = 0.0f32;
-        for img in 0..n {
-            let base = (img * c + ch) * spatial;
-            for s in 0..spatial {
-                mean += x[base + s];
+    let yp = SendMut::new(y);
+    let smp = SendMut::new(save_mean);
+    let sip = SendMut::new(save_invstd);
+    let cost = 5.0 * (n * c * spatial) as f64;
+    parallel_for_cost(c, 1, cost, |chs| {
+        for ch in chs {
+            let mut mean = 0.0f32;
+            for img in 0..n {
+                let base = (img * c + ch) * spatial;
+                for s in 0..spatial {
+                    mean += x[base + s];
+                }
+            }
+            mean /= count;
+            let mut var = 0.0f32;
+            for img in 0..n {
+                let base = (img * c + ch) * spatial;
+                for s in 0..spatial {
+                    let d = x[base + s] - mean;
+                    var += d * d;
+                }
+            }
+            var /= count;
+            let invstd = 1.0 / (var + eps).sqrt();
+            unsafe {
+                smp.slice(ch, 1)[0] = mean;
+                sip.slice(ch, 1)[0] = invstd;
+            }
+            let (g, b) = (gamma[ch], beta[ch]);
+            for img in 0..n {
+                let base = (img * c + ch) * spatial;
+                let yr = unsafe { yp.slice(base, spatial) };
+                for s in 0..spatial {
+                    yr[s] = (x[base + s] - mean) * invstd * g + b;
+                }
             }
         }
-        mean /= count;
-        let mut var = 0.0f32;
-        for img in 0..n {
-            let base = (img * c + ch) * spatial;
-            for s in 0..spatial {
-                let d = x[base + s] - mean;
-                var += d * d;
-            }
-        }
-        var /= count;
-        let invstd = 1.0 / (var + eps).sqrt();
-        save_mean[ch] = mean;
-        save_invstd[ch] = invstd;
-        let (g, b) = (gamma[ch], beta[ch]);
-        for img in 0..n {
-            let base = (img * c + ch) * spatial;
-            for s in 0..spatial {
-                y[base + s] = (x[base + s] - mean) * invstd * g + b;
-            }
-        }
-    }
+    });
 }
 
 /// BatchNorm backward. Returns gradients for x, gamma, beta.
+/// Channel-parallel like the forward pass.
 #[allow(clippy::too_many_arguments)]
 pub fn batchnorm_backward(
     x: &[f32],
@@ -649,31 +1174,40 @@ pub fn batchnorm_backward(
     spatial: usize,
 ) {
     let count = (n * spatial) as f32;
-    for ch in 0..c {
-        let mean = save_mean[ch];
-        let invstd = save_invstd[ch];
-        let mut sum_dy = 0.0f32;
-        let mut sum_dy_xhat = 0.0f32;
-        for img in 0..n {
-            let base = (img * c + ch) * spatial;
-            for s in 0..spatial {
-                let xhat = (x[base + s] - mean) * invstd;
-                sum_dy += dy[base + s];
-                sum_dy_xhat += dy[base + s] * xhat;
+    let dxp = SendMut::new(dx);
+    let dgp = SendMut::new(dgamma);
+    let dbp = SendMut::new(dbeta);
+    let cost = 8.0 * (n * c * spatial) as f64;
+    parallel_for_cost(c, 1, cost, |chs| {
+        for ch in chs {
+            let mean = save_mean[ch];
+            let invstd = save_invstd[ch];
+            let mut sum_dy = 0.0f32;
+            let mut sum_dy_xhat = 0.0f32;
+            for img in 0..n {
+                let base = (img * c + ch) * spatial;
+                for s in 0..spatial {
+                    let xhat = (x[base + s] - mean) * invstd;
+                    sum_dy += dy[base + s];
+                    sum_dy_xhat += dy[base + s] * xhat;
+                }
+            }
+            unsafe {
+                dgp.slice(ch, 1)[0] = sum_dy_xhat;
+                dbp.slice(ch, 1)[0] = sum_dy;
+            }
+            let g = gamma[ch];
+            for img in 0..n {
+                let base = (img * c + ch) * spatial;
+                let dxr = unsafe { dxp.slice(base, spatial) };
+                for s in 0..spatial {
+                    let xhat = (x[base + s] - mean) * invstd;
+                    dxr[s] =
+                        g * invstd * (dy[base + s] - sum_dy / count - xhat * sum_dy_xhat / count);
+                }
             }
         }
-        dgamma[ch] = sum_dy_xhat;
-        dbeta[ch] = sum_dy;
-        let g = gamma[ch];
-        for img in 0..n {
-            let base = (img * c + ch) * spatial;
-            for s in 0..spatial {
-                let xhat = (x[base + s] - mean) * invstd;
-                dx[base + s] =
-                    g * invstd * (dy[base + s] - sum_dy / count - xhat * sum_dy_xhat / count);
-            }
-        }
-    }
+    });
 }
 
 /// Row-wise argmax of `[m,n]` into `out[m]`.
@@ -693,6 +1227,7 @@ pub fn argmax_rows(x: &[f32], out: &mut [f32], m: usize, n: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::with_intra_budget;
 
     fn naive_gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
         let mut c = vec![0.0; m * n];
@@ -709,14 +1244,14 @@ mod tests {
     #[test]
     fn gemm_matches_naive() {
         let mut rng = crate::util::Rng::seed_from_u64(1);
-        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (8, 8, 8), (13, 7, 17)] {
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (8, 8, 8), (13, 7, 17), (65, 70, 65)] {
             let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
             let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
             let mut c = vec![0.0; m * n];
             gemm(&a, &b, &mut c, m, k, n, 0.0);
             let want = naive_gemm(&a, &b, m, k, n);
             for (x, y) in c.iter().zip(&want) {
-                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
             }
         }
     }
@@ -724,33 +1259,34 @@ mod tests {
     #[test]
     fn gemm_nt_tn_match_transposed_naive() {
         let mut rng = crate::util::Rng::seed_from_u64(2);
-        let (m, k, n) = (5, 7, 4);
-        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
-        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
-        // b_t is [n,k]
-        let mut b_t = vec![0.0; n * k];
-        for p in 0..k {
-            for j in 0..n {
-                b_t[j * k + p] = b[p * n + j];
-            }
-        }
-        let mut c1 = vec![0.0; m * n];
-        gemm_nt(&a, &b_t, &mut c1, m, k, n, 0.0);
-        let want = naive_gemm(&a, &b, m, k, n);
-        for (x, y) in c1.iter().zip(&want) {
-            assert!((x - y).abs() < 1e-4);
-        }
-        // a_t is [k,m]
-        let mut a_t = vec![0.0; k * m];
-        for i in 0..m {
+        for &(m, k, n) in &[(5, 7, 4), (64, 65, 66)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            // b_t is [n,k]
+            let mut b_t = vec![0.0; n * k];
             for p in 0..k {
-                a_t[p * m + i] = a[i * k + p];
+                for j in 0..n {
+                    b_t[j * k + p] = b[p * n + j];
+                }
             }
-        }
-        let mut c2 = vec![0.0; m * n];
-        gemm_tn(&a_t, &b, &mut c2, m, k, n, 0.0);
-        for (x, y) in c2.iter().zip(&want) {
-            assert!((x - y).abs() < 1e-4);
+            let mut c1 = vec![0.0; m * n];
+            gemm_nt(&a, &b_t, &mut c1, m, k, n, 0.0);
+            let want = naive_gemm(&a, &b, m, k, n);
+            for (x, y) in c1.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-3);
+            }
+            // a_t is [k,m]
+            let mut a_t = vec![0.0; k * m];
+            for i in 0..m {
+                for p in 0..k {
+                    a_t[p * m + i] = a[i * k + p];
+                }
+            }
+            let mut c2 = vec![0.0; m * n];
+            gemm_tn(&a_t, &b, &mut c2, m, k, n, 0.0);
+            for (x, y) in c2.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-3);
+            }
         }
     }
 
@@ -761,6 +1297,97 @@ mod tests {
         let mut c = [10.0, 10.0, 10.0, 10.0];
         gemm(&a, &b, &mut c, 2, 2, 2, 1.0);
         assert_eq!(c, [11.0, 12.0, 13.0, 14.0]);
+    }
+
+    /// Blocked/parallel GEMM must agree with the reference oracle across
+    /// transpose variants, odd shapes, and beta values (satellite task:
+    /// property coverage; the exhaustive sweep lives in
+    /// tests/properties.rs).
+    #[test]
+    fn blocked_gemm_matches_reference_oracle() {
+        let mut rng = crate::util::Rng::seed_from_u64(9);
+        for &(m, k, n) in &[(9, 65, 64), (64, 9, 65), (65, 64, 7), (128, 300, 65)] {
+            for beta in [0.0f32, 1.0, 0.5] {
+                let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+                let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+                let c0: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+                let mut want = c0.clone();
+                gemm_reference(&a, &b, &mut want, m, k, n, beta, false, false);
+                let mut got = c0.clone();
+                gemm(&a, &b, &mut got, m, k, n, beta);
+                for (g, w) in got.iter().zip(&want) {
+                    let rel = (g - w).abs() / w.abs().max(1.0);
+                    assert!(rel < 1e-4, "m={m} k={k} n={n} beta={beta}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    /// Same seed, different intra-op thread budgets: bitwise-equal output.
+    #[test]
+    fn gemm_bitwise_deterministic_across_thread_counts() {
+        let (m, k, n) = (130, 70, 96);
+        let mut rng = crate::util::Rng::seed_from_u64(11);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let run = |budget: usize| {
+            with_intra_budget(budget, || {
+                let mut c = vec![0.0; m * n];
+                gemm(&a, &b, &mut c, m, k, n, 0.0);
+                c
+            })
+        };
+        let serial = run(1);
+        for budget in [2, 3, 4, 8] {
+            let par = run(budget);
+            assert!(
+                serial.iter().zip(&par).all(|(s, p)| s.to_bits() == p.to_bits()),
+                "budget {budget} changed bits"
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_ikj_matches_blocked() {
+        let (m, k, n) = (33, 47, 29);
+        let mut rng = crate::util::Rng::seed_from_u64(12);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let mut c1 = vec![0.0; m * n];
+        gemm_ikj(&a, &b, &mut c1, m, k, n, 0.0);
+        let mut c2 = vec![0.0; m * n];
+        gemm(&a, &b, &mut c2, m, k, n, 0.0);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn conv2d_forward_matches_serial_composition() {
+        // conv2d_forward (possibly image-parallel) vs im2col+gemm by hand.
+        let (n, c, h, w, f, k, s, p) = (3, 2, 8, 8, 4, 3, 1, 1);
+        let (oh, ow) = (conv_out(h, k, s, p), conv_out(w, k, s, p));
+        let mut rng = crate::util::Rng::seed_from_u64(13);
+        let x: Vec<f32> = (0..n * c * h * w).map(|_| rng.normal()).collect();
+        let wt: Vec<f32> = (0..f * c * k * k).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..f).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; n * f * oh * ow];
+        conv2d_forward(&x, &wt, &bias, &mut y, n, c, h, w, f, k, s, p);
+        let ckk = c * k * k;
+        let spatial = oh * ow;
+        let mut cols = vec![0.0; ckk * spatial];
+        for img in 0..n {
+            im2col(&x[img * c * h * w..(img + 1) * c * h * w], &mut cols, c, h, w, k, k, s, p);
+            let mut want = vec![0.0; f * spatial];
+            gemm_reference(&wt, &cols, &mut want, f, ckk, spatial, 0.0, false, false);
+            for ff in 0..f {
+                for sp in 0..spatial {
+                    let got = y[img * f * spatial + ff * spatial + sp];
+                    let w0 = want[ff * spatial + sp] + bias[ff];
+                    assert!((got - w0).abs() < 1e-3, "img={img} f={ff} sp={sp}");
+                }
+            }
+        }
     }
 
     #[test]
@@ -774,6 +1401,23 @@ mod tests {
         }
         // invariant to shift: rows with equal relative offsets equal probs
         assert!((y[0] - y[3]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_deterministic_across_thread_counts() {
+        let (m, n) = (512, 257);
+        let mut rng = crate::util::Rng::seed_from_u64(14);
+        let x: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let run = |budget: usize| {
+            with_intra_budget(budget, || {
+                let mut y = vec![0.0; m * n];
+                softmax_rows(&x, &mut y, m, n);
+                y
+            })
+        };
+        let serial = run(1);
+        let par = run(4);
+        assert!(serial.iter().zip(&par).all(|(s, p)| s.to_bits() == p.to_bits()));
     }
 
     #[test]
@@ -906,8 +1550,6 @@ mod tests {
             batchnorm_forward(xx, &gamma, &beta, &mut y, &mut sm, &mut si, n, c, sp, 1e-5);
             y
         };
-        let y0 = fwd(&x);
-        let _ = y0;
         let mut sm = vec![0.0; c];
         let mut si = vec![0.0; c];
         let mut y = vec![0.0; n * c * sp];

@@ -83,10 +83,11 @@ impl NDArray {
         assert_eq!(k, k2, "dot: inner dims {k} vs {k2}");
         let out = NDArray::zeros_on(&[m, n], self.engine());
         let (sa, sb, so) = (self.storage(), other.storage(), out.storage());
-        self.engine().push(
+        self.engine().push_costed(
             "ndarray.dot",
             vec![self.var(), other.var()],
             vec![out.var()],
+            2.0 * m as f64 * k as f64 * n as f64,
             Box::new(move || unsafe {
                 kernels::gemm(sa.slice(), sb.slice(), so.slice_mut(), m, k, n, 0.0);
             }),
@@ -100,10 +101,11 @@ impl NDArray {
         let (m, n) = (self.shape()[0], self.shape()[1]);
         let out = NDArray::zeros_on(self.shape(), self.engine());
         let (sa, so) = (self.storage(), out.storage());
-        self.engine().push(
+        self.engine().push_costed(
             "ndarray.softmax",
             vec![self.var()],
             vec![out.var()],
+            8.0 * (m * n) as f64,
             Box::new(move || unsafe {
                 kernels::softmax_rows(sa.slice(), so.slice_mut(), m, n);
             }),

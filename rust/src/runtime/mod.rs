@@ -7,6 +7,12 @@
 //! linked xla_extension (0.5.1) rejects; the text parser reassigns ids
 //! and round-trips cleanly (see `/opt/skills` aot recipe).
 //!
+//! The `xla` crate is not vendored in every build image, so the PJRT
+//! path is gated behind the `xla-runtime` feature.  Without it this
+//! module compiles an API-compatible stub whose [`Runtime::cpu`] returns
+//! a [`Error::Runtime`] — callers (the CLI, `aot_e2e` tests, examples)
+//! already handle that error or skip.
+//!
 //! ```no_run
 //! use mixnet::runtime::Runtime;
 //! let rt = Runtime::cpu().unwrap();
@@ -19,152 +25,256 @@
 
 pub mod artifacts;
 
-use std::collections::HashMap;
-use std::path::Path;
-
 pub use artifacts::{load_manifest, Manifest, ModuleSpec, TensorKind, TensorSpec};
 
-use crate::error::{Error, Result};
+#[cfg(feature = "xla-runtime")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::Path;
 
-fn rt(e: xla::Error) -> Error {
-    Error::Runtime(e.to_string())
-}
+    use super::{load_manifest, ModuleSpec};
+    use crate::error::{Error, Result};
 
-/// A PJRT client plus compilation cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        Ok(Runtime { client: xla::PjRtClient::cpu().map_err(rt)? })
+    fn rt(e: xla::Error) -> Error {
+        Error::Runtime(e.to_string())
     }
 
-    /// Backend platform name ("cpu" here; "tpu" on a real pod).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// A PJRT client plus compilation cache.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    /// Compile one HLO-text file against `spec`.
-    pub fn load_module(&self, dir: &Path, spec: &ModuleSpec) -> Result<Program> {
-        let path = dir.join(&spec.hlo_file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
-        )
-        .map_err(rt)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(rt)?;
-        Ok(Program { exe, spec: spec.clone() })
-    }
-
-    /// Load every module listed in `<dir>/manifest.txt`.
-    pub fn load_dir(&self, dir: &Path) -> Result<HashMap<String, Program>> {
-        let manifest = load_manifest(dir)?;
-        manifest
-            .modules
-            .values()
-            .map(|spec| Ok((spec.name.clone(), self.load_module(&manifest.dir, spec)?)))
-            .collect()
-    }
-}
-
-/// A compiled, executable module.
-pub struct Program {
-    exe: xla::PjRtLoadedExecutable,
-    spec: ModuleSpec,
-}
-
-impl Program {
-    /// The module's signature.
-    pub fn spec(&self) -> &ModuleSpec {
-        &self.spec
-    }
-
-    /// Execute with positional f32 host buffers; returns one `Vec<f32>`
-    /// per manifest output.  Input lengths are validated against the
-    /// manifest shapes.
-    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
-        if inputs.len() != self.spec.inputs.len() {
-            return Err(Error::Runtime(format!(
-                "module '{}' expects {} inputs, got {}",
-                self.spec.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            )));
+    impl Runtime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            Ok(Runtime { client: xla::PjRtClient::cpu().map_err(rt)? })
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, ts) in inputs.iter().zip(&self.spec.inputs) {
-            if data.len() != ts.size() {
+
+        /// Backend platform name ("cpu" here; "tpu" on a real pod).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile one HLO-text file against `spec`.
+        pub fn load_module(&self, dir: &Path, spec: &ModuleSpec) -> Result<Program> {
+            let path = dir.join(&spec.hlo_file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+            )
+            .map_err(rt)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(rt)?;
+            Ok(Program { exe, spec: spec.clone() })
+        }
+
+        /// Load every module listed in `<dir>/manifest.txt`.
+        pub fn load_dir(&self, dir: &Path) -> Result<HashMap<String, Program>> {
+            let manifest = load_manifest(dir)?;
+            manifest
+                .modules
+                .values()
+                .map(|spec| Ok((spec.name.clone(), self.load_module(&manifest.dir, spec)?)))
+                .collect()
+        }
+    }
+
+    /// A compiled, executable module.
+    pub struct Program {
+        exe: xla::PjRtLoadedExecutable,
+        spec: ModuleSpec,
+    }
+
+    impl Program {
+        /// The module's signature.
+        pub fn spec(&self) -> &ModuleSpec {
+            &self.spec
+        }
+
+        /// Execute with positional f32 host buffers; returns one `Vec<f32>`
+        /// per manifest output.  Input lengths are validated against the
+        /// manifest shapes.
+        pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+            if inputs.len() != self.spec.inputs.len() {
                 return Err(Error::Runtime(format!(
-                    "module '{}' input '{}': {} elements given, shape {:?} needs {}",
+                    "module '{}' expects {} inputs, got {}",
                     self.spec.name,
-                    ts.name,
-                    data.len(),
-                    ts.shape,
-                    ts.size()
+                    self.spec.inputs.len(),
+                    inputs.len()
                 )));
             }
-            let lit = xla::Literal::vec1(data);
-            let dims: Vec<i64> = ts.shape.iter().map(|&d| d as i64).collect();
-            literals.push(if ts.shape.len() == 1 {
-                lit
-            } else {
-                lit.reshape(&dims).map_err(rt)?
-            });
-        }
-        let result = self.exe.execute::<xla::Literal>(&literals).map_err(rt)?;
-        // aot.py lowers with return_tuple=True: one tuple literal holding
-        // every output.
-        let tuple = result[0][0].to_literal_sync().map_err(rt)?;
-        let parts = tuple.to_tuple().map_err(rt)?;
-        if parts.len() != self.spec.outputs.len() {
-            return Err(Error::Runtime(format!(
-                "module '{}': manifest lists {} outputs, HLO returned {}",
-                self.spec.name,
-                self.spec.outputs.len(),
-                parts.len()
-            )));
-        }
-        parts
-            .into_iter()
-            .zip(&self.spec.outputs)
-            .map(|(lit, ts)| {
-                let v: Vec<f32> = lit.to_vec().map_err(rt)?;
-                if v.len() != ts.size() {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, ts) in inputs.iter().zip(&self.spec.inputs) {
+                if data.len() != ts.size() {
                     return Err(Error::Runtime(format!(
-                        "module '{}' output '{}': got {} elements, expected {}",
+                        "module '{}' input '{}': {} elements given, shape {:?} needs {}",
                         self.spec.name,
                         ts.name,
-                        v.len(),
+                        data.len(),
+                        ts.shape,
                         ts.size()
                     )));
                 }
-                Ok(v)
-            })
-            .collect()
-    }
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = ts.shape.iter().map(|&d| d as i64).collect();
+                literals.push(if ts.shape.len() == 1 {
+                    lit
+                } else {
+                    lit.reshape(&dims).map_err(rt)?
+                });
+            }
+            let result = self.exe.execute::<xla::Literal>(&literals).map_err(rt)?;
+            // aot.py lowers with return_tuple=True: one tuple literal holding
+            // every output.
+            let tuple = result[0][0].to_literal_sync().map_err(rt)?;
+            let parts = tuple.to_tuple().map_err(rt)?;
+            if parts.len() != self.spec.outputs.len() {
+                return Err(Error::Runtime(format!(
+                    "module '{}': manifest lists {} outputs, HLO returned {}",
+                    self.spec.name,
+                    self.spec.outputs.len(),
+                    parts.len()
+                )));
+            }
+            parts
+                .into_iter()
+                .zip(&self.spec.outputs)
+                .map(|(lit, ts)| {
+                    let v: Vec<f32> = lit.to_vec().map_err(rt)?;
+                    if v.len() != ts.size() {
+                        return Err(Error::Runtime(format!(
+                            "module '{}' output '{}': got {} elements, expected {}",
+                            self.spec.name,
+                            ts.name,
+                            v.len(),
+                            ts.size()
+                        )));
+                    }
+                    Ok(v)
+                })
+                .collect()
+        }
 
-    /// Execute by output name: convenience wrapper returning a map.
-    pub fn run_named(&self, inputs: &[&[f32]]) -> Result<HashMap<String, Vec<f32>>> {
-        let outs = self.run(inputs)?;
-        Ok(self
-            .spec
-            .outputs
-            .iter()
-            .map(|t| t.name.clone())
-            .zip(outs)
-            .collect())
+        /// Execute by output name: convenience wrapper returning a map.
+        pub fn run_named(&self, inputs: &[&[f32]]) -> Result<HashMap<String, Vec<f32>>> {
+            let outs = self.run(inputs)?;
+            Ok(self
+                .spec
+                .outputs
+                .iter()
+                .map(|t| t.name.clone())
+                .zip(outs)
+                .collect())
+        }
     }
 }
+
+#[cfg(feature = "xla-runtime")]
+pub use pjrt::{Program, Runtime};
+
+/// API-compatible stub used when the `xla-runtime` feature is off: the
+/// constructor fails with a descriptive error and nothing else is
+/// reachable, so downstream code (CLI `runtime` subcommand, examples,
+/// `aot_e2e` tests) compiles unchanged and degrades gracefully.
+#[cfg(not(feature = "xla-runtime"))]
+mod stub {
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use super::ModuleSpec;
+    use crate::error::{Error, Result};
+
+    fn unavailable() -> Error {
+        Error::Runtime(
+            "mixnet was built without the `xla-runtime` feature; \
+             add the `xla` crate to rust/Cargo.toml [dependencies] and \
+             rebuild with `cargo build --features xla-runtime` to enable \
+             the PJRT path"
+                .into(),
+        )
+    }
+
+    /// Stub PJRT client; construction always fails.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    impl Runtime {
+        /// Always returns [`Error::Runtime`] in stub builds.
+        pub fn cpu() -> Result<Self> {
+            Err(unavailable())
+        }
+
+        /// Backend platform name (unreachable in stub builds).
+        pub fn platform(&self) -> String {
+            unreachable!("stub Runtime cannot be constructed")
+        }
+
+        /// Compile one HLO-text file (unreachable in stub builds).
+        pub fn load_module(&self, _dir: &Path, _spec: &ModuleSpec) -> Result<Program> {
+            Err(unavailable())
+        }
+
+        /// Load every module in a manifest (unreachable in stub builds).
+        pub fn load_dir(&self, _dir: &Path) -> Result<HashMap<String, Program>> {
+            Err(unavailable())
+        }
+    }
+
+    /// Stub compiled module; never constructed.
+    pub struct Program {
+        _spec: ModuleSpec,
+    }
+
+    impl Program {
+        /// The module's signature.
+        pub fn spec(&self) -> &ModuleSpec {
+            &self._spec
+        }
+
+        /// Execute (unreachable in stub builds).
+        pub fn run(&self, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+            Err(unavailable())
+        }
+
+        /// Execute by output name (unreachable in stub builds).
+        pub fn run_named(&self, _inputs: &[&[f32]]) -> Result<HashMap<String, Vec<f32>>> {
+            Err(unavailable())
+        }
+    }
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+pub use stub::{Program, Runtime};
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use artifacts::parse_manifest;
+    use std::path::Path;
+
+    #[test]
+    fn manifest_sample_roundtrip() {
+        let m = parse_manifest(
+            "module a\nhlo a.hlo.txt\ninput x data 2,2\noutput y 2,2\nend\n",
+            Path::new("."),
+        )
+        .unwrap();
+        assert_eq!(m.modules["a"].inputs[0].shape, vec![2, 2]);
+    }
+
+    #[cfg(not(feature = "xla-runtime"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let err = match Runtime::cpu() {
+            Err(e) => e,
+            Ok(_) => panic!("stub Runtime::cpu must fail"),
+        };
+        assert!(format!("{err}").contains("xla-runtime"));
+    }
 
     /// HLO text for `f(x, y) = (x + y, x * y)` over f32[4]; written by
     /// hand so the runtime tests do not depend on `make artifacts`.
+    #[cfg(feature = "xla-runtime")]
     const ADD_MUL_HLO: &str = r#"
 HloModule addmul, entry_computation_layout={(f32[4]{0}, f32[4]{0})->(f32[4]{0}, f32[4]{0})}
 
@@ -177,6 +287,7 @@ ENTRY main {
 }
 "#;
 
+    #[cfg(feature = "xla-runtime")]
     fn write_artifacts() -> tempdir::TempDir {
         let dir = tempdir::TempDir::new();
         std::fs::write(dir.path().join("addmul.hlo.txt"), ADD_MUL_HLO).unwrap();
@@ -189,6 +300,7 @@ ENTRY main {
     }
 
     /// Minimal tempdir (no external crate).
+    #[cfg(feature = "xla-runtime")]
     mod tempdir {
         pub struct TempDir(std::path::PathBuf);
         impl TempDir {
@@ -212,6 +324,7 @@ ENTRY main {
         }
     }
 
+    #[cfg(feature = "xla-runtime")]
     #[test]
     fn load_and_execute_hlo_text() {
         let dir = write_artifacts();
@@ -227,6 +340,7 @@ ENTRY main {
         assert_eq!(named["prod"][3], 160.0);
     }
 
+    #[cfg(feature = "xla-runtime")]
     #[test]
     fn wrong_arity_rejected() {
         let dir = write_artifacts();
@@ -236,6 +350,7 @@ ENTRY main {
         assert!(p.run(&[&x]).is_err());
     }
 
+    #[cfg(feature = "xla-runtime")]
     #[test]
     fn wrong_size_rejected() {
         let dir = write_artifacts();
@@ -246,6 +361,7 @@ ENTRY main {
         assert!(p.run(&[&x, &y]).is_err());
     }
 
+    #[cfg(feature = "xla-runtime")]
     #[test]
     fn missing_manifest_mentions_make_artifacts() {
         let rt = Runtime::cpu().unwrap();
@@ -254,15 +370,5 @@ ENTRY main {
             Ok(_) => panic!("expected missing-manifest error"),
         };
         assert!(format!("{err}").contains("make artifacts"));
-    }
-
-    #[test]
-    fn manifest_sample_roundtrip() {
-        let m = parse_manifest(
-            "module a\nhlo a.hlo.txt\ninput x data 2,2\noutput y 2,2\nend\n",
-            Path::new("."),
-        )
-        .unwrap();
-        assert_eq!(m.modules["a"].inputs[0].shape, vec![2, 2]);
     }
 }

@@ -3,47 +3,59 @@
 
 use crate::graph::{Graph, Op, ShapeMap};
 
+/// Analytic FLOP estimate for one execution of `op` given its input and
+/// output shapes.  Convolutions and matmuls dominate; elementwise ops are
+/// counted at one FLOP per output element.
+///
+/// This is the *cost hint* the executor attaches to every engine op
+/// (`Engine::push_costed`): the threaded engine uses it to decide
+/// serial-vs-parallel dispatch, dividing the intra-op pool among heavy
+/// ops in flight.
+pub fn op_flops(op: &Op, in_shapes: &[Vec<usize>], out_shapes: &[Vec<usize>]) -> f64 {
+    let out_elems =
+        |o: usize| out_shapes.get(o).map_or(0.0, |s| s.iter().product::<usize>() as f64);
+    match op {
+        Op::Variable => 0.0,
+        Op::FullyConnected { num_hidden } => {
+            let x = &in_shapes[0];
+            let in_dim: f64 = x[1..].iter().product::<usize>() as f64;
+            2.0 * x[0] as f64 * in_dim * *num_hidden as f64
+        }
+        Op::FullyConnectedBackward => {
+            // dx = dy.W, dw = dy^T.x, db = sum(dy): ~2x forward matmul
+            let dy = &in_shapes[0];
+            let w = &in_shapes[2];
+            4.0 * dy[0] as f64 * dy[1] as f64 * w[1] as f64
+        }
+        Op::Convolution { kernel, .. } => {
+            let x = &in_shapes[0];
+            2.0 * out_elems(0) * (x[1] * kernel * kernel) as f64
+        }
+        Op::ConvolutionBackward { kernel, .. } => {
+            let x = &in_shapes[1];
+            let dy = &in_shapes[0];
+            4.0 * dy.iter().product::<usize>() as f64 * (x[1] * kernel * kernel) as f64
+        }
+        Op::BatchNorm { .. } | Op::BatchNormBackward => 5.0 * out_elems(0),
+        Op::Pooling { kernel, .. } => out_elems(0) * (kernel * kernel) as f64,
+        Op::PoolingBackward { kernel, .. } => out_elems(0) * (kernel * kernel) as f64,
+        Op::SoftmaxOutput | Op::SoftmaxOutputBackward => 4.0 * out_elems(0),
+        Op::FusedElemwise { steps } => out_elems(0) * steps.len().max(1) as f64,
+        // elementwise family: 1 FLOP per element
+        _ => (0..out_shapes.len()).map(out_elems).sum::<f64>(),
+    }
+}
+
 /// Floating-point operations of one execution of `graph` (both passes if
-/// the graph contains backward nodes).  Convolutions and matmuls dominate;
-/// elementwise ops are counted at one FLOP per output element.
+/// the graph contains backward nodes).  Sums [`op_flops`] over every node.
 pub fn graph_flops(graph: &Graph, shapes: &ShapeMap) -> f64 {
     let mut total = 0.0f64;
     for (id, node) in graph.nodes.iter().enumerate() {
-        let out_elems = |o: usize| shapes[id][o].iter().product::<usize>() as f64;
-        let in_shape = |i: usize| &shapes[node.inputs[i].node][node.inputs[i].out];
-        total += match &node.op {
-            Op::Variable => 0.0,
-            Op::FullyConnected { num_hidden } => {
-                let x = in_shape(0);
-                let in_dim: f64 = x[1..].iter().product::<usize>() as f64;
-                2.0 * x[0] as f64 * in_dim * *num_hidden as f64
-            }
-            Op::FullyConnectedBackward => {
-                // dx = dy.W, dw = dy^T.x, db = sum(dy): ~2x forward matmul
-                let dy = in_shape(0);
-                let w = in_shape(2);
-                4.0 * dy[0] as f64 * dy[1] as f64 * w[1] as f64
-            }
-            Op::Convolution { kernel, .. } => {
-                let x = in_shape(0);
-                let y = &shapes[id][0];
-                2.0 * y.iter().product::<usize>() as f64
-                    * (x[1] * kernel * kernel) as f64
-            }
-            Op::ConvolutionBackward { kernel, .. } => {
-                let x = in_shape(1);
-                let dy = in_shape(0);
-                4.0 * dy.iter().product::<usize>() as f64
-                    * (x[1] * kernel * kernel) as f64
-            }
-            Op::BatchNorm { .. } | Op::BatchNormBackward => 5.0 * out_elems(0),
-            Op::Pooling { kernel, .. } => out_elems(0) * (kernel * kernel) as f64,
-            Op::PoolingBackward { kernel, .. } => out_elems(0) * (kernel * kernel) as f64,
-            Op::SoftmaxOutput | Op::SoftmaxOutputBackward => 4.0 * out_elems(0),
-            Op::FusedElemwise { steps } => out_elems(0) * steps.len().max(1) as f64,
-            // elementwise family: 1 FLOP per element
-            _ => (0..graph.num_outputs_of(id)).map(out_elems).sum::<f64>(),
-        };
+        let in_shapes: Vec<Vec<usize>> =
+            node.inputs.iter().map(|e| shapes[e.node][e.out].clone()).collect();
+        let out_shapes: Vec<Vec<usize>> =
+            (0..graph.num_outputs_of(id)).map(|o| shapes[id][o].clone()).collect();
+        total += op_flops(&node.op, &in_shapes, &out_shapes);
     }
     total
 }

@@ -18,4 +18,4 @@ pub mod cluster;
 pub mod cost;
 
 pub use cluster::{simulate, ClusterConfig, PassStat};
-pub use cost::{graph_flops, CostModel};
+pub use cost::{graph_flops, op_flops, CostModel};

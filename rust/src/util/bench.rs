@@ -116,6 +116,81 @@ impl Bencher {
     }
 }
 
+/// One machine-readable benchmark record for `BENCH_*.json` files.
+///
+/// Future PRs track the perf trajectory by diffing these files, so the
+/// schema is deliberately flat: one object per (op, shape, threads)
+/// combination.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// Kernel / case name, e.g. "gemm" or "fig6/mxnet/forward".
+    pub op: String,
+    /// Shape string, e.g. "512x512x512".
+    pub shape: String,
+    /// Intra-op threads used (0 = not applicable).
+    pub threads: usize,
+    /// Median wall time per iteration, milliseconds.
+    pub median_ms: f64,
+    /// Achieved GFLOP/s (0.0 when no FLOP count applies).
+    pub gflops: f64,
+}
+
+impl BenchRecord {
+    /// Build a record from measured stats and a FLOP count per iteration.
+    pub fn from_stats(op: &str, shape: &str, threads: usize, stats: &BenchStats, flops: f64) -> Self {
+        let s = stats.median_s();
+        BenchRecord {
+            op: op.to_string(),
+            shape: shape.to_string(),
+            threads,
+            median_ms: s * 1e3,
+            gflops: if s > 0.0 && flops > 0.0 { flops / s / 1e9 } else { 0.0 },
+        }
+    }
+}
+
+/// Minimal JSON string escaping (the only non-trivial characters our
+/// bench names can contain are quotes and backslashes).
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Serialize records as a pretty-printed JSON document (hand-rolled —
+/// serde is not vendored).
+pub fn bench_records_to_json(meta: &[(&str, String)], records: &[BenchRecord]) -> String {
+    let mut out = String::from("{\n");
+    for (k, v) in meta {
+        out.push_str(&format!("  \"{}\": \"{}\",\n", json_escape(k), json_escape(v)));
+    }
+    out.push_str("  \"records\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"op\": \"{}\", \"shape\": \"{}\", \"threads\": {}, \
+             \"median_ms\": {:.4}, \"gflops\": {:.3}}}{}\n",
+            json_escape(&r.op),
+            json_escape(&r.shape),
+            r.threads,
+            r.median_ms,
+            r.gflops,
+            if i + 1 == records.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write records to `path` as JSON, with free-form metadata pairs
+/// (date, host, commit, ...) at the top level.
+pub fn write_bench_json(
+    path: &str,
+    meta: &[(&str, String)],
+    records: &[BenchRecord],
+) -> std::io::Result<()> {
+    std::fs::write(path, bench_records_to_json(meta, records))?;
+    eprintln!("wrote {} records to {path}", records.len());
+    Ok(())
+}
+
 /// Print an aligned text table (used by the figure-regeneration benches).
 pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
     println!("\n== {title} ==");
@@ -166,5 +241,40 @@ mod tests {
         let b = Bencher { warmup: 1, samples: 5, max_total: Duration::from_secs(5) };
         let stats = b.run("noop", || { std::hint::black_box(1 + 1); });
         assert_eq!(stats.samples.len(), 5);
+    }
+
+    #[test]
+    fn bench_record_computes_gflops() {
+        let stats = BenchStats {
+            name: "gemm".into(),
+            samples: vec![Duration::from_millis(100); 3],
+        };
+        // 2e9 FLOP in 0.1 s = 20 GFLOP/s
+        let r = BenchRecord::from_stats("gemm", "1024x1024x1024", 4, &stats, 2e9);
+        assert!((r.gflops - 20.0).abs() < 1e-6, "{}", r.gflops);
+        assert!((r.median_ms - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn json_output_is_well_formed() {
+        let r = BenchRecord {
+            op: "gemm".into(),
+            shape: "8x8x8".into(),
+            threads: 2,
+            median_ms: 1.25,
+            gflops: 3.5,
+        };
+        let js = bench_records_to_json(&[("bench", "kernels".to_string())], &[r]);
+        assert!(js.contains("\"bench\": \"kernels\""));
+        assert!(js.contains("\"op\": \"gemm\""));
+        assert!(js.contains("\"threads\": 2"));
+        assert!(js.starts_with('{') && js.trim_end().ends_with('}'));
+        // no trailing comma before the closing bracket
+        assert!(!js.contains(",\n  ]"));
+    }
+
+    #[test]
+    fn json_escapes_quotes() {
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
     }
 }

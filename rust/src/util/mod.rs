@@ -10,7 +10,10 @@ pub mod threadpool;
 
 pub use args::Args;
 pub use rng::Rng;
-pub use threadpool::ThreadPool;
+pub use threadpool::{
+    intra_budget, intra_pool, parallel_for, parallel_for_cost, set_intra_budget,
+    with_intra_budget, IntraPool, ThreadPool, INTRA_MIN_COST,
+};
 
 /// Format a byte count as a human-readable MB string (as used by Figure 7).
 pub fn mb(bytes: usize) -> f64 {

@@ -1,12 +1,29 @@
-//! A fixed-size worker thread pool.
+//! Worker thread pools: the engine's inter-op pool and the kernels'
+//! intra-op pool.
 //!
-//! The dependency engine dispatches ready operations onto this pool
-//! (MXNet §3.2: *"the engine uses multiple threads to scheduling the
-//! operations for better resource utilization and parallelization"*).
+//! [`ThreadPool`] backs the dependency engine, which dispatches ready
+//! operations onto it (MXNet §3.2: *"the engine uses multiple threads to
+//! scheduling the operations for better resource utilization and
+//! parallelization"*).  That is **inter**-op parallelism: independent
+//! kernels run concurrently.
+//!
+//! [`IntraPool`] / [`parallel_for`] provide **intra**-op parallelism: one
+//! big kernel (a GEMM row-panel sweep, a batch of images through im2col)
+//! splits its own index space into chunks and fans those out.  The chunk
+//! partition is a pure function of the problem size — never of the thread
+//! count — so results are bitwise identical no matter how many workers
+//! participate; threads only change *which* worker computes a chunk.
+//!
+//! The two layers cooperate through a per-thread *budget*
+//! ([`set_intra_budget`]): when the engine has many independent heavy ops
+//! in flight it caps how many intra-op workers each op may recruit,
+//! avoiding oversubscription (see `engine::threaded`).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -114,6 +131,316 @@ impl Drop for ThreadPool {
     }
 }
 
+// ---------------------------------------------------------------------
+// Intra-op parallelism
+// ---------------------------------------------------------------------
+
+/// One broadcast job: workers (and the submitter) race on `next` to claim
+/// chunk indices until the range is exhausted.
+struct JobCore {
+    /// Borrowed closure, lifetime-erased.  Sound because
+    /// [`IntraPool::run`] does not return until `pending == 0`, and a
+    /// worker only dereferences `f` for a chunk index it won from `next`
+    /// (`next < nchunks`), which also implies `pending > 0` at that time.
+    /// Chunk bodies are run under `catch_unwind` so a panicking chunk
+    /// still decrements `pending` — the completion wait (and therefore
+    /// the borrow's validity) survives panics.
+    f: &'static (dyn Fn(usize) + Sync),
+    /// Next chunk index to claim.
+    next: AtomicUsize,
+    /// Total chunks.
+    nchunks: usize,
+    /// Chunks not yet completed; the run is over when this hits 0.
+    pending: AtomicUsize,
+    /// Workers admitted so far; capped to the submitter's budget.
+    entered: AtomicUsize,
+    /// Max participants (budget), including the submitting thread.
+    cap: usize,
+    /// First panic payload from any chunk; re-raised on the submitting
+    /// thread after every chunk has completed.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+struct IntraShared {
+    /// Current job broadcast, tagged with a generation counter so a
+    /// worker never re-enters a job it already drained.
+    slot: Mutex<(u64, Option<Arc<JobCore>>)>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A process-wide pool for *intra-op* parallelism (`parallel_for`).
+///
+/// One job runs at a time; the submitting thread always participates, so
+/// a 1-thread pool degenerates to plain serial execution with no
+/// cross-thread traffic.  Nested `run` calls from inside a chunk execute
+/// serially inline (no deadlock, no oversubscription).
+pub struct IntraPool {
+    shared: Arc<IntraShared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+thread_local! {
+    /// Set while a thread executes chunks of a job; makes nested
+    /// `parallel_for` serial.
+    static IN_PARALLEL_REGION: Cell<bool> = const { Cell::new(false) };
+    /// Per-thread cap on intra-op workers, set by the engine before
+    /// running an op (usize::MAX = uncapped).
+    static INTRA_BUDGET: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+impl IntraPool {
+    /// Create a pool that computes with `threads` total threads (the
+    /// submitter plus `threads - 1` workers).  Clamped to >= 1.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(IntraShared {
+            slot: Mutex::new((0, None)),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("mixnet-intra-{i}"))
+                    .spawn(move || intra_worker_loop(shared))
+                    .expect("spawn intra worker")
+            })
+            .collect();
+        IntraPool { shared, workers, threads }
+    }
+
+    /// Total compute threads (submitter + workers).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(chunk)` for every `chunk in 0..nchunks`, fanning out over
+    /// at most `cap` threads (including the caller).  Blocks until every
+    /// chunk has completed.  Chunks are claimed dynamically but the chunk
+    /// *contents* are fixed by the caller, so any data written to
+    /// disjoint per-chunk regions is independent of thread count.
+    pub fn run(&self, nchunks: usize, cap: usize, f: &(dyn Fn(usize) + Sync)) {
+        let cap = cap.min(self.threads).max(1);
+        let serial = nchunks <= 1
+            || cap == 1
+            || self.workers.is_empty()
+            || IN_PARALLEL_REGION.with(|c| c.get());
+        if serial {
+            for i in 0..nchunks {
+                f(i);
+            }
+            return;
+        }
+        // SAFETY: see `JobCore::f` — the borrow outlives every
+        // dereference because `run` blocks until `pending == 0`.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        let job = Arc::new(JobCore {
+            f: f_static,
+            next: AtomicUsize::new(0),
+            nchunks,
+            pending: AtomicUsize::new(nchunks),
+            entered: AtomicUsize::new(1), // the submitter
+            cap,
+            panic: Mutex::new(None),
+        });
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.0 += 1;
+            slot.1 = Some(Arc::clone(&job));
+            self.shared.work_cv.notify_all();
+        }
+        // The submitter works too, flagged so nested calls stay serial.
+        IN_PARALLEL_REGION.with(|c| c.set(true));
+        Self::drain(&self.shared, &job);
+        IN_PARALLEL_REGION.with(|c| c.set(false));
+        // Wait for chunks still running on workers.
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            while job.pending.load(Ordering::Acquire) != 0 {
+                slot = self.shared.done_cv.wait(slot).unwrap();
+            }
+            // Clear the broadcast so idle workers stop seeing the drained
+            // job — but only if a concurrent `run` has not already
+            // replaced it with its own (each submitter always completes
+            // its own chunks, so overlapping runs stay correct; they just
+            // share workers less efficiently).
+            if slot.1.as_ref().is_some_and(|j| Arc::ptr_eq(j, &job)) {
+                slot.1 = None;
+            }
+        }
+        // Re-raise a chunk panic on the submitting thread, now that the
+        // borrow of `f` is provably dead.  The engine layer catches it
+        // like any other op panic.
+        if let Some(payload) = job.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Claim and execute chunks until the range is exhausted.  A chunk
+    /// panic is caught so `pending` always reaches 0 (no deadlocked
+    /// submitter, no dangling `f` borrow); the first payload is stashed
+    /// for the submitter to re-raise.
+    fn drain(shared: &IntraShared, job: &JobCore) {
+        loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.nchunks {
+                return;
+            }
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.f)(i)));
+            if let Err(payload) = result {
+                let mut slot = job.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let _g = shared.slot.lock().unwrap();
+                shared.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+fn intra_worker_loop(shared: Arc<IntraShared>) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                if slot.0 != seen {
+                    seen = slot.0;
+                    if let Some(j) = slot.1.as_ref() {
+                        break Arc::clone(j);
+                    }
+                    continue; // stale generation with no job
+                }
+                slot = shared.work_cv.wait(slot).unwrap();
+            }
+        };
+        // Admission control: respect the submitter's thread budget.
+        if job.entered.fetch_add(1, Ordering::Relaxed) >= job.cap {
+            continue;
+        }
+        IN_PARALLEL_REGION.with(|c| c.set(true));
+        IntraPool::drain(&shared, &job);
+        IN_PARALLEL_REGION.with(|c| c.set(false));
+    }
+}
+
+impl Drop for IntraPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _g = self.shared.slot.lock().unwrap();
+            self.shared.work_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// The process-wide intra-op pool.  Thread count comes from
+/// `PALLAS_INTRA_THREADS` (default: all hardware threads).
+pub fn intra_pool() -> &'static IntraPool {
+    static POOL: OnceLock<IntraPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let threads = std::env::var("PALLAS_INTRA_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        IntraPool::new(threads)
+    })
+}
+
+/// Cap the number of intra-op workers ops on *this thread* may recruit
+/// (set by the engine before invoking an op body; `usize::MAX` = no cap).
+/// Returns the previous value so callers can restore it.
+pub fn set_intra_budget(cap: usize) -> usize {
+    INTRA_BUDGET.with(|c| c.replace(cap.max(1)))
+}
+
+/// Effective intra-op parallelism available to the current thread.
+pub fn intra_budget() -> usize {
+    INTRA_BUDGET.with(|c| c.get()).min(intra_pool().threads())
+}
+
+/// Run `f` with the intra-op budget temporarily set to `cap` (tests and
+/// benches: pin the worker count regardless of pool size).  The previous
+/// budget is restored even if `f` panics, so a failing assertion cannot
+/// leak a pinned budget onto a reused test-harness thread.
+pub fn with_intra_budget<R>(cap: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            INTRA_BUDGET.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(set_intra_budget(cap));
+    f()
+}
+
+/// Estimated FLOPs (or element-ops) below which a kernel is not worth
+/// fanning out: at ~1 GFLOP/s-per-core serial floor this is ~0.5 ms of
+/// work, comfortably above the pool's wake/communication latency.
+pub const INTRA_MIN_COST: f64 = 5e5;
+
+/// Chunked parallel iteration over `0..n`: calls `f(lo..hi)` for
+/// consecutive ranges of at most `grain` items.
+///
+/// The partition depends only on `n` and `grain`, so kernels that write
+/// disjoint per-chunk output regions produce bitwise-identical results
+/// for every thread count — including fully serial execution, which uses
+/// the *same* chunk sequence.
+pub fn parallel_for(n: usize, grain: usize, f: impl Fn(Range<usize>) + Sync) {
+    let grain = grain.max(1);
+    let nchunks = n.div_ceil(grain);
+    if nchunks == 0 {
+        return;
+    }
+    let chunk = |i: usize| {
+        let lo = i * grain;
+        let hi = (lo + grain).min(n);
+        f(lo..hi);
+    };
+    let budget = intra_budget();
+    if nchunks == 1 || budget <= 1 {
+        for i in 0..nchunks {
+            chunk(i);
+        }
+        return;
+    }
+    intra_pool().run(nchunks, budget, &chunk);
+}
+
+/// [`parallel_for`] gated by an estimated cost: below [`INTRA_MIN_COST`]
+/// the loop runs serially (same chunk partition, so same results).
+pub fn parallel_for_cost(n: usize, grain: usize, cost: f64, f: impl Fn(Range<usize>) + Sync) {
+    let grain = grain.max(1);
+    if !(cost >= INTRA_MIN_COST) {
+        // NaN (unknown) and cheap both stay serial.
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + grain).min(n);
+            f(lo..hi);
+            lo = hi;
+        }
+        return;
+    }
+    parallel_for(n, grain, f);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,5 +504,131 @@ mod tests {
         });
         pool.wait_idle();
         assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    // ---- intra-op pool -----------------------------------------------
+
+    #[test]
+    fn intra_run_covers_every_chunk_exactly_once() {
+        let pool = IntraPool::new(4);
+        let hits: Vec<AtomicU64> = (0..37).map(|_| AtomicU64::new(0)).collect();
+        pool.run(hits.len(), 4, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i}");
+        }
+    }
+
+    #[test]
+    fn intra_run_reusable_across_jobs() {
+        let pool = IntraPool::new(3);
+        for round in 1..=5u64 {
+            let sum = AtomicU64::new(0);
+            pool.run(16, 3, &|i| {
+                sum.fetch_add(round * i as u64, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), round * (0..16).sum::<u64>());
+        }
+    }
+
+    #[test]
+    fn intra_single_thread_pool_is_serial_inline() {
+        let pool = IntraPool::new(1);
+        let order = Mutex::new(Vec::new());
+        pool.run(8, 8, &|i| order.lock().unwrap().push(i));
+        assert_eq!(*order.lock().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_run_executes_serially_without_deadlock() {
+        let pool = Arc::new(IntraPool::new(4));
+        let total = AtomicU64::new(0);
+        let p = Arc::clone(&pool);
+        pool.run(4, 4, &|_| {
+            // nested: must run inline on this worker, not hang
+            p.run(4, 4, &|j| {
+                total.fetch_add(1 + j as u64, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * (1 + 2 + 3 + 4));
+    }
+
+    #[test]
+    fn panicking_chunk_neither_deadlocks_nor_leaks() {
+        let pool = IntraPool::new(4);
+        let done = AtomicU64::new(0);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, 4, &|i| {
+                if i == 3 {
+                    panic!("intentional chunk panic");
+                }
+                done.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(res.is_err(), "chunk panic must re-raise on the submitter");
+        assert_eq!(done.load(Ordering::Relaxed), 7, "other chunks still run");
+        // The pool must remain fully usable afterwards.
+        let sum = AtomicU64::new(0);
+        pool.run(4, 4, &|i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn parallel_for_partition_is_thread_count_independent() {
+        // Collect the chunk ranges under budget 1 and budget 4: the
+        // partitions must be identical (order may differ under 4).
+        let ranges = |budget: usize| {
+            let out = Mutex::new(Vec::new());
+            with_intra_budget(budget, || {
+                parallel_for(103, 10, |r| out.lock().unwrap().push((r.start, r.end)));
+            });
+            let mut v = out.into_inner().unwrap();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(ranges(1), ranges(4));
+    }
+
+    #[test]
+    fn parallel_for_cost_gates_cheap_work_serial() {
+        // Cheap: runs on the calling thread in order.
+        let order = Mutex::new(Vec::new());
+        parallel_for_cost(10, 2, 1.0, |r| order.lock().unwrap().push(r.start));
+        assert_eq!(*order.lock().unwrap(), vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn with_intra_budget_restores_previous() {
+        let before = intra_budget();
+        with_intra_budget(1, || {
+            assert_eq!(intra_budget(), 1);
+        });
+        assert_eq!(intra_budget(), before);
+    }
+
+    #[test]
+    fn concurrent_runs_from_two_threads_both_complete() {
+        let pool = Arc::new(IntraPool::new(4));
+        let a = Arc::clone(&pool);
+        let t = std::thread::spawn(move || {
+            let sum = AtomicU64::new(0);
+            for _ in 0..50 {
+                a.run(8, 4, &|i| {
+                    sum.fetch_add(i as u64, Ordering::Relaxed);
+                });
+            }
+            sum.load(Ordering::Relaxed)
+        });
+        let sum = AtomicU64::new(0);
+        for _ in 0..50 {
+            pool.run(8, 4, &|i| {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(sum.load(Ordering::Relaxed), 50 * 28);
+        assert_eq!(t.join().unwrap(), 50 * 28);
     }
 }

@@ -234,11 +234,17 @@ fn prop_wire_fuzz_no_panic() {
     );
 }
 
+/// Serializes tests that read or toggle the process-global reference-
+/// kernel mode: without this, `set_reference_kernels(true)` in one test
+/// thread can flip another thread's GEMM mid-comparison.
+static GEMM_MODE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 /// GEMM algebra: the three variants agree with each other under explicit
 /// transposition, and the reference (slow) kernels agree with the
 /// optimized ones.
 #[test]
 fn prop_gemm_variants_agree() {
+    let _mode = GEMM_MODE_LOCK.lock().unwrap();
     check_explain(
         "gemm-agree",
         40,
@@ -279,6 +285,118 @@ fn prop_gemm_variants_agree() {
                 for (name, c) in [("nt", &c1), ("tn", &c2), ("ref", &c3)] {
                     if (c0[i] - c[i]).abs() > 1e-4 {
                         return Err(format!("{name}[{i}]: {} vs {}", c0[i], c[i]));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Blocked/parallel GEMM == reference oracle across transpose variants,
+/// the odd-shape set {1, 7, 8, 9, 64, 65}, and beta in {0, 1, 0.5}
+/// (ISSUE 1 satellite: property coverage for the kernel rewrite).
+#[test]
+fn prop_blocked_gemm_matches_reference() {
+    let _mode = GEMM_MODE_LOCK.lock().unwrap();
+    const DIMS: [usize; 6] = [1, 7, 8, 9, 64, 65];
+    const BETAS: [f32; 3] = [0.0, 1.0, 0.5];
+    check_explain(
+        "blocked-gemm-vs-reference",
+        120,
+        |rng| {
+            let m = DIMS[rng.below(DIMS.len())];
+            let k = DIMS[rng.below(DIMS.len())];
+            let n = DIMS[rng.below(DIMS.len())];
+            let beta = BETAS[rng.below(BETAS.len())];
+            let variant = rng.below(3); // 0 = nn, 1 = nt, 2 = tn
+            let a: Vec<f32> = (0..m * k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c0: Vec<f32> = (0..m * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            (m, k, n, beta, variant, a, b, c0)
+        },
+        |(m, k, n, beta, variant, a, b, c0)| {
+            let (m, k, n, beta) = (*m, *k, *n, *beta);
+            let mut got = c0.clone();
+            let mut want = c0.clone();
+            match variant {
+                0 => {
+                    kernels::gemm(a, b, &mut got, m, k, n, beta);
+                    kernels::gemm_reference(a, b, &mut want, m, k, n, beta, false, false);
+                }
+                1 => {
+                    // b^T laid out [n, k]
+                    let mut bt = vec![0.0; n * k];
+                    for p in 0..k {
+                        for j in 0..n {
+                            bt[j * k + p] = b[p * n + j];
+                        }
+                    }
+                    kernels::gemm_nt(a, &bt, &mut got, m, k, n, beta);
+                    kernels::gemm_reference(a, &bt, &mut want, m, k, n, beta, false, true);
+                }
+                _ => {
+                    // a^T laid out [k, m]
+                    let mut at = vec![0.0; k * m];
+                    for i in 0..m {
+                        for p in 0..k {
+                            at[p * m + i] = a[i * k + p];
+                        }
+                    }
+                    kernels::gemm_tn(&at, b, &mut got, m, k, n, beta);
+                    kernels::gemm_reference(&at, b, &mut want, m, k, n, beta, true, false);
+                }
+            }
+            for i in 0..m * n {
+                let rel = (got[i] - want[i]).abs() / want[i].abs().max(1.0);
+                if rel > 1e-4 {
+                    return Err(format!(
+                        "variant {variant} beta {beta} [{i}]: {} vs {}",
+                        got[i], want[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Same inputs, any intra-op thread budget: bitwise-equal GEMM output
+/// (the determinism acceptance criterion — chunk partitions are a pure
+/// function of shape, so thread count only moves work between workers).
+#[test]
+fn prop_gemm_bitwise_deterministic_across_threads() {
+    let _mode = GEMM_MODE_LOCK.lock().unwrap();
+    check_explain(
+        "gemm-thread-determinism",
+        12,
+        |rng| {
+            // Big enough that the blocked path actually fans out.
+            let m = 65 + rng.below(100);
+            let k = 64 + rng.below(64);
+            let n = 64 + rng.below(64);
+            let a: Vec<f32> = (0..m * k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            (m, k, n, a, b)
+        },
+        |(m, k, n, a, b)| {
+            let (m, k, n) = (*m, *k, *n);
+            let run = |budget: usize| {
+                mixnet::util::with_intra_budget(budget, || {
+                    let mut c = vec![0.0; m * n];
+                    kernels::gemm(a, b, &mut c, m, k, n, 0.0);
+                    c
+                })
+            };
+            let serial = run(1);
+            for budget in [2usize, 4, 8] {
+                let par = run(budget);
+                for i in 0..m * n {
+                    if serial[i].to_bits() != par[i].to_bits() {
+                        return Err(format!(
+                            "budget {budget} [{i}]: {} != {} (bitwise)",
+                            serial[i], par[i]
+                        ));
                     }
                 }
             }
