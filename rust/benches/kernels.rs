@@ -16,6 +16,7 @@
 //!
 //! ```text
 //! cargo bench --bench kernels                # full sweep + JSON
+//! BENCH_QUICK=1 cargo bench --bench kernels  # CI smoke (fewer samples)
 //! BENCH_OUT=/tmp/k.json cargo bench --bench kernels
 //! ```
 
@@ -29,7 +30,12 @@ fn randv(n: usize, seed: u64) -> Vec<f32> {
 }
 
 fn main() {
-    let b = Bencher { warmup: 2, samples: 7, max_total: std::time::Duration::from_secs(25) };
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let b = if quick {
+        Bencher { warmup: 1, samples: 3, max_total: std::time::Duration::from_secs(8) }
+    } else {
+        Bencher { warmup: 2, samples: 7, max_total: std::time::Duration::from_secs(25) }
+    };
     let mut records: Vec<BenchRecord> = Vec::new();
     let mut rows = Vec::new();
     let pool_threads = intra_pool().threads();

@@ -1,0 +1,188 @@
+//! Closed-loop serving benchmark: dynamic batching (max batch 64) vs
+//! batch-1 serving on the servable MLP, 64 concurrent closed-loop
+//! clients.  Emits machine-readable `BENCH_serve.json`.
+//!
+//! Acceptance target (ISSUE 2): dynamic batching delivers >= 4x the
+//! batch-1 throughput — each dispatched batch amortizes the per-request
+//! engine scheduling and lets the GEMMs run at batched shapes.
+//!
+//! ```text
+//! cargo bench --bench serve                 # full run + JSON
+//! BENCH_QUICK=1 cargo bench --bench serve   # CI smoke (fewer requests)
+//! BENCH_OUT=/tmp/s.json cargo bench --bench serve
+//! ```
+
+use std::collections::HashMap;
+
+use mixnet::engine::{create, default_threads, EngineKind};
+use mixnet::models::servable_mlp;
+use mixnet::module::Module;
+use mixnet::ndarray::NDArray;
+use mixnet::serve::{closed_loop, Servable, ServeConfig, Server};
+use mixnet::util::bench::{print_table, write_bench_json, BenchRecord};
+use mixnet::util::Rng;
+
+const IN_DIM: usize = 784;
+const CLASSES: usize = 10;
+const CLIENTS: usize = 64;
+
+fn build_servable(engine: &mixnet::engine::EngineRef) -> Servable {
+    // Xavier-initialized weights are fine for a throughput benchmark;
+    // the tier-1 tests cover the train -> checkpoint -> serve path.
+    let model = servable_mlp(IN_DIM, CLASSES);
+    let shapes = model.param_shapes(1).unwrap();
+    let mut m = Module::new(servable_mlp(IN_DIM, CLASSES).symbol, engine.clone());
+    m.bind_inference(1, &[IN_DIM], &shapes, 0x5eed).unwrap();
+    let params: HashMap<String, NDArray> = m
+        .param_names()
+        .iter()
+        .map(|n| (n.clone(), m.param(n).unwrap().clone()))
+        .collect();
+    Servable::new(model, params, engine.clone()).unwrap()
+}
+
+struct CaseResult {
+    name: &'static str,
+    rps: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    mean_batch: f64,
+}
+
+fn run_case(
+    name: &'static str,
+    servable: &Servable,
+    cfg: &ServeConfig,
+    per_client: usize,
+    samples: &[Vec<f32>],
+) -> CaseResult {
+    let mut server = Server::start(servable, cfg).expect("server start");
+    let report = closed_loop(&server, CLIENTS, per_client, samples);
+    let stats = server.shutdown();
+    assert_eq!(report.errors, 0, "{name}: closed loop saw errors");
+    eprintln!(
+        "  {name:<16} {:>9.0} req/s   p50 {:>7.3} ms   p95 {:>7.3} ms   \
+         p99 {:>7.3} ms   mean batch {:>5.2}",
+        report.rps,
+        stats.p50_us as f64 / 1e3,
+        stats.p95_us as f64 / 1e3,
+        stats.p99_us as f64 / 1e3,
+        stats.mean_batch
+    );
+    CaseResult {
+        name,
+        rps: report.rps,
+        p50_ms: stats.p50_us as f64 / 1e3,
+        p95_ms: stats.p95_us as f64 / 1e3,
+        p99_ms: stats.p99_us as f64 / 1e3,
+        mean_batch: stats.mean_batch,
+    }
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let per_client = if quick { 40 } else { 250 };
+    let engine = create(EngineKind::Threaded, default_threads());
+    let servable = build_servable(&engine);
+
+    let mut rng = Rng::seed_from_u64(17);
+    let samples: Vec<Vec<f32>> =
+        (0..256).map(|_| (0..IN_DIM).map(|_| rng.uniform(-1.0, 1.0)).collect()).collect();
+
+    eprintln!("serve bench: {CLIENTS} closed-loop clients x {per_client} requests");
+    let batch1 = run_case(
+        "batch-1",
+        &servable,
+        &ServeConfig {
+            max_batch: 1,
+            max_delay_us: 0,
+            queue_cap: 4096,
+            workers: 2,
+            buckets: vec![1],
+        },
+        per_client,
+        &samples,
+    );
+    let dynamic = run_case(
+        "dynamic-64",
+        &servable,
+        &ServeConfig {
+            max_batch: 64,
+            max_delay_us: 2_000,
+            queue_cap: 4096,
+            workers: 2,
+            buckets: vec![], // 1, 4, 16, 64
+        },
+        per_client,
+        &samples,
+    );
+
+    let speedup = if batch1.rps > 0.0 { dynamic.rps / batch1.rps } else { f64::NAN };
+    let mut rows = Vec::new();
+    let mut records = Vec::new();
+    for c in [&batch1, &dynamic] {
+        rows.push(vec![
+            c.name.to_string(),
+            format!("{:.0}", c.rps),
+            format!("{:.3}", c.p50_ms),
+            format!("{:.3}", c.p95_ms),
+            format!("{:.3}", c.p99_ms),
+            format!("{:.2}", c.mean_batch),
+        ]);
+        for (metric, ms) in
+            [("p50", c.p50_ms), ("p95", c.p95_ms), ("p99", c.p99_ms)]
+        {
+            records.push(BenchRecord {
+                op: format!("serve/{}/{metric}", c.name),
+                shape: format!("mlp-{IN_DIM}-c{CLIENTS}"),
+                threads: 2,
+                median_ms: ms,
+                gflops: 0.0,
+            });
+        }
+        // throughput record: median_ms carries the per-request service
+        // time (1000/rps), the meta block carries the raw rps
+        records.push(BenchRecord {
+            op: format!("serve/{}/throughput", c.name),
+            shape: format!("mlp-{IN_DIM}-c{CLIENTS}"),
+            threads: 2,
+            median_ms: if c.rps > 0.0 { 1e3 / c.rps } else { f64::NAN },
+            gflops: 0.0,
+        });
+    }
+    rows.push(vec![
+        "speedup".into(),
+        format!("{speedup:.2}x"),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+    ]);
+    print_table(
+        "serving throughput: dynamic batching vs batch-1 (64 clients)",
+        &["case", "req/s", "p50 ms", "p95 ms", "p99 ms", "mean batch"],
+        &rows,
+    );
+    eprintln!("dynamic/batch-1 speedup: {speedup:.2}x (target >= 4x)");
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let meta = [
+        ("bench", "serve".to_string()),
+        ("model", format!("mlp-{IN_DIM}x128x64x{CLASSES}")),
+        ("clients", CLIENTS.to_string()),
+        ("per_client", per_client.to_string()),
+        ("batch1_rps", format!("{:.1}", batch1.rps)),
+        ("dynamic_rps", format!("{:.1}", dynamic.rps)),
+        ("speedup_vs_batch1", format!("{speedup:.2}")),
+        (
+            "note",
+            "closed-loop clients; dynamic = max_batch 64, buckets 1/4/16/64, \
+             max_delay 2ms; target speedup >= 4x"
+                .to_string(),
+        ),
+    ];
+    if let Err(e) = write_bench_json(&out, &meta, &records) {
+        eprintln!("failed to write {out}: {e}");
+    }
+}

@@ -28,6 +28,9 @@ pub enum Error {
     /// PJRT runtime errors.
     Runtime(String),
 
+    /// Inference-serving errors (queue overflow, shutdown, bad request).
+    Serve(String),
+
     /// Configuration / CLI errors.
     Config(String),
 
@@ -44,6 +47,7 @@ impl std::fmt::Display for Error {
             Error::KvStore(m) => write!(f, "kvstore error: {m}"),
             Error::DataIo(m) => write!(f, "io error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Serve(m) => write!(f, "serve error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "{e}"),
         }
@@ -78,6 +82,10 @@ impl Error {
     pub fn kv(msg: impl Into<String>) -> Self {
         Error::KvStore(msg.into())
     }
+    /// Shorthand constructor for a serving error.
+    pub fn serve(msg: impl Into<String>) -> Self {
+        Error::Serve(msg.into())
+    }
 }
 
 #[cfg(test)]
@@ -90,6 +98,7 @@ mod tests {
         assert_eq!(format!("{}", Error::graph("cyc")), "graph error: cyc");
         assert_eq!(format!("{}", Error::kv("key")), "kvstore error: key");
         assert_eq!(format!("{}", Error::Runtime("x".into())), "runtime error: x");
+        assert_eq!(format!("{}", Error::serve("full")), "serve error: full");
     }
 
     #[test]

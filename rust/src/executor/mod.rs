@@ -32,15 +32,28 @@ use native_ops::OpArgs;
 pub struct BindConfig {
     /// Memory allocation strategy (Figure 7 comparison).
     pub strategy: AllocStrategy,
-    /// Build the backward pass and gradient buffers.
+    /// Build the backward pass (honored only when `grads` is also true:
+    /// backward without gradient buffers has nothing to write).
     pub training: bool,
+    /// Allocate gradient buffers.  `false` is the forward-only fast path
+    /// (inference binds): no backward graph is built and no grad NDArrays
+    /// are materialized, regardless of `grad_names` — the configuration
+    /// every serving executor uses.
+    pub grads: bool,
     /// Fuse elementwise chains (§3.1 operator grouping).
     pub fuse: bool,
 }
 
 impl Default for BindConfig {
     fn default() -> Self {
-        BindConfig { strategy: AllocStrategy::Both, training: true, fuse: true }
+        BindConfig { strategy: AllocStrategy::Both, training: true, grads: true, fuse: true }
+    }
+}
+
+impl BindConfig {
+    /// Forward-only inference bind: no backward pass, no gradient buffers.
+    pub fn inference() -> Self {
+        BindConfig { strategy: AllocStrategy::Both, training: false, grads: false, fuse: true }
     }
 }
 
@@ -104,9 +117,10 @@ impl Executor {
     ) -> Result<Executor> {
         graph.validate()?;
 
-        // 1. autodiff
+        // 1. autodiff (skipped entirely on the forward-only fast path)
+        let training = cfg.training && cfg.grads;
         let mut grad_entries: HashMap<String, Entry> = HashMap::new();
-        if cfg.training {
+        if training {
             let wrt: Vec<_> = grad_names
                 .iter()
                 .map(|n| {
@@ -263,7 +277,7 @@ impl Executor {
             args,
             grads,
             outputs_arr,
-            training: cfg.training,
+            training,
             step: AtomicU64::new(0),
             plan,
             num_forward,
@@ -507,7 +521,7 @@ mod tests {
                 Arc::clone(&engine),
                 mlp_args(8, Arc::clone(&engine), 7),
                 &PARAMS,
-                BindConfig { strategy, training: true, fuse: false },
+                BindConfig { strategy, training: true, fuse: false, ..Default::default() },
             )
             .unwrap();
             exec.forward_backward().unwrap();
@@ -625,6 +639,32 @@ mod tests {
             losses.last().unwrap() < &(losses[0] * 0.7),
             "loss did not decrease: {losses:?}"
         );
+    }
+
+    #[test]
+    fn inference_bind_allocates_no_grad_arrays() {
+        // The forward-only fast path: even with grad names supplied, an
+        // inference bind must not materialize a single gradient NDArray
+        // and must not accept backward().
+        let engine = create(EngineKind::Threaded, 2);
+        let exec = Executor::bind(
+            &mlp_symbol(),
+            Arc::clone(&engine),
+            mlp_args(4, Arc::clone(&engine), 5),
+            &PARAMS,
+            BindConfig::inference(),
+        )
+        .unwrap();
+        assert!(exec.grads().is_empty(), "inference bind allocated grads");
+        assert!(exec.backward().is_err());
+        exec.forward();
+        exec.wait();
+        // and the outputs are still valid probabilities
+        let probs = exec.outputs()[0].to_vec();
+        for row in probs.chunks(4) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
     }
 
     #[test]

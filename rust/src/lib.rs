@@ -11,7 +11,8 @@
 //!   symbolic autodiff and the paper's *inplace* / *co-share* [memory
 //!   planner](graph::memory), a [graph executor](executor), a two-level
 //!   parameter-server [`KVStore`](kvstore), [RecordIO data I/O](io),
-//!   [optimizers](optimizer) and a [training module](module).
+//!   [optimizers](optimizer), a [training module](module) and a
+//!   [dynamic-batching inference server](serve).
 //! * **Layer 2 (build-time Python)** — a JAX transformer / MLP forward +
 //!   backward, AOT-lowered to HLO text in `artifacts/` by
 //!   `python/compile/aot.py`.
@@ -54,6 +55,7 @@ pub mod module;
 pub mod ndarray;
 pub mod optimizer;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod symbol;
 pub mod util;
@@ -72,5 +74,6 @@ pub mod prelude {
     pub use crate::module::Module;
     pub use crate::ndarray::NDArray;
     pub use crate::optimizer::{Optimizer, Sgd};
+    pub use crate::serve::{Servable, ServeConfig, Server};
     pub use crate::symbol::{Act, Symbol};
 }

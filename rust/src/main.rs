@@ -7,6 +7,7 @@
 //!
 //! ```text
 //! mixnet train --model mlp --epochs 4 --batch 32
+//! mixnet serve --model mlp --checkpoint model.bin --clients 16
 //! mixnet server --port 9700 --machines 2
 //! mixnet worker --server 127.0.0.1:9700 --machine 0 --machines 2
 //! mixnet transformer --steps 100 --artifacts artifacts
@@ -26,6 +27,7 @@ use mixnet::kvstore::{dist::DistKVStore, Consistency, LocalKVStore};
 use mixnet::models::by_name;
 use mixnet::module::{Module, UpdateMode};
 use mixnet::optimizer::Sgd;
+use mixnet::serve::{closed_loop, Servable, ServeConfig, Server};
 use mixnet::sim::{graph_flops, simulate, ClusterConfig};
 use mixnet::util::Args;
 use mixnet::{Error, Result};
@@ -39,6 +41,10 @@ COMMANDS:
   train        train a zoo model on synthetic data (local or via --server)
                  --model NAME  --epochs N  --batch N  --lr F  --seed N
                  --classes N   --examples N  --eventual
+  serve        dynamic-batching inference server + closed-loop demo
+                 --model NAME  --checkpoint FILE  --clients N  --requests N
+                 --max-batch N  --max-delay-us N  --workers N  --seed N
+                 (no --checkpoint: quick-trains/initializes weights first)
   server       run the level-2 parameter server
                  --port N  --machines N  --lr F  --momentum F
   worker       join distributed training as one machine
@@ -70,6 +76,7 @@ fn main() {
 const VALUE_KEYS: &[&str] = &[
     "model", "epochs", "batch", "lr", "seed", "classes", "examples", "port", "machines",
     "momentum", "server", "machine", "steps", "artifacts", "mode", "workers", "passes",
+    "checkpoint", "clients", "requests", "max-batch", "max-delay-us",
 ];
 
 fn run(argv: Vec<String>) -> Result<()> {
@@ -77,6 +84,7 @@ fn run(argv: Vec<String>) -> Result<()> {
     let args = Args::parse(argv.into_iter().skip(1), VALUE_KEYS)?;
     match cmd.as_str() {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "server" => cmd_server(&args),
         "worker" => cmd_worker(&args),
         "transformer" => cmd_transformer(&args),
@@ -168,6 +176,96 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let stats = module.fit(&mut iter, &mode, epochs)?;
     report(&stats);
+    Ok(())
+}
+
+/// Dynamic-batching inference serving demo: load (or quick-train)
+/// weights, start the server, drive a closed-loop client fleet, print
+/// latency percentiles and throughput.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model_spec = args.get_str("model", "mlp");
+    let clients: usize = args.get("clients", 16)?;
+    let requests: usize = args.get("requests", 64)?;
+    let seed: u64 = args.get("seed", 7)?;
+    let mut cfg = ServeConfig::from_env();
+    cfg.max_batch = args.get("max-batch", cfg.max_batch)?;
+    cfg.max_delay_us = args.get("max-delay-us", cfg.max_delay_us)?;
+    cfg.workers = args.get("workers", cfg.workers)?;
+
+    let engine = create(EngineKind::Threaded, default_threads());
+    let m = by_name(&model_spec)?;
+    let feat_shape = m.feat_shape.clone();
+    let feat_len: usize = feat_shape.iter().product();
+
+    let servable = match args.options.get("checkpoint") {
+        Some(path) => Servable::from_checkpoint(m, path, engine.clone())?,
+        None => {
+            // No checkpoint: initialize (and, for flat-feature models,
+            // quick-train) weights so the demo serves something real.
+            let init = by_name(&model_spec)?;
+            // conv models only need initialized weights; keep the
+            // throwaway training bind small for them
+            let bind_batch = if feat_shape.len() == 1 { 32 } else { 4 };
+            let shapes = init.param_shapes(bind_batch)?;
+            let mut module = Module::new(init.symbol, engine.clone());
+            module.bind(bind_batch, &feat_shape, &shapes, BindConfig::default(), seed)?;
+            if feat_shape.len() == 1 {
+                let classes = m.num_classes.min(4);
+                let ds = synth::class_clusters(1024, classes, feat_len, 0.3, seed);
+                let mut iter = ArrayDataIter::new(
+                    ds.features,
+                    ds.labels,
+                    &feat_shape,
+                    32,
+                    true,
+                    engine.clone(),
+                );
+                let stats =
+                    module.fit(&mut iter, &UpdateMode::Local(Arc::new(Sgd::new(0.3))), 2)?;
+                println!(
+                    "quick-trained {model_spec}: acc {:.3}",
+                    stats.last().map(|s| s.accuracy).unwrap_or(0.0)
+                );
+            }
+            let params = module
+                .param_names()
+                .iter()
+                .map(|n| (n.clone(), module.param(n).unwrap().clone()))
+                .collect();
+            Servable::new(m, params, engine.clone())?
+        }
+    };
+
+    let mut server = Server::start(&servable, &cfg)?;
+    println!(
+        "serving {model_spec}: max_batch {}, max_delay {}us, {} worker(s), queue {}",
+        cfg.max_batch, cfg.max_delay_us, cfg.workers, cfg.queue_cap
+    );
+    let samples: Vec<Vec<f32>> = (0..256)
+        .map(|i| {
+            let mut rng = mixnet::util::Rng::seed_from_u64(seed ^ ((i as u64) << 8));
+            (0..feat_len).map(|_| rng.uniform(-1.0, 1.0)).collect()
+        })
+        .collect();
+    let report = closed_loop(&server, clients, requests, &samples);
+    let stats = server.shutdown();
+    println!(
+        "{:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "requests", "rps", "p50 ms", "p95 ms", "p99 ms", "batches", "mean batch"
+    );
+    println!(
+        "{:>10} {:>10.0} {:>10.3} {:>10.3} {:>10.3} {:>10} {:>10.2}",
+        stats.requests,
+        report.rps,
+        stats.p50_us as f64 / 1e3,
+        stats.p95_us as f64 / 1e3,
+        stats.p99_us as f64 / 1e3,
+        stats.batches,
+        stats.mean_batch
+    );
+    if report.errors > 0 {
+        println!("({} request(s) errored)", report.errors);
+    }
     Ok(())
 }
 

@@ -15,6 +15,114 @@ fn timers() -> &'static Mutex<HashMap<&'static str, Duration>> {
     TIMERS.get_or_init(|| Mutex::new(HashMap::new()))
 }
 
+fn histograms() -> &'static Mutex<HashMap<&'static str, Histogram>> {
+    static HISTS: OnceLock<Mutex<HashMap<&'static str, Histogram>>> = OnceLock::new();
+    HISTS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Default reservoir capacity for named histograms.
+pub const HISTOGRAM_CAP: usize = 4096;
+
+/// A bounded-reservoir histogram for latency-style measurements.
+///
+/// Keeps at most `cap` samples via reservoir sampling (Vitter's
+/// algorithm R) over a deterministic xorshift stream: memory stays
+/// bounded no matter how many observations arrive, while the retained
+/// sample remains uniformly representative of the whole stream — good
+/// enough for the p50/p95/p99 the serving layer reports.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    cap: usize,
+    samples: Vec<u64>,
+    count: u64,
+    state: u64,
+}
+
+impl Histogram {
+    /// Create a histogram retaining at most `cap` samples (clamped >= 1).
+    pub fn new(cap: usize) -> Self {
+        Histogram {
+            cap: cap.max(1),
+            samples: Vec::new(),
+            count: 0,
+            state: 0x9E37_79B9_7F4A_7C15,
+        }
+    }
+
+    /// Record one observation.
+    pub fn observe(&mut self, value: u64) {
+        self.count += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(value);
+            return;
+        }
+        // xorshift64* draw, then algorithm R: replace a random slot with
+        // probability cap/count.
+        self.state ^= self.state >> 12;
+        self.state ^= self.state << 25;
+        self.state ^= self.state >> 27;
+        let j = self.state.wrapping_mul(0x2545_F491_4F6C_DD1D) % self.count;
+        if (j as usize) < self.cap {
+            self.samples[j as usize] = value;
+        }
+    }
+
+    /// Total observations seen (not just retained).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Whether nothing has been observed.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Nearest-rank percentile (`p` in (0, 100]) over the retained
+    /// reservoir; 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        self.percentiles(&[p])[0]
+    }
+
+    /// Several nearest-rank percentiles from one sorted snapshot — use
+    /// this for p50/p95/p99 triples so callers holding a lock pay for a
+    /// single clone+sort instead of one per percentile.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<u64> {
+        if self.samples.is_empty() {
+            return vec![0; ps.len()];
+        }
+        let mut v = self.samples.clone();
+        v.sort_unstable();
+        ps.iter()
+            .map(|p| {
+                let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+                v[rank.clamp(1, v.len()) - 1]
+            })
+            .collect()
+    }
+}
+
+/// Record a microsecond-scale observation into a named global histogram
+/// (created on first use with [`HISTOGRAM_CAP`]).
+pub fn observe_us(name: &'static str, us: u64) {
+    observe_us_all(name, &[us]);
+}
+
+/// Record a batch of observations under a single registry lock — the
+/// form the serving reply loop uses (one lock per dispatched batch, not
+/// one per request).
+pub fn observe_us_all(name: &'static str, us: &[u64]) {
+    let mut map = histograms().lock().unwrap();
+    let h = map.entry(name).or_insert_with(|| Histogram::new(HISTOGRAM_CAP));
+    for &v in us {
+        h.observe(v);
+    }
+}
+
+/// Percentile of a named global histogram (0 when absent).
+pub fn percentile_us(name: &'static str, p: f64) -> u64 {
+    histograms().lock().unwrap().get(name).map(|h| h.percentile(p)).unwrap_or(0)
+}
+
 /// Increment a named counter.
 pub fn incr(name: &'static str, by: u64) {
     *registry().lock().unwrap().entry(name).or_insert(0) += by;
@@ -38,12 +146,17 @@ pub fn timer_s(name: &'static str) -> f64 {
     timers().lock().unwrap().get(name).map(|d| d.as_secs_f64()).unwrap_or(0.0)
 }
 
-/// Snapshot all counters and timers as a sorted report.
+/// Snapshot all counters, timers and histograms as a sorted report.
 pub fn report() -> String {
     let counters = registry().lock().unwrap();
     let timers = timers().lock().unwrap();
+    let hists = histograms().lock().unwrap();
     let mut lines: Vec<String> = counters.iter().map(|(k, v)| format!("{k}: {v}")).collect();
     lines.extend(timers.iter().map(|(k, v)| format!("{k}: {:.6}s", v.as_secs_f64())));
+    lines.extend(hists.iter().map(|(k, h)| {
+        let p = h.percentiles(&[50.0, 95.0, 99.0]);
+        format!("{k}: n={} p50={}us p95={}us p99={}us", h.count(), p[0], p[1], p[2])
+    }));
     lines.sort();
     lines.join("\n")
 }
@@ -52,6 +165,7 @@ pub fn report() -> String {
 pub fn reset() {
     registry().lock().unwrap().clear();
     timers().lock().unwrap().clear();
+    histograms().lock().unwrap().clear();
 }
 
 #[cfg(test)]
@@ -76,5 +190,47 @@ mod tests {
         assert_eq!(v, 42);
         assert!(timer_s("test.timer") >= 0.004);
         assert!(report().contains("test.timer"));
+    }
+
+    #[test]
+    fn histogram_exact_percentiles_below_cap() {
+        // Fewer observations than the cap: no sampling, percentiles are
+        // exact nearest-rank values.
+        let mut h = Histogram::new(HISTOGRAM_CAP);
+        for v in 1..=1000u64 {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.percentile(50.0), 500);
+        assert_eq!(h.percentile(95.0), 950);
+        assert_eq!(h.percentile(99.0), 990);
+        assert_eq!(h.percentile(100.0), 1000);
+    }
+
+    #[test]
+    fn histogram_reservoir_stays_bounded_and_representative() {
+        let mut h = Histogram::new(256);
+        for v in 0..100_000u64 {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 100_000);
+        assert!(h.samples.len() <= 256);
+        // Uniform stream 0..100k: the sampled median should land well
+        // inside the middle half.
+        let p50 = h.percentile(50.0);
+        assert!((25_000..75_000).contains(&p50), "p50 {p50}");
+    }
+
+    #[test]
+    fn named_histograms_appear_in_report() {
+        reset();
+        for v in [100u64, 200, 300] {
+            observe_us("test.latency_us", v);
+        }
+        assert_eq!(percentile_us("test.latency_us", 50.0), 200);
+        assert_eq!(percentile_us("test.absent", 50.0), 0);
+        let rep = report();
+        assert!(rep.contains("test.latency_us"), "{rep}");
+        assert!(rep.contains("p95="), "{rep}");
     }
 }

@@ -104,6 +104,20 @@ pub fn by_name(spec: &str) -> Result<Model> {
     }
 }
 
+/// Serving-scale MLP (784 -> 128 -> 64 -> `classes`): the workload the
+/// serve bench and `mixnet serve` default to.  Row-pure (no BatchNorm),
+/// so batched serving is bitwise lossless.
+pub fn servable_mlp(in_dim: usize, num_classes: usize) -> Model {
+    mlp(&[128, 64], in_dim, num_classes)
+}
+
+/// Serving-scale AlexNet: full topology on a reduced spatial input so a
+/// CPU can hold several batch buckets (dropout is identity at inference;
+/// no BatchNorm, so it is row-pure and lossless to batch).
+pub fn servable_alexnet(num_classes: usize) -> Model {
+    alexnet(num_classes, 64)
+}
+
 /// Infer all variable shapes of a *forward* graph given only the data
 /// shape.  Parameter variables (weights, biases, gammas, labels, ...) are
 /// solved from the layer attributes as the walk reaches their consumer —
@@ -316,6 +330,23 @@ mod tests {
         let m = by_name("alexnet@64").unwrap();
         assert_eq!(m.feat_shape, vec![3, 64, 64]);
         m.param_shapes(2).unwrap();
+    }
+
+    #[test]
+    fn servable_entry_points_are_row_pure() {
+        // Serving entry points must never contain batch-statistics ops
+        // (BatchNorm), which would break response-level losslessness.
+        for m in [servable_mlp(784, 10), servable_alexnet(10)] {
+            let g = Symbol::to_graph(std::slice::from_ref(&m.symbol));
+            assert!(
+                !g.nodes.iter().any(|n| matches!(n.op, Op::BatchNorm { .. })),
+                "{} contains BatchNorm",
+                m.name
+            );
+            m.param_shapes(4).unwrap();
+        }
+        assert_eq!(servable_mlp(784, 10).feat_shape, vec![784]);
+        assert_eq!(servable_alexnet(10).feat_shape, vec![3, 64, 64]);
     }
 
     #[test]

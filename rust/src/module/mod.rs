@@ -136,6 +136,42 @@ impl Module {
         Ok(())
     }
 
+    /// Bind forward-only for inference ([`BindConfig::inference`]): no
+    /// backward graph and no gradient buffers are allocated — the fast
+    /// path [`Module::predict`] and [`Module::score`] need.
+    pub fn bind_inference(
+        &mut self,
+        batch: usize,
+        feat_shape: &[usize],
+        param_shapes: &HashMap<String, Vec<usize>>,
+        seed: u64,
+    ) -> Result<()> {
+        self.bind(batch, feat_shape, param_shapes, BindConfig::inference(), seed)
+    }
+
+    /// Forward one batch and return a copy of the head output (softmax
+    /// probabilities), `[batch, classes]`.  `data` must match the bound
+    /// data shape.  Works on both training and inference binds; the
+    /// returned array is an engine-scheduled copy, so repeated predicts
+    /// pipeline correctly.  Takes `&mut self` because it loads the
+    /// shared bound data array — concurrent callers would read each
+    /// other's batches (the serving layer uses per-worker executors
+    /// instead).
+    pub fn predict(&mut self, data: &NDArray) -> Result<NDArray> {
+        let exec = self.exec.as_ref().ok_or_else(|| Error::Bind("module not bound".into()))?;
+        let d = self.data_arr.as_ref().ok_or_else(|| Error::Bind("module not bound".into()))?;
+        if data.shape() != d.shape() {
+            return Err(Error::Bind(format!(
+                "predict: data shape {:?} != bound {:?}",
+                data.shape(),
+                d.shape()
+            )));
+        }
+        d.copy_from_(data);
+        exec.forward();
+        Ok(exec.outputs()[0].copy())
+    }
+
     /// Load one batch into the bound data/label arrays.
     fn load_batch(&self, data: &NDArray, label: &NDArray) -> Result<()> {
         let d = self.data_arr.as_ref().ok_or_else(|| Error::Bind("module not bound".into()))?;
@@ -334,6 +370,33 @@ mod tests {
             .fit(&mut iter, &UpdateMode::KvStore { store, device: 0 }, 8)
             .unwrap();
         assert!(stats.last().unwrap().accuracy > 0.9, "{:?}", stats.last());
+    }
+
+    #[test]
+    fn inference_bind_has_no_grads_and_predicts() {
+        let engine = create(EngineKind::Threaded, 2);
+        let mut m = Module::new(mlp(), engine.clone());
+        m.bind_inference(4, &[16], &mlp_shapes(16), 3).unwrap();
+        // forward-only: the executor must not hold a single grad NDArray
+        let exec = m.executor().unwrap();
+        assert!(exec.grads().is_empty(), "inference bind allocated grads");
+        for name in m.param_names() {
+            assert!(exec.grad(name).is_none());
+        }
+        // predict produces valid probabilities and respects shape checks
+        let x = NDArray::randn_on(&[4, 16], 0.0, 1.0, 7, engine.clone());
+        let probs = m.predict(&x).unwrap();
+        assert_eq!(probs.shape(), &[4, 4]);
+        for row in probs.to_vec().chunks(4) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "{s}");
+        }
+        let bad = NDArray::zeros_on(&[2, 16], engine);
+        assert!(m.predict(&bad).is_err());
+        // score works on an inference bind too
+        let ds = class_clusters(64, 4, 16, 0.3, 5);
+        let mut iter = ArrayDataIter::new(ds.features, ds.labels, &[16], 4, false, m.engine_ref());
+        m.score(&mut iter).unwrap();
     }
 
     #[test]

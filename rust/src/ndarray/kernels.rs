@@ -123,9 +123,17 @@ const MR: usize = 8;
 /// Micro-tile columns (one 8-lane vector).
 const NR: usize = 8;
 
-/// Below this FLOP count the packing machinery costs more than it saves;
-/// use the plain loop-nest fast paths.
-const SMALL_GEMM_FLOPS: f64 = 1e5;
+/// Below this *per-row* FLOP count (`2*k*n`) the packing machinery costs
+/// more than it saves; use the plain loop-nest fast paths.
+///
+/// The gate is deliberately a function of `(k, n)` only — never of the
+/// row count `m` — so any single output row takes the same code path (and
+/// therefore the same f32 summation order) for **every** batch size.
+/// Combined with the row-pure blocked path this makes each GEMM output
+/// row bitwise identical whether it is computed in a batch of 1 or 64 —
+/// the losslessness invariant the serving layer (`serve/`) relies on when
+/// it coalesces single-sample requests into batches.
+const SMALL_GEMM_ROW_FLOPS: f64 = 4096.0;
 
 thread_local! {
     /// Per-thread packing buffers (A block, B panel) reused across calls.
@@ -320,8 +328,10 @@ fn gemm_block_rows(
     });
 }
 
-/// Small-shape fast paths: below [`SMALL_GEMM_FLOPS`] the simple loop
-/// nests beat the packing machinery.
+/// Small-shape fast paths: below [`SMALL_GEMM_ROW_FLOPS`] per row the
+/// simple loop nests beat the packing machinery.  Every path computes
+/// row `i` of C as a pure function of row `i` of A (and all of B) with a
+/// fixed per-row summation order, so results are independent of `m`.
 #[allow(clippy::too_many_arguments)]
 fn gemm_small(
     a: &[f32],
@@ -383,8 +393,27 @@ fn gemm_driver(
     n: usize,
     beta: f32,
 ) {
-    let flops = 2.0 * m as f64 * k as f64 * n as f64;
-    if flops < SMALL_GEMM_FLOPS {
+    let row_flops = 2.0 * k as f64 * n as f64;
+    let flops = row_flops * m as f64;
+    if row_flops < SMALL_GEMM_ROW_FLOPS {
+        // Cheap rows, but possibly many of them: keep the loop-nest
+        // paths yet recover intra-op parallelism for tall-skinny shapes
+        // by row-chunking.  The chunk partition is a pure function of
+        // shape and each row's summation order is untouched, so
+        // row-purity (and thread-count determinism) still holds.  The
+        // transposed-A variants index A column-wise and cannot slice by
+        // rows; they stay serial (their callers' shapes put k*n above
+        // the gate in practice).
+        if !ta {
+            let cp = SendMut::new(c);
+            parallel_for_cost(m, MC, flops, |rows| {
+                let mr = rows.end - rows.start;
+                let crows = unsafe { cp.slice(rows.start * n, mr * n) };
+                let arows = &a[rows.start * k..rows.end * k];
+                gemm_small(arows, false, b, tb, crows, mr, k, n, beta);
+            });
+            return;
+        }
         return gemm_small(a, ta, b, tb, c, m, k, n, beta);
     }
     let (ras, cas) = if ta { (1, m) } else { (k, 1) };

@@ -1,0 +1,245 @@
+//! The dynamic batcher: a bounded request queue with a
+//! max-batch-size + max-queue-delay coalescing policy.
+//!
+//! Requests are admitted under backpressure (the queue is bounded; the
+//! blocking push waits for space, the non-blocking push rejects) and
+//! collected into batches by the serving workers: a worker's
+//! [`BatchQueue::pop_batch`] returns as soon as a full batch is waiting
+//! *or* the oldest queued request has aged past the delay budget —
+//! whichever comes first.  The policy is adaptive in the natural sense:
+//! under load batches fill instantly and the delay never triggers; when
+//! traffic is sparse a lone request waits at most `max_delay` before it
+//! is served alone.
+//!
+//! Shutdown is graceful: admitted requests are always dispatched
+//! (`pop_batch` keeps draining after [`BatchQueue::shutdown`]), new
+//! admissions are refused.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+
+/// Batching policy knobs (see `PALLAS_SERVE_MAX_BATCH` /
+/// `PALLAS_SERVE_MAX_DELAY_US`).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Largest batch a single dispatch may carry.
+    pub max_batch: usize,
+    /// Longest a request may wait for co-batching before it is dispatched
+    /// in a partial batch.
+    pub max_delay: Duration,
+}
+
+/// One admitted request: the flattened feature vector plus the channel
+/// its response travels back on.
+pub(crate) struct PendingRequest {
+    /// Flattened single-sample feature tensor.
+    pub features: Vec<f32>,
+    /// Admission time (latency measurement starts here).
+    pub enqueued: Instant,
+    /// Response channel back to the waiting client.
+    pub tx: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+/// Why a non-blocking admission was refused.
+pub(crate) enum Rejected {
+    /// The queue is at capacity (backpressure) — retry later.
+    Full(PendingRequest),
+    /// The server is shutting down — do not retry.
+    Shutdown(PendingRequest),
+}
+
+struct QueueState {
+    deque: VecDeque<PendingRequest>,
+    shutdown: bool,
+}
+
+/// Bounded MPMC request queue with the dynamic-batching pop policy.
+pub(crate) struct BatchQueue {
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+    policy: BatchPolicy,
+}
+
+impl BatchQueue {
+    pub fn new(cap: usize, policy: BatchPolicy) -> Self {
+        BatchQueue {
+            state: Mutex::new(QueueState { deque: VecDeque::new(), shutdown: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+            policy: BatchPolicy {
+                max_batch: policy.max_batch.max(1),
+                max_delay: policy.max_delay,
+            },
+        }
+    }
+
+    /// Admit without blocking; rejects when full or shut down.
+    pub fn try_push(&self, req: PendingRequest) -> std::result::Result<(), Rejected> {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return Err(Rejected::Shutdown(req));
+        }
+        if st.deque.len() >= self.cap {
+            return Err(Rejected::Full(req));
+        }
+        st.deque.push_back(req);
+        drop(st);
+        self.not_empty.notify_all();
+        Ok(())
+    }
+
+    /// Admit, blocking while the queue is at capacity (backpressure).
+    /// Returns the request back when the server shuts down first.
+    pub fn push_wait(&self, req: PendingRequest) -> std::result::Result<(), PendingRequest> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.shutdown {
+                return Err(req);
+            }
+            if st.deque.len() < self.cap {
+                st.deque.push_back(req);
+                drop(st);
+                self.not_empty.notify_all();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Collect the next batch according to the policy.  Blocks until a
+    /// batch is ready; `None` means shut down *and* fully drained.
+    pub fn pop_batch(&self) -> Option<Vec<PendingRequest>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.deque.is_empty() {
+                if st.deque.len() >= self.policy.max_batch || st.shutdown {
+                    return Some(self.drain(&mut st));
+                }
+                let age = st.deque.front().unwrap().enqueued.elapsed();
+                if age >= self.policy.max_delay {
+                    return Some(self.drain(&mut st));
+                }
+                // Partial batch, delay budget not spent: wait for either
+                // more requests (notify) or the budget to expire.
+                let (s, _timeout) =
+                    self.not_empty.wait_timeout(st, self.policy.max_delay - age).unwrap();
+                st = s;
+            } else if st.shutdown {
+                return None;
+            } else {
+                st = self.not_empty.wait(st).unwrap();
+            }
+        }
+    }
+
+    fn drain(&self, st: &mut QueueState) -> Vec<PendingRequest> {
+        let n = st.deque.len().min(self.policy.max_batch);
+        let batch: Vec<PendingRequest> = st.deque.drain(..n).collect();
+        self.not_full.notify_all();
+        batch
+    }
+
+    /// Refuse new admissions; wake every waiter.  Already-admitted
+    /// requests continue to be dispatched by `pop_batch`.
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Currently queued (admitted, not yet dispatched) requests.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().deque.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(tag: f32) -> (PendingRequest, mpsc::Receiver<Result<Vec<f32>>>) {
+        let (tx, rx) = mpsc::channel();
+        (PendingRequest { features: vec![tag], enqueued: Instant::now(), tx }, rx)
+    }
+
+    fn policy(max_batch: usize, delay_ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_delay: Duration::from_millis(delay_ms) }
+    }
+
+    #[test]
+    fn full_batch_dispatches_without_delay() {
+        let q = BatchQueue::new(64, policy(4, 10_000));
+        for i in 0..4 {
+            let (r, _rx) = req(i as f32);
+            q.try_push(r).map_err(|_| ()).unwrap();
+        }
+        let t0 = Instant::now();
+        let batch = q.pop_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        // a full batch must not wait for the (huge) delay budget
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn partial_batch_dispatches_after_delay() {
+        let q = BatchQueue::new(64, policy(8, 30));
+        let (r, _rx) = req(1.0);
+        q.try_push(r).map_err(|_| ()).unwrap();
+        let batch = q.pop_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn overflow_is_rejected_not_dropped() {
+        let q = BatchQueue::new(2, policy(8, 10_000));
+        let (r1, _x1) = req(1.0);
+        let (r2, _x2) = req(2.0);
+        let (r3, _x3) = req(3.0);
+        assert!(q.try_push(r1).is_ok());
+        assert!(q.try_push(r2).is_ok());
+        match q.try_push(r3) {
+            Err(Rejected::Full(r)) => assert_eq!(r.features, vec![3.0]),
+            _ => panic!("expected backpressure rejection"),
+        }
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn shutdown_drains_then_ends() {
+        let q = Arc::new(BatchQueue::new(64, policy(4, 10_000)));
+        for i in 0..6 {
+            let (r, _rx) = req(i as f32);
+            q.try_push(r).map_err(|_| ()).unwrap();
+        }
+        q.shutdown();
+        // new admissions refused
+        let (r, _rx) = req(9.0);
+        assert!(matches!(q.try_push(r), Err(Rejected::Shutdown(_))));
+        // but queued requests drain: 4 + 2, then None forever
+        assert_eq!(q.pop_batch().unwrap().len(), 4);
+        assert_eq!(q.pop_batch().unwrap().len(), 2);
+        assert!(q.pop_batch().is_none());
+        assert!(q.pop_batch().is_none());
+    }
+
+    #[test]
+    fn pop_blocks_until_push_from_other_thread() {
+        let q = Arc::new(BatchQueue::new(8, policy(1, 1_000)));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_batch().map(|b| b.len()));
+        std::thread::sleep(Duration::from_millis(20));
+        let (r, _rx) = req(1.0);
+        q.try_push(r).map_err(|_| ()).unwrap();
+        assert_eq!(h.join().unwrap(), Some(1));
+    }
+}

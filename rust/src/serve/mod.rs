@@ -1,0 +1,517 @@
+//! Dynamic-batching inference serving (the request-level path the
+//! training-centric paper leaves open; cf. TensorFlow-Serving's batching
+//! layer and SystemML's batch-size-aware replanning).
+//!
+//! ```text
+//!  clients ──submit──▶ bounded queue ──pop_batch──▶ worker threads
+//!   (any thread)        (backpressure)   (max-batch | max-delay)
+//!                                            │ scatter into bucket buffer
+//!                                            │ forward on cached executor
+//!                                            │   (bucket ∈ {1,4,16,64,…})
+//!                                            ▼ gather + reply per request
+//! ```
+//!
+//! * **Dynamic batching** — requests are coalesced until either the max
+//!   batch size is reached or the oldest request has waited the max
+//!   queue delay ([`batcher::BatchQueue`]).
+//! * **Executor bucketing** — each worker owns forward-only executors
+//!   pre-bound per batch-size bucket, all sharing one set of parameter
+//!   arrays ([`model::Servable`]); a batch runs on the smallest bucket
+//!   that fits.
+//! * **Concurrency** — workers push their forward passes onto the shared
+//!   dependency engine, so independent batches overlap through the
+//!   engine's inter-op pool and big kernels still fan out intra-op.
+//! * **Losslessness** — every response is bitwise identical to a batch-1
+//!   forward of the same sample (row-pure kernels; see
+//!   `ndarray/kernels.rs::SMALL_GEMM_ROW_FLOPS`).
+//! * **Observability** — per-request latency lands in a bounded-reservoir
+//!   histogram ([`crate::metrics::Histogram`]); [`Server::stats`] reports
+//!   p50/p95/p99, throughput and mean batch occupancy.
+//!
+//! Knobs (env defaults, overridable per [`ServeConfig`]):
+//! `PALLAS_SERVE_MAX_BATCH`, `PALLAS_SERVE_MAX_DELAY_US`,
+//! `PALLAS_SERVE_QUEUE_CAP`, `PALLAS_SERVE_WORKERS`.
+
+pub mod batcher;
+pub mod model;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::metrics;
+
+use batcher::{BatchPolicy, BatchQueue, PendingRequest, Rejected};
+pub use model::{BucketExec, ExecPool, Servable};
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Largest batch one dispatch may carry (`PALLAS_SERVE_MAX_BATCH`).
+    pub max_batch: usize,
+    /// Max time a request waits for co-batching, in microseconds
+    /// (`PALLAS_SERVE_MAX_DELAY_US`).
+    pub max_delay_us: u64,
+    /// Bounded queue capacity — the backpressure limit
+    /// (`PALLAS_SERVE_QUEUE_CAP`).
+    pub queue_cap: usize,
+    /// Worker threads, each with its own bucket-executor pool
+    /// (`PALLAS_SERVE_WORKERS`).
+    pub workers: usize,
+    /// Batch-size buckets; empty means [`default_buckets`] of
+    /// `max_batch`.
+    pub buckets: Vec<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 64,
+            max_delay_us: 2_000,
+            queue_cap: 1024,
+            workers: 2,
+            buckets: vec![],
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Defaults overridden by the `PALLAS_SERVE_*` environment knobs.
+    pub fn from_env() -> Self {
+        fn env<T: std::str::FromStr>(key: &str, default: T) -> T {
+            std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+        }
+        let d = ServeConfig::default();
+        ServeConfig {
+            max_batch: env("PALLAS_SERVE_MAX_BATCH", d.max_batch),
+            max_delay_us: env("PALLAS_SERVE_MAX_DELAY_US", d.max_delay_us),
+            queue_cap: env("PALLAS_SERVE_QUEUE_CAP", d.queue_cap),
+            workers: env("PALLAS_SERVE_WORKERS", d.workers),
+            buckets: vec![],
+        }
+    }
+}
+
+/// Power-of-4 bucket ladder up to `max_batch`: 1, 4, 16, 64, …, capped
+/// and terminated by `max_batch` itself.
+pub fn default_buckets(max_batch: usize) -> Vec<usize> {
+    let max_batch = max_batch.max(1);
+    let mut v = Vec::new();
+    let mut b = 1usize;
+    while b < max_batch {
+        v.push(b);
+        b = b.saturating_mul(4);
+    }
+    v.push(max_batch);
+    v
+}
+
+/// A point-in-time snapshot of serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    /// Requests answered.
+    pub requests: u64,
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Non-blocking submissions rejected by backpressure.
+    pub rejected: u64,
+    /// Mean requests per dispatched batch.
+    pub mean_batch: f64,
+    /// Median queue-to-response latency, microseconds.
+    pub p50_us: u64,
+    /// 95th-percentile latency, microseconds.
+    pub p95_us: u64,
+    /// 99th-percentile latency, microseconds.
+    pub p99_us: u64,
+    /// Server uptime, seconds.
+    pub uptime_s: f64,
+    /// Answered requests per second over the uptime.
+    pub rps: f64,
+}
+
+struct ServerShared {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    rejected: AtomicU64,
+    latency: Mutex<metrics::Histogram>,
+}
+
+/// A response that has been admitted but may not have completed yet.
+pub struct Pending {
+    rx: mpsc::Receiver<Result<Vec<f32>>>,
+}
+
+impl Pending {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(Error::serve("request dropped (server worker gone)")),
+        }
+    }
+}
+
+/// The dynamic-batching inference server.
+pub struct Server {
+    queue: Arc<BatchQueue>,
+    workers: Vec<JoinHandle<()>>,
+    shared: Arc<ServerShared>,
+    feat_len: usize,
+    started: Instant,
+}
+
+impl Server {
+    /// Pre-bind every worker's bucket executors and start the serving
+    /// threads.
+    pub fn start(servable: &Servable, cfg: &ServeConfig) -> Result<Server> {
+        let buckets = if cfg.buckets.is_empty() {
+            default_buckets(cfg.max_batch)
+        } else {
+            cfg.buckets.clone()
+        };
+        let nworkers = cfg.workers.max(1);
+        let pools: Vec<ExecPool> = (0..nworkers)
+            .map(|_| ExecPool::for_buckets(servable, &buckets))
+            .collect::<Result<_>>()?;
+        let queue = Arc::new(BatchQueue::new(
+            cfg.queue_cap,
+            BatchPolicy {
+                max_batch: cfg.max_batch,
+                max_delay: Duration::from_micros(cfg.max_delay_us),
+            },
+        ));
+        let shared = Arc::new(ServerShared {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            latency: Mutex::new(metrics::Histogram::new(metrics::HISTOGRAM_CAP)),
+        });
+        let workers = pools
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut pool)| {
+                let queue = Arc::clone(&queue);
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("mixnet-serve-{i}"))
+                    .spawn(move || {
+                        while let Some(batch) = queue.pop_batch() {
+                            serve_batch(&mut pool, batch, &shared);
+                        }
+                    })
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        Ok(Server {
+            queue,
+            workers,
+            shared,
+            feat_len: servable.feat_len(),
+            started: Instant::now(),
+        })
+    }
+
+    fn make_request(
+        &self,
+        features: Vec<f32>,
+    ) -> Result<(PendingRequest, mpsc::Receiver<Result<Vec<f32>>>)> {
+        if features.len() != self.feat_len {
+            return Err(Error::serve(format!(
+                "request has {} features, model expects {}",
+                features.len(),
+                self.feat_len
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        Ok((PendingRequest { features, enqueued: Instant::now(), tx }, rx))
+    }
+
+    /// Admit one single-sample request, blocking under backpressure.
+    pub fn submit(&self, features: Vec<f32>) -> Result<Pending> {
+        let (req, rx) = self.make_request(features)?;
+        match self.queue.push_wait(req) {
+            Ok(()) => Ok(Pending { rx }),
+            Err(_) => Err(Error::serve("server is shut down")),
+        }
+    }
+
+    /// Admit without blocking; errs immediately when the queue is full.
+    pub fn try_submit(&self, features: Vec<f32>) -> Result<Pending> {
+        let (req, rx) = self.make_request(features)?;
+        match self.queue.try_push(req) {
+            Ok(()) => Ok(Pending { rx }),
+            Err(Rejected::Full(_)) => {
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(Error::serve("queue full (backpressure)"))
+            }
+            Err(Rejected::Shutdown(_)) => Err(Error::serve("server is shut down")),
+        }
+    }
+
+    /// Submit and wait: the closed-loop client call.
+    pub fn infer(&self, features: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(features)?.wait()
+    }
+
+    /// Requests currently queued (admitted, not yet dispatched).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Snapshot the serving statistics.
+    pub fn stats(&self) -> ServeStats {
+        let requests = self.shared.requests.load(Ordering::Relaxed);
+        let batches = self.shared.batches.load(Ordering::Relaxed);
+        let p = self.shared.latency.lock().unwrap().percentiles(&[50.0, 95.0, 99.0]);
+        let uptime_s = self.started.elapsed().as_secs_f64();
+        ServeStats {
+            requests,
+            batches,
+            rejected: self.shared.rejected.load(Ordering::Relaxed),
+            mean_batch: if batches > 0 { requests as f64 / batches as f64 } else { 0.0 },
+            p50_us: p[0],
+            p95_us: p[1],
+            p99_us: p[2],
+            uptime_s,
+            rps: if uptime_s > 0.0 { requests as f64 / uptime_s } else { 0.0 },
+        }
+    }
+
+    /// Graceful shutdown: refuse new requests, serve everything already
+    /// admitted, join the workers, and return the final statistics.
+    pub fn shutdown(&mut self) -> ServeStats {
+        self.queue.shutdown();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.stats()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if !self.workers.is_empty() {
+            self.shutdown();
+        }
+    }
+}
+
+/// Scatter → forward → gather → reply for one coalesced batch.
+///
+/// A panic while serving (a kernel assert, an executor invariant) must
+/// not kill the worker loop: queued requests would then park forever in
+/// [`Pending::wait`].  The batch is failed, the worker survives.
+fn serve_batch(pool: &mut ExecPool, batch: Vec<PendingRequest>, shared: &ServerShared) {
+    let outs = {
+        let rows: Vec<&[f32]> = batch.iter().map(|r| r.features.as_slice()).collect();
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.run(&rows)))
+    };
+    let outs = match outs {
+        Ok(outs) => outs,
+        Err(_) => {
+            eprintln!("mixnet serve: worker panicked serving a batch of {}", batch.len());
+            for req in batch {
+                let _ = req.tx.send(Err(Error::serve("internal error serving batch")));
+            }
+            return;
+        }
+    };
+    shared.batches.fetch_add(1, Ordering::Relaxed);
+    shared.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    let done = Instant::now();
+    // One lock per histogram per batch, not per request: the reply loop
+    // is the serving hot path.
+    let lats: Vec<u64> = batch
+        .iter()
+        .map(|req| done.duration_since(req.enqueued).as_micros() as u64)
+        .collect();
+    {
+        let mut lat = shared.latency.lock().unwrap();
+        for &us in &lats {
+            lat.observe(us);
+        }
+    }
+    metrics::observe_us_all("serve.latency_us", &lats);
+    for (req, out) in batch.into_iter().zip(outs) {
+        // A client that gave up is not an error worth crashing a worker.
+        let _ = req.tx.send(Ok(out));
+    }
+}
+
+/// Closed-loop load report (see [`closed_loop`]).
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Requests attempted.
+    pub requests: u64,
+    /// Requests that errored (shutdown / backpressure).
+    pub errors: u64,
+    /// Wall-clock duration of the whole loop, seconds.
+    pub wall_s: f64,
+    /// Successful requests per second.
+    pub rps: f64,
+}
+
+/// Drive `clients` closed-loop client threads, each issuing
+/// `per_client` blocking [`Server::infer`] calls over `samples`
+/// round-robin.  The shared harness for the serve bench, the CLI demo
+/// and the integration tests.
+pub fn closed_loop(
+    server: &Server,
+    clients: usize,
+    per_client: usize,
+    samples: &[Vec<f32>],
+) -> LoadReport {
+    assert!(!samples.is_empty(), "closed_loop needs at least one sample");
+    let errors = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let errors = &errors;
+            scope.spawn(move || {
+                for i in 0..per_client {
+                    let s = &samples[(c + i * clients) % samples.len()];
+                    if server.infer(s.clone()).is_err() {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let requests = (clients * per_client) as u64;
+    let errors = errors.load(Ordering::Relaxed);
+    let ok = requests - errors;
+    LoadReport {
+        requests,
+        errors,
+        wall_s,
+        rps: if wall_s > 0.0 { ok as f64 / wall_s } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{create, EngineKind};
+    use crate::models::mlp;
+    use crate::module::Module;
+
+    fn servable(engine: &crate::engine::EngineRef) -> Servable {
+        let model = mlp(&[8], 6, 3);
+        let shapes = model.param_shapes(4).unwrap();
+        let mut m = Module::new(mlp(&[8], 6, 3).symbol, engine.clone());
+        m.bind_inference(4, &[6], &shapes, 42).unwrap();
+        let params = m
+            .param_names()
+            .iter()
+            .map(|n| (n.clone(), m.param(n).unwrap().clone()))
+            .collect();
+        Servable::new(model, params, engine.clone()).unwrap()
+    }
+
+    #[test]
+    fn default_bucket_ladder() {
+        assert_eq!(default_buckets(64), vec![1, 4, 16, 64]);
+        assert_eq!(default_buckets(1), vec![1]);
+        assert_eq!(default_buckets(10), vec![1, 4, 10]);
+    }
+
+    #[test]
+    fn serves_single_requests_and_counts() {
+        let engine = create(EngineKind::Threaded, 2);
+        let s = servable(&engine);
+        let cfg = ServeConfig {
+            max_batch: 4,
+            max_delay_us: 500,
+            queue_cap: 16,
+            workers: 1,
+            buckets: vec![],
+        };
+        let mut server = Server::start(&s, &cfg).unwrap();
+        for i in 0..6 {
+            let probs = server.infer(vec![i as f32 * 0.1; 6]).unwrap();
+            assert_eq!(probs.len(), 3);
+            let sum: f32 = probs.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "{sum}");
+        }
+        // wrong feature length is rejected up front
+        assert!(server.infer(vec![0.0; 5]).is_err());
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 6);
+        assert!(stats.batches >= 1 && stats.batches <= 6);
+        assert!(stats.p50_us > 0);
+        // after shutdown new submissions fail
+        assert!(server.submit(vec![0.0; 6]).is_err());
+    }
+
+    #[test]
+    fn shutdown_drains_admitted_requests() {
+        let engine = create(EngineKind::Threaded, 2);
+        let s = servable(&engine);
+        // Huge delay + big batch: requests sit in the queue until
+        // shutdown forces the drain.
+        let cfg = ServeConfig {
+            max_batch: 64,
+            max_delay_us: 10_000_000,
+            queue_cap: 64,
+            workers: 1,
+            buckets: vec![],
+        };
+        let mut server = Server::start(&s, &cfg).unwrap();
+        let pending: Vec<Pending> =
+            (0..5).map(|i| server.submit(vec![i as f32; 6]).unwrap()).collect();
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 5, "shutdown must serve admitted requests");
+        for p in pending {
+            let probs = p.wait().unwrap();
+            assert_eq!(probs.len(), 3);
+        }
+    }
+
+    #[test]
+    fn backpressure_rejects_when_queue_full() {
+        let engine = create(EngineKind::Threaded, 2);
+        let s = servable(&engine);
+        // Queue of 1 and a long delay: the first request parks in the
+        // queue, the second non-blocking submit must bounce.
+        let cfg = ServeConfig {
+            max_batch: 8,
+            max_delay_us: 2_000_000,
+            queue_cap: 1,
+            workers: 1,
+            buckets: vec![],
+        };
+        let mut server = Server::start(&s, &cfg).unwrap();
+        let first = server.submit(vec![0.5; 6]).unwrap();
+        let err = server.try_submit(vec![0.7; 6]);
+        assert!(err.is_err(), "queue of 1 must reject the second request");
+        let stats = server.stats();
+        assert_eq!(stats.rejected, 1);
+        // the parked request is still served (delay expires or shutdown)
+        server.shutdown();
+        assert_eq!(first.wait().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn closed_loop_multi_worker_roundtrip() {
+        let engine = create(EngineKind::Threaded, 4);
+        let s = servable(&engine);
+        let cfg = ServeConfig {
+            max_batch: 8,
+            max_delay_us: 1_000,
+            queue_cap: 128,
+            workers: 2,
+            buckets: vec![],
+        };
+        let mut server = Server::start(&s, &cfg).unwrap();
+        let samples: Vec<Vec<f32>> = (0..16).map(|i| vec![(i as f32).cos(); 6]).collect();
+        let report = closed_loop(&server, 8, 10, &samples);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.requests, 80);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 80);
+        assert!(stats.mean_batch >= 1.0);
+    }
+}

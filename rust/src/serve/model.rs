@@ -1,0 +1,318 @@
+//! Servable models: checkpoint-loaded parameters plus a pool of cached
+//! forward-only executors, one per batch-size bucket.
+//!
+//! A [`Servable`] owns one set of parameter [`NDArray`]s.  Every bucket
+//! executor binds *clones* of those arrays — clones share storage and
+//! engine tag — so a servable with buckets {1, 4, 16, 64} pays the
+//! parameter memory once and only the per-bucket activation memory
+//! scales.  All executors are bound with [`BindConfig::inference`]: no
+//! backward graph, no gradient buffers.
+//!
+//! **Losslessness.**  Responses are guaranteed bitwise identical to a
+//! batch-1 forward of the same sample only for *row-pure* graphs: every
+//! op must compute output row `i` from input row `i` alone (GEMM dispatch
+//! is per-row shape-pure, conv is image-parallel, softmax/activations are
+//! row-wise, dropout is identity at inference).  `BatchNorm` computes
+//! batch statistics and is therefore refused — fold it into the weights
+//! before serving, as production servers require.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::engine::EngineRef;
+use crate::error::{Error, Result};
+use crate::executor::{BindConfig, Executor};
+use crate::graph::Op;
+use crate::models::Model;
+use crate::ndarray::NDArray;
+use crate::symbol::Symbol;
+
+/// A model ready to serve: symbol + parameters + engine.
+pub struct Servable {
+    model: Model,
+    engine: EngineRef,
+    params: HashMap<String, NDArray>,
+    label_name: String,
+    feat_len: usize,
+}
+
+impl Servable {
+    /// Wrap a model and its parameter arrays, validating completeness,
+    /// shapes, and row-purity of the graph.
+    pub fn new(
+        model: Model,
+        params: HashMap<String, NDArray>,
+        engine: EngineRef,
+    ) -> Result<Servable> {
+        let graph = Symbol::to_graph(std::slice::from_ref(&model.symbol));
+        if graph.nodes.iter().any(|n| matches!(n.op, Op::BatchNorm { .. })) {
+            return Err(Error::serve(format!(
+                "model '{}' contains BatchNorm: batch statistics make batched \
+                 responses depend on co-batched requests; fold BN into the \
+                 weights before serving",
+                model.name
+            )));
+        }
+        let shapes = model.param_shapes(1)?;
+        for (name, shape) in &shapes {
+            let arr = params.get(name).ok_or_else(|| {
+                Error::serve(format!("missing parameter '{name}' for model '{}'", model.name))
+            })?;
+            if arr.shape() != shape.as_slice() {
+                return Err(Error::serve(format!(
+                    "parameter '{name}': shape {:?} != expected {:?}",
+                    arr.shape(),
+                    shape
+                )));
+            }
+        }
+        let label_name = model
+            .symbol
+            .list_arguments()
+            .into_iter()
+            .find(|n| n.ends_with("_label"))
+            .ok_or_else(|| Error::serve("model has no softmax label variable"))?;
+        let feat_len = model.feat_shape.iter().product();
+        Ok(Servable { model, engine, params, label_name, feat_len })
+    }
+
+    /// Load a checkpoint (paper's `save_checkpoint` format) and wrap it
+    /// for serving — the train → checkpoint → serve path.
+    pub fn from_checkpoint(
+        model: Model,
+        path: impl AsRef<Path>,
+        engine: EngineRef,
+    ) -> Result<Servable> {
+        let params = crate::io::checkpoint::load(path, engine.clone())?;
+        Servable::new(model, params, engine)
+    }
+
+    /// Flattened per-sample feature length.
+    pub fn feat_len(&self) -> usize {
+        self.feat_len
+    }
+
+    /// Output classes per response.
+    pub fn num_classes(&self) -> usize {
+        self.model.num_classes
+    }
+
+    /// Model name.
+    pub fn name(&self) -> &str {
+        &self.model.name
+    }
+
+    /// The engine all executors are scheduled on.
+    pub fn engine(&self) -> EngineRef {
+        self.engine.clone()
+    }
+
+    /// Bind one forward-only executor for batch size `batch`, sharing
+    /// this servable's parameter arrays.
+    pub fn bind_bucket(&self, batch: usize) -> Result<BucketExec> {
+        let mut args: HashMap<String, NDArray> = HashMap::new();
+        let mut data_shape = vec![batch];
+        data_shape.extend_from_slice(&self.model.feat_shape);
+        let data = NDArray::zeros_on(&data_shape, self.engine.clone());
+        args.insert("data".into(), data.clone());
+        args.insert(
+            self.label_name.clone(),
+            NDArray::zeros_on(&[batch], self.engine.clone()),
+        );
+        for (name, arr) in &self.params {
+            args.insert(name.clone(), arr.clone()); // shares storage + tag
+        }
+        let exec = Executor::bind(
+            &self.model.symbol,
+            self.engine.clone(),
+            args,
+            &[],
+            BindConfig::inference(),
+        )?;
+        Ok(BucketExec {
+            batch,
+            data,
+            exec,
+            feat_len: self.feat_len,
+            out_len: self.model.num_classes,
+        })
+    }
+}
+
+/// One pre-bound forward-only executor for a fixed batch-size bucket.
+pub struct BucketExec {
+    batch: usize,
+    data: NDArray,
+    exec: Executor,
+    feat_len: usize,
+    out_len: usize,
+}
+
+impl BucketExec {
+    /// Bucket capacity.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Scatter `rows` into the batch buffer (zero padding), run the
+    /// forward pass, and gather one output row per request.
+    ///
+    /// The staged buffer is moved into one engine op that writes the
+    /// data array directly — no extra copy, and no synchronization
+    /// before the forward: the engine orders scatter → forward → gather
+    /// through the data/output tags, so the only wait is the final
+    /// output read.
+    pub fn run(&mut self, rows: &[&[f32]]) -> Vec<Vec<f32>> {
+        assert!(rows.len() <= self.batch, "{} rows > bucket {}", rows.len(), self.batch);
+        // Zero-filled staging: unused rows never leak a previous batch.
+        let mut staged = vec![0.0f32; self.batch * self.feat_len];
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), self.feat_len, "request row {i} has wrong feature length");
+            staged[i * self.feat_len..(i + 1) * self.feat_len].copy_from_slice(r);
+        }
+        let storage = self.data.storage();
+        self.data.engine().push(
+            "serve.scatter",
+            vec![],
+            vec![self.data.var()],
+            Box::new(move || {
+                // SAFETY: the engine granted the exclusive write on the
+                // data array's tag (same discipline as NDArray ops).
+                unsafe { storage.slice_mut() }.copy_from_slice(&staged);
+            }),
+        );
+        self.exec.forward();
+        let out = self.exec.outputs()[0].to_vec(); // waits for the head
+        rows.iter()
+            .enumerate()
+            .map(|(i, _)| out[i * self.out_len..(i + 1) * self.out_len].to_vec())
+            .collect()
+    }
+}
+
+/// A worker's set of bucket executors, ascending by batch size.
+pub struct ExecPool {
+    buckets: Vec<BucketExec>,
+}
+
+impl ExecPool {
+    /// Bind one executor per bucket size (sorted, deduplicated).
+    pub fn for_buckets(servable: &Servable, buckets: &[usize]) -> Result<ExecPool> {
+        let mut sizes: Vec<usize> = buckets.iter().copied().filter(|&b| b > 0).collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        if sizes.is_empty() {
+            return Err(Error::serve("no batch buckets configured"));
+        }
+        let buckets = sizes
+            .into_iter()
+            .map(|b| servable.bind_bucket(b))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ExecPool { buckets })
+    }
+
+    /// Largest bucket (the effective max batch).
+    pub fn max_batch(&self) -> usize {
+        self.buckets.last().map(|b| b.batch).unwrap_or(0)
+    }
+
+    /// Serve one coalesced batch on the smallest bucket that fits it.
+    /// Oversized batches are split into max-bucket chunks.
+    pub fn run(&mut self, rows: &[&[f32]]) -> Vec<Vec<f32>> {
+        let max = self.max_batch();
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(max.max(1)) {
+            let idx = self
+                .buckets
+                .iter()
+                .position(|b| b.batch >= chunk.len())
+                .unwrap_or(self.buckets.len() - 1);
+            out.extend(self.buckets[idx].run(chunk));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{create, EngineKind};
+    use crate::models::{mlp, simple_cnn};
+    use crate::module::Module;
+
+    fn trained_params(engine: &EngineRef) -> (Model, HashMap<String, NDArray>) {
+        let model = mlp(&[8], 6, 3);
+        let shapes = model.param_shapes(4).unwrap();
+        let mut m = Module::new(mlp(&[8], 6, 3).symbol, engine.clone());
+        m.bind_inference(4, &[6], &shapes, 42).unwrap();
+        let params = m
+            .param_names()
+            .iter()
+            .map(|n| (n.clone(), m.param(n).unwrap().clone()))
+            .collect();
+        (model, params)
+    }
+
+    #[test]
+    fn servable_validates_params_and_buckets_share_them() {
+        let engine = create(EngineKind::Threaded, 2);
+        let (model, params) = trained_params(&engine);
+        let s = Servable::new(model, params.clone(), engine.clone()).unwrap();
+        assert_eq!(s.feat_len(), 6);
+        assert_eq!(s.num_classes(), 3);
+        let b1 = s.bind_bucket(1).unwrap();
+        let b4 = s.bind_bucket(4).unwrap();
+        // parameter storage is shared, not copied
+        assert!(std::sync::Arc::ptr_eq(
+            &b1.exec.arg("fc1_weight").unwrap().storage(),
+            &b4.exec.arg("fc1_weight").unwrap().storage()
+        ));
+        // and no grad buffers exist anywhere
+        assert!(b1.exec.grads().is_empty());
+        assert!(b4.exec.grads().is_empty());
+
+        // missing parameter rejected
+        let mut broken = params;
+        broken.remove("fc1_bias");
+        assert!(Servable::new(mlp(&[8], 6, 3), broken, engine).is_err());
+    }
+
+    #[test]
+    fn batchnorm_models_are_refused() {
+        let engine = create(EngineKind::Threaded, 2);
+        match Servable::new(simple_cnn(4, 16), HashMap::new(), engine) {
+            Err(Error::Serve(msg)) => assert!(msg.contains("BatchNorm"), "{msg}"),
+            Err(e) => panic!("expected Serve error, got {e}"),
+            Ok(_) => panic!("BatchNorm model must be refused"),
+        }
+    }
+
+    #[test]
+    fn bucket_run_matches_batch1_bitwise() {
+        let engine = create(EngineKind::Threaded, 4);
+        let (model, params) = trained_params(&engine);
+        let s = Servable::new(model, params, engine).unwrap();
+        let mut pool = ExecPool::for_buckets(&s, &[1, 4, 8]).unwrap();
+        let mut single = s.bind_bucket(1).unwrap();
+        let samples: Vec<Vec<f32>> = (0..7)
+            .map(|i| (0..6).map(|j| ((i * 6 + j) as f32 * 0.37).sin()).collect())
+            .collect();
+        let rows: Vec<&[f32]> = samples.iter().map(|s| s.as_slice()).collect();
+        let batched = pool.run(&rows); // smallest fitting bucket: 8
+        for (i, sample) in samples.iter().enumerate() {
+            let one = single.run(&[sample.as_slice()]);
+            assert_eq!(one[0], batched[i], "row {i} differs from batch-1");
+        }
+    }
+
+    #[test]
+    fn oversized_batches_split_across_bucket_chunks() {
+        let engine = create(EngineKind::Threaded, 2);
+        let (model, params) = trained_params(&engine);
+        let s = Servable::new(model, params, engine).unwrap();
+        let mut pool = ExecPool::for_buckets(&s, &[2]).unwrap();
+        let samples: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32; 6]).collect();
+        let rows: Vec<&[f32]> = samples.iter().map(|s| s.as_slice()).collect();
+        assert_eq!(pool.run(&rows).len(), 5);
+    }
+}

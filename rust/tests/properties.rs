@@ -97,7 +97,7 @@ fn prop_alloc_strategies_numerically_equal() {
                         engine,
                         args,
                         &[],
-                        BindConfig { strategy, training: false, fuse },
+                        BindConfig { strategy, training: false, fuse, ..Default::default() },
                     )
                     .map_err(|e| e.to_string())?;
                     exec.forward();
@@ -294,12 +294,14 @@ fn prop_gemm_variants_agree() {
 }
 
 /// Blocked/parallel GEMM == reference oracle across transpose variants,
-/// the odd-shape set {1, 7, 8, 9, 64, 65}, and beta in {0, 1, 0.5}
-/// (ISSUE 1 satellite: property coverage for the kernel rewrite).
+/// the odd-shape set {1, 7, 8, 9, 64, 65, 96, 130}, and beta in
+/// {0, 1, 0.5} (ISSUE 1 satellite: property coverage for the kernel
+/// rewrite).  The larger dims keep the packed/blocked path exercised now
+/// that dispatch is per-row (`2*k*n`): 65x65 and up crosses the gate.
 #[test]
 fn prop_blocked_gemm_matches_reference() {
     let _mode = GEMM_MODE_LOCK.lock().unwrap();
-    const DIMS: [usize; 6] = [1, 7, 8, 9, 64, 65];
+    const DIMS: [usize; 8] = [1, 7, 8, 9, 64, 65, 96, 130];
     const BETAS: [f32; 3] = [0.0, 1.0, 0.5];
     check_explain(
         "blocked-gemm-vs-reference",
@@ -396,6 +398,57 @@ fn prop_gemm_bitwise_deterministic_across_threads() {
                         return Err(format!(
                             "budget {budget} [{i}]: {} != {} (bitwise)",
                             serial[i], par[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Any output row of a GEMM is bitwise identical to the same row computed
+/// as a batch-1 GEMM — the serving layer's losslessness invariant: the
+/// small/blocked dispatch gate is a function of (k, n) only, and every
+/// path accumulates a row in an m-independent order.  Covers shapes on
+/// both sides of the dispatch gate and both FC-relevant variants.
+#[test]
+fn prop_gemm_rows_independent_of_batch() {
+    let _mode = GEMM_MODE_LOCK.lock().unwrap();
+    check_explain(
+        "gemm-batch-row-purity",
+        25,
+        |rng| {
+            let m = 2 + rng.below(80);
+            let k = 1 + rng.below(200);
+            let n = 1 + rng.below(200);
+            let nt = rng.below(2) == 0; // gemm vs gemm_nt (the FC shape)
+            let a: Vec<f32> = (0..m * k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            (m, k, n, nt, a, b)
+        },
+        |(m, k, n, nt, a, b)| {
+            let (m, k, n, nt) = (*m, *k, *n, *nt);
+            let mut batched = vec![0.0f32; m * n];
+            if nt {
+                kernels::gemm_nt(a, b, &mut batched, m, k, n, 0.0);
+            } else {
+                kernels::gemm(a, b, &mut batched, m, k, n, 0.0);
+            }
+            for i in 0..m {
+                let row = &a[i * k..(i + 1) * k];
+                let mut single = vec![0.0f32; n];
+                if nt {
+                    kernels::gemm_nt(row, b, &mut single, 1, k, n, 0.0);
+                } else {
+                    kernels::gemm(row, b, &mut single, 1, k, n, 0.0);
+                }
+                for j in 0..n {
+                    if batched[i * n + j].to_bits() != single[j].to_bits() {
+                        return Err(format!(
+                            "nt={nt} m={m} k={k} n={n} row {i} col {j}: \
+                             {} != {} (bitwise)",
+                            batched[i * n + j], single[j]
                         ));
                     }
                 }

@@ -1,0 +1,197 @@
+//! End-to-end serving tests (ISSUE 2): train -> checkpoint -> serve
+//! roundtrip with the losslessness acceptance criterion — every batched
+//! response bitwise-matches a batch-1 forward of the same sample — plus
+//! backpressure and graceful-shutdown behavior under concurrency.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use mixnet::engine::{create, EngineKind, EngineRef};
+use mixnet::io::synth::class_clusters;
+use mixnet::io::ArrayDataIter;
+use mixnet::models::{mlp, servable_mlp, Model};
+use mixnet::module::{Module, UpdateMode};
+use mixnet::ndarray::NDArray;
+use mixnet::optimizer::Sgd;
+use mixnet::serve::{closed_loop, Servable, ServeConfig, Server};
+use mixnet::util::Rng;
+
+const IN_DIM: usize = 16;
+const CLASSES: usize = 4;
+
+fn model() -> Model {
+    mlp(&[32], IN_DIM, CLASSES)
+}
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("mixnet_serve_{}_{tag}.bin", std::process::id()))
+}
+
+/// Train an MLP a few steps and checkpoint it.
+fn train_and_checkpoint(engine: &EngineRef, path: &std::path::Path) {
+    let shapes = model().param_shapes(32).unwrap();
+    let mut m = Module::new(model().symbol, engine.clone());
+    m.bind(32, &[IN_DIM], &shapes, Default::default(), 11).unwrap();
+    let ds = class_clusters(256, CLASSES, IN_DIM, 0.3, 21);
+    let mut iter = ArrayDataIter::new(ds.features, ds.labels, &[IN_DIM], 32, true, engine.clone());
+    m.fit(&mut iter, &UpdateMode::Local(Arc::new(Sgd::new(0.4))), 4).unwrap();
+    m.save_params(path).unwrap();
+}
+
+fn samples(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n).map(|_| (0..IN_DIM).map(|_| rng.uniform(-1.5, 1.5)).collect()).collect()
+}
+
+#[test]
+fn checkpoint_roundtrip_serves_bitwise_identical_to_batch1() {
+    let engine = create(EngineKind::Threaded, 4);
+    let path = tmp("roundtrip");
+    train_and_checkpoint(&engine, &path);
+
+    // Batch-1 reference: a fresh inference-bound module loading the same
+    // checkpoint, predicting one sample at a time.
+    let shapes = model().param_shapes(1).unwrap();
+    let mut reference = Module::new(model().symbol, engine.clone());
+    reference.bind_inference(1, &[IN_DIM], &shapes, 999).unwrap();
+    reference.load_params(&path).unwrap();
+
+    // Server from the same checkpoint, batching across buckets.
+    let servable = Servable::from_checkpoint(model(), &path, engine.clone()).unwrap();
+    let cfg = ServeConfig {
+        max_batch: 8,
+        max_delay_us: 800,
+        queue_cap: 256,
+        workers: 2,
+        buckets: vec![1, 4, 8],
+    };
+    let mut server = Server::start(&servable, &cfg).unwrap();
+
+    let inputs = samples(48, 0xfeed);
+    let expected: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|s| {
+            let x = NDArray::from_vec_on(&[1, IN_DIM], s.clone(), engine.clone());
+            reference.predict(&x).unwrap().to_vec()
+        })
+        .collect();
+
+    // Concurrent submission from several client threads: the batcher is
+    // free to coalesce any interleaving into any bucket sizes.
+    let got: Vec<Vec<f32>> = std::thread::scope(|scope| {
+        let server = &server;
+        let inputs = &inputs;
+        let handles: Vec<_> = (0..6)
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    for i in (c..inputs.len()).step_by(6) {
+                        out.push((i, server.infer(inputs[i].clone()).unwrap()));
+                    }
+                    out
+                })
+            })
+            .collect();
+        let mut all: Vec<(usize, Vec<f32>)> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_by_key(|(i, _)| *i);
+        all.into_iter().map(|(_, v)| v).collect()
+    });
+
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 48);
+    assert!(stats.batches <= 48, "batching never ran: {stats:?}");
+    for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
+        assert_eq!(g.len(), CLASSES);
+        for (a, b) in g.iter().zip(e) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "sample {i}: batched response {a} != batch-1 forward {b} (bitwise)"
+            );
+        }
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn checkpoint_quality_survives_serving() {
+    // The served probabilities must reflect the trained weights: argmax
+    // accuracy over a fresh draw from the same clusters should beat
+    // chance by a wide margin.
+    let engine = create(EngineKind::Threaded, 4);
+    let path = tmp("quality");
+    train_and_checkpoint(&engine, &path);
+    let servable = Servable::from_checkpoint(model(), &path, engine.clone()).unwrap();
+    let mut server = Server::start(&servable, &ServeConfig::default()).unwrap();
+
+    let ds = class_clusters(128, CLASSES, IN_DIM, 0.3, 21);
+    let mut correct = 0usize;
+    for i in 0..128 {
+        let x = ds.features[i * IN_DIM..(i + 1) * IN_DIM].to_vec();
+        let probs = server.infer(x).unwrap();
+        let pred = probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        if pred == ds.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / 128.0;
+    assert!(acc > 0.6, "served accuracy {acc} barely beats chance (0.25)");
+    server.shutdown();
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn sustained_closed_loop_is_lossless_and_batched() {
+    // A 16-client closed loop over a small sample set: every response
+    // must still bitwise-match the batch-1 forward, while the server
+    // actually coalesces (mean batch > 1 under this concurrency).
+    let engine = create(EngineKind::Threaded, 4);
+    let m = servable_mlp(IN_DIM, CLASSES);
+    let shapes = m.param_shapes(1).unwrap();
+    let mut init = Module::new(servable_mlp(IN_DIM, CLASSES).symbol, engine.clone());
+    init.bind_inference(1, &[IN_DIM], &shapes, 5).unwrap();
+    let params: HashMap<String, NDArray> = init
+        .param_names()
+        .iter()
+        .map(|n| (n.clone(), init.param(n).unwrap().clone()))
+        .collect();
+    let servable = Servable::new(m, params, engine.clone()).unwrap();
+
+    let cfg = ServeConfig {
+        max_batch: 16,
+        max_delay_us: 1_500,
+        queue_cap: 256,
+        workers: 2,
+        buckets: vec![],
+    };
+    let mut server = Server::start(&servable, &cfg).unwrap();
+    let inputs = samples(32, 0xabcd);
+    let report = closed_loop(&server, 16, 12, &inputs);
+    assert_eq!(report.errors, 0);
+
+    // spot-check losslessness after the fact
+    let expected: Vec<Vec<f32>> = inputs
+        .iter()
+        .take(8)
+        .map(|s| {
+            let x = NDArray::from_vec_on(&[1, IN_DIM], s.clone(), engine.clone());
+            init.predict(&x).unwrap().to_vec()
+        })
+        .collect();
+    for (s, e) in inputs.iter().take(8).zip(&expected) {
+        let got = server.infer(s.clone()).unwrap();
+        assert_eq!(got, *e, "closed-loop response diverged from batch-1");
+    }
+    let stats = server.shutdown();
+    assert!(
+        stats.mean_batch > 1.0,
+        "16 concurrent clients never coalesced: {stats:?}"
+    );
+    assert!(stats.p99_us >= stats.p50_us);
+}
