@@ -1,21 +1,58 @@
 //! Engine microbenchmarks: scheduling overhead per op, parallelism
-//! discovery, and the cost of dependency tracking — the substrate
-//! numbers behind E1/E4/E5.
+//! discovery, the cost of dependency tracking, and (ISSUE 3) the static
+//! run-plan replay path vs the dynamic push path plus the storage pool
+//! vs the allocator — the substrate numbers behind E1/E4/E5.
 //!
 //! ```text
 //! cargo bench --bench engine_micro
+//! BENCH_QUICK=1 cargo bench --bench engine_micro  # CI smoke (fewer samples)
+//! BENCH_OUT=/tmp/e.json cargo bench --bench engine_micro
 //! ```
+//!
+//! Emits `BENCH_engine.json` (or `$BENCH_OUT`): per-case records plus
+//! top-level meta with `replay_ns_per_op`, `push_ns_per_op`,
+//! `replay_speedup_vs_push` (acceptance target: >= 5x) and
+//! `steady_state_pool_misses_per_step` (target: 0).
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use mixnet::engine::{create, EngineKind};
-use mixnet::ndarray::NDArray;
-use mixnet::util::bench::{print_table, Bencher};
+use mixnet::engine::{create, EngineKind, EngineRef, PlanOpSpec, RunPlan, VarHandle};
+use mixnet::executor::{BindConfig, Executor};
+use mixnet::models::mlp;
+use mixnet::ndarray::{pool, NDArray};
+use mixnet::util::bench::{print_table, write_bench_json, BenchRecord, Bencher};
+use mixnet::util::Rng;
+
+/// Per-op (reads, writes) var sets, in program order.
+type Deps = Vec<(Vec<VarHandle>, Vec<VarHandle>)>;
+
+/// A layered dependency DAG shaped like a training step: `layers` levels
+/// of `width` ops, every op reading one var of the previous level and
+/// writing its own.
+fn layered_deps(engine: &EngineRef, layers: usize, width: usize) -> Deps {
+    let mut deps = Vec::with_capacity(layers * width);
+    let mut prev: Vec<VarHandle> = (0..width).map(|_| engine.new_var()).collect();
+    for _ in 0..layers {
+        let cur: Vec<VarHandle> = (0..width).map(|_| engine.new_var()).collect();
+        for (i, &w) in cur.iter().enumerate() {
+            deps.push((vec![prev[i]], vec![w]));
+        }
+        prev = cur;
+    }
+    deps
+}
 
 fn main() {
-    let b = Bencher::micro();
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let b = if quick {
+        Bencher { warmup: 2, samples: 10, max_total: std::time::Duration::from_secs(5) }
+    } else {
+        Bencher::micro()
+    };
     let mut rows = Vec::new();
+    let mut records: Vec<BenchRecord> = Vec::new();
 
     // ---- raw push+execute overhead (empty ops) ----------------------
     for kind in [EngineKind::Threaded, EngineKind::Naive] {
@@ -38,21 +75,155 @@ fn main() {
         ]);
     }
 
-    // ---- independent ops: parallelism discovery ---------------------
+    // ---- replay vs push: identical layered DAG of noops -------------
+    // The scheduling-overhead comparison the ISSUE 3 acceptance names:
+    // same ops, same dependency structure; one path pays the dynamic
+    // scheduler per op, the other replays the precompiled plan.
+    let (layers, width) = if quick { (32, 4) } else { (64, 4) };
+    let nops = layers * width;
     let engine = create(EngineKind::Threaded, 2);
-    let vars: Vec<_> = (0..64).map(|_| engine.new_var()).collect();
-    let stats = b.run("independent", || {
-        for v in &vars {
-            engine.push("spin", vec![], vec![*v], Box::new(|| {
-                std::hint::black_box((0..2000).sum::<u64>());
-            }));
-        }
-        engine.wait_all();
+    let deps = layered_deps(&engine, layers, width);
+    let counter = Arc::new(AtomicUsize::new(0));
+
+    let push_stats = {
+        let deps = deps.clone();
+        let c0 = Arc::clone(&counter);
+        b.run("engine.push DAG", move || {
+            for (r, w) in &deps {
+                let c = Arc::clone(&c0);
+                engine.push("noop", r.clone(), w.clone(), Box::new(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+            engine.wait_all();
+        })
+    };
+    let push_ns = push_stats.median_s() * 1e9 / nops as f64;
+    let dag_shape = format!("{layers}x{width}");
+    rows.push(vec![
+        format!("dynamic push, {nops}-op layered DAG"),
+        format!("{push_ns:.0} ns/op"),
+    ]);
+    records.push(BenchRecord::from_stats("engine.push_dag", &dag_shape, 2, &push_stats, 0.0));
+
+    // Fresh engine/vars for the replay side so var queues start clean.
+    let engine = create(EngineKind::Threaded, 2);
+    let deps = layered_deps(&engine, layers, width);
+    let specs: Vec<PlanOpSpec> = deps
+        .iter()
+        .map(|(r, w)| {
+            let c = Arc::clone(&counter);
+            PlanOpSpec {
+                name: "noop",
+                reads: r.clone(),
+                writes: w.clone(),
+                cost: f64::NAN,
+                body: Arc::new(move |_step| {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }),
+            }
+        })
+        .collect();
+    let plan = Arc::new(RunPlan::compile(specs));
+    let replay_stats = {
+        let engine = engine.clone();
+        let plan = Arc::clone(&plan);
+        b.run("plan.replay DAG", move || {
+            engine.run_plan(&plan, 1);
+            engine.wait_all();
+        })
+    };
+    let replay_ns = replay_stats.median_s() * 1e9 / nops as f64;
+    let speedup = push_ns / replay_ns;
+    rows.push(vec![
+        format!("run-plan replay, same {nops}-op DAG"),
+        format!("{replay_ns:.0} ns/op ({speedup:.1}x vs push)"),
+    ]);
+    records.push(BenchRecord::from_stats("engine.plan_replay", &dag_shape, 2, &replay_stats, 0.0));
+
+    // ---- storage pool vs allocator ----------------------------------
+    let elems = if quick { 1 << 16 } else { 1 << 18 }; // 256 KiB / 1 MiB
+    let buf_shape = format!("{elems}");
+    let pool_stats = b.run("pool acquire+release", || {
+        let mut buf = pool::global().acquire_uninit(elems);
+        buf[0] = std::hint::black_box(1.0);
+        pool::global().release(buf);
     });
     rows.push(vec![
-        "64 independent ops (threaded, 2 workers)".into(),
-        format!("{:.1} us total", stats.median_s() * 1e6),
+        format!("pool acquire+release {elems} f32 (steady hit)"),
+        format!("{:.0} ns", pool_stats.median_s() * 1e9),
     ]);
+    records.push(BenchRecord::from_stats("pool.acquire_release", &buf_shape, 0, &pool_stats, 0.0));
+    let raw_stats = b.run("malloc+free", || {
+        let mut buf = vec![0.0f32; elems].into_boxed_slice();
+        buf[0] = std::hint::black_box(1.0);
+        std::hint::black_box(&buf);
+    });
+    rows.push(vec![
+        format!("alloc_zeroed+free {elems} f32 (allocator)"),
+        format!("{:.0} ns", raw_stats.median_s() * 1e9),
+    ]);
+    records.push(BenchRecord::from_stats("pool.malloc_baseline", &buf_shape, 0, &raw_stats, 0.0));
+
+    // ---- allocs per training step (pool miss counter) ---------------
+    // Bind a real MLP executor, warm it up, then count pool misses over
+    // measured steps: the acceptance criterion is zero.
+    let misses_per_step = {
+        let engine = create(EngineKind::Threaded, 2);
+        let model = mlp(&[64, 32], 32, 8);
+        let batch = 16usize;
+        let shapes = model.var_shapes(batch).expect("shapes");
+        let mut rng = Rng::seed_from_u64(7);
+        let args: HashMap<String, NDArray> = shapes
+            .iter()
+            .map(|(k, shape)| {
+                let n: usize = shape.iter().product();
+                let data: Vec<f32> = if k.ends_with("_label") {
+                    (0..n).map(|j| (j % 8) as f32).collect()
+                } else {
+                    (0..n).map(|_| rng.normal_with(0.0, 0.1)).collect()
+                };
+                (k.clone(), NDArray::from_vec_on(shape, data, engine.clone()))
+            })
+            .collect();
+        let params: Vec<String> = shapes
+            .keys()
+            .filter(|k| k.as_str() != "data" && !k.ends_with("_label"))
+            .cloned()
+            .collect();
+        let grad_names: Vec<&str> = params.iter().map(|s| s.as_str()).collect();
+        let exec =
+            Executor::bind(&model.symbol, engine.clone(), args, &grad_names, BindConfig::default())
+                .expect("bind");
+        let step = || {
+            exec.forward_backward().expect("fwd/bwd");
+            for p in &params {
+                exec.arg(p).unwrap().sub_scaled_(exec.grad(p).unwrap(), 0.05);
+            }
+        };
+        for _ in 0..3 {
+            step();
+        }
+        engine.wait_all();
+        let before = pool::global().stats();
+        let t = b.run("train step (replay+pool)", || {
+            step();
+            engine.wait_all();
+        });
+        let after = pool::global().stats();
+        records.push(BenchRecord::from_stats("train.step_mlp", "16x32", 2, &t, 0.0));
+        let total_steps = (t.samples.len() + b.warmup) as f64;
+        let miss_delta = after.misses - before.misses;
+        rows.push(vec![
+            "MLP train step, replay + pool (allocs/step)".into(),
+            format!(
+                "{:.3} ms, {miss_delta} pool misses over {:.0} steps",
+                t.median_ms(),
+                total_steps
+            ),
+        ]);
+        miss_delta as f64 / total_steps
+    };
 
     // ---- NDArray op through the full lazy path ----------------------
     let x = NDArray::randn(&[256, 256], 0.0, 1.0, 3);
@@ -93,7 +264,7 @@ fn main() {
     // hosts while never oversubscribing.
     let bh = Bencher { warmup: 1, samples: 5, max_total: std::time::Duration::from_secs(20) };
     let engine = create(EngineKind::Threaded, 4);
-    let sz = 384;
+    let sz = if quick { 192 } else { 384 };
     let xs: Vec<NDArray> = (0..8)
         .map(|i| NDArray::randn_on(&[sz, sz], 0.0, 1.0, 20 + i as u64, engine.clone()))
         .collect();
@@ -123,4 +294,18 @@ fn main() {
     ]);
 
     print_table("engine microbenchmarks", &["case", "cost"], &rows);
+
+    let meta: Vec<(&str, String)> = vec![
+        ("bench", "engine".to_string()),
+        ("quick", quick.to_string()),
+        ("dag", format!("{layers}x{width} noop layered DAG")),
+        ("push_ns_per_op", format!("{push_ns:.1}")),
+        ("replay_ns_per_op", format!("{replay_ns:.1}")),
+        ("replay_speedup_vs_push", format!("{speedup:.2}")),
+        ("steady_state_pool_misses_per_step", format!("{misses_per_step:.3}")),
+    ];
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_engine.json".to_string());
+    if let Err(e) = write_bench_json(&out, &meta, &records) {
+        eprintln!("failed to write {out}: {e}");
+    }
 }

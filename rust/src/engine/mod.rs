@@ -25,12 +25,35 @@
 //!   for the Figure 6 execution-model comparison.
 
 pub mod naive;
+pub mod plan;
 pub mod threaded;
 
 use std::sync::Arc;
 
 pub use naive::NaiveEngine;
+pub use plan::{PlanBody, PlanOpSpec, RunPlan};
 pub use threaded::ThreadedEngine;
+
+/// FLOP estimate above which an op counts as "heavy": it gets a share of
+/// the intra-op pool instead of running on one thread (~0.5 ms of serial
+/// compute at a 2 GFLOP/s single-core floor).  Shared by the dynamic
+/// dispatch path and the run-plan replay path so both budget intra-op
+/// parallelism identically.
+pub(crate) const HEAVY_FLOPS: f64 = 1e6;
+
+/// Report a caught op panic (shared by the dynamic dispatch path and the
+/// run-plan replay path).  A panicking op must still complete — its
+/// dependents and every `wait_all` would block forever otherwise — so
+/// both paths catch, report through here, and carry on, matching MXNet
+/// where a failed kernel logs and the engine keeps serving other ops.
+pub(crate) fn report_op_panic(path: &str, op: &str, payload: &(dyn std::any::Any + Send)) {
+    let msg = payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic".into());
+    eprintln!("mixnet {path}: op '{op}' panicked: {msg}");
+}
 
 /// Identifier for a registered resource unit ("tag").
 pub type VarId = u64;
@@ -39,7 +62,12 @@ pub type VarId = u64;
 /// that an array accidentally shared between two engines can never alias
 /// another array's tag (cross-engine scheduling is still unordered — ops
 /// must stay on one engine — but collisions would turn that logic error
-/// into silent corruption).
+/// into silent corruption).  The threaded engine's slab enforces this
+/// explicitly: a handle whose slot/generation/id does not match a live
+/// local variable (a *foreign* or *stale* handle) contributes no ordering
+/// at all.  The one sanctioned cross-engine pattern is a single
+/// synchronized copy out of a quiescent array (`KVStore::init`); anything
+/// concurrent must keep all operands on one engine.
 pub(crate) fn alloc_var_id() -> VarId {
     use std::sync::atomic::{AtomicU64, Ordering};
     static NEXT: AtomicU64 = AtomicU64::new(1);
@@ -48,13 +76,27 @@ pub(crate) fn alloc_var_id() -> VarId {
 
 /// Handle to an engine variable.  Cheap to copy; owned state lives inside
 /// the engine that created it.
+///
+/// Besides the globally-unique id, a handle carries the owning engine's
+/// slab coordinates (`slot`, `gen`) so the threaded engine resolves
+/// per-var scheduling state by direct Vec index — no hashing on the
+/// grant/notify path.  The generation (plus an id cross-check in the
+/// slab) detects handles that outlived their variable: they simply
+/// impose no ordering.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct VarHandle(pub(crate) VarId);
+pub struct VarHandle {
+    pub(crate) id: VarId,
+    /// Slab slot in the owning engine (`u32::MAX` for engines that keep
+    /// no per-var state, e.g. the naive engine).
+    pub(crate) slot: u32,
+    /// Slot generation at creation time.
+    pub(crate) gen: u32,
+}
 
 impl VarHandle {
     /// Raw id (stable for the lifetime of the variable).
     pub fn id(&self) -> VarId {
-        self.0
+        self.id
     }
 }
 
@@ -95,6 +137,20 @@ pub trait Engine: Send + Sync {
         self.push(name, read, write, func);
     }
 
+    /// Execute a compiled [`RunPlan`] (ISSUE 3).  Ordering contract: the
+    /// plan behaves exactly like pushing each of its ops through
+    /// [`Engine::push_costed`] in program order — later pushes touching
+    /// the plan's vars are ordered after it, earlier ones before it —
+    /// which is precisely what this default implementation does.
+    ///
+    /// Engines with a native replay path (the threaded engine) instead
+    /// synchronize the plan's *boundary* var sets once and replay the
+    /// precompiled DAG with lock-free countdowns, skipping the per-op
+    /// scheduling machinery entirely.
+    fn run_plan(&self, plan: &Arc<RunPlan>, step: u64) {
+        push_plan_ops(self, plan, step);
+    }
+
     /// Block until all ops pushed so far that touch `var` have completed.
     fn wait_for_var(&self, var: VarHandle);
 
@@ -107,6 +163,39 @@ pub trait Engine: Send + Sync {
     /// Number of worker threads (1 for the naive engine).
     fn num_workers(&self) -> usize {
         1
+    }
+}
+
+/// Normalize a dependency list pair: dedupe each side and drop reads
+/// that are also writes (a write subsumes a read).  The single source of
+/// truth for both scheduling paths — `ThreadedEngine::push_costed` and
+/// [`RunPlan::compile`] must classify identically or replay-vs-push
+/// bitwise equivalence breaks.
+pub(crate) fn normalize_deps(
+    read: &[VarHandle],
+    write: &[VarHandle],
+) -> (Vec<VarHandle>, Vec<VarHandle>) {
+    let mut writes = write.to_vec();
+    writes.sort_unstable();
+    writes.dedup();
+    let mut reads: Vec<VarHandle> = read
+        .iter()
+        .copied()
+        .filter(|v| writes.binary_search(v).is_err())
+        .collect();
+    reads.sort_unstable();
+    reads.dedup();
+    (reads, writes)
+}
+
+/// Push every op of `plan` through the dynamic per-op path: the shared
+/// fallback used by [`Engine::run_plan`]'s default implementation and by
+/// the threaded engine for write-free plans (which lack the boundary
+/// write grant that serializes native replays).
+pub fn push_plan_ops<E: Engine + ?Sized>(engine: &E, plan: &RunPlan, step: u64) {
+    for i in 0..plan.len() {
+        let (name, reads, writes, cost, func) = plan.push_parts(i, step);
+        engine.push_costed(name, reads, writes, cost, func);
     }
 }
 

@@ -36,7 +36,7 @@ impl Engine for NaiveEngine {
     }
 
     fn new_var(&self) -> VarHandle {
-        VarHandle(super::alloc_var_id())
+        VarHandle { id: super::alloc_var_id(), slot: u32::MAX, gen: 0 }
     }
 
     fn push(&self, _name: &'static str, _read: Vec<VarHandle>, _write: Vec<VarHandle>, func: OpFn) {

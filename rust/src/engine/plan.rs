@@ -1,0 +1,632 @@
+//! Static run-plans (ISSUE 3): the dependency schedule of a bound graph,
+//! compiled **once** and replayed every step.
+//!
+//! The dynamic engine re-derives the schedule on every push: each op
+//! takes the global scheduler lock, appends a request to every operand's
+//! queue, and completion walks those queues again.  For a bound executor
+//! that is pure waste — the op sequence and its read/write sets never
+//! change after bind, so the whole dependency structure can be
+//! precomputed (the paper's §3.1/§4.2 static-graph argument; TensorFlow
+//! makes the same one).  A [`RunPlan`] is that precomputation: a flat,
+//! immutable DAG — successor lists plus an initial in-degree per op,
+//! derived from the same read/write sets the dynamic path uses
+//! (RAW/WAR/WAW edges; reads never order against reads).
+//!
+//! **Replay** walks the DAG with per-op atomic countdown counters and a
+//! lock-free ready stack (tagged Treiber stack: `(version, index)`
+//! packed in one `AtomicU64`, so the classic ABA hazard of re-pushed
+//! indices across replays is excluded).  No mutex, no hash map, no
+//! per-op queue traffic — per-op scheduling cost is a handful of atomic
+//! ops.
+//!
+//! **Interop.** A plan does not bypass engine ordering: the engine that
+//! replays it brackets the whole replay behind the plan's *boundary*
+//! read/write var sets (see `ThreadedEngine::run_plan`), so imperative
+//! NDArray ops (`w -= eta * g`), KVStore push/pull and other executors
+//! on the same engine still serialize correctly against every buffer the
+//! plan touches.  Engines without a native replay path fall back to
+//! pushing each plan op through the ordinary dynamic path
+//! ([`RunPlan::push_parts`]) — same ops, same read/write sets, same
+//! results.
+//!
+//! A plan replays **one instance at a time**; the engine enforces this
+//! for free, because two replays of the same plan write the same
+//! boundary vars and are therefore serialized like any two conflicting
+//! ops.  The mutable replay state (countdowns, ready stack, remaining
+//! counter) is reset at the start of each replay under that exclusion.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::{OpFn, VarHandle};
+
+/// A replayable op body: invoked once per replay with the step number.
+pub type PlanBody = Arc<dyn Fn(u64) + Send + Sync>;
+
+/// `(name, reads, writes, cost, one-shot closure)` — what a dynamic
+/// [`Engine::push_costed`](super::Engine::push_costed) takes for one
+/// plan op (see [`RunPlan::push_parts`]).
+pub type PushParts = (&'static str, Vec<VarHandle>, Vec<VarHandle>, f64, OpFn);
+
+/// One op as submitted to [`RunPlan::compile`]: the same (name, reads,
+/// writes, cost) tuple a dynamic `push_costed` would take, with a
+/// reusable body instead of a one-shot closure.
+pub struct PlanOpSpec {
+    /// Display name (same convention as `Engine::push`).
+    pub name: &'static str,
+    /// Vars read by the op.
+    pub reads: Vec<VarHandle>,
+    /// Vars mutated by the op (subsumes reads of the same var).
+    pub writes: Vec<VarHandle>,
+    /// Estimated FLOPs (`f64::NAN` = unknown) for intra-op budgeting.
+    pub cost: f64,
+    /// The op body.
+    pub body: PlanBody,
+}
+
+struct PlanOp {
+    name: &'static str,
+    body: PlanBody,
+    cost: f64,
+    heavy: bool,
+    /// Ops unblocked by this op's completion.
+    succ: Vec<u32>,
+    /// Number of distinct predecessors.
+    indegree: u32,
+    /// Original read/write sets, kept for the dynamic fallback path.
+    reads: Vec<VarHandle>,
+    writes: Vec<VarHandle>,
+}
+
+/// Ready-stack nil sentinel.
+const NIL: u32 = u32::MAX;
+
+#[inline]
+fn pack(ver: u32, idx: u32) -> u64 {
+    ((ver as u64) << 32) | idx as u64
+}
+
+#[inline]
+fn unpack(v: u64) -> (u32, u32) {
+    ((v >> 32) as u32, v as u32)
+}
+
+/// A compiled, immutable dependency DAG with reusable replay state.
+pub struct RunPlan {
+    ops: Vec<PlanOp>,
+    /// Ops with no predecessors (replay seeds).
+    roots: Vec<u32>,
+    /// Dedup'd union of all vars read (minus written) / written by any
+    /// op: the surface the engine orders against other work.
+    boundary_reads: Vec<VarHandle>,
+    boundary_writes: Vec<VarHandle>,
+    /// Sum of known per-op costs (informational; heavy-op budgeting is
+    /// per plan op against the engine-global counter, never the barrier).
+    total_cost: f64,
+    /// Max ops on one topological level — an upper-bound estimate of
+    /// useful replay workers.
+    width: usize,
+    // ---- mutable replay state (one replay at a time) -----------------
+    countdown: Vec<AtomicU32>,
+    next: Vec<AtomicU32>,
+    /// Tagged Treiber-stack head: (version, top index).
+    head: AtomicU64,
+    /// Ops not yet completed in the current replay.
+    remaining: AtomicUsize,
+    /// Step number handed to op bodies (set by `begin_replay`).
+    step: AtomicU64,
+}
+
+impl RunPlan {
+    /// Compile a sequence of op specs (in program order) into a plan.
+    ///
+    /// Edges are derived exactly as the dynamic engine would order the
+    /// same pushes: an op depends on the latest earlier writer of
+    /// anything it touches (RAW/WAW) and on every earlier reader of
+    /// anything it writes (WAR).  Vars listed in both sets are treated
+    /// as write-only, like `Engine::push`.
+    pub fn compile(specs: Vec<PlanOpSpec>) -> RunPlan {
+        use std::collections::HashMap;
+        let n = specs.len();
+        let mut last_writer: HashMap<u64, usize> = HashMap::new();
+        let mut readers: HashMap<u64, Vec<usize>> = HashMap::new();
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut all_reads: Vec<VarHandle> = Vec::new();
+        let mut all_writes: Vec<VarHandle> = Vec::new();
+        let mut norm: Vec<(Vec<VarHandle>, Vec<VarHandle>)> = Vec::with_capacity(n);
+
+        for (i, s) in specs.iter().enumerate() {
+            // same normalization as the dynamic push path, by construction
+            let (reads, writes) = super::normalize_deps(&s.reads, &s.writes);
+
+            for v in &reads {
+                if let Some(&w) = last_writer.get(&v.id()) {
+                    preds[i].push(w);
+                }
+                readers.entry(v.id()).or_default().push(i);
+            }
+            for v in &writes {
+                if let Some(rs) = readers.get_mut(&v.id()) {
+                    preds[i].append(rs);
+                }
+                if let Some(&w) = last_writer.get(&v.id()) {
+                    preds[i].push(w);
+                }
+                last_writer.insert(v.id(), i);
+            }
+            all_reads.extend(reads.iter().copied());
+            all_writes.extend(writes.iter().copied());
+            norm.push((reads, writes));
+        }
+
+        all_writes.sort_unstable();
+        all_writes.dedup();
+        all_reads.sort_unstable();
+        all_reads.dedup();
+        all_reads.retain(|v| all_writes.binary_search(v).is_err());
+
+        let mut succ: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut indegree: Vec<u32> = vec![0; n];
+        for (i, p) in preds.iter_mut().enumerate() {
+            p.sort_unstable();
+            p.dedup();
+            indegree[i] = p.len() as u32;
+            for &q in p.iter() {
+                succ[q].push(i as u32);
+            }
+        }
+
+        // Topological levels for the width estimate (specs arrive in
+        // program order, which is topological by construction).
+        let mut level: Vec<usize> = vec![0; n];
+        let mut level_count: HashMap<usize, usize> = HashMap::new();
+        for i in 0..n {
+            let l = preds[i].iter().map(|&p| level[p] + 1).max().unwrap_or(0);
+            level[i] = l;
+            *level_count.entry(l).or_insert(0) += 1;
+        }
+        let width = level_count.values().copied().max().unwrap_or(0);
+
+        let roots: Vec<u32> = (0..n).filter(|&i| indegree[i] == 0).map(|i| i as u32).collect();
+        let total_cost: f64 =
+            specs.iter().map(|s| if s.cost.is_finite() { s.cost } else { 0.0 }).sum();
+
+        let ops: Vec<PlanOp> = specs
+            .into_iter()
+            .zip(norm)
+            .zip(indegree.iter().zip(succ))
+            .map(|((s, (reads, writes)), (&indeg, sc))| PlanOp {
+                name: s.name,
+                body: s.body,
+                cost: s.cost,
+                heavy: s.cost >= super::HEAVY_FLOPS,
+                succ: sc,
+                indegree: indeg,
+                reads,
+                writes,
+            })
+            .collect();
+
+        RunPlan {
+            countdown: ops.iter().map(|o| AtomicU32::new(o.indegree)).collect(),
+            next: (0..n).map(|_| AtomicU32::new(NIL)).collect(),
+            head: AtomicU64::new(pack(0, NIL)),
+            remaining: AtomicUsize::new(0),
+            step: AtomicU64::new(0),
+            ops,
+            roots,
+            boundary_reads: all_reads,
+            boundary_writes: all_writes,
+            total_cost,
+            width,
+        }
+    }
+
+    /// Number of ops in the plan.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Whether the plan contains no ops.
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Vars the plan reads from outside (dedup'd, minus written vars).
+    pub fn boundary_reads(&self) -> &[VarHandle] {
+        &self.boundary_reads
+    }
+
+    /// Vars any plan op writes.
+    pub fn boundary_writes(&self) -> &[VarHandle] {
+        &self.boundary_writes
+    }
+
+    /// Sum of known per-op FLOP estimates.
+    pub fn total_cost(&self) -> f64 {
+        self.total_cost
+    }
+
+    /// Upper bound on ops that can run concurrently (max topological
+    /// level size) — sizes the replay worker fan-out.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// The pieces needed to push op `i` through the dynamic path: the
+    /// fallback for engines without native replay.  The returned closure
+    /// invokes the reusable body with `step`.
+    pub fn push_parts(&self, i: usize, step: u64) -> PushParts {
+        let op = &self.ops[i];
+        let body = Arc::clone(&op.body);
+        (op.name, op.reads.clone(), op.writes.clone(), op.cost, Box::new(move || body(step)))
+    }
+
+    // ------------------------------------------------------------------
+    // lock-free replay (driven by the owning engine)
+    // ------------------------------------------------------------------
+
+    fn push_ready(&self, i: u32) {
+        loop {
+            let cur = self.head.load(Ordering::Acquire);
+            let (ver, top) = unpack(cur);
+            self.next[i as usize].store(top, Ordering::Relaxed);
+            if self
+                .head
+                .compare_exchange_weak(
+                    cur,
+                    pack(ver.wrapping_add(1), i),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
+                .is_ok()
+            {
+                return;
+            }
+        }
+    }
+
+    fn pop_ready(&self) -> Option<u32> {
+        loop {
+            let cur = self.head.load(Ordering::Acquire);
+            let (ver, top) = unpack(cur);
+            if top == NIL {
+                return None;
+            }
+            let nxt = self.next[top as usize].load(Ordering::Relaxed);
+            if self
+                .head
+                .compare_exchange_weak(
+                    cur,
+                    pack(ver.wrapping_add(1), nxt),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
+                .is_ok()
+            {
+                return Some(top);
+            }
+        }
+    }
+
+    /// Arm the replay state and seed the ready stack with the roots.
+    ///
+    /// Caller contract (upheld by the engines): at most one replay of a
+    /// given plan is in flight at a time, and `begin_replay` happens
+    /// strictly before the corresponding `drain` calls observe work.
+    pub(crate) fn begin_replay(&self, step: u64) {
+        self.step.store(step, Ordering::Relaxed);
+        for (c, op) in self.countdown.iter().zip(&self.ops) {
+            c.store(op.indegree, Ordering::Relaxed);
+        }
+        // Publish the resets before any root becomes poppable: the
+        // release CAS in push_ready pairs with the acquire load in
+        // pop_ready.
+        self.remaining.store(self.ops.len(), Ordering::Release);
+        for &r in &self.roots {
+            self.push_ready(r);
+        }
+    }
+
+    /// Claim and execute ready ops until the replay is complete.  Any
+    /// number of threads may drain concurrently; each returns once every
+    /// op of the current replay has finished.  A panicking body is
+    /// caught and reported so dependents (and the engine) never wedge.
+    ///
+    /// `heavy_inflight` is the **engine-global** heavy-op counter (the
+    /// same one the dynamic dispatch path uses), so heavy plan ops split
+    /// the intra-op pool against everything else in flight — concurrent
+    /// replays of other plans and imperative heavy ops included.
+    pub(crate) fn drain(&self, heavy_inflight: &AtomicUsize) {
+        // Unbounded: re-enter on the (astronomically rare) idle-counter
+        // saturation rather than ever returning with work in flight.
+        while !self.drain_bounded(heavy_inflight, u32::MAX - 1) {}
+    }
+
+    /// [`RunPlan::drain`] with an idle bound, for *helper* threads that
+    /// borrow an engine worker: after `idle_limit` consecutive empty
+    /// polls the helper returns `false` (replay still in flight) so its
+    /// worker can serve unrelated engine ops instead of camping through
+    /// a long serial stretch of the plan.  Progress never depends on
+    /// helpers: the thread that completes an op pushes and then pops its
+    /// successors itself, and the barrier thread drains unbounded.
+    pub(crate) fn drain_bounded(&self, heavy_inflight: &AtomicUsize, idle_limit: u32) -> bool {
+        let mut idle = 0u32;
+        loop {
+            match self.pop_ready() {
+                Some(i) => {
+                    idle = 0;
+                    self.run_op(i as usize, heavy_inflight);
+                }
+                None => {
+                    if self.remaining.load(Ordering::Acquire) == 0 {
+                        return true;
+                    }
+                    if idle >= idle_limit {
+                        return false;
+                    }
+                    // Ops are in flight on other threads; their
+                    // successors will appear on the stack.  Escalating
+                    // backoff: spin, then yield, then doze — a long
+                    // serial kernel must not have an idle drainer
+                    // burning the cores its intra-op workers need.
+                    idle = idle.saturating_add(1);
+                    if idle < 64 {
+                        std::hint::spin_loop();
+                    } else if idle < 256 {
+                        std::thread::yield_now();
+                    } else {
+                        std::thread::sleep(std::time::Duration::from_micros(50));
+                    }
+                }
+            }
+        }
+    }
+
+    fn run_op(&self, i: usize, heavy_inflight: &AtomicUsize) {
+        let op = &self.ops[i];
+        // Intra-op thread budget, mirroring the dynamic engine's
+        // dispatch policy: known-heavy ops split the intra pool among
+        // the heavy ops in flight; light/unknown ops run serial.
+        let budget = if op.heavy {
+            let total = crate::util::intra_pool().threads();
+            let sharing = heavy_inflight.fetch_add(1, Ordering::SeqCst) + 1;
+            (total / sharing).max(1)
+        } else {
+            1
+        };
+        let prev = crate::util::set_intra_budget(budget);
+        let step = self.step.load(Ordering::Relaxed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (op.body)(step)));
+        crate::util::set_intra_budget(prev);
+        if op.heavy {
+            heavy_inflight.fetch_sub(1, Ordering::SeqCst);
+        }
+        if let Err(e) = result {
+            super::report_op_panic("plan", op.name, &e);
+        }
+        // AcqRel chains each predecessor's writes through the counter to
+        // whichever thread takes it to zero and publishes the successor.
+        for &s in &op.succ {
+            if self.countdown[s as usize].fetch_sub(1, Ordering::AcqRel) == 1 {
+                self.push_ready(s);
+            }
+        }
+        self.remaining.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl std::fmt::Debug for RunPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "RunPlan({} ops, {} roots, width {}, {} boundary vars)",
+            self.ops.len(),
+            self.roots.len(),
+            self.width,
+            self.boundary_reads.len() + self.boundary_writes.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{create, EngineKind, EngineRef};
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Mutex;
+
+    fn spec(
+        name: &'static str,
+        reads: Vec<VarHandle>,
+        writes: Vec<VarHandle>,
+        body: impl Fn(u64) + Send + Sync + 'static,
+    ) -> PlanOpSpec {
+        PlanOpSpec { name, reads, writes, cost: f64::NAN, body: Arc::new(body) }
+    }
+
+    fn diamond_plan(eng: &EngineRef, log: &Arc<Mutex<Vec<&'static str>>>) -> Arc<RunPlan> {
+        // a -> (b, c) -> d, ordered through vars exactly like the engine
+        // diamond test.
+        let (va, vb, vc, vd) = (eng.new_var(), eng.new_var(), eng.new_var(), eng.new_var());
+        let mk = |name: &'static str, log: &Arc<Mutex<Vec<&'static str>>>| {
+            let log = Arc::clone(log);
+            move |_step: u64| log.lock().unwrap().push(name)
+        };
+        Arc::new(RunPlan::compile(vec![
+            spec("a", vec![], vec![va], mk("a", log)),
+            spec("b", vec![va], vec![vb], mk("b", log)),
+            spec("c", vec![va], vec![vc], mk("c", log)),
+            spec("d", vec![vb, vc], vec![vd], mk("d", log)),
+        ]))
+    }
+
+    #[test]
+    fn compile_derives_diamond_structure() {
+        let eng = create(EngineKind::Threaded, 2);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let plan = diamond_plan(&eng, &log);
+        assert_eq!(plan.len(), 4);
+        assert_eq!(plan.roots, vec![0]);
+        assert_eq!(plan.ops[0].succ, vec![1, 2]);
+        assert_eq!(plan.ops[1].succ, vec![3]);
+        assert_eq!(plan.ops[2].succ, vec![3]);
+        assert_eq!(plan.ops[3].indegree, 2);
+        assert_eq!(plan.width(), 2);
+        // all four vars are written => boundary_writes = 4, no pure reads
+        assert_eq!(plan.boundary_writes().len(), 4);
+        assert!(plan.boundary_reads().is_empty());
+    }
+
+    #[test]
+    fn war_and_waw_edges_are_derived() {
+        let eng = create(EngineKind::Threaded, 2);
+        let v = eng.new_var();
+        let w = eng.new_var();
+        let plan = RunPlan::compile(vec![
+            spec("w0", vec![], vec![v], |_| {}),
+            spec("r0", vec![v], vec![w], |_| {}),
+            spec("w1", vec![], vec![v], |_| {}), // WAR on r0, WAW on w0
+        ]);
+        assert_eq!(plan.ops[2].indegree, 2, "w1 must wait for w0 (WAW) and r0 (WAR)");
+        assert_eq!(plan.ops[0].succ, vec![1, 2]);
+        assert_eq!(plan.ops[1].succ, vec![2]);
+    }
+
+    #[test]
+    fn read_write_overlap_treated_as_write() {
+        let eng = create(EngineKind::Threaded, 2);
+        let v = eng.new_var();
+        let plan = RunPlan::compile(vec![spec("rw", vec![v], vec![v], |_| {})]);
+        assert!(plan.boundary_reads().is_empty());
+        assert_eq!(plan.boundary_writes(), &[v]);
+        assert_eq!(plan.ops[0].indegree, 0, "no self-edge");
+    }
+
+    #[test]
+    fn threaded_replay_respects_dependency_order() {
+        let eng = create(EngineKind::Threaded, 4);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let plan = diamond_plan(&eng, &log);
+        for step in 1..=5u64 {
+            eng.run_plan(&plan, step);
+        }
+        eng.wait_all();
+        let order = log.lock().unwrap().clone();
+        assert_eq!(order.len(), 20);
+        for chunk in order.chunks(4) {
+            let pos = |n: &str| chunk.iter().position(|&x| x == n).unwrap();
+            assert_eq!(pos("a"), 0);
+            assert_eq!(pos("d"), 3);
+        }
+    }
+
+    #[test]
+    fn naive_fallback_runs_in_program_order() {
+        let eng = create(EngineKind::Naive, 1);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let plan = diamond_plan(&eng, &log);
+        eng.run_plan(&plan, 1);
+        assert_eq!(*log.lock().unwrap(), vec!["a", "b", "c", "d"]);
+    }
+
+    #[test]
+    fn replay_passes_the_step_number() {
+        let eng = create(EngineKind::Threaded, 2);
+        let v = eng.new_var();
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let s2 = Arc::clone(&seen);
+        let plan = Arc::new(RunPlan::compile(vec![spec(
+            "s",
+            vec![],
+            vec![v],
+            move |step| s2.lock().unwrap().push(step),
+        )]));
+        for step in [3u64, 9, 27] {
+            eng.run_plan(&plan, step);
+        }
+        eng.wait_all();
+        assert_eq!(*seen.lock().unwrap(), vec![3, 9, 27]);
+    }
+
+    #[test]
+    fn replay_interleaves_correctly_with_imperative_pushes() {
+        // plan writes x; an imperative op pushed after the replay reads x
+        // and must observe the plan's write (boundary-var ordering).
+        let eng = create(EngineKind::Threaded, 4);
+        let x = eng.new_var();
+        let cell = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&cell);
+        let plan = Arc::new(RunPlan::compile(vec![spec(
+            "slow_write",
+            vec![],
+            vec![x],
+            move |_| {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                c2.store(42, Ordering::SeqCst);
+            },
+        )]));
+        eng.run_plan(&plan, 1);
+        let observed = Arc::new(AtomicUsize::new(0));
+        let (c3, o) = (Arc::clone(&cell), Arc::clone(&observed));
+        eng.push(
+            "read",
+            vec![x],
+            vec![],
+            Box::new(move || o.store(c3.load(Ordering::SeqCst), Ordering::SeqCst)),
+        );
+        eng.wait_all();
+        assert_eq!(observed.load(Ordering::SeqCst), 42);
+    }
+
+    #[test]
+    fn panicking_plan_op_does_not_wedge_replay_or_engine() {
+        let eng = create(EngineKind::Threaded, 2);
+        let v = eng.new_var();
+        let done = Arc::new(AtomicUsize::new(0));
+        let d2 = Arc::clone(&done);
+        let plan = Arc::new(RunPlan::compile(vec![
+            spec("boom", vec![], vec![v], |_| panic!("intentional")),
+            spec("after", vec![v], vec![], move |_| {
+                d2.fetch_add(1, Ordering::SeqCst);
+            }),
+        ]));
+        eng.run_plan(&plan, 1);
+        eng.wait_all(); // must not hang
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+        // and the plan remains replayable
+        eng.run_plan(&plan, 2);
+        eng.wait_all();
+        assert_eq!(done.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn wide_plan_executes_everything_across_workers() {
+        let eng = create(EngineKind::Threaded, 4);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let mut specs = Vec::new();
+        for _ in 0..128 {
+            let v = eng.new_var();
+            let h = Arc::clone(&hits);
+            specs.push(spec("inc", vec![], vec![v], move |_| {
+                h.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        let plan = Arc::new(RunPlan::compile(specs));
+        assert_eq!(plan.width(), 128);
+        for _ in 0..10 {
+            eng.run_plan(&plan, 1);
+        }
+        eng.wait_all();
+        assert_eq!(hits.load(Ordering::Relaxed), 1280);
+    }
+
+    #[test]
+    fn empty_plan_is_a_no_op() {
+        let eng = create(EngineKind::Threaded, 2);
+        let plan = Arc::new(RunPlan::compile(vec![]));
+        assert!(plan.is_empty());
+        eng.run_plan(&plan, 1);
+        eng.wait_all();
+    }
+}

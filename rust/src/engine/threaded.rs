@@ -15,12 +15,23 @@
 //! on: (1) program order is preserved per resource, so the imperative
 //! `w -= eta * g` after a graph backward observes the right gradient, and
 //! (2) writers cannot starve.
+//!
+//! Per-variable state lives in a **generation-checked slab** indexed by
+//! [`VarHandle::slot`] (ISSUE 3): the grant/notify hot path is pure Vec
+//! indexing — the `HashMap<VarId, _>` lookup it replaced is gone.  A
+//! handle whose generation (or id) no longer matches its slot refers to a
+//! deleted variable and simply contributes no ordering.
+//!
+//! Bound executors skip this per-op machinery entirely via
+//! [`Engine::run_plan`]: one engine op synchronizes a [`RunPlan`]'s
+//! boundary vars, then the precompiled DAG replays on this engine's own
+//! worker pool with lock-free countdowns (see [`super::plan`]).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-use super::{Engine, EngineKind, OpFn, VarHandle, VarId};
+use super::{Engine, EngineKind, OpFn, RunPlan, VarHandle, VarId, HEAVY_FLOPS};
 use crate::util::ThreadPool;
 
 /// One queued dependency request: op index + whether it mutates the var.
@@ -36,7 +47,7 @@ struct VarSched {
     queue: VecDeque<Request>,
     active_readers: usize,
     active_writer: bool,
-    /// Set by `delete_var`; the entry is dropped once fully quiescent.
+    /// Set by `delete_var`; the slot is freed once fully quiescent.
     pending_delete: bool,
 }
 
@@ -46,30 +57,52 @@ impl VarSched {
     }
 }
 
+/// One slab slot hosting (at most) one live variable.
+#[derive(Debug)]
+struct Slot {
+    /// Bumped when the slot is freed; stale handles fail the check.
+    gen: u32,
+    /// Whether a live variable currently occupies the slot.
+    alive: bool,
+    /// Globally-unique id of the occupant — cross-checked so a handle
+    /// from *another* engine can never alias this slot.
+    id: VarId,
+    sched: VarSched,
+}
+
 /// A pushed operation. `func` is taken exactly once when dispatched.
 struct OpRecord {
     func: Option<OpFn>,
     /// Ungranted dependency count + 1 registration guard.
     pending: usize,
-    reads: Vec<VarId>,
-    writes: Vec<VarId>,
+    /// Resolved slab slots (stale handles were dropped at push time).
+    reads: Vec<u32>,
+    writes: Vec<u32>,
     /// Estimated FLOPs ([`f64::NAN`] = unknown); drives the intra-op
     /// thread budget at dispatch time.
     cost: f64,
-    #[allow(dead_code)]
     name: &'static str,
 }
 
-/// FLOP estimate above which an op counts as "heavy": it gets a share of
-/// the intra-op pool instead of running on one thread (~0.5 ms of serial
-/// compute at a 2 GFLOP/s single-core floor).
-const HEAVY_FLOPS: f64 = 1e6;
-
 #[derive(Default)]
 struct SchedState {
-    vars: HashMap<VarId, VarSched>,
+    /// Variable slab, indexed by [`VarHandle::slot`].
+    slots: Vec<Slot>,
+    free_slots: Vec<u32>,
     ops: Vec<Option<OpRecord>>,
     free_ops: Vec<usize>,
+}
+
+impl SchedState {
+    /// Map a handle to its live slot, or `None` when the handle is stale
+    /// (variable deleted) or foreign (different engine).
+    fn resolve(&self, v: &VarHandle) -> Option<u32> {
+        let s = v.slot as usize;
+        match self.slots.get(s) {
+            Some(slot) if slot.alive && slot.gen == v.gen && slot.id == v.id => Some(v.slot),
+            _ => None,
+        }
+    }
 }
 
 struct Inner {
@@ -111,20 +144,23 @@ impl ThreadedEngine {
     pub fn ops_executed(&self) -> u64 {
         self.inner.executed.load(Ordering::Relaxed)
     }
+
+    /// Live variable count (slab occupancy; tests).
+    pub fn live_vars(&self) -> usize {
+        let state = self.inner.state.lock().unwrap();
+        state.slots.len() - state.free_slots.len()
+    }
 }
 
 impl Inner {
-    /// Grant queue-front requests on `var`; push newly-ready op indices
-    /// into `ready`.  Caller holds the state lock.
-    fn pump(state: &mut SchedState, var: VarId, ready: &mut Vec<usize>) {
+    /// Grant queue-front requests on slot `s`; push newly-ready op
+    /// indices into `ready`.  Caller holds the state lock.
+    fn pump(state: &mut SchedState, s: u32, ready: &mut Vec<usize>) {
         loop {
             // Decide and update var-local state in a scoped borrow, then
             // touch the op table (grant) outside of it.
             let granted = {
-                let sched = match state.vars.get_mut(&var) {
-                    Some(s) => s,
-                    None => return,
-                };
+                let sched = &mut state.slots[s as usize].sched;
                 match sched.queue.front().copied() {
                     Some(Request { op, write: true })
                         if sched.active_readers == 0 && !sched.active_writer =>
@@ -157,20 +193,21 @@ impl Inner {
         }
     }
 
-    /// Try to garbage-collect a var flagged for deletion.
-    fn maybe_delete(state: &mut SchedState, var: VarId) {
-        if let Some(s) = state.vars.get(&var) {
-            if s.pending_delete && s.quiescent() {
-                state.vars.remove(&var);
-            }
+    /// Free a slot flagged for deletion once quiescent.
+    fn maybe_delete(state: &mut SchedState, s: u32) {
+        let slot = &mut state.slots[s as usize];
+        if slot.alive && slot.sched.pending_delete && slot.sched.quiescent() {
+            slot.alive = false;
+            slot.gen = slot.gen.wrapping_add(1);
+            state.free_slots.push(s);
         }
     }
 
     fn dispatch(self: &Arc<Self>, op_idx: usize) {
-        let (func, cost) = {
+        let (func, cost, name) = {
             let mut state = self.state.lock().unwrap();
             let rec = state.ops[op_idx].as_mut().expect("op alive");
-            (rec.func.take().expect("func present"), rec.cost)
+            (rec.func.take().expect("func present"), rec.cost, rec.name)
         };
         let heavy = cost >= HEAVY_FLOPS;
         if heavy {
@@ -197,22 +234,13 @@ impl Inner {
                 1
             };
             let prev = crate::util::set_intra_budget(budget);
-            // A panicking op must still complete, or its dependents (and
-            // every wait_all) would block forever.  The panic is reported
-            // and the schedule carries on — matching MXNet, where a failed
-            // kernel logs and the engine keeps serving other ops.
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(func));
             crate::util::set_intra_budget(prev);
             if heavy {
                 inner.heavy_inflight.fetch_sub(1, Ordering::SeqCst);
             }
             if let Err(e) = result {
-                let msg = e
-                    .downcast_ref::<&str>()
-                    .map(|s| s.to_string())
-                    .or_else(|| e.downcast_ref::<String>().cloned())
-                    .unwrap_or_else(|| "non-string panic".into());
-                eprintln!("mixnet engine: op panicked: {msg}");
+                super::report_op_panic("engine", name, &e);
             }
             inner.executed.fetch_add(1, Ordering::Relaxed);
             inner.complete(op_idx);
@@ -226,21 +254,23 @@ impl Inner {
             let mut state = self.state.lock().unwrap();
             let rec = state.ops[op_idx].take().expect("op alive");
             state.free_ops.push(op_idx);
-            for &v in &rec.writes {
-                if let Some(s) = state.vars.get_mut(&v) {
-                    debug_assert!(s.active_writer);
-                    s.active_writer = false;
+            for &s in &rec.writes {
+                {
+                    let sched = &mut state.slots[s as usize].sched;
+                    debug_assert!(sched.active_writer);
+                    sched.active_writer = false;
                 }
-                Self::pump(&mut state, v, &mut ready);
-                Self::maybe_delete(&mut state, v);
+                Self::pump(&mut state, s, &mut ready);
+                Self::maybe_delete(&mut state, s);
             }
-            for &v in &rec.reads {
-                if let Some(s) = state.vars.get_mut(&v) {
-                    debug_assert!(s.active_readers > 0);
-                    s.active_readers -= 1;
+            for &s in &rec.reads {
+                {
+                    let sched = &mut state.slots[s as usize].sched;
+                    debug_assert!(sched.active_readers > 0);
+                    sched.active_readers -= 1;
                 }
-                Self::pump(&mut state, v, &mut ready);
-                Self::maybe_delete(&mut state, v);
+                Self::pump(&mut state, s, &mut ready);
+                Self::maybe_delete(&mut state, s);
             }
         }
         for op in ready {
@@ -254,20 +284,51 @@ impl Inner {
     }
 }
 
-/// Normalize dependency lists: dedupe, and drop reads that are also
-/// writes (a write subsumes a read).
-fn normalize(read: Vec<VarHandle>, write: Vec<VarHandle>) -> (Vec<VarId>, Vec<VarId>) {
-    let mut writes: Vec<VarId> = write.into_iter().map(|v| v.0).collect();
-    writes.sort_unstable();
-    writes.dedup();
-    let mut reads: Vec<VarId> = read
-        .into_iter()
-        .map(|v| v.0)
-        .filter(|id| writes.binary_search(id).is_err())
-        .collect();
-    reads.sort_unstable();
-    reads.dedup();
-    (reads, writes)
+/// Sentinel marking a replay's helper gate closed (see
+/// [`spawn_plan_helper`] and `ThreadedEngine::run_plan`).
+const GATE_CLOSED: usize = usize::MAX / 2;
+
+/// Enqueue one replay helper onto the engine's worker pool.
+///
+/// The helper holds only a `Weak` plan ref and registers in `gate`
+/// before taking a strong one, so neither a queued job nor a late
+/// starter can pin the plan's pooled buffers past barrier retirement
+/// (the barrier closes the gate).  It drains with an **idle bound**:
+/// after a stretch with nothing ready (a serial segment of the plan) it
+/// yields its worker back to the pool — letting unrelated engine ops
+/// run — and re-enqueues itself behind them in case the plan widens
+/// again.  Progress never depends on helpers (the op-completing thread
+/// pops the successors it pushes), so bailing is always safe.
+fn spawn_plan_helper(inner: &Arc<Inner>, w: std::sync::Weak<RunPlan>, gate: Arc<AtomicUsize>) {
+    // Empty polls before a helper hands its worker back (~13 ms of
+    // escalating backoff under the drain schedule).
+    const HELPER_IDLE_LIMIT: u32 = 512;
+    let inner2 = Arc::clone(inner);
+    inner.pool.execute(move || {
+        // Register before touching the plan; a closed gate means the
+        // replay already retired.
+        loop {
+            let n = gate.load(Ordering::SeqCst);
+            if n >= GATE_CLOSED {
+                return;
+            }
+            if gate.compare_exchange(n, n + 1, Ordering::SeqCst, Ordering::SeqCst).is_ok() {
+                break;
+            }
+        }
+        let complete = match w.upgrade() {
+            Some(q) => {
+                let complete = q.drain_bounded(&inner2.heavy_inflight, HELPER_IDLE_LIMIT);
+                drop(q);
+                complete
+            }
+            None => true,
+        };
+        gate.fetch_sub(1, Ordering::SeqCst);
+        if !complete {
+            spawn_plan_helper(&inner2, w, gate);
+        }
+    });
 }
 
 impl Engine for ThreadedEngine {
@@ -278,8 +339,22 @@ impl Engine for ThreadedEngine {
     fn new_var(&self) -> VarHandle {
         let id = super::alloc_var_id();
         let mut state = self.inner.state.lock().unwrap();
-        state.vars.insert(id, VarSched::default());
-        VarHandle(id)
+        let slot = match state.free_slots.pop() {
+            Some(s) => {
+                let sl = &mut state.slots[s as usize];
+                debug_assert!(!sl.alive);
+                sl.alive = true;
+                sl.id = id;
+                sl.sched = VarSched::default();
+                s
+            }
+            None => {
+                state.slots.push(Slot { gen: 0, alive: true, id, sched: VarSched::default() });
+                (state.slots.len() - 1) as u32
+            }
+        };
+        let gen = state.slots[slot as usize].gen;
+        VarHandle { id, slot, gen }
     }
 
     fn push(&self, name: &'static str, read: Vec<VarHandle>, write: Vec<VarHandle>, func: OpFn) {
@@ -294,12 +369,19 @@ impl Engine for ThreadedEngine {
         cost_flops: f64,
         func: OpFn,
     ) {
-        let (reads, writes) = normalize(read, write);
+        // Normalize outside the scheduler lock — only the slab resolution
+        // below needs the lock, keeping the global critical section to
+        // Vec indexing.
+        let (read_h, write_h) = super::normalize_deps(&read, &write);
         self.inner.outstanding.fetch_add(1, Ordering::SeqCst);
         let mut ready = Vec::new();
-        let op_idx;
         {
             let mut state = self.inner.state.lock().unwrap();
+            // Resolve handles to live slots; stale/foreign handles
+            // impose no ordering.  Distinct live handles map to distinct
+            // slots, so the handle-level dedup above carries over.
+            let writes: Vec<u32> = write_h.iter().filter_map(|v| state.resolve(v)).collect();
+            let reads: Vec<u32> = read_h.iter().filter_map(|v| state.resolve(v)).collect();
             // +1 registration guard: the op cannot fire while we are still
             // appending its requests to queues.
             let rec = OpRecord {
@@ -310,20 +392,22 @@ impl Engine for ThreadedEngine {
                 cost: cost_flops,
                 name,
             };
-            op_idx = if let Some(i) = state.free_ops.pop() {
+            let op_idx = if let Some(i) = state.free_ops.pop() {
                 state.ops[i] = Some(rec);
                 i
             } else {
                 state.ops.push(Some(rec));
                 state.ops.len() - 1
             };
-            for &v in &writes {
-                state.vars.entry(v).or_default().queue.push_back(Request { op: op_idx, write: true });
-                Inner::pump(&mut state, v, &mut ready);
+            for &s in &writes {
+                let req = Request { op: op_idx, write: true };
+                state.slots[s as usize].sched.queue.push_back(req);
+                Inner::pump(&mut state, s, &mut ready);
             }
-            for &v in &reads {
-                state.vars.entry(v).or_default().queue.push_back(Request { op: op_idx, write: false });
-                Inner::pump(&mut state, v, &mut ready);
+            for &s in &reads {
+                let req = Request { op: op_idx, write: false };
+                state.slots[s as usize].sched.queue.push_back(req);
+                Inner::pump(&mut state, s, &mut ready);
             }
             // Release the registration guard.
             Inner::grant(&mut state, op_idx, &mut ready);
@@ -331,6 +415,77 @@ impl Engine for ThreadedEngine {
         for op in ready {
             self.inner.dispatch(op);
         }
+    }
+
+    /// Native replay (ISSUE 3): one engine op grants the plan's boundary
+    /// read/write sets — that is the *entire* interaction with the
+    /// dynamic scheduler, preserving ordering against imperative ops and
+    /// KVStore traffic — and its body replays the precompiled DAG across
+    /// this engine's worker pool with lock-free countdowns.  Per plan op
+    /// there is no lock, no slab, no queue: just an atomic in-degree
+    /// countdown and a Treiber-stack push/pop.
+    fn run_plan(&self, plan: &Arc<RunPlan>, step: u64) {
+        if plan.is_empty() {
+            return;
+        }
+        // The boundary *write* set is the serialization token that keeps
+        // two replays of one plan from racing on its shared replay state
+        // (countdowns, ready stack).  A plan that writes nothing has no
+        // token — and nothing to gain from replay — so it takes the
+        // dynamic per-op path instead.
+        if plan.boundary_writes().is_empty() {
+            super::push_plan_ops(self, plan, step);
+            return;
+        }
+        let p = Arc::clone(plan);
+        let inner = Arc::clone(&self.inner);
+        // The barrier op itself carries no cost hint: it does no compute
+        // of its own, and registering it as "heavy" for the whole replay
+        // would wrongly halve the budget of every other heavy op (and of
+        // the plan's own heavy ops, which account against the same
+        // engine-global counter individually).
+        self.push_costed(
+            "run_plan",
+            plan.boundary_reads().to_vec(),
+            plan.boundary_writes().to_vec(),
+            f64::NAN,
+            Box::new(move || {
+                p.begin_replay(step);
+                // Recruit idle pool workers up to the plan's parallelism
+                // bound; the barrier thread always participates, so a
+                // 1-worker pool (or a serial-chain plan) degenerates to
+                // inline sequential execution with zero cross-thread
+                // traffic.  Helpers hold only a Weak ref, and take a
+                // strong one only after registering in the `gate`
+                // counter below — so neither a queued helper job nor a
+                // late-starting one can pin the plan's pooled buffers
+                // past this barrier op's retirement.
+                let pool_extra = inner.pool.size().saturating_sub(1);
+                let helpers = pool_extra.min(p.width().saturating_sub(1));
+                let gate = Arc::new(AtomicUsize::new(0));
+                for _ in 0..helpers {
+                    spawn_plan_helper(&inner, Arc::downgrade(&p), Arc::clone(&gate));
+                }
+                p.drain(&inner.heavy_inflight);
+                // Close the gate: wait for registered helpers (they may
+                // hold a strong plan ref) and bar late starters from
+                // entering at all.  Once this CAS succeeds, no helper
+                // holds — or can ever take — a strong ref, so barrier
+                // retirement + executor drop deterministically releases
+                // every plan buffer back to the storage pool.  Only
+                // *registered* helpers are awaited (they are running on
+                // a worker and exit as soon as the drained stack is
+                // empty); still-queued jobs never registered, so two
+                // concurrent barriers on a saturated pool cannot
+                // deadlock waiting for each other's queued helpers.
+                while gate
+                    .compare_exchange(0, GATE_CLOSED, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_err()
+                {
+                    std::thread::yield_now();
+                }
+            }),
+        );
     }
 
     fn wait_for_var(&self, var: VarHandle) {
@@ -352,10 +507,10 @@ impl Engine for ThreadedEngine {
 
     fn delete_var(&self, var: VarHandle) {
         let mut state = self.inner.state.lock().unwrap();
-        if let Some(s) = state.vars.get_mut(&var.0) {
-            s.pending_delete = true;
+        if let Some(s) = state.resolve(&var) {
+            state.slots[s as usize].sched.pending_delete = true;
+            Inner::maybe_delete(&mut state, s);
         }
-        Inner::maybe_delete(&mut state, var.0);
     }
 
     fn num_workers(&self) -> usize {
@@ -560,5 +715,92 @@ mod tests {
         eng.wait_all();
         assert_eq!(total.load(Ordering::Relaxed), 5000);
         assert_eq!(eng.ops_executed(), 5000);
+    }
+
+    // ---- slab-specific behavior --------------------------------------
+
+    #[test]
+    fn deleted_slot_is_reused_with_new_generation() {
+        let eng = ThreadedEngine::new(2);
+        let a = eng.new_var();
+        eng.delete_var(a);
+        let b = eng.new_var();
+        // quiescent delete frees the slot immediately; the replacement
+        // reuses it under a bumped generation
+        assert_eq!(a.slot, b.slot, "slot should be recycled");
+        assert_ne!(a.gen, b.gen, "generation must differ");
+        assert_ne!(a.id(), b.id(), "ids stay globally unique");
+        assert_eq!(eng.live_vars(), 1);
+    }
+
+    #[test]
+    fn stale_handle_imposes_no_ordering_but_op_still_runs() {
+        let eng = ThreadedEngine::new(2);
+        let a = eng.new_var();
+        let b = eng.new_var(); // keeps the engine busy-able
+        eng.delete_var(a);
+        let hit = Arc::new(AtomicUsize::new(0));
+        {
+            let h = Arc::clone(&hit);
+            // writes a deleted var, reads a live one: must run normally
+            eng.push("stale", vec![b], vec![a], Box::new(move || {
+                h.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        eng.wait_all();
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+        // and the recycled slot's new occupant was not disturbed
+        let c = eng.new_var();
+        assert_eq!(a.slot, c.slot);
+        let h2 = Arc::clone(&hit);
+        eng.push("fresh", vec![], vec![c], Box::new(move || {
+            h2.fetch_add(10, Ordering::SeqCst);
+        }));
+        eng.wait_all();
+        assert_eq!(hit.load(Ordering::SeqCst), 11);
+    }
+
+    #[test]
+    fn delete_frees_slot_only_after_pending_ops() {
+        let eng = ThreadedEngine::new(2);
+        let v = eng.new_var();
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = Arc::clone(&done);
+        eng.push("op", vec![], vec![v], Box::new(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            d.store(7, Ordering::SeqCst);
+        }));
+        eng.delete_var(v);
+        eng.wait_all();
+        assert_eq!(done.load(Ordering::SeqCst), 7);
+        assert_eq!(eng.live_vars(), 0, "slot reclaimed after quiescence");
+    }
+
+    #[test]
+    fn slab_churn_many_generations() {
+        // Allocate/delete through the same slots repeatedly; ops on the
+        // current generation always run, old handles never interfere.
+        let eng = ThreadedEngine::new(2);
+        let total = Arc::new(AtomicUsize::new(0));
+        let mut old: Vec<VarHandle> = Vec::new();
+        for round in 0..50 {
+            let v = eng.new_var();
+            let t = Arc::clone(&total);
+            eng.push("inc", vec![], vec![v], Box::new(move || {
+                t.fetch_add(1, Ordering::Relaxed);
+            }));
+            if let Some(stale) = old.get(round % old.len().max(1)).copied() {
+                // pushing on stale handles is harmless
+                let t = Arc::clone(&total);
+                eng.push("stale", vec![stale], vec![], Box::new(move || {
+                    t.fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+            eng.delete_var(v);
+            old.push(v);
+        }
+        eng.wait_all();
+        assert!(total.load(Ordering::Relaxed) >= 50);
+        assert_eq!(eng.live_vars(), 0);
     }
 }

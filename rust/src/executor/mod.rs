@@ -4,12 +4,24 @@
 //! `bind` freezes a [`Graph`] against concrete argument arrays: shapes are
 //! inferred, the backward pass is appended (training mode), elementwise
 //! chains are optionally fused, the memory planner assigns storage, and
-//! every node becomes a prepared template.  [`Executor::forward`] /
-//! [`Executor::backward`] then *push* one engine operation per node — the
-//! calls return immediately and the engine schedules everything that is
-//! dependency-ready across its worker threads, interleaving freely with
-//! imperative `NDArray` work on the same engine (the paper's joint
-//! scheduling of both paradigms).
+//! every node becomes a prepared template.
+//!
+//! Because everything about the schedule is known at bind time, the node
+//! sequence is also compiled into static [`RunPlan`]s (ISSUE 3): one for
+//! the forward pass, one for the backward.  [`Executor::forward`] /
+//! [`Executor::backward`] then hand the whole plan to the engine as a
+//! single operation — the dependency DAG replays with lock-free
+//! countdowns instead of paying per-node scheduling — while plan
+//! boundaries still synchronize through engine vars, so imperative
+//! `NDArray` work (`w -= eta * g`), KVStore traffic and other executors
+//! interleave exactly as before (the paper's joint scheduling of both
+//! paradigms).  `BindConfig { replay: false, .. }` keeps the classic
+//! push-one-op-per-node path; the two are bitwise equivalent.
+//!
+//! Internal storage (plan blocks, workspace) is materialized through the
+//! [storage pool](crate::ndarray::pool) with no zero-fill — every block's
+//! first use each step fully overwrites it — so rebinding and steady-state
+//! stepping allocate nothing once the pool is warm.
 
 pub mod native_ops;
 
@@ -17,7 +29,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::engine::EngineRef;
+use crate::engine::{EngineRef, PlanOpSpec, RunPlan};
 use crate::error::{Error, Result};
 use crate::graph::autodiff::build_backward;
 use crate::graph::memory::{default_external, plan_memory, AllocStrategy, MemPlan};
@@ -42,18 +54,36 @@ pub struct BindConfig {
     pub grads: bool,
     /// Fuse elementwise chains (§3.1 operator grouping).
     pub fuse: bool,
+    /// Compile the node sequence into static [`RunPlan`]s at bind time
+    /// and replay them each step (one engine op per pass, lock-free
+    /// in-plan scheduling) instead of pushing one engine op per node.
+    /// Scheduling-equivalent — results are bitwise identical; `false`
+    /// keeps the per-op dynamic path (benches, equivalence tests).
+    pub replay: bool,
 }
 
 impl Default for BindConfig {
     fn default() -> Self {
-        BindConfig { strategy: AllocStrategy::Both, training: true, grads: true, fuse: true }
+        BindConfig {
+            strategy: AllocStrategy::Both,
+            training: true,
+            grads: true,
+            fuse: true,
+            replay: true,
+        }
     }
 }
 
 impl BindConfig {
     /// Forward-only inference bind: no backward pass, no gradient buffers.
     pub fn inference() -> Self {
-        BindConfig { strategy: AllocStrategy::Both, training: false, grads: false, fuse: true }
+        BindConfig {
+            strategy: AllocStrategy::Both,
+            training: false,
+            grads: false,
+            fuse: true,
+            replay: true,
+        }
     }
 }
 
@@ -77,6 +107,42 @@ struct NodeTemplate {
     write_vars: Vec<crate::engine::VarHandle>,
 }
 
+/// Execute one prepared node template (shared by the dynamic push path
+/// and the run-plan replay path; both invoke it under the same engine
+/// grants).
+fn run_template(t: &NodeTemplate, training: bool, step: u64) {
+    // SAFETY: the engine granted shared reads on every input var and
+    // exclusive writes on every output/workspace var.
+    crate::metrics::time(t.name, || unsafe {
+        let in_data: Vec<Option<&[f32]>> = t
+            .in_storages
+            .iter()
+            .zip(&t.in_sizes)
+            .zip(&t.aliased)
+            .map(|((s, &n), &al)| if al { None } else { Some(&s.slice()[..n]) })
+            .collect();
+        let out: Vec<&mut [f32]> = t
+            .out_storages
+            .iter()
+            .zip(&t.out_sizes)
+            .map(|(s, &n)| &mut s.slice_mut()[..n])
+            .collect();
+        let workspace = t.ws.as_ref().map(|(s, n)| &mut s.slice_mut()[..*n]);
+        native_ops::execute(
+            &t.op,
+            OpArgs {
+                in_data,
+                in_shapes: t.in_shapes.clone(),
+                out,
+                out_shapes: t.out_shapes.clone(),
+                workspace,
+                training,
+                step,
+            },
+        );
+    })
+}
+
 /// A bound, runnable computation (paper §2.1 "bind").
 pub struct Executor {
     graph: Graph,
@@ -90,6 +156,18 @@ pub struct Executor {
     step: AtomicU64,
     plan: MemPlan,
     num_forward: usize,
+    /// Static run-plans compiled at bind time (`cfg.replay`); `None`
+    /// falls back to pushing one engine op per node.
+    fwd_plan: Option<Arc<RunPlan>>,
+    bwd_plan: Option<Arc<RunPlan>>,
+    /// Keep-alives for the planner storage blocks and dedicated scratch:
+    /// templates and plans hold their `VarHandle`s, and a handle only
+    /// orders operations while its variable is alive (the slab drops
+    /// stale handles — no resurrect-on-push like the old HashMap), so
+    /// these arrays must live exactly as long as the executor.  Dropping
+    /// them deletes the vars and recycles the buffers through the pool.
+    _storage_arrays: Vec<NDArray>,
+    _scratch_arrays: Vec<NDArray>,
 }
 
 impl Executor {
@@ -166,11 +244,13 @@ impl Executor {
         let external = default_external(&graph, &extra);
         let plan = plan_memory(&graph, &shapes, &external, cfg.strategy);
 
-        // 5. materialize storage
+        // 5. materialize storage — the planner's co-share blocks map
+        //    straight onto pooled slots: drawn from the storage pool with
+        //    no zero-fill (each block's first use every step fully
+        //    overwrites it), recycled back at executor drop.
         let storage_arrays: Vec<NDArray> = plan
-            .storage_bytes
-            .iter()
-            .map(|&b| NDArray::zeros_on(&[b / 4], Arc::clone(&engine)))
+            .storage_elems()
+            .map(|elems| NDArray::alloc_uninit_on(&[elems], Arc::clone(&engine)))
             .collect();
 
         // entry -> NDArray
@@ -204,6 +284,7 @@ impl Executor {
         let ws_bytes = crate::graph::workspace_bytes(&graph, &shapes);
         let mut templates: Vec<Option<Arc<NodeTemplate>>> =
             Vec::with_capacity(graph.nodes.len());
+        let mut scratch_arrays: Vec<NDArray> = Vec::new();
         for (id, node) in graph.nodes.iter().enumerate() {
             if node.op.is_variable() {
                 templates.push(None);
@@ -224,8 +305,12 @@ impl Executor {
                 match sid {
                     Some(&sid) => Some((storage_arrays[sid].storage(), ws_bytes[id] / 4)),
                     None => {
-                        let a = NDArray::zeros_on(&[ws_bytes[id] / 4], Arc::clone(&engine));
-                        Some((a.storage(), ws_bytes[id] / 4))
+                        // dedicated scratch: pooled, never pre-zeroed,
+                        // kept alive (with its var) by the executor
+                        let a = NDArray::alloc_uninit_on(&[ws_bytes[id] / 4], Arc::clone(&engine));
+                        let s = (a.storage(), ws_bytes[id] / 4);
+                        scratch_arrays.push(a);
+                        Some(s)
                     }
                 }
             } else {
@@ -269,6 +354,43 @@ impl Executor {
 
         let num_forward =
             if graph.num_forward == 0 { graph.nodes.len() } else { graph.num_forward };
+
+        // 7. compile the static run-plans (ISSUE 3): the same (reads,
+        //    writes, cost) tuples the dynamic path would push, with
+        //    reusable bodies — replayed as one engine op per pass.
+        let (fwd_plan, bwd_plan) = if cfg.replay {
+            let mut fwd_specs: Vec<PlanOpSpec> = Vec::new();
+            let mut bwd_specs: Vec<PlanOpSpec> = Vec::new();
+            for (id, tmpl) in templates.iter().enumerate() {
+                let t = match tmpl {
+                    Some(t) => Arc::clone(t),
+                    None => continue,
+                };
+                let body_t = Arc::clone(&t);
+                let spec = PlanOpSpec {
+                    name: t.name,
+                    reads: t.read_vars.clone(),
+                    writes: t.write_vars.clone(),
+                    cost: t.cost,
+                    body: Arc::new(move |step: u64| run_template(&body_t, training, step)),
+                };
+                if id < num_forward {
+                    fwd_specs.push(spec);
+                } else {
+                    bwd_specs.push(spec);
+                }
+            }
+            let fwd = Arc::new(RunPlan::compile(fwd_specs));
+            let bwd = if bwd_specs.is_empty() {
+                None
+            } else {
+                Some(Arc::new(RunPlan::compile(bwd_specs)))
+            };
+            (Some(fwd), bwd)
+        } else {
+            (None, None)
+        };
+
         Ok(Executor {
             graph,
             shapes,
@@ -281,6 +403,10 @@ impl Executor {
             step: AtomicU64::new(0),
             plan,
             num_forward,
+            fwd_plan,
+            bwd_plan,
+            _storage_arrays: storage_arrays,
+            _scratch_arrays: scratch_arrays,
         })
     }
 
@@ -296,57 +422,38 @@ impl Executor {
             tmpl.read_vars.clone(),
             tmpl.write_vars.clone(),
             tmpl.cost,
-            Box::new(move || {
-                // SAFETY: the engine granted shared reads on every input
-                // var and exclusive writes on every output/workspace var.
-                crate::metrics::time(t.name, || unsafe {
-                    let in_data: Vec<Option<&[f32]>> = t
-                        .in_storages
-                        .iter()
-                        .zip(&t.in_sizes)
-                        .zip(&t.aliased)
-                        .map(|((s, &n), &al)| if al { None } else { Some(&s.slice()[..n]) })
-                        .collect();
-                    let out: Vec<&mut [f32]> = t
-                        .out_storages
-                        .iter()
-                        .zip(&t.out_sizes)
-                        .map(|(s, &n)| &mut s.slice_mut()[..n])
-                        .collect();
-                    let workspace = t.ws.as_ref().map(|(s, n)| &mut s.slice_mut()[..*n]);
-                    native_ops::execute(
-                        &t.op,
-                        OpArgs {
-                            in_data,
-                            in_shapes: t.in_shapes.clone(),
-                            out,
-                            out_shapes: t.out_shapes.clone(),
-                            workspace,
-                            training,
-                            step,
-                        },
-                    );
-                })
-            }),
+            Box::new(move || run_template(&t, training, step)),
         );
     }
 
-    /// Push the forward pass onto the engine (returns immediately).
+    /// Schedule the forward pass (returns immediately): one replayed
+    /// run-plan op on the replay path, or one engine op per node on the
+    /// dynamic path — bitwise-identical either way.
     pub fn forward(&self) {
         let step = self.step.fetch_add(1, Ordering::Relaxed) + 1;
-        for id in 0..self.num_forward {
-            self.push_node(id, step);
+        match &self.fwd_plan {
+            Some(p) => self.engine.run_plan(p, step),
+            None => {
+                for id in 0..self.num_forward {
+                    self.push_node(id, step);
+                }
+            }
         }
     }
 
-    /// Push the backward pass onto the engine (returns immediately).
+    /// Schedule the backward pass (returns immediately).
     pub fn backward(&self) -> Result<()> {
         if !self.training {
             return Err(Error::Bind("executor bound with training=false".into()));
         }
         let step = self.step.load(Ordering::Relaxed);
-        for id in self.num_forward..self.graph.nodes.len() {
-            self.push_node(id, step);
+        match &self.bwd_plan {
+            Some(p) => self.engine.run_plan(p, step),
+            None => {
+                for id in self.num_forward..self.graph.nodes.len() {
+                    self.push_node(id, step);
+                }
+            }
         }
         Ok(())
     }
@@ -397,9 +504,9 @@ impl Executor {
         &self.shapes
     }
 
-    /// Mean cross-entropy loss of the (single) softmax head against its
-    /// bound label array.  Waits for the forward pass.
-    pub fn softmax_xent_loss(&self) -> Result<f32> {
+    /// The (single) softmax head's probability array and its bound label
+    /// array.
+    fn softmax_head(&self) -> Result<(&NDArray, &NDArray)> {
         let head = self
             .graph
             .outputs
@@ -413,38 +520,36 @@ impl Executor {
             .args
             .get(label_name)
             .ok_or_else(|| Error::Bind(format!("label '{label_name}' unbound")))?;
-        let probs_arr = &self.outputs_arr[self
-            .graph
-            .outputs
-            .iter()
-            .position(|e| *e == head)
-            .unwrap()];
-        let probs = probs_arr.to_vec();
-        let lab = labels.to_vec();
-        let (m, n) = (probs_arr.shape()[0], probs_arr.shape()[1]);
-        Ok(crate::ndarray::kernels::xent_loss(&probs, &lab, m, n))
+        let idx = self.graph.outputs.iter().position(|e| *e == head).unwrap();
+        Ok((&self.outputs_arr[idx], labels))
+    }
+
+    /// Mean cross-entropy loss of the (single) softmax head against its
+    /// bound label array.  Waits for the forward pass.
+    pub fn softmax_xent_loss(&self) -> Result<f32> {
+        self.softmax_metrics().map(|(loss, _)| loss)
     }
 
     /// Accuracy of the softmax head against its label array.
     pub fn softmax_accuracy(&self) -> Result<f32> {
-        let head = self
-            .graph
-            .outputs
-            .iter()
-            .find(|e| matches!(self.graph.nodes[e.node].op, Op::SoftmaxOutput))
-            .copied()
-            .ok_or_else(|| Error::Bind("no SoftmaxOutput head".into()))?;
-        let label_entry = self.graph.nodes[head.node].inputs[1];
-        let label_name = &self.graph.nodes[label_entry.node].name;
-        let labels = self.args.get(label_name).unwrap().to_vec();
-        let idx = self.graph.outputs.iter().position(|e| *e == head).unwrap();
-        let probs_arr = &self.outputs_arr[idx];
+        self.softmax_metrics().map(|(_, acc)| acc)
+    }
+
+    /// `(loss, accuracy)` of the softmax head in one synchronized read —
+    /// the training loop's per-batch metric call.  One wait and one copy
+    /// of the probabilities instead of two of each (`fit` used to call
+    /// [`Executor::softmax_xent_loss`] and [`Executor::softmax_accuracy`]
+    /// back to back).
+    pub fn softmax_metrics(&self) -> Result<(f32, f32)> {
+        let (probs_arr, labels) = self.softmax_head()?;
         let probs = probs_arr.to_vec();
+        let lab = labels.to_vec();
         let (m, n) = (probs_arr.shape()[0], probs_arr.shape()[1]);
+        let loss = crate::ndarray::kernels::xent_loss(&probs, &lab, m, n);
         let mut preds = vec![0.0; m];
         crate::ndarray::kernels::argmax_rows(&probs, &mut preds, m, n);
-        let correct = preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
-        Ok(correct as f32 / m as f32)
+        let correct = preds.iter().zip(&lab).filter(|(p, l)| p == l).count();
+        Ok((loss, correct as f32 / m as f32))
     }
 }
 

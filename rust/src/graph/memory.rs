@@ -86,6 +86,16 @@ impl MemPlan {
     pub fn bytes_mb(&self) -> f64 {
         crate::util::mb(self.total_internal_bytes)
     }
+
+    /// Element count of each storage block, in block-id order — what the
+    /// executor materializes.  Each co-share tag maps onto one pooled
+    /// slot: blocks are drawn from the process-wide storage pool
+    /// ([`crate::ndarray::pool`]) without zero-fill, and because a bound
+    /// graph re-requests the exact same sizes on every rebind, a warm
+    /// pool serves them all as hits.
+    pub fn storage_elems(&self) -> impl Iterator<Item = usize> + '_ {
+        self.storage_bytes.iter().map(|&b| b / 4)
+    }
 }
 
 /// Plan storage for every internal entry of `graph`.

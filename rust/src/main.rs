@@ -21,7 +21,7 @@ use mixnet::engine::{create, default_threads, EngineKind};
 use mixnet::executor::BindConfig;
 use mixnet::graph::infer_shapes;
 use mixnet::graph::memory::{default_external, plan_memory, AllocStrategy};
-use mixnet::io::{synth, ArrayDataIter};
+use mixnet::io::{synth, ArrayDataIter, PrefetchIter};
 use mixnet::kvstore::server::{PsServer, ServerUpdater};
 use mixnet::kvstore::{dist::DistKVStore, Consistency, LocalKVStore};
 use mixnet::models::by_name;
@@ -104,7 +104,7 @@ fn setup_training(
     args: &Args,
     engine: mixnet::engine::EngineRef,
     shard_seed: u64,
-) -> Result<(Module, ArrayDataIter)> {
+) -> Result<(Module, PrefetchIter)> {
     let model_name = args.get_str("model", "mlp");
     let batch: usize = args.get("batch", 32)?;
     let classes: usize = args.get("classes", 4)?;
@@ -126,7 +126,7 @@ fn setup_training(
     } else {
         synth::class_clusters(examples, classes.min(m.num_classes), feat, 0.3, shard_seed)
     };
-    let iter = ArrayDataIter::new(
+    let inner = ArrayDataIter::new(
         ds.features,
         ds.labels,
         &m.feat_shape.clone(),
@@ -134,6 +134,9 @@ fn setup_training(
         true,
         engine.clone(),
     );
+    // §2.4 multi-threaded prefetch on the training path; in-flight depth
+    // comes from the PALLAS_PREFETCH_DEPTH knob (default 3).
+    let iter = PrefetchIter::with_default_depth(Box::new(inner));
     let shapes = m.param_shapes(batch)?;
     let feat_shape = m.feat_shape.clone();
     let mut module = Module::new(m.symbol, engine);

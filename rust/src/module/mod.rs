@@ -225,8 +225,12 @@ impl Module {
                         }
                     }
                 }
-                loss_sum += exec.softmax_xent_loss()? as f64;
-                acc_sum += exec.softmax_accuracy()? as f64;
+                // One synchronized head read per batch (loss + accuracy
+                // together) — this wait is the step boundary the replayed
+                // run-plans and the imperative updates drain through.
+                let (loss, acc) = exec.softmax_metrics()?;
+                loss_sum += loss as f64;
+                acc_sum += acc as f64;
                 batches += 1;
             }
             self.engine.wait_all();

@@ -14,6 +14,7 @@
 
 pub mod kernels;
 pub mod ops;
+pub mod pool;
 
 use std::cell::UnsafeCell;
 use std::sync::Arc;
@@ -26,21 +27,53 @@ use crate::util::Rng;
 /// Interior mutability is sound because every access goes through the
 /// dependency engine, which guarantees a writer is exclusive and readers
 /// never overlap a writer (the same argument MXNet makes for its NDArray).
+///
+/// Buffers are drawn from the process-wide [storage pool](pool) and
+/// recycled on drop, so the steady-state hot loop (whose buffer sizes
+/// recur every step) allocates nothing after warmup.
 pub struct Storage {
     data: UnsafeCell<Box<[f32]>>,
+    /// Whether the buffer goes back to the pool on drop (set when the
+    /// pool was enabled at creation; `from_vec` buffers are caller data
+    /// and are freed normally).
+    pooled: bool,
 }
 
 // SAFETY: access discipline enforced by the engine (exclusive writes).
 unsafe impl Sync for Storage {}
 unsafe impl Send for Storage {}
 
+impl Drop for Storage {
+    fn drop(&mut self) {
+        if self.pooled {
+            let buf = std::mem::take(self.data.get_mut());
+            pool::global().release(buf);
+        }
+    }
+}
+
 impl Storage {
     fn new(len: usize, fill: f32) -> Arc<Self> {
-        Arc::new(Storage { data: UnsafeCell::new(vec![fill; len].into_boxed_slice()) })
+        let p = pool::global();
+        Arc::new(Storage {
+            data: UnsafeCell::new(p.acquire_filled(len, fill)),
+            pooled: p.enabled(),
+        })
+    }
+
+    /// Pool-backed buffer whose contents are unspecified until first
+    /// written (a recycled buffer keeps its previous owner's values; a
+    /// fresh one is zeroed — never uninitialized memory).
+    fn new_uninit(len: usize) -> Arc<Self> {
+        let p = pool::global();
+        Arc::new(Storage {
+            data: UnsafeCell::new(p.acquire_uninit(len)),
+            pooled: p.enabled(),
+        })
     }
 
     fn from_vec(v: Vec<f32>) -> Arc<Self> {
-        Arc::new(Storage { data: UnsafeCell::new(v.into_boxed_slice()) })
+        Arc::new(Storage { data: UnsafeCell::new(v.into_boxed_slice()), pooled: false })
     }
 
     /// Read access. Caller must hold a read grant from the engine.
@@ -123,6 +156,33 @@ impl NDArray {
         }
     }
 
+    /// Array whose contents are unspecified until first written, drawn
+    /// from the [storage pool](pool) with **no zero-fill on a pool hit**.
+    ///
+    /// For buffers whose first use fully overwrites them — executor
+    /// temporaries, RNG fills, serve scatter targets, op results.  The
+    /// contents are never uninitialized *memory* (a miss allocates
+    /// zeroed; a hit carries the previous owner's values), so reading
+    /// before writing is unspecified but sound.
+    pub fn alloc_uninit(shape: &[usize]) -> Self {
+        Self::alloc_uninit_on(shape, default_engine())
+    }
+
+    /// [`NDArray::alloc_uninit`] on a specific engine.
+    pub fn alloc_uninit_on(shape: &[usize], engine: EngineRef) -> Self {
+        let size: usize = shape.iter().product();
+        let var = engine.new_var();
+        NDArray {
+            inner: Arc::new(Inner {
+                shape: shape.to_vec(),
+                storage: Storage::new_uninit(size),
+                var,
+                engine,
+                base: None,
+            }),
+        }
+    }
+
     /// Zero-filled array on the default engine.
     pub fn zeros(shape: &[usize]) -> Self {
         Self::zeros_on(shape, default_engine())
@@ -171,7 +231,7 @@ impl NDArray {
 
     /// Gaussian-initialized array on a specific engine.
     pub fn randn_on(shape: &[usize], mean: f32, std: f32, seed: u64, engine: EngineRef) -> Self {
-        let out = Self::alloc(shape, 0.0, engine);
+        let out = Self::alloc_uninit_on(shape, engine);
         let storage = out.storage();
         out.engine().push(
             "randn",
@@ -190,7 +250,7 @@ impl NDArray {
 
     /// Uniform-initialized array in `[lo, hi)`.
     pub fn uniform(shape: &[usize], lo: f32, hi: f32, seed: u64) -> Self {
-        let out = Self::alloc(shape, 0.0, default_engine());
+        let out = Self::alloc_uninit(shape);
         let storage = out.storage();
         out.engine().push(
             "uniform",

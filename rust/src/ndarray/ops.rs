@@ -4,6 +4,12 @@
 //! mutation ops (`sub_scaled_`, `add_`) that make the paper's imperative
 //! parameter update `w -= eta * g` expressible — and schedulable — next to
 //! symbolic graph execution.
+//!
+//! **Engine affinity.**  Every multi-operand op schedules on the
+//! *receiver's* engine; operands created on a different engine get no
+//! dependency tracking there (their tags are foreign — see
+//! [`crate::engine`]).  Keep all arrays of one computation on one engine;
+//! mixing engines is a logic error whose writes race.
 
 use std::sync::Arc;
 
@@ -13,7 +19,10 @@ use super::NDArray;
 impl NDArray {
     fn binary_ew(&self, other: &NDArray, op: EwBinary, name: &'static str) -> NDArray {
         assert_eq!(self.shape(), other.shape(), "{name}: shape mismatch");
-        let out = NDArray::zeros_on(self.shape(), self.engine());
+        // The kernel writes every output element, so the result draws an
+        // unzeroed buffer from the storage pool (no memset on the hot
+        // loop) — same for every other fully-overwriting op below.
+        let out = NDArray::alloc_uninit_on(self.shape(), self.engine());
         let (sa, sb, so) = (self.storage(), other.storage(), out.storage());
         self.engine().push(
             name,
@@ -47,7 +56,7 @@ impl NDArray {
     }
 
     fn scalar_map(&self, name: &'static str, f: impl Fn(f32) -> f32 + Send + 'static) -> NDArray {
-        let out = NDArray::zeros_on(self.shape(), self.engine());
+        let out = NDArray::alloc_uninit_on(self.shape(), self.engine());
         let (sa, so) = (self.storage(), out.storage());
         self.engine().push(
             name,
@@ -81,7 +90,8 @@ impl NDArray {
         let (m, k) = (self.shape()[0], self.shape()[1]);
         let (k2, n) = (other.shape()[0], other.shape()[1]);
         assert_eq!(k, k2, "dot: inner dims {k} vs {k2}");
-        let out = NDArray::zeros_on(&[m, n], self.engine());
+        // beta = 0.0 below: gemm assigns, never reads, the output.
+        let out = NDArray::alloc_uninit_on(&[m, n], self.engine());
         let (sa, sb, so) = (self.storage(), other.storage(), out.storage());
         self.engine().push_costed(
             "ndarray.dot",
@@ -99,7 +109,7 @@ impl NDArray {
     pub fn softmax(&self) -> NDArray {
         assert_eq!(self.shape().len(), 2, "softmax: need 2-d");
         let (m, n) = (self.shape()[0], self.shape()[1]);
-        let out = NDArray::zeros_on(self.shape(), self.engine());
+        let out = NDArray::alloc_uninit_on(self.shape(), self.engine());
         let (sa, so) = (self.storage(), out.storage());
         self.engine().push_costed(
             "ndarray.softmax",
@@ -121,7 +131,7 @@ impl NDArray {
 
     /// Deep copy (lazy).
     pub fn copy(&self) -> NDArray {
-        let out = NDArray::zeros_on(self.shape(), self.engine());
+        let out = NDArray::alloc_uninit_on(self.shape(), self.engine());
         let (sa, so) = (self.storage(), out.storage());
         self.engine().push(
             "ndarray.copy",

@@ -1,0 +1,373 @@
+//! The size-bucketed storage pool (ISSUE 3): recycled `f32` buffers so
+//! the steady-state hot loop — a training step, a served batch — does
+//! zero heap allocation after warmup.
+//!
+//! Once a graph is bound, the set of buffer sizes the hot loop touches
+//! is *fixed*: plan storage blocks, workspace scratch, serve staging
+//! buffers and imperative-op results all recur with the exact same
+//! lengths every step.  The pool therefore shelves freed buffers by
+//! exact element count (`HashMap<len, Vec<buf>>`): an `acquire` of a
+//! previously-seen size pops a recycled buffer (a *hit*, no malloc, and
+//! for [`StoragePool::acquire_uninit`] no memset either), an unseen size
+//! falls through to the allocator (a *miss*).  Exact-size bucketing also
+//! keeps `Storage::len()` equal to the array size, so whole-buffer reads
+//! (`NDArray::to_vec`) never see pool slack.
+//!
+//! [`Storage`](super::Storage) returns its buffer here on drop, which is
+//! what closes the recycling loop: executor temporaries die at executor
+//! drop, serve staging [`Lease`]s die per batch, imperative-op results
+//! die when their `NDArray` goes out of scope — all of them feed the
+//! next step's acquires.
+//!
+//! Caps (`max_bytes` process-wide, `max_per_size` per shelf) bound the
+//! retained set; over-cap releases are dropped to the allocator and
+//! counted as *evictions*.  The `PALLAS_STORAGE_POOL` knob (`0` / `off`
+//! / `false` / `no`) disables recycling entirely: every acquire is a
+//! fresh allocation and every release a plain free, which is the
+//! baseline the `engine_micro` bench compares against.
+//!
+//! All counters are monotonic atomics; [`StoragePool::stats`] snapshots
+//! them.  Tests assert steady-state "zero allocations per step" through
+//! the miss counter: after warmup, a training step or a served batch
+//! must not add a single miss.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Snapshot of pool counters (monotonic since process start, except the
+/// `pooled_*` gauges which describe the current shelf contents).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Acquires served from a shelf (no heap allocation).
+    pub hits: u64,
+    /// Acquires that fell through to the allocator.
+    pub misses: u64,
+    /// Buffers offered back to the pool.
+    pub releases: u64,
+    /// Releases dropped because a cap was exceeded (or the pool is
+    /// disabled and the buffer was freed).
+    pub evictions: u64,
+    /// Buffers currently shelved.
+    pub pooled_buffers: u64,
+    /// Bytes currently shelved.
+    pub pooled_bytes: u64,
+}
+
+struct Shelves {
+    by_len: HashMap<usize, Vec<Box<[f32]>>>,
+    bytes: usize,
+    buffers: usize,
+}
+
+/// A recycling allocator for `f32` buffers, bucketed by exact length.
+pub struct StoragePool {
+    enabled: bool,
+    max_bytes: usize,
+    max_per_size: usize,
+    shelves: Mutex<Shelves>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    releases: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl StoragePool {
+    /// A pool with the default caps (512 MiB total, 32 buffers per size).
+    pub fn new(enabled: bool) -> Self {
+        Self::with_limits(enabled, 512 << 20, 32)
+    }
+
+    /// A pool with explicit caps.
+    pub fn with_limits(enabled: bool, max_bytes: usize, max_per_size: usize) -> Self {
+        StoragePool {
+            enabled,
+            max_bytes,
+            max_per_size,
+            shelves: Mutex::new(Shelves { by_len: HashMap::new(), bytes: 0, buffers: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            releases: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether recycling is active.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Pop a shelved buffer of exactly `len` elements, counting the
+    /// hit/miss either way.  Zero-length acquires are a counter no-op,
+    /// mirroring [`StoragePool::release`]: they never heap-allocate, and
+    /// the miss counter is the "allocations per step" acceptance metric.
+    fn take(&self, len: usize) -> Option<Box<[f32]>> {
+        if len == 0 {
+            return None;
+        }
+        if self.enabled {
+            let mut sh = self.shelves.lock().unwrap();
+            if let Some(buf) = sh.by_len.get_mut(&len).and_then(|v| v.pop()) {
+                sh.bytes -= len * 4;
+                sh.buffers -= 1;
+                drop(sh);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Some(buf);
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// A buffer of `len` elements whose contents are **unspecified**: a
+    /// recycled buffer keeps whatever its previous owner wrote (never
+    /// uninitialized memory — misses allocate zeroed).  For callers whose
+    /// first use fully overwrites the buffer.
+    pub fn acquire_uninit(&self, len: usize) -> Box<[f32]> {
+        self.take(len).unwrap_or_else(|| vec![0.0f32; len].into_boxed_slice())
+    }
+
+    /// A buffer of `len` elements filled with `fill`.  On a pool hit the
+    /// fill is an explicit memset; on a miss, `fill == 0.0` uses the
+    /// allocator's zeroed path.
+    pub fn acquire_filled(&self, len: usize, fill: f32) -> Box<[f32]> {
+        match self.take(len) {
+            Some(mut buf) => {
+                buf.fill(fill);
+                buf
+            }
+            None => vec![fill; len].into_boxed_slice(),
+        }
+    }
+
+    /// Offer a buffer back for recycling.  Dropped (freed) when the pool
+    /// is disabled or a cap would be exceeded.
+    pub fn release(&self, buf: Box<[f32]>) {
+        let len = buf.len();
+        if len == 0 {
+            return;
+        }
+        self.releases.fetch_add(1, Ordering::Relaxed);
+        if !self.enabled {
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let bytes = len * 4;
+        let mut sh = self.shelves.lock().unwrap();
+        let over_bytes = sh.bytes + bytes > self.max_bytes;
+        let shelf = sh.by_len.entry(len).or_default();
+        if over_bytes || shelf.len() >= self.max_per_size {
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            return; // `buf` drops to the allocator
+        }
+        shelf.push(buf);
+        sh.bytes += bytes;
+        sh.buffers += 1;
+    }
+
+    /// Snapshot the counters.
+    pub fn stats(&self) -> PoolStats {
+        let (pooled_buffers, pooled_bytes) = {
+            let sh = self.shelves.lock().unwrap();
+            (sh.buffers as u64, sh.bytes as u64)
+        };
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            releases: self.releases.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            pooled_buffers,
+            pooled_bytes,
+        }
+    }
+
+    /// Drop every shelved buffer (tests and memory-pressure hooks).
+    pub fn clear(&self) {
+        let mut sh = self.shelves.lock().unwrap();
+        sh.by_len.clear();
+        sh.bytes = 0;
+        sh.buffers = 0;
+    }
+}
+
+/// The process-wide pool every [`Storage`](super::Storage) draws from.
+/// Recycling is on by default; `PALLAS_STORAGE_POOL=0|off|false|no`
+/// disables it.
+pub fn global() -> &'static StoragePool {
+    static POOL: OnceLock<StoragePool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let enabled = match std::env::var("PALLAS_STORAGE_POOL") {
+            Ok(v) => {
+                !matches!(v.trim().to_ascii_lowercase().as_str(), "0" | "off" | "false" | "no")
+            }
+            Err(_) => true,
+        };
+        StoragePool::new(enabled)
+    })
+}
+
+/// An RAII scratch buffer leased from the [`global`] pool: derefs to
+/// `[f32]`, returns to the pool on drop.  The serving scatter path uses
+/// one per dispatched batch instead of a fresh `Vec`.
+pub struct Lease {
+    buf: Option<Box<[f32]>>,
+}
+
+impl Lease {
+    fn new(buf: Box<[f32]>) -> Self {
+        Lease { buf: Some(buf) }
+    }
+}
+
+impl std::ops::Deref for Lease {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        self.buf.as_deref().expect("lease alive")
+    }
+}
+
+impl std::ops::DerefMut for Lease {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.buf.as_deref_mut().expect("lease alive")
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        if let Some(buf) = self.buf.take() {
+            global().release(buf);
+        }
+    }
+}
+
+/// Lease a zero-filled scratch buffer of `len` elements from the global
+/// pool.
+pub fn lease_zeroed(len: usize) -> Lease {
+    Lease::new(global().acquire_filled(len, 0.0))
+}
+
+/// Lease a scratch buffer with unspecified contents (see
+/// [`StoragePool::acquire_uninit`]).
+pub fn lease_uninit(len: usize) -> Lease {
+    Lease::new(global().acquire_uninit(len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Unit tests construct private pools so their counters are immune to
+    // whatever the rest of the (parallel) test suite does to the global
+    // pool; global-counter assertions live in tests/plan_pool.rs behind
+    // a serialization lock.
+
+    #[test]
+    fn miss_then_hit_roundtrip() {
+        let p = StoragePool::new(true);
+        let a = p.acquire_filled(100, 1.5);
+        assert_eq!(a.len(), 100);
+        assert!(a.iter().all(|&x| x == 1.5));
+        assert_eq!(p.stats().misses, 1);
+        p.release(a);
+        assert_eq!(p.stats().pooled_buffers, 1);
+        let b = p.acquire_uninit(100);
+        assert_eq!(b.len(), 100);
+        let s = p.stats();
+        assert_eq!((s.hits, s.misses, s.pooled_buffers), (1, 1, 0));
+        // recycled + uninit: previous contents survive (no memset)
+        assert!(b.iter().all(|&x| x == 1.5));
+    }
+
+    #[test]
+    fn filled_acquire_scrubs_recycled_buffer() {
+        let p = StoragePool::new(true);
+        let mut a = p.acquire_filled(16, 0.0);
+        a.fill(9.0);
+        p.release(a);
+        let b = p.acquire_filled(16, 0.0);
+        assert!(b.iter().all(|&x| x == 0.0), "dirty recycled buffer leaked");
+    }
+
+    #[test]
+    fn exact_size_bucketing_never_cross_serves() {
+        let p = StoragePool::new(true);
+        p.release(p.acquire_uninit(64));
+        // A differently-sized acquire must not get the 64-elem buffer.
+        let b = p.acquire_uninit(32);
+        assert_eq!(b.len(), 32);
+        assert_eq!(p.stats().hits, 0);
+        let c = p.acquire_uninit(64);
+        assert_eq!(c.len(), 64);
+        assert_eq!(p.stats().hits, 1);
+    }
+
+    #[test]
+    fn per_size_and_byte_caps_evict() {
+        let p = StoragePool::with_limits(true, 4 * 10 * 4, 2);
+        // per-size cap of 2: hold three live buffers, then free all three
+        let held: Vec<_> = (0..3).map(|_| p.acquire_uninit(4)).collect();
+        for b in held {
+            p.release(b);
+        }
+        let s = p.stats();
+        assert_eq!(s.pooled_buffers, 2);
+        assert_eq!(s.evictions, 1);
+        // byte cap: 160 bytes total; a 40-elem release (160 B) exceeds
+        // what's left after the two 4-elem (32 B) residents.
+        p.release(p.acquire_uninit(40));
+        assert_eq!(p.stats().evictions, 2);
+    }
+
+    #[test]
+    fn disabled_pool_always_misses_and_frees() {
+        let p = StoragePool::new(false);
+        let a = p.acquire_uninit(8);
+        p.release(a);
+        let _b = p.acquire_uninit(8);
+        let s = p.stats();
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.pooled_buffers, 0);
+        assert_eq!(s.evictions, 1);
+    }
+
+    #[test]
+    fn zero_len_is_a_counter_no_op() {
+        let p = StoragePool::new(true);
+        let a = p.acquire_uninit(0);
+        assert_eq!(a.len(), 0);
+        p.release(a);
+        let s = p.stats();
+        assert_eq!(s.pooled_buffers, 0);
+        // zero-length buffers never heap-allocate: no miss, no release
+        assert_eq!((s.hits, s.misses, s.releases), (0, 0, 0));
+    }
+
+    #[test]
+    fn clear_empties_shelves() {
+        let p = StoragePool::new(true);
+        p.release(p.acquire_uninit(8));
+        p.release(p.acquire_uninit(16));
+        assert_eq!(p.stats().pooled_buffers, 2);
+        p.clear();
+        let s = p.stats();
+        assert_eq!((s.pooled_buffers, s.pooled_bytes), (0, 0));
+    }
+
+    #[test]
+    fn lease_derefs_and_recycles() {
+        // Functional check only (global pool: counters are shared).
+        let len = 12345; // unusual size to avoid cross-test interference
+        {
+            let mut l = lease_zeroed(len);
+            assert_eq!(l.len(), len);
+            assert!(l.iter().all(|&x| x == 0.0));
+            l[0] = 3.0;
+        }
+        // Dropped lease went back to the shelf: a fresh uninit lease of
+        // the same unusual size sees the sentinel (unless an unrelated
+        // thread raced us to it, which no other test does at this size).
+        let l2 = lease_uninit(len);
+        assert_eq!(l2.len(), len);
+    }
+}

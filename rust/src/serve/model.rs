@@ -113,7 +113,9 @@ impl Servable {
         let mut args: HashMap<String, NDArray> = HashMap::new();
         let mut data_shape = vec![batch];
         data_shape.extend_from_slice(&self.model.feat_shape);
-        let data = NDArray::zeros_on(&data_shape, self.engine.clone());
+        // Pool-backed, no zero-fill: every run() fully overwrites the
+        // data buffer via the scatter op before the forward reads it.
+        let data = NDArray::alloc_uninit_on(&data_shape, self.engine.clone());
         args.insert("data".into(), data.clone());
         args.insert(
             self.label_name.clone(),
@@ -162,10 +164,15 @@ impl BucketExec {
     /// before the forward: the engine orders scatter → forward → gather
     /// through the data/output tags, so the only wait is the final
     /// output read.
+    ///
+    /// Staging scratch is leased from the storage pool (ISSUE 3): the
+    /// lease returns to the pool when the scatter op drops it, so a
+    /// steady-state worker re-leases the same buffer every batch and
+    /// dispatch allocates nothing.
     pub fn run(&mut self, rows: &[&[f32]]) -> Vec<Vec<f32>> {
         assert!(rows.len() <= self.batch, "{} rows > bucket {}", rows.len(), self.batch);
         // Zero-filled staging: unused rows never leak a previous batch.
-        let mut staged = vec![0.0f32; self.batch * self.feat_len];
+        let mut staged = crate::ndarray::pool::lease_zeroed(self.batch * self.feat_len);
         for (i, r) in rows.iter().enumerate() {
             assert_eq!(r.len(), self.feat_len, "request row {i} has wrong feature length");
             staged[i * self.feat_len..(i + 1) * self.feat_len].copy_from_slice(r);
@@ -179,6 +186,7 @@ impl BucketExec {
                 // SAFETY: the engine granted the exclusive write on the
                 // data array's tag (same discipline as NDArray ops).
                 unsafe { storage.slice_mut() }.copy_from_slice(&staged);
+                // `staged` drops here: back to the pool for the next batch
             }),
         );
         self.exec.forward();
