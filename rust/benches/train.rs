@@ -1,0 +1,223 @@
+//! Data-parallel training bench (ISSUE 4): images/sec at devices in
+//! {1, 2, 4} over a fixed 4-shard decomposition, plus the per-layer
+//! push-overlap demonstration — overlap-on vs overlap-off step timing
+//! under a serialized "wire" whose per-key transfer latency is injected
+//! into the KVStore delivery path.
+//!
+//! ```text
+//! cargo bench --bench train
+//! BENCH_QUICK=1 cargo bench --bench train   # CI smoke (fewer samples)
+//! BENCH_OUT=/tmp/t.json cargo bench --bench train
+//! ```
+//!
+//! Emits `BENCH_train.json`: per-case records plus meta with
+//! `images_per_sec_dev{1,2,4}`, `overlap_on_ms`, `overlap_off_ms` and
+//! `overlap_speedup` (expected > 1: overlapped pushes start mid-backward
+//! and hide under compute; non-overlapped pushes queue behind the whole
+//! pass and pay the wire serially).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use mixnet::engine::{create, default_threads, EngineKind, EngineRef};
+use mixnet::executor::BindConfig;
+use mixnet::io::{synth, ArrayDataIter};
+use mixnet::kvstore::{Consistency, KVStore, LocalKVStore};
+use mixnet::models::mlp;
+use mixnet::module::{DataParallelTrainer, TrainerConfig};
+use mixnet::ndarray::NDArray;
+use mixnet::optimizer::Sgd;
+use mixnet::util::bench::{print_table, write_bench_json, BenchRecord, Bencher};
+
+const DIM: usize = 256;
+const CLASSES: usize = 8;
+const SHARDS: usize = 4;
+const SHARD_BATCH: usize = 16;
+
+/// Wraps a store with a serialized per-delivery transfer delay — a
+/// single "NIC" all gradient transfers must pass through, so the cost of
+/// *when* a push starts becomes visible in wall-clock.
+struct SlowWire {
+    inner: LocalKVStore,
+    wire: Mutex<()>,
+    delay: Duration,
+}
+
+impl KVStore for SlowWire {
+    fn init(&self, key: &str, value: &NDArray) -> mixnet::Result<()> {
+        self.inner.init(key, value)
+    }
+    fn push(&self, key: &str, grad: &NDArray, device: usize) -> mixnet::Result<()> {
+        self.inner.push(key, grad, device)
+    }
+    fn push_part(&self, key: &str, grad: &[f32], part: usize) -> mixnet::Result<()> {
+        {
+            let _nic = self.wire.lock().unwrap();
+            std::thread::sleep(self.delay);
+        }
+        self.inner.push_part(key, grad, part)
+    }
+    fn pull(&self, key: &str, out: &NDArray, device: usize) -> mixnet::Result<()> {
+        self.inner.pull(key, out, device)
+    }
+    fn flush(&self) {
+        self.inner.flush()
+    }
+    fn num_devices(&self) -> usize {
+        self.inner.num_devices()
+    }
+    fn consistency(&self) -> Consistency {
+        self.inner.consistency()
+    }
+}
+
+fn dataset(examples: usize, engine: &EngineRef) -> ArrayDataIter {
+    let ds = synth::class_clusters(examples, CLASSES, DIM, 0.3, 11);
+    ArrayDataIter::new(ds.features, ds.labels, &[DIM], SHARDS * SHARD_BATCH, true, engine.clone())
+}
+
+fn build_trainer(
+    engine: &EngineRef,
+    devices: usize,
+    overlap: bool,
+    store: Arc<dyn KVStore>,
+) -> DataParallelTrainer {
+    let model = mlp(&[256, 128], DIM, CLASSES);
+    let shapes = model.param_shapes(SHARD_BATCH).expect("shapes");
+    DataParallelTrainer::bind(
+        &model.symbol,
+        engine.clone(),
+        SHARD_BATCH,
+        &[DIM],
+        &shapes,
+        store,
+        TrainerConfig { devices, shards: SHARDS, overlap, bind: BindConfig::default(), seed: 5 },
+    )
+    .expect("bind trainer")
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let b = if quick {
+        Bencher { warmup: 1, samples: 3, max_total: Duration::from_secs(20) }
+    } else {
+        Bencher { warmup: 2, samples: 10, max_total: Duration::from_secs(120) }
+    };
+    let examples = if quick { 512 } else { 2048 };
+    let threads = default_threads().max(4);
+    let mut rows = Vec::new();
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut meta: Vec<(&str, String)> = vec![
+        ("bench", "train".to_string()),
+        ("quick", quick.to_string()),
+        ("model", format!("mlp 256-256-128-{CLASSES}")),
+        ("global_batch", (SHARDS * SHARD_BATCH).to_string()),
+        ("shards", SHARDS.to_string()),
+    ];
+
+    // ---- images/sec at devices in {1, 2, 4}, fixed 4-shard math ------
+    let mut per_dev: HashMap<usize, f64> = HashMap::new();
+    for devices in [1usize, 2, 4] {
+        let engine = create(EngineKind::Threaded, threads);
+        let store = Arc::new(LocalKVStore::new(
+            engine.clone(),
+            SHARDS,
+            Arc::new(Sgd::new(0.1).rescale(1.0 / SHARDS as f32)),
+            Consistency::Sequential,
+        ));
+        let mut trainer = build_trainer(&engine, devices, true, store);
+        let mut iter = dataset(examples, &engine);
+        let per_epoch =
+            (examples / (SHARDS * SHARD_BATCH)) * SHARDS * SHARD_BATCH;
+        let stats = b.run(&format!("train dev{devices}"), || {
+            trainer.fit(&mut iter, 1).expect("fit");
+        });
+        let ips = per_epoch as f64 / stats.median_s();
+        rows.push(vec![
+            format!("{devices} device(s), {SHARDS} shards, epoch of {per_epoch} images"),
+            format!("{:.1} ms", stats.median_ms()),
+            format!("{ips:.0} img/s"),
+        ]);
+        records.push(BenchRecord::from_stats(
+            "train.mlp_epoch",
+            &format!("dev{devices}x{SHARDS}shards"),
+            devices,
+            &stats,
+            0.0,
+        ));
+        per_dev.insert(devices, ips);
+    }
+    for devices in [1usize, 2, 4] {
+        let key: &'static str = match devices {
+            1 => "images_per_sec_dev1",
+            2 => "images_per_sec_dev2",
+            _ => "images_per_sec_dev4",
+        };
+        meta.push((key, format!("{:.1}", per_dev[&devices])));
+    }
+
+    // ---- overlap-on vs overlap-off under a serialized slow wire ------
+    // 500us per gradient transfer through one mutex-held "NIC": with
+    // overlap on, transfers start the moment each layer's gradient
+    // retires and pipeline under the rest of backward; with overlap off
+    // every transfer waits for the whole pass and the wire cost lands
+    // serially on the step.
+    let delay = Duration::from_micros(500);
+    let mut overlap_ms: HashMap<bool, f64> = HashMap::new();
+    for overlap in [true, false] {
+        let engine = create(EngineKind::Threaded, threads);
+        let store = Arc::new(SlowWire {
+            inner: LocalKVStore::new(
+                engine.clone(),
+                SHARDS,
+                Arc::new(Sgd::new(0.1).rescale(1.0 / SHARDS as f32)),
+                Consistency::Sequential,
+            ),
+            wire: Mutex::new(()),
+            delay,
+        });
+        let mut trainer = build_trainer(&engine, 2, overlap, store);
+        let small = if quick { 256 } else { 512 };
+        let mut iter = dataset(small, &engine);
+        let name = if overlap { "overlap-on" } else { "overlap-off" };
+        let stats = b.run(name, || {
+            trainer.fit(&mut iter, 1).expect("fit");
+        });
+        let batches = small / (SHARDS * SHARD_BATCH);
+        let step_ms = stats.median_ms() / batches as f64;
+        rows.push(vec![
+            format!("{name}: per-layer push, 500us/key serialized wire"),
+            format!("{step_ms:.2} ms/step"),
+            String::new(),
+        ]);
+        records.push(BenchRecord::from_stats(
+            if overlap { "train.overlap_on" } else { "train.overlap_off" },
+            "dev2x4shards+wire",
+            2,
+            &stats,
+            0.0,
+        ));
+        overlap_ms.insert(overlap, step_ms);
+    }
+    let speedup = overlap_ms[&false] / overlap_ms[&true];
+    meta.push(("overlap_on_ms", format!("{:.3}", overlap_ms[&true])));
+    meta.push(("overlap_off_ms", format!("{:.3}", overlap_ms[&false])));
+    meta.push(("overlap_speedup", format!("{speedup:.2}")));
+    rows.push(vec![
+        "overlap speedup (off/on step time)".into(),
+        format!("{speedup:.2}x"),
+        String::new(),
+    ]);
+
+    print_table(
+        "data-parallel training (ISSUE 4)",
+        &["case", "time", "throughput"],
+        &rows,
+    );
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_train.json".to_string());
+    if let Err(e) = write_bench_json(&out, &meta, &records) {
+        eprintln!("failed to write {out}: {e}");
+    }
+}

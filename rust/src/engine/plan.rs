@@ -34,6 +34,17 @@
 //! boundary vars and are therefore serialized like any two conflicting
 //! ops.  The mutable replay state (countdowns, ready stack, remaining
 //! counter) is reset at the start of each replay under that exclusion.
+//!
+//! **Grad-retirement notification.**  Because a replay holds the
+//! boundary write grant for the *whole* pass, an external op that reads
+//! a gradient var cannot start until the entire backward plan retires —
+//! which would defeat per-layer communication overlap.  The executor
+//! therefore composes notification into the plan bodies themselves: the
+//! body of each gradient's last-writer op fires the executor's
+//! [grad-ready hook](crate::executor::GradReadyHook) right after the
+//! kernel runs, *inside* the replay, where the final value is written
+//! and reading it is race-free.  The data-parallel trainer uses this to
+//! start KVStore pushes mid-backward (paper §5).
 
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;

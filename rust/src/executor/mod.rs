@@ -87,6 +87,62 @@ impl BindConfig {
     }
 }
 
+/// Per-parameter gradient-ready hook (data-parallel training): invoked
+/// with `(grad name, step, ok)` on the engine worker that just wrote
+/// the gradient's **final** value for the current backward pass — i.e.
+/// the moment the layer's gradient retires, while the rest of backward
+/// is still running on other workers.
+///
+/// With `ok == true`, the named gradient buffer is safe to *read*
+/// directly inside the hook (nothing later in the pass writes it, and
+/// engine ordering keeps all external writers behind the pass), which
+/// is what lets a KVStore push start mid-backward instead of queuing
+/// behind the whole pass.  `ok == false` means the writing kernel
+/// panicked: the hook still fires (so a trainer waiting on a push latch
+/// is never stranded) but the buffer contents are unspecified — treat
+/// the pass as failed, do not deliver the gradient.  (A panic in an
+/// *upstream* op follows the engine-wide report-and-continue policy and
+/// is not reflected here.)  The hook runs on the critical path of the
+/// pass — keep it short (copy out and return); schedule heavy work as
+/// engine ops.
+pub type GradReadyHook = Arc<dyn Fn(&str, u64, bool) + Send + Sync>;
+
+/// Shared, swappable hook slot captured by the compiled op bodies.
+#[derive(Default)]
+struct HookSlot(std::sync::RwLock<Option<GradReadyHook>>);
+
+impl HookSlot {
+    fn fire(&self, names: &[String], step: u64, ok: bool) {
+        let hook = self.0.read().unwrap().clone();
+        if let Some(h) = hook {
+            for n in names {
+                h(n, step, ok);
+            }
+        }
+    }
+}
+
+/// Run a template and then fire the grad-ready hooks for the gradients
+/// whose final value it wrote.  The hooks fire even when the kernel
+/// panicked (with `ok = false`; the panic is re-raised afterwards) so a
+/// wedged kernel can never strand a trainer waiting on its push latch —
+/// and never silently delivers a half-written gradient either.
+fn run_template_with_hooks(
+    t: &NodeTemplate,
+    training: bool,
+    step: u64,
+    slot: &HookSlot,
+    names: &[String],
+) {
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_template(t, training, step)
+    }));
+    slot.fire(names, step, r.is_ok());
+    if let Err(e) = r {
+        std::panic::resume_unwind(e);
+    }
+}
+
 /// Prepared per-node execution template.
 struct NodeTemplate {
     op: Op,
@@ -160,6 +216,11 @@ pub struct Executor {
     /// falls back to pushing one engine op per node.
     fwd_plan: Option<Arc<RunPlan>>,
     bwd_plan: Option<Arc<RunPlan>>,
+    /// Swappable grad-ready hook, shared with the compiled op bodies.
+    grad_hook: Arc<HookSlot>,
+    /// node id -> gradients whose *final* value that node writes (the
+    /// last writer of each grad var in program order).
+    grad_ready_at: HashMap<usize, Vec<String>>,
     /// Keep-alives for the planner storage blocks and dedicated scratch:
     /// templates and plans hold their `VarHandle`s, and a handle only
     /// orders operations while its variable is alive (the slab drops
@@ -355,6 +416,35 @@ impl Executor {
         let num_forward =
             if graph.num_forward == 0 { graph.nodes.len() } else { graph.num_forward };
 
+        // Grad-ready hook wiring (data-parallel overlap): find, for every
+        // gradient array, the node that writes its final value — the last
+        // writer of its var in program order (gradient accumulation via
+        // AddN makes that the accumulator).  Those nodes' bodies fire the
+        // hook right after executing, on both scheduling paths.
+        let grad_hook = Arc::new(HookSlot::default());
+        let grad_ready_at: HashMap<usize, Vec<String>> = {
+            let by_var: HashMap<u64, &String> =
+                grads.iter().map(|(n, a)| (a.var().id(), n)).collect();
+            let mut last_writer: HashMap<&String, usize> = HashMap::new();
+            for (id, tmpl) in templates.iter().enumerate() {
+                if let Some(t) = tmpl {
+                    for v in &t.write_vars {
+                        if let Some(&name) = by_var.get(&v.id()) {
+                            last_writer.insert(name, id);
+                        }
+                    }
+                }
+            }
+            let mut at: HashMap<usize, Vec<String>> = HashMap::new();
+            for (name, id) in last_writer {
+                at.entry(id).or_default().push(name.clone());
+            }
+            for names in at.values_mut() {
+                names.sort(); // deterministic fire order within one node
+            }
+            at
+        };
+
         // 7. compile the static run-plans (ISSUE 3): the same (reads,
         //    writes, cost) tuples the dynamic path would push, with
         //    reusable bodies — replayed as one engine op per pass.
@@ -367,12 +457,22 @@ impl Executor {
                     None => continue,
                 };
                 let body_t = Arc::clone(&t);
+                let body: crate::engine::PlanBody = match grad_ready_at.get(&id) {
+                    Some(names) => {
+                        let names = names.clone();
+                        let slot = Arc::clone(&grad_hook);
+                        Arc::new(move |step: u64| {
+                            run_template_with_hooks(&body_t, training, step, &slot, &names)
+                        })
+                    }
+                    None => Arc::new(move |step: u64| run_template(&body_t, training, step)),
+                };
                 let spec = PlanOpSpec {
                     name: t.name,
                     reads: t.read_vars.clone(),
                     writes: t.write_vars.clone(),
                     cost: t.cost,
-                    body: Arc::new(move |step: u64| run_template(&body_t, training, step)),
+                    body,
                 };
                 if id < num_forward {
                     fwd_specs.push(spec);
@@ -405,6 +505,8 @@ impl Executor {
             num_forward,
             fwd_plan,
             bwd_plan,
+            grad_hook,
+            grad_ready_at,
             _storage_arrays: storage_arrays,
             _scratch_arrays: scratch_arrays,
         })
@@ -417,12 +519,17 @@ impl Executor {
         };
         let training = self.training;
         let t = Arc::clone(&tmpl);
+        let hooks = self.grad_ready_at.get(&id).cloned();
+        let slot = Arc::clone(&self.grad_hook);
         self.engine.push_costed(
             tmpl.name,
             tmpl.read_vars.clone(),
             tmpl.write_vars.clone(),
             tmpl.cost,
-            Box::new(move || run_template(&t, training, step)),
+            Box::new(move || match &hooks {
+                Some(names) => run_template_with_hooks(&t, training, step, &slot, names),
+                None => run_template(&t, training, step),
+            }),
         );
     }
 
@@ -431,6 +538,20 @@ impl Executor {
     /// dynamic path — bitwise-identical either way.
     pub fn forward(&self) {
         let step = self.step.fetch_add(1, Ordering::Relaxed) + 1;
+        self.dispatch_forward(step);
+    }
+
+    /// [`Executor::forward`] with an explicit step number.  The step
+    /// seeds step-dependent ops (Dropout masks), so a data-parallel
+    /// trainer passes the same *round* number to every replica to keep
+    /// per-shard computation identical whatever the device count.
+    /// Subsequent [`Executor::forward`] calls continue from `step`.
+    pub fn forward_at(&self, step: u64) {
+        self.step.store(step, Ordering::Relaxed);
+        self.dispatch_forward(step);
+    }
+
+    fn dispatch_forward(&self, step: u64) {
         match &self.fwd_plan {
             Some(p) => self.engine.run_plan(p, step),
             None => {
@@ -443,10 +564,16 @@ impl Executor {
 
     /// Schedule the backward pass (returns immediately).
     pub fn backward(&self) -> Result<()> {
+        let step = self.step.load(Ordering::Relaxed);
+        self.backward_at(step)
+    }
+
+    /// [`Executor::backward`] with an explicit step number (pairs with
+    /// [`Executor::forward_at`]).
+    pub fn backward_at(&self, step: u64) -> Result<()> {
         if !self.training {
             return Err(Error::Bind("executor bound with training=false".into()));
         }
-        let step = self.step.load(Ordering::Relaxed);
         match &self.bwd_plan {
             Some(p) => self.engine.run_plan(p, step),
             None => {
@@ -456,6 +583,25 @@ impl Executor {
             }
         }
         Ok(())
+    }
+
+    /// The step number of the most recently scheduled forward pass.
+    pub fn steps(&self) -> u64 {
+        self.step.load(Ordering::Relaxed)
+    }
+
+    /// Install the grad-ready hook (see [`GradReadyHook`]): it fires for
+    /// every parameter gradient, on every backward pass, the moment that
+    /// gradient's final value has been written.  Replaces any previous
+    /// hook; affects passes scheduled after the call.
+    pub fn set_grad_ready_hook(&self, hook: GradReadyHook) {
+        *self.grad_hook.0.write().unwrap() = Some(hook);
+    }
+
+    /// Remove the grad-ready hook (passes already in flight may still
+    /// observe the old hook).
+    pub fn clear_grad_ready_hook(&self) {
+        *self.grad_hook.0.write().unwrap() = None;
     }
 
     /// Forward + backward in one call (paper's `net.forward_backward()`).
@@ -794,6 +940,79 @@ mod tests {
         args.remove("fc1_bias");
         let err = Executor::bind(&mlp_symbol(), engine, args, &PARAMS, BindConfig::default());
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn grad_ready_hook_fires_once_per_grad_with_final_value() {
+        // On both scheduling paths: every parameter gradient fires
+        // exactly once per backward, and the buffer read inside the hook
+        // already holds the final value (== what a post-wait read sees).
+        for replay in [true, false] {
+            let engine = create(EngineKind::Threaded, 4);
+            let exec = Executor::bind(
+                &mlp_symbol(),
+                Arc::clone(&engine),
+                mlp_args(8, Arc::clone(&engine), 13),
+                &PARAMS,
+                BindConfig { replay, ..Default::default() },
+            )
+            .unwrap();
+            let seen: Arc<std::sync::Mutex<Vec<(String, u64, Vec<f32>)>>> =
+                Arc::new(std::sync::Mutex::new(Vec::new()));
+            let s2 = Arc::clone(&seen);
+            let grads: std::collections::HashMap<String, (Arc<Storage>, usize)> = PARAMS
+                .iter()
+                .map(|&p| {
+                    let g = exec.grad(p).unwrap();
+                    (p.to_string(), (g.storage(), g.size()))
+                })
+                .collect();
+            exec.set_grad_ready_hook(Arc::new(move |name, step, ok| {
+                assert!(ok, "kernel did not panic, hook must report ok");
+                let (st, n) = &grads[name];
+                // SAFETY: the hook contract — the gradient's final value
+                // is written and nothing else touches it mid-pass.
+                let v = unsafe { st.slice()[..*n].to_vec() };
+                s2.lock().unwrap().push((name.to_string(), step, v));
+            }));
+            exec.forward_at(7);
+            exec.backward_at(7).unwrap();
+            exec.wait();
+            let fired = seen.lock().unwrap().clone();
+            assert_eq!(fired.len(), PARAMS.len(), "replay={replay}");
+            for p in PARAMS {
+                let hits: Vec<_> = fired.iter().filter(|(n, _, _)| n == p).collect();
+                assert_eq!(hits.len(), 1, "{p} fired {} times", hits.len());
+                let (_, step, v) = hits[0];
+                assert_eq!(*step, 7);
+                assert_eq!(*v, exec.grad(p).unwrap().to_vec(), "{p}: hook saw stale grad");
+            }
+            // cleared hook fires nothing
+            exec.clear_grad_ready_hook();
+            seen.lock().unwrap().clear();
+            exec.forward();
+            exec.backward().unwrap();
+            exec.wait();
+            assert!(seen.lock().unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn explicit_step_then_legacy_forward_stays_monotonic() {
+        let engine = create(EngineKind::Threaded, 2);
+        let exec = Executor::bind(
+            &mlp_symbol(),
+            Arc::clone(&engine),
+            mlp_args(4, engine, 3),
+            &PARAMS,
+            BindConfig::default(),
+        )
+        .unwrap();
+        exec.forward_at(41);
+        assert_eq!(exec.steps(), 41);
+        exec.forward();
+        assert_eq!(exec.steps(), 42);
+        exec.wait();
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! ILSVRC12 — see DESIGN.md §Substitutions).
 
 pub mod checkpoint;
+pub mod partition;
 pub mod prefetch;
 pub mod recordio;
 pub mod synth;
@@ -12,6 +13,7 @@ use crate::error::Result;
 use crate::ndarray::NDArray;
 use crate::util::Rng;
 
+pub use partition::{split_batch, PartitionIter};
 pub use prefetch::PrefetchIter;
 pub use recordio::{Example, RecordReader, RecordWriter};
 

@@ -1,0 +1,231 @@
+//! Deterministic batch partitioning for data-parallel training
+//! (paper §2.3: each device computes the gradient on its slice of the
+//! minibatch).
+//!
+//! [`PartitionIter`] wraps any [`DataIter`] and splits every global batch
+//! into `shards` contiguous sub-batches ("device shards").  The split is
+//! a pure function of the batch contents and the shard count — example
+//! blocks are assigned in order, sizes differing by at most one — so the
+//! decomposition is stable across runs, thread counts and *device*
+//! counts: the data-parallel trainer fixes the shard count and lets the
+//! number of replicas vary, which is what makes its results bitwise
+//! invariant to how many devices consume the shards.
+
+use std::collections::VecDeque;
+
+use crate::ndarray::NDArray;
+
+use super::{DataBatch, DataIter};
+
+/// The canonical shard geometry: contiguous `(row offset, row count)`
+/// ranges splitting `rows` into `shards` parts.
+///
+/// With `rows = q*shards + r`, the first `r` shards get `q + 1` rows and
+/// the rest get `q` (sizes differ by at most one); empty ranges
+/// (`rows < shards`) are omitted.  This is the single source of truth
+/// for shard assignment — [`split_batch`] materializes these ranges as
+/// sub-batches, and the data-parallel trainer copies the same ranges
+/// straight into its replica buffers (no intermediate arrays on the hot
+/// path) — so both views of a batch are bitwise identical by
+/// construction.
+pub fn shard_ranges(rows: usize, shards: usize) -> Vec<(usize, usize)> {
+    assert!(shards >= 1, "shard_ranges: shards must be >= 1");
+    let (q, r) = (rows / shards, rows % shards);
+    let mut out = Vec::with_capacity(shards.min(rows));
+    let mut off = 0usize;
+    for s in 0..shards {
+        let n = q + usize::from(s < r);
+        if n == 0 {
+            continue;
+        }
+        out.push((off, n));
+        off += n;
+    }
+    out
+}
+
+/// Split one batch into `shards` contiguous sub-batches (see
+/// [`shard_ranges`] for the geometry; the returned vector has
+/// `min(shards, rows)` entries).
+pub fn split_batch(batch: &DataBatch, shards: usize) -> Vec<DataBatch> {
+    let rows = batch.data.shape()[0];
+    debug_assert_eq!(rows, batch.label.size(), "data/label row mismatch");
+    let feat: usize = batch.data.shape()[1..].iter().product();
+    let data = batch.data.to_vec();
+    let label = batch.label.to_vec();
+    let engine = batch.data.engine();
+    shard_ranges(rows, shards)
+        .into_iter()
+        .map(|(off, n)| {
+            let mut shape = vec![n];
+            shape.extend_from_slice(&batch.data.shape()[1..]);
+            let d = data[off * feat..(off + n) * feat].to_vec();
+            let l = label[off..off + n].to_vec();
+            DataBatch {
+                data: NDArray::from_vec_on(&shape, d, engine.clone()),
+                label: NDArray::from_vec_on(&[n], l, engine.clone()),
+            }
+        })
+        .collect()
+}
+
+/// Iterator adapter yielding per-device shards of an inner iterator's
+/// batches (see the module docs).
+///
+/// Use [`PartitionIter::next_shards`] to get one round's shard group at
+/// a time (what the trainer consumes), or the [`DataIter`] impl to
+/// stream the same shards one by one in shard order.
+pub struct PartitionIter<'a> {
+    inner: &'a mut dyn DataIter,
+    shards: usize,
+    queue: VecDeque<DataBatch>,
+}
+
+impl<'a> PartitionIter<'a> {
+    /// Wrap `inner`, splitting each of its batches into `shards` parts.
+    pub fn new(inner: &'a mut dyn DataIter, shards: usize) -> Self {
+        assert!(shards >= 1, "PartitionIter: shards must be >= 1");
+        PartitionIter { inner, shards, queue: VecDeque::new() }
+    }
+
+    /// The configured shard count.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The next global batch, split into shards (at most `shards`
+    /// entries; fewer when the batch has fewer rows than shards).
+    /// `None` at epoch end.
+    pub fn next_shards(&mut self) -> Option<Vec<DataBatch>> {
+        let b = self.inner.next_batch()?;
+        Some(split_batch(&b, self.shards))
+    }
+}
+
+impl DataIter for PartitionIter<'_> {
+    fn next_batch(&mut self) -> Option<DataBatch> {
+        if self.queue.is_empty() {
+            let group = self.next_shards()?;
+            self.queue.extend(group);
+        }
+        self.queue.pop_front()
+    }
+
+    fn reset(&mut self) {
+        self.queue.clear();
+        self.inner.reset();
+    }
+
+    fn batch_size(&self) -> usize {
+        // largest shard size (the first shards get the remainder rows)
+        self.inner.batch_size().div_ceil(self.shards)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::default_engine;
+    use crate::io::ArrayDataIter;
+
+    fn iter(n: usize, batch: usize) -> ArrayDataIter {
+        let feats: Vec<f32> = (0..n * 2).map(|v| v as f32).collect();
+        let labels: Vec<f32> = (0..n).map(|v| v as f32).collect();
+        ArrayDataIter::new(feats, labels, &[2], batch, false, default_engine())
+    }
+
+    #[test]
+    fn even_split_preserves_rows_in_order() {
+        let mut it = iter(8, 8);
+        let mut p = PartitionIter::new(&mut it, 4);
+        let shards = p.next_shards().unwrap();
+        assert_eq!(shards.len(), 4);
+        let mut labels = Vec::new();
+        for s in &shards {
+            assert_eq!(s.data.shape(), &[2, 2]);
+            assert_eq!(s.label.size(), 2);
+            labels.extend(s.label.to_vec());
+        }
+        assert_eq!(labels, (0..8).map(|v| v as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn uneven_split_sizes_differ_by_at_most_one() {
+        // 10 rows over 4 shards -> [3, 3, 2, 2]
+        let mut it = iter(10, 10);
+        let mut p = PartitionIter::new(&mut it, 4);
+        let shards = p.next_shards().unwrap();
+        let sizes: Vec<usize> = shards.iter().map(|s| s.label.size()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+        // contiguous coverage, no row lost or duplicated
+        let all: Vec<f32> = shards.iter().flat_map(|s| s.label.to_vec()).collect();
+        assert_eq!(all, (0..10).map(|v| v as f32).collect::<Vec<_>>());
+        // features travel with their rows
+        assert_eq!(shards[1].data.to_vec()[0], 6.0, "row 3 starts at feature 6");
+    }
+
+    #[test]
+    fn shard_ranges_geometry() {
+        assert_eq!(shard_ranges(8, 4), vec![(0, 2), (2, 2), (4, 2), (6, 2)]);
+        assert_eq!(shard_ranges(10, 4), vec![(0, 3), (3, 3), (6, 2), (8, 2)]);
+        assert_eq!(shard_ranges(2, 4), vec![(0, 1), (1, 1)]);
+        assert_eq!(shard_ranges(5, 1), vec![(0, 5)]);
+        // covers exactly, in order
+        for (rows, shards) in [(17usize, 5usize), (64, 8), (3, 7)] {
+            let rs = shard_ranges(rows, shards);
+            let mut expect = 0;
+            for (off, n) in rs {
+                assert_eq!(off, expect);
+                assert!(n >= 1);
+                expect += n;
+            }
+            assert_eq!(expect, rows);
+        }
+    }
+
+    #[test]
+    fn tiny_batch_omits_empty_shards() {
+        let mut it = iter(2, 2);
+        let mut p = PartitionIter::new(&mut it, 4);
+        let shards = p.next_shards().unwrap();
+        assert_eq!(shards.len(), 2);
+        assert!(shards.iter().all(|s| s.label.size() == 1));
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        for _ in 0..2 {
+            let mut a = iter(12, 6);
+            let mut b = iter(12, 6);
+            let mut pa = PartitionIter::new(&mut a, 3);
+            let mut pb = PartitionIter::new(&mut b, 3);
+            while let (Some(ga), Some(gb)) = (pa.next_shards(), pb.next_shards()) {
+                for (x, y) in ga.iter().zip(&gb) {
+                    assert_eq!(x.data.to_vec(), y.data.to_vec());
+                    assert_eq!(x.label.to_vec(), y.label.to_vec());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn data_iter_impl_flattens_shards_in_order() {
+        let mut plain = iter(8, 4);
+        let mut sharded = iter(8, 4);
+        let mut p = PartitionIter::new(&mut sharded, 2);
+        assert_eq!(p.batch_size(), 2);
+        let mut flat = Vec::new();
+        while let Some(b) = p.next_batch() {
+            assert_eq!(b.label.size(), 2);
+            flat.extend(b.label.to_vec());
+        }
+        let mut expect = Vec::new();
+        while let Some(b) = plain.next_batch() {
+            expect.extend(b.label.to_vec());
+        }
+        assert_eq!(flat, expect, "shards concatenate back to the inner stream");
+        // reset restarts cleanly
+        p.reset();
+        assert_eq!(p.next_batch().unwrap().label.to_vec(), vec![0.0, 1.0]);
+    }
+}

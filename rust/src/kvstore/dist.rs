@@ -15,18 +15,32 @@ use std::net::TcpStream;
 use std::sync::{Arc, Mutex};
 
 use super::wire::{read_msg, write_msg, Msg};
-use super::{Consistency, KVStore};
+use super::{Consistency, KVStore, PartStage};
 use crate::engine::EngineRef;
 use crate::error::{Error, Result};
 use crate::ndarray::NDArray;
 
+/// Last fetched weight per key (round-stamped): within one round every
+/// device pulls the same watermark, so only the first pull pays an RPC
+/// — the rest copy from this cache (the distributed analogue of
+/// `LocalKVStore`'s version-stamped pulls).  Sequential only; eventual
+/// pulls always refetch for freshness.
+struct PullCache {
+    /// Watermark the cached bytes were fetched at (`u64::MAX` = empty).
+    version: u64,
+    data: Vec<f32>,
+}
+
 struct KeyState {
-    /// Level-1 accumulation buffer.
+    /// Level-1 accumulation buffer (legacy arrival-order path).
     accum: NDArray,
     pushed: usize,
+    /// Device-sliced staging for the current round (`push_part` path).
+    stage: PartStage,
     /// Number of completed level-2 push rounds (the pull watermark).
     rounds: u64,
     shape: Vec<usize>,
+    cache: Arc<Mutex<PullCache>>,
 }
 
 struct Conn {
@@ -46,6 +60,9 @@ pub struct DistKVStore {
     engine: EngineRef,
     machine: u32,
     num_devices: usize,
+    /// Factor applied to the level-1 merged gradient before it is
+    /// shipped (see [`DistKVStore::with_grad_rescale`]).
+    grad_rescale: f32,
     consistency: Consistency,
     keys: Mutex<HashMap<String, KeyState>>,
     /// Connection used by engine ops (push/pull).
@@ -80,6 +97,7 @@ impl DistKVStore {
             engine,
             machine,
             num_devices: num_devices.max(1),
+            grad_rescale: 1.0,
             consistency,
             keys: Mutex::new(HashMap::new()),
             conn: Arc::new(Conn { stream: Mutex::new(stream) }),
@@ -87,6 +105,19 @@ impl DistKVStore {
             barrier_round: Mutex::new(0),
             conn_var,
         })
+    }
+
+    /// Scale the level-1 merged gradient by `f` before shipping it.
+    ///
+    /// The merge is a *sum* over the machine's device shards; with
+    /// mean-normalized per-shard gradients that sum is `devices x` the
+    /// global-batch mean, so a data-parallel worker passes
+    /// `1.0 / devices` to keep the server-side learning rate meaningful
+    /// independent of the local device count (the local trainer achieves
+    /// the same via its updater's `rescale`).
+    pub fn with_grad_rescale(mut self, f: f32) -> Self {
+        self.grad_rescale = f;
+        self
     }
 
     /// Epoch barrier across machines (round-robin id).
@@ -115,8 +146,13 @@ impl KVStore for DistKVStore {
                 KeyState {
                     accum: NDArray::zeros_on(value.shape(), self.engine.clone()),
                     pushed: 0,
+                    stage: PartStage::new(self.num_devices),
                     rounds: 0,
                     shape: value.shape().to_vec(),
+                    cache: Arc::new(Mutex::new(PullCache {
+                        version: u64::MAX,
+                        data: Vec::new(),
+                    })),
                 },
             );
         }
@@ -130,6 +166,9 @@ impl KVStore for DistKVStore {
     fn push(&self, key: &str, grad: &NDArray, _device: usize) -> Result<()> {
         let mut keys = self.keys.lock().unwrap();
         let st = keys.get_mut(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
+        if st.stage.in_progress() {
+            return Err(Error::kv(format!("key '{key}': round mixes push and push_part")));
+        }
         if st.pushed == 0 {
             st.accum.zero_();
         }
@@ -143,6 +182,7 @@ impl KVStore for DistKVStore {
             let conn = Arc::clone(&self.conn);
             let key = key.to_string();
             let machine = self.machine;
+            let rescale = self.grad_rescale;
             let accum = st.accum.clone();
             let storage = accum.storage();
             self.engine.push(
@@ -150,7 +190,12 @@ impl KVStore for DistKVStore {
                 vec![accum.var()],
                 vec![self.conn_var],
                 Box::new(move || {
-                    let value = unsafe { storage.slice() }.to_vec();
+                    let mut value = unsafe { storage.slice() }.to_vec();
+                    if rescale != 1.0 {
+                        for v in value.iter_mut() {
+                            *v *= rescale;
+                        }
+                    }
                     let _ = conn.rpc(&Msg::Push { key, value, machine });
                 }),
             );
@@ -158,8 +203,55 @@ impl KVStore for DistKVStore {
         Ok(())
     }
 
+    fn push_part(&self, key: &str, grad: &[f32], part: usize) -> Result<()> {
+        let mut keys = self.keys.lock().unwrap();
+        let st = keys.get_mut(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
+        if st.pushed > 0 {
+            return Err(Error::kv(format!("key '{key}': round mixes push and push_part")));
+        }
+        let n: usize = st.shape.iter().product();
+        let parts = match st.stage.stage(key, grad, part, n)? {
+            None => return Ok(()),
+            Some(parts) => parts,
+        };
+        st.rounds += 1;
+        // Round complete: ship ONE aggregated message, reduced in part
+        // order inside the wire op (writes only the connection var, so
+        // the transfer overlaps whatever backward is still running —
+        // there is no dependency on any gradient var).
+        let conn = Arc::clone(&self.conn);
+        let key = key.to_string();
+        let machine = self.machine;
+        let rescale = self.grad_rescale;
+        self.engine.push(
+            "kv.dist_push_parts",
+            vec![],
+            vec![self.conn_var],
+            Box::new(move || {
+                let mut value: Vec<f32> = Vec::new();
+                for (i, part) in parts.into_iter().enumerate() {
+                    if i == 0 {
+                        value = part.to_vec();
+                    } else {
+                        for (d, s) in value.iter_mut().zip(part.iter()) {
+                            *d += *s;
+                        }
+                    }
+                    crate::ndarray::pool::global().release(part);
+                }
+                if rescale != 1.0 {
+                    for v in value.iter_mut() {
+                        *v *= rescale;
+                    }
+                }
+                let _ = conn.rpc(&Msg::Push { key, value, machine });
+            }),
+        );
+        Ok(())
+    }
+
     fn pull(&self, key: &str, out: &NDArray, _device: usize) -> Result<()> {
-        let (after_version, shape) = {
+        let (after_version, shape, cache) = {
             let keys = self.keys.lock().unwrap();
             let st =
                 keys.get(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
@@ -167,7 +259,7 @@ impl KVStore for DistKVStore {
                 Consistency::Sequential => st.rounds,
                 Consistency::Eventual => 0,
             };
-            (v, st.shape.clone())
+            (v, st.shape.clone(), Arc::clone(&st.cache))
         };
         if out.shape() != shape.as_slice() {
             return Err(Error::kv(format!(
@@ -176,6 +268,13 @@ impl KVStore for DistKVStore {
                 shape
             )));
         }
+        // Sequential pulls within one round all wait on the same
+        // watermark and return the same bytes: serve repeats (other
+        // devices' pulls of this round) from the round-stamped cache so
+        // only one RPC crosses the wire per (key, round).  Eventual
+        // pulls always refetch — their whole point is best-effort
+        // freshness.
+        let use_cache = self.consistency == Consistency::Sequential;
         let conn = Arc::clone(&self.conn);
         let key = key.to_string();
         let storage = out.storage();
@@ -184,11 +283,23 @@ impl KVStore for DistKVStore {
             vec![],
             vec![out.var(), self.conn_var],
             Box::new(move || {
+                if use_cache {
+                    let c = cache.lock().unwrap();
+                    if c.version == after_version && c.data.len() == storage.len() {
+                        unsafe { storage.slice_mut() }.copy_from_slice(&c.data);
+                        return;
+                    }
+                }
                 match conn.rpc(&Msg::Pull { key: key.clone(), after_version }) {
                     Ok(Msg::Value { value, .. }) => {
                         let dst = unsafe { storage.slice_mut() };
                         if dst.len() == value.len() {
                             dst.copy_from_slice(&value);
+                            if use_cache {
+                                let mut c = cache.lock().unwrap();
+                                c.version = after_version;
+                                c.data = value;
+                            }
                         }
                     }
                     _ => { /* connection failure: leave buffer untouched */ }
@@ -292,6 +403,45 @@ mod tests {
             // w = 0 - (1 + 2) = -3 for both machines
             assert_eq!(h.join().unwrap(), -3.0);
         }
+    }
+
+    #[test]
+    fn staged_parts_ship_one_aggregated_message() {
+        // push_part deliveries in any order: one wire message per round,
+        // reduced in part order.
+        let srv = PsServer::start(0, 1, plain_updater()).unwrap();
+        let engine = create(EngineKind::Threaded, 4);
+        let kv =
+            DistKVStore::connect(srv.addr(), 0, 3, Consistency::Sequential, engine.clone())
+                .unwrap();
+        kv.init("w", &NDArray::zeros_on(&[2], engine.clone())).unwrap();
+        for part in [2usize, 0, 1] {
+            kv.push_part("w", &[part as f32, 1.0], part).unwrap();
+        }
+        let out = NDArray::zeros_on(&[2], engine);
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        // lr=1: w = 0 - (0+1+2) and 0 - (1+1+1)
+        assert_eq!(out.to_vec(), vec![-3.0, -3.0]);
+        assert_eq!(srv.messages_received(), 3, "init + 1 aggregated push + pull");
+    }
+
+    #[test]
+    fn grad_rescale_scales_the_wire_message() {
+        let srv = PsServer::start(0, 1, plain_updater()).unwrap();
+        let engine = create(EngineKind::Threaded, 2);
+        let kv =
+            DistKVStore::connect(srv.addr(), 0, 2, Consistency::Sequential, engine.clone())
+                .unwrap()
+                .with_grad_rescale(0.5);
+        kv.init("w", &NDArray::zeros_on(&[1], engine.clone())).unwrap();
+        kv.push_part("w", &[3.0], 0).unwrap();
+        kv.push_part("w", &[5.0], 1).unwrap();
+        let out = NDArray::zeros_on(&[1], engine);
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        // lr=1: w = 0 - 0.5 * (3 + 5)
+        assert_eq!(out.to_vec(), vec![-4.0]);
     }
 
     #[test]

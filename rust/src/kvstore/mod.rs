@@ -26,11 +26,12 @@ pub mod server;
 pub mod wire;
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::engine::EngineRef;
 use crate::error::{Error, Result};
-use crate::ndarray::NDArray;
+use crate::ndarray::{pool, NDArray};
 use crate::optimizer::Optimizer;
 
 /// Consistency model for pulls (paper §2.3: *"model divergence is
@@ -51,6 +52,26 @@ pub trait KVStore: Send + Sync {
     /// Push a gradient contribution for `key` from device `device`.
     fn push(&self, key: &str, grad: &NDArray, device: usize) -> Result<()>;
 
+    /// Deliver one device's gradient for `key` **by value** into the
+    /// store's device-sliced round staging (slot `part`, one slot per
+    /// device of the round).  Unlike [`KVStore::push`] — whose
+    /// accumulation order is arrival order — staged parts are reduced in
+    /// **part-index order** once the round is complete, so the merged
+    /// gradient is bitwise identical however deliveries interleave.
+    ///
+    /// Caller contract: `grad` holds this round's final gradient value.
+    /// The data-parallel trainer calls this from an executor grad-ready
+    /// hook (mid-backward, the paper's §5 communication/compute overlap)
+    /// or from an engine op reading the gradient.  A round must not mix
+    /// `push` and `push_part`, and each part may be delivered at most
+    /// once per round — a fit aborted mid-round leaves its staged parts
+    /// behind, so a store must not be reused across a failed fit.
+    ///
+    /// Required (no default): `Module::fit` and the trainer deliver
+    /// every gradient through this path, so an implementation without it
+    /// would silently never train.
+    fn push_part(&self, key: &str, grad: &[f32], part: usize) -> Result<()>;
+
     /// Pull the current weight for `key` into `out`.
     fn pull(&self, key: &str, out: &NDArray, device: usize) -> Result<()>;
 
@@ -64,14 +85,86 @@ pub trait KVStore: Send + Sync {
     fn consistency(&self) -> Consistency;
 }
 
+/// Device-sliced round staging shared by [`LocalKVStore`] and
+/// [`DistKVStore`](dist::DistKVStore): one pooled-buffer slot per part,
+/// delivery validation, and round-completion detection.  Parts are
+/// handed back in **part-index order**; what consumes the completed
+/// round (a local reduce into the accum buffer vs an aggregated wire
+/// message) stays store-specific.
+pub(crate) struct PartStage {
+    slots: Vec<Option<Box<[f32]>>>,
+    filled: usize,
+}
+
+impl PartStage {
+    pub(crate) fn new(parts: usize) -> PartStage {
+        PartStage { slots: (0..parts).map(|_| None).collect(), filled: 0 }
+    }
+
+    /// Whether the current round has at least one staged part.
+    pub(crate) fn in_progress(&self) -> bool {
+        self.filled > 0
+    }
+
+    /// Stage `grad` into `part`'s slot.  On the round's last delivery
+    /// all parts are returned in part-index order and the slots are
+    /// emptied immediately — a queued consumer can never race the next
+    /// round's deliveries.
+    pub(crate) fn stage(
+        &mut self,
+        key: &str,
+        grad: &[f32],
+        part: usize,
+        expect_len: usize,
+    ) -> Result<Option<Vec<Box<[f32]>>>> {
+        if part >= self.slots.len() {
+            return Err(Error::kv(format!(
+                "key '{key}': part {part} out of range ({} per round)",
+                self.slots.len()
+            )));
+        }
+        if grad.len() != expect_len {
+            return Err(Error::kv(format!(
+                "key '{key}': push_part len {} != weight size {expect_len}",
+                grad.len()
+            )));
+        }
+        if self.slots[part].is_some() {
+            return Err(Error::kv(format!(
+                "key '{key}': part {part} already delivered this round"
+            )));
+        }
+        let mut buf = pool::global().acquire_uninit(grad.len());
+        buf.copy_from_slice(grad);
+        self.slots[part] = Some(buf);
+        self.filled += 1;
+        if self.filled == self.slots.len() {
+            self.filled = 0;
+            Ok(Some(self.slots.iter_mut().map(|s| s.take().expect("full round")).collect()))
+        } else {
+            Ok(None)
+        }
+    }
+}
+
 struct KeyState {
     weight: NDArray,
-    /// Gradient accumulation buffer for the current round.
+    /// Merged-gradient buffer the updater consumes.
     accum: NDArray,
-    /// Devices that have pushed this round.
+    /// Devices that have pushed this round (legacy arrival-order path).
     pushed: usize,
+    /// Device-sliced staging for the current round (`push_part` path).
+    stage: PartStage,
+    /// Updates scheduled so far — the version stamp behind skip-on-pull.
+    version: u64,
+    /// device -> (version, out-var id) of its last sequential pull.
+    pulled: HashMap<usize, (u64, u64)>,
+    /// device -> (snapshot version, out-var id) of its last eventual pull.
+    pulled_snap: HashMap<usize, (u64, u64)>,
     /// Committed snapshot for eventual-consistency pulls.
     snapshot: Arc<Mutex<Vec<f32>>>,
+    /// Snapshots committed so far (bumped by the snapshot op itself).
+    snap_version: Arc<AtomicU64>,
 }
 
 /// Level-1 (intra-machine) key-value store over the dependency engine.
@@ -81,6 +174,8 @@ pub struct LocalKVStore {
     consistency: Consistency,
     updater: Arc<dyn Optimizer>,
     keys: Mutex<HashMap<String, KeyState>>,
+    pull_copies: AtomicU64,
+    pull_skips: AtomicU64,
 }
 
 impl LocalKVStore {
@@ -98,7 +193,39 @@ impl LocalKVStore {
             consistency,
             updater,
             keys: Mutex::new(HashMap::new()),
+            pull_copies: AtomicU64::new(0),
+            pull_skips: AtomicU64::new(0),
         }
+    }
+
+    /// `(copies, skips)` — pulls that scheduled a copy vs pulls answered
+    /// from the device's cache because the version was unchanged.
+    pub fn pull_stats(&self) -> (u64, u64) {
+        (self.pull_copies.load(Ordering::Relaxed), self.pull_skips.load(Ordering::Relaxed))
+    }
+
+    /// Round complete: bump the version, run the user updater on the
+    /// merged gradient, refresh the eventual-consistency snapshot.
+    /// Caller holds the keys lock, so the updater and snapshot ops are
+    /// scheduled atomically with the round bookkeeping.
+    fn commit_round(&self, key: &str, st: &mut KeyState) {
+        st.version += 1;
+        self.updater.update(key, &st.weight, &st.accum);
+        let snap = Arc::clone(&st.snapshot);
+        let sv = Arc::clone(&st.snap_version);
+        let ws = st.weight.storage();
+        self.engine.push(
+            "kv.snapshot",
+            vec![st.weight.var()],
+            vec![],
+            Box::new(move || {
+                let mut s = snap.lock().unwrap();
+                let w = unsafe { ws.slice() };
+                s.clear();
+                s.extend_from_slice(w);
+                sv.fetch_add(1, Ordering::AcqRel);
+            }),
+        );
     }
 }
 
@@ -112,13 +239,32 @@ impl KVStore for LocalKVStore {
         weight.copy_from_(value);
         let accum = NDArray::zeros_on(value.shape(), self.engine.clone());
         let snapshot = Arc::new(Mutex::new(value.to_vec()));
-        keys.insert(key.to_string(), KeyState { weight, accum, pushed: 0, snapshot });
+        keys.insert(
+            key.to_string(),
+            KeyState {
+                weight,
+                accum,
+                pushed: 0,
+                stage: PartStage::new(self.num_devices),
+                version: 0,
+                pulled: HashMap::new(),
+                pulled_snap: HashMap::new(),
+                snapshot,
+                // the init value is the first committed snapshot
+                snap_version: Arc::new(AtomicU64::new(1)),
+            },
+        );
         Ok(())
     }
 
     fn push(&self, key: &str, grad: &NDArray, _device: usize) -> Result<()> {
         let mut keys = self.keys.lock().unwrap();
         let st = keys.get_mut(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
+        if st.stage.in_progress() {
+            return Err(Error::kv(format!(
+                "key '{key}': round mixes push and push_part"
+            )));
+        }
         if st.pushed == 0 {
             st.accum.zero_();
         }
@@ -126,37 +272,81 @@ impl KVStore for LocalKVStore {
         st.pushed += 1;
         if st.pushed == self.num_devices {
             st.pushed = 0;
-            // merged gradient ready: run the user updater, then refresh
-            // the eventual-consistency snapshot.
-            self.updater.update(key, &st.weight, &st.accum);
-            let snap = Arc::clone(&st.snapshot);
-            let ws = st.weight.storage();
-            self.engine.push(
-                "kv.snapshot",
-                vec![st.weight.var()],
-                vec![],
-                Box::new(move || {
-                    let mut s = snap.lock().unwrap();
-                    let w = unsafe { ws.slice() };
-                    s.clear();
-                    s.extend_from_slice(w);
-                }),
-            );
+            self.commit_round(key, st);
         }
         Ok(())
     }
 
-    fn pull(&self, key: &str, out: &NDArray, _device: usize) -> Result<()> {
-        let keys = self.keys.lock().unwrap();
-        let st = keys.get(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
+    fn push_part(&self, key: &str, grad: &[f32], part: usize) -> Result<()> {
+        let mut keys = self.keys.lock().unwrap();
+        let st = keys.get_mut(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
+        if st.pushed > 0 {
+            return Err(Error::kv(format!(
+                "key '{key}': round mixes push and push_part"
+            )));
+        }
+        let parts = match st.stage.stage(key, grad, part, st.weight.size())? {
+            None => return Ok(()),
+            Some(parts) => parts,
+        };
+        // Round complete: reduce the parts in part order inside one
+        // engine op writing the accum buffer — bitwise-fixed aggregation
+        // whatever the delivery order.
+        let ws = st.accum.storage();
+        let n = st.weight.size();
+        self.engine.push(
+            "kv.reduce_parts",
+            vec![],
+            vec![st.accum.var()],
+            Box::new(move || {
+                let dst = unsafe { &mut ws.slice_mut()[..n] };
+                for (i, part) in parts.into_iter().enumerate() {
+                    if i == 0 {
+                        dst.copy_from_slice(&part);
+                    } else {
+                        for (d, s) in dst.iter_mut().zip(part.iter()) {
+                            *d += *s;
+                        }
+                    }
+                    pool::global().release(part);
+                }
+            }),
+        );
+        self.commit_round(key, st);
+        Ok(())
+    }
+
+    fn pull(&self, key: &str, out: &NDArray, device: usize) -> Result<()> {
+        let mut keys = self.keys.lock().unwrap();
+        let st = keys.get_mut(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
         match self.consistency {
             Consistency::Sequential => {
+                // Version-stamped pull: if this device already pulled the
+                // current version into this very array — and pulls are
+                // the only writer of pull targets — the copy is a no-op;
+                // skip scheduling it.  The stamp pairs the version with
+                // the destination var so pulling into a different array
+                // always copies.
+                let stamp = (st.version, out.var().id());
+                if st.pulled.get(&device) == Some(&stamp) {
+                    self.pull_skips.fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
                 // Engine dependency on the weight var orders this pull
                 // after every previously-scheduled update.
                 out.copy_from_(&st.weight);
+                st.pulled.insert(device, stamp);
+                self.pull_copies.fetch_add(1, Ordering::Relaxed);
             }
             Consistency::Eventual => {
-                // Snapshot read: no dependency on in-flight updates.
+                let stamp = (st.snap_version.load(Ordering::Acquire), out.var().id());
+                if st.pulled_snap.get(&device) == Some(&stamp) {
+                    self.pull_skips.fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
+                // Snapshot read: no dependency on in-flight updates.  The
+                // op may observe a snapshot newer than `stamp` records —
+                // that only means the next pull conservatively re-copies.
                 let snap = Arc::clone(&st.snapshot);
                 let os = out.storage();
                 self.engine.push(
@@ -168,6 +358,8 @@ impl KVStore for LocalKVStore {
                         unsafe { os.slice_mut() }.copy_from_slice(&s);
                     }),
                 );
+                st.pulled_snap.insert(device, stamp);
+                self.pull_copies.fetch_add(1, Ordering::Relaxed);
             }
         }
         Ok(())
@@ -273,6 +465,115 @@ mod tests {
         kv.pull("w", &w, 0).unwrap();
         let final_w = w.to_vec()[0];
         assert!(final_w.abs() < 0.1, "{final_w}");
+    }
+
+    #[test]
+    fn version_stamped_pull_skips_redundant_copies() {
+        // Regression (ISSUE 4 satellite): a pull whose version is
+        // unchanged since this device's last pull into the same array
+        // must not schedule a copy — and must still be correct.
+        let (kv, e) = store(1, Consistency::Sequential);
+        kv.init("w", &NDArray::from_vec_on(&[2], vec![3.0, 4.0], e.clone())).unwrap();
+        let out = NDArray::zeros_on(&[2], e.clone());
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        assert_eq!(kv.pull_stats(), (1, 0));
+        assert_eq!(out.to_vec(), vec![3.0, 4.0]);
+        // same device, same array, no update since -> skipped, still right
+        kv.pull("w", &out, 0).unwrap();
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        assert_eq!(kv.pull_stats(), (1, 2));
+        assert_eq!(out.to_vec(), vec![3.0, 4.0]);
+        // a different destination array must copy even at the same version
+        let other = NDArray::zeros_on(&[2], e.clone());
+        kv.pull("w", &other, 0).unwrap();
+        kv.flush();
+        assert_eq!(kv.pull_stats(), (2, 2));
+        assert_eq!(other.to_vec(), vec![3.0, 4.0]);
+        // an update invalidates the stamp: next pull copies the new value
+        kv.push("w", &NDArray::from_vec_on(&[2], vec![1.0, 1.0], e.clone()), 0).unwrap();
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        assert_eq!(kv.pull_stats(), (3, 2));
+        assert_eq!(out.to_vec(), vec![2.0, 3.0], "lr=1: w -= g");
+    }
+
+    #[test]
+    fn eventual_pull_skips_when_snapshot_unchanged() {
+        let (kv, e) = store(2, Consistency::Eventual);
+        kv.init("w", &NDArray::from_vec_on(&[1], vec![5.0], e.clone())).unwrap();
+        let out = NDArray::zeros_on(&[1], e.clone());
+        kv.pull("w", &out, 0).unwrap();
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        assert_eq!(out.to_vec(), vec![5.0]);
+        let (copies, skips) = kv.pull_stats();
+        assert_eq!((copies, skips), (1, 1));
+        // complete a round; once the snapshot commits, the pull re-copies
+        for d in 0..2 {
+            kv.push("w", &NDArray::from_vec_on(&[1], vec![0.5], e.clone()), d).unwrap();
+        }
+        kv.flush(); // snapshot committed
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        assert_eq!(out.to_vec(), vec![4.0], "5 - (0.5+0.5)");
+        assert_eq!(kv.pull_stats().0, 2);
+    }
+
+    #[test]
+    fn staged_parts_reduce_in_part_order_regardless_of_arrival() {
+        // Rounding-sensitive values: (1e8 + 1) - 1e8 == 0.0 in f32 when
+        // summed in part order 0,1,2.  Any arrival order must produce
+        // exactly that.
+        let vals = [1.0e8f32, 1.0, -1.0e8];
+        let mut results = Vec::new();
+        for arrival in [[0usize, 1, 2], [2, 0, 1], [1, 2, 0]] {
+            let (kv, e) = store(3, Consistency::Sequential);
+            kv.init("w", &NDArray::zeros_on(&[1], e.clone())).unwrap();
+            for part in arrival {
+                kv.push_part("w", &[vals[part]], part).unwrap();
+            }
+            let out = NDArray::zeros_on(&[1], e);
+            kv.pull("w", &out, 0).unwrap();
+            kv.flush();
+            results.push(out.to_vec()[0]);
+        }
+        // lr=1: w = 0 - merged; merged = (1e8 + 1) + (-1e8) = 0.0 exactly
+        // (1e8 + 1 rounds to 1e8 in f32) — and bitwise identical for
+        // every arrival order because the reduce is in part order.
+        assert_eq!(results, vec![0.0; 3]);
+        assert!(results.iter().all(|r| r.to_bits() == results[0].to_bits()));
+    }
+
+    #[test]
+    fn staged_partial_round_does_not_update() {
+        let (kv, e) = store(2, Consistency::Sequential);
+        kv.init("w", &NDArray::zeros_on(&[1], e.clone())).unwrap();
+        kv.push_part("w", &[1.0], 0).unwrap();
+        let out = NDArray::zeros_on(&[1], e);
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        assert_eq!(out.to_vec(), vec![0.0]);
+        // completing the round applies the merge
+        kv.push_part("w", &[2.0], 1).unwrap();
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        assert_eq!(out.to_vec(), vec![-3.0]);
+    }
+
+    #[test]
+    fn staged_part_misuse_rejected() {
+        let (kv, e) = store(2, Consistency::Sequential);
+        kv.init("w", &NDArray::zeros_on(&[2], e.clone())).unwrap();
+        assert!(kv.push_part("nope", &[0.0; 2], 0).is_err(), "unknown key");
+        assert!(kv.push_part("w", &[0.0; 2], 2).is_err(), "part out of range");
+        assert!(kv.push_part("w", &[0.0; 3], 0).is_err(), "length mismatch");
+        kv.push_part("w", &[1.0; 2], 0).unwrap();
+        assert!(kv.push_part("w", &[1.0; 2], 0).is_err(), "double delivery");
+        // mixing the legacy arrival-order path into a staged round
+        assert!(kv.push("w", &NDArray::ones(&[2]), 1).is_err());
+        kv.flush();
     }
 
     #[test]

@@ -25,7 +25,7 @@ use mixnet::io::{synth, ArrayDataIter, PrefetchIter};
 use mixnet::kvstore::server::{PsServer, ServerUpdater};
 use mixnet::kvstore::{dist::DistKVStore, Consistency, LocalKVStore};
 use mixnet::models::by_name;
-use mixnet::module::{Module, UpdateMode};
+use mixnet::module::{DataParallelTrainer, Module, TrainerConfig, UpdateMode};
 use mixnet::optimizer::Sgd;
 use mixnet::serve::{closed_loop, Servable, ServeConfig, Server};
 use mixnet::sim::{graph_flops, simulate, ClusterConfig};
@@ -38,17 +38,22 @@ mixnet — a Rust+JAX+Pallas reproduction of MXNet (2015)
 USAGE: mixnet <command> [options]
 
 COMMANDS:
-  train        train a zoo model on synthetic data (local or via --server)
+  train        data-parallel training of a zoo model on synthetic data
                  --model NAME  --epochs N  --batch N  --lr F  --seed N
-                 --classes N   --examples N  --eventual
+                 --classes N   --examples N  --devices N
+                 --kv local|dist  --consistency seq|eventual  --no-overlap
+                 (--kv dist needs --server ADDR; --batch is the global
+                  batch, split over --devices replica shards)
   serve        dynamic-batching inference server + closed-loop demo
                  --model NAME  --checkpoint FILE  --clients N  --requests N
                  --max-batch N  --max-delay-us N  --workers N  --seed N
                  (no --checkpoint: quick-trains/initializes weights first)
   server       run the level-2 parameter server
                  --port N  --machines N  --lr F  --momentum F
-  worker       join distributed training as one machine
-                 --server ADDR  --machine ID  --machines N  [train opts]
+  worker       join distributed training as one machine (same Trainer as
+               `train`, N local devices aggregated before the wire)
+                 --server ADDR  --machine ID  --machines N  --devices N
+                 [train opts]
   transformer  run the AOT three-layer transformer driver
                  --steps N  --artifacts DIR  --mode sgd|kvstore  --workers N
   memplan      print the Figure 7 memory table for one model
@@ -76,7 +81,8 @@ fn main() {
 const VALUE_KEYS: &[&str] = &[
     "model", "epochs", "batch", "lr", "seed", "classes", "examples", "port", "machines",
     "momentum", "server", "machine", "steps", "artifacts", "mode", "workers", "passes",
-    "checkpoint", "clients", "requests", "max-batch", "max-delay-us",
+    "checkpoint", "clients", "requests", "max-batch", "max-delay-us", "devices", "kv",
+    "consistency",
 ];
 
 fn run(argv: Vec<String>) -> Result<()> {
@@ -99,17 +105,23 @@ fn run(argv: Vec<String>) -> Result<()> {
     }
 }
 
-/// Build module + iterator for a zoo model over synthetic data.
-fn setup_training(
+/// Build model + global-batch iterator for a zoo model over synthetic
+/// data; returns the per-device shard batch (`--batch / --devices`).
+fn build_training(
     args: &Args,
     engine: mixnet::engine::EngineRef,
     shard_seed: u64,
-) -> Result<(Module, PrefetchIter)> {
+    devices: usize,
+) -> Result<(mixnet::models::Model, PrefetchIter, usize)> {
     let model_name = args.get_str("model", "mlp");
     let batch: usize = args.get("batch", 32)?;
+    if devices == 0 || batch % devices != 0 {
+        return Err(Error::Config(format!(
+            "--batch {batch} must be divisible by --devices {devices}"
+        )));
+    }
     let classes: usize = args.get("classes", 4)?;
     let examples: usize = args.get("examples", 2048)?;
-    let seed: u64 = args.get("seed", 7)?;
 
     let m = by_name(&model_name)?;
     let feat: usize = m.feat_shape.iter().product();
@@ -137,11 +149,63 @@ fn setup_training(
     // §2.4 multi-threaded prefetch on the training path; in-flight depth
     // comes from the PALLAS_PREFETCH_DEPTH knob (default 3).
     let iter = PrefetchIter::with_default_depth(Box::new(inner));
-    let shapes = m.param_shapes(batch)?;
-    let feat_shape = m.feat_shape.clone();
-    let mut module = Module::new(m.symbol, engine);
-    module.bind(batch, &feat_shape, &shapes, BindConfig::default(), seed)?;
-    Ok((module, iter))
+    Ok((m, iter, batch / devices))
+}
+
+/// Bind the data-parallel trainer both `train` and `worker` share: one
+/// shard per device, overlap unless `--no-overlap`, seed from `--seed`.
+fn bind_trainer(
+    args: &Args,
+    engine: mixnet::engine::EngineRef,
+    model: &mixnet::models::Model,
+    shard_batch: usize,
+    devices: usize,
+    store: Arc<dyn mixnet::kvstore::KVStore>,
+) -> Result<DataParallelTrainer> {
+    let seed: u64 = args.get("seed", 7)?;
+    let shapes = model.param_shapes(shard_batch)?;
+    DataParallelTrainer::bind(
+        &model.symbol,
+        engine,
+        shard_batch,
+        &model.feat_shape,
+        &shapes,
+        store,
+        TrainerConfig {
+            devices,
+            shards: devices,
+            overlap: !args.has("no-overlap"),
+            bind: BindConfig::default(),
+            seed,
+        },
+    )
+}
+
+/// Connect a distributed store for `devices` local shards, shipping the
+/// global-batch mean (mirrors the local path's updater rescale).
+fn dist_store(
+    addr: std::net::SocketAddr,
+    machine: u32,
+    devices: usize,
+    consistency: Consistency,
+    engine: mixnet::engine::EngineRef,
+) -> Result<DistKVStore> {
+    Ok(DistKVStore::connect(addr, machine, devices, consistency, engine)?
+        .with_grad_rescale(1.0 / devices as f32))
+}
+
+/// `--consistency seq|eventual` (with `--eventual` kept as an alias).
+fn parse_consistency(args: &Args) -> Result<Consistency> {
+    if args.has("eventual") {
+        return Ok(Consistency::Eventual);
+    }
+    match args.get_str("consistency", "seq").as_str() {
+        "seq" | "sequential" => Ok(Consistency::Sequential),
+        "eventual" => Ok(Consistency::Eventual),
+        other => {
+            Err(Error::Config(format!("--consistency must be seq|eventual, got '{other}'")))
+        }
+    }
 }
 
 fn report(stats: &[mixnet::module::EpochStats]) {
@@ -157,27 +221,44 @@ fn report(stats: &[mixnet::module::EpochStats]) {
 fn cmd_train(args: &Args) -> Result<()> {
     let epochs: usize = args.get("epochs", 4)?;
     let lr: f32 = args.get("lr", 0.2)?;
+    let devices: usize = args.get("devices", 1)?;
+    let consistency = parse_consistency(args)?;
+    let default_kv = if args.options.contains_key("server") { "dist" } else { "local" };
+    let kv_kind = args.get_str("kv", default_kv);
     let engine = create(EngineKind::Threaded, default_threads());
-    let (mut module, mut iter) = setup_training(args, engine.clone(), 0x5eed)?;
-    let mode = if let Some(addr) = args.options.get("server") {
-        let addr: std::net::SocketAddr =
-            addr.parse().map_err(|_| Error::Config(format!("bad --server '{addr}'")))?;
-        let consistency =
-            if args.has("eventual") { Consistency::Eventual } else { Consistency::Sequential };
-        let machine: u32 = args.get("machine", 0)?;
-        let kv = DistKVStore::connect(addr, machine, 1, consistency, engine)?;
-        UpdateMode::KvStore { store: Arc::new(kv), device: 0 }
-    } else {
-        // local level-1 store with a registered SGD updater (§2.3)
-        let kv = LocalKVStore::new(
-            engine,
-            1,
-            Arc::new(Sgd::with_momentum(lr, 0.9, 1e-4)),
-            Consistency::Sequential,
-        );
-        UpdateMode::KvStore { store: Arc::new(kv), device: 0 }
+    let (model, mut iter, shard_batch) = build_training(args, engine.clone(), 0x5eed, devices)?;
+    let store: Arc<dyn mixnet::kvstore::KVStore> = match kv_kind.as_str() {
+        "local" => {
+            // local level-1 store with a registered SGD updater (§2.3);
+            // the merged gradient is a sum of per-shard means, so rescale
+            // by 1/devices to keep global-batch-mean semantics.
+            Arc::new(LocalKVStore::new(
+                engine.clone(),
+                devices,
+                Arc::new(Sgd::with_momentum(lr, 0.9, 1e-4).rescale(1.0 / devices as f32)),
+                consistency,
+            ))
+        }
+        "dist" => {
+            let addr = args
+                .options
+                .get("server")
+                .ok_or_else(|| Error::Config("--kv dist needs --server ADDR".into()))?;
+            let addr: std::net::SocketAddr =
+                addr.parse().map_err(|_| Error::Config(format!("bad --server '{addr}'")))?;
+            let machine: u32 = args.get("machine", 0)?;
+            Arc::new(dist_store(addr, machine, devices, consistency, engine.clone())?)
+        }
+        other => {
+            return Err(Error::Config(format!("--kv must be local|dist, got '{other}'")));
+        }
     };
-    let stats = module.fit(&mut iter, &mode, epochs)?;
+    let mut trainer = bind_trainer(args, engine, &model, shard_batch, devices, store)?;
+    println!(
+        "data-parallel: {devices} device(s), shard batch {shard_batch}, kv {kv_kind}, {:?}",
+        consistency
+    );
+    let stats = trainer.fit(&mut iter, epochs)?;
     report(&stats);
     Ok(())
 }
@@ -297,17 +378,17 @@ fn cmd_worker(args: &Args) -> Result<()> {
         addr.parse().map_err(|_| Error::Config(format!("bad --server '{addr}'")))?;
     let machine: u32 = args.get("machine", 0)?;
     let epochs: usize = args.get("epochs", 4)?;
+    let devices: usize = args.get("devices", 1)?;
+    let consistency = parse_consistency(args)?;
     let engine = create(EngineKind::Threaded, default_threads());
-    let (mut module, mut iter) =
-        setup_training(args, engine.clone(), 0x5eed + machine as u64)?;
-    let consistency =
-        if args.has("eventual") { Consistency::Eventual } else { Consistency::Sequential };
-    let kv = Arc::new(DistKVStore::connect(addr, machine, 1, consistency, engine)?);
-    let stats = module.fit(
-        &mut iter,
-        &UpdateMode::KvStore { store: kv.clone(), device: 0 },
-        epochs,
-    )?;
+    let (model, mut iter, shard_batch) =
+        build_training(args, engine.clone(), 0x5eed + machine as u64, devices)?;
+    // The same Trainer as `mixnet train`: N local device shards, level-1
+    // aggregated by the DistKVStore before one wire message per round.
+    let kv = Arc::new(dist_store(addr, machine, devices, consistency, engine.clone())?);
+    let store: Arc<dyn mixnet::kvstore::KVStore> = kv.clone();
+    let mut trainer = bind_trainer(args, engine, &model, shard_batch, devices, store)?;
+    let stats = trainer.fit(&mut iter, epochs)?;
     kv.barrier()?;
     report(&stats);
     Ok(())

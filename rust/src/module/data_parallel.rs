@@ -1,0 +1,733 @@
+//! Data-parallel multi-device training (paper §2.3 / §5): one executor
+//! replica per virtual device, deterministic batch sharding, and KVStore
+//! synchronization whose per-layer gradient pushes overlap the rest of
+//! the backward pass.
+//!
+//! ## Model
+//!
+//! A [`Context`] is a *virtual* device: replicas do not own threads or
+//! memory domains — they all schedule onto the one dependency engine,
+//! whose worker pool and intra-op budget are divided among whatever
+//! heavy ops the replicas keep in flight.  The trainer is therefore a
+//! pure *scheduler*: its loop only issues engine ops (pull, load,
+//! forward, backward, push) and the engine extracts the parallelism,
+//! exactly the paper's argument that the dependency engine subsumes
+//! multi-device orchestration.
+//!
+//! ## Determinism contract
+//!
+//! The **shard count** — not the device count — defines the math.  Each
+//! global batch is split by the canonical shard geometry
+//! ([`shard_ranges`], the split [`crate::io::PartitionIter`]
+//! materializes) into `shards` fixed
+//! sub-batches; shard `s`'s gradient is delivered to KVStore part `s`
+//! ([`KVStore::push_part`]), and the store reduces parts in index order.
+//! Devices only decide *where* shards run, like the intra-op thread
+//! budget only decides worker count: for a fixed shard count, training
+//! is **bitwise identical for any device count that divides it** (and
+//! for any `PALLAS_INTRA_THREADS`).  `tests/data_parallel.rs` asserts
+//! this for the MLP and AlexNet.  Step-seeded ops (Dropout) draw from
+//! the *round* number ([`Executor::forward_at`]), which is device-count
+//! invariant by construction.
+//!
+//! ## Overlap
+//!
+//! With `overlap` on (default), every replica executor carries a
+//! grad-ready hook ([`Executor::set_grad_ready_hook`]): the moment a
+//! layer's gradient retires inside backward, the hook copies it into the
+//! store's part staging — so the push for `fc8` is in flight while the
+//! engine is still computing `conv1`'s gradients (paper §5's overlap of
+//! communication with computation).  With `overlap` off, pushes are
+//! engine ops reading the gradient vars, which (on the replay path)
+//! queue behind the *whole* backward pass — same bitwise result, no
+//! overlap; `benches/train.rs` measures the difference.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::engine::EngineRef;
+use crate::error::{Error, Result};
+use crate::executor::Executor;
+use crate::io::{partition::shard_ranges, DataIter};
+use crate::kvstore::KVStore;
+use crate::ndarray::{NDArray, Storage};
+use crate::symbol::Symbol;
+use crate::util::Rng;
+
+use super::{init_param, EpochStats};
+
+/// A lightweight virtual device: one replica slot of a data-parallel
+/// trainer.  See the module docs — a `Context` names a slice of the
+/// shared engine's worker/intra-op budget rather than a separate
+/// hardware resource.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Context {
+    /// Replica index (0-based).
+    pub device: usize,
+    /// Total replicas in the trainer.
+    pub num_devices: usize,
+}
+
+impl Context {
+    /// The `device`-th of `num_devices` virtual CPU devices.
+    pub fn cpu(device: usize, num_devices: usize) -> Context {
+        Context { device, num_devices }
+    }
+}
+
+impl std::fmt::Display for Context {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cpu({}/{})", self.device, self.num_devices)
+    }
+}
+
+/// Counts outstanding gradient deliveries of the current round; the
+/// trainer waits for zero before issuing the next round's pulls, which
+/// is what makes `Sequential` pulls observe the round's update.
+struct PushLatch {
+    n: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl PushLatch {
+    fn new() -> Self {
+        PushLatch { n: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    fn add(&self, k: usize) {
+        *self.n.lock().unwrap() += k;
+    }
+
+    fn done(&self) {
+        let mut g = self.n.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait_zero(&self) {
+        let mut g = self.n.lock().unwrap();
+        while *g > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// One replica as the shared round loop sees it.  The trainer builds
+/// these from its owned replicas; [`Module::fit`](super::Module::fit)
+/// builds a single view of itself — the N=1 degeneration.
+pub(crate) struct ReplicaView<'a> {
+    pub exec: &'a Executor,
+    pub params: &'a HashMap<String, NDArray>,
+    pub data: &'a NDArray,
+    pub label: &'a NDArray,
+    /// Store part ids this replica pushes, in micro-step order.
+    pub parts: Vec<usize>,
+    /// Index of this replica's first shard in the round's shard list.
+    pub offset: usize,
+    /// Stable id for the store's per-device pull stamps.
+    pub pull_device: usize,
+}
+
+/// Options for the shared round loop.
+pub(crate) struct RoundOpts {
+    pub overlap: bool,
+    pub epochs: usize,
+}
+
+/// Clears the replicas' grad-ready hooks on scope exit (also on error
+/// paths), so a later `fit` with different options starts clean.
+struct HookGuard<'a> {
+    replicas: &'a [ReplicaView<'a>],
+    active: bool,
+}
+
+impl Drop for HookGuard<'_> {
+    fn drop(&mut self) {
+        if self.active {
+            for r in self.replicas {
+                r.exec.clear_grad_ready_hook();
+            }
+        }
+    }
+}
+
+/// First KVStore delivery error of the current fit, recorded by the
+/// (asynchronous) push contexts and surfaced at the round barrier — a
+/// failed push must fail `fit`, never silently stop training.
+type RoundErr = Arc<Mutex<Option<Error>>>;
+
+fn record_round_err(slot: &RoundErr, e: Error) {
+    let mut g = slot.lock().unwrap();
+    if g.is_none() {
+        *g = Some(e);
+    }
+}
+
+/// Schedule one engine op copying `rows` rows at `row_off` from a source
+/// array into a replica-bound array (the shard load: one copy, no
+/// intermediate allocation — the batch buffer is read in place under an
+/// engine read grant).
+fn load_rows(engine: &EngineRef, src: &NDArray, dst: &NDArray, row_off: usize, rows: usize) {
+    let per: usize = src.shape()[1..].iter().product();
+    debug_assert_eq!(dst.size(), rows * per);
+    let (ss, ds) = (src.storage(), dst.storage());
+    engine.push(
+        "dp.load_shard",
+        vec![src.var()],
+        vec![dst.var()],
+        Box::new(move || unsafe {
+            ds.slice_mut()[..rows * per]
+                .copy_from_slice(&ss.slice()[row_off * per..(row_off + rows) * per]);
+        }),
+    );
+}
+
+/// The BSP round loop shared by [`DataParallelTrainer`] and
+/// [`Module::fit`](super::Module::fit)'s KVStore mode: per round, split
+/// the global batch into shards, run each shard on its replica (pull →
+/// load → forward → backward → per-layer push), and wait for every
+/// delivery before the next round's pulls.
+pub(crate) fn fit_rounds(
+    engine: &EngineRef,
+    store: &Arc<dyn KVStore>,
+    replicas: &[ReplicaView<'_>],
+    param_names: &[String],
+    iter: &mut dyn DataIter,
+    opts: &RoundOpts,
+    step: &mut u64,
+) -> Result<Vec<EpochStats>> {
+    let grad_names: Vec<String> = param_names
+        .iter()
+        .filter(|n| replicas.iter().all(|r| r.exec.grad(n).is_some()))
+        .cloned()
+        .collect();
+    if grad_names.is_empty() {
+        return Err(Error::Bind("data-parallel fit: executors hold no gradients".into()));
+    }
+    let local_shards: usize = replicas.iter().map(|r| r.parts.len()).sum();
+    let k_max = replicas.iter().map(|r| r.parts.len()).max().unwrap_or(0);
+    if local_shards == 0 {
+        return Err(Error::Bind("data-parallel fit: no shards assigned".into()));
+    }
+
+    let latch = Arc::new(PushLatch::new());
+    let round_err: RoundErr = Arc::new(Mutex::new(None));
+    let mut guard = HookGuard { replicas, active: false };
+    if opts.overlap {
+        // Per-layer overlapped push: the hook fires on the engine worker
+        // that just wrote a gradient's final value, copies it straight
+        // into the store's part staging, and returns — the rest of
+        // backward keeps running on the other workers.
+        for r in replicas {
+            let parts = r.parts.clone();
+            let mut gmap: HashMap<String, (Arc<Storage>, usize, Arc<AtomicUsize>)> =
+                HashMap::new();
+            for name in &grad_names {
+                let g = r
+                    .exec
+                    .grad(name)
+                    .ok_or_else(|| Error::Bind(format!("no gradient for '{name}'")))?;
+                gmap.insert(
+                    name.clone(),
+                    (g.storage(), g.size(), Arc::new(AtomicUsize::new(0))),
+                );
+            }
+            let store = Arc::clone(store);
+            let latch = Arc::clone(&latch);
+            let err = Arc::clone(&round_err);
+            r.exec.set_grad_ready_hook(Arc::new(move |name: &str, _step: u64, ok: bool| {
+                if let Some((st, len, fired)) = gmap.get(name) {
+                    // Micro-steps of one replica run in program order
+                    // (replays of one plan serialize), so the k-th fire
+                    // of this gradient since the round pattern began
+                    // belongs to this replica's k-th shard.
+                    let k = fired.fetch_add(1, Ordering::Relaxed) % parts.len();
+                    if !ok {
+                        // The writing kernel panicked: the buffer holds
+                        // garbage.  Fail the fit at the round barrier
+                        // rather than commit a corrupted round.
+                        record_round_err(
+                            &err,
+                            Error::Bind(format!(
+                                "backward kernel writing gradient '{name}' panicked"
+                            )),
+                        );
+                        latch.done();
+                        return;
+                    }
+                    let part = parts[k];
+                    // SAFETY: grad-ready hook contract (`ok` above) —
+                    // this gradient's final value is written, nothing
+                    // later in the pass writes it, and external readers
+                    // are engine-ordered behind the pass.
+                    let g = unsafe { &st.slice()[..*len] };
+                    if let Err(e) = store.push_part(name, g, part) {
+                        record_round_err(&err, e);
+                    }
+                    latch.done();
+                }
+            }));
+        }
+        guard.active = true;
+    }
+
+    // Per-replica shard batch (bound at replica bind time); the global
+    // batch must be exactly the sum, and every shard range must line up
+    // with its replica — validated up front each round, *before* any
+    // push is staged, so a malformed batch can never leave a round
+    // half-delivered in the store.
+    let rows_needed: usize = replicas.iter().map(|r| r.data.shape()[0] * r.parts.len()).sum();
+
+    let mut stats = Vec::with_capacity(opts.epochs);
+    let mut part_metrics = vec![(0.0f32, 0.0f32); local_shards];
+    for epoch in 0..opts.epochs {
+        let t0 = Instant::now();
+        iter.reset();
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+        let mut batches = 0usize;
+        while let Some(batch) = iter.next_batch() {
+            let rows = batch.data.shape()[0];
+            if rows != rows_needed || batch.label.size() != rows {
+                return Err(Error::Bind(format!(
+                    "data-parallel fit: batch of {rows} rows does not split into \
+                     {local_shards} shards of the bound replica batch ({rows_needed} \
+                     rows needed)"
+                )));
+            }
+            // Feature-dimension check before any load is scheduled: a
+            // mismatched copy inside an engine op would only panic on a
+            // worker (and be reported-but-swallowed), not fail the fit.
+            let per_src: usize = batch.data.shape()[1..].iter().product();
+            let per_dst: usize = replicas[0].data.shape()[1..].iter().product();
+            if per_src != per_dst {
+                return Err(Error::Bind(format!(
+                    "data-parallel fit: batch feature size {per_src} does not match \
+                     the bound replica feature size {per_dst}"
+                )));
+            }
+            // Canonical shard geometry (same as PartitionIter's), copied
+            // straight from the batch buffer into the replica arrays —
+            // one engine-scheduled copy per shard, no intermediates.
+            let ranges = shard_ranges(rows, local_shards);
+            *step += 1;
+            let round = *step;
+            for k in 0..k_max {
+                for r in replicas {
+                    if k >= r.parts.len() {
+                        continue;
+                    }
+                    let (row_off, n) = ranges[r.offset + k];
+                    debug_assert_eq!(n, r.data.shape()[0]);
+                    // BSP pull — within a round the version is unchanged,
+                    // so repeats are answered from the device cache
+                    // (version-stamped pull).
+                    for name in param_names {
+                        store.pull(name, &r.params[name], r.pull_device)?;
+                    }
+                    load_rows(engine, &batch.data, r.data, row_off, n);
+                    load_rows(engine, &batch.label, r.label, row_off, n);
+                    if opts.overlap {
+                        latch.add(grad_names.len());
+                    }
+                    r.exec.forward_at(round);
+                    r.exec.backward_at(round)?;
+                    if !opts.overlap {
+                        // Non-overlapped push: one engine op per gradient
+                        // reading its var — ordered after the whole
+                        // backward pass on the replay path.  Same staged
+                        // delivery, same bitwise result; only the timing
+                        // differs.
+                        for name in &grad_names {
+                            let g = r.exec.grad(name).expect("checked above");
+                            let (gs, glen) = (g.storage(), g.size());
+                            let store2 = Arc::clone(store);
+                            let latch2 = Arc::clone(&latch);
+                            let err2 = Arc::clone(&round_err);
+                            let key = name.clone();
+                            let part = r.parts[k];
+                            latch.add(1);
+                            engine.push(
+                                "kv.push_grad",
+                                vec![g.var()],
+                                vec![],
+                                Box::new(move || {
+                                    // SAFETY: this op holds the engine
+                                    // read grant on the gradient var.
+                                    let gsl = unsafe { &gs.slice()[..glen] };
+                                    if let Err(e) = store2.push_part(&key, gsl, part) {
+                                        record_round_err(&err2, e);
+                                    }
+                                    latch2.done();
+                                }),
+                            );
+                        }
+                    }
+                }
+                // One synchronized head read per (replica, micro-step) —
+                // before the replica's next micro-step overwrites its
+                // outputs.  Stored by shard index so the epoch metric is
+                // summed in shard order, independent of device count.
+                for r in replicas {
+                    if k >= r.parts.len() {
+                        continue;
+                    }
+                    let (l, a) = r.exec.softmax_metrics()?;
+                    part_metrics[r.offset + k] = (l, a);
+                }
+            }
+            // Round barrier: every delivery staged (and, transitively,
+            // the round's updater scheduled) before the next pulls; a
+            // failed delivery fails the fit.
+            latch.wait_zero();
+            if let Some(e) = round_err.lock().unwrap().take() {
+                return Err(e);
+            }
+            for &(l, a) in &part_metrics {
+                loss_sum += l as f64;
+                acc_sum += a as f64;
+            }
+            batches += 1;
+        }
+        engine.wait_all();
+        if batches == 0 {
+            return Err(Error::Bind("iterator produced no batches".into()));
+        }
+        let denom = (batches * local_shards) as f64;
+        stats.push(EpochStats {
+            epoch,
+            loss: (loss_sum / denom) as f32,
+            accuracy: (acc_sum / denom) as f32,
+            seconds: t0.elapsed().as_secs_f64(),
+            batches,
+        });
+    }
+    Ok(stats)
+}
+
+/// Trainer configuration (see [`DataParallelTrainer::bind`]).
+#[derive(Debug, Clone, Copy)]
+pub struct TrainerConfig {
+    /// Executor replicas (virtual devices).
+    pub devices: usize,
+    /// Parts per synchronization round — the data-parallel degree that
+    /// *defines the math* (see the module docs).  Must be a multiple of
+    /// `devices`; `0` means `devices`.
+    pub shards: usize,
+    /// Per-layer gradient push from inside backward (default) vs push
+    /// after the pass completes.  Bitwise-identical results either way.
+    pub overlap: bool,
+    /// Executor bind configuration (must build the backward pass).
+    pub bind: crate::executor::BindConfig,
+    /// Parameter-init seed (identical across replicas).
+    pub seed: u64,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            devices: 1,
+            shards: 0,
+            overlap: true,
+            bind: crate::executor::BindConfig::default(),
+            seed: 7,
+        }
+    }
+}
+
+struct Replica {
+    ctx: Context,
+    exec: Executor,
+    params: HashMap<String, NDArray>,
+    data: NDArray,
+    label: NDArray,
+}
+
+/// Data-parallel trainer: N plan-replaying executor replicas bound to
+/// virtual [`Context`]s, synchronized through a [`KVStore`] in rounds of
+/// `shards` parts (see the module docs for the determinism and overlap
+/// contracts).
+pub struct DataParallelTrainer {
+    engine: EngineRef,
+    store: Arc<dyn KVStore>,
+    replicas: Vec<Replica>,
+    param_names: Vec<String>,
+    shard_batch: usize,
+    shards: usize,
+    overlap: bool,
+    step: u64,
+    inited: bool,
+}
+
+impl DataParallelTrainer {
+    /// Bind `cfg.devices` replicas of `symbol` at `shard_batch` rows
+    /// each, all initialized identically from `cfg.seed`.  The incoming
+    /// data iterator must produce global batches of `shards x
+    /// shard_batch` rows; `store` must aggregate exactly `shards` parts
+    /// per round ([`KVStore::num_devices`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn bind(
+        symbol: &Symbol,
+        engine: EngineRef,
+        shard_batch: usize,
+        feat_shape: &[usize],
+        param_shapes: &HashMap<String, Vec<usize>>,
+        store: Arc<dyn KVStore>,
+        cfg: TrainerConfig,
+    ) -> Result<DataParallelTrainer> {
+        let devices = cfg.devices.max(1);
+        let shards = if cfg.shards == 0 { devices } else { cfg.shards };
+        if shards % devices != 0 {
+            return Err(Error::Bind(format!(
+                "data-parallel bind: {shards} shards not divisible by {devices} devices"
+            )));
+        }
+        if store.num_devices() != shards {
+            return Err(Error::Bind(format!(
+                "data-parallel bind: store aggregates {} parts per round, trainer \
+                 produces {shards}",
+                store.num_devices()
+            )));
+        }
+        if !(cfg.bind.training && cfg.bind.grads) {
+            return Err(Error::Bind(
+                "data-parallel bind: BindConfig must build the backward pass".into(),
+            ));
+        }
+        if shard_batch == 0 {
+            return Err(Error::Bind("data-parallel bind: shard_batch must be >= 1".into()));
+        }
+        let args_list = symbol.list_arguments();
+        let mut replicas = Vec::with_capacity(devices);
+        let mut param_names: Vec<String> = Vec::new();
+        for d in 0..devices {
+            // Identical init on every replica: a fresh RNG from the same
+            // seed replays the same parameter stream.
+            let mut rng = Rng::seed_from_u64(cfg.seed);
+            let mut args: HashMap<String, NDArray> = HashMap::new();
+            let mut data_shape = vec![shard_batch];
+            data_shape.extend_from_slice(feat_shape);
+            let data = NDArray::zeros_on(&data_shape, engine.clone());
+            args.insert("data".into(), data.clone());
+            let mut label_arr: Option<NDArray> = None;
+            let mut params: HashMap<String, NDArray> = HashMap::new();
+            let mut names: Vec<String> = Vec::new();
+            for name in &args_list {
+                if name == "data" {
+                    continue;
+                }
+                if name.ends_with("_label") {
+                    let label = NDArray::zeros_on(&[shard_batch], engine.clone());
+                    args.insert(name.clone(), label.clone());
+                    label_arr = Some(label);
+                    continue;
+                }
+                let shape = param_shapes
+                    .get(name)
+                    .ok_or_else(|| Error::Bind(format!("no shape for parameter '{name}'")))?;
+                let arr = init_param(name, shape, &mut rng, &engine);
+                params.insert(name.clone(), arr.clone());
+                names.push(name.clone());
+                args.insert(name.clone(), arr);
+            }
+            let label = label_arr
+                .ok_or_else(|| Error::Bind("symbol has no *_label argument".into()))?;
+            let grad_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+            let exec = Executor::bind(symbol, engine.clone(), args, &grad_refs, cfg.bind)?;
+            if d == 0 {
+                param_names = names;
+            }
+            replicas.push(Replica {
+                ctx: Context::cpu(d, devices),
+                exec,
+                params,
+                data,
+                label,
+            });
+        }
+        Ok(DataParallelTrainer {
+            engine,
+            store,
+            replicas,
+            param_names,
+            shard_batch,
+            shards,
+            overlap: cfg.overlap,
+            step: 0,
+            inited: false,
+        })
+    }
+
+    /// Replica count.
+    pub fn devices(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Parts per synchronization round.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Rows per shard (each replica's bound batch size).
+    pub fn shard_batch(&self) -> usize {
+        self.shard_batch
+    }
+
+    /// The replica contexts.
+    pub fn contexts(&self) -> Vec<Context> {
+        self.replicas.iter().map(|r| r.ctx).collect()
+    }
+
+    /// A replica's executor (tests, diagnostics).
+    pub fn replica_exec(&self, device: usize) -> Option<&Executor> {
+        self.replicas.get(device).map(|r| &r.exec)
+    }
+
+    /// Parameter names in bind order.
+    pub fn param_names(&self) -> &[String] {
+        &self.param_names
+    }
+
+    /// Train for `epochs` over `iter` (global batches of `shards x
+    /// shard_batch` rows).  Registers the parameters with the store on
+    /// first call (first init wins, so multi-process workers can share a
+    /// distributed store).
+    pub fn fit(&mut self, iter: &mut dyn DataIter, epochs: usize) -> Result<Vec<EpochStats>> {
+        if !self.inited {
+            for name in &self.param_names {
+                // First init wins; ignore "already initialized".
+                let _ = self.store.init(name, &self.replicas[0].params[name]);
+            }
+            self.inited = true;
+        }
+        let k_per = self.shards / self.replicas.len();
+        let views: Vec<ReplicaView<'_>> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ReplicaView {
+                exec: &r.exec,
+                params: &r.params,
+                data: &r.data,
+                label: &r.label,
+                parts: (i * k_per..(i + 1) * k_per).collect(),
+                offset: i * k_per,
+                pull_device: i,
+            })
+            .collect();
+        let mut step = self.step;
+        let out = fit_rounds(
+            &self.engine,
+            &self.store,
+            &views,
+            &self.param_names,
+            iter,
+            &RoundOpts { overlap: self.overlap, epochs },
+            &mut step,
+        );
+        drop(views);
+        self.step = step;
+        out
+    }
+
+    /// Pull the store's current master weights (one fresh array per
+    /// parameter) — what the bitwise-equivalence tests compare.
+    pub fn pull_params(&self) -> Result<HashMap<String, Vec<f32>>> {
+        let probe = self.replicas.len(); // unused pull-stamp slot
+        let mut out = HashMap::new();
+        for name in &self.param_names {
+            let shape = self.replicas[0].params[name].shape().to_vec();
+            let a = NDArray::zeros_on(&shape, self.engine.clone());
+            self.store.pull(name, &a, probe)?;
+            out.insert(name.clone(), a.to_vec());
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{create, EngineKind};
+    use crate::io::{synth::class_clusters, ArrayDataIter};
+    use crate::kvstore::{Consistency, LocalKVStore};
+    use crate::models::mlp;
+    use crate::optimizer::Sgd;
+
+    #[test]
+    fn context_display_and_fields() {
+        let c = Context::cpu(1, 4);
+        assert_eq!(c.device, 1);
+        assert_eq!(c.num_devices, 4);
+        assert_eq!(format!("{c}"), "cpu(1/4)");
+    }
+
+    #[test]
+    fn bind_validates_config() {
+        let engine = create(EngineKind::Threaded, 2);
+        let model = mlp(&[16], 8, 4);
+        let shapes = model.param_shapes(4).unwrap();
+        let mk_store = |parts: usize| {
+            Arc::new(LocalKVStore::new(
+                engine.clone(),
+                parts,
+                Arc::new(Sgd::new(0.1)),
+                Consistency::Sequential,
+            )) as Arc<dyn KVStore>
+        };
+        // shards not divisible by devices
+        let cfg = TrainerConfig { devices: 2, shards: 3, ..Default::default() };
+        assert!(DataParallelTrainer::bind(
+            &model.symbol, engine.clone(), 4, &[8], &shapes, mk_store(3), cfg
+        )
+        .is_err());
+        // store part count mismatch
+        let cfg = TrainerConfig { devices: 2, shards: 2, ..Default::default() };
+        assert!(DataParallelTrainer::bind(
+            &model.symbol, engine.clone(), 4, &[8], &shapes, mk_store(4), cfg
+        )
+        .is_err());
+        // inference bind rejected
+        let cfg = TrainerConfig {
+            devices: 1,
+            bind: crate::executor::BindConfig::inference(),
+            ..Default::default()
+        };
+        assert!(DataParallelTrainer::bind(
+            &model.symbol, engine.clone(), 4, &[8], &shapes, mk_store(1), cfg
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn wrong_global_batch_is_rejected() {
+        let engine = create(EngineKind::Threaded, 2);
+        let model = mlp(&[16], 8, 4);
+        let shapes = model.param_shapes(4).unwrap();
+        let store = Arc::new(LocalKVStore::new(
+            engine.clone(),
+            2,
+            Arc::new(Sgd::new(0.1)),
+            Consistency::Sequential,
+        ));
+        let cfg = TrainerConfig { devices: 2, ..Default::default() };
+        let mut t = DataParallelTrainer::bind(
+            &model.symbol,
+            engine.clone(),
+            4,
+            &[8],
+            &shapes,
+            store,
+            cfg,
+        )
+        .unwrap();
+        // iterator batch 6 != shards(2) x shard_batch(4)
+        let ds = class_clusters(64, 4, 8, 0.3, 3);
+        let mut iter = ArrayDataIter::new(ds.features, ds.labels, &[8], 6, false, engine);
+        assert!(t.fit(&mut iter, 1).is_err());
+    }
+}

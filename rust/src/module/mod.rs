@@ -1,6 +1,15 @@
 //! The training module (paper §2.4): parameter init + `fit` / `score`
 //! loops over a symbol, a data iterator and an optimizer, optionally
 //! distributed through a [`KVStore`].
+//!
+//! The KVStore path is built on the [data-parallel round
+//! loop](data_parallel): `Module::fit` is the single-replica
+//! degeneration of [`DataParallelTrainer`], sharing the same pull /
+//! forward-backward / per-layer-overlapped-push code path.
+
+pub mod data_parallel;
+
+pub use data_parallel::{Context, DataParallelTrainer, TrainerConfig};
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -55,6 +64,9 @@ pub struct Module {
     label_arr: Option<NDArray>,
     label_name: String,
     param_names: Vec<String>,
+    /// Synchronization rounds driven so far (the canonical step number
+    /// handed to step-seeded ops on the KVStore path).
+    rounds: u64,
 }
 
 impl Module {
@@ -69,6 +81,7 @@ impl Module {
             label_arr: None,
             label_name: String::new(),
             param_names: vec![],
+            rounds: 0,
         }
     }
 
@@ -182,21 +195,34 @@ impl Module {
     }
 
     /// Train for `epochs` over `iter`.  Returns per-epoch stats.
+    ///
+    /// The KVStore mode runs the shared [data-parallel round
+    /// loop](data_parallel::DataParallelTrainer) with this module as the
+    /// single replica pushing part `device`: pulls are version-stamped,
+    /// and each layer's gradient is pushed the moment it retires inside
+    /// backward (grad-ready hook) — the N=1 degeneration of the
+    /// multi-device trainer.
     pub fn fit(
         &mut self,
         iter: &mut dyn DataIter,
         mode: &UpdateMode,
         epochs: usize,
     ) -> Result<Vec<EpochStats>> {
-        let exec = self.exec.as_ref().ok_or_else(|| Error::Bind("module not bound".into()))?;
-        // Register params with the kvstore once.
-        if let UpdateMode::KvStore { store, device } = mode {
-            for name in &self.param_names {
-                // First init wins; ignore "already initialized".
-                let _ = store.init(name, &self.params[name]);
-                let _ = device;
+        match mode {
+            UpdateMode::Local(opt) => self.fit_local(iter, opt, epochs),
+            UpdateMode::KvStore { store, device } => {
+                self.fit_kvstore(iter, store, *device, epochs)
             }
         }
+    }
+
+    fn fit_local(
+        &mut self,
+        iter: &mut dyn DataIter,
+        opt: &Arc<dyn Optimizer>,
+        epochs: usize,
+    ) -> Result<Vec<EpochStats>> {
+        let exec = self.exec.as_ref().ok_or_else(|| Error::Bind("module not bound".into()))?;
         let mut stats = Vec::with_capacity(epochs);
         for epoch in 0..epochs {
             let t0 = Instant::now();
@@ -206,24 +232,9 @@ impl Module {
             let mut batches = 0usize;
             while let Some(b) = iter.next_batch() {
                 self.load_batch(&b.data, &b.label)?;
-                match mode {
-                    UpdateMode::Local(opt) => {
-                        exec.forward_backward()?;
-                        for name in &self.param_names {
-                            opt.update(name, &self.params[name], exec.grad(name).unwrap());
-                        }
-                    }
-                    UpdateMode::KvStore { store, device } => {
-                        // paper §2.3: pull newest weights, compute, push
-                        // gradients; all engine-scheduled.
-                        for name in &self.param_names {
-                            store.pull(name, &self.params[name], *device)?;
-                        }
-                        exec.forward_backward()?;
-                        for name in &self.param_names {
-                            store.push(name, exec.grad(name).unwrap(), *device)?;
-                        }
-                    }
+                exec.forward_backward()?;
+                for name in &self.param_names {
+                    opt.update(name, &self.params[name], exec.grad(name).unwrap());
                 }
                 // One synchronized head read per batch (loss + accuracy
                 // together) — this wait is the step boundary the replayed
@@ -248,6 +259,45 @@ impl Module {
         Ok(stats)
     }
 
+    fn fit_kvstore(
+        &mut self,
+        iter: &mut dyn DataIter,
+        store: &Arc<dyn KVStore>,
+        device: usize,
+        epochs: usize,
+    ) -> Result<Vec<EpochStats>> {
+        let exec = self.exec.as_ref().ok_or_else(|| Error::Bind("module not bound".into()))?;
+        let data = self.data_arr.as_ref().ok_or_else(|| Error::Bind("module not bound".into()))?;
+        let label =
+            self.label_arr.as_ref().ok_or_else(|| Error::Bind("module not bound".into()))?;
+        // Register params with the kvstore once (first init wins).
+        for name in &self.param_names {
+            let _ = store.init(name, &self.params[name]);
+        }
+        let view = data_parallel::ReplicaView {
+            exec,
+            params: &self.params,
+            data,
+            label,
+            parts: vec![device],
+            offset: 0,
+            pull_device: device,
+        };
+        let mut step = self.rounds;
+        let out = data_parallel::fit_rounds(
+            &self.engine,
+            store,
+            std::slice::from_ref(&view),
+            &self.param_names,
+            iter,
+            &data_parallel::RoundOpts { overlap: true, epochs },
+            &mut step,
+        );
+        drop(view);
+        self.rounds = step;
+        out
+    }
+
     /// Evaluate accuracy over an iterator (forward only).
     pub fn score(&self, iter: &mut dyn DataIter) -> Result<f32> {
         let exec = self.exec.as_ref().ok_or_else(|| Error::Bind("module not bound".into()))?;
@@ -268,7 +318,14 @@ impl Module {
 }
 
 /// Xavier-uniform for weights, zeros for biases/betas, ones for gammas.
-fn init_param(name: &str, shape: &[usize], rng: &mut Rng, engine: &EngineRef) -> NDArray {
+/// Shared by [`Module::bind`] and the data-parallel trainer's replica
+/// binding, so replicas and single-module runs init identically.
+pub(crate) fn init_param(
+    name: &str,
+    shape: &[usize],
+    rng: &mut Rng,
+    engine: &EngineRef,
+) -> NDArray {
     if name.ends_with("_bias") || name.ends_with("_beta") {
         return NDArray::zeros_on(shape, engine.clone());
     }

@@ -1,0 +1,200 @@
+//! Data-parallel multi-device training acceptance (ISSUE 4).
+//!
+//! The determinism contract: the *shard count* defines the math, devices
+//! only decide where shards run — so for a fixed shard count, N-device
+//! `Sequential` training is **bitwise identical** to 1-device training
+//! (asserted for the MLP and AlexNet, and for overlap-on vs overlap-off
+//! pushes).  CI repeats this file under `PALLAS_INTRA_THREADS` in
+//! {1, 4}; the intra-op budget must not change a single bit either.
+//! `Eventual` mode must still reach comparable quality, and the
+//! dist-kvstore loopback (trainer -> DistKVStore -> PsServer over local
+//! TCP) must converge and round-trip the master weights.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use mixnet::engine::{create, EngineKind};
+use mixnet::executor::BindConfig;
+use mixnet::io::{synth, ArrayDataIter};
+use mixnet::kvstore::dist::DistKVStore;
+use mixnet::kvstore::server::{PsServer, ServerUpdater};
+use mixnet::kvstore::{Consistency, KVStore, LocalKVStore};
+use mixnet::models::{alexnet, mlp};
+use mixnet::module::{DataParallelTrainer, EpochStats, TrainerConfig};
+use mixnet::optimizer::Sgd;
+
+/// Train the Figure 2 MLP data-parallel and return (master weights,
+/// epoch stats).
+fn train_mlp(
+    devices: usize,
+    shards: usize,
+    overlap: bool,
+    consistency: Consistency,
+    epochs: usize,
+) -> (HashMap<String, Vec<f32>>, Vec<EpochStats>) {
+    let engine = create(EngineKind::Threaded, 4);
+    let model = mlp(&[32], 16, 4);
+    let shard_batch = 8usize;
+    let global = shards * shard_batch;
+    let ds = synth::class_clusters(512, 4, 16, 0.3, 5);
+    let mut iter =
+        ArrayDataIter::new(ds.features, ds.labels, &[16], global, true, engine.clone());
+    let shapes = model.param_shapes(shard_batch).unwrap();
+    // merged gradient = sum of per-shard means -> rescale to batch mean
+    let store = Arc::new(LocalKVStore::new(
+        engine.clone(),
+        shards,
+        Arc::new(Sgd::new(0.5).rescale(1.0 / shards as f32)),
+        consistency,
+    ));
+    let mut t = DataParallelTrainer::bind(
+        &model.symbol,
+        engine,
+        shard_batch,
+        &[16],
+        &shapes,
+        store,
+        TrainerConfig { devices, shards, overlap, bind: BindConfig::default(), seed: 1 },
+    )
+    .unwrap();
+    let stats = t.fit(&mut iter, epochs).unwrap();
+    (t.pull_params().unwrap(), stats)
+}
+
+fn assert_params_bitwise_eq(a: &HashMap<String, Vec<f32>>, b: &HashMap<String, Vec<f32>>) {
+    assert_eq!(a.len(), b.len());
+    for (name, va) in a {
+        let vb = &b[name];
+        assert_eq!(va.len(), vb.len(), "{name}: length");
+        for (i, (x, y)) in va.iter().zip(vb).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{name}[{i}]: {x} vs {y} — device count changed the math"
+            );
+        }
+    }
+}
+
+#[test]
+fn mlp_sequential_bitwise_identical_across_device_counts() {
+    // 4 shards fixed; 1, 2 and 4 devices must produce identical master
+    // weights AND identical per-epoch loss curves, bit for bit.
+    let (p1, s1) = train_mlp(1, 4, true, Consistency::Sequential, 3);
+    let (p2, s2) = train_mlp(2, 4, true, Consistency::Sequential, 3);
+    let (p4, s4) = train_mlp(4, 4, true, Consistency::Sequential, 3);
+    assert_params_bitwise_eq(&p1, &p2);
+    assert_params_bitwise_eq(&p1, &p4);
+    for ((a, b), c) in s1.iter().zip(&s2).zip(&s4) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "epoch {} loss", a.epoch);
+        assert_eq!(a.loss.to_bits(), c.loss.to_bits(), "epoch {} loss", a.epoch);
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+        assert_eq!(a.accuracy.to_bits(), c.accuracy.to_bits());
+    }
+    // and it actually learns the task
+    assert!(s1.last().unwrap().accuracy > 0.85, "{:?}", s1.last());
+}
+
+#[test]
+fn overlap_on_and_off_are_bitwise_identical() {
+    // Per-layer mid-backward pushes vs after-backward pushes: the staged
+    // part reduction is in part order either way, so only the timing may
+    // differ — never the result.
+    let (on, _) = train_mlp(2, 4, true, Consistency::Sequential, 2);
+    let (off, _) = train_mlp(2, 4, false, Consistency::Sequential, 2);
+    assert_params_bitwise_eq(&on, &off);
+}
+
+#[test]
+fn eventual_mode_reaches_comparable_loss() {
+    let (_, seq) = train_mlp(4, 4, true, Consistency::Sequential, 6);
+    let (_, evt) = train_mlp(4, 4, true, Consistency::Eventual, 6);
+    let (sa, ea) = (seq.last().unwrap().accuracy, evt.last().unwrap().accuracy);
+    assert!(ea > 0.8, "eventual accuracy {ea}");
+    assert!(ea > sa - 0.15, "eventual {ea} too far behind sequential {sa}");
+}
+
+/// AlexNet (reduced 64x64 input, full topology incl. Dropout): the
+/// step-seeded dropout masks draw from the round number, so they are
+/// device-count invariant too.
+fn train_alexnet(devices: usize, shards: usize) -> HashMap<String, Vec<f32>> {
+    let engine = create(EngineKind::Threaded, 4);
+    let model = alexnet(4, 64);
+    let shard_batch = 2usize;
+    let global = shards * shard_batch;
+    let ds = synth::images(2 * global, 4, 3, 64, 64, 0.3, 9);
+    let mut iter =
+        ArrayDataIter::new(ds.features, ds.labels, &[3, 64, 64], global, false, engine.clone());
+    let shapes = model.param_shapes(shard_batch).unwrap();
+    let store = Arc::new(LocalKVStore::new(
+        engine.clone(),
+        shards,
+        Arc::new(Sgd::new(0.01).rescale(1.0 / shards as f32)),
+        Consistency::Sequential,
+    ));
+    let mut t = DataParallelTrainer::bind(
+        &model.symbol,
+        engine,
+        shard_batch,
+        &[3, 64, 64],
+        &shapes,
+        store,
+        TrainerConfig { devices, shards, overlap: true, bind: BindConfig::default(), seed: 3 },
+    )
+    .unwrap();
+    t.fit(&mut iter, 1).unwrap();
+    t.pull_params().unwrap()
+}
+
+#[test]
+fn alexnet_sequential_bitwise_identical_across_device_counts() {
+    let p1 = train_alexnet(1, 2);
+    let p2 = train_alexnet(2, 2);
+    assert_params_bitwise_eq(&p1, &p2);
+}
+
+#[test]
+fn dist_kvstore_loopback_roundtrip() {
+    // One machine, two local device shards, real TCP loopback: the
+    // trainer's per-layer pushes aggregate level-1, ship one message per
+    // round, and training converges; pulled master weights round-trip
+    // stably.
+    let server = PsServer::start(
+        0,
+        1,
+        ServerUpdater { lr: 0.5, momentum: 0.0, weight_decay: 0.0, rescale: 1.0 },
+    )
+    .unwrap();
+    let engine = create(EngineKind::Threaded, 4);
+    // client-side rescale: the shipped gradient is the global-batch mean
+    let kv = Arc::new(
+        DistKVStore::connect(server.addr(), 0, 2, Consistency::Sequential, engine.clone())
+            .unwrap()
+            .with_grad_rescale(0.5),
+    );
+    let store: Arc<dyn KVStore> = kv.clone();
+    let model = mlp(&[32], 16, 4);
+    let shapes = model.param_shapes(8).unwrap();
+    let ds = synth::class_clusters(512, 4, 16, 0.3, 5);
+    let mut iter = ArrayDataIter::new(ds.features, ds.labels, &[16], 16, true, engine.clone());
+    let mut t = DataParallelTrainer::bind(
+        &model.symbol,
+        engine,
+        8,
+        &[16],
+        &shapes,
+        store,
+        TrainerConfig { devices: 2, shards: 2, overlap: true, bind: BindConfig::default(), seed: 1 },
+    )
+    .unwrap();
+    let stats = t.fit(&mut iter, 4).unwrap();
+    assert!(stats.last().unwrap().accuracy > 0.85, "{:?}", stats.last());
+    kv.barrier().unwrap();
+    // round-trip: two consecutive pulls of the master weights agree
+    let a = t.pull_params().unwrap();
+    let b = t.pull_params().unwrap();
+    for (name, va) in &a {
+        assert_eq!(va, &b[name], "{name}: pull round-trip unstable");
+    }
+    assert!(!a.is_empty());
+}
