@@ -14,7 +14,11 @@
 //! `images_per_sec_dev{1,2,4}`, `overlap_on_ms`, `overlap_off_ms` and
 //! `overlap_speedup` (expected > 1: overlapped pushes start mid-backward
 //! and hide under compute; non-overlapped pushes queue behind the whole
-//! pass and pay the wire serially).
+//! pass and pay the wire serially), and the ISSUE 5 straggler case —
+//! one slow replica shard under BSP vs `BoundedDelay(2)`
+//! (`straggler_bsp_ms`, `straggler_bounded_ms`, `straggler_speedup`;
+//! expected > 1: the bounded pipeline hides the straggler's wire tail
+//! under the next rounds' compute).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -25,7 +29,7 @@ use mixnet::executor::BindConfig;
 use mixnet::io::{synth, ArrayDataIter};
 use mixnet::kvstore::{Consistency, KVStore, LocalKVStore};
 use mixnet::models::mlp;
-use mixnet::module::{DataParallelTrainer, TrainerConfig};
+use mixnet::module::{DataParallelTrainer, SyncMode, TrainerConfig};
 use mixnet::ndarray::NDArray;
 use mixnet::optimizer::Sgd;
 use mixnet::util::bench::{print_table, write_bench_json, BenchRecord, Bencher};
@@ -37,11 +41,14 @@ const SHARD_BATCH: usize = 16;
 
 /// Wraps a store with a serialized per-delivery transfer delay — a
 /// single "NIC" all gradient transfers must pass through, so the cost of
-/// *when* a push starts becomes visible in wall-clock.
+/// *when* a push starts becomes visible in wall-clock.  With `slow_part`
+/// set, only that part's deliveries pay the wire (a straggler replica
+/// shard); `None` slows every delivery.
 struct SlowWire {
     inner: LocalKVStore,
     wire: Mutex<()>,
     delay: Duration,
+    slow_part: Option<usize>,
 }
 
 impl KVStore for SlowWire {
@@ -52,7 +59,7 @@ impl KVStore for SlowWire {
         self.inner.push(key, grad, device)
     }
     fn push_part(&self, key: &str, grad: &[f32], part: usize) -> mixnet::Result<()> {
-        {
+        if self.slow_part.is_none() || self.slow_part == Some(part) {
             let _nic = self.wire.lock().unwrap();
             std::thread::sleep(self.delay);
         }
@@ -81,6 +88,7 @@ fn build_trainer(
     engine: &EngineRef,
     devices: usize,
     overlap: bool,
+    sync: SyncMode,
     store: Arc<dyn KVStore>,
 ) -> DataParallelTrainer {
     let model = mlp(&[256, 128], DIM, CLASSES);
@@ -92,7 +100,15 @@ fn build_trainer(
         &[DIM],
         &shapes,
         store,
-        TrainerConfig { devices, shards: SHARDS, overlap, bind: BindConfig::default(), seed: 5 },
+        TrainerConfig {
+            devices,
+            shards: SHARDS,
+            overlap,
+            bind: BindConfig::default(),
+            seed: 5,
+            sync,
+            weights: vec![],
+        },
     )
     .expect("bind trainer")
 }
@@ -126,7 +142,7 @@ fn main() {
             Arc::new(Sgd::new(0.1).rescale(1.0 / SHARDS as f32)),
             Consistency::Sequential,
         ));
-        let mut trainer = build_trainer(&engine, devices, true, store);
+        let mut trainer = build_trainer(&engine, devices, true, SyncMode::Bsp, store);
         let mut iter = dataset(examples, &engine);
         let per_epoch =
             (examples / (SHARDS * SHARD_BATCH)) * SHARDS * SHARD_BATCH;
@@ -176,8 +192,9 @@ fn main() {
             ),
             wire: Mutex::new(()),
             delay,
+            slow_part: None,
         });
-        let mut trainer = build_trainer(&engine, 2, overlap, store);
+        let mut trainer = build_trainer(&engine, 2, overlap, SyncMode::Bsp, store);
         let small = if quick { 256 } else { 512 };
         let mut iter = dataset(small, &engine);
         let name = if overlap { "overlap-on" } else { "overlap-off" };
@@ -207,6 +224,62 @@ fn main() {
     rows.push(vec![
         "overlap speedup (off/on step time)".into(),
         format!("{speedup:.2}x"),
+        String::new(),
+    ]);
+
+    // ---- straggler: BSP vs BoundedDelay(2) under one slow part -------
+    // The last part's deliveries (one straggling replica shard) crawl
+    // through a 400us/key serialized wire.  BSP's full barrier pays that
+    // tail every round; the bounded-delay pipeline leaves up to 2 rounds
+    // in flight and hides the tail under the next rounds' compute —
+    // ISSUE 5's backpressure-with-a-ceiling demonstration.
+    let mut straggler_ms: HashMap<bool, f64> = HashMap::new();
+    for bounded in [false, true] {
+        let engine = create(EngineKind::Threaded, threads);
+        let consistency =
+            if bounded { Consistency::BoundedDelay(2) } else { Consistency::Sequential };
+        let sync = if bounded { SyncMode::BoundedDelay(2) } else { SyncMode::Bsp };
+        let store = Arc::new(SlowWire {
+            inner: LocalKVStore::new(
+                engine.clone(),
+                SHARDS,
+                Arc::new(Sgd::new(0.1).rescale(1.0 / SHARDS as f32)),
+                consistency,
+            ),
+            wire: Mutex::new(()),
+            delay: Duration::from_micros(400),
+            slow_part: Some(SHARDS - 1),
+        });
+        let mut trainer = build_trainer(&engine, 2, true, sync, store);
+        let small = if quick { 256 } else { 512 };
+        let mut iter = dataset(small, &engine);
+        let name = if bounded { "straggler bounded:2" } else { "straggler bsp" };
+        let stats = b.run(name, || {
+            trainer.fit(&mut iter, 1).expect("fit");
+        });
+        let batches = small / (SHARDS * SHARD_BATCH);
+        let step_ms = stats.median_ms() / batches as f64;
+        rows.push(vec![
+            format!("{name}: one slow replica shard, 400us/key wire"),
+            format!("{step_ms:.2} ms/step"),
+            String::new(),
+        ]);
+        records.push(BenchRecord::from_stats(
+            if bounded { "train.straggler_bounded" } else { "train.straggler_bsp" },
+            "dev2x4shards+slow_part",
+            2,
+            &stats,
+            0.0,
+        ));
+        straggler_ms.insert(bounded, step_ms);
+    }
+    let s_speedup = straggler_ms[&false] / straggler_ms[&true];
+    meta.push(("straggler_bsp_ms", format!("{:.3}", straggler_ms[&false])));
+    meta.push(("straggler_bounded_ms", format!("{:.3}", straggler_ms[&true])));
+    meta.push(("straggler_speedup", format!("{s_speedup:.2}")));
+    rows.push(vec![
+        "straggler speedup (bsp/bounded step time)".into(),
+        format!("{s_speedup:.2}x"),
         String::new(),
     ]);
 

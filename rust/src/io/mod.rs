@@ -13,7 +13,9 @@ use crate::error::Result;
 use crate::ndarray::NDArray;
 use crate::util::Rng;
 
-pub use partition::{split_batch, PartitionIter};
+pub use partition::{
+    shard_ranges, shard_ranges_weighted, split_batch, split_batch_weighted, PartitionIter,
+};
 pub use prefetch::PrefetchIter;
 pub use recordio::{Example, RecordReader, RecordWriter};
 

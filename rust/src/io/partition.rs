@@ -44,17 +44,90 @@ pub fn shard_ranges(rows: usize, shards: usize) -> Vec<(usize, usize)> {
     out
 }
 
+/// Weighted shard geometry for heterogeneous replicas: contiguous
+/// `(row offset, row count)` ranges splitting `rows` proportionally to
+/// `weights` — a straggler with weight 1 next to a fast host with
+/// weight 3 receives a quarter of the rows.
+///
+/// Apportionment is largest-remainder (floor `rows·wᵢ/W`, leftover rows
+/// to the largest fractional remainders, ties to the lower index), so
+/// the split is a pure deterministic function of `(rows, weights)`:
+/// counts sum exactly to `rows`, zero-weight entries receive zero rows,
+/// and — like [`shard_ranges`] — empty ranges are omitted.  Equal
+/// weights reproduce `shard_ranges(rows, weights.len())` exactly.
+pub fn shard_ranges_weighted(rows: usize, weights: &[u32]) -> Vec<(usize, usize)> {
+    let w64: Vec<u64> = weights.iter().map(|&w| w as u64).collect();
+    let counts = largest_remainder_counts(rows, &w64)
+        .expect("shard_ranges_weighted: at least one weight must be > 0");
+    let mut out = Vec::with_capacity(weights.len());
+    let mut off = 0usize;
+    for n in counts {
+        if n == 0 {
+            continue;
+        }
+        out.push((off, n));
+        off += n;
+    }
+    debug_assert_eq!(off, rows);
+    out
+}
+
+/// Largest-remainder apportionment of `total` indivisible units over
+/// `weights`: each entry gets `floor(total·wᵢ/W)` units, leftover units
+/// go to the largest fractional remainders (ties to the lower index).
+/// The single deterministic-apportionment primitive behind both
+/// [`shard_ranges_weighted`] (batch rows) and the trainer's
+/// weight-proportional shard placement
+/// ([`crate::module::proportional_parts`]).  Errors when no weight is
+/// positive.
+pub fn largest_remainder_counts(
+    total: usize,
+    weights: &[u64],
+) -> std::result::Result<Vec<usize>, &'static str> {
+    let w_sum: u64 = weights.iter().sum();
+    if weights.is_empty() || w_sum == 0 {
+        return Err("largest-remainder apportionment needs a weight > 0");
+    }
+    let mut counts: Vec<usize> = Vec::with_capacity(weights.len());
+    let mut rems: Vec<(u64, usize)> = Vec::with_capacity(weights.len());
+    let mut assigned = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        let num = total as u64 * w;
+        counts.push((num / w_sum) as usize);
+        assigned += (num / w_sum) as usize;
+        rems.push((num % w_sum, i));
+    }
+    rems.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    for &(rem, i) in rems.iter().take(total - assigned) {
+        debug_assert!(rem > 0, "a zero remainder can never win a leftover unit");
+        counts[i] += 1;
+    }
+    debug_assert_eq!(counts.iter().sum::<usize>(), total);
+    Ok(counts)
+}
+
 /// Split one batch into `shards` contiguous sub-batches (see
 /// [`shard_ranges`] for the geometry; the returned vector has
 /// `min(shards, rows)` entries).
 pub fn split_batch(batch: &DataBatch, shards: usize) -> Vec<DataBatch> {
+    materialize_ranges(batch, shard_ranges(batch.data.shape()[0], shards))
+}
+
+/// Split one batch along the weighted geometry of
+/// [`shard_ranges_weighted`] — the materialized form heterogeneous
+/// multi-process workers consume.
+pub fn split_batch_weighted(batch: &DataBatch, weights: &[u32]) -> Vec<DataBatch> {
+    materialize_ranges(batch, shard_ranges_weighted(batch.data.shape()[0], weights))
+}
+
+fn materialize_ranges(batch: &DataBatch, ranges: Vec<(usize, usize)>) -> Vec<DataBatch> {
     let rows = batch.data.shape()[0];
     debug_assert_eq!(rows, batch.label.size(), "data/label row mismatch");
     let feat: usize = batch.data.shape()[1..].iter().product();
     let data = batch.data.to_vec();
     let label = batch.label.to_vec();
     let engine = batch.data.engine();
-    shard_ranges(rows, shards)
+    ranges
         .into_iter()
         .map(|(off, n)| {
             let mut shape = vec![n];
@@ -78,6 +151,8 @@ pub fn split_batch(batch: &DataBatch, shards: usize) -> Vec<DataBatch> {
 pub struct PartitionIter<'a> {
     inner: &'a mut dyn DataIter,
     shards: usize,
+    /// Per-shard row weights (`None` = equal split).
+    weights: Option<Vec<u32>>,
     queue: VecDeque<DataBatch>,
 }
 
@@ -85,7 +160,25 @@ impl<'a> PartitionIter<'a> {
     /// Wrap `inner`, splitting each of its batches into `shards` parts.
     pub fn new(inner: &'a mut dyn DataIter, shards: usize) -> Self {
         assert!(shards >= 1, "PartitionIter: shards must be >= 1");
-        PartitionIter { inner, shards, queue: VecDeque::new() }
+        PartitionIter { inner, shards, weights: None, queue: VecDeque::new() }
+    }
+
+    /// Wrap `inner`, splitting each batch proportionally to `weights`
+    /// ([`shard_ranges_weighted`]): the elastic-training geometry where a
+    /// straggler replica receives a smaller slice of every global batch.
+    /// Zero-weight shards are omitted from the stream.
+    pub fn with_weights(inner: &'a mut dyn DataIter, weights: &[u32]) -> Self {
+        assert!(!weights.is_empty(), "PartitionIter: weights must be non-empty");
+        assert!(
+            weights.iter().any(|&w| w > 0),
+            "PartitionIter: at least one weight must be > 0"
+        );
+        PartitionIter {
+            inner,
+            shards: weights.len(),
+            weights: Some(weights.to_vec()),
+            queue: VecDeque::new(),
+        }
     }
 
     /// The configured shard count.
@@ -94,11 +187,14 @@ impl<'a> PartitionIter<'a> {
     }
 
     /// The next global batch, split into shards (at most `shards`
-    /// entries; fewer when the batch has fewer rows than shards).
-    /// `None` at epoch end.
+    /// entries; fewer when the batch has fewer rows than shards or some
+    /// weights are zero).  `None` at epoch end.
     pub fn next_shards(&mut self) -> Option<Vec<DataBatch>> {
         let b = self.inner.next_batch()?;
-        Some(split_batch(&b, self.shards))
+        Some(match &self.weights {
+            Some(w) => split_batch_weighted(&b, w),
+            None => split_batch(&b, self.shards),
+        })
     }
 }
 
@@ -117,8 +213,15 @@ impl DataIter for PartitionIter<'_> {
     }
 
     fn batch_size(&self) -> usize {
-        // largest shard size (the first shards get the remainder rows)
-        self.inner.batch_size().div_ceil(self.shards)
+        match &self.weights {
+            // largest shard size (the first shards get the remainder rows)
+            None => self.inner.batch_size().div_ceil(self.shards),
+            Some(w) => {
+                let total: u64 = w.iter().map(|&x| x as u64).sum();
+                let wmax = *w.iter().max().unwrap() as u64;
+                (self.inner.batch_size() as u64 * wmax).div_ceil(total) as usize
+            }
+        }
     }
 }
 
@@ -181,6 +284,52 @@ mod tests {
             }
             assert_eq!(expect, rows);
         }
+    }
+
+    #[test]
+    fn weighted_ranges_split_proportionally() {
+        // weights {3, 1}: 8 rows -> 6:2, 4 rows -> 3:1
+        assert_eq!(shard_ranges_weighted(8, &[3, 1]), vec![(0, 6), (6, 2)]);
+        assert_eq!(shard_ranges_weighted(4, &[3, 1]), vec![(0, 3), (3, 1)]);
+        // largest-remainder ties resolve to the lower index
+        assert_eq!(shard_ranges_weighted(4, &[1, 1, 1]), vec![(0, 2), (2, 1), (3, 1)]);
+        // a degenerate zero-weight replica is omitted entirely
+        assert_eq!(shard_ranges_weighted(4, &[2, 0, 2]), vec![(0, 2), (2, 2)]);
+        // equal weights reproduce the unweighted geometry exactly
+        for (rows, shards) in [(10usize, 4usize), (17, 5), (8, 4), (3, 7)] {
+            let equal = vec![1u32; shards];
+            assert_eq!(
+                shard_ranges_weighted(rows, &equal),
+                shard_ranges(rows, shards),
+                "rows {rows} shards {shards}"
+            );
+        }
+        // covers exactly, in order, for skewed weights
+        for (rows, weights) in [(17usize, vec![5u32, 1, 3]), (64, vec![7, 2]), (9, vec![1, 8])] {
+            let rs = shard_ranges_weighted(rows, &weights);
+            let mut expect = 0;
+            for (off, n) in rs {
+                assert_eq!(off, expect);
+                assert!(n >= 1);
+                expect += n;
+            }
+            assert_eq!(expect, rows);
+        }
+    }
+
+    #[test]
+    fn weighted_partition_iter_streams_proportional_shards() {
+        let mut it = iter(8, 8);
+        let mut p = PartitionIter::with_weights(&mut it, &[3, 1]);
+        assert_eq!(p.shards(), 2);
+        assert_eq!(p.batch_size(), 6, "largest weighted shard");
+        let shards = p.next_shards().unwrap();
+        let sizes: Vec<usize> = shards.iter().map(|s| s.label.size()).collect();
+        assert_eq!(sizes, vec![6, 2]);
+        // contiguous coverage, rows travel with their features
+        let all: Vec<f32> = shards.iter().flat_map(|s| s.label.to_vec()).collect();
+        assert_eq!(all, (0..8).map(|v| v as f32).collect::<Vec<_>>());
+        assert_eq!(shards[1].data.to_vec()[0], 12.0, "row 6 starts at feature 12");
     }
 
     #[test]

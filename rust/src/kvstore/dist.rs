@@ -20,13 +20,13 @@ use crate::engine::EngineRef;
 use crate::error::{Error, Result};
 use crate::ndarray::NDArray;
 
-/// Last fetched weight per key (round-stamped): within one round every
+/// Last fetched weight per key (version-stamped): within one round every
 /// device pulls the same watermark, so only the first pull pays an RPC
 /// — the rest copy from this cache (the distributed analogue of
-/// `LocalKVStore`'s version-stamped pulls).  Sequential only; eventual
-/// pulls always refetch for freshness.
+/// `LocalKVStore`'s version-stamped pulls).  Sequential and
+/// bounded-delay only; eventual pulls always refetch for freshness.
 struct PullCache {
-    /// Watermark the cached bytes were fetched at (`u64::MAX` = empty).
+    /// Server version of the cached bytes (`u64::MAX` = empty).
     version: u64,
     data: Vec<f32>,
 }
@@ -118,6 +118,17 @@ impl DistKVStore {
     pub fn with_grad_rescale(mut self, f: f32) -> Self {
         self.grad_rescale = f;
         self
+    }
+
+    /// The server's `(messages, bytes)` received counters — harness
+    /// observability (uses the barrier connection: a plain synchronous
+    /// RPC that must not interleave with engine-scheduled push/pull
+    /// frames on the main connection).
+    pub fn server_stats(&self) -> Result<(u64, u64)> {
+        match self.barrier_conn.rpc(&Msg::Stats)? {
+            Msg::StatsReply { msgs, bytes } => Ok((msgs, bytes)),
+            other => Err(Error::kv(format!("stats: unexpected reply {other:?}"))),
+        }
     }
 
     /// Epoch barrier across machines (round-robin id).
@@ -257,6 +268,10 @@ impl KVStore for DistKVStore {
                 keys.get(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
             let v = match self.consistency {
                 Consistency::Sequential => st.rounds,
+                // Staleness ceiling: the server parks the pull until its
+                // version reaches `rounds - k` — the level-2 analogue of
+                // the local store's snapshot wait (server.rs watermark).
+                Consistency::BoundedDelay(k) => st.rounds.saturating_sub(k),
                 Consistency::Eventual => 0,
             };
             (v, st.shape.clone(), Arc::clone(&st.cache))
@@ -268,13 +283,13 @@ impl KVStore for DistKVStore {
                 shape
             )));
         }
-        // Sequential pulls within one round all wait on the same
-        // watermark and return the same bytes: serve repeats (other
-        // devices' pulls of this round) from the round-stamped cache so
-        // only one RPC crosses the wire per (key, round).  Eventual
-        // pulls always refetch — their whole point is best-effort
-        // freshness.
-        let use_cache = self.consistency == Consistency::Sequential;
+        // Sequential / bounded-delay pulls within one round all wait on
+        // the same watermark: serve repeats (other devices' pulls of
+        // this round) from the version-stamped cache when the cached
+        // server version already satisfies the watermark, so only one
+        // RPC crosses the wire per (key, round).  Eventual pulls always
+        // refetch — their whole point is best-effort freshness.
+        let use_cache = self.consistency != Consistency::Eventual;
         let conn = Arc::clone(&self.conn);
         let key = key.to_string();
         let storage = out.storage();
@@ -285,19 +300,22 @@ impl KVStore for DistKVStore {
             Box::new(move || {
                 if use_cache {
                     let c = cache.lock().unwrap();
-                    if c.version == after_version && c.data.len() == storage.len() {
+                    if c.version != u64::MAX
+                        && c.version >= after_version
+                        && c.data.len() == storage.len()
+                    {
                         unsafe { storage.slice_mut() }.copy_from_slice(&c.data);
                         return;
                     }
                 }
                 match conn.rpc(&Msg::Pull { key: key.clone(), after_version }) {
-                    Ok(Msg::Value { value, .. }) => {
+                    Ok(Msg::Value { value, version, .. }) => {
                         let dst = unsafe { storage.slice_mut() };
                         if dst.len() == value.len() {
                             dst.copy_from_slice(&value);
                             if use_cache {
                                 let mut c = cache.lock().unwrap();
-                                c.version = after_version;
+                                c.version = version;
                                 c.data = value;
                             }
                         }
@@ -442,6 +460,32 @@ mod tests {
         kv.flush();
         // lr=1: w = 0 - 0.5 * (3 + 5)
         assert_eq!(out.to_vec(), vec![-4.0]);
+    }
+
+    #[test]
+    fn bounded_delay_pull_relaxes_the_watermark() {
+        // 2 machines expected; only this machine pushes.  A sequential
+        // pull would park on the incomplete round; BoundedDelay(1)
+        // relaxes the watermark to rounds-1 = 0 and returns the last
+        // committed weight immediately — staleness <= 1 round.
+        let srv = PsServer::start(0, 2, plain_updater()).unwrap();
+        let engine = create(EngineKind::Threaded, 2);
+        let kv = DistKVStore::connect(
+            srv.addr(),
+            0,
+            1,
+            Consistency::BoundedDelay(1),
+            engine.clone(),
+        )
+        .unwrap();
+        kv.init("w", &NDArray::from_vec_on(&[1], vec![6.0], engine.clone())).unwrap();
+        kv.push("w", &NDArray::from_vec_on(&[1], vec![1.0], engine.clone()), 0).unwrap();
+        let out = NDArray::zeros_on(&[1], engine);
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush(); // must NOT deadlock despite the incomplete round
+        assert_eq!(out.to_vec(), vec![6.0]);
+        let (msgs, _bytes) = kv.server_stats().unwrap();
+        assert!(msgs >= 3, "init + push + pull crossed the wire");
     }
 
     #[test]

@@ -27,7 +27,7 @@ pub mod wire;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::engine::EngineRef;
 use crate::error::{Error, Result};
@@ -40,7 +40,14 @@ use crate::optimizer::Optimizer;
 pub enum Consistency {
     /// A pull observes all pushes issued before it by this worker.
     Sequential,
-    /// A pull may return a stale snapshot (no blocking).
+    /// The bounded-delay model the paper's §2.3 footnote sketches,
+    /// sitting between `Sequential` and `Eventual`: a pull observes a
+    /// **committed snapshot at most `k` rounds older** than the newest
+    /// pushed round — it blocks (backpressure) until the snapshot
+    /// catches up to `push_round - k`.  `BoundedDelay(0)` has
+    /// `Sequential` freshness; large `k` approaches `Eventual`.
+    BoundedDelay(u64),
+    /// A pull may return a stale snapshot (no blocking, no bound).
     Eventual,
 }
 
@@ -147,6 +154,85 @@ impl PartStage {
     }
 }
 
+/// A committed parameter snapshot: the value the weight held after some
+/// completed round, shared with snapshot-reading paths (eventual and
+/// bounded-delay pulls, live serving).  Commits happen inside engine ops
+/// ordered after the round's updater, so a reader never observes a
+/// half-written ("torn") buffer — it sees exactly the bytes of one
+/// committed round.
+pub(crate) struct SnapCell {
+    data: Mutex<Vec<f32>>,
+    /// The round (key version) the committed bytes correspond to.
+    round: AtomicU64,
+    cv: Condvar,
+}
+
+impl SnapCell {
+    fn new(init: Vec<f32>) -> SnapCell {
+        SnapCell { data: Mutex::new(init), round: AtomicU64::new(0), cv: Condvar::new() }
+    }
+
+    /// Commit `w` as the snapshot of `round`.  Snapshot ops all read the
+    /// weight var, so the engine serializes them between updater writes
+    /// and they arrive in round order; the monotonic guard is belt and
+    /// braces.
+    fn commit(&self, w: &[f32], round: u64) {
+        let mut d = self.data.lock().unwrap();
+        if round <= self.round.load(Ordering::Relaxed) && round != 0 {
+            return;
+        }
+        d.clear();
+        d.extend_from_slice(w);
+        self.round.store(round, Ordering::Release);
+        self.cv.notify_all();
+    }
+
+    fn round(&self) -> u64 {
+        self.round.load(Ordering::Acquire)
+    }
+
+    /// Block the calling thread until the committed snapshot is at least
+    /// `target` rounds new — the bounded-delay backpressure point.
+    fn wait_round(&self, target: u64) {
+        let mut d = self.data.lock().unwrap();
+        while self.round.load(Ordering::Acquire) < target {
+            d = self.cv.wait(d).unwrap();
+        }
+    }
+
+    /// A copy of the committed bytes plus the round they belong to, read
+    /// atomically (the pair can never mix two rounds).  The buffer is
+    /// leased from the storage pool — the consuming engine op releases
+    /// it — so steady-state bounded-delay pulls and live refreshes
+    /// allocate nothing after warmup (the PR 3 hot-loop contract).
+    fn take_committed(&self) -> (Box<[f32]>, u64) {
+        let d = self.data.lock().unwrap();
+        let mut buf = pool::global().acquire_uninit(d.len());
+        buf.copy_from_slice(&d);
+        (buf, self.round.load(Ordering::Relaxed))
+    }
+
+    /// Lock the committed bytes for in-place reading (engine-op side).
+    fn read(&self) -> std::sync::MutexGuard<'_, Vec<f32>> {
+        self.data.lock().unwrap()
+    }
+}
+
+/// Pull-path statistics (see [`LocalKVStore::pull_stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PullStats {
+    /// Pulls that scheduled a copy.
+    pub copies: u64,
+    /// Pulls answered from the device cache (version unchanged).
+    pub skips: u64,
+    /// Snapshot age (rounds behind the newest pushed round) observed by
+    /// the most recent snapshot-serving pull.
+    pub last_snap_age: u64,
+    /// Largest snapshot age any snapshot-serving pull observed — the
+    /// staleness a bounded-delay test asserts against its `k`.
+    pub max_snap_age: u64,
+}
+
 struct KeyState {
     weight: NDArray,
     /// Merged-gradient buffer the updater consumes.
@@ -159,12 +245,13 @@ struct KeyState {
     version: u64,
     /// device -> (version, out-var id) of its last sequential pull.
     pulled: HashMap<usize, (u64, u64)>,
-    /// device -> (snapshot version, out-var id) of its last eventual pull.
+    /// device -> (snapshot round, out-var id) of its last snapshot pull.
     pulled_snap: HashMap<usize, (u64, u64)>,
-    /// Committed snapshot for eventual-consistency pulls.
-    snapshot: Arc<Mutex<Vec<f32>>>,
-    /// Snapshots committed so far (bumped by the snapshot op itself).
-    snap_version: Arc<AtomicU64>,
+    /// Committed snapshot for eventual / bounded-delay / live pulls.
+    snap: Arc<SnapCell>,
+    /// Highest round for which a snapshot op has been *scheduled* (the
+    /// commit itself runs later, as an engine op).
+    snap_sched: u64,
 }
 
 /// Level-1 (intra-machine) key-value store over the dependency engine.
@@ -176,6 +263,10 @@ pub struct LocalKVStore {
     keys: Mutex<HashMap<String, KeyState>>,
     pull_copies: AtomicU64,
     pull_skips: AtomicU64,
+    /// Commit a snapshot every N completed rounds (default 1).
+    snapshot_cadence: AtomicU64,
+    snap_age_last: AtomicU64,
+    snap_age_max: AtomicU64,
 }
 
 impl LocalKVStore {
@@ -195,37 +286,120 @@ impl LocalKVStore {
             keys: Mutex::new(HashMap::new()),
             pull_copies: AtomicU64::new(0),
             pull_skips: AtomicU64::new(0),
+            snapshot_cadence: AtomicU64::new(1),
+            snap_age_last: AtomicU64::new(0),
+            snap_age_max: AtomicU64::new(0),
         }
     }
 
-    /// `(copies, skips)` — pulls that scheduled a copy vs pulls answered
-    /// from the device's cache because the version was unchanged.
-    pub fn pull_stats(&self) -> (u64, u64) {
-        (self.pull_copies.load(Ordering::Relaxed), self.pull_skips.load(Ordering::Relaxed))
+    /// Commit a snapshot every `rounds` completed rounds instead of every
+    /// round (the default).  A coarser cadence makes eventual pulls
+    /// staler but cheaper; bounded-delay pulls stay correct — a pull
+    /// whose staleness target outruns the cadence schedules a demand
+    /// snapshot itself.
+    pub fn snapshot_every(&self, rounds: u64) {
+        self.snapshot_cadence.store(rounds.max(1), Ordering::Relaxed);
     }
 
-    /// Round complete: bump the version, run the user updater on the
-    /// merged gradient, refresh the eventual-consistency snapshot.
-    /// Caller holds the keys lock, so the updater and snapshot ops are
-    /// scheduled atomically with the round bookkeeping.
-    fn commit_round(&self, key: &str, st: &mut KeyState) {
-        st.version += 1;
-        self.updater.update(key, &st.weight, &st.accum);
-        let snap = Arc::clone(&st.snapshot);
-        let sv = Arc::clone(&st.snap_version);
+    /// Pull-path statistics: copies vs cache skips, plus the snapshot
+    /// age (rounds behind the newest push round) the snapshot-serving
+    /// pulls actually observed — what a bounded-delay staleness test
+    /// asserts never exceeded its `k`.
+    pub fn pull_stats(&self) -> PullStats {
+        PullStats {
+            copies: self.pull_copies.load(Ordering::Relaxed),
+            skips: self.pull_skips.load(Ordering::Relaxed),
+            last_snap_age: self.snap_age_last.load(Ordering::Relaxed),
+            max_snap_age: self.snap_age_max.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The round (version) of the currently committed snapshot for `key`.
+    pub fn snapshot_round(&self, key: &str) -> Result<u64> {
+        let keys = self.keys.lock().unwrap();
+        let st = keys.get(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
+        Ok(st.snap.round())
+    }
+
+    /// Element count of `key`'s weight (live-serving attach validation).
+    pub fn value_len(&self, key: &str) -> Result<usize> {
+        let keys = self.keys.lock().unwrap();
+        let st = keys.get(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
+        Ok(st.weight.size())
+    }
+
+    /// Schedule one engine op copying `out` from the latest **committed**
+    /// snapshot, whatever consistency mode the store runs — the live
+    /// serving path.  The bytes are captured on the caller thread under
+    /// the snapshot lock, so the destination receives exactly one
+    /// committed round (never a torn mix), and the engine write grant on
+    /// `out` orders the refresh against any in-flight forward reading it.
+    /// Returns the round captured.
+    pub fn pull_committed(&self, key: &str, out: &NDArray) -> Result<u64> {
+        let snap = {
+            let keys = self.keys.lock().unwrap();
+            let st =
+                keys.get(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
+            Arc::clone(&st.snap)
+        };
+        let (data, round) = snap.take_committed();
+        if data.len() != out.size() {
+            let n = data.len();
+            pool::global().release(data);
+            return Err(Error::kv(format!(
+                "pull_committed '{key}': out size {} != weight size {n}",
+                out.size()
+            )));
+        }
+        let os = out.storage();
+        self.engine.push(
+            "kv.pull_live",
+            vec![],
+            vec![out.var()],
+            Box::new(move || {
+                unsafe { os.slice_mut() }.copy_from_slice(&data);
+                pool::global().release(data);
+            }),
+        );
+        Ok(round)
+    }
+
+    fn record_snap_age(&self, age: u64) {
+        self.snap_age_last.store(age, Ordering::Relaxed);
+        self.snap_age_max.fetch_max(age, Ordering::Relaxed);
+    }
+
+    /// Schedule a snapshot of the weight as of `st.version`.  The op
+    /// *reads* the weight var: the engine orders it after this round's
+    /// updater and before the next round's (WAR), so commits land in
+    /// round order carrying exactly the post-round bytes.
+    fn schedule_snapshot(&self, st: &mut KeyState) {
+        let round = st.version;
+        st.snap_sched = round;
+        let snap = Arc::clone(&st.snap);
         let ws = st.weight.storage();
         self.engine.push(
             "kv.snapshot",
             vec![st.weight.var()],
             vec![],
             Box::new(move || {
-                let mut s = snap.lock().unwrap();
                 let w = unsafe { ws.slice() };
-                s.clear();
-                s.extend_from_slice(w);
-                sv.fetch_add(1, Ordering::AcqRel);
+                snap.commit(w, round);
             }),
         );
+    }
+
+    /// Round complete: bump the version, run the user updater on the
+    /// merged gradient, refresh the committed snapshot on cadence.
+    /// Caller holds the keys lock, so the updater and snapshot ops are
+    /// scheduled atomically with the round bookkeeping.
+    fn commit_round(&self, key: &str, st: &mut KeyState) {
+        st.version += 1;
+        self.updater.update(key, &st.weight, &st.accum);
+        let cadence = self.snapshot_cadence.load(Ordering::Relaxed).max(1);
+        if st.version >= st.snap_sched + cadence {
+            self.schedule_snapshot(st);
+        }
     }
 }
 
@@ -238,7 +412,6 @@ impl KVStore for LocalKVStore {
         let weight = NDArray::zeros_on(value.shape(), self.engine.clone());
         weight.copy_from_(value);
         let accum = NDArray::zeros_on(value.shape(), self.engine.clone());
-        let snapshot = Arc::new(Mutex::new(value.to_vec()));
         keys.insert(
             key.to_string(),
             KeyState {
@@ -249,9 +422,9 @@ impl KVStore for LocalKVStore {
                 version: 0,
                 pulled: HashMap::new(),
                 pulled_snap: HashMap::new(),
-                snapshot,
-                // the init value is the first committed snapshot
-                snap_version: Arc::new(AtomicU64::new(1)),
+                // the init value is the committed snapshot of round 0
+                snap: Arc::new(SnapCell::new(value.to_vec())),
+                snap_sched: 0,
             },
         );
         Ok(())
@@ -339,7 +512,9 @@ impl KVStore for LocalKVStore {
                 self.pull_copies.fetch_add(1, Ordering::Relaxed);
             }
             Consistency::Eventual => {
-                let stamp = (st.snap_version.load(Ordering::Acquire), out.var().id());
+                let snap_round = st.snap.round();
+                self.record_snap_age(st.version.saturating_sub(snap_round));
+                let stamp = (snap_round, out.var().id());
                 if st.pulled_snap.get(&device) == Some(&stamp) {
                     self.pull_skips.fetch_add(1, Ordering::Relaxed);
                     return Ok(());
@@ -347,18 +522,74 @@ impl KVStore for LocalKVStore {
                 // Snapshot read: no dependency on in-flight updates.  The
                 // op may observe a snapshot newer than `stamp` records —
                 // that only means the next pull conservatively re-copies.
-                let snap = Arc::clone(&st.snapshot);
+                let snap = Arc::clone(&st.snap);
                 let os = out.storage();
                 self.engine.push(
                     "kv.pull_eventual",
                     vec![],
                     vec![out.var()],
                     Box::new(move || {
-                        let s = snap.lock().unwrap();
+                        let s = snap.read();
                         unsafe { os.slice_mut() }.copy_from_slice(&s);
                     }),
                 );
                 st.pulled_snap.insert(device, stamp);
+                self.pull_copies.fetch_add(1, Ordering::Relaxed);
+            }
+            Consistency::BoundedDelay(k) => {
+                // Staleness ceiling: serve a committed snapshot no older
+                // than `version - k`.  The wait happens on the *caller*
+                // thread (the trainer), which is exactly the backpressure
+                // the bounded-delay model prescribes — the engine keeps
+                // draining the updater/snapshot ops that unblock it.
+                let target = st.version.saturating_sub(k);
+                if st.snap_sched < target {
+                    // Snapshot cadence lags the bound: demand one.  The
+                    // op reads the weight var, so it commits the state of
+                    // exactly `st.version` rounds.
+                    self.schedule_snapshot(st);
+                }
+                let cur_round = st.snap.round();
+                if cur_round >= target
+                    && st.pulled_snap.get(&device) == Some(&(cur_round, out.var().id()))
+                {
+                    self.record_snap_age(st.version.saturating_sub(cur_round));
+                    self.pull_skips.fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
+                let snap = Arc::clone(&st.snap);
+                let version = st.version;
+                drop(keys);
+                snap.wait_round(target);
+                // Capture the committed bytes *now*, on the caller
+                // thread: a later snapshot commit racing the copy op
+                // could otherwise serve a round newer than the caller's
+                // staleness window implies (and would break the
+                // BoundedDelay(0) ≡ Sequential bitwise contract).
+                let (data, observed) = snap.take_committed();
+                self.record_snap_age(version.saturating_sub(observed));
+                if data.len() != out.size() {
+                    let n = data.len();
+                    pool::global().release(data);
+                    return Err(Error::kv(format!(
+                        "pull '{key}': out size {} != weight size {n}",
+                        out.size()
+                    )));
+                }
+                let os = out.storage();
+                self.engine.push(
+                    "kv.pull_bounded",
+                    vec![],
+                    vec![out.var()],
+                    Box::new(move || {
+                        unsafe { os.slice_mut() }.copy_from_slice(&data);
+                        pool::global().release(data);
+                    }),
+                );
+                let mut keys = self.keys.lock().unwrap();
+                if let Some(st) = keys.get_mut(key) {
+                    st.pulled_snap.insert(device, (observed, out.var().id()));
+                }
                 self.pull_copies.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -477,25 +708,25 @@ mod tests {
         let out = NDArray::zeros_on(&[2], e.clone());
         kv.pull("w", &out, 0).unwrap();
         kv.flush();
-        assert_eq!(kv.pull_stats(), (1, 0));
+        assert_eq!((kv.pull_stats().copies, kv.pull_stats().skips), (1, 0));
         assert_eq!(out.to_vec(), vec![3.0, 4.0]);
         // same device, same array, no update since -> skipped, still right
         kv.pull("w", &out, 0).unwrap();
         kv.pull("w", &out, 0).unwrap();
         kv.flush();
-        assert_eq!(kv.pull_stats(), (1, 2));
+        assert_eq!((kv.pull_stats().copies, kv.pull_stats().skips), (1, 2));
         assert_eq!(out.to_vec(), vec![3.0, 4.0]);
         // a different destination array must copy even at the same version
         let other = NDArray::zeros_on(&[2], e.clone());
         kv.pull("w", &other, 0).unwrap();
         kv.flush();
-        assert_eq!(kv.pull_stats(), (2, 2));
+        assert_eq!((kv.pull_stats().copies, kv.pull_stats().skips), (2, 2));
         assert_eq!(other.to_vec(), vec![3.0, 4.0]);
         // an update invalidates the stamp: next pull copies the new value
         kv.push("w", &NDArray::from_vec_on(&[2], vec![1.0, 1.0], e.clone()), 0).unwrap();
         kv.pull("w", &out, 0).unwrap();
         kv.flush();
-        assert_eq!(kv.pull_stats(), (3, 2));
+        assert_eq!((kv.pull_stats().copies, kv.pull_stats().skips), (3, 2));
         assert_eq!(out.to_vec(), vec![2.0, 3.0], "lr=1: w -= g");
     }
 
@@ -508,8 +739,8 @@ mod tests {
         kv.pull("w", &out, 0).unwrap();
         kv.flush();
         assert_eq!(out.to_vec(), vec![5.0]);
-        let (copies, skips) = kv.pull_stats();
-        assert_eq!((copies, skips), (1, 1));
+        let s = kv.pull_stats();
+        assert_eq!((s.copies, s.skips), (1, 1));
         // complete a round; once the snapshot commits, the pull re-copies
         for d in 0..2 {
             kv.push("w", &NDArray::from_vec_on(&[1], vec![0.5], e.clone()), d).unwrap();
@@ -518,7 +749,85 @@ mod tests {
         kv.pull("w", &out, 0).unwrap();
         kv.flush();
         assert_eq!(out.to_vec(), vec![4.0], "5 - (0.5+0.5)");
-        assert_eq!(kv.pull_stats().0, 2);
+        assert_eq!(kv.pull_stats().copies, 2);
+    }
+
+    #[test]
+    fn snapshot_cadence_and_age_reporting() {
+        // snapshot_every(2): after one completed round the committed
+        // snapshot is still round 0, and the eventual pull reports age 1;
+        // after the second round the snapshot catches up (age 0).
+        let (kv, e) = store(1, Consistency::Eventual);
+        kv.snapshot_every(2);
+        kv.init("w", &NDArray::from_vec_on(&[1], vec![8.0], e.clone())).unwrap();
+        kv.push("w", &NDArray::from_vec_on(&[1], vec![1.0], e.clone()), 0).unwrap();
+        kv.flush();
+        let out = NDArray::zeros_on(&[1], e.clone());
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        assert_eq!(out.to_vec(), vec![8.0], "snapshot still at round 0");
+        assert_eq!(kv.pull_stats().last_snap_age, 1);
+        kv.push("w", &NDArray::from_vec_on(&[1], vec![1.0], e.clone()), 0).unwrap();
+        kv.flush();
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        assert_eq!(out.to_vec(), vec![6.0], "round-2 snapshot committed");
+        assert_eq!(kv.pull_stats().last_snap_age, 0);
+        assert_eq!(kv.pull_stats().max_snap_age, 1);
+        assert_eq!(kv.snapshot_round("w").unwrap(), 2);
+    }
+
+    #[test]
+    fn bounded_delay_pull_respects_staleness_ceiling() {
+        // BoundedDelay(1): a pull after 3 rounds must serve a snapshot of
+        // round >= 2; with a coarse cadence it demands one itself.
+        let engine = create(EngineKind::Threaded, 4);
+        let opt = Arc::new(Sgd::new(1.0));
+        let kv = LocalKVStore::new(engine.clone(), 1, opt, Consistency::BoundedDelay(1));
+        kv.snapshot_every(100); // never on cadence: pulls must demand
+        kv.init("w", &NDArray::from_vec_on(&[1], vec![10.0], engine.clone())).unwrap();
+        for _ in 0..3 {
+            kv.push("w", &NDArray::from_vec_on(&[1], vec![1.0], engine.clone()), 0).unwrap();
+        }
+        let out = NDArray::zeros_on(&[1], engine);
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        // The demanded snapshot reads the weight *after all 3 scheduled
+        // updates* (engine-ordered), so the pull observes round 3, age 0
+        // — and never anything older than round 2.
+        assert_eq!(out.to_vec(), vec![7.0]);
+        assert!(kv.pull_stats().max_snap_age <= 1, "{:?}", kv.pull_stats());
+    }
+
+    #[test]
+    fn bounded_delay_zero_matches_sequential_values() {
+        let (kv, e) = store(1, Consistency::BoundedDelay(0));
+        kv.init("w", &NDArray::from_vec_on(&[2], vec![1.0, 2.0], e.clone())).unwrap();
+        kv.push("w", &NDArray::from_vec_on(&[2], vec![0.5, 0.5], e.clone()), 0).unwrap();
+        let out = NDArray::zeros_on(&[2], e);
+        kv.pull("w", &out, 0).unwrap();
+        kv.flush();
+        assert_eq!(out.to_vec(), vec![0.5, 1.5], "k=0 pulls are fully fresh");
+        assert_eq!(kv.pull_stats().max_snap_age, 0);
+    }
+
+    #[test]
+    fn pull_committed_serves_whole_committed_rounds() {
+        // The live-serving read path: every pull_committed must return a
+        // buffer from exactly one committed round — with uniform-valued
+        // weights a torn copy would mix two different values.
+        let (kv, e) = store(1, Consistency::Sequential);
+        kv.init("w", &NDArray::from_vec_on(&[64], vec![100.0; 64], e.clone())).unwrap();
+        assert_eq!(kv.value_len("w").unwrap(), 64);
+        for _ in 0..5 {
+            kv.push("w", &NDArray::from_vec_on(&[64], vec![1.0; 64], e.clone()), 0).unwrap();
+            let out = NDArray::zeros_on(&[64], e.clone());
+            let round = kv.pull_committed("w", &out).unwrap();
+            let v = out.to_vec();
+            assert!(v.iter().all(|x| x.to_bits() == v[0].to_bits()), "torn read: {v:?}");
+            assert_eq!(v[0], 100.0 - round as f32, "value matches the committed round");
+        }
+        kv.flush();
     }
 
     #[test]

@@ -4,8 +4,11 @@
 //! Pushes from the `num_machines` level-1 aggregators are summed per
 //! round, the server-side SGD updater is applied, and the key's version
 //! advances.  Pulls carry an `after_version` watermark: sequential
-//! consistency waits for the watermark, eventual consistency passes 0 and
-//! is served immediately.
+//! consistency waits for the full watermark (`rounds`), **bounded-delay**
+//! consistency waits for `rounds - k` (the client computes the relaxed
+//! watermark, so one wire primitive serves the whole §2.3 consistency
+//! spectrum), and eventual consistency passes 0 and is served
+//! immediately.
 
 use std::collections::HashMap;
 use std::io::ErrorKind;
@@ -285,6 +288,13 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
                 drop(st);
                 let _ = write_msg(&mut writer, &Msg::Ack);
             }
+            Msg::Stats => {
+                let reply = Msg::StatsReply {
+                    msgs: shared.msgs_in.load(Ordering::Relaxed),
+                    bytes: shared.bytes_in.load(Ordering::Relaxed),
+                };
+                let _ = write_msg(&mut writer, &reply);
+            }
             Msg::Shutdown => {
                 shared.stop.store(true, Ordering::SeqCst);
                 shared.cv.notify_all();
@@ -417,5 +427,37 @@ mod tests {
         rpc(&mut c, &Msg::Push { key: "w".into(), value: vec![0.0; 100], machine: 0 });
         assert_eq!(srv.messages_received(), 2);
         assert_eq!(srv.bytes_received(), 800);
+        // the same counters over the wire (harness observability)
+        match rpc(&mut c, &Msg::Stats) {
+            Msg::StatsReply { msgs, bytes } => {
+                assert_eq!(msgs, 3, "init + push + stats itself");
+                assert_eq!(bytes, 800);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bounded_delay_watermark_is_served_without_full_round() {
+        // 2 machines; only machine 0 has pushed.  A pull at watermark
+        // rounds-k = 0 (client-side bounded-delay relaxation) must be
+        // served immediately with the pre-round weight, while the full
+        // sequential watermark would park.
+        let srv = PsServer::start(
+            0,
+            2,
+            ServerUpdater { lr: 1.0, momentum: 0.0, weight_decay: 0.0, rescale: 1.0 },
+        )
+        .unwrap();
+        let mut c = connect(srv.addr());
+        rpc(&mut c, &Msg::Init { key: "w".into(), value: vec![3.0] });
+        rpc(&mut c, &Msg::Push { key: "w".into(), value: vec![1.0], machine: 0 });
+        match rpc(&mut c, &Msg::Pull { key: "w".into(), after_version: 0 }) {
+            Msg::Value { value, version, .. } => {
+                assert_eq!(value, vec![3.0]);
+                assert_eq!(version, 0, "round incomplete: version unchanged");
+            }
+            other => panic!("{other:?}"),
+        }
     }
 }

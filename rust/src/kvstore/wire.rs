@@ -60,6 +60,15 @@ pub enum Msg {
     },
     /// Graceful shutdown request.
     Shutdown,
+    /// Request the server's traffic counters (harness observability).
+    Stats,
+    /// Reply to [`Msg::Stats`].
+    StatsReply {
+        /// Messages received since start.
+        msgs: u64,
+        /// Payload bytes received since start.
+        bytes: u64,
+    },
 }
 
 impl Msg {
@@ -73,6 +82,8 @@ impl Msg {
             Msg::Err { .. } => 5,
             Msg::Barrier { .. } => 6,
             Msg::Shutdown => 7,
+            Msg::Stats => 8,
+            Msg::StatsReply { .. } => 9,
         }
     }
 }
@@ -144,11 +155,15 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             put_f32s(&mut body, value);
             body.extend_from_slice(&version.to_le_bytes());
         }
-        Msg::Ack | Msg::Shutdown => {}
+        Msg::Ack | Msg::Shutdown | Msg::Stats => {}
         Msg::Err { msg } => put_str(&mut body, msg),
         Msg::Barrier { id, machine } => {
             body.extend_from_slice(&id.to_le_bytes());
             body.extend_from_slice(&machine.to_le_bytes());
+        }
+        Msg::StatsReply { msgs, bytes } => {
+            body.extend_from_slice(&msgs.to_le_bytes());
+            body.extend_from_slice(&bytes.to_le_bytes());
         }
     }
     let mut out = Vec::with_capacity(12 + body.len());
@@ -172,6 +187,8 @@ pub fn decode(body: &[u8]) -> Result<Msg> {
         5 => Msg::Err { msg: c.string()? },
         6 => Msg::Barrier { id: c.u64()?, machine: c.u32()? },
         7 => Msg::Shutdown,
+        8 => Msg::Stats,
+        9 => Msg::StatsReply { msgs: c.u64()?, bytes: c.u64()? },
         other => return Err(Error::kv(format!("wire: unknown opcode {other}"))),
     })
 }
@@ -221,6 +238,8 @@ mod tests {
         roundtrip(Msg::Err { msg: "boom".into() });
         roundtrip(Msg::Barrier { id: 5, machine: 1 });
         roundtrip(Msg::Shutdown);
+        roundtrip(Msg::Stats);
+        roundtrip(Msg::StatsReply { msgs: 123, bytes: 456789 });
     }
 
     #[test]

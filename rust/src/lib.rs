@@ -71,7 +71,9 @@ pub mod prelude {
     pub use crate::graph::Graph;
     pub use crate::io::{DataBatch, DataIter, PartitionIter};
     pub use crate::kvstore::KVStore;
-    pub use crate::module::{Context, DataParallelTrainer, Module, TrainerConfig};
+    pub use crate::module::{
+        Context, DataParallelTrainer, Module, SyncMode, SyncPolicy, TrainerConfig,
+    };
     pub use crate::ndarray::NDArray;
     pub use crate::optimizer::{Optimizer, Sgd};
     pub use crate::serve::{Servable, ServeConfig, Server};

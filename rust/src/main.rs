@@ -25,7 +25,7 @@ use mixnet::io::{synth, ArrayDataIter, PrefetchIter};
 use mixnet::kvstore::server::{PsServer, ServerUpdater};
 use mixnet::kvstore::{dist::DistKVStore, Consistency, LocalKVStore};
 use mixnet::models::by_name;
-use mixnet::module::{DataParallelTrainer, Module, TrainerConfig, UpdateMode};
+use mixnet::module::{DataParallelTrainer, Module, SyncMode, TrainerConfig, UpdateMode};
 use mixnet::optimizer::Sgd;
 use mixnet::serve::{closed_loop, Servable, ServeConfig, Server};
 use mixnet::sim::{graph_flops, simulate, ClusterConfig};
@@ -41,12 +41,17 @@ COMMANDS:
   train        data-parallel training of a zoo model on synthetic data
                  --model NAME  --epochs N  --batch N  --lr F  --seed N
                  --classes N   --examples N  --devices N
-                 --kv local|dist  --consistency seq|eventual  --no-overlap
+                 --kv local|dist  --consistency seq|bounded:K|eventual
+                 --weights W0,W1,...  --no-overlap
                  (--kv dist needs --server ADDR; --batch is the global
-                  batch, split over --devices replica shards)
+                  batch, split over --devices replica shards; bounded:K
+                  lets replicas run K rounds ahead of delivery; --weights
+                  sizes each replica's share of the round — elastic sync)
   serve        dynamic-batching inference server + closed-loop demo
                  --model NAME  --checkpoint FILE  --clients N  --requests N
                  --max-batch N  --max-delay-us N  --workers N  --seed N
+                 --live  (train and serve concurrently: the server answers
+                  from the training store's committed snapshots)
                  (no --checkpoint: quick-trains/initializes weights first)
   server       run the level-2 parameter server
                  --port N  --machines N  --lr F  --momentum F
@@ -82,7 +87,7 @@ const VALUE_KEYS: &[&str] = &[
     "model", "epochs", "batch", "lr", "seed", "classes", "examples", "port", "machines",
     "momentum", "server", "machine", "steps", "artifacts", "mode", "workers", "passes",
     "checkpoint", "clients", "requests", "max-batch", "max-delay-us", "devices", "kv",
-    "consistency",
+    "consistency", "weights",
 ];
 
 fn run(argv: Vec<String>) -> Result<()> {
@@ -106,18 +111,19 @@ fn run(argv: Vec<String>) -> Result<()> {
 }
 
 /// Build model + global-batch iterator for a zoo model over synthetic
-/// data; returns the per-device shard batch (`--batch / --devices`).
+/// data; returns the per-shard batch (`--batch / shards`).
 fn build_training(
     args: &Args,
     engine: mixnet::engine::EngineRef,
     shard_seed: u64,
-    devices: usize,
+    shards: usize,
 ) -> Result<(mixnet::models::Model, PrefetchIter, usize)> {
     let model_name = args.get_str("model", "mlp");
     let batch: usize = args.get("batch", 32)?;
-    if devices == 0 || batch % devices != 0 {
+    if shards == 0 || batch % shards != 0 {
         return Err(Error::Config(format!(
-            "--batch {batch} must be divisible by --devices {devices}"
+            "--batch {batch} must be divisible by the {shards} shards per round \
+             (one per device, or the sum of --weights)"
         )));
     }
     let classes: usize = args.get("classes", 4)?;
@@ -149,20 +155,67 @@ fn build_training(
     // §2.4 multi-threaded prefetch on the training path; in-flight depth
     // comes from the PALLAS_PREFETCH_DEPTH knob (default 3).
     let iter = PrefetchIter::with_default_depth(Box::new(inner));
-    Ok((m, iter, batch / devices))
+    Ok((m, iter, batch / shards))
 }
 
-/// Bind the data-parallel trainer both `train` and `worker` share: one
-/// shard per device, overlap unless `--no-overlap`, seed from `--seed`.
+/// Store parts per round for the CLI trainer: with `--weights`, the sum
+/// of the weights (each weight unit is one shard, so a weight-3 host
+/// runs three micro-steps per round for a weight-1 straggler's one);
+/// otherwise one shard per device.
+fn trainer_shards(args: &Args, devices: usize) -> Result<usize> {
+    Ok(match parse_weights(args, devices)? {
+        Some(w) => (w.iter().map(|&x| x as usize).sum::<usize>()).max(1),
+        None => devices,
+    })
+}
+
+/// `--weights W0,W1,...` (one entry per device; selects elastic sync).
+fn parse_weights(args: &Args, devices: usize) -> Result<Option<Vec<u32>>> {
+    let Some(s) = args.options.get("weights") else { return Ok(None) };
+    let w = s
+        .split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<u32>()
+                .map_err(|_| Error::Config(format!("--weights: bad entry '{t}'")))
+        })
+        .collect::<Result<Vec<u32>>>()?;
+    if w.len() != devices {
+        return Err(Error::Config(format!(
+            "--weights has {} entries for --devices {devices}",
+            w.len()
+        )));
+    }
+    Ok(Some(w))
+}
+
+/// Bind the data-parallel trainer both `train` and `worker` share:
+/// `shards` parts per round ([`trainer_shards`]), overlap unless
+/// `--no-overlap`, seed from `--seed`, sync policy derived from
+/// `--consistency` / `--weights`.
 fn bind_trainer(
     args: &Args,
     engine: mixnet::engine::EngineRef,
     model: &mixnet::models::Model,
     shard_batch: usize,
     devices: usize,
+    shards: usize,
     store: Arc<dyn mixnet::kvstore::KVStore>,
 ) -> Result<DataParallelTrainer> {
     let seed: u64 = args.get("seed", 7)?;
+    let weights = parse_weights(args, devices)?;
+    let sync = match (&weights, parse_consistency(args)?) {
+        (Some(_), Consistency::BoundedDelay(_)) => {
+            return Err(Error::Config(
+                "--weights needs --consistency seq|eventual (elastic sync runs BSP \
+                 barriers)"
+                    .into(),
+            ));
+        }
+        (Some(_), _) => SyncMode::Elastic,
+        (None, Consistency::BoundedDelay(k)) => SyncMode::BoundedDelay(k),
+        (None, _) => SyncMode::Bsp,
+    };
     let shapes = model.param_shapes(shard_batch)?;
     DataParallelTrainer::bind(
         &model.symbol,
@@ -173,38 +226,50 @@ fn bind_trainer(
         store,
         TrainerConfig {
             devices,
-            shards: devices,
+            shards,
             overlap: !args.has("no-overlap"),
             bind: BindConfig::default(),
             seed,
+            sync,
+            weights: weights.unwrap_or_default(),
         },
     )
 }
 
-/// Connect a distributed store for `devices` local shards, shipping the
-/// global-batch mean (mirrors the local path's updater rescale).
+/// Connect a distributed store for `shards` local parts per round,
+/// shipping the global-batch mean (mirrors the local path's updater
+/// rescale).
 fn dist_store(
     addr: std::net::SocketAddr,
     machine: u32,
-    devices: usize,
+    shards: usize,
     consistency: Consistency,
     engine: mixnet::engine::EngineRef,
 ) -> Result<DistKVStore> {
-    Ok(DistKVStore::connect(addr, machine, devices, consistency, engine)?
-        .with_grad_rescale(1.0 / devices as f32))
+    Ok(DistKVStore::connect(addr, machine, shards, consistency, engine)?
+        .with_grad_rescale(1.0 / shards as f32))
 }
 
-/// `--consistency seq|eventual` (with `--eventual` kept as an alias).
+/// `--consistency seq|bounded:K|eventual` (with `--eventual` kept as an
+/// alias).  `bounded` alone means `bounded:1`.
 fn parse_consistency(args: &Args) -> Result<Consistency> {
     if args.has("eventual") {
         return Ok(Consistency::Eventual);
     }
-    match args.get_str("consistency", "seq").as_str() {
+    let spec = args.get_str("consistency", "seq");
+    match spec.as_str() {
         "seq" | "sequential" => Ok(Consistency::Sequential),
         "eventual" => Ok(Consistency::Eventual),
-        other => {
-            Err(Error::Config(format!("--consistency must be seq|eventual, got '{other}'")))
-        }
+        "bounded" => Ok(Consistency::BoundedDelay(1)),
+        other => match other.strip_prefix("bounded:") {
+            Some(k) => k
+                .parse::<u64>()
+                .map(Consistency::BoundedDelay)
+                .map_err(|_| Error::Config(format!("--consistency bounded:K: bad K '{k}'"))),
+            None => Err(Error::Config(format!(
+                "--consistency must be seq|bounded:K|eventual, got '{other}'"
+            ))),
+        },
     }
 }
 
@@ -225,17 +290,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     let consistency = parse_consistency(args)?;
     let default_kv = if args.options.contains_key("server") { "dist" } else { "local" };
     let kv_kind = args.get_str("kv", default_kv);
+    let shards = trainer_shards(args, devices)?;
     let engine = create(EngineKind::Threaded, default_threads());
-    let (model, mut iter, shard_batch) = build_training(args, engine.clone(), 0x5eed, devices)?;
+    let (model, mut iter, shard_batch) = build_training(args, engine.clone(), 0x5eed, shards)?;
     let store: Arc<dyn mixnet::kvstore::KVStore> = match kv_kind.as_str() {
         "local" => {
             // local level-1 store with a registered SGD updater (§2.3);
             // the merged gradient is a sum of per-shard means, so rescale
-            // by 1/devices to keep global-batch-mean semantics.
+            // by 1/shards to keep global-batch-mean semantics.
             Arc::new(LocalKVStore::new(
                 engine.clone(),
-                devices,
-                Arc::new(Sgd::with_momentum(lr, 0.9, 1e-4).rescale(1.0 / devices as f32)),
+                shards,
+                Arc::new(Sgd::with_momentum(lr, 0.9, 1e-4).rescale(1.0 / shards as f32)),
                 consistency,
             ))
         }
@@ -247,15 +313,16 @@ fn cmd_train(args: &Args) -> Result<()> {
             let addr: std::net::SocketAddr =
                 addr.parse().map_err(|_| Error::Config(format!("bad --server '{addr}'")))?;
             let machine: u32 = args.get("machine", 0)?;
-            Arc::new(dist_store(addr, machine, devices, consistency, engine.clone())?)
+            Arc::new(dist_store(addr, machine, shards, consistency, engine.clone())?)
         }
         other => {
             return Err(Error::Config(format!("--kv must be local|dist, got '{other}'")));
         }
     };
-    let mut trainer = bind_trainer(args, engine, &model, shard_batch, devices, store)?;
+    let mut trainer = bind_trainer(args, engine, &model, shard_batch, devices, shards, store)?;
     println!(
-        "data-parallel: {devices} device(s), shard batch {shard_batch}, kv {kv_kind}, {:?}",
+        "data-parallel: {devices} device(s), {shards} shard(s) of {shard_batch} rows, \
+         kv {kv_kind}, {:?}",
         consistency
     );
     let stats = trainer.fit(&mut iter, epochs)?;
@@ -267,6 +334,9 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// weights, start the server, drive a closed-loop client fleet, print
 /// latency percentiles and throughput.
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.has("live") {
+        return cmd_serve_live(args);
+    }
     let model_spec = args.get_str("model", "mlp");
     let clients: usize = args.get("clients", 16)?;
     let requests: usize = args.get("requests", 64)?;
@@ -353,6 +423,125 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve --live`: serving + training co-location (online learning).
+/// A trainer thread fits the model through a `LocalKVStore` while the
+/// server answers traffic from the store's committed snapshots
+/// ([`Servable::attach_live`]) — responses pick up newly committed
+/// rounds between batches, and never read a torn parameter.
+fn cmd_serve_live(args: &Args) -> Result<()> {
+    let model_spec = args.get_str("model", "mlp");
+    let clients: usize = args.get("clients", 16)?;
+    let requests: usize = args.get("requests", 64)?;
+    let seed: u64 = args.get("seed", 7)?;
+    let epochs: usize = args.get("epochs", 8)?;
+    let lr: f32 = args.get("lr", 0.3)?;
+    let examples: usize = args.get("examples", 1024)?;
+    let mut cfg = ServeConfig::from_env();
+    cfg.max_batch = args.get("max-batch", cfg.max_batch)?;
+    cfg.max_delay_us = args.get("max-delay-us", cfg.max_delay_us)?;
+    cfg.workers = args.get("workers", cfg.workers)?;
+
+    let engine = create(EngineKind::Threaded, default_threads());
+    let m = by_name(&model_spec)?;
+    if m.feat_shape.len() != 1 {
+        return Err(Error::Config(
+            "serve --live quick-trains in-process and supports flat-feature models (mlp)"
+                .into(),
+        ));
+    }
+    let feat_shape = m.feat_shape.clone();
+    let feat_len: usize = feat_shape.iter().product();
+    let classes = m.num_classes.min(4);
+    let batch = 32usize;
+    let shapes = m.param_shapes(batch)?;
+
+    // Seed the store with the initial weights; the servable holds its
+    // own arrays and follows the store's committed snapshots.
+    let mut module = Module::new(by_name(&model_spec)?.symbol, engine.clone());
+    module.bind(batch, &feat_shape, &shapes, BindConfig::default(), seed)?;
+    let store = Arc::new(LocalKVStore::new(
+        engine.clone(),
+        1,
+        Arc::new(Sgd::new(lr)),
+        Consistency::Sequential,
+    ));
+    for name in module.param_names() {
+        store.init(name, module.param(name).unwrap())?;
+    }
+    let mut sparams = std::collections::HashMap::new();
+    for name in module.param_names() {
+        let src = module.param(name).unwrap();
+        let dst = mixnet::ndarray::NDArray::zeros_on(src.shape(), engine.clone());
+        dst.copy_from_(src);
+        sparams.insert(name.clone(), dst);
+    }
+    drop(module); // the trainer thread binds its own executor
+    let mut servable = Servable::new(m, sparams, engine.clone())?;
+    servable.attach_live(&store)?;
+
+    // Trainer thread: the paper's §2.3 loop pushing into the same store
+    // the server snapshots from.
+    let t_engine = engine.clone();
+    let t_store: Arc<dyn mixnet::kvstore::KVStore> = store.clone();
+    let t_spec = model_spec.clone();
+    let trainer = std::thread::spawn(move || -> Result<f32> {
+        let tm = by_name(&t_spec)?;
+        let shapes = tm.param_shapes(batch)?;
+        let mut module = Module::new(tm.symbol, t_engine.clone());
+        module.bind(batch, &tm.feat_shape.clone(), &shapes, BindConfig::default(), seed)?;
+        let ds = synth::class_clusters(examples, classes, feat_len, 0.3, seed);
+        let mut iter = ArrayDataIter::new(
+            ds.features,
+            ds.labels,
+            &tm.feat_shape.clone(),
+            batch,
+            true,
+            t_engine,
+        );
+        let stats = module.fit(
+            &mut iter,
+            &UpdateMode::KvStore { store: t_store, device: 0 },
+            epochs,
+        )?;
+        Ok(stats.last().map(|s| s.accuracy).unwrap_or(0.0))
+    });
+
+    let mut server = Server::start(&servable, &cfg)?;
+    println!(
+        "live-serving {model_spec}: trainer running concurrently, max_batch {}, \
+         {} worker(s)",
+        cfg.max_batch, cfg.workers
+    );
+    let samples: Vec<Vec<f32>> = (0..256)
+        .map(|i| {
+            let mut rng = mixnet::util::Rng::seed_from_u64(seed ^ ((i as u64) << 8));
+            (0..feat_len).map(|_| rng.uniform(-1.0, 1.0)).collect()
+        })
+        .collect();
+    let report = closed_loop(&server, clients, requests, &samples);
+    let train_acc = trainer
+        .join()
+        .map_err(|_| Error::Runtime("trainer thread panicked".into()))??;
+    let stats = server.shutdown();
+    println!(
+        "{:>10} {:>10} {:>10} {:>10} {:>10} {:>12}",
+        "requests", "rps", "p50 ms", "p99 ms", "batches", "train acc"
+    );
+    println!(
+        "{:>10} {:>10.0} {:>10.3} {:>10.3} {:>10} {:>12.3}",
+        stats.requests,
+        report.rps,
+        stats.p50_us as f64 / 1e3,
+        stats.p99_us as f64 / 1e3,
+        stats.batches,
+        train_acc
+    );
+    if report.errors > 0 {
+        println!("({} request(s) errored)", report.errors);
+    }
+    Ok(())
+}
+
 fn cmd_server(args: &Args) -> Result<()> {
     let port: u16 = args.get("port", 9700)?;
     let machines: usize = args.get("machines", 1)?;
@@ -380,14 +569,15 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let epochs: usize = args.get("epochs", 4)?;
     let devices: usize = args.get("devices", 1)?;
     let consistency = parse_consistency(args)?;
+    let shards = trainer_shards(args, devices)?;
     let engine = create(EngineKind::Threaded, default_threads());
     let (model, mut iter, shard_batch) =
-        build_training(args, engine.clone(), 0x5eed + machine as u64, devices)?;
+        build_training(args, engine.clone(), 0x5eed + machine as u64, shards)?;
     // The same Trainer as `mixnet train`: N local device shards, level-1
     // aggregated by the DistKVStore before one wire message per round.
-    let kv = Arc::new(dist_store(addr, machine, devices, consistency, engine.clone())?);
+    let kv = Arc::new(dist_store(addr, machine, shards, consistency, engine.clone())?);
     let store: Arc<dyn mixnet::kvstore::KVStore> = kv.clone();
-    let mut trainer = bind_trainer(args, engine, &model, shard_batch, devices, store)?;
+    let mut trainer = bind_trainer(args, engine, &model, shard_batch, devices, shards, store)?;
     let stats = trainer.fit(&mut iter, epochs)?;
     kv.barrier()?;
     report(&stats);

@@ -14,6 +14,16 @@
 //! exactly the paper's argument that the dependency engine subsumes
 //! multi-device orchestration.
 //!
+//! Everything policy-shaped about the round loop — shard placement,
+//! barrier discipline, membership — is delegated to a
+//! [`SyncPolicy`](super::sync::SyncPolicy): [`SyncMode::Bsp`] is the
+//! full-barrier loop below, [`SyncMode::BoundedDelay`] lets replicas
+//! run up to `k` rounds ahead against a
+//! [`Consistency::BoundedDelay`](crate::kvstore::Consistency) store,
+//! and [`SyncMode::Elastic`] adds weighted shard placement plus
+//! join/leave membership events applied at round barriers (see
+//! [`super::sync`] for the determinism story of each).
+//!
 //! ## Determinism contract
 //!
 //! The **shard count** — not the device count — defines the math.  Each
@@ -43,8 +53,7 @@
 //! overlap; `benches/train.rs` measures the difference.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::engine::EngineRef;
@@ -56,6 +65,7 @@ use crate::ndarray::{NDArray, Storage};
 use crate::symbol::Symbol;
 use crate::util::Rng;
 
+use super::sync::{Assignment, BoundedDelay, Bsp, Elastic, MemberEvent, RoundLedger, SyncPolicy};
 use super::{init_param, EpochStats};
 
 /// A lightweight virtual device: one replica slot of a data-parallel
@@ -83,51 +93,16 @@ impl std::fmt::Display for Context {
     }
 }
 
-/// Counts outstanding gradient deliveries of the current round; the
-/// trainer waits for zero before issuing the next round's pulls, which
-/// is what makes `Sequential` pulls observe the round's update.
-struct PushLatch {
-    n: Mutex<usize>,
-    cv: Condvar,
-}
-
-impl PushLatch {
-    fn new() -> Self {
-        PushLatch { n: Mutex::new(0), cv: Condvar::new() }
-    }
-
-    fn add(&self, k: usize) {
-        *self.n.lock().unwrap() += k;
-    }
-
-    fn done(&self) {
-        let mut g = self.n.lock().unwrap();
-        *g -= 1;
-        if *g == 0 {
-            self.cv.notify_all();
-        }
-    }
-
-    fn wait_zero(&self) {
-        let mut g = self.n.lock().unwrap();
-        while *g > 0 {
-            g = self.cv.wait(g).unwrap();
-        }
-    }
-}
-
 /// One replica as the shared round loop sees it.  The trainer builds
 /// these from its owned replicas; [`Module::fit`](super::Module::fit)
-/// builds a single view of itself — the N=1 degeneration.
+/// builds a single view of itself — the N=1 degeneration.  Which store
+/// parts a replica pushes is no longer baked in here: the round loop
+/// asks its [`SyncPolicy`] at every round barrier.
 pub(crate) struct ReplicaView<'a> {
     pub exec: &'a Executor,
     pub params: &'a HashMap<String, NDArray>,
     pub data: &'a NDArray,
     pub label: &'a NDArray,
-    /// Store part ids this replica pushes, in micro-step order.
-    pub parts: Vec<usize>,
-    /// Index of this replica's first shard in the round's shard list.
-    pub offset: usize,
     /// Stable id for the store's per-device pull stamps.
     pub pull_device: usize,
 }
@@ -136,6 +111,17 @@ pub(crate) struct ReplicaView<'a> {
 pub(crate) struct RoundOpts {
     pub overlap: bool,
     pub epochs: usize,
+    /// Store parts per round, handed to [`SyncPolicy::assign`].
+    pub shards: usize,
+}
+
+/// Per-replica hook state: the part list of the current assignment plus
+/// per-gradient fire counters.  Swapped atomically at round barriers
+/// when the policy hands out a new assignment (the ledger is drained
+/// first, so no fire can race the swap).
+struct HookParts {
+    parts: Vec<usize>,
+    fired: HashMap<String, usize>,
 }
 
 /// Clears the replicas' grad-ready hooks on scope exit (also on error
@@ -152,18 +138,6 @@ impl Drop for HookGuard<'_> {
                 r.exec.clear_grad_ready_hook();
             }
         }
-    }
-}
-
-/// First KVStore delivery error of the current fit, recorded by the
-/// (asynchronous) push contexts and surfaced at the round barrier — a
-/// failed push must fail `fit`, never silently stop training.
-type RoundErr = Arc<Mutex<Option<Error>>>;
-
-fn record_round_err(slot: &RoundErr, e: Error) {
-    let mut g = slot.lock().unwrap();
-    if g.is_none() {
-        *g = Some(e);
     }
 }
 
@@ -186,11 +160,13 @@ fn load_rows(engine: &EngineRef, src: &NDArray, dst: &NDArray, row_off: usize, r
     );
 }
 
-/// The BSP round loop shared by [`DataParallelTrainer`] and
-/// [`Module::fit`](super::Module::fit)'s KVStore mode: per round, split
-/// the global batch into shards, run each shard on its replica (pull →
-/// load → forward → backward → per-layer push), and wait for every
-/// delivery before the next round's pulls.
+/// The synchronization round loop shared by [`DataParallelTrainer`] and
+/// [`Module::fit`](super::Module::fit)'s KVStore mode: per round, ask
+/// the [`SyncPolicy`] for the shard placement, split the global batch
+/// into shards, run each shard on its replica (pull → load → forward →
+/// backward → per-layer push), and wait at the policy's barrier — every
+/// delivery for BSP, everything older than the lookahead window for
+/// bounded delay.
 pub(crate) fn fit_rounds(
     engine: &EngineRef,
     store: &Arc<dyn KVStore>,
@@ -198,6 +174,7 @@ pub(crate) fn fit_rounds(
     param_names: &[String],
     iter: &mut dyn DataIter,
     opts: &RoundOpts,
+    policy: &mut dyn SyncPolicy,
     step: &mut u64,
 ) -> Result<Vec<EpochStats>> {
     let grad_names: Vec<String> = param_names
@@ -208,82 +185,100 @@ pub(crate) fn fit_rounds(
     if grad_names.is_empty() {
         return Err(Error::Bind("data-parallel fit: executors hold no gradients".into()));
     }
-    let local_shards: usize = replicas.iter().map(|r| r.parts.len()).sum();
-    let k_max = replicas.iter().map(|r| r.parts.len()).max().unwrap_or(0);
-    if local_shards == 0 {
-        return Err(Error::Bind("data-parallel fit: no shards assigned".into()));
-    }
 
-    let latch = Arc::new(PushLatch::new());
-    let round_err: RoundErr = Arc::new(Mutex::new(None));
+    let ledger = Arc::new(RoundLedger::new());
+    let lookahead = policy.lookahead();
+    let hook_parts: Vec<Arc<Mutex<HookParts>>> = replicas
+        .iter()
+        .map(|_| Arc::new(Mutex::new(HookParts { parts: Vec::new(), fired: HashMap::new() })))
+        .collect();
     let mut guard = HookGuard { replicas, active: false };
     if opts.overlap {
         // Per-layer overlapped push: the hook fires on the engine worker
         // that just wrote a gradient's final value, copies it straight
         // into the store's part staging, and returns — the rest of
         // backward keeps running on the other workers.
-        for r in replicas {
-            let parts = r.parts.clone();
-            let mut gmap: HashMap<String, (Arc<Storage>, usize, Arc<AtomicUsize>)> =
-                HashMap::new();
+        for (r, hp) in replicas.iter().zip(&hook_parts) {
+            let mut gmap: HashMap<String, (Arc<Storage>, usize)> = HashMap::new();
             for name in &grad_names {
                 let g = r
                     .exec
                     .grad(name)
                     .ok_or_else(|| Error::Bind(format!("no gradient for '{name}'")))?;
-                gmap.insert(
-                    name.clone(),
-                    (g.storage(), g.size(), Arc::new(AtomicUsize::new(0))),
-                );
+                gmap.insert(name.clone(), (g.storage(), g.size()));
             }
             let store = Arc::clone(store);
-            let latch = Arc::clone(&latch);
-            let err = Arc::clone(&round_err);
-            r.exec.set_grad_ready_hook(Arc::new(move |name: &str, _step: u64, ok: bool| {
-                if let Some((st, len, fired)) = gmap.get(name) {
+            let ledger = Arc::clone(&ledger);
+            let hp = Arc::clone(hp);
+            r.exec.set_grad_ready_hook(Arc::new(move |name: &str, round: u64, ok: bool| {
+                if let Some((st, len)) = gmap.get(name) {
                     // Micro-steps of one replica run in program order
                     // (replays of one plan serialize), so the k-th fire
-                    // of this gradient since the round pattern began
-                    // belongs to this replica's k-th shard.
-                    let k = fired.fetch_add(1, Ordering::Relaxed) % parts.len();
+                    // of this gradient since the assignment was installed
+                    // belongs to this replica's k-th shard.  Counters
+                    // reset whenever the policy re-assigns (the ledger is
+                    // drained first, so no fire can straddle the swap).
+                    let part = {
+                        let mut h = hp.lock().unwrap();
+                        if h.parts.is_empty() {
+                            // An idle replica never runs micro-steps, so
+                            // this cannot fire; if it somehow does, fail
+                            // the fit loudly at the barrier — completing
+                            // the delivery silently could consume another
+                            // replica's outstanding count and release the
+                            // barrier with a push still in flight.
+                            ledger.fail(
+                                round,
+                                Error::Bind(format!(
+                                    "gradient '{name}' fired on a replica with no \
+                                     assigned shards"
+                                )),
+                            );
+                            return;
+                        }
+                        let f = h.fired.entry(name.to_string()).or_insert(0);
+                        let k = *f % h.parts.len();
+                        *f += 1;
+                        h.parts[k]
+                    };
                     if !ok {
                         // The writing kernel panicked: the buffer holds
                         // garbage.  Fail the fit at the round barrier
                         // rather than commit a corrupted round.
-                        record_round_err(
-                            &err,
+                        ledger.fail(
+                            round,
                             Error::Bind(format!(
                                 "backward kernel writing gradient '{name}' panicked"
                             )),
                         );
-                        latch.done();
                         return;
                     }
-                    let part = parts[k];
                     // SAFETY: grad-ready hook contract (`ok` above) —
                     // this gradient's final value is written, nothing
                     // later in the pass writes it, and external readers
                     // are engine-ordered behind the pass.
                     let g = unsafe { &st.slice()[..*len] };
-                    if let Err(e) = store.push_part(name, g, part) {
-                        record_round_err(&err, e);
+                    match store.push_part(name, g, part) {
+                        Ok(()) => ledger.done(round),
+                        Err(e) => ledger.fail(round, e),
                     }
-                    latch.done();
                 }
             }));
         }
         guard.active = true;
     }
 
-    // Per-replica shard batch (bound at replica bind time); the global
-    // batch must be exactly the sum, and every shard range must line up
-    // with its replica — validated up front each round, *before* any
-    // push is staged, so a malformed batch can never leave a round
-    // half-delivered in the store.
-    let rows_needed: usize = replicas.iter().map(|r| r.data.shape()[0] * r.parts.len()).sum();
+    // Per-round state derived from the policy's current assignment; the
+    // policy is consulted at every round barrier and this state is
+    // re-derived only when the assignment actually changes.
+    let mut cur: Option<Assignment> = None;
+    let mut offsets: Vec<usize> = Vec::new();
+    let mut k_max = 0usize;
+    let mut local_shards = 0usize;
+    let mut rows_needed = 0usize;
+    let mut part_metrics: Vec<(f32, f32)> = Vec::new();
 
     let mut stats = Vec::with_capacity(opts.epochs);
-    let mut part_metrics = vec![(0.0f32, 0.0f32); local_shards];
     for epoch in 0..opts.epochs {
         let t0 = Instant::now();
         iter.reset();
@@ -291,6 +286,48 @@ pub(crate) fn fit_rounds(
         let mut acc_sum = 0.0f64;
         let mut batches = 0usize;
         while let Some(batch) = iter.next_batch() {
+            *step += 1;
+            let round = *step;
+            // Round barrier, part 1: membership / placement.  A changed
+            // assignment may only be installed with no delivery in
+            // flight (the hook counters key off it), so drain first.
+            let a = policy.assign(round, opts.shards, replicas.len())?;
+            if a.parts.len() != replicas.len() {
+                return Err(Error::Bind(format!(
+                    "sync policy '{}' assigned {} part lists for {} replicas",
+                    policy.name(),
+                    a.parts.len(),
+                    replicas.len()
+                )));
+            }
+            if cur.as_ref() != Some(&a) {
+                ledger.wait_all()?;
+                for (hp, parts) in hook_parts.iter().zip(&a.parts) {
+                    let mut h = hp.lock().unwrap();
+                    h.parts = parts.clone();
+                    h.fired.clear();
+                }
+                offsets = a.offsets();
+                k_max = a.max_parts();
+                local_shards = a.total_parts();
+                if local_shards == 0 {
+                    return Err(Error::Bind("data-parallel fit: no shards assigned".into()));
+                }
+                rows_needed = replicas
+                    .iter()
+                    .zip(&a.parts)
+                    .map(|(r, p)| r.data.shape()[0] * p.len())
+                    .sum();
+                part_metrics = vec![(0.0f32, 0.0f32); local_shards];
+                cur = Some(a);
+            }
+            let assign = cur.as_ref().expect("assignment installed above");
+
+            // Per-replica shard batch (bound at replica bind time); the
+            // global batch must be exactly the sum, and every shard range
+            // must line up with its replica — validated up front each
+            // round, *before* any push is staged, so a malformed batch
+            // can never leave a round half-delivered in the store.
             let rows = batch.data.shape()[0];
             if rows != rows_needed || batch.label.size() != rows {
                 return Err(Error::Bind(format!(
@@ -314,25 +351,27 @@ pub(crate) fn fit_rounds(
             // straight from the batch buffer into the replica arrays —
             // one engine-scheduled copy per shard, no intermediates.
             let ranges = shard_ranges(rows, local_shards);
-            *step += 1;
-            let round = *step;
             for k in 0..k_max {
-                for r in replicas {
-                    if k >= r.parts.len() {
+                for (d, r) in replicas.iter().enumerate() {
+                    let parts = &assign.parts[d];
+                    if k >= parts.len() {
                         continue;
                     }
-                    let (row_off, n) = ranges[r.offset + k];
+                    let (row_off, n) = ranges[offsets[d] + k];
                     debug_assert_eq!(n, r.data.shape()[0]);
-                    // BSP pull — within a round the version is unchanged,
-                    // so repeats are answered from the device cache
-                    // (version-stamped pull).
+                    // Pull — within a round the version is unchanged, so
+                    // repeats are answered from the device cache
+                    // (version-stamped pull).  Under a bounded-delay
+                    // store this is also the backpressure point: the
+                    // pull blocks until the committed snapshot is within
+                    // the staleness ceiling.
                     for name in param_names {
                         store.pull(name, &r.params[name], r.pull_device)?;
                     }
                     load_rows(engine, &batch.data, r.data, row_off, n);
                     load_rows(engine, &batch.label, r.label, row_off, n);
                     if opts.overlap {
-                        latch.add(grad_names.len());
+                        ledger.add(round, grad_names.len());
                     }
                     r.exec.forward_at(round);
                     r.exec.backward_at(round)?;
@@ -346,11 +385,10 @@ pub(crate) fn fit_rounds(
                             let g = r.exec.grad(name).expect("checked above");
                             let (gs, glen) = (g.storage(), g.size());
                             let store2 = Arc::clone(store);
-                            let latch2 = Arc::clone(&latch);
-                            let err2 = Arc::clone(&round_err);
+                            let ledger2 = Arc::clone(&ledger);
                             let key = name.clone();
-                            let part = r.parts[k];
-                            latch.add(1);
+                            let part = parts[k];
+                            ledger.add(round, 1);
                             engine.push(
                                 "kv.push_grad",
                                 vec![g.var()],
@@ -359,10 +397,10 @@ pub(crate) fn fit_rounds(
                                     // SAFETY: this op holds the engine
                                     // read grant on the gradient var.
                                     let gsl = unsafe { &gs.slice()[..glen] };
-                                    if let Err(e) = store2.push_part(&key, gsl, part) {
-                                        record_round_err(&err2, e);
+                                    match store2.push_part(&key, gsl, part) {
+                                        Ok(()) => ledger2.done(round),
+                                        Err(e) => ledger2.fail(round, e),
                                     }
-                                    latch2.done();
                                 }),
                             );
                         }
@@ -372,21 +410,21 @@ pub(crate) fn fit_rounds(
                 // before the replica's next micro-step overwrites its
                 // outputs.  Stored by shard index so the epoch metric is
                 // summed in shard order, independent of device count.
-                for r in replicas {
-                    if k >= r.parts.len() {
+                for (d, r) in replicas.iter().enumerate() {
+                    if k >= assign.parts[d].len() {
                         continue;
                     }
                     let (l, a) = r.exec.softmax_metrics()?;
-                    part_metrics[r.offset + k] = (l, a);
+                    part_metrics[offsets[d] + k] = (l, a);
                 }
             }
-            // Round barrier: every delivery staged (and, transitively,
-            // the round's updater scheduled) before the next pulls; a
-            // failed delivery fails the fit.
-            latch.wait_zero();
-            if let Some(e) = round_err.lock().unwrap().take() {
-                return Err(e);
-            }
+            // Round barrier, part 2: the policy's delivery window.  BSP
+            // (lookahead 0) waits for every delivery of this round —
+            // transitively, the round's updater is scheduled before the
+            // next pulls.  Bounded delay leaves up to `lookahead` rounds
+            // in flight and only drains older ones.  A failed delivery
+            // fails the fit here.
+            ledger.wait_through(round.saturating_sub(lookahead))?;
             for &(l, a) in &part_metrics {
                 loss_sum += l as f64;
                 acc_sum += a as f64;
@@ -394,6 +432,7 @@ pub(crate) fn fit_rounds(
             batches += 1;
         }
         engine.wait_all();
+        ledger.wait_all()?;
         if batches == 0 {
             return Err(Error::Bind("iterator produced no batches".into()));
         }
@@ -409,14 +448,29 @@ pub(crate) fn fit_rounds(
     Ok(stats)
 }
 
+/// Which [`SyncPolicy`] the trainer builds (see [`super::sync`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncMode {
+    /// Bulk-synchronous: full delivery barrier every round (PR 4's loop,
+    /// bitwise-preserved).
+    Bsp,
+    /// Replicas run up to `k` rounds ahead; requires a store with
+    /// [`Consistency::BoundedDelay`](crate::kvstore::Consistency)`(k)`.
+    BoundedDelay(u64),
+    /// Weighted shard placement + membership events at round barriers
+    /// ([`DataParallelTrainer::join_at`] / `leave_at`).
+    Elastic,
+}
+
 /// Trainer configuration (see [`DataParallelTrainer::bind`]).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct TrainerConfig {
     /// Executor replicas (virtual devices).
     pub devices: usize,
     /// Parts per synchronization round — the data-parallel degree that
     /// *defines the math* (see the module docs).  Must be a multiple of
-    /// `devices`; `0` means `devices`.
+    /// `devices` for `Bsp`/`BoundedDelay` (any value for `Elastic`,
+    /// which apportions by weight); `0` means `devices`.
     pub shards: usize,
     /// Per-layer gradient push from inside backward (default) vs push
     /// after the pass completes.  Bitwise-identical results either way.
@@ -425,6 +479,12 @@ pub struct TrainerConfig {
     pub bind: crate::executor::BindConfig,
     /// Parameter-init seed (identical across replicas).
     pub seed: u64,
+    /// Synchronization policy.
+    pub sync: SyncMode,
+    /// Per-replica work weights (`Elastic` only; empty = equal).  A
+    /// replica with weight 3 runs three micro-steps per round for every
+    /// one a weight-1 straggler runs; weight 0 idles the replica.
+    pub weights: Vec<u32>,
 }
 
 impl Default for TrainerConfig {
@@ -435,6 +495,8 @@ impl Default for TrainerConfig {
             overlap: true,
             bind: crate::executor::BindConfig::default(),
             seed: 7,
+            sync: SyncMode::Bsp,
+            weights: Vec::new(),
         }
     }
 }
@@ -459,6 +521,7 @@ pub struct DataParallelTrainer {
     shard_batch: usize,
     shards: usize,
     overlap: bool,
+    policy: Box<dyn SyncPolicy>,
     step: u64,
     inited: bool,
 }
@@ -481,11 +544,22 @@ impl DataParallelTrainer {
     ) -> Result<DataParallelTrainer> {
         let devices = cfg.devices.max(1);
         let shards = if cfg.shards == 0 { devices } else { cfg.shards };
-        if shards % devices != 0 {
+        if !matches!(cfg.sync, SyncMode::Elastic) && shards % devices != 0 {
             return Err(Error::Bind(format!(
                 "data-parallel bind: {shards} shards not divisible by {devices} devices"
             )));
         }
+        if !cfg.weights.is_empty() && !matches!(cfg.sync, SyncMode::Elastic) {
+            return Err(Error::Bind(
+                "data-parallel bind: per-replica weights need SyncMode::Elastic".into(),
+            ));
+        }
+        let policy: Box<dyn SyncPolicy> = match cfg.sync {
+            SyncMode::Bsp => Box::new(Bsp::new()),
+            SyncMode::BoundedDelay(k) => Box::new(BoundedDelay { max_staleness: k }),
+            SyncMode::Elastic => Box::new(Elastic::new(devices, cfg.weights.clone())?),
+        };
+        policy.check_store(store.consistency())?;
         if store.num_devices() != shards {
             return Err(Error::Bind(format!(
                 "data-parallel bind: store aggregates {} parts per round, trainer \
@@ -557,6 +631,7 @@ impl DataParallelTrainer {
             shard_batch,
             shards,
             overlap: cfg.overlap,
+            policy,
             step: 0,
             inited: false,
         })
@@ -592,6 +667,37 @@ impl DataParallelTrainer {
         &self.param_names
     }
 
+    /// Synchronization rounds driven so far — the round counter that
+    /// [`DataParallelTrainer::join_at`] / `leave_at` rounds refer to.
+    pub fn rounds(&self) -> u64 {
+        self.step
+    }
+
+    /// Log a membership event: replica `device` joins the active set as
+    /// of round `round` (1-based; applied at that round's barrier).  The
+    /// rejoining replica pulls fresh master weights on its first
+    /// micro-step, so no state transfer is needed.  `Elastic` sync only.
+    pub fn join_at(&mut self, round: u64, device: usize) -> Result<()> {
+        self.member_event(round, device, true)
+    }
+
+    /// Log a membership event: replica `device` leaves the active set as
+    /// of round `round`; its shards are re-apportioned over the
+    /// remaining replicas by weight.  `Elastic` sync only.
+    pub fn leave_at(&mut self, round: u64, device: usize) -> Result<()> {
+        self.member_event(round, device, false)
+    }
+
+    fn member_event(&mut self, round: u64, device: usize, join: bool) -> Result<()> {
+        if device >= self.replicas.len() {
+            return Err(Error::Bind(format!(
+                "membership event for device {device} of {}",
+                self.replicas.len()
+            )));
+        }
+        self.policy.push_event(MemberEvent { round, device, join })
+    }
+
     /// Train for `epochs` over `iter` (global batches of `shards x
     /// shard_batch` rows).  Registers the parameters with the store on
     /// first call (first init wins, so multi-process workers can share a
@@ -604,7 +710,6 @@ impl DataParallelTrainer {
             }
             self.inited = true;
         }
-        let k_per = self.shards / self.replicas.len();
         let views: Vec<ReplicaView<'_>> = self
             .replicas
             .iter()
@@ -614,8 +719,6 @@ impl DataParallelTrainer {
                 params: &r.params,
                 data: &r.data,
                 label: &r.label,
-                parts: (i * k_per..(i + 1) * k_per).collect(),
-                offset: i * k_per,
                 pull_device: i,
             })
             .collect();
@@ -626,7 +729,8 @@ impl DataParallelTrainer {
             &views,
             &self.param_names,
             iter,
-            &RoundOpts { overlap: self.overlap, epochs },
+            &RoundOpts { overlap: self.overlap, epochs, shards: self.shards },
+            self.policy.as_mut(),
             &mut step,
         );
         drop(views);

@@ -8,8 +8,12 @@
 //! forward-backward / per-layer-overlapped-push code path.
 
 pub mod data_parallel;
+pub mod sync;
 
-pub use data_parallel::{Context, DataParallelTrainer, TrainerConfig};
+pub use data_parallel::{Context, DataParallelTrainer, SyncMode, TrainerConfig};
+pub use sync::{
+    proportional_parts, Assignment, BoundedDelay, Bsp, Elastic, MemberEvent, SyncPolicy,
+};
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -279,10 +283,12 @@ impl Module {
             params: &self.params,
             data,
             label,
-            parts: vec![device],
-            offset: 0,
             pull_device: device,
         };
+        // The single-replica degeneration: a fixed assignment pushing
+        // store part `device` (the worker's slot in a multi-process
+        // round), with the BSP barrier every round.
+        let mut policy = sync::Fixed { parts: vec![vec![device]] };
         let mut step = self.rounds;
         let out = data_parallel::fit_rounds(
             &self.engine,
@@ -290,7 +296,8 @@ impl Module {
             std::slice::from_ref(&view),
             &self.param_names,
             iter,
-            &data_parallel::RoundOpts { overlap: true, epochs },
+            &data_parallel::RoundOpts { overlap: true, epochs, shards: 1 },
+            &mut policy,
             &mut step,
         );
         drop(view);

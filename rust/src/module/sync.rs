@@ -1,0 +1,471 @@
+//! Pluggable synchronization policies for the data-parallel round loop
+//! (paper §2.3: the consistency spectrum, plus elastic membership for
+//! heterogeneous clusters).
+//!
+//! The round loop in [`data_parallel`](super::data_parallel) is a pure
+//! scheduler; everything policy-shaped about it is delegated here:
+//!
+//! * **which store parts each replica pushes** ([`SyncPolicy::assign`] —
+//!   equal for [`Bsp`], weight-proportional and membership-aware for
+//!   [`Elastic`]),
+//! * **how far replicas may run ahead of delivery**
+//!   ([`SyncPolicy::lookahead`] — 0 for BSP's full barrier, `k` for
+//!   [`BoundedDelay`]),
+//! * **which store consistency mode is legal**
+//!   ([`SyncPolicy::check_store`]).
+//!
+//! ## Determinism
+//!
+//! The determinism contract of PR 4 survives every policy: the *shard
+//! count* defines the math, and a policy only decides *where* shards run
+//! and *when* the loop waits.  [`Bsp`] with equal weights reproduces the
+//! pre-refactor trainer bit for bit; [`Elastic`] re-apportions whole
+//! shards (never resizes them), so weighted and membership-churned runs
+//! are **also** bitwise identical to the static run — rebalancing is a
+//! pure function of the membership-event log ([`MemberEvent`]).
+//! [`BoundedDelay`] intentionally trades determinism for pipelining:
+//! replicas may observe snapshots up to `k` rounds stale
+//! ([`Consistency::BoundedDelay`]), with `k = 0` degenerating to exactly
+//! the sequential BSP schedule.
+
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex};
+
+use crate::error::{Error, Result};
+use crate::kvstore::Consistency;
+
+/// Which store parts each replica pushes in one round: `parts[d]` lists
+/// the part ids replica `d` delivers, in micro-step order.  Assignments
+/// are contiguous in device order (replica 0's parts precede replica
+/// 1's), so the metric slot of replica `d`'s `k`-th micro-step is
+/// `offsets()[d] + k` — stable whatever the policy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Assignment {
+    /// Per-replica part ids.
+    pub parts: Vec<Vec<usize>>,
+}
+
+impl Assignment {
+    /// Total parts delivered per round (the local shard count).
+    pub fn total_parts(&self) -> usize {
+        self.parts.iter().map(|p| p.len()).sum()
+    }
+
+    /// Micro-steps of the busiest replica.
+    pub fn max_parts(&self) -> usize {
+        self.parts.iter().map(|p| p.len()).max().unwrap_or(0)
+    }
+
+    /// Metric-slot offset of each replica's first shard.
+    pub fn offsets(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.parts.len());
+        let mut off = 0usize;
+        for p in &self.parts {
+            out.push(off);
+            off += p.len();
+        }
+        out
+    }
+}
+
+/// One entry of the membership-event log: replica `device` joins or
+/// leaves the active set as of round `round` (1-based; applied at the
+/// round barrier before that round is issued).  Rebalancing is a pure
+/// function of this log, so replaying the same log reproduces the same
+/// shard placement — and, since shards define the math, the same bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemberEvent {
+    /// First round the new membership applies to.
+    pub round: u64,
+    /// Replica (device index) affected.
+    pub device: usize,
+    /// `true` = join (activate), `false` = leave (deactivate).
+    pub join: bool,
+}
+
+/// How the data-parallel round loop synchronizes its replicas (see the
+/// module docs).  Implementations: [`Bsp`], [`BoundedDelay`],
+/// [`Elastic`].
+pub trait SyncPolicy: Send {
+    /// Policy name for diagnostics.
+    fn name(&self) -> &'static str;
+
+    /// Rounds that may remain undelivered when the loop issues the next
+    /// round: `0` is the full BSP barrier; `k` lets replicas run up to
+    /// `k` rounds ahead of the slowest delivery (bounded staleness).
+    fn lookahead(&self) -> u64 {
+        0
+    }
+
+    /// Validate the store's consistency mode for this policy (checked at
+    /// trainer bind).
+    fn check_store(&self, _consistency: Consistency) -> Result<()> {
+        Ok(())
+    }
+
+    /// The part assignment in effect for round `round` (1-based), with
+    /// any membership events up to `round` applied.  Called at every
+    /// round barrier; the loop re-derives its hook/metric state only
+    /// when the returned assignment differs from the previous round's.
+    /// Must be deterministic given the policy state and the event log.
+    fn assign(&mut self, round: u64, shards: usize, devices: usize) -> Result<Assignment>;
+
+    /// Queue a membership event.  Only elastic policies accept these.
+    fn push_event(&mut self, ev: MemberEvent) -> Result<()> {
+        let _ = ev;
+        Err(Error::Bind(format!(
+            "sync policy '{}' has static membership (use SyncMode::Elastic)",
+            self.name()
+        )))
+    }
+}
+
+/// Apportion `shards` parts over replicas proportionally to `weights`,
+/// as contiguous part-id ranges in device order.  Built on the same
+/// largest-remainder primitive as
+/// [`shard_ranges_weighted`](crate::io::shard_ranges_weighted)
+/// ([`largest_remainder_counts`](crate::io::partition::largest_remainder_counts)),
+/// but over whole shards rather than rows: replica batch sizes stay
+/// fixed, so the executor binds survive rebalancing and the round math
+/// never changes.  A zero-weight replica receives no parts (it idles).
+pub fn proportional_parts(shards: usize, weights: &[u64]) -> Result<Vec<Vec<usize>>> {
+    let counts = crate::io::partition::largest_remainder_counts(shards, weights)
+        .map_err(|_| Error::Bind("part assignment: no active replica with weight > 0".into()))?;
+    let mut out = Vec::with_capacity(weights.len());
+    let mut next = 0usize;
+    for n in counts {
+        out.push((next..next + n).collect());
+        next += n;
+    }
+    debug_assert_eq!(next, shards);
+    Ok(out)
+}
+
+/// Bulk-synchronous parallel: the policy extracted from the PR 4 round
+/// loop.  Equal contiguous part assignment, full delivery barrier every
+/// round — bitwise identical to the pre-refactor trainer.
+#[derive(Debug, Default)]
+pub struct Bsp;
+
+impl Bsp {
+    /// A BSP policy.
+    pub fn new() -> Bsp {
+        Bsp
+    }
+}
+
+impl SyncPolicy for Bsp {
+    fn name(&self) -> &'static str {
+        "bsp"
+    }
+
+    fn assign(&mut self, _round: u64, shards: usize, devices: usize) -> Result<Assignment> {
+        let equal = vec![1u64; devices.max(1)];
+        Ok(Assignment { parts: proportional_parts(shards, &equal)? })
+    }
+}
+
+/// Bounded-delay synchronization (paper §2.3 footnote): replicas run up
+/// to `max_staleness` rounds ahead of the slowest gradient delivery, and
+/// pulls come from committed snapshots at most `max_staleness` rounds
+/// stale ([`Consistency::BoundedDelay`]) — Eventual's pipelining with a
+/// staleness ceiling.  `max_staleness = 0` is exactly sequential BSP.
+#[derive(Debug)]
+pub struct BoundedDelay {
+    /// Rounds a replica may run ahead / a snapshot may lag.
+    pub max_staleness: u64,
+}
+
+impl SyncPolicy for BoundedDelay {
+    fn name(&self) -> &'static str {
+        "bounded-delay"
+    }
+
+    fn lookahead(&self) -> u64 {
+        self.max_staleness
+    }
+
+    fn check_store(&self, consistency: Consistency) -> Result<()> {
+        match consistency {
+            Consistency::BoundedDelay(k) if k == self.max_staleness => Ok(()),
+            other => Err(Error::Bind(format!(
+                "BoundedDelay({}) policy requires a store with \
+                 Consistency::BoundedDelay({}), got {other:?}",
+                self.max_staleness, self.max_staleness
+            ))),
+        }
+    }
+
+    fn assign(&mut self, _round: u64, shards: usize, devices: usize) -> Result<Assignment> {
+        let equal = vec![1u64; devices.max(1)];
+        Ok(Assignment { parts: proportional_parts(shards, &equal)? })
+    }
+}
+
+/// Elastic membership with weighted work sizes: replicas carry
+/// per-device weights (a straggler gets proportionally fewer shards per
+/// round) and may join or leave at round barriers via the
+/// membership-event log.  Shards are re-apportioned over the active set
+/// with [`proportional_parts`]; a replica that rejoins pulls fresh
+/// parameters on its first micro-step, so no state transfer is needed.
+#[derive(Debug)]
+pub struct Elastic {
+    weights: Vec<u32>,
+    active: Vec<bool>,
+    /// Pending events, in submission order (applied in `(round, log
+    /// order)`).
+    events: Vec<MemberEvent>,
+}
+
+impl Elastic {
+    /// An elastic policy over `devices` replicas.  `weights` sizes each
+    /// replica's share of the round (empty = equal); all replicas start
+    /// active.
+    pub fn new(devices: usize, weights: Vec<u32>) -> Result<Elastic> {
+        let devices = devices.max(1);
+        let weights = if weights.is_empty() { vec![1; devices] } else { weights };
+        if weights.len() != devices {
+            return Err(Error::Bind(format!(
+                "elastic sync: {} weights for {devices} devices",
+                weights.len()
+            )));
+        }
+        if weights.iter().all(|&w| w == 0) {
+            return Err(Error::Bind("elastic sync: all weights are zero".into()));
+        }
+        Ok(Elastic { weights, active: vec![true; devices], events: Vec::new() })
+    }
+
+    /// The currently-active replica set (diagnostics / tests).
+    pub fn active(&self) -> &[bool] {
+        &self.active
+    }
+}
+
+impl SyncPolicy for Elastic {
+    fn name(&self) -> &'static str {
+        "elastic"
+    }
+
+    fn assign(&mut self, round: u64, shards: usize, devices: usize) -> Result<Assignment> {
+        debug_assert_eq!(devices, self.active.len());
+        // Apply the log entries due by this round, in log order.
+        let mut rest = Vec::with_capacity(self.events.len());
+        for ev in self.events.drain(..) {
+            if ev.round <= round {
+                self.active[ev.device] = ev.join;
+            } else {
+                rest.push(ev);
+            }
+        }
+        self.events = rest;
+        let eff: Vec<u64> = self
+            .weights
+            .iter()
+            .zip(&self.active)
+            .map(|(&w, &a)| if a { w as u64 } else { 0 })
+            .collect();
+        proportional_parts(shards, &eff)
+            .map(|parts| Assignment { parts })
+            .map_err(|_| {
+                Error::Bind(format!(
+                    "elastic sync: no active replica with weight > 0 at round {round}"
+                ))
+            })
+    }
+
+    fn push_event(&mut self, ev: MemberEvent) -> Result<()> {
+        if ev.device >= self.active.len() {
+            return Err(Error::Bind(format!(
+                "membership event for device {} of {}",
+                ev.device,
+                self.active.len()
+            )));
+        }
+        self.events.push(ev);
+        Ok(())
+    }
+}
+
+/// A fixed, caller-supplied assignment — [`Module::fit`](super::Module)'s
+/// single-replica degeneration, where the one replica pushes an
+/// arbitrary store part (its worker/device id).
+pub(crate) struct Fixed {
+    pub(crate) parts: Vec<Vec<usize>>,
+}
+
+impl SyncPolicy for Fixed {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn assign(&mut self, _round: u64, _shards: usize, _devices: usize) -> Result<Assignment> {
+        Ok(Assignment { parts: self.parts.clone() })
+    }
+}
+
+/// Tracks outstanding gradient deliveries **per round**, replacing PR 4's
+/// single-round latch so policies with `lookahead > 0` can leave up to
+/// `k` rounds in flight.  Also carries the first delivery error of the
+/// fit: a failed push must fail `fit` at the next barrier, never silently
+/// stop training (the PR 4 round-error contract).
+pub(crate) struct RoundLedger {
+    inner: Mutex<Ledger>,
+    cv: Condvar,
+}
+
+struct Ledger {
+    /// round -> deliveries still outstanding.
+    outstanding: BTreeMap<u64, usize>,
+    err: Option<Error>,
+}
+
+impl RoundLedger {
+    pub(crate) fn new() -> RoundLedger {
+        RoundLedger {
+            inner: Mutex::new(Ledger { outstanding: BTreeMap::new(), err: None }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Register `n` expected deliveries for `round`.
+    pub(crate) fn add(&self, round: u64, n: usize) {
+        if n == 0 {
+            return;
+        }
+        *self.inner.lock().unwrap().outstanding.entry(round).or_insert(0) += n;
+    }
+
+    /// One delivery of `round` completed.
+    pub(crate) fn done(&self, round: u64) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(c) = g.outstanding.get_mut(&round) {
+            *c -= 1;
+            if *c == 0 {
+                g.outstanding.remove(&round);
+                self.cv.notify_all();
+            }
+        }
+    }
+
+    /// One delivery of `round` failed: record the first error (surfaced
+    /// at the next barrier) and complete the delivery so waiters wake.
+    pub(crate) fn fail(&self, round: u64, e: Error) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            if g.err.is_none() {
+                g.err = Some(e);
+            }
+        }
+        self.done(round);
+    }
+
+    fn take_err(g: &mut Ledger) -> Result<()> {
+        match g.err.take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Block until every delivery of rounds `<= round` has completed;
+    /// surfaces the first recorded delivery error.
+    pub(crate) fn wait_through(&self, round: u64) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        while g.outstanding.keys().next().is_some_and(|&r| r <= round) {
+            g = self.cv.wait(g).unwrap();
+        }
+        Self::take_err(&mut g)
+    }
+
+    /// Block until no round has outstanding deliveries.
+    pub(crate) fn wait_all(&self) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        while !g.outstanding.is_empty() {
+            g = self.cv.wait(g).unwrap();
+        }
+        Self::take_err(&mut g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proportional_assignment_is_contiguous_and_deterministic() {
+        // weights {3, 1} over 4 shards -> 3:1
+        let p = proportional_parts(4, &[3, 1]).unwrap();
+        assert_eq!(p, vec![vec![0, 1, 2], vec![3]]);
+        // equal weights, divisible: PR 4's equal contiguous assignment
+        let p = proportional_parts(4, &[1, 1]).unwrap();
+        assert_eq!(p, vec![vec![0, 1], vec![2, 3]]);
+        // zero-weight replica idles
+        let p = proportional_parts(4, &[2, 0, 2]).unwrap();
+        assert_eq!(p, vec![vec![0, 1], vec![], vec![2, 3]]);
+        // ties to the lower index
+        let p = proportional_parts(4, &[1, 1, 1]).unwrap();
+        assert_eq!(p, vec![vec![0, 1], vec![2], vec![3]]);
+        // all-zero rejected
+        assert!(proportional_parts(4, &[0, 0]).is_err());
+        // every part assigned exactly once, whatever the skew
+        for (shards, w) in [(7usize, vec![5u64, 1, 3]), (16, vec![9, 2]), (3, vec![1, 8])] {
+            let p = proportional_parts(shards, &w).unwrap();
+            let flat: Vec<usize> = p.iter().flatten().copied().collect();
+            assert_eq!(flat, (0..shards).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn elastic_applies_events_at_their_round() {
+        let mut e = Elastic::new(2, vec![]).unwrap();
+        e.push_event(MemberEvent { round: 3, device: 1, join: false }).unwrap();
+        let a1 = e.assign(1, 4, 2).unwrap();
+        assert_eq!(a1.parts, vec![vec![0, 1], vec![2, 3]]);
+        let a2 = e.assign(2, 4, 2).unwrap();
+        assert_eq!(a2, a1, "event not due yet");
+        let a3 = e.assign(3, 4, 2).unwrap();
+        assert_eq!(a3.parts, vec![vec![0, 1, 2, 3], vec![]], "device 1 left");
+        assert_eq!(e.active(), &[true, false]);
+        e.push_event(MemberEvent { round: 5, device: 1, join: true }).unwrap();
+        let a5 = e.assign(5, 4, 2).unwrap();
+        assert_eq!(a5, a1, "device 1 rejoined: assignment restored");
+        // out-of-range device rejected
+        assert!(e.push_event(MemberEvent { round: 9, device: 7, join: true }).is_err());
+        // removing the last active replica fails the round
+        e.push_event(MemberEvent { round: 6, device: 0, join: false }).unwrap();
+        e.push_event(MemberEvent { round: 6, device: 1, join: false }).unwrap();
+        assert!(e.assign(6, 4, 2).is_err());
+    }
+
+    #[test]
+    fn static_policies_reject_membership_events() {
+        let mut b = Bsp::new();
+        assert!(b.push_event(MemberEvent { round: 1, device: 0, join: false }).is_err());
+        let mut bd = BoundedDelay { max_staleness: 2 };
+        assert!(bd.push_event(MemberEvent { round: 1, device: 0, join: false }).is_err());
+    }
+
+    #[test]
+    fn bounded_delay_store_validation() {
+        let bd = BoundedDelay { max_staleness: 2 };
+        assert!(bd.check_store(Consistency::BoundedDelay(2)).is_ok());
+        assert!(bd.check_store(Consistency::BoundedDelay(1)).is_err());
+        assert!(bd.check_store(Consistency::Sequential).is_err());
+        assert!(bd.check_store(Consistency::Eventual).is_err());
+        // BSP accepts any store mode (the PR 4 behavior)
+        assert!(Bsp::new().check_store(Consistency::Eventual).is_ok());
+    }
+
+    #[test]
+    fn ledger_waits_per_round_and_surfaces_errors() {
+        let l = RoundLedger::new();
+        l.add(1, 2);
+        l.add(2, 1);
+        l.done(1);
+        l.done(1);
+        l.wait_through(1).unwrap(); // round 2 still outstanding
+        l.fail(2, Error::Bind("boom".into()));
+        assert!(l.wait_all().is_err(), "delivery error must surface");
+        l.wait_all().unwrap(); // error is taken exactly once
+    }
+}

@@ -27,6 +27,12 @@
 //! * **Observability** — per-request latency lands in a bounded-reservoir
 //!   histogram ([`crate::metrics::Histogram`]); [`Server::stats`] reports
 //!   p50/p95/p99, throughput and mean batch occupancy.
+//! * **Live serving** — a servable attached to a training
+//!   [`LocalKVStore`](crate::kvstore::LocalKVStore) via
+//!   [`Servable::attach_live`] refreshes its bucket-shared parameters
+//!   from the store's **committed** snapshots between batches: the
+//!   server answers traffic while the trainer keeps pushing (online
+//!   learning), and no response ever reads a torn parameter buffer.
 //!
 //! Knobs (env defaults, overridable per [`ServeConfig`]):
 //! `PALLAS_SERVE_MAX_BATCH`, `PALLAS_SERVE_MAX_DELAY_US`,

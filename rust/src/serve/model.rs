@@ -18,14 +18,64 @@
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::engine::EngineRef;
 use crate::error::{Error, Result};
 use crate::executor::{BindConfig, Executor};
 use crate::graph::Op;
+use crate::kvstore::LocalKVStore;
 use crate::models::Model;
 use crate::ndarray::NDArray;
 use crate::symbol::Symbol;
+
+/// Live link between a servable's shared parameter arrays and a
+/// training [`LocalKVStore`]: between batches, each worker refreshes
+/// the parameters from the store's **committed** snapshots (online
+/// learning — the server answers traffic while the trainer keeps
+/// pushing).
+///
+/// Tear-safety: `pull_committed` captures one committed round's bytes
+/// under the snapshot lock and writes them in a single engine op holding
+/// the write grant on the parameter var, so a concurrently running
+/// forward (which reads the var) is ordered entirely before or after
+/// the refresh — a response can never observe a half-written parameter.
+/// On the default plan-replay path a whole forward is *one* engine op,
+/// so all parameters a response reads also come from one refresh
+/// generation; with `replay` disabled, refreshes may interleave between
+/// layer ops (per-parameter snapshots remain whole; the cross-layer mix
+/// is ordinary eventual consistency).
+pub(crate) struct LiveRefresher {
+    store: Arc<LocalKVStore>,
+    /// Shared-storage clones of the servable's parameter arrays.
+    params: Vec<(String, NDArray)>,
+    /// Last snapshot round refreshed into each parameter (CAS-guarded so
+    /// concurrent workers schedule one refresh per new round, not one
+    /// per worker).
+    seen: Vec<AtomicU64>,
+}
+
+impl LiveRefresher {
+    /// Schedule refreshes for every parameter whose committed snapshot
+    /// advanced since the last refresh.  Cheap when nothing changed: one
+    /// atomic load + one store lock per parameter.
+    pub(crate) fn refresh(&self) {
+        for (i, (name, arr)) in self.params.iter().enumerate() {
+            let Ok(round) = self.store.snapshot_round(name) else { continue };
+            let prev = self.seen[i].load(Ordering::Acquire);
+            if round > prev
+                && self.seen[i]
+                    .compare_exchange(prev, round, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+            {
+                // The captured snapshot may be even newer than `round`
+                // (monotonic), never older than a committed round.
+                let _ = self.store.pull_committed(name, arr);
+            }
+        }
+    }
+}
 
 /// A model ready to serve: symbol + parameters + engine.
 pub struct Servable {
@@ -34,6 +84,7 @@ pub struct Servable {
     params: HashMap<String, NDArray>,
     label_name: String,
     feat_len: usize,
+    live: Option<Arc<LiveRefresher>>,
 }
 
 impl Servable {
@@ -73,7 +124,46 @@ impl Servable {
             .find(|n| n.ends_with("_label"))
             .ok_or_else(|| Error::serve("model has no softmax label variable"))?;
         let feat_len = model.feat_shape.iter().product();
-        Ok(Servable { model, engine, params, label_name, feat_len })
+        Ok(Servable { model, engine, params, label_name, feat_len, live: None })
+    }
+
+    /// Attach this servable to a training [`LocalKVStore`]: every bucket
+    /// executor bound *after* this call refreshes the shared parameters
+    /// from the store's committed snapshots before each batch, and the
+    /// parameters are synchronized to the store's current snapshots
+    /// right away.  Every parameter must be registered in the store with
+    /// a matching size.  See [`LiveRefresher`] for the tear-safety
+    /// contract; snapshots are per-key, so responses mid-training are
+    /// eventually consistent across layers (and exactly consistent once
+    /// the trainer stops and a final refresh lands).
+    pub fn attach_live(&mut self, store: &Arc<LocalKVStore>) -> Result<()> {
+        let mut params = Vec::with_capacity(self.params.len());
+        let mut seen = Vec::with_capacity(self.params.len());
+        for (name, arr) in &self.params {
+            let n = store.value_len(name)?;
+            if n != arr.size() {
+                return Err(Error::serve(format!(
+                    "attach_live: store key '{name}' has {n} elements, parameter has {}",
+                    arr.size()
+                )));
+            }
+            // Eager initial sync: serve the store's committed state from
+            // the first request on.
+            let round = store.pull_committed(name, arr)?;
+            params.push((name.clone(), arr.clone()));
+            seen.push(AtomicU64::new(round));
+        }
+        self.live = Some(Arc::new(LiveRefresher {
+            store: Arc::clone(store),
+            params,
+            seen,
+        }));
+        Ok(())
+    }
+
+    /// Whether this servable is live-attached to a training store.
+    pub fn is_live(&self) -> bool {
+        self.live.is_some()
     }
 
     /// Load a checkpoint (paper's `save_checkpoint` format) and wrap it
@@ -137,6 +227,7 @@ impl Servable {
             exec,
             feat_len: self.feat_len,
             out_len: self.model.num_classes,
+            live: self.live.clone(),
         })
     }
 }
@@ -148,6 +239,8 @@ pub struct BucketExec {
     exec: Executor,
     feat_len: usize,
     out_len: usize,
+    /// Live-training link (refresh parameters before each batch).
+    live: Option<Arc<LiveRefresher>>,
 }
 
 impl BucketExec {
@@ -171,6 +264,11 @@ impl BucketExec {
     /// dispatch allocates nothing.
     pub fn run(&mut self, rows: &[&[f32]]) -> Vec<Vec<f32>> {
         assert!(rows.len() <= self.batch, "{} rows > bucket {}", rows.len(), self.batch);
+        if let Some(live) = &self.live {
+            // Online learning: pick up newly committed training rounds
+            // before this batch's forward is scheduled.
+            live.refresh();
+        }
         // Zero-filled staging: unused rows never leak a previous batch.
         let mut staged = crate::ndarray::pool::lease_zeroed(self.batch * self.feat_len);
         for (i, r) in rows.iter().enumerate() {
@@ -245,8 +343,10 @@ impl ExecPool {
 mod tests {
     use super::*;
     use crate::engine::{create, EngineKind};
+    use crate::kvstore::{Consistency, KVStore};
     use crate::models::{mlp, simple_cnn};
     use crate::module::Module;
+    use crate::optimizer::Sgd;
 
     fn trained_params(engine: &EngineRef) -> (Model, HashMap<String, NDArray>) {
         let model = mlp(&[8], 6, 3);
@@ -311,6 +411,59 @@ mod tests {
             let one = single.run(&[sample.as_slice()]);
             assert_eq!(one[0], batched[i], "row {i} differs from batch-1");
         }
+    }
+
+    #[test]
+    fn attach_live_syncs_params_and_picks_up_committed_rounds() {
+        let engine = create(EngineKind::Threaded, 2);
+        let (model, params) = trained_params(&engine);
+        // A training store holding *different* weights for the same keys.
+        let store = Arc::new(LocalKVStore::new(
+            engine.clone(),
+            1,
+            Arc::new(Sgd::new(1.0)),
+            Consistency::Sequential,
+        ));
+        for (name, arr) in &params {
+            let alt =
+                NDArray::from_vec_on(arr.shape(), vec![0.25; arr.size()], engine.clone());
+            store.init(name, &alt).unwrap();
+        }
+        let mut s = Servable::new(model, params.clone(), engine.clone()).unwrap();
+        assert!(!s.is_live());
+        s.attach_live(&store).unwrap();
+        assert!(s.is_live());
+        engine.wait_all();
+        // eager sync: the servable now holds the store's committed state
+        for (name, arr) in &params {
+            assert!(arr.to_vec().iter().all(|&v| v == 0.25), "'{name}' not synced");
+        }
+        // a committed round is picked up by the next bucket dispatch
+        let mut b = s.bind_bucket(1).unwrap();
+        let g = NDArray::from_vec_on(
+            params["fc1_weight"].shape(),
+            vec![0.25; params["fc1_weight"].size()],
+            engine.clone(),
+        );
+        store.push("fc1_weight", &g, 0).unwrap();
+        store.flush();
+        let sample = vec![0.0f32; 6];
+        let _ = b.run(&[sample.as_slice()]);
+        engine.wait_all();
+        assert!(
+            params["fc1_weight"].to_vec().iter().all(|&v| v == 0.0),
+            "lr=1 push must land in the served parameters (0.25 - 0.25)"
+        );
+        // attaching with a missing key is rejected
+        let (model2, params2) = trained_params(&engine);
+        let empty = Arc::new(LocalKVStore::new(
+            engine.clone(),
+            1,
+            Arc::new(Sgd::new(1.0)),
+            Consistency::Sequential,
+        ));
+        let mut s2 = Servable::new(model2, params2, engine).unwrap();
+        assert!(s2.attach_live(&empty).is_err());
     }
 
     #[test]

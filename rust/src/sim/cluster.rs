@@ -46,6 +46,13 @@ pub struct ClusterConfig {
     /// Inter-machine consistency: `true` = eventual (overlapped comm),
     /// `false` = sequential (blocking round trip).
     pub eventual: bool,
+    /// Staleness ceiling for eventual mode (bounded-delay consistency,
+    /// paper §2.3 footnote): at most this many server rounds may be
+    /// outstanding per machine before it blocks, and the modeled
+    /// staleness is clamped to it.  `None` = unbounded (one outstanding
+    /// comm, the classic double-buffered model); values below 1 are
+    /// treated as 1.
+    pub max_staleness: Option<usize>,
     /// Asymptotic accuracy of the single-machine reference.
     pub acc_inf: f64,
     /// Convergence rate per unit progress.
@@ -74,6 +81,7 @@ impl ClusterConfig {
             dataset_images: 1_281_167,
             passes: 15,
             eventual: machines > 1,
+            max_staleness: None,
             acc_inf: 0.66,
             acc_rate: 0.32,
             batch_kappa: 0.85,
@@ -119,10 +127,13 @@ pub fn simulate(cfg: &ClusterConfig) -> Vec<PassStat> {
     let wire_s = cfg.grad_bytes / cfg.cost.nic_bytes_per_s;
     let update_s = cfg.cost.server_update_time(cfg.grad_bytes);
 
-    // Event state: per-machine clock & outstanding-comm completion; the
+    // Event state: per-machine clock & outstanding-comm completions (a
+    // queue of up to `comm_cap` in-flight server round trips); the
     // level-2 server NIC frees at `server_free`.
+    let comm_cap = cfg.max_staleness.map(|k| k.max(1)).unwrap_or(1);
     let mut machine_clock = vec![0.0f64; cfg.machines];
-    let mut comm_done = vec![0.0f64; cfg.machines];
+    let mut comm_q: Vec<std::collections::VecDeque<f64>> =
+        vec![std::collections::VecDeque::new(); cfg.machines];
     let mut server_free = 0.0f64;
 
     // Progress accumulator for the accuracy law.
@@ -154,15 +165,26 @@ pub fn simulate(cfg: &ClusterConfig) -> Vec<PassStat> {
                 let pull_end = updated + wire_s + cfg.net_latency();
                 server_free = pull_end;
                 if cfg.eventual {
-                    // Worker proceeds after local compute; one comm may
-                    // be outstanding (double-buffered weights).
-                    let stale_updates = ((pull_end - compute_end)
+                    // Worker proceeds after local compute; up to
+                    // `comm_cap` comms may be outstanding (bounded-delay
+                    // pipeline; cap 1 = classic double-buffered weights).
+                    let raw_stale = ((pull_end - compute_end)
                         / (compute_s + l1_s).max(1e-9))
                         .max(0.0);
+                    // A bounded run never *observes* staleness past its
+                    // ceiling — the blocking below is what enforces it.
+                    let stale_updates = match cfg.max_staleness {
+                        Some(k) => raw_stale.min(k.max(1) as f64),
+                        None => raw_stale,
+                    };
                     staleness_sum += stale_updates;
                     staleness_n += 1;
-                    machine_clock[m] = compute_end.max(comm_done[m]);
-                    comm_done[m] = pull_end;
+                    comm_q[m].push_back(pull_end);
+                    while comm_q[m].len() > comm_cap {
+                        let done = comm_q[m].pop_front().unwrap();
+                        machine_clock[m] = machine_clock[m].max(done);
+                    }
+                    machine_clock[m] = machine_clock[m].max(compute_end);
                 } else {
                     // Sequential: block until the fresh weights arrive.
                     machine_clock[m] = pull_end;
@@ -174,8 +196,8 @@ pub fn simulate(cfg: &ClusterConfig) -> Vec<PassStat> {
         // sequential model, its last pull has landed).
         let end = machine_clock
             .iter()
-            .zip(&comm_done)
-            .map(|(c, d)| c.max(*d))
+            .zip(&comm_q)
+            .map(|(c, q)| q.iter().copied().fold(*c, f64::max))
             .fold(0.0f64, f64::max);
         let staleness =
             if staleness_n > 0 { staleness_sum / staleness_n as f64 } else { 0.0 };
@@ -294,6 +316,45 @@ mod tests {
             "10-machine pass {:.0}s",
             ten[0].seconds
         );
+    }
+
+    #[test]
+    fn bounded_staleness_never_exceeds_its_ceiling() {
+        let mut cfg = paper_cfg(10);
+        cfg.eventual = true;
+        cfg.max_staleness = Some(2);
+        let stats = simulate(&cfg);
+        assert!(
+            stats.iter().all(|s| s.staleness <= 2.0 + 1e-9),
+            "staleness {:?}",
+            stats.iter().map(|s| s.staleness).collect::<Vec<_>>()
+        );
+        // deterministic like everything else in the simulator
+        let again = simulate(&cfg);
+        for (a, b) in stats.iter().zip(&again) {
+            assert_eq!(a.seconds, b.seconds);
+            assert_eq!(a.staleness, b.staleness);
+        }
+    }
+
+    #[test]
+    fn bounded_delay_sits_between_sequential_and_eventual() {
+        // Compute-bound regime (4 machines): sequential pays the full
+        // blocking round trip, unbounded eventual pipelines it away, and
+        // a deeper bounded window can only shorten (never lengthen) the
+        // pass relative to the cap-1 eventual default.
+        let mut seq = paper_cfg(4);
+        seq.eventual = false;
+        let mut bounded = paper_cfg(4);
+        bounded.eventual = true;
+        bounded.max_staleness = Some(4);
+        let mut evt = paper_cfg(4);
+        evt.eventual = true;
+        let s = simulate(&seq)[0].seconds;
+        let b = simulate(&bounded)[0].seconds;
+        let e = simulate(&evt)[0].seconds;
+        assert!(b < s, "bounded {b} should beat sequential {s}");
+        assert!(b <= e + 1e-9, "bounded {b} should not lose to cap-1 eventual {e}");
     }
 
     #[test]

@@ -14,7 +14,6 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use mixnet::engine::{create, EngineKind};
-use mixnet::executor::BindConfig;
 use mixnet::io::{synth, ArrayDataIter};
 use mixnet::kvstore::dist::DistKVStore;
 use mixnet::kvstore::server::{PsServer, ServerUpdater};
@@ -54,7 +53,7 @@ fn train_mlp(
         &[16],
         &shapes,
         store,
-        TrainerConfig { devices, shards, overlap, bind: BindConfig::default(), seed: 1 },
+        TrainerConfig { devices, shards, overlap, seed: 1, ..Default::default() },
     )
     .unwrap();
     let stats = t.fit(&mut iter, epochs).unwrap();
@@ -139,7 +138,7 @@ fn train_alexnet(devices: usize, shards: usize) -> HashMap<String, Vec<f32>> {
         &[3, 64, 64],
         &shapes,
         store,
-        TrainerConfig { devices, shards, overlap: true, bind: BindConfig::default(), seed: 3 },
+        TrainerConfig { devices, shards, seed: 3, ..Default::default() },
     )
     .unwrap();
     t.fit(&mut iter, 1).unwrap();
@@ -184,7 +183,7 @@ fn dist_kvstore_loopback_roundtrip() {
         &[16],
         &shapes,
         store,
-        TrainerConfig { devices: 2, shards: 2, overlap: true, bind: BindConfig::default(), seed: 1 },
+        TrainerConfig { devices: 2, shards: 2, seed: 1, ..Default::default() },
     )
     .unwrap();
     let stats = t.fit(&mut iter, 4).unwrap();

@@ -1,0 +1,410 @@
+//! Elastic heterogeneous training acceptance (ISSUE 5).
+//!
+//! The pluggable sync layer must preserve PR 4's determinism contract
+//! wherever it promises to: `Bsp` reproduces the pre-refactor trainer
+//! (asserted in `tests/data_parallel.rs`), `BoundedDelay(0)` is bitwise
+//! identical to sequential BSP, and — because elastic rebalancing moves
+//! whole shards instead of resizing them — weighted and
+//! membership-churned runs are bitwise identical to the static run too.
+//! `BoundedDelay(k)` must never serve a snapshot more than `k` rounds
+//! stale (asserted via the store's version counters under an injected
+//! straggler), and live serving must answer mid-`fit` from committed
+//! (never torn) snapshots only.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use mixnet::engine::{create, EngineKind};
+use mixnet::executor::BindConfig;
+use mixnet::io::{synth, ArrayDataIter};
+use mixnet::kvstore::{Consistency, KVStore, LocalKVStore};
+use mixnet::models::mlp;
+use mixnet::module::{DataParallelTrainer, EpochStats, Module, SyncMode, TrainerConfig, UpdateMode};
+use mixnet::ndarray::NDArray;
+use mixnet::optimizer::Sgd;
+use mixnet::serve::{Servable, ServeConfig, Server};
+
+/// Wraps a store, delaying deliveries of one part — a straggler replica
+/// whose gradient transfers are slow.
+struct SlowPart {
+    inner: Arc<LocalKVStore>,
+    slow_part: usize,
+    delay: Duration,
+}
+
+impl KVStore for SlowPart {
+    fn init(&self, key: &str, value: &NDArray) -> mixnet::Result<()> {
+        self.inner.init(key, value)
+    }
+    fn push(&self, key: &str, grad: &NDArray, device: usize) -> mixnet::Result<()> {
+        self.inner.push(key, grad, device)
+    }
+    fn push_part(&self, key: &str, grad: &[f32], part: usize) -> mixnet::Result<()> {
+        if part == self.slow_part {
+            std::thread::sleep(self.delay);
+        }
+        self.inner.push_part(key, grad, part)
+    }
+    fn pull(&self, key: &str, out: &NDArray, device: usize) -> mixnet::Result<()> {
+        self.inner.pull(key, out, device)
+    }
+    fn flush(&self) {
+        self.inner.flush()
+    }
+    fn num_devices(&self) -> usize {
+        self.inner.num_devices()
+    }
+    fn consistency(&self) -> Consistency {
+        self.inner.consistency()
+    }
+}
+
+struct TrainSpec {
+    devices: usize,
+    shards: usize,
+    sync: SyncMode,
+    consistency: Consistency,
+    weights: Vec<u32>,
+    epochs: usize,
+    /// (round, device, join) membership events logged before fit.
+    events: Vec<(u64, usize, bool)>,
+    /// Delay deliveries of this part (straggler injection).
+    slow_part: Option<usize>,
+}
+
+impl TrainSpec {
+    fn bsp(devices: usize, shards: usize, epochs: usize) -> TrainSpec {
+        TrainSpec {
+            devices,
+            shards,
+            sync: SyncMode::Bsp,
+            consistency: Consistency::Sequential,
+            weights: vec![],
+            epochs,
+            events: vec![],
+            slow_part: None,
+        }
+    }
+}
+
+/// Train the Figure 2 MLP under `spec`; returns (master weights, epoch
+/// stats, the underlying local store).
+fn train_mlp(spec: &TrainSpec) -> (HashMap<String, Vec<f32>>, Vec<EpochStats>, Arc<LocalKVStore>) {
+    let engine = create(EngineKind::Threaded, 4);
+    let model = mlp(&[32], 16, 4);
+    let shard_batch = 8usize;
+    let global = spec.shards * shard_batch;
+    let ds = synth::class_clusters(512, 4, 16, 0.3, 5);
+    let mut iter =
+        ArrayDataIter::new(ds.features, ds.labels, &[16], global, true, engine.clone());
+    let shapes = model.param_shapes(shard_batch).unwrap();
+    let local = Arc::new(LocalKVStore::new(
+        engine.clone(),
+        spec.shards,
+        Arc::new(Sgd::new(0.5).rescale(1.0 / spec.shards as f32)),
+        spec.consistency,
+    ));
+    let store: Arc<dyn KVStore> = match spec.slow_part {
+        Some(part) => Arc::new(SlowPart {
+            inner: Arc::clone(&local),
+            slow_part: part,
+            delay: Duration::from_micros(800),
+        }),
+        None => local.clone() as Arc<dyn KVStore>,
+    };
+    let mut t = DataParallelTrainer::bind(
+        &model.symbol,
+        engine,
+        shard_batch,
+        &[16],
+        &shapes,
+        store,
+        TrainerConfig {
+            devices: spec.devices,
+            shards: spec.shards,
+            sync: spec.sync,
+            weights: spec.weights.clone(),
+            seed: 1,
+            overlap: true,
+            bind: BindConfig::default(),
+        },
+    )
+    .unwrap();
+    for &(round, device, join) in &spec.events {
+        if join {
+            t.join_at(round, device).unwrap();
+        } else {
+            t.leave_at(round, device).unwrap();
+        }
+    }
+    let stats = t.fit(&mut iter, spec.epochs).unwrap();
+    (t.pull_params().unwrap(), stats, local)
+}
+
+fn assert_params_bitwise_eq(a: &HashMap<String, Vec<f32>>, b: &HashMap<String, Vec<f32>>) {
+    assert_eq!(a.len(), b.len());
+    for (name, va) in a {
+        let vb = &b[name];
+        assert_eq!(va.len(), vb.len(), "{name}: length");
+        for (i, (x, y)) in va.iter().zip(vb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{name}[{i}]: {x} vs {y}");
+        }
+    }
+}
+
+fn assert_stats_bitwise_eq(a: &[EpochStats], b: &[EpochStats]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "epoch {} loss", x.epoch);
+        assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits(), "epoch {} acc", x.epoch);
+    }
+}
+
+#[test]
+fn bounded_delay_zero_is_bitwise_sequential_bsp() {
+    // k = 0: the lookahead window is empty and pulls wait for the full
+    // committed state — exactly the sequential BSP schedule, bit for bit.
+    let (p_seq, s_seq, _) = train_mlp(&TrainSpec::bsp(2, 4, 3));
+    let (p_bd, s_bd, _) = train_mlp(&TrainSpec {
+        sync: SyncMode::BoundedDelay(0),
+        consistency: Consistency::BoundedDelay(0),
+        ..TrainSpec::bsp(2, 4, 3)
+    });
+    assert_params_bitwise_eq(&p_seq, &p_bd);
+    assert_stats_bitwise_eq(&s_seq, &s_bd);
+    assert!(s_seq.last().unwrap().accuracy > 0.85, "{:?}", s_seq.last());
+}
+
+#[test]
+fn bounded_delay_staleness_never_exceeds_k_under_straggler() {
+    // One slow part (a straggler's deliveries crawl through the wire).
+    // BoundedDelay(2) keeps training, but no pull may ever observe a
+    // snapshot more than 2 rounds behind the newest pushed round —
+    // asserted via the store's version counters.
+    let (_, stats, store) = train_mlp(&TrainSpec {
+        sync: SyncMode::BoundedDelay(2),
+        consistency: Consistency::BoundedDelay(2),
+        slow_part: Some(3),
+        ..TrainSpec::bsp(2, 4, 3)
+    });
+    let s = store.pull_stats();
+    assert!(s.max_snap_age <= 2, "staleness bound violated: {s:?}");
+    assert!(s.copies > 0, "pulls must have been served");
+    assert!(stats.last().unwrap().accuracy > 0.7, "{:?}", stats.last());
+}
+
+#[test]
+fn weighted_shards_are_bitwise_equal_to_unweighted() {
+    // Elastic weights {3, 1} move whole shards between replicas (3:1
+    // micro-steps per round) without touching the shard *math* — so the
+    // run is bitwise identical to the equal-weight BSP run.
+    let (p_eq, s_eq, _) = train_mlp(&TrainSpec::bsp(2, 4, 3));
+    let (p_w, s_w, _) = train_mlp(&TrainSpec {
+        sync: SyncMode::Elastic,
+        weights: vec![3, 1],
+        ..TrainSpec::bsp(2, 4, 3)
+    });
+    assert_params_bitwise_eq(&p_eq, &p_w);
+    assert_stats_bitwise_eq(&s_eq, &s_w);
+}
+
+#[test]
+fn join_leave_mid_training_is_bitwise_equal_and_learns() {
+    // Device 3 leaves at round 5 and rejoins at round 12 (pulling fresh
+    // master weights on its first micro-step back).  Shards are
+    // re-apportioned at each barrier, deterministically from the event
+    // log — and since only shard *placement* changes, the run stays
+    // bitwise identical to the static 4-device run.
+    let (p_static, s_static, _) = train_mlp(&TrainSpec::bsp(4, 4, 3));
+    let (p_elastic, s_elastic, _) = train_mlp(&TrainSpec {
+        sync: SyncMode::Elastic,
+        events: vec![(5, 3, false), (12, 3, true)],
+        ..TrainSpec::bsp(4, 4, 3)
+    });
+    assert_params_bitwise_eq(&p_static, &p_elastic);
+    assert_stats_bitwise_eq(&s_static, &s_elastic);
+    assert!(
+        s_elastic.last().unwrap().accuracy > 0.85,
+        "{:?}",
+        s_elastic.last()
+    );
+}
+
+#[test]
+fn config_validation_rejects_mismatched_policies() {
+    let engine = create(EngineKind::Threaded, 2);
+    let model = mlp(&[16], 8, 4);
+    let shapes = model.param_shapes(4).unwrap();
+    let mk_store = |c: Consistency| {
+        Arc::new(LocalKVStore::new(engine.clone(), 2, Arc::new(Sgd::new(0.1)), c))
+            as Arc<dyn KVStore>
+    };
+    let bind = |cfg: TrainerConfig, c: Consistency| {
+        DataParallelTrainer::bind(
+            &model.symbol,
+            engine.clone(),
+            4,
+            &[8],
+            &shapes,
+            mk_store(c),
+            cfg,
+        )
+    };
+    // BoundedDelay policy requires a matching BoundedDelay store
+    let cfg = TrainerConfig {
+        devices: 2,
+        shards: 2,
+        sync: SyncMode::BoundedDelay(2),
+        ..Default::default()
+    };
+    assert!(bind(cfg.clone(), Consistency::Sequential).is_err());
+    assert!(bind(cfg.clone(), Consistency::BoundedDelay(1)).is_err());
+    assert!(bind(cfg, Consistency::BoundedDelay(2)).is_ok());
+    // weights without Elastic sync are rejected
+    let cfg = TrainerConfig {
+        devices: 2,
+        shards: 2,
+        weights: vec![3, 1],
+        ..Default::default()
+    };
+    assert!(bind(cfg, Consistency::Sequential).is_err());
+    // all-zero elastic weights are rejected
+    let cfg = TrainerConfig {
+        devices: 2,
+        shards: 2,
+        sync: SyncMode::Elastic,
+        weights: vec![0, 0],
+        ..Default::default()
+    };
+    assert!(bind(cfg, Consistency::Sequential).is_err());
+    // membership events are Elastic-only
+    let cfg = TrainerConfig { devices: 2, shards: 2, ..Default::default() };
+    let mut t = bind(cfg, Consistency::Sequential).unwrap();
+    assert!(t.leave_at(3, 1).is_err(), "Bsp has static membership");
+    // leaving every replica fails the fit at that round's barrier
+    let store = Arc::new(LocalKVStore::new(
+        engine.clone(),
+        2,
+        Arc::new(Sgd::new(0.1)),
+        Consistency::Sequential,
+    ));
+    let cfg = TrainerConfig {
+        devices: 2,
+        shards: 2,
+        sync: SyncMode::Elastic,
+        ..Default::default()
+    };
+    let mut t = DataParallelTrainer::bind(
+        &model.symbol,
+        engine.clone(),
+        4,
+        &[8],
+        &shapes,
+        store,
+        cfg,
+    )
+    .unwrap();
+    t.leave_at(2, 0).unwrap();
+    t.leave_at(2, 1).unwrap();
+    let ds = synth::class_clusters(64, 4, 8, 0.3, 3);
+    let mut iter = ArrayDataIter::new(ds.features, ds.labels, &[8], 8, false, engine);
+    assert!(t.fit(&mut iter, 1).is_err());
+}
+
+#[test]
+fn live_serving_answers_mid_fit_from_committed_snapshots() {
+    // Serving + training co-location: a trainer pushes rounds into a
+    // LocalKVStore while the server answers requests from its committed
+    // snapshots.  Every mid-training response must be a valid softmax
+    // row (a torn parameter read would poison it), and once the trainer
+    // finishes, responses must be *bitwise* identical to a fresh
+    // servable built from the store's final committed weights.
+    let engine = create(EngineKind::Threaded, 4);
+    let model = mlp(&[16], 8, 3);
+    let batch = 16usize;
+    let shapes = model.param_shapes(batch).unwrap();
+    let store = Arc::new(LocalKVStore::new(
+        engine.clone(),
+        1,
+        Arc::new(Sgd::new(0.3)),
+        Consistency::Sequential,
+    ));
+    // Seed the store and a servable holding its own parameter copies.
+    let mut seeder = Module::new(mlp(&[16], 8, 3).symbol, engine.clone());
+    seeder.bind(batch, &[8], &shapes, BindConfig::default(), 11).unwrap();
+    let mut sparams = HashMap::new();
+    for name in seeder.param_names() {
+        let src = seeder.param(name).unwrap();
+        store.init(name, src).unwrap();
+        let dst = NDArray::zeros_on(src.shape(), engine.clone());
+        dst.copy_from_(src);
+        sparams.insert(name.clone(), dst);
+    }
+    drop(seeder);
+    let mut servable = Servable::new(mlp(&[16], 8, 3), sparams, engine.clone()).unwrap();
+    servable.attach_live(&store).unwrap();
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_delay_us: 300,
+        queue_cap: 64,
+        workers: 2,
+        buckets: vec![],
+    };
+    let server = Server::start(&servable, &cfg).unwrap();
+
+    // Trainer thread: fit through the same store (single replica).
+    let t_engine = engine.clone();
+    let t_store: Arc<dyn KVStore> = store.clone();
+    let trainer = std::thread::spawn(move || {
+        let m = mlp(&[16], 8, 3);
+        let shapes = m.param_shapes(batch).unwrap();
+        let mut module = Module::new(m.symbol, t_engine.clone());
+        module.bind(batch, &[8], &shapes, BindConfig::default(), 11).unwrap();
+        let ds = synth::class_clusters(512, 3, 8, 0.3, 7);
+        let mut iter =
+            ArrayDataIter::new(ds.features, ds.labels, &[8], batch, true, t_engine);
+        let stats = module
+            .fit(&mut iter, &UpdateMode::KvStore { store: t_store, device: 0 }, 6)
+            .unwrap();
+        stats.last().unwrap().accuracy
+    });
+
+    // Mid-fit traffic: every response is a valid softmax row.
+    let sample: Vec<f32> = (0..8).map(|i| (i as f32 * 0.31).sin()).collect();
+    let mut served = 0usize;
+    loop {
+        let probs = server.infer(sample.clone()).unwrap();
+        assert_eq!(probs.len(), 3);
+        let sum: f32 = probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "torn/garbage response: {probs:?}");
+        served += 1;
+        if trainer.is_finished() {
+            break;
+        }
+    }
+    let train_acc = trainer.join().unwrap();
+    assert!(train_acc > 0.8, "online trainer accuracy {train_acc}");
+    assert!(served > 0, "no requests served mid-fit");
+    store.flush();
+
+    // Post-fit: the live server must now answer exactly like a fresh
+    // servable built from the store's final committed snapshots.
+    let mut finals = HashMap::new();
+    for name in ["fc1_weight", "fc1_bias", "fc2_weight", "fc2_bias"] {
+        let shape = shapes[name].clone();
+        let arr = NDArray::zeros_on(&shape, engine.clone());
+        store.pull_committed(name, &arr).unwrap();
+        finals.insert(name.to_string(), arr);
+    }
+    engine.wait_all();
+    let reference = Servable::new(mlp(&[16], 8, 3), finals, engine.clone()).unwrap();
+    let mut ref_exec = reference.bind_bucket(1).unwrap();
+    let expect = ref_exec.run(&[sample.as_slice()]);
+    let got = server.infer(sample.clone()).unwrap();
+    assert_eq!(
+        got, expect[0],
+        "post-fit live response must match the final committed weights bitwise"
+    );
+    drop(server);
+}

@@ -1,0 +1,119 @@
+#!/usr/bin/env bash
+# Multi-process distributed training harness (ISSUE 5 / ROADMAP item 1).
+#
+# Launches ONE `mixnet server` (the level-2 parameter server) plus N
+# `mixnet worker` processes talking to it over real TCP, for N in
+# $WORKER_COUNTS, and records a Figure 8-style images/sec-vs-workers
+# curve into BENCH_dist.json — the measured counterpart of the
+# `sim/cluster.rs` virtual curve.
+#
+#   scripts/dist_train.sh                 # full run: 1, 2 and 4 workers
+#   QUICK=1 scripts/dist_train.sh         # CI smoke: 2 workers, tiny run
+#   BENCH_OUT=/tmp/d.json scripts/dist_train.sh
+#
+# Knobs: QUICK, BENCH_OUT, PORT (base port, default 9731), MODEL,
+# EXAMPLES (per worker), EPOCHS, BATCH (global batch per worker),
+# DEVICES (local replicas per worker), CONSISTENCY (seq|bounded:K|eventual).
+
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+BIN="$ROOT/target/release/mixnet"
+QUICK="${QUICK:-0}"
+PORT="${PORT:-9731}"
+MODEL="${MODEL:-mlp}"
+DEVICES="${DEVICES:-1}"
+CONSISTENCY="${CONSISTENCY:-seq}"
+BENCH_OUT="${BENCH_OUT:-$ROOT/BENCH_dist.json}"
+
+if [ "$QUICK" = "1" ]; then
+  WORKER_COUNTS="${WORKER_COUNTS:-2}"
+  EXAMPLES="${EXAMPLES:-512}"
+  EPOCHS="${EPOCHS:-1}"
+  BATCH="${BATCH:-32}"
+else
+  WORKER_COUNTS="${WORKER_COUNTS:-1 2 4}"
+  EXAMPLES="${EXAMPLES:-2048}"
+  EPOCHS="${EPOCHS:-2}"
+  BATCH="${BATCH:-32}"
+fi
+
+if [ ! -x "$BIN" ]; then
+  echo "== building release binary =="
+  (cd "$ROOT" && cargo build --release)
+fi
+
+wait_for_port() {
+  local port="$1" tries=100
+  while ! (exec 3<>"/dev/tcp/127.0.0.1/$port") 2>/dev/null; do
+    tries=$((tries - 1))
+    if [ "$tries" -le 0 ]; then
+      echo "server on port $port never came up" >&2
+      return 1
+    fi
+    sleep 0.1
+  done
+  exec 3>&- 3<&- || true
+}
+
+now_s() { date +%s.%N; }
+
+records=""
+idx=0
+for n in $WORKER_COUNTS; do
+  port=$((PORT + idx))
+  idx=$((idx + 1))
+  echo "== $n worker(s) over TCP (port $port) =="
+  "$BIN" server --port "$port" --machines "$n" --lr 0.2 >/dev/null 2>&1 &
+  server_pid=$!
+  trap 'kill "$server_pid" 2>/dev/null || true' EXIT
+  wait_for_port "$port"
+
+  t0="$(now_s)"
+  worker_pids=""
+  for m in $(seq 0 $((n - 1))); do
+    "$BIN" worker \
+      --server "127.0.0.1:$port" --machine "$m" \
+      --model "$MODEL" --epochs "$EPOCHS" --batch "$BATCH" \
+      --examples "$EXAMPLES" --devices "$DEVICES" \
+      --consistency "$CONSISTENCY" >/dev/null &
+    worker_pids="$worker_pids $!"
+  done
+  fail=0
+  for pid in $worker_pids; do
+    wait "$pid" || fail=1
+  done
+  t1="$(now_s)"
+  kill "$server_pid" 2>/dev/null || true
+  wait "$server_pid" 2>/dev/null || true
+  trap - EXIT
+  if [ "$fail" -ne 0 ]; then
+    echo "a worker failed at n=$n" >&2
+    exit 1
+  fi
+
+  wall="$(awk -v a="$t0" -v b="$t1" 'BEGIN { printf "%.3f", b - a }')"
+  images=$((n * EXAMPLES * EPOCHS))
+  ips="$(awk -v i="$images" -v w="$wall" 'BEGIN { printf "%.1f", i / w }')"
+  echo "   $n worker(s): ${wall}s wall, $images images -> $ips img/s"
+  [ -n "$records" ] && records="$records,"
+  records="$records
+    {\"name\": \"dist_train.epoch\", \"case\": \"${n}workers\", \"n\": $n, \"wall_s\": $wall, \"images\": $images, \"images_per_sec\": $ips}"
+done
+
+cat > "$BENCH_OUT" <<EOF
+{
+  "bench": "dist_train",
+  "quick": $([ "$QUICK" = "1" ] && echo true || echo false),
+  "model": "$MODEL",
+  "examples_per_worker": $EXAMPLES,
+  "epochs": $EPOCHS,
+  "global_batch_per_worker": $BATCH,
+  "devices_per_worker": $DEVICES,
+  "consistency": "$CONSISTENCY",
+  "note": "Figure 8-style measured scaling: 1 mixnet server + N mixnet workers over real TCP loopback; compare against sim/cluster.rs. Weak scaling: each worker holds its own $EXAMPLES-example synthetic shard.",
+  "records": [$records
+  ]
+}
+EOF
+echo "wrote $BENCH_OUT"
