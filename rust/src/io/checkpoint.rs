@@ -19,6 +19,232 @@ use crate::ndarray::NDArray;
 /// Checkpoint file magic + version.
 pub const CKPT_MAGIC: u32 = 0x6d78_6b01;
 
+/// Train-state checkpoint magic + version (see [`TrainState`]).
+pub const TRAIN_CKPT_MAGIC: u32 = 0x6d78_6b02;
+
+/// Everything a [`DataParallelTrainer`](crate::module::DataParallelTrainer)
+/// needs to resume bitwise-identically after a crash: master weights and
+/// their round versions, updater (optimizer) state, the global round
+/// counter, and — for elastic runs — the membership-event log (weights,
+/// active set, applied and pending events).  Parameter-only checkpoints
+/// ([`save`]) stay the lightweight serving format; this is the recovery
+/// format.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TrainState {
+    /// Master weights: (key, shape, data), sorted by key.
+    pub params: Vec<(String, Vec<usize>, Vec<f32>)>,
+    /// Completed rounds per key, aligned with `params` order.
+    pub versions: Vec<(String, u64)>,
+    /// Optimizer state blobs ([`Optimizer::export_state`](crate::optimizer::Optimizer)).
+    pub updater: Vec<(String, Vec<usize>, Vec<f32>)>,
+    /// Global synchronization rounds driven so far.
+    pub step: u64,
+    /// Epochs fully completed (the resume point for the data iterator).
+    pub epochs_done: u64,
+    /// Elastic per-replica weights (empty for static policies).
+    pub weights_cfg: Vec<u32>,
+    /// Elastic active set (empty for static policies).
+    pub active: Vec<bool>,
+    /// Membership events already applied: (round, device, join).
+    pub applied_events: Vec<(u64, u32, u8)>,
+    /// Membership events queued but not yet due: (round, device, join).
+    pub pending_events: Vec<(u64, u32, u8)>,
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_blobs(buf: &mut Vec<u8>, blobs: &[(String, Vec<usize>, Vec<f32>)]) {
+    put_u32(buf, blobs.len() as u32);
+    for (name, shape, data) in blobs {
+        put_str(buf, name);
+        put_u32(buf, shape.len() as u32);
+        for &d in shape {
+            put_u32(buf, d as u32);
+        }
+        put_u32(buf, data.len() as u32);
+        for x in data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+fn put_events(buf: &mut Vec<u8>, evs: &[(u64, u32, u8)]) {
+    put_u32(buf, evs.len() as u32);
+    for &(round, device, join) in evs {
+        put_u64(buf, round);
+        put_u32(buf, device);
+        buf.push(join);
+    }
+}
+
+/// Serialize a [`TrainState`] to `path` (little-endian, deterministic
+/// byte stream for identical state).
+pub fn save_train_state(path: impl AsRef<Path>, st: &TrainState) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    put_u32(&mut buf, TRAIN_CKPT_MAGIC);
+    put_blobs(&mut buf, &st.params);
+    put_u32(&mut buf, st.versions.len() as u32);
+    for (name, v) in &st.versions {
+        put_str(&mut buf, name);
+        put_u64(&mut buf, *v);
+    }
+    put_blobs(&mut buf, &st.updater);
+    put_u64(&mut buf, st.step);
+    put_u64(&mut buf, st.epochs_done);
+    put_u32(&mut buf, st.weights_cfg.len() as u32);
+    for &w in &st.weights_cfg {
+        put_u32(&mut buf, w);
+    }
+    put_u32(&mut buf, st.active.len() as u32);
+    for &a in &st.active {
+        buf.push(u8::from(a));
+    }
+    put_events(&mut buf, &st.applied_events);
+    put_events(&mut buf, &st.pending_events);
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+struct TrainCursor {
+    bytes: Vec<u8>,
+    pos: usize,
+}
+
+impl TrainCursor {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        if n > self.bytes.len() - self.pos {
+            return Err(Error::DataIo("train checkpoint: truncated".into()));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A declared count, sanity-bounded by the bytes actually remaining
+    /// (`per` bytes per element) so a corrupt header cannot drive a huge
+    /// allocation.
+    fn count(&mut self, per: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(per.max(1)) > self.bytes.len() - self.pos {
+            return Err(Error::DataIo("train checkpoint: count exceeds file size".into()));
+        }
+        Ok(n)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.count(1)?;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| Error::DataIo("train checkpoint: bad utf8".into()))
+    }
+
+    fn blobs(&mut self) -> Result<Vec<(String, Vec<usize>, Vec<f32>)>> {
+        let n = self.count(12)?; // minimum bytes per empty blob
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = self.string()?;
+            let ndim = self.count(4)?;
+            if ndim > 8 {
+                return Err(Error::DataIo(format!("train checkpoint: ndim {ndim} too large")));
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(self.u32()? as usize);
+            }
+            let len = self.count(4)?;
+            let raw = self.take(len * 4)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            out.push((name, shape, data));
+        }
+        Ok(out)
+    }
+
+    fn events(&mut self) -> Result<Vec<(u64, u32, u8)>> {
+        let n = self.count(13)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let round = self.u64()?;
+            let device = self.u32()?;
+            let join = self.u8()?;
+            out.push((round, device, join));
+        }
+        Ok(out)
+    }
+}
+
+/// Load a [`TrainState`] previously written by [`save_train_state`].
+pub fn load_train_state(path: impl AsRef<Path>) -> Result<TrainState> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(&path)?.read_to_end(&mut bytes)?;
+    let mut c = TrainCursor { bytes, pos: 0 };
+    if c.u32()? != TRAIN_CKPT_MAGIC {
+        return Err(Error::DataIo("train checkpoint: bad magic".into()));
+    }
+    let params = c.blobs()?;
+    let nvers = c.count(12)?;
+    let mut versions = Vec::with_capacity(nvers);
+    for _ in 0..nvers {
+        let name = c.string()?;
+        let v = c.u64()?;
+        versions.push((name, v));
+    }
+    let updater = c.blobs()?;
+    let step = c.u64()?;
+    let epochs_done = c.u64()?;
+    let nw = c.count(4)?;
+    let mut weights_cfg = Vec::with_capacity(nw);
+    for _ in 0..nw {
+        weights_cfg.push(c.u32()?);
+    }
+    let na = c.count(1)?;
+    let mut active = Vec::with_capacity(na);
+    for _ in 0..na {
+        active.push(c.u8()? != 0);
+    }
+    let applied_events = c.events()?;
+    let pending_events = c.events()?;
+    if c.pos != c.bytes.len() {
+        return Err(Error::DataIo("train checkpoint: trailing bytes".into()));
+    }
+    Ok(TrainState {
+        params,
+        versions,
+        updater,
+        step,
+        epochs_done,
+        weights_cfg,
+        active,
+        applied_events,
+        pending_events,
+    })
+}
+
 /// Save named arrays to `path` (sorted by name for determinism).
 pub fn save(path: impl AsRef<Path>, params: &HashMap<String, NDArray>) -> Result<()> {
     let mut names: Vec<&String> = params.keys().collect();
@@ -169,6 +395,59 @@ mod tests {
         let b = std::fs::read(&p).unwrap();
         std::fs::write(&p, &b[..b.len() - 10]).unwrap();
         assert!(load(&p, default_engine()).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn train_state_roundtrips_exactly() {
+        let p = tmp("train_rt");
+        let st = TrainState {
+            params: vec![
+                ("b".into(), vec![3], vec![0.1, -0.2, f32::MIN_POSITIVE]),
+                ("w".into(), vec![2, 2], vec![1.0, 2.0, -3.5, 4.25]),
+            ],
+            versions: vec![("b".into(), 17), ("w".into(), 17)],
+            updater: vec![("vel:w".into(), vec![2, 2], vec![0.0, -0.5, 0.25, 1e-8])],
+            step: 17,
+            epochs_done: 2,
+            weights_cfg: vec![2, 1, 1],
+            active: vec![true, false, true],
+            applied_events: vec![(5, 1, 0)],
+            pending_events: vec![(40, 1, 1)],
+        };
+        save_train_state(&p, &st).unwrap();
+        let back = load_train_state(&p).unwrap();
+        assert_eq!(back, st);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn train_state_rejects_corruption() {
+        let p = tmp("train_bad");
+        let st = TrainState {
+            params: vec![("w".into(), vec![4], vec![1.0; 4])],
+            versions: vec![("w".into(), 1)],
+            step: 1,
+            ..TrainState::default()
+        };
+        save_train_state(&p, &st).unwrap();
+        let good = std::fs::read(&p).unwrap();
+        // bad magic
+        let mut b = good.clone();
+        b[0] ^= 0xff;
+        std::fs::write(&p, &b).unwrap();
+        assert!(load_train_state(&p).is_err());
+        // truncation at every prefix must error, never panic
+        for cut in [4usize, 8, 20, good.len() - 3] {
+            std::fs::write(&p, &good[..cut]).unwrap();
+            assert!(load_train_state(&p).is_err(), "cut at {cut}");
+        }
+        // a count field inflated past the file size must be rejected
+        // before allocation (params count lives right after the magic)
+        let mut b = good.clone();
+        b[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&p, &b).unwrap();
+        assert!(load_train_state(&p).is_err());
         std::fs::remove_file(p).ok();
     }
 

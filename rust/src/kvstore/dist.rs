@@ -9,16 +9,125 @@
 //! Network I/O runs inside engine operations, so pushes and pulls overlap
 //! with compute exactly like any other scheduled op (§3.3: *"the strategy
 //! ... makes the data synchronization work seamless with computation"*).
+//!
+//! Fault tolerance: every RPC runs under a deadline and a retry loop with
+//! capped exponential backoff + jitter; a failed attempt tears the
+//! connection down and redials (re-announcing the machine with `Hello`).
+//! Retries are idempotent — pushes carry per-machine monotonic sequence
+//! numbers and the server deduplicates, barriers are idempotent by
+//! (id, machine), and pulls/inits are naturally re-executable.  Errors
+//! inside engine-scheduled ops are captured in a slot and surface from
+//! the next store call instead of being silently dropped.
 
 use std::collections::HashMap;
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
 
+use super::fault::{inject_send, FaultPlan};
 use super::wire::{read_msg, write_msg, Msg};
-use super::{Consistency, KVStore, PartStage};
+use super::{lock, Consistency, KVStore, PartStage};
 use crate::engine::EngineRef;
 use crate::error::{Error, Result};
 use crate::ndarray::NDArray;
+use crate::util::Rng;
+
+/// Timeout / retry / heartbeat knobs for [`DistKVStore`].
+#[derive(Debug, Clone, Copy)]
+pub struct RetryCfg {
+    /// TCP connect deadline.
+    pub connect_timeout: Duration,
+    /// Read/write deadline for ordinary RPCs (init, push, stats).
+    pub op_timeout: Duration,
+    /// Read deadline for RPCs that legitimately park on the server
+    /// (sequential pulls, barriers) — must exceed the longest stall a
+    /// healthy run can produce.
+    pub park_timeout: Duration,
+    /// Retry attempts after the first failure before giving up.
+    pub max_retries: u32,
+    /// First backoff step; doubles per attempt.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Lease keep-alive interval (`None` = no heartbeat thread).
+    pub heartbeat: Option<Duration>,
+}
+
+impl Default for RetryCfg {
+    fn default() -> Self {
+        RetryCfg {
+            connect_timeout: Duration::from_millis(3000),
+            op_timeout: Duration::from_millis(10_000),
+            park_timeout: Duration::from_millis(60_000),
+            max_retries: 4,
+            backoff_base: Duration::from_millis(20),
+            backoff_cap: Duration::from_millis(1000),
+            heartbeat: None,
+        }
+    }
+}
+
+impl RetryCfg {
+    /// Defaults overridden by `PALLAS_KV_*` environment knobs:
+    /// `PALLAS_KV_CONNECT_TIMEOUT_MS`, `PALLAS_KV_TIMEOUT_MS`,
+    /// `PALLAS_KV_PARK_TIMEOUT_MS`, `PALLAS_KV_RETRIES`,
+    /// `PALLAS_KV_BACKOFF_MS`, `PALLAS_KV_BACKOFF_CAP_MS`,
+    /// `PALLAS_KV_HEARTBEAT_MS`.
+    pub fn from_env() -> RetryCfg {
+        fn envu(name: &str) -> Option<u64> {
+            std::env::var(name).ok()?.trim().parse().ok()
+        }
+        let mut cfg = RetryCfg::default();
+        if let Some(ms) = envu("PALLAS_KV_CONNECT_TIMEOUT_MS") {
+            cfg.connect_timeout = Duration::from_millis(ms);
+        }
+        if let Some(ms) = envu("PALLAS_KV_TIMEOUT_MS") {
+            cfg.op_timeout = Duration::from_millis(ms);
+        }
+        if let Some(ms) = envu("PALLAS_KV_PARK_TIMEOUT_MS") {
+            cfg.park_timeout = Duration::from_millis(ms);
+        }
+        if let Some(n) = envu("PALLAS_KV_RETRIES") {
+            cfg.max_retries = n as u32;
+        }
+        if let Some(ms) = envu("PALLAS_KV_BACKOFF_MS") {
+            cfg.backoff_base = Duration::from_millis(ms);
+        }
+        if let Some(ms) = envu("PALLAS_KV_BACKOFF_CAP_MS") {
+            cfg.backoff_cap = Duration::from_millis(ms);
+        }
+        if let Some(ms) = envu("PALLAS_KV_HEARTBEAT_MS") {
+            cfg.heartbeat = Some(Duration::from_millis(ms));
+        }
+        cfg
+    }
+}
+
+/// Client-side transport counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClientStats {
+    /// RPC attempts repeated after a transport failure.
+    pub retries: u64,
+    /// Connections re-established after the first dial.
+    pub reconnects: u64,
+}
+
+/// Server-side counters fetched over the wire (see `Msg::StatsReply`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServerStats {
+    /// Data-plane messages received.
+    pub msgs: u64,
+    /// Payload bytes received.
+    pub bytes: u64,
+    /// Retransmissions recognized and dropped.
+    pub dedup_hits: u64,
+    /// Machine leases expired.
+    pub lease_expiries: u64,
+    /// Optimizer rounds applied.
+    pub applies: u64,
+}
 
 /// Last fetched weight per key (version-stamped): within one round every
 /// device pulls the same watermark, so only the first pull pays an RPC
@@ -43,15 +152,166 @@ struct KeyState {
     cache: Arc<Mutex<PullCache>>,
 }
 
+/// Does `reply` pair with `req`?  A mismatch means the stream desynced
+/// (e.g. a duplicated frame left a stale reply queued) — the connection
+/// is torn down and the RPC retried rather than mis-paired.
+fn reply_matches(req: &Msg, reply: &Msg) -> bool {
+    if matches!(reply, Msg::Err { .. }) {
+        return true;
+    }
+    match req {
+        // Key equality matters: a duplicated Pull leaves an extra Value
+        // in the socket that must not satisfy a later Pull for another
+        // key.
+        Msg::Pull { key, .. } => matches!(reply, Msg::Value { key: k, .. } if k == key),
+        Msg::Stats => matches!(reply, Msg::StatsReply { .. }),
+        _ => matches!(reply, Msg::Ack),
+    }
+}
+
+/// One client connection with reconnect + retry.
 struct Conn {
-    stream: Mutex<TcpStream>,
+    addr: std::net::SocketAddr,
+    cfg: RetryCfg,
+    plan: Option<Arc<FaultPlan>>,
+    /// Machine id announced with `Hello` on every (re)dial — registers
+    /// the lease and folds a previously-expired machine back in.
+    hello: Option<u32>,
+    stream: Mutex<Option<TcpStream>>,
+    jitter: Mutex<Rng>,
+    retries: Arc<AtomicU64>,
+    reconnects: Arc<AtomicU64>,
+    ever_connected: AtomicBool,
 }
 
 impl Conn {
+    fn new(
+        addr: std::net::SocketAddr,
+        cfg: RetryCfg,
+        plan: Option<Arc<FaultPlan>>,
+        hello: Option<u32>,
+        retries: Arc<AtomicU64>,
+        reconnects: Arc<AtomicU64>,
+    ) -> Conn {
+        let seed = 0xbac0_0ff ^ u64::from(hello.unwrap_or(0));
+        Conn {
+            addr,
+            cfg,
+            plan,
+            hello,
+            stream: Mutex::new(None),
+            jitter: Mutex::new(Rng::seed_from_u64(seed)),
+            retries,
+            reconnects,
+            ever_connected: AtomicBool::new(false),
+        }
+    }
+
+    /// Dial the server (with deadline), announce the machine, and store
+    /// the stream into `slot`.
+    fn dial(&self, slot: &mut Option<TcpStream>) -> Result<()> {
+        let mut s = TcpStream::connect_timeout(&self.addr, self.cfg.connect_timeout)?;
+        s.set_nodelay(true).ok();
+        if self.ever_connected.swap(true, Ordering::Relaxed) {
+            self.reconnects.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(machine) = self.hello {
+            // Registration is sent clean (never through the fault plan):
+            // it models the OS-level connect handshake, and injecting
+            // here would make every redial a coin flip.
+            s.set_write_timeout(Some(self.cfg.op_timeout)).ok();
+            s.set_read_timeout(Some(self.cfg.op_timeout)).ok();
+            write_msg(&mut s, &Msg::Hello { machine })?;
+            match read_msg(&mut s)? {
+                Msg::Ack => {}
+                other => return Err(Error::kv(format!("hello: unexpected reply {other:?}"))),
+            }
+        }
+        *slot = Some(s);
+        Ok(())
+    }
+
+    /// Eagerly establish the connection (used at construction so a bad
+    /// address fails fast).
+    fn ensure_connected(&self) -> Result<()> {
+        let mut slot = lock(&self.stream);
+        if slot.is_none() {
+            self.dial(&mut slot)?;
+        }
+        Ok(())
+    }
+
+    /// One attempt: send through the fault layer, read one reply.  Any
+    /// failure poisons the stream so the next attempt redials.
+    fn try_rpc(&self, msg: &Msg, deadline: Duration) -> Result<Msg> {
+        let mut slot = lock(&self.stream);
+        if slot.is_none() {
+            self.dial(&mut slot)?;
+        }
+        let s = slot.as_mut().ok_or_else(|| Error::kv("not connected"))?;
+        s.set_write_timeout(Some(self.cfg.op_timeout)).ok();
+        s.set_read_timeout(Some(deadline)).ok();
+        let sent = match &self.plan {
+            Some(p) => inject_send(s, msg, p, true),
+            None => write_msg(s, msg),
+        };
+        if let Err(e) = sent {
+            *slot = None;
+            return Err(e);
+        }
+        match read_msg(s) {
+            Ok(reply) if reply_matches(msg, &reply) => Ok(reply),
+            Ok(reply) => {
+                *slot = None;
+                Err(Error::kv(format!("desynced reply {reply:?} to {msg:?}")))
+            }
+            Err(e) => {
+                *slot = None;
+                Err(e)
+            }
+        }
+    }
+
+    /// RPC with retry: transport failures redial with capped exponential
+    /// backoff + jitter; a server `Err` reply is semantic and terminal.
+    fn rpc_deadline(&self, msg: &Msg, deadline: Duration) -> Result<Msg> {
+        let mut attempt = 0u32;
+        loop {
+            match self.try_rpc(msg, deadline) {
+                Ok(Msg::Err { msg }) => return Err(Error::kv(format!("server: {msg}"))),
+                Ok(reply) => return Ok(reply),
+                Err(e) => {
+                    attempt += 1;
+                    if attempt > self.cfg.max_retries {
+                        return Err(Error::kv(format!(
+                            "rpc failed after {attempt} attempt(s): {e}"
+                        )));
+                    }
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    let base = self
+                        .cfg
+                        .backoff_base
+                        .saturating_mul(1u32 << (attempt - 1).min(16))
+                        .min(self.cfg.backoff_cap);
+                    let jitter_ms = {
+                        let mut r = lock(&self.jitter);
+                        let half = (base.as_millis() as u64 / 2).max(1);
+                        r.next_u64() % half
+                    };
+                    std::thread::sleep(base + Duration::from_millis(jitter_ms));
+                }
+            }
+        }
+    }
+
+    /// Ordinary RPC (short deadline).
     fn rpc(&self, msg: &Msg) -> Result<Msg> {
-        let mut s = self.stream.lock().unwrap();
-        write_msg(&mut *s, msg)?;
-        read_msg(&mut *s)
+        self.rpc_deadline(msg, self.cfg.op_timeout)
+    }
+
+    /// RPC that may legitimately park on the server (long deadline).
+    fn rpc_park(&self, msg: &Msg) -> Result<Msg> {
+        self.rpc_deadline(msg, self.cfg.park_timeout)
     }
 }
 
@@ -71,6 +331,16 @@ pub struct DistKVStore {
     /// in-flight pull replies.
     barrier_conn: Arc<Conn>,
     barrier_round: Mutex<u64>,
+    /// Per-machine monotonic sequence number stamped on every level-2
+    /// push (the server's dedup key for retried frames).
+    seq: AtomicU64,
+    /// First error raised inside an engine-scheduled push/pull op; taken
+    /// and returned by the next public store call.
+    async_err: Arc<Mutex<Option<Error>>>,
+    retries: Arc<AtomicU64>,
+    reconnects: Arc<AtomicU64>,
+    hb_stop: Arc<AtomicBool>,
+    hb_thread: Option<JoinHandle<()>>,
     /// Engine tag owning the wire connection: every push/pull engine op
     /// *writes* it, so network ops execute in issue order.  Without this
     /// a later pull (which the server may park until the round completes)
@@ -80,7 +350,9 @@ pub struct DistKVStore {
 }
 
 impl DistKVStore {
-    /// Connect to the level-2 server.
+    /// Connect to the level-2 server with retry/fault behavior from the
+    /// environment (see [`RetryCfg::from_env`] and
+    /// [`FaultPlan::from_env`]).
     pub fn connect(
         addr: std::net::SocketAddr,
         machine: u32,
@@ -88,10 +360,59 @@ impl DistKVStore {
         consistency: Consistency,
         engine: EngineRef,
     ) -> Result<DistKVStore> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true).ok();
-        let b = TcpStream::connect(addr)?;
-        b.set_nodelay(true).ok();
+        DistKVStore::connect_with(
+            addr,
+            machine,
+            num_devices,
+            consistency,
+            engine,
+            RetryCfg::from_env(),
+            FaultPlan::from_env(),
+        )
+    }
+
+    /// [`DistKVStore::connect`] with explicit retry config and fault
+    /// plan (the chaos-test entry point).
+    pub fn connect_with(
+        addr: std::net::SocketAddr,
+        machine: u32,
+        num_devices: usize,
+        consistency: Consistency,
+        engine: EngineRef,
+        cfg: RetryCfg,
+        plan: Option<Arc<FaultPlan>>,
+    ) -> Result<DistKVStore> {
+        let retries = Arc::new(AtomicU64::new(0));
+        let reconnects = Arc::new(AtomicU64::new(0));
+        let conn = Arc::new(Conn::new(
+            addr,
+            cfg,
+            plan.clone(),
+            Some(machine),
+            Arc::clone(&retries),
+            Arc::clone(&reconnects),
+        ));
+        // Barriers park by design; their connection is kept clean of
+        // fault injection on dial (hello) but shares the plan for
+        // request frames.
+        let barrier_conn = Arc::new(Conn::new(
+            addr,
+            cfg,
+            plan,
+            Some(machine),
+            Arc::clone(&retries),
+            Arc::clone(&reconnects),
+        ));
+        conn.ensure_connected()?;
+        barrier_conn.ensure_connected()?;
+        let hb_stop = Arc::new(AtomicBool::new(false));
+        let hb_thread = cfg.heartbeat.map(|interval| {
+            let stop = Arc::clone(&hb_stop);
+            std::thread::Builder::new()
+                .name("mixnet-kv-heartbeat".into())
+                .spawn(move || heartbeat_loop(addr, machine, interval, stop))
+                .ok()
+        });
         let conn_var = engine.new_var();
         Ok(DistKVStore {
             engine,
@@ -100,9 +421,15 @@ impl DistKVStore {
             grad_rescale: 1.0,
             consistency,
             keys: Mutex::new(HashMap::new()),
-            conn: Arc::new(Conn { stream: Mutex::new(stream) }),
-            barrier_conn: Arc::new(Conn { stream: Mutex::new(b) }),
+            conn,
+            barrier_conn,
             barrier_round: Mutex::new(0),
+            seq: AtomicU64::new(0),
+            async_err: Arc::new(Mutex::new(None)),
+            retries,
+            reconnects,
+            hb_stop,
+            hb_thread: hb_thread.flatten(),
             conn_var,
         })
     }
@@ -120,35 +447,106 @@ impl DistKVStore {
         self
     }
 
-    /// The server's `(messages, bytes)` received counters — harness
-    /// observability (uses the barrier connection: a plain synchronous
-    /// RPC that must not interleave with engine-scheduled push/pull
-    /// frames on the main connection).
-    pub fn server_stats(&self) -> Result<(u64, u64)> {
+    /// The server's receive/dedup/lease counters — harness observability
+    /// (uses the barrier connection: a plain synchronous RPC that must
+    /// not interleave with engine-scheduled push/pull frames on the main
+    /// connection).
+    pub fn server_stats(&self) -> Result<ServerStats> {
         match self.barrier_conn.rpc(&Msg::Stats)? {
-            Msg::StatsReply { msgs, bytes } => Ok((msgs, bytes)),
+            Msg::StatsReply { msgs, bytes, dedup_hits, lease_expiries, applies } => {
+                Ok(ServerStats { msgs, bytes, dedup_hits, lease_expiries, applies })
+            }
             other => Err(Error::kv(format!("stats: unexpected reply {other:?}"))),
         }
     }
 
-    /// Epoch barrier across machines (round-robin id).
+    /// Client-side retry/reconnect counters.
+    pub fn client_stats(&self) -> ClientStats {
+        ClientStats {
+            retries: self.retries.load(Ordering::Relaxed),
+            reconnects: self.reconnects.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Surface (and clear) the first error captured inside an
+    /// engine-scheduled push/pull op.
+    fn take_async_err(&self) -> Result<()> {
+        match lock(&self.async_err).take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Epoch barrier across machines (round-robin id; retransmissions
+    /// after a lost ack are idempotent server-side).
     pub fn barrier(&self) -> Result<()> {
+        self.take_async_err()?;
         let id = {
-            let mut r = self.barrier_round.lock().unwrap();
+            let mut r = lock(&self.barrier_round);
             *r += 1;
             *r
         };
-        match self.barrier_conn.rpc(&Msg::Barrier { id, machine: self.machine })? {
+        match self.barrier_conn.rpc_park(&Msg::Barrier { id, machine: self.machine })? {
             Msg::Ack => Ok(()),
             other => Err(Error::kv(format!("barrier: unexpected reply {other:?}"))),
         }
     }
 }
 
+impl Drop for DistKVStore {
+    fn drop(&mut self) {
+        self.hb_stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.hb_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Lease keep-alive loop: its own connection (never fault-injected, so
+/// injected chaos on the data path cannot spuriously expire a live
+/// machine), reconnecting on failure at heartbeat cadence.
+fn heartbeat_loop(
+    addr: std::net::SocketAddr,
+    machine: u32,
+    interval: Duration,
+    stop: Arc<AtomicBool>,
+) {
+    let mut stream: Option<TcpStream> = None;
+    let mut elapsed = Duration::ZERO;
+    let tick = Duration::from_millis(10);
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(tick);
+        elapsed += tick;
+        if elapsed < interval {
+            continue;
+        }
+        elapsed = Duration::ZERO;
+        if stream.is_none() {
+            if let Ok(s) = TcpStream::connect_timeout(&addr, interval) {
+                s.set_nodelay(true).ok();
+                s.set_read_timeout(Some(interval)).ok();
+                s.set_write_timeout(Some(interval)).ok();
+                stream = Some(s);
+            } else {
+                continue;
+            }
+        }
+        if let Some(s) = stream.as_mut() {
+            let ok = write_msg(s, &Msg::Heartbeat { machine })
+                .and_then(|_| read_msg(s))
+                .is_ok();
+            if !ok {
+                stream = None;
+            }
+        }
+    }
+}
+
 impl KVStore for DistKVStore {
     fn init(&self, key: &str, value: &NDArray) -> Result<()> {
+        self.take_async_err()?;
         {
-            let mut keys = self.keys.lock().unwrap();
+            let mut keys = lock(&self.keys);
             if keys.contains_key(key) {
                 return Err(Error::kv(format!("key '{key}' already initialized")));
             }
@@ -175,7 +573,8 @@ impl KVStore for DistKVStore {
     }
 
     fn push(&self, key: &str, grad: &NDArray, _device: usize) -> Result<()> {
-        let mut keys = self.keys.lock().unwrap();
+        self.take_async_err()?;
+        let mut keys = lock(&self.keys);
         let st = keys.get_mut(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
         if st.stage.in_progress() {
             return Err(Error::kv(format!("key '{key}': round mixes push and push_part")));
@@ -191,8 +590,10 @@ impl KVStore for DistKVStore {
             // level-2: ship ONE aggregated message, inside an engine op
             // reading the accumulation buffer.
             let conn = Arc::clone(&self.conn);
+            let err_slot = Arc::clone(&self.async_err);
             let key = key.to_string();
             let machine = self.machine;
+            let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
             let rescale = self.grad_rescale;
             let accum = st.accum.clone();
             let storage = accum.storage();
@@ -207,7 +608,10 @@ impl KVStore for DistKVStore {
                             *v *= rescale;
                         }
                     }
-                    let _ = conn.rpc(&Msg::Push { key, value, machine });
+                    if let Err(e) = conn.rpc(&Msg::Push { key, value, machine, seq }) {
+                        let mut g = lock(&err_slot);
+                        g.get_or_insert(e);
+                    }
                 }),
             );
         }
@@ -215,7 +619,8 @@ impl KVStore for DistKVStore {
     }
 
     fn push_part(&self, key: &str, grad: &[f32], part: usize) -> Result<()> {
-        let mut keys = self.keys.lock().unwrap();
+        self.take_async_err()?;
+        let mut keys = lock(&self.keys);
         let st = keys.get_mut(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
         if st.pushed > 0 {
             return Err(Error::kv(format!("key '{key}': round mixes push and push_part")));
@@ -231,8 +636,10 @@ impl KVStore for DistKVStore {
         // the transfer overlaps whatever backward is still running —
         // there is no dependency on any gradient var).
         let conn = Arc::clone(&self.conn);
+        let err_slot = Arc::clone(&self.async_err);
         let key = key.to_string();
         let machine = self.machine;
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
         let rescale = self.grad_rescale;
         self.engine.push(
             "kv.dist_push_parts",
@@ -255,17 +662,20 @@ impl KVStore for DistKVStore {
                         *v *= rescale;
                     }
                 }
-                let _ = conn.rpc(&Msg::Push { key, value, machine });
+                if let Err(e) = conn.rpc(&Msg::Push { key, value, machine, seq }) {
+                    let mut g = lock(&err_slot);
+                    g.get_or_insert(e);
+                }
             }),
         );
         Ok(())
     }
 
     fn pull(&self, key: &str, out: &NDArray, _device: usize) -> Result<()> {
+        self.take_async_err()?;
         let (after_version, shape, cache) = {
-            let keys = self.keys.lock().unwrap();
-            let st =
-                keys.get(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
+            let keys = lock(&self.keys);
+            let st = keys.get(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
             let v = match self.consistency {
                 Consistency::Sequential => st.rounds,
                 // Staleness ceiling: the server parks the pull until its
@@ -291,6 +701,7 @@ impl KVStore for DistKVStore {
         // refetch — their whole point is best-effort freshness.
         let use_cache = self.consistency != Consistency::Eventual;
         let conn = Arc::clone(&self.conn);
+        let err_slot = Arc::clone(&self.async_err);
         let key = key.to_string();
         let storage = out.storage();
         self.engine.push(
@@ -299,7 +710,7 @@ impl KVStore for DistKVStore {
             vec![out.var(), self.conn_var],
             Box::new(move || {
                 if use_cache {
-                    let c = cache.lock().unwrap();
+                    let c = lock(&cache);
                     if c.version != u64::MAX
                         && c.version >= after_version
                         && c.data.len() == storage.len()
@@ -308,19 +719,37 @@ impl KVStore for DistKVStore {
                         return;
                     }
                 }
-                match conn.rpc(&Msg::Pull { key: key.clone(), after_version }) {
+                match conn.rpc_park(&Msg::Pull { key: key.clone(), after_version }) {
                     Ok(Msg::Value { value, version, .. }) => {
                         let dst = unsafe { storage.slice_mut() };
                         if dst.len() == value.len() {
                             dst.copy_from_slice(&value);
                             if use_cache {
-                                let mut c = cache.lock().unwrap();
+                                let mut c = lock(&cache);
                                 c.version = version;
                                 c.data = value;
                             }
+                        } else {
+                            let mut g = lock(&err_slot);
+                            g.get_or_insert(Error::kv(format!(
+                                "pull '{key}': got {} values, expected {}",
+                                value.len(),
+                                dst.len()
+                            )));
                         }
                     }
-                    _ => { /* connection failure: leave buffer untouched */ }
+                    Ok(other) => {
+                        let mut g = lock(&err_slot);
+                        g.get_or_insert(Error::kv(format!(
+                            "pull '{key}': unexpected reply {other:?}"
+                        )));
+                    }
+                    Err(e) => {
+                        // Connection failure after retries: leave the
+                        // buffer untouched and surface the error.
+                        let mut g = lock(&err_slot);
+                        g.get_or_insert(e);
+                    }
                 }
             }),
         );
@@ -484,8 +913,8 @@ mod tests {
         kv.pull("w", &out, 0).unwrap();
         kv.flush(); // must NOT deadlock despite the incomplete round
         assert_eq!(out.to_vec(), vec![6.0]);
-        let (msgs, _bytes) = kv.server_stats().unwrap();
-        assert!(msgs >= 3, "init + push + pull crossed the wire");
+        let stats = kv.server_stats().unwrap();
+        assert!(stats.msgs >= 3, "init + push + pull crossed the wire");
     }
 
     #[test]
@@ -541,5 +970,61 @@ mod tests {
         kv.init("w", &NDArray::zeros_on(&[4], engine.clone())).unwrap();
         let bad = NDArray::zeros_on(&[5], engine);
         assert!(kv.pull("w", &bad, 0).is_err());
+    }
+
+    /// With no server, connect must fail fast (bounded by the connect
+    /// timeout), not hang.
+    #[test]
+    fn connect_fails_fast_without_server() {
+        let engine = create(EngineKind::Threaded, 2);
+        let cfg = RetryCfg {
+            connect_timeout: Duration::from_millis(200),
+            ..RetryCfg::default()
+        };
+        let addr: std::net::SocketAddr = "127.0.0.1:9".parse().unwrap(); // discard port
+        let t0 = std::time::Instant::now();
+        let res = DistKVStore::connect_with(
+            addr,
+            0,
+            1,
+            Consistency::Sequential,
+            engine,
+            cfg,
+            None,
+        );
+        assert!(res.is_err());
+        assert!(t0.elapsed() < Duration::from_secs(5), "must not hang");
+    }
+
+    /// When the server dies mid-run, retries are exhausted and the error
+    /// surfaces from the store instead of hanging or panicking.
+    #[test]
+    fn retries_exhaust_and_surface_error() {
+        let mut srv = PsServer::start(0, 1, plain_updater()).unwrap();
+        let engine = create(EngineKind::Threaded, 2);
+        let cfg = RetryCfg {
+            connect_timeout: Duration::from_millis(200),
+            op_timeout: Duration::from_millis(200),
+            park_timeout: Duration::from_millis(200),
+            max_retries: 2,
+            backoff_base: Duration::from_millis(5),
+            ..RetryCfg::default()
+        };
+        let kv = DistKVStore::connect_with(
+            srv.addr(),
+            0,
+            1,
+            Consistency::Sequential,
+            engine.clone(),
+            cfg,
+            None,
+        )
+        .unwrap();
+        kv.init("w", &NDArray::zeros_on(&[1], engine.clone())).unwrap();
+        srv.shutdown();
+        drop(srv);
+        let err = kv.barrier();
+        assert!(err.is_err(), "barrier against a dead server must error");
+        assert!(kv.client_stats().retries > 0, "the client must have retried first");
     }
 }

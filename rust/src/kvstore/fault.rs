@@ -1,0 +1,308 @@
+//! Deterministic fault injection for the distributed transport.
+//!
+//! A [`FaultPlan`] sits between message encoding and the socket: for each
+//! outbound frame a seeded RNG decides whether to deliver it, drop it,
+//! delay it, duplicate it, or truncate it mid-frame, and an independent
+//! counter can kill the connection after every N frames.  The draw
+//! sequence depends only on the seed and the number of frames sent, so a
+//! failing chaos run replays exactly.
+//!
+//! Injection happens on the *send* side (client requests and, optionally,
+//! server replies).  Truncation and kills return an error so the caller
+//! tears the connection down — the same observable behavior as a peer
+//! crashing mid-write.
+//!
+//! Environment knobs (all optional; a plan is only built when at least
+//! one is set):
+//!
+//! | variable                | meaning                                   |
+//! |-------------------------|-------------------------------------------|
+//! | `PALLAS_FAULT_SEED`     | RNG seed (default `0xfa17`)               |
+//! | `PALLAS_FAULT_DROP`     | per-frame drop probability (0..1)         |
+//! | `PALLAS_FAULT_DUP`      | per-frame duplicate probability           |
+//! | `PALLAS_FAULT_TRUNC`    | per-frame truncate-and-kill probability   |
+//! | `PALLAS_FAULT_DELAY`    | per-frame delay probability               |
+//! | `PALLAS_FAULT_DELAY_MS` | delay duration in ms (default 20)         |
+//! | `PALLAS_FAULT_KILL_EVERY` | kill the connection after every N frames |
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+use super::wire::{encode, Msg};
+
+/// Snapshot of a plan's injection counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Frames silently discarded.
+    pub drops: u64,
+    /// Frames sent twice.
+    pub dups: u64,
+    /// Frames delayed before sending.
+    pub delays: u64,
+    /// Frames cut mid-write (connection then killed).
+    pub truncs: u64,
+    /// Connections killed by the every-N counter.
+    pub kills: u64,
+}
+
+impl FaultStats {
+    /// Total faults injected.
+    pub fn total(&self) -> u64 {
+        self.drops + self.dups + self.delays + self.truncs + self.kills
+    }
+}
+
+enum Decision {
+    Deliver,
+    Drop,
+    Dup,
+    Trunc,
+    Delay,
+}
+
+/// A seeded, shareable fault-injection plan (see module docs).
+pub struct FaultPlan {
+    drop_p: f32,
+    dup_p: f32,
+    trunc_p: f32,
+    delay_p: f32,
+    delay: Duration,
+    kill_every: u64,
+    rng: Mutex<Rng>,
+    sent: AtomicU64,
+    drops: AtomicU64,
+    dups: AtomicU64,
+    delays: AtomicU64,
+    truncs: AtomicU64,
+    kills: AtomicU64,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing until probabilities are configured.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            drop_p: 0.0,
+            dup_p: 0.0,
+            trunc_p: 0.0,
+            delay_p: 0.0,
+            delay: Duration::from_millis(20),
+            kill_every: 0,
+            rng: Mutex::new(Rng::seed_from_u64(seed)),
+            sent: AtomicU64::new(0),
+            drops: AtomicU64::new(0),
+            dups: AtomicU64::new(0),
+            delays: AtomicU64::new(0),
+            truncs: AtomicU64::new(0),
+            kills: AtomicU64::new(0),
+        }
+    }
+
+    /// Set the per-frame drop probability.
+    pub fn with_drop(mut self, p: f32) -> Self {
+        self.drop_p = p;
+        self
+    }
+
+    /// Set the per-frame duplicate probability.
+    pub fn with_dup(mut self, p: f32) -> Self {
+        self.dup_p = p;
+        self
+    }
+
+    /// Set the per-frame truncate-and-kill probability.
+    pub fn with_trunc(mut self, p: f32) -> Self {
+        self.trunc_p = p;
+        self
+    }
+
+    /// Set the per-frame delay probability and duration.
+    pub fn with_delay(mut self, p: f32, delay: Duration) -> Self {
+        self.delay_p = p;
+        self.delay = delay;
+        self
+    }
+
+    /// Kill the connection after every `n` frames (0 = never).
+    pub fn with_kill_every(mut self, n: u64) -> Self {
+        self.kill_every = n;
+        self
+    }
+
+    /// Build a plan from `PALLAS_FAULT_*` environment knobs; `None` when
+    /// no fault knob is set.
+    pub fn from_env() -> Option<Arc<FaultPlan>> {
+        fn envf(name: &str) -> Option<f32> {
+            std::env::var(name).ok()?.trim().parse().ok()
+        }
+        fn envu(name: &str) -> Option<u64> {
+            std::env::var(name).ok()?.trim().parse().ok()
+        }
+        let drop_p = envf("PALLAS_FAULT_DROP");
+        let dup_p = envf("PALLAS_FAULT_DUP");
+        let trunc_p = envf("PALLAS_FAULT_TRUNC");
+        let delay_p = envf("PALLAS_FAULT_DELAY");
+        let kill = envu("PALLAS_FAULT_KILL_EVERY");
+        if drop_p.is_none()
+            && dup_p.is_none()
+            && trunc_p.is_none()
+            && delay_p.is_none()
+            && kill.is_none()
+        {
+            return None;
+        }
+        let delay_ms = envu("PALLAS_FAULT_DELAY_MS").unwrap_or(20);
+        let seed = envu("PALLAS_FAULT_SEED").unwrap_or(0xfa17);
+        let plan = FaultPlan::new(seed)
+            .with_drop(drop_p.unwrap_or(0.0))
+            .with_dup(dup_p.unwrap_or(0.0))
+            .with_trunc(trunc_p.unwrap_or(0.0))
+            .with_delay(delay_p.unwrap_or(0.0), Duration::from_millis(delay_ms))
+            .with_kill_every(kill.unwrap_or(0));
+        Some(Arc::new(plan))
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            drops: self.drops.load(Ordering::Relaxed),
+            dups: self.dups.load(Ordering::Relaxed),
+            delays: self.delays.load(Ordering::Relaxed),
+            truncs: self.truncs.load(Ordering::Relaxed),
+            kills: self.kills.load(Ordering::Relaxed),
+        }
+    }
+
+    /// One seeded draw deciding this frame's fate.
+    fn decide(&self) -> Decision {
+        let x = self.rng.lock().unwrap_or_else(|p| p.into_inner()).next_f32();
+        let mut edge = self.drop_p;
+        if x < edge {
+            return Decision::Drop;
+        }
+        edge += self.dup_p;
+        if x < edge {
+            return Decision::Dup;
+        }
+        edge += self.trunc_p;
+        if x < edge {
+            return Decision::Trunc;
+        }
+        edge += self.delay_p;
+        if x < edge {
+            return Decision::Delay;
+        }
+        Decision::Deliver
+    }
+}
+
+/// Send one frame through the fault layer.  `allow_dup` guards duplicate
+/// injection: requests may be duplicated (the server deduplicates by
+/// sequence number), replies must not be (a doubled reply would desync
+/// the client's request/reply framing rather than model a network fault).
+///
+/// An `Err` return means the connection must be treated as dead.
+pub fn inject_send<W: Write>(
+    w: &mut W,
+    msg: &Msg,
+    plan: &FaultPlan,
+    allow_dup: bool,
+) -> Result<()> {
+    let frame = encode(msg);
+    let nth = plan.sent.fetch_add(1, Ordering::Relaxed) + 1;
+    let kill = plan.kill_every > 0 && nth % plan.kill_every == 0;
+    match plan.decide() {
+        Decision::Drop => {
+            plan.drops.fetch_add(1, Ordering::Relaxed);
+        }
+        Decision::Trunc => {
+            plan.truncs.fetch_add(1, Ordering::Relaxed);
+            let half = frame.len() / 2;
+            w.write_all(&frame[..half])?;
+            w.flush()?;
+            return Err(Error::kv("fault: frame truncated, connection killed"));
+        }
+        Decision::Dup if allow_dup => {
+            plan.dups.fetch_add(1, Ordering::Relaxed);
+            w.write_all(&frame)?;
+            w.write_all(&frame)?;
+            w.flush()?;
+        }
+        Decision::Delay => {
+            plan.delays.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(plan.delay);
+            w.write_all(&frame)?;
+            w.flush()?;
+        }
+        Decision::Deliver | Decision::Dup => {
+            w.write_all(&frame)?;
+            w.flush()?;
+        }
+    }
+    if kill {
+        plan.kills.fetch_add(1, Ordering::Relaxed);
+        return Err(Error::kv("fault: connection killed"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Same seed + same frame count = same injection sequence.
+    #[test]
+    fn plans_are_deterministic() {
+        let run = |seed: u64| {
+            let plan = FaultPlan::new(seed).with_drop(0.3).with_dup(0.2).with_kill_every(5);
+            let mut sink = Vec::new();
+            let mut outcomes = Vec::new();
+            for i in 0..50u64 {
+                let msg = Msg::Barrier { id: i, machine: 0 };
+                outcomes.push(inject_send(&mut sink, &msg, &plan, true).is_ok());
+            }
+            (outcomes, plan.stats())
+        };
+        let (o1, s1) = run(42);
+        let (o2, s2) = run(42);
+        assert_eq!(o1, o2);
+        assert_eq!(s1, s2);
+        let (o3, _) = run(43);
+        assert_ne!(o1, o3, "different seeds should diverge");
+    }
+
+    #[test]
+    fn kill_every_fires_on_schedule() {
+        let plan = FaultPlan::new(1).with_kill_every(3);
+        let mut sink = Vec::new();
+        let mut killed = 0;
+        for i in 0..9u64 {
+            let msg = Msg::Barrier { id: i, machine: 0 };
+            if inject_send(&mut sink, &msg, &plan, true).is_err() {
+                killed += 1;
+            }
+        }
+        assert_eq!(killed, 3);
+        assert_eq!(plan.stats().kills, 3);
+    }
+
+    #[test]
+    fn dup_suppressed_for_replies() {
+        let plan = FaultPlan::new(7).with_dup(1.0);
+        let mut sink = Vec::new();
+        inject_send(&mut sink, &Msg::Ack, &plan, false).unwrap();
+        assert_eq!(sink.len(), encode(&Msg::Ack).len(), "reply must be sent exactly once");
+        assert_eq!(plan.stats().dups, 0);
+    }
+
+    #[test]
+    fn env_plan_absent_without_knobs() {
+        // Never set in the test environment.
+        assert!(std::env::var("PALLAS_FAULT_DROP").is_err());
+        assert!(FaultPlan::from_env().is_none() || std::env::var("PALLAS_FAULT_SEED").is_ok());
+    }
+}

@@ -22,12 +22,25 @@
 //!   per-machine device count.
 
 pub mod dist;
+pub mod fault;
 pub mod server;
 pub mod wire;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Lock a mutex, recovering from poisoning: a panicking peer thread must
+/// not cascade into the server/client that shares its state (robustness
+/// over strictness — the guarded data is plain counters and buffers).
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Condvar wait with the same poison recovery as [`lock`].
+pub(crate) fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|p| p.into_inner())
+}
 
 use crate::engine::EngineRef;
 use crate::error::{Error, Result};
@@ -90,6 +103,26 @@ pub trait KVStore: Send + Sync {
 
     /// The consistency model in effect.
     fn consistency(&self) -> Consistency;
+
+    /// Export the store's recoverable state — master weights, per-key
+    /// round versions, updater state — into a
+    /// [`TrainState`](crate::io::checkpoint::TrainState) (trainer-level
+    /// fields are left default for the caller to fill).  Default: not
+    /// supported; [`LocalKVStore`] implements it.  [`DistKVStore`]
+    /// (dist) keeps the default — the level-2 server owns the master
+    /// weights there, and crash recovery runs through the lease
+    /// protocol instead.
+    fn export_train_state(&self) -> Result<crate::io::checkpoint::TrainState> {
+        Err(Error::kv("this store does not support train-state export"))
+    }
+
+    /// Restore weights, versions, and updater state previously produced
+    /// by [`export_train_state`](KVStore::export_train_state),
+    /// replacing any existing keys.  Default: not supported.
+    fn restore_train_state(&self, st: &crate::io::checkpoint::TrainState) -> Result<()> {
+        let _ = st;
+        Err(Error::kv("this store does not support train-state restore"))
+    }
 }
 
 /// Device-sliced round staging shared by [`LocalKVStore`] and
@@ -177,7 +210,7 @@ impl SnapCell {
     /// and they arrive in round order; the monotonic guard is belt and
     /// braces.
     fn commit(&self, w: &[f32], round: u64) {
-        let mut d = self.data.lock().unwrap();
+        let mut d = lock(&self.data);
         if round <= self.round.load(Ordering::Relaxed) && round != 0 {
             return;
         }
@@ -194,9 +227,9 @@ impl SnapCell {
     /// Block the calling thread until the committed snapshot is at least
     /// `target` rounds new — the bounded-delay backpressure point.
     fn wait_round(&self, target: u64) {
-        let mut d = self.data.lock().unwrap();
+        let mut d = lock(&self.data);
         while self.round.load(Ordering::Acquire) < target {
-            d = self.cv.wait(d).unwrap();
+            d = wait(&self.cv, d);
         }
     }
 
@@ -206,7 +239,7 @@ impl SnapCell {
     /// it — so steady-state bounded-delay pulls and live refreshes
     /// allocate nothing after warmup (the PR 3 hot-loop contract).
     fn take_committed(&self) -> (Box<[f32]>, u64) {
-        let d = self.data.lock().unwrap();
+        let d = lock(&self.data);
         let mut buf = pool::global().acquire_uninit(d.len());
         buf.copy_from_slice(&d);
         (buf, self.round.load(Ordering::Relaxed))
@@ -214,7 +247,7 @@ impl SnapCell {
 
     /// Lock the committed bytes for in-place reading (engine-op side).
     fn read(&self) -> std::sync::MutexGuard<'_, Vec<f32>> {
-        self.data.lock().unwrap()
+        lock(&self.data)
     }
 }
 
@@ -316,14 +349,14 @@ impl LocalKVStore {
 
     /// The round (version) of the currently committed snapshot for `key`.
     pub fn snapshot_round(&self, key: &str) -> Result<u64> {
-        let keys = self.keys.lock().unwrap();
+        let keys = lock(&self.keys);
         let st = keys.get(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
         Ok(st.snap.round())
     }
 
     /// Element count of `key`'s weight (live-serving attach validation).
     pub fn value_len(&self, key: &str) -> Result<usize> {
-        let keys = self.keys.lock().unwrap();
+        let keys = lock(&self.keys);
         let st = keys.get(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
         Ok(st.weight.size())
     }
@@ -337,7 +370,7 @@ impl LocalKVStore {
     /// Returns the round captured.
     pub fn pull_committed(&self, key: &str, out: &NDArray) -> Result<u64> {
         let snap = {
-            let keys = self.keys.lock().unwrap();
+            let keys = lock(&self.keys);
             let st =
                 keys.get(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
             Arc::clone(&st.snap)
@@ -389,6 +422,65 @@ impl LocalKVStore {
         );
     }
 
+    /// Export master weights, versions, and updater state for
+    /// checkpointing (see [`KVStore::export_train_state`]).  Waits for
+    /// in-flight engine ops first so the exported bytes are exactly the
+    /// state of the last completed round.
+    fn export_state_inner(&self) -> Result<crate::io::checkpoint::TrainState> {
+        self.engine.wait_all();
+        let keys = lock(&self.keys);
+        let mut names: Vec<&String> = keys.keys().collect();
+        names.sort();
+        let mut ts = crate::io::checkpoint::TrainState::default();
+        for name in names {
+            let ks = &keys[name.as_str()];
+            ts.params.push((name.clone(), ks.weight.shape().to_vec(), ks.weight.to_vec()));
+            ts.versions.push((name.clone(), ks.version));
+        }
+        ts.updater = self.updater.export_state();
+        Ok(ts)
+    }
+
+    /// Rebuild key state from a checkpoint (see
+    /// [`KVStore::restore_train_state`]).
+    fn restore_state_inner(&self, ts: &crate::io::checkpoint::TrainState) -> Result<()> {
+        let versions: HashMap<&str, u64> =
+            ts.versions.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+        {
+            let mut keys = lock(&self.keys);
+            for (name, shape, data) in &ts.params {
+                let n: usize = shape.iter().product();
+                if n != data.len() {
+                    return Err(Error::kv(format!(
+                        "restore '{name}': shape {shape:?} holds {n} values, data has {}",
+                        data.len()
+                    )));
+                }
+                let version = *versions.get(name.as_str()).unwrap_or(&0);
+                let weight = NDArray::from_vec_on(shape, data.clone(), self.engine.clone());
+                let accum = NDArray::zeros_on(shape, self.engine.clone());
+                let snap = Arc::new(SnapCell::new(data.clone()));
+                snap.commit(data, version);
+                keys.insert(
+                    name.clone(),
+                    KeyState {
+                        weight,
+                        accum,
+                        pushed: 0,
+                        stage: PartStage::new(self.num_devices),
+                        version,
+                        pulled: HashMap::new(),
+                        pulled_snap: HashMap::new(),
+                        snap,
+                        snap_sched: version,
+                    },
+                );
+            }
+        }
+        self.updater.import_state(&ts.updater, &self.engine);
+        Ok(())
+    }
+
     /// Round complete: bump the version, run the user updater on the
     /// merged gradient, refresh the committed snapshot on cadence.
     /// Caller holds the keys lock, so the updater and snapshot ops are
@@ -405,7 +497,7 @@ impl LocalKVStore {
 
 impl KVStore for LocalKVStore {
     fn init(&self, key: &str, value: &NDArray) -> Result<()> {
-        let mut keys = self.keys.lock().unwrap();
+        let mut keys = lock(&self.keys);
         if keys.contains_key(key) {
             return Err(Error::kv(format!("key '{key}' already initialized")));
         }
@@ -431,7 +523,7 @@ impl KVStore for LocalKVStore {
     }
 
     fn push(&self, key: &str, grad: &NDArray, _device: usize) -> Result<()> {
-        let mut keys = self.keys.lock().unwrap();
+        let mut keys = lock(&self.keys);
         let st = keys.get_mut(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
         if st.stage.in_progress() {
             return Err(Error::kv(format!(
@@ -451,7 +543,7 @@ impl KVStore for LocalKVStore {
     }
 
     fn push_part(&self, key: &str, grad: &[f32], part: usize) -> Result<()> {
-        let mut keys = self.keys.lock().unwrap();
+        let mut keys = lock(&self.keys);
         let st = keys.get_mut(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
         if st.pushed > 0 {
             return Err(Error::kv(format!(
@@ -490,7 +582,7 @@ impl KVStore for LocalKVStore {
     }
 
     fn pull(&self, key: &str, out: &NDArray, device: usize) -> Result<()> {
-        let mut keys = self.keys.lock().unwrap();
+        let mut keys = lock(&self.keys);
         let st = keys.get_mut(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
         match self.consistency {
             Consistency::Sequential => {
@@ -586,7 +678,7 @@ impl KVStore for LocalKVStore {
                         pool::global().release(data);
                     }),
                 );
-                let mut keys = self.keys.lock().unwrap();
+                let mut keys = lock(&self.keys);
                 if let Some(st) = keys.get_mut(key) {
                     st.pulled_snap.insert(device, (observed, out.var().id()));
                 }
@@ -606,6 +698,14 @@ impl KVStore for LocalKVStore {
 
     fn consistency(&self) -> Consistency {
         self.consistency
+    }
+
+    fn export_train_state(&self) -> Result<crate::io::checkpoint::TrainState> {
+        self.export_state_inner()
+    }
+
+    fn restore_train_state(&self, st: &crate::io::checkpoint::TrainState) -> Result<()> {
+        self.restore_state_inner(st)
     }
 }
 

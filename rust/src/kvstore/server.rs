@@ -1,24 +1,41 @@
 //! The level-2 (inter-machine) parameter server (paper §3.3, Figure 5).
 //!
 //! One thread per connection; shared state guarded by a mutex + condvar.
-//! Pushes from the `num_machines` level-1 aggregators are summed per
-//! round, the server-side SGD updater is applied, and the key's version
-//! advances.  Pulls carry an `after_version` watermark: sequential
-//! consistency waits for the full watermark (`rounds`), **bounded-delay**
-//! consistency waits for `rounds - k` (the client computes the relaxed
-//! watermark, so one wire primitive serves the whole §2.3 consistency
-//! spectrum), and eventual consistency passes 0 and is served
-//! immediately.
+//! Pushes from the `num_machines` level-1 aggregators are queued per
+//! machine and per round: a round applies once every *active* machine has
+//! a pending push, the contributions are reduced in machine-index order
+//! (bitwise-deterministic regardless of arrival order), the server-side
+//! SGD updater runs, and the key's version advances.  Pulls carry an
+//! `after_version` watermark: sequential consistency waits for the full
+//! watermark (`rounds`), **bounded-delay** consistency waits for
+//! `rounds - k` (the client computes the relaxed watermark, so one wire
+//! primitive serves the whole §2.3 consistency spectrum), and eventual
+//! consistency passes 0 and is served immediately.
+//!
+//! Fault tolerance: pushes carry per-machine monotonic sequence numbers,
+//! so a retransmitted push (client retry after a lost ack) is recognized
+//! and dropped — retries are idempotent and gradients are never applied
+//! twice.  Barriers are idempotent by (id, machine).  When configured
+//! with a lease ([`ServerConfig`]), a machine that stops heartbeating is
+//! expired: under [`ExpiryPolicy::FailRound`] the server poisons itself
+//! and every parked or future request errors (BSP semantics — fail fast);
+//! under [`ExpiryPolicy::Degrade`] the machine is removed from the active
+//! set, in-flight rounds and barriers are re-evaluated against the
+//! survivors, and training continues (elastic semantics).  A rejoining
+//! machine announces itself with `Hello` and is folded back in.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::ErrorKind;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
+use super::fault::{inject_send, FaultPlan};
 use super::wire::{read_msg, write_msg, Msg};
-use crate::error::Result;
+use super::{lock, wait};
+use crate::error::{Error, Result};
 
 /// Server-side updater configuration (plain-SGD on raw f32 buffers; the
 /// server has no engine — it is the paper's dedicated server process).
@@ -40,20 +57,94 @@ impl Default for ServerUpdater {
     }
 }
 
+/// What to do when a machine's lease expires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExpiryPolicy {
+    /// Poison the server: parked and future requests error out.  The
+    /// right semantics for BSP runs, where a lost machine means the
+    /// round can never complete correctly.
+    FailRound,
+    /// Drop the machine from the active set and keep going with the
+    /// survivors (elastic graceful degradation).
+    Degrade,
+}
+
+/// Lease / fault-injection configuration for [`PsServer::start_with`].
+#[derive(Clone)]
+pub struct ServerConfig {
+    /// Heartbeat lease; `None` disables expiry entirely.
+    pub lease: Option<Duration>,
+    /// Grace period after server start for a machine that has never
+    /// connected (it cannot heartbeat before it exists).
+    pub join_grace: Duration,
+    /// Policy applied when a lease expires.
+    pub expiry: ExpiryPolicy,
+    /// Optional fault plan injected into server replies (drops, delays,
+    /// truncations; duplicates are suppressed on replies).
+    pub fault: Option<Arc<FaultPlan>>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            lease: None,
+            join_grace: Duration::from_secs(10),
+            expiry: ExpiryPolicy::FailRound,
+            fault: None,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Build from environment knobs: `PALLAS_KV_LEASE_MS`,
+    /// `PALLAS_KV_LEASE_POLICY` (`fail` | `degrade`),
+    /// `PALLAS_KV_JOIN_GRACE_MS`, and the `PALLAS_FAULT_*` family.
+    pub fn from_env() -> ServerConfig {
+        fn envu(name: &str) -> Option<u64> {
+            std::env::var(name).ok()?.trim().parse().ok()
+        }
+        let lease = envu("PALLAS_KV_LEASE_MS").map(Duration::from_millis);
+        let join_grace = envu("PALLAS_KV_JOIN_GRACE_MS")
+            .map(Duration::from_millis)
+            .or(lease.map(|l| l * 5))
+            .unwrap_or(Duration::from_secs(10));
+        let expiry = match std::env::var("PALLAS_KV_LEASE_POLICY").as_deref() {
+            Ok("degrade") => ExpiryPolicy::Degrade,
+            _ => ExpiryPolicy::FailRound,
+        };
+        ServerConfig { lease, join_grace, expiry, fault: FaultPlan::from_env() }
+    }
+}
+
 struct KeyState {
     weight: Vec<f32>,
     velocity: Vec<f32>,
-    accum: Vec<f32>,
-    pushed_by: Vec<bool>,
-    pushed: usize,
+    /// Per-machine FIFO of (seq, gradient) awaiting their round.
+    pending: Vec<VecDeque<(u64, Vec<f32>)>>,
+    /// Highest sequence number applied per machine (dedup floor).
+    applied_seq: Vec<u64>,
     version: u64,
 }
 
-#[derive(Default)]
+struct MachineState {
+    last_seen: Instant,
+    /// Has this machine ever contacted the server?
+    joined: bool,
+    /// Is it part of the active set (rounds + barriers wait on it)?
+    active: bool,
+}
+
 struct ServerState {
     keys: HashMap<String, KeyState>,
-    barriers: HashMap<u64, usize>,
+    /// Arrived machines per barrier id (idempotent by machine).
+    barriers: HashMap<u64, HashSet<u32>>,
     barrier_gen: HashMap<u64, u64>,
+    machines: Vec<MachineState>,
+    /// Set once a lease expiry fails the run (FailRound policy); every
+    /// request afterwards errors with this message.
+    fault: Option<String>,
+    /// Join/leave log, in the order the server observed them.
+    membership: Vec<(u32, bool)>,
 }
 
 struct Shared {
@@ -61,9 +152,14 @@ struct Shared {
     cv: Condvar,
     updater: ServerUpdater,
     num_machines: usize,
+    cfg: ServerConfig,
+    started: Instant,
     stop: AtomicBool,
     msgs_in: AtomicU64,
     bytes_in: AtomicU64,
+    dedup_hits: AtomicU64,
+    lease_expiries: AtomicU64,
+    applies: AtomicU64,
 }
 
 /// A running parameter server.
@@ -75,19 +171,48 @@ pub struct PsServer {
 
 impl PsServer {
     /// Bind on `127.0.0.1:port` (0 = ephemeral) and start serving
-    /// `num_machines` level-1 clients.
+    /// `num_machines` level-1 clients, with lease/fault behavior taken
+    /// from the environment (see [`ServerConfig::from_env`]; leases stay
+    /// off unless `PALLAS_KV_LEASE_MS` is set).
     pub fn start(port: u16, num_machines: usize, updater: ServerUpdater) -> Result<PsServer> {
+        PsServer::start_with(port, num_machines, updater, ServerConfig::from_env())
+    }
+
+    /// [`PsServer::start`] with an explicit [`ServerConfig`].
+    pub fn start_with(
+        port: u16,
+        num_machines: usize,
+        updater: ServerUpdater,
+        cfg: ServerConfig,
+    ) -> Result<PsServer> {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+        let num_machines = num_machines.max(1);
+        let now = Instant::now();
+        let machines = (0..num_machines)
+            .map(|_| MachineState { last_seen: now, joined: false, active: true })
+            .collect();
         let shared = Arc::new(Shared {
-            state: Mutex::new(ServerState::default()),
+            state: Mutex::new(ServerState {
+                keys: HashMap::new(),
+                barriers: HashMap::new(),
+                barrier_gen: HashMap::new(),
+                machines,
+                fault: None,
+                membership: Vec::new(),
+            }),
             cv: Condvar::new(),
             updater,
-            num_machines: num_machines.max(1),
+            num_machines,
+            cfg,
+            started: now,
             stop: AtomicBool::new(false),
             msgs_in: AtomicU64::new(0),
             bytes_in: AtomicU64::new(0),
+            dedup_hits: AtomicU64::new(0),
+            lease_expiries: AtomicU64::new(0),
+            applies: AtomicU64::new(0),
         });
         let accept_shared = Arc::clone(&shared);
         let accept_thread = std::thread::Builder::new()
@@ -98,18 +223,22 @@ impl PsServer {
                     if accept_shared.stop.load(Ordering::SeqCst) {
                         break;
                     }
+                    check_leases(&accept_shared);
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let s = Arc::clone(&accept_shared);
-                            conns.push(
-                                std::thread::Builder::new()
-                                    .name("mixnet-ps-conn".into())
-                                    .spawn(move || serve_conn(stream, s))
-                                    .expect("spawn conn"),
-                            );
+                            let spawned = std::thread::Builder::new()
+                                .name("mixnet-ps-conn".into())
+                                .spawn(move || serve_conn(stream, s));
+                            match spawned {
+                                Ok(h) => conns.push(h),
+                                // Out of threads: drop the connection;
+                                // the client will retry.
+                                Err(e) => eprintln!("[mixnet-ps] spawn conn failed: {e}"),
+                            }
                         }
                         Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(2));
+                            std::thread::sleep(Duration::from_millis(2));
                         }
                         Err(_) => break,
                     }
@@ -118,7 +247,7 @@ impl PsServer {
                     let _ = c.join();
                 }
             })
-            .expect("spawn accept");
+            .map_err(|e| Error::kv(format!("spawn accept thread: {e}")))?;
         Ok(PsServer { addr, shared, accept_thread: Some(accept_thread) })
     }
 
@@ -127,7 +256,8 @@ impl PsServer {
         self.addr
     }
 
-    /// Total messages received (bandwidth accounting for E3/E5).
+    /// Total data-plane messages received (bandwidth accounting for
+    /// E3/E5; Hello/Heartbeat control frames are not counted).
     pub fn messages_received(&self) -> u64 {
         self.shared.msgs_in.load(Ordering::Relaxed)
     }
@@ -135,6 +265,26 @@ impl PsServer {
     /// Total payload bytes received.
     pub fn bytes_received(&self) -> u64 {
         self.shared.bytes_in.load(Ordering::Relaxed)
+    }
+
+    /// Retransmissions recognized and dropped (pushes + barriers).
+    pub fn dedup_hits(&self) -> u64 {
+        self.shared.dedup_hits.load(Ordering::Relaxed)
+    }
+
+    /// Number of machine leases that expired.
+    pub fn lease_expiries(&self) -> u64 {
+        self.shared.lease_expiries.load(Ordering::Relaxed)
+    }
+
+    /// Optimizer rounds applied across all keys.
+    pub fn rounds_applied(&self) -> u64 {
+        self.shared.applies.load(Ordering::Relaxed)
+    }
+
+    /// Join/leave events observed so far, in order.
+    pub fn membership_events(&self) -> Vec<(u32, bool)> {
+        lock(&self.shared.state).membership.clone()
     }
 
     /// Stop accepting and shut down (open connections end on their next
@@ -154,38 +304,166 @@ impl Drop for PsServer {
     }
 }
 
-fn apply_update(upd: &ServerUpdater, st: &mut KeyState) {
-    let n = st.weight.len();
-    for i in 0..n {
-        let g = upd.rescale * st.accum[i] + upd.weight_decay * st.weight[i];
-        if upd.momentum != 0.0 {
-            st.velocity[i] = upd.momentum * st.velocity[i] - upd.lr * g;
-            st.weight[i] += st.velocity[i];
-        } else {
-            st.weight[i] -= upd.lr * g;
+/// Can a round apply for this key?  Every active machine must have a
+/// pending push (inactive backlogs ride along but never gate progress).
+fn round_ready(ks: &KeyState, active: &[bool]) -> bool {
+    let mut any_active = false;
+    for (m, &a) in active.iter().enumerate() {
+        if a {
+            any_active = true;
+            if ks.pending[m].is_empty() {
+                return false;
+            }
         }
     }
-    st.accum.iter_mut().for_each(|v| *v = 0.0);
-    st.pushed = 0;
-    st.pushed_by.iter_mut().for_each(|b| *b = false);
-    st.version += 1;
+    any_active
+}
+
+/// Pop one pending push per machine (machine-index order — the reduction
+/// order is deterministic no matter how pushes arrived), apply the
+/// server-side SGD update, and advance the version.
+fn apply_round(upd: &ServerUpdater, ks: &mut KeyState) {
+    let n = ks.weight.len();
+    let mut accum = vec![0.0f32; n];
+    for m in 0..ks.pending.len() {
+        if let Some((seq, v)) = ks.pending[m].pop_front() {
+            for (a, x) in accum.iter_mut().zip(&v) {
+                *a += *x;
+            }
+            if seq > ks.applied_seq[m] {
+                ks.applied_seq[m] = seq;
+            }
+        }
+    }
+    for i in 0..n {
+        let g = upd.rescale * accum[i] + upd.weight_decay * ks.weight[i];
+        if upd.momentum != 0.0 {
+            ks.velocity[i] = upd.momentum * ks.velocity[i] - upd.lr * g;
+            ks.weight[i] += ks.velocity[i];
+        } else {
+            ks.weight[i] -= upd.lr * g;
+        }
+    }
+    ks.version += 1;
+}
+
+/// Apply every key round that is ready (cascading: one apply can unblock
+/// the next queued round).  Returns true if anything applied.
+fn try_apply(shared: &Shared, st: &mut ServerState) -> bool {
+    let active: Vec<bool> = st.machines.iter().map(|m| m.active).collect();
+    let mut any = false;
+    for ks in st.keys.values_mut() {
+        while round_ready(ks, &active) {
+            apply_round(&shared.updater, ks);
+            shared.applies.fetch_add(1, Ordering::Relaxed);
+            any = true;
+        }
+    }
+    any
+}
+
+/// Release every barrier whose arrival set covers the active machines.
+fn release_ready_barriers(st: &mut ServerState) -> bool {
+    let active: Vec<u32> = st
+        .machines
+        .iter()
+        .enumerate()
+        .filter_map(|(i, m)| m.active.then_some(i as u32))
+        .collect();
+    let ids: Vec<u64> = st.barriers.keys().copied().collect();
+    let mut released = false;
+    for id in ids {
+        let ready = {
+            let arrived = &st.barriers[&id];
+            !arrived.is_empty() && active.iter().all(|m| arrived.contains(m))
+        };
+        if ready {
+            st.barriers.remove(&id);
+            *st.barrier_gen.entry(id).or_insert(0) += 1;
+            released = true;
+        }
+    }
+    released
+}
+
+/// Refresh a machine's lease on any inbound traffic from it.
+fn touch(st: &mut ServerState, machine: u32, num_machines: usize) {
+    let m = machine as usize % num_machines;
+    st.machines[m].last_seen = Instant::now();
+    st.machines[m].joined = true;
+}
+
+/// Expire machines whose lease lapsed (runs on the accept thread).
+fn check_leases(shared: &Shared) {
+    let Some(lease) = shared.cfg.lease else { return };
+    let now = Instant::now();
+    let mut st = lock(&shared.state);
+    let mut changed = false;
+    for m in 0..st.machines.len() {
+        let (joined, active, last_seen) = {
+            let ms = &st.machines[m];
+            (ms.joined, ms.active, ms.last_seen)
+        };
+        if !active {
+            continue;
+        }
+        let deadline =
+            if joined { last_seen + lease } else { shared.started + shared.cfg.join_grace };
+        if now < deadline {
+            continue;
+        }
+        shared.lease_expiries.fetch_add(1, Ordering::Relaxed);
+        st.machines[m].active = false;
+        changed = true;
+        match shared.cfg.expiry {
+            ExpiryPolicy::FailRound => {
+                eprintln!("[mixnet-ps] lease expired: machine {m}; failing round (bsp)");
+                st.fault = Some(format!("machine {m} lease expired; round failed"));
+            }
+            ExpiryPolicy::Degrade => {
+                st.membership.push((m as u32, false));
+                let left = st.machines.iter().filter(|x| x.active).count();
+                eprintln!(
+                    "[mixnet-ps] lease expired: machine {m} leaves; {left} machine(s) remain"
+                );
+                if left == 0 {
+                    st.fault = Some("all machines lost their lease".into());
+                } else {
+                    try_apply(shared, &mut st);
+                    release_ready_barriers(&mut st);
+                }
+            }
+        }
+    }
+    if changed {
+        shared.cv.notify_all();
+    }
+}
+
+/// Write one reply through the (optional) fault layer.  Returns false
+/// when the connection must be torn down.
+fn send_reply(w: &mut TcpStream, msg: &Msg, plan: &Option<Arc<FaultPlan>>) -> bool {
+    let res = match plan {
+        Some(p) => inject_send(w, msg, p, false),
+        None => write_msg(w, msg),
+    };
+    res.is_ok()
 }
 
 fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
-    let mut reader = stream.try_clone().expect("clone stream");
+    let Ok(mut reader) = stream.try_clone() else { return };
     let mut writer = stream;
+    let plan = shared.cfg.fault.clone();
     loop {
         // Poll for the next frame with a short timeout so shutdown() can
         // reap connections that are idle (blocked with no inbound data);
         // once a frame starts arriving, read it without a deadline.
-        reader.set_read_timeout(Some(std::time::Duration::from_millis(50))).ok();
+        reader.set_read_timeout(Some(Duration::from_millis(50))).ok();
         let mut first = [0u8; 1];
         match reader.peek(&mut first) {
             Ok(0) => return, // EOF
             Ok(_) => {}
-            Err(e)
-                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
-            {
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
                 if shared.stop.load(Ordering::SeqCst) {
                     return;
                 }
@@ -196,58 +474,94 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
         reader.set_read_timeout(None).ok();
         let msg = match read_msg(&mut reader) {
             Ok(m) => m,
-            Err(_) => return, // disconnect
+            Err(_) => return, // disconnect or malformed frame
         };
-        shared.msgs_in.fetch_add(1, Ordering::Relaxed);
+        match &msg {
+            // Control-plane frames are free: they must not skew the
+            // bandwidth accounting the scaling benches assert on.
+            Msg::Hello { .. } | Msg::Heartbeat { .. } => {}
+            _ => {
+                shared.msgs_in.fetch_add(1, Ordering::Relaxed);
+            }
+        }
         match msg {
             Msg::Init { key, value } => {
                 shared.bytes_in.fetch_add(4 * value.len() as u64, Ordering::Relaxed);
-                let mut st = shared.state.lock().unwrap();
+                let mut st = lock(&shared.state);
+                let n = shared.num_machines;
                 st.keys.entry(key).or_insert_with(|| KeyState {
                     velocity: vec![0.0; value.len()],
-                    accum: vec![0.0; value.len()],
-                    pushed_by: vec![false; shared.num_machines],
-                    pushed: 0,
+                    pending: (0..n).map(|_| VecDeque::new()).collect(),
+                    applied_seq: vec![0; n],
                     version: 0,
                     weight: value,
                 });
                 drop(st);
-                let _ = write_msg(&mut writer, &Msg::Ack);
+                if !send_reply(&mut writer, &Msg::Ack, &plan) {
+                    return;
+                }
             }
-            Msg::Push { key, value, machine } => {
+            Msg::Push { key, value, machine, seq } => {
                 shared.bytes_in.fetch_add(4 * value.len() as u64, Ordering::Relaxed);
-                let mut st = shared.state.lock().unwrap();
-                let reply = match st.keys.get_mut(&key) {
-                    None => Msg::Err { msg: format!("unknown key '{key}'") },
-                    Some(ks) => {
-                        let m = machine as usize % shared.num_machines;
-                        if !ks.pushed_by[m] {
-                            ks.pushed_by[m] = true;
-                            ks.pushed += 1;
+                let mut st = lock(&shared.state);
+                touch(&mut st, machine, shared.num_machines);
+                let reply = if let Some(f) = st.fault.clone() {
+                    Msg::Err { msg: f }
+                } else {
+                    let m = machine as usize % shared.num_machines;
+                    match st.keys.get_mut(&key) {
+                        None => Msg::Err { msg: format!("unknown key '{key}'") },
+                        Some(ks) => {
+                            let floor = ks
+                                .pending[m]
+                                .back()
+                                .map(|&(s, _)| s)
+                                .unwrap_or(ks.applied_seq[m]);
+                            if seq != 0 && seq <= floor {
+                                // Retransmission of a push we already
+                                // queued or applied: idempotent.
+                                shared.dedup_hits.fetch_add(1, Ordering::Relaxed);
+                                Msg::Ack
+                            } else if value.len() != ks.weight.len() {
+                                Msg::Err {
+                                    msg: format!(
+                                        "push size {} != {}",
+                                        value.len(),
+                                        ks.weight.len()
+                                    ),
+                                }
+                            } else {
+                                ks.pending[m].push_back((seq, value));
+                                if try_apply(&shared, &mut st) {
+                                    shared.cv.notify_all();
+                                }
+                                Msg::Ack
+                            }
                         }
-                        for (a, v) in ks.accum.iter_mut().zip(&value) {
-                            *a += v;
-                        }
-                        if ks.pushed == shared.num_machines {
-                            apply_update(&shared.updater, ks);
-                            shared.cv.notify_all();
-                        }
-                        Msg::Ack
                     }
                 };
                 drop(st);
-                let _ = write_msg(&mut writer, &reply);
+                if !send_reply(&mut writer, &reply, &plan) {
+                    return;
+                }
             }
             Msg::Pull { key, after_version } => {
-                let mut st = shared.state.lock().unwrap();
+                let mut st = lock(&shared.state);
                 loop {
+                    if let Some(f) = st.fault.clone() {
+                        drop(st);
+                        if !send_reply(&mut writer, &Msg::Err { msg: f }, &plan) {
+                            return;
+                        }
+                        break;
+                    }
                     match st.keys.get(&key) {
                         None => {
                             drop(st);
-                            let _ = write_msg(
-                                &mut writer,
-                                &Msg::Err { msg: format!("unknown key '{key}'") },
-                            );
+                            let reply = Msg::Err { msg: format!("unknown key '{key}'") };
+                            if !send_reply(&mut writer, &reply, &plan) {
+                                return;
+                            }
                             break;
                         }
                         Some(ks) if ks.version >= after_version => {
@@ -257,55 +571,112 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
                                 version: ks.version,
                             };
                             drop(st);
-                            let _ = write_msg(&mut writer, &reply);
+                            if !send_reply(&mut writer, &reply, &plan) {
+                                return;
+                            }
                             break;
                         }
                         Some(_) => {
                             if shared.stop.load(Ordering::SeqCst) {
                                 return;
                             }
-                            st = shared.cv.wait(st).unwrap();
+                            st = wait(&shared.cv, st);
                         }
                     }
                 }
             }
-            Msg::Barrier { id, machine: _ } => {
-                let mut st = shared.state.lock().unwrap();
-                let gen = *st.barrier_gen.entry(id).or_insert(0);
-                *st.barriers.entry(id).or_insert(0) += 1;
-                if *st.barriers.get(&id).unwrap() >= shared.num_machines {
-                    st.barriers.insert(id, 0);
-                    *st.barrier_gen.entry(id).or_insert(0) += 1;
-                    shared.cv.notify_all();
-                } else {
-                    while *st.barrier_gen.get(&id).unwrap_or(&0) == gen {
-                        if shared.stop.load(Ordering::SeqCst) {
-                            return;
-                        }
-                        st = shared.cv.wait(st).unwrap();
+            Msg::Barrier { id, machine } => {
+                let mut st = lock(&shared.state);
+                touch(&mut st, machine, shared.num_machines);
+                if let Some(f) = st.fault.clone() {
+                    drop(st);
+                    if !send_reply(&mut writer, &Msg::Err { msg: f }, &plan) {
+                        return;
                     }
+                    continue;
+                }
+                if *st.barrier_gen.get(&id).unwrap_or(&0) >= 1 {
+                    // Retransmission after the barrier already released
+                    // (the ack was lost): idempotent.
+                    shared.dedup_hits.fetch_add(1, Ordering::Relaxed);
+                    drop(st);
+                    if !send_reply(&mut writer, &Msg::Ack, &plan) {
+                        return;
+                    }
+                    continue;
+                }
+                if !st.barriers.entry(id).or_default().insert(machine) {
+                    shared.dedup_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                if release_ready_barriers(&mut st) {
+                    shared.cv.notify_all();
+                }
+                let mut failed = None;
+                while *st.barrier_gen.get(&id).unwrap_or(&0) == 0 {
+                    if shared.stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    if let Some(f) = st.fault.clone() {
+                        failed = Some(f);
+                        break;
+                    }
+                    st = wait(&shared.cv, st);
                 }
                 drop(st);
-                let _ = write_msg(&mut writer, &Msg::Ack);
+                let reply = match failed {
+                    Some(f) => Msg::Err { msg: f },
+                    None => Msg::Ack,
+                };
+                if !send_reply(&mut writer, &reply, &plan) {
+                    return;
+                }
+            }
+            Msg::Hello { machine } => {
+                let mut st = lock(&shared.state);
+                let m = machine as usize % shared.num_machines;
+                st.machines[m].last_seen = Instant::now();
+                st.machines[m].joined = true;
+                if !st.machines[m].active {
+                    st.machines[m].active = true;
+                    st.membership.push((machine, true));
+                    eprintln!("[mixnet-ps] machine {machine} rejoins");
+                }
+                drop(st);
+                if !send_reply(&mut writer, &Msg::Ack, &plan) {
+                    return;
+                }
+            }
+            Msg::Heartbeat { machine } => {
+                let mut st = lock(&shared.state);
+                touch(&mut st, machine, shared.num_machines);
+                drop(st);
+                if !send_reply(&mut writer, &Msg::Ack, &plan) {
+                    return;
+                }
             }
             Msg::Stats => {
                 let reply = Msg::StatsReply {
                     msgs: shared.msgs_in.load(Ordering::Relaxed),
                     bytes: shared.bytes_in.load(Ordering::Relaxed),
+                    dedup_hits: shared.dedup_hits.load(Ordering::Relaxed),
+                    lease_expiries: shared.lease_expiries.load(Ordering::Relaxed),
+                    applies: shared.applies.load(Ordering::Relaxed),
                 };
-                let _ = write_msg(&mut writer, &reply);
+                if !send_reply(&mut writer, &reply, &plan) {
+                    return;
+                }
             }
             Msg::Shutdown => {
                 shared.stop.store(true, Ordering::SeqCst);
                 shared.cv.notify_all();
-                let _ = write_msg(&mut writer, &Msg::Ack);
+                let _ = send_reply(&mut writer, &Msg::Ack, &plan);
                 return;
             }
             other => {
-                let _ = write_msg(
-                    &mut writer,
-                    &Msg::Err { msg: format!("unexpected message {other:?}") },
-                );
+                let reply = Msg::Err { msg: format!("unexpected message {other:?}") };
+                if !send_reply(&mut writer, &reply, &plan) {
+                    return;
+                }
             }
         }
     }
@@ -325,6 +696,10 @@ mod tests {
         read_msg(stream).unwrap()
     }
 
+    fn push(key: &str, value: Vec<f32>, machine: u32, seq: u64) -> Msg {
+        Msg::Push { key: key.into(), value, machine, seq }
+    }
+
     #[test]
     fn init_push_pull_one_machine() {
         let srv = PsServer::start(
@@ -335,10 +710,7 @@ mod tests {
         .unwrap();
         let mut c = connect(srv.addr());
         assert_eq!(rpc(&mut c, &Msg::Init { key: "w".into(), value: vec![1.0, 2.0] }), Msg::Ack);
-        assert_eq!(
-            rpc(&mut c, &Msg::Push { key: "w".into(), value: vec![0.5, 0.5], machine: 0 }),
-            Msg::Ack
-        );
+        assert_eq!(rpc(&mut c, &push("w", vec![0.5, 0.5], 0, 1)), Msg::Ack);
         match rpc(&mut c, &Msg::Pull { key: "w".into(), after_version: 1 }) {
             Msg::Value { value, version, .. } => {
                 assert_eq!(value, vec![0.5, 1.5]);
@@ -359,7 +731,7 @@ mod tests {
         let addr = srv.addr();
         let mut c0 = connect(addr);
         rpc(&mut c0, &Msg::Init { key: "w".into(), value: vec![0.0] });
-        rpc(&mut c0, &Msg::Push { key: "w".into(), value: vec![1.0], machine: 0 });
+        rpc(&mut c0, &push("w", vec![1.0], 0, 1));
         // a sequential pull (after_version=1) must block until machine 1
         // pushes; do it from a thread.
         let h = std::thread::spawn(move || {
@@ -369,10 +741,10 @@ mod tests {
                 other => panic!("{other:?}"),
             }
         });
-        std::thread::sleep(std::time::Duration::from_millis(50));
+        std::thread::sleep(Duration::from_millis(50));
         assert!(!h.is_finished(), "pull must wait for the round");
         let mut c1 = connect(addr);
-        rpc(&mut c1, &Msg::Push { key: "w".into(), value: vec![2.0], machine: 1 });
+        rpc(&mut c1, &push("w", vec![2.0], 1, 1));
         let got = h.join().unwrap();
         assert_eq!(got, -3.0); // w = 0 - 1*(1+2)
     }
@@ -382,7 +754,7 @@ mod tests {
         let srv = PsServer::start(0, 2, ServerUpdater::default()).unwrap();
         let mut c = connect(srv.addr());
         rpc(&mut c, &Msg::Init { key: "w".into(), value: vec![5.0] });
-        rpc(&mut c, &Msg::Push { key: "w".into(), value: vec![1.0], machine: 0 });
+        rpc(&mut c, &push("w", vec![1.0], 0, 1));
         match rpc(&mut c, &Msg::Pull { key: "w".into(), after_version: 0 }) {
             Msg::Value { value, version, .. } => {
                 assert_eq!(value, vec![5.0]);
@@ -396,7 +768,7 @@ mod tests {
     fn unknown_key_errors() {
         let srv = PsServer::start(0, 1, ServerUpdater::default()).unwrap();
         let mut c = connect(srv.addr());
-        match rpc(&mut c, &Msg::Push { key: "nope".into(), value: vec![1.0], machine: 0 }) {
+        match rpc(&mut c, &push("nope", vec![1.0], 0, 1)) {
             Msg::Err { .. } => {}
             other => panic!("{other:?}"),
         }
@@ -424,12 +796,12 @@ mod tests {
         let srv = PsServer::start(0, 1, ServerUpdater::default()).unwrap();
         let mut c = connect(srv.addr());
         rpc(&mut c, &Msg::Init { key: "w".into(), value: vec![0.0; 100] });
-        rpc(&mut c, &Msg::Push { key: "w".into(), value: vec![0.0; 100], machine: 0 });
+        rpc(&mut c, &push("w", vec![0.0; 100], 0, 1));
         assert_eq!(srv.messages_received(), 2);
         assert_eq!(srv.bytes_received(), 800);
         // the same counters over the wire (harness observability)
         match rpc(&mut c, &Msg::Stats) {
-            Msg::StatsReply { msgs, bytes } => {
+            Msg::StatsReply { msgs, bytes, .. } => {
                 assert_eq!(msgs, 3, "init + push + stats itself");
                 assert_eq!(bytes, 800);
             }
@@ -451,7 +823,7 @@ mod tests {
         .unwrap();
         let mut c = connect(srv.addr());
         rpc(&mut c, &Msg::Init { key: "w".into(), value: vec![3.0] });
-        rpc(&mut c, &Msg::Push { key: "w".into(), value: vec![1.0], machine: 0 });
+        rpc(&mut c, &push("w", vec![1.0], 0, 1));
         match rpc(&mut c, &Msg::Pull { key: "w".into(), after_version: 0 }) {
             Msg::Value { value, version, .. } => {
                 assert_eq!(value, vec![3.0]);
@@ -459,5 +831,116 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    /// A retransmitted push (same machine, same seq) must not contribute
+    /// a second gradient.
+    #[test]
+    fn duplicate_push_is_deduplicated() {
+        let srv = PsServer::start(
+            0,
+            1,
+            ServerUpdater { lr: 1.0, momentum: 0.0, weight_decay: 0.0, rescale: 1.0 },
+        )
+        .unwrap();
+        let mut c = connect(srv.addr());
+        rpc(&mut c, &Msg::Init { key: "w".into(), value: vec![0.0] });
+        assert_eq!(rpc(&mut c, &push("w", vec![1.0], 0, 1)), Msg::Ack);
+        assert_eq!(rpc(&mut c, &push("w", vec![1.0], 0, 1)), Msg::Ack, "retry still acks");
+        assert_eq!(srv.dedup_hits(), 1);
+        assert_eq!(srv.rounds_applied(), 1, "exactly one apply despite two deliveries");
+        match rpc(&mut c, &Msg::Pull { key: "w".into(), after_version: 1 }) {
+            Msg::Value { value, version, .. } => {
+                assert_eq!(value, vec![-1.0], "gradient applied once");
+                assert_eq!(version, 1);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// A machine running ahead queues per round: its surplus pushes must
+    /// pair with peers' later pushes, not blend into the current round.
+    #[test]
+    fn out_of_round_pushes_queue_separately() {
+        let srv = PsServer::start(
+            0,
+            2,
+            ServerUpdater { lr: 1.0, momentum: 0.0, weight_decay: 0.0, rescale: 1.0 },
+        )
+        .unwrap();
+        let mut c0 = connect(srv.addr());
+        let mut c1 = connect(srv.addr());
+        rpc(&mut c0, &Msg::Init { key: "w".into(), value: vec![0.0] });
+        // machine 0 is two rounds ahead
+        rpc(&mut c0, &push("w", vec![1.0], 0, 1));
+        rpc(&mut c0, &push("w", vec![10.0], 0, 2));
+        rpc(&mut c1, &push("w", vec![2.0], 1, 1)); // completes round 1: w = -3
+        rpc(&mut c1, &push("w", vec![20.0], 1, 2)); // completes round 2: w = -33
+        match rpc(&mut c0, &Msg::Pull { key: "w".into(), after_version: 2 }) {
+            Msg::Value { value, version, .. } => {
+                assert_eq!(value, vec![-33.0], "rounds must apply separately in order");
+                assert_eq!(version, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(srv.rounds_applied(), 2);
+    }
+
+    /// Under the degrade policy, an expired machine stops gating rounds
+    /// and barriers; the survivors keep training.
+    #[test]
+    fn degrade_policy_expires_silent_machine() {
+        let cfg = ServerConfig {
+            lease: Some(Duration::from_millis(150)),
+            join_grace: Duration::from_millis(300),
+            expiry: ExpiryPolicy::Degrade,
+            fault: None,
+        };
+        let srv = PsServer::start_with(
+            0,
+            2,
+            ServerUpdater { lr: 1.0, momentum: 0.0, weight_decay: 0.0, rescale: 1.0 },
+            cfg,
+        )
+        .unwrap();
+        let mut c = connect(srv.addr());
+        rpc(&mut c, &Msg::Hello { machine: 0 });
+        rpc(&mut c, &Msg::Init { key: "w".into(), value: vec![0.0] });
+        rpc(&mut c, &push("w", vec![1.0], 0, 1));
+        // machine 1 never shows up; its join grace lapses and the round
+        // completes with machine 0 alone.
+        match rpc(&mut c, &Msg::Pull { key: "w".into(), after_version: 1 }) {
+            Msg::Value { value, version, .. } => {
+                assert_eq!(value, vec![-1.0]);
+                assert_eq!(version, 1);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(srv.lease_expiries(), 1);
+        assert_eq!(srv.membership_events(), vec![(1, false)]);
+    }
+
+    /// Under the fail-round policy an expired lease poisons the server:
+    /// parked pulls and later requests error instead of hanging.
+    #[test]
+    fn fail_round_policy_errors_parked_requests() {
+        let cfg = ServerConfig {
+            lease: Some(Duration::from_millis(150)),
+            join_grace: Duration::from_millis(300),
+            expiry: ExpiryPolicy::FailRound,
+            fault: None,
+        };
+        let srv = PsServer::start_with(0, 2, ServerUpdater::default(), cfg).unwrap();
+        let mut c = connect(srv.addr());
+        rpc(&mut c, &Msg::Hello { machine: 0 });
+        rpc(&mut c, &Msg::Init { key: "w".into(), value: vec![0.0] });
+        rpc(&mut c, &push("w", vec![1.0], 0, 1));
+        // machine 1 never arrives: the parked sequential pull must fail
+        // once the lease lapses, not hang forever.
+        match rpc(&mut c, &Msg::Pull { key: "w".into(), after_version: 1 }) {
+            Msg::Err { msg } => assert!(msg.contains("lease"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        assert!(srv.lease_expiries() >= 1);
     }
 }

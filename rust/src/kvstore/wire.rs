@@ -1,13 +1,23 @@
 //! Wire protocol for the level-2 parameter server: length-framed binary
 //! messages over TCP.  Hand-rolled (no serde in this image) and versioned
 //! by a magic header so protocol mismatches fail loudly.
+//!
+//! Robustness contract: `decode`/`read_msg` never panic on adversarial
+//! input — every malformed frame is an `Err` — and declared lengths are
+//! bounded against the bytes actually present before any allocation is
+//! sized from them.
 
 use std::io::{Read, Write};
 
 use crate::error::{Error, Result};
 
-/// Protocol magic + version.
-pub const WIRE_MAGIC: u32 = 0x6d78_0001;
+/// Protocol magic + version (v2: Push carries a sequence number; Hello,
+/// Heartbeat and extended StatsReply added).
+pub const WIRE_MAGIC: u32 = 0x6d78_0002;
+
+/// Hard ceiling on a frame body; `read_msg` rejects larger declared
+/// lengths before allocating the receive buffer.
+pub const MAX_FRAME: usize = 1 << 26; // 64 MiB
 
 /// Parameter-server messages.
 #[derive(Debug, Clone, PartialEq)]
@@ -27,6 +37,9 @@ pub enum Msg {
         value: Vec<f32>,
         /// Sender machine id.
         machine: u32,
+        /// Per-machine monotonic sequence number; the server drops
+        /// retransmissions whose seq it has already queued or applied.
+        seq: u64,
     },
     /// Request the weight; served once `version >= after_version`.
     Pull {
@@ -51,7 +64,8 @@ pub enum Msg {
         /// Explanation.
         msg: String,
     },
-    /// Epoch barrier: released when all machines arrive.
+    /// Epoch barrier: released when all active machines arrive.
+    /// Retransmissions (same `id` + `machine`) are idempotent.
     Barrier {
         /// Barrier round id.
         id: u64,
@@ -64,10 +78,27 @@ pub enum Msg {
     Stats,
     /// Reply to [`Msg::Stats`].
     StatsReply {
-        /// Messages received since start.
+        /// Data-plane messages received since start.
         msgs: u64,
         /// Payload bytes received since start.
         bytes: u64,
+        /// Retransmissions recognized and dropped (pushes + barriers).
+        dedup_hits: u64,
+        /// Machine leases that expired.
+        lease_expiries: u64,
+        /// Optimizer rounds applied across all keys.
+        applies: u64,
+    },
+    /// Register a machine on (re)connect; refreshes its lease and, under
+    /// the degrade policy, rejoins an expired machine.
+    Hello {
+        /// Sender machine id.
+        machine: u32,
+    },
+    /// Lease keep-alive.
+    Heartbeat {
+        /// Sender machine id.
+        machine: u32,
     },
 }
 
@@ -84,6 +115,8 @@ impl Msg {
             Msg::Shutdown => 7,
             Msg::Stats => 8,
             Msg::StatsReply { .. } => 9,
+            Msg::Hello { .. } => 10,
+            Msg::Heartbeat { .. } => 11,
         }
     }
 }
@@ -106,8 +139,11 @@ struct Cursor<'a> {
 }
 
 impl<'a> Cursor<'a> {
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.b.len() {
+        if n > self.remaining() {
             return Err(Error::kv("wire: truncated message"));
         }
         let s = &self.b[self.pos..self.pos + n];
@@ -122,11 +158,21 @@ impl<'a> Cursor<'a> {
     }
     fn string(&mut self) -> Result<String> {
         let n = self.u32()? as usize;
+        // Bound the declared length against the bytes actually present
+        // before `to_vec` sizes an allocation from it.
+        if n > self.remaining() {
+            return Err(Error::kv("wire: string length exceeds frame"));
+        }
         let s = self.take(n)?;
         String::from_utf8(s.to_vec()).map_err(|_| Error::kv("wire: bad utf8"))
     }
     fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.u32()? as usize;
+        // 4*n could overflow on 32-bit targets and would otherwise size a
+        // Vec from attacker-declared input; check against remaining first.
+        if n > self.remaining() / 4 {
+            return Err(Error::kv("wire: f32 array length exceeds frame"));
+        }
         let raw = self.take(4 * n)?;
         Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
     }
@@ -141,10 +187,11 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             put_str(&mut body, key);
             put_f32s(&mut body, value);
         }
-        Msg::Push { key, value, machine } => {
+        Msg::Push { key, value, machine, seq } => {
             put_str(&mut body, key);
             put_f32s(&mut body, value);
             body.extend_from_slice(&machine.to_le_bytes());
+            body.extend_from_slice(&seq.to_le_bytes());
         }
         Msg::Pull { key, after_version } => {
             put_str(&mut body, key);
@@ -161,9 +208,15 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             body.extend_from_slice(&id.to_le_bytes());
             body.extend_from_slice(&machine.to_le_bytes());
         }
-        Msg::StatsReply { msgs, bytes } => {
+        Msg::StatsReply { msgs, bytes, dedup_hits, lease_expiries, applies } => {
             body.extend_from_slice(&msgs.to_le_bytes());
             body.extend_from_slice(&bytes.to_le_bytes());
+            body.extend_from_slice(&dedup_hits.to_le_bytes());
+            body.extend_from_slice(&lease_expiries.to_le_bytes());
+            body.extend_from_slice(&applies.to_le_bytes());
+        }
+        Msg::Hello { machine } | Msg::Heartbeat { machine } => {
+            body.extend_from_slice(&machine.to_le_bytes());
         }
     }
     let mut out = Vec::with_capacity(12 + body.len());
@@ -174,13 +227,13 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
 }
 
 /// Decode one message from a body buffer (without the 8-byte frame
-/// header).
+/// header).  Never panics: every malformed input is an `Err`.
 pub fn decode(body: &[u8]) -> Result<Msg> {
     let mut c = Cursor { b: body, pos: 0 };
     let code = c.take(1)?[0];
     Ok(match code {
         0 => Msg::Init { key: c.string()?, value: c.f32s()? },
-        1 => Msg::Push { key: c.string()?, value: c.f32s()?, machine: c.u32()? },
+        1 => Msg::Push { key: c.string()?, value: c.f32s()?, machine: c.u32()?, seq: c.u64()? },
         2 => Msg::Pull { key: c.string()?, after_version: c.u64()? },
         3 => Msg::Value { key: c.string()?, value: c.f32s()?, version: c.u64()? },
         4 => Msg::Ack,
@@ -188,7 +241,15 @@ pub fn decode(body: &[u8]) -> Result<Msg> {
         6 => Msg::Barrier { id: c.u64()?, machine: c.u32()? },
         7 => Msg::Shutdown,
         8 => Msg::Stats,
-        9 => Msg::StatsReply { msgs: c.u64()?, bytes: c.u64()? },
+        9 => Msg::StatsReply {
+            msgs: c.u64()?,
+            bytes: c.u64()?,
+            dedup_hits: c.u64()?,
+            lease_expiries: c.u64()?,
+            applies: c.u64()?,
+        },
+        10 => Msg::Hello { machine: c.u32()? },
+        11 => Msg::Heartbeat { machine: c.u32()? },
         other => return Err(Error::kv(format!("wire: unknown opcode {other}"))),
     })
 }
@@ -210,7 +271,7 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg> {
         return Err(Error::kv(format!("wire: bad magic {magic:#x}")));
     }
     let len = u32::from_le_bytes(hdr[4..].try_into().unwrap()) as usize;
-    if len > 1 << 30 {
+    if len > MAX_FRAME {
         return Err(Error::kv(format!("wire: oversized frame {len}")));
     }
     let mut body = vec![0u8; len];
@@ -221,6 +282,7 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::check;
 
     fn roundtrip(m: Msg) {
         let enc = encode(&m);
@@ -231,7 +293,7 @@ mod tests {
     #[test]
     fn all_messages_roundtrip() {
         roundtrip(Msg::Init { key: "w1".into(), value: vec![1.0, -2.5] });
-        roundtrip(Msg::Push { key: "w".into(), value: vec![0.0; 17], machine: 3 });
+        roundtrip(Msg::Push { key: "w".into(), value: vec![0.0; 17], machine: 3, seq: 99 });
         roundtrip(Msg::Pull { key: "k".into(), after_version: 42 });
         roundtrip(Msg::Value { key: "k".into(), value: vec![9.0], version: 7 });
         roundtrip(Msg::Ack);
@@ -239,7 +301,15 @@ mod tests {
         roundtrip(Msg::Barrier { id: 5, machine: 1 });
         roundtrip(Msg::Shutdown);
         roundtrip(Msg::Stats);
-        roundtrip(Msg::StatsReply { msgs: 123, bytes: 456789 });
+        roundtrip(Msg::StatsReply {
+            msgs: 123,
+            bytes: 456789,
+            dedup_hits: 3,
+            lease_expiries: 1,
+            applies: 40,
+        });
+        roundtrip(Msg::Hello { machine: 2 });
+        roundtrip(Msg::Heartbeat { machine: 0 });
     }
 
     #[test]
@@ -269,5 +339,85 @@ mod tests {
     fn truncated_body_rejected() {
         let enc = encode(&Msg::Init { key: "w".into(), value: vec![1.0] });
         assert!(decode(&enc[8..enc.len() - 2]).is_err());
+    }
+
+    /// A frame declaring more payload than the body holds must error
+    /// before any allocation is sized from the declared count.
+    #[test]
+    fn declared_length_bounded_by_frame() {
+        // Push with f32 count u32::MAX but only 4 bytes of payload.
+        let mut body = vec![1u8]; // opcode Push
+        put_str(&mut body, "k");
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        body.extend_from_slice(&[0u8; 4]);
+        assert!(decode(&body).is_err());
+
+        // Err with a huge declared string length.
+        let mut body = vec![5u8];
+        body.extend_from_slice(&0xffff_ff00u32.to_le_bytes());
+        body.extend_from_slice(b"hi");
+        assert!(decode(&body).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_rejected_before_allocation() {
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+        hdr.extend_from_slice(&((MAX_FRAME as u32) + 1).to_le_bytes());
+        let mut r = &hdr[..];
+        assert!(read_msg(&mut r).is_err());
+    }
+
+    /// Arbitrary byte bodies must decode to `Err` or `Ok`, never panic.
+    #[test]
+    fn decode_never_panics_on_arbitrary_bytes() {
+        check(
+            "wire-decode-total",
+            2000,
+            |r| {
+                let n = r.below(96);
+                (0..n).map(|_| r.next_u64() as u8).collect::<Vec<u8>>()
+            },
+            |bytes| {
+                let _ = decode(bytes);
+                true
+            },
+        );
+    }
+
+    /// Random corruptions of valid frames must also never panic.
+    #[test]
+    fn decode_never_panics_on_corrupted_frames() {
+        check(
+            "wire-decode-corrupt",
+            2000,
+            |r| {
+                let msg = match r.below(4) {
+                    0 => Msg::Push {
+                        key: "weight".into(),
+                        value: vec![1.0; 8],
+                        machine: 1,
+                        seq: 7,
+                    },
+                    1 => Msg::Value { key: "weight".into(), value: vec![2.0; 8], version: 3 },
+                    2 => Msg::Err { msg: "some failure".into() },
+                    _ => Msg::Init { key: "weight".into(), value: vec![0.5; 8] },
+                };
+                let mut body = encode(&msg)[8..].to_vec();
+                for _ in 0..1 + r.below(4) {
+                    let i = r.below(body.len());
+                    body[i] = r.next_u64() as u8;
+                }
+                if r.below(3) == 0 {
+                    let cut = r.below(body.len() + 1);
+                    body.truncate(cut);
+                }
+                body
+            },
+            |bytes| {
+                let _ = decode(bytes);
+                true
+            },
+        );
     }
 }

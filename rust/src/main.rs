@@ -21,8 +21,8 @@ use mixnet::engine::{create, default_threads, EngineKind};
 use mixnet::executor::BindConfig;
 use mixnet::graph::infer_shapes;
 use mixnet::graph::memory::{default_external, plan_memory, AllocStrategy};
-use mixnet::io::{synth, ArrayDataIter, PrefetchIter};
-use mixnet::kvstore::server::{PsServer, ServerUpdater};
+use mixnet::io::{synth, ArrayDataIter, DataIter, PrefetchIter};
+use mixnet::kvstore::server::{ExpiryPolicy, PsServer, ServerConfig, ServerUpdater};
 use mixnet::kvstore::{dist::DistKVStore, Consistency, LocalKVStore};
 use mixnet::models::by_name;
 use mixnet::module::{DataParallelTrainer, Module, SyncMode, TrainerConfig, UpdateMode};
@@ -42,11 +42,13 @@ COMMANDS:
                  --model NAME  --epochs N  --batch N  --lr F  --seed N
                  --classes N   --examples N  --devices N
                  --kv local|dist  --consistency seq|bounded:K|eventual
-                 --weights W0,W1,...  --no-overlap
+                 --weights W0,W1,...  --no-overlap  --checkpoint FILE
                  (--kv dist needs --server ADDR; --batch is the global
                   batch, split over --devices replica shards; bounded:K
                   lets replicas run K rounds ahead of delivery; --weights
-                  sizes each replica's share of the round — elastic sync)
+                  sizes each replica's share of the round — elastic sync;
+                  --checkpoint saves train state per epoch and resumes
+                  from FILE when it exists — local kv only)
   serve        dynamic-batching inference server + closed-loop demo
                  --model NAME  --checkpoint FILE  --clients N  --requests N
                  --max-batch N  --max-delay-us N  --workers N  --seed N
@@ -55,6 +57,9 @@ COMMANDS:
                  (no --checkpoint: quick-trains/initializes weights first)
   server       run the level-2 parameter server
                  --port N  --machines N  --lr F  --momentum F
+                 --lease-ms N  --lease-policy fail|degrade
+                 (lease knobs also read PALLAS_KV_LEASE_MS /
+                  PALLAS_KV_LEASE_POLICY; see README 'Fault tolerance')
   worker       join distributed training as one machine (same Trainer as
                `train`, N local devices aggregated before the wire)
                  --server ADDR  --machine ID  --machines N  --devices N
@@ -87,7 +92,7 @@ const VALUE_KEYS: &[&str] = &[
     "model", "epochs", "batch", "lr", "seed", "classes", "examples", "port", "machines",
     "momentum", "server", "machine", "steps", "artifacts", "mode", "workers", "passes",
     "checkpoint", "clients", "requests", "max-batch", "max-delay-us", "devices", "kv",
-    "consistency", "weights",
+    "consistency", "weights", "lease-ms", "lease-policy",
 ];
 
 fn run(argv: Vec<String>) -> Result<()> {
@@ -319,13 +324,42 @@ fn cmd_train(args: &Args) -> Result<()> {
             return Err(Error::Config(format!("--kv must be local|dist, got '{other}'")));
         }
     };
+    let ckpt = args.options.get("checkpoint").cloned();
+    if ckpt.is_some() && kv_kind != "local" {
+        return Err(Error::Config(
+            "--checkpoint resume needs --kv local (the level-2 server owns distributed \
+             state)"
+                .into(),
+        ));
+    }
     let mut trainer = bind_trainer(args, engine, &model, shard_batch, devices, shards, store)?;
     println!(
         "data-parallel: {devices} device(s), {shards} shard(s) of {shard_batch} rows, \
          kv {kv_kind}, {:?}",
         consistency
     );
-    let stats = trainer.fit(&mut iter, epochs)?;
+    let stats = match &ckpt {
+        None => trainer.fit(&mut iter, epochs)?,
+        Some(path) => {
+            // Crash-elastic resume: per-epoch checkpoints; an existing
+            // file fast-forwards the run (iterator resets replay the
+            // shuffle schedule so the resumed run matches bitwise).
+            let mut done = 0u64;
+            if std::path::Path::new(path).exists() {
+                done = trainer.resume_from(path)?;
+                println!("resumed {path}: {done} epoch(s) already done");
+            }
+            for _ in 0..done {
+                iter.reset();
+            }
+            let mut stats = Vec::new();
+            for e in (done as usize)..epochs {
+                stats.extend(trainer.fit(&mut iter, 1)?);
+                trainer.save_checkpoint(path, e as u64 + 1)?;
+            }
+            stats
+        }
+    };
     report(&stats);
     Ok(())
 }
@@ -553,8 +587,30 @@ fn cmd_server(args: &Args) -> Result<()> {
         weight_decay: 1e-4,
         rescale: 1.0,
     };
-    let server = PsServer::start(port, machines, updater)?;
+    let mut cfg = ServerConfig::from_env();
+    if let Some(ms) = args.options.get("lease-ms") {
+        let ms: u64 = ms
+            .parse()
+            .map_err(|_| Error::Config(format!("--lease-ms: bad value '{ms}'")))?;
+        cfg.lease = Some(std::time::Duration::from_millis(ms));
+    }
+    if let Some(p) = args.options.get("lease-policy") {
+        cfg.expiry = match p.as_str() {
+            "fail" | "fail-round" => ExpiryPolicy::FailRound,
+            "degrade" => ExpiryPolicy::Degrade,
+            other => {
+                return Err(Error::Config(format!(
+                    "--lease-policy must be fail|degrade, got '{other}'"
+                )));
+            }
+        };
+    }
+    let server = PsServer::start_with(port, machines, updater, cfg.clone())?;
     println!("level-2 parameter server on {} for {machines} machine(s)", server.addr());
+    match cfg.lease {
+        Some(l) => println!("lease {}ms, expiry {:?}", l.as_millis(), cfg.expiry),
+        None => println!("leases disabled (set PALLAS_KV_LEASE_MS or --lease-ms)"),
+    }
     println!("(ctrl-c to stop)");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

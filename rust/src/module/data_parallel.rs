@@ -65,7 +65,10 @@ use crate::ndarray::{NDArray, Storage};
 use crate::symbol::Symbol;
 use crate::util::Rng;
 
-use super::sync::{Assignment, BoundedDelay, Bsp, Elastic, MemberEvent, RoundLedger, SyncPolicy};
+use super::sync::{
+    Assignment, BoundedDelay, Bsp, Elastic, MemberEvent, MembershipState, RoundLedger,
+    SyncPolicy,
+};
 use super::{init_param, EpochStats};
 
 /// A lightweight virtual device: one replica slot of a data-parallel
@@ -736,6 +739,68 @@ impl DataParallelTrainer {
         drop(views);
         self.step = step;
         out
+    }
+
+    /// Persist the full training state — master weights, per-key round
+    /// versions, optimizer state, the round counter, and (for elastic
+    /// runs) the membership-event log — so a later process can
+    /// [`resume_from`](DataParallelTrainer::resume_from) this exact
+    /// point and reproduce the uninterrupted run bit for bit.
+    /// `epochs_done` records how many epochs completed; the caller
+    /// fast-forwards its data iterator by the returned value on resume.
+    /// Requires a store with train-state export (the local store; a
+    /// distributed store recovers through the lease protocol instead).
+    pub fn save_checkpoint(
+        &self,
+        path: impl AsRef<std::path::Path>,
+        epochs_done: u64,
+    ) -> Result<()> {
+        let mut ts = self.store.export_train_state()?;
+        ts.step = self.step;
+        ts.epochs_done = epochs_done;
+        if let Some(m) = self.policy.export_members() {
+            ts.weights_cfg = m.weights;
+            ts.active = m.active;
+            ts.applied_events =
+                m.applied.iter().map(|e| (e.round, e.device as u32, u8::from(e.join))).collect();
+            ts.pending_events =
+                m.pending.iter().map(|e| (e.round, e.device as u32, u8::from(e.join))).collect();
+        }
+        crate::io::checkpoint::save_train_state(path, &ts)
+    }
+
+    /// Restore a checkpoint written by
+    /// [`save_checkpoint`](DataParallelTrainer::save_checkpoint) into
+    /// this freshly-bound trainer: store weights/versions/updater state,
+    /// the round counter, and elastic membership.  Returns the
+    /// checkpoint's `epochs_done`; the caller must fast-forward its data
+    /// iterator by that many epochs (one `reset()` per completed epoch
+    /// for the shuffling array iterator) before calling `fit` so the
+    /// resumed run consumes exactly the batches the uninterrupted run
+    /// would have.
+    pub fn resume_from(&mut self, path: impl AsRef<std::path::Path>) -> Result<u64> {
+        let ts = crate::io::checkpoint::load_train_state(path)?;
+        self.store.restore_train_state(&ts)?;
+        if !ts.active.is_empty() {
+            let to_ev = |t: &(u64, u32, u8)| MemberEvent {
+                round: t.0,
+                device: t.1 as usize,
+                join: t.2 != 0,
+            };
+            let m = MembershipState {
+                weights: ts.weights_cfg.clone(),
+                active: ts.active.clone(),
+                applied: ts.applied_events.iter().map(to_ev).collect(),
+                pending: ts.pending_events.iter().map(to_ev).collect(),
+            };
+            self.policy.restore_members(&m)?;
+        }
+        self.step = ts.step;
+        // The store now owns the restored master weights; replica params
+        // are overwritten by the first round's pulls, so the fresh seed
+        // init is harmless.  Skip re-registering keys with the store.
+        self.inited = true;
+        Ok(ts.epochs_done)
     }
 
     /// Pull the store's current master weights (one fresh array per

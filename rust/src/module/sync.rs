@@ -83,6 +83,22 @@ pub struct MemberEvent {
     pub join: bool,
 }
 
+/// An elastic policy's membership as of some round, exported for
+/// checkpointing: the static per-replica weights, the current active
+/// set, the events already applied (the audit log a restored run can
+/// replay), and the events still pending.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MembershipState {
+    /// Per-replica work weights.
+    pub weights: Vec<u32>,
+    /// Per-replica active flags.
+    pub active: Vec<bool>,
+    /// Events already applied, in application order.
+    pub applied: Vec<MemberEvent>,
+    /// Events queued but not yet due.
+    pub pending: Vec<MemberEvent>,
+}
+
 /// How the data-parallel round loop synchronizes its replicas (see the
 /// module docs).  Implementations: [`Bsp`], [`BoundedDelay`],
 /// [`Elastic`].
@@ -115,6 +131,25 @@ pub trait SyncPolicy: Send {
         let _ = ev;
         Err(Error::Bind(format!(
             "sync policy '{}' has static membership (use SyncMode::Elastic)",
+            self.name()
+        )))
+    }
+
+    /// Export membership for checkpointing; `None` for static policies
+    /// (their assignment is a pure function of the round, so nothing
+    /// needs saving).
+    fn export_members(&self) -> Option<MembershipState> {
+        None
+    }
+
+    /// Restore membership exported by
+    /// [`export_members`](SyncPolicy::export_members).  Static policies
+    /// reject this: a checkpoint carrying membership state cannot resume
+    /// under a policy that ignores it.
+    fn restore_members(&mut self, st: &MembershipState) -> Result<()> {
+        let _ = st;
+        Err(Error::Bind(format!(
+            "sync policy '{}' has static membership; checkpoint carries elastic state",
             self.name()
         )))
     }
@@ -215,6 +250,10 @@ pub struct Elastic {
     /// Pending events, in submission order (applied in `(round, log
     /// order)`).
     events: Vec<MemberEvent>,
+    /// Events already applied, in application order — the audit log a
+    /// checkpoint persists so a restored run knows exactly which
+    /// membership changes produced the saved active set.
+    applied: Vec<MemberEvent>,
 }
 
 impl Elastic {
@@ -233,7 +272,12 @@ impl Elastic {
         if weights.iter().all(|&w| w == 0) {
             return Err(Error::Bind("elastic sync: all weights are zero".into()));
         }
-        Ok(Elastic { weights, active: vec![true; devices], events: Vec::new() })
+        Ok(Elastic {
+            weights,
+            active: vec![true; devices],
+            events: Vec::new(),
+            applied: Vec::new(),
+        })
     }
 
     /// The currently-active replica set (diagnostics / tests).
@@ -254,6 +298,7 @@ impl SyncPolicy for Elastic {
         for ev in self.events.drain(..) {
             if ev.round <= round {
                 self.active[ev.device] = ev.join;
+                self.applied.push(ev);
             } else {
                 rest.push(ev);
             }
@@ -283,6 +328,30 @@ impl SyncPolicy for Elastic {
             )));
         }
         self.events.push(ev);
+        Ok(())
+    }
+
+    fn export_members(&self) -> Option<MembershipState> {
+        Some(MembershipState {
+            weights: self.weights.clone(),
+            active: self.active.clone(),
+            applied: self.applied.clone(),
+            pending: self.events.clone(),
+        })
+    }
+
+    fn restore_members(&mut self, st: &MembershipState) -> Result<()> {
+        if st.weights.len() != self.weights.len() || st.active.len() != self.active.len() {
+            return Err(Error::Bind(format!(
+                "elastic restore: checkpoint has {} replicas, trainer has {}",
+                st.active.len(),
+                self.active.len()
+            )));
+        }
+        self.weights = st.weights.clone();
+        self.active = st.active.clone();
+        self.applied = st.applied.clone();
+        self.events = st.pending.clone();
         Ok(())
     }
 }
@@ -435,6 +504,36 @@ mod tests {
         e.push_event(MemberEvent { round: 6, device: 0, join: false }).unwrap();
         e.push_event(MemberEvent { round: 6, device: 1, join: false }).unwrap();
         assert!(e.assign(6, 4, 2).is_err());
+    }
+
+    #[test]
+    fn elastic_membership_roundtrips_through_export() {
+        // Apply one event, leave one pending, export, restore into a
+        // fresh policy: subsequent assignments must match exactly.
+        let mut e = Elastic::new(3, vec![2, 1, 1]).unwrap();
+        e.push_event(MemberEvent { round: 2, device: 1, join: false }).unwrap();
+        e.push_event(MemberEvent { round: 9, device: 1, join: true }).unwrap();
+        let _ = e.assign(3, 4, 3).unwrap(); // applies the round-2 leave
+        let st = e.export_members().unwrap();
+        assert_eq!(st.active, vec![true, false, true]);
+        assert_eq!(st.applied.len(), 1);
+        assert_eq!(st.pending.len(), 1);
+
+        let mut r = Elastic::new(3, vec![2, 1, 1]).unwrap();
+        r.restore_members(&st).unwrap();
+        for round in 4..12 {
+            assert_eq!(
+                r.assign(round, 4, 3).unwrap(),
+                e.assign(round, 4, 3).unwrap(),
+                "round {round}"
+            );
+        }
+        // replica-count mismatch rejected
+        let mut wrong = Elastic::new(2, vec![]).unwrap();
+        assert!(wrong.restore_members(&st).is_err());
+        // static policies reject membership restore outright
+        assert!(Bsp::new().restore_members(&st).is_err());
+        assert!(Bsp::new().export_members().is_none());
     }
 
     #[test]

@@ -10,7 +10,13 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use crate::engine::EngineRef;
 use crate::ndarray::NDArray;
+
+/// One exported per-key optimizer buffer: (state key, shape, data).
+/// State keys are namespaced by the optimizer (`vel:`, `adam.m:`, ...)
+/// so heterogeneous state survives a round trip unambiguously.
+pub type StateBlob = (String, Vec<usize>, Vec<f32>);
 
 /// A stateful parameter optimizer.
 pub trait Optimizer: Send + Sync {
@@ -24,6 +30,19 @@ pub trait Optimizer: Send + Sync {
 
     /// Override the learning rate (scheduling).
     fn set_learning_rate(&self, lr: f32);
+
+    /// Export per-key state for checkpointing, sorted by state key so
+    /// the byte stream is deterministic.  Stateless optimizers export
+    /// nothing (the default) — for them resume-exactness is free.
+    fn export_state(&self) -> Vec<StateBlob> {
+        Vec::new()
+    }
+
+    /// Restore state previously produced by
+    /// [`export_state`](Optimizer::export_state).  Blobs the optimizer
+    /// does not recognize are ignored (forward compatibility); the
+    /// default is a no-op for stateless optimizers.
+    fn import_state(&self, _state: &[StateBlob], _engine: &EngineRef) {}
 }
 
 /// SGD with momentum and weight decay — the configuration of the paper's
@@ -115,6 +134,26 @@ impl Optimizer for Sgd {
     fn set_learning_rate(&self, lr: f32) {
         *self.lr.lock().unwrap() = lr;
     }
+
+    fn export_state(&self) -> Vec<StateBlob> {
+        let state = self.state.lock().unwrap();
+        let mut out: Vec<StateBlob> = state
+            .iter()
+            .map(|(k, v)| (format!("vel:{k}"), v.shape().to_vec(), v.to_vec()))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    fn import_state(&self, blobs: &[StateBlob], engine: &EngineRef) {
+        let mut state = self.state.lock().unwrap();
+        for (name, shape, data) in blobs {
+            if let Some(key) = name.strip_prefix("vel:") {
+                let v = NDArray::from_vec_on(shape, data.clone(), engine.clone());
+                state.insert(key.to_string(), v);
+            }
+        }
+    }
 }
 
 /// Adam optimizer (per-key first/second moment state).
@@ -188,6 +227,48 @@ impl Optimizer for Adam {
     fn set_learning_rate(&self, lr: f32) {
         *self.lr.lock().unwrap() = lr;
     }
+
+    fn export_state(&self) -> Vec<StateBlob> {
+        let state = self.state.lock().unwrap();
+        let mut out: Vec<StateBlob> = Vec::new();
+        for (k, (m, v, t)) in state.iter() {
+            out.push((format!("adam.m:{k}"), m.shape().to_vec(), m.to_vec()));
+            // the step count rides along bit-exactly as two f32 halves
+            out.push((
+                format!("adam.t:{k}"),
+                vec![2],
+                vec![f32::from_bits(*t as u32), f32::from_bits((*t >> 32) as u32)],
+            ));
+            out.push((format!("adam.v:{k}"), v.shape().to_vec(), v.to_vec()));
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    fn import_state(&self, blobs: &[StateBlob], engine: &EngineRef) {
+        let mut state = self.state.lock().unwrap();
+        for (name, shape, data) in blobs {
+            let fresh = || {
+                (
+                    NDArray::zeros_on(shape, engine.clone()),
+                    NDArray::zeros_on(shape, engine.clone()),
+                    0u64,
+                )
+            };
+            if let Some(key) = name.strip_prefix("adam.m:") {
+                let e = state.entry(key.to_string()).or_insert_with(fresh);
+                e.0 = NDArray::from_vec_on(shape, data.clone(), engine.clone());
+            } else if let Some(key) = name.strip_prefix("adam.v:") {
+                let e = state.entry(key.to_string()).or_insert_with(fresh);
+                e.1 = NDArray::from_vec_on(shape, data.clone(), engine.clone());
+            } else if let Some(key) = name.strip_prefix("adam.t:") {
+                if data.len() == 2 {
+                    let e = state.entry(key.to_string()).or_insert_with(fresh);
+                    e.2 = u64::from(data[0].to_bits()) | (u64::from(data[1].to_bits()) << 32);
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -246,6 +327,49 @@ mod tests {
         let opt = Sgd::new(0.1);
         opt.set_learning_rate(0.01);
         assert_eq!(opt.learning_rate(), 0.01);
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn sgd_state_roundtrips_bitwise() {
+        // Two optimizers, one restored from the other's exported state,
+        // must continue bitwise identically.
+        let w1 = NDArray::zeros(&[2]);
+        let g = NDArray::ones(&[2]);
+        let opt = Sgd::with_momentum(0.1, 0.9, 1e-4);
+        opt.update("w", &w1, &g);
+        opt.update("w", &w1, &g);
+        let blobs = opt.export_state();
+        assert_eq!(blobs.len(), 1);
+        assert_eq!(blobs[0].0, "vel:w");
+        let w2 = NDArray::from_vec(&[2], w1.to_vec());
+        let opt2 = Sgd::with_momentum(0.1, 0.9, 1e-4);
+        opt2.import_state(&blobs, &w2.engine());
+        opt.update("w", &w1, &g);
+        opt2.update("w", &w2, &g);
+        assert_eq!(bits(&w1.to_vec()), bits(&w2.to_vec()));
+    }
+
+    #[test]
+    fn adam_state_roundtrips_bitwise() {
+        let w1 = NDArray::zeros(&[2]);
+        let g = NDArray::ones(&[2]);
+        let opt = Adam::new(0.05);
+        for _ in 0..3 {
+            opt.update("w", &w1, &g);
+        }
+        let blobs = opt.export_state();
+        assert_eq!(blobs.len(), 3, "m, t, v per key");
+        let w2 = NDArray::from_vec(&[2], w1.to_vec());
+        let opt2 = Adam::new(0.05);
+        opt2.import_state(&blobs, &w2.engine());
+        // the step counter must survive exactly, or bias correction drifts
+        opt.update("w", &w1, &g);
+        opt2.update("w", &w2, &g);
+        assert_eq!(bits(&w1.to_vec()), bits(&w2.to_vec()));
     }
 
     #[test]

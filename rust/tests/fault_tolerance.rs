@@ -1,0 +1,378 @@
+//! Fault-tolerance acceptance (ISSUE 6): deterministic fault injection
+//! over the real TCP transport, retry + seq-dedup idempotence (a
+//! retransmitted gradient must never double-apply), lease expiry under
+//! both policies, and crash-elastic checkpoint/restore.
+//!
+//! The bitwise assertions lean on two protocol facts: the server's
+//! round reduction pops one pending push per machine in machine-index
+//! order (arrival order is irrelevant), and a sequential-consistency
+//! client cannot advance a round past an unserved pull — so a run with
+//! drops, duplicates, truncations, and connection kills must end at
+//! exactly the weights of the fault-free run.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use mixnet::engine::{create, EngineKind, EngineRef};
+use mixnet::executor::BindConfig;
+use mixnet::io::{synth, ArrayDataIter, DataIter};
+use mixnet::kvstore::dist::{DistKVStore, RetryCfg};
+use mixnet::kvstore::fault::FaultPlan;
+use mixnet::kvstore::server::{ExpiryPolicy, PsServer, ServerConfig, ServerUpdater};
+use mixnet::kvstore::{Consistency, KVStore, LocalKVStore};
+use mixnet::models::mlp;
+use mixnet::module::{DataParallelTrainer, Module, SyncMode, TrainerConfig, UpdateMode};
+use mixnet::ndarray::NDArray;
+use mixnet::optimizer::Sgd;
+
+fn updater(machines: usize) -> ServerUpdater {
+    ServerUpdater { lr: 0.4 / machines as f32, momentum: 0.9, weight_decay: 1e-4, rescale: 1.0 }
+}
+
+/// Tight timeouts so injected drops cost milliseconds, not the
+/// production 10s/60s deadlines; generous retry budget so a faulty run
+/// never gives up.
+fn fast_retry() -> RetryCfg {
+    RetryCfg {
+        connect_timeout: Duration::from_millis(2000),
+        op_timeout: Duration::from_millis(400),
+        park_timeout: Duration::from_millis(8000),
+        max_retries: 20,
+        backoff_base: Duration::from_millis(2),
+        backoff_cap: Duration::from_millis(20),
+        heartbeat: None,
+    }
+}
+
+fn assert_params_bitwise_eq(a: &HashMap<String, Vec<f32>>, b: &HashMap<String, Vec<f32>>) {
+    assert_eq!(a.len(), b.len());
+    for (name, va) in a {
+        let vb = &b[name];
+        assert_eq!(va.len(), vb.len(), "{name}: length");
+        for (i, (x, y)) in va.iter().zip(vb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{name}[{i}]: {x} vs {y}");
+        }
+    }
+}
+
+/// One machine of the Figure 2 MLP job through a (possibly faulty)
+/// distributed store; returns (accuracy, retries, reconnects).
+fn train_machine(
+    addr: std::net::SocketAddr,
+    machine: u32,
+    epochs: usize,
+    cfg: RetryCfg,
+    plan: Option<Arc<FaultPlan>>,
+) -> (f32, u64, u64) {
+    let engine = create(EngineKind::Threaded, 2);
+    let kv = Arc::new(
+        DistKVStore::connect_with(
+            addr,
+            machine,
+            1,
+            Consistency::Sequential,
+            engine.clone(),
+            cfg,
+            plan,
+        )
+        .unwrap(),
+    );
+    let ds = synth::class_clusters(512, 4, 16, 0.3, 77 + machine as u64);
+    let mut iter = ArrayDataIter::new(ds.features, ds.labels, &[16], 32, true, engine.clone());
+    let model = mlp(&[32], 16, 4);
+    let shapes = model.param_shapes(32).unwrap();
+    let mut module = Module::new(model.symbol, engine);
+    module.bind(32, &[16], &shapes, BindConfig::default(), 5).unwrap();
+    let stats = module
+        .fit(&mut iter, &UpdateMode::KvStore { store: kv.clone(), device: 0 }, epochs)
+        .unwrap();
+    kv.barrier().unwrap();
+    let cs = kv.client_stats();
+    (stats.last().unwrap().accuracy, cs.retries, cs.reconnects)
+}
+
+/// Read the server's final weights over a fresh fault-free connection.
+fn final_weights(addr: std::net::SocketAddr) -> HashMap<String, Vec<f32>> {
+    let engine = create(EngineKind::Threaded, 2);
+    let kv = DistKVStore::connect_with(
+        addr,
+        0,
+        1,
+        Consistency::Eventual,
+        engine.clone(),
+        fast_retry(),
+        None,
+    )
+    .unwrap();
+    let model = mlp(&[32], 16, 4);
+    let mut out = HashMap::new();
+    for (name, shape) in model.param_shapes(32).unwrap() {
+        let arr = NDArray::zeros_on(&shape, engine.clone());
+        kv.pull(&name, &arr, 0).unwrap();
+        kv.flush();
+        out.insert(name.clone(), arr.to_vec());
+    }
+    out
+}
+
+struct DistRun {
+    weights: HashMap<String, Vec<f32>>,
+    applies: u64,
+    dedup_hits: u64,
+    lease_expiries: u64,
+    retries: u64,
+    reconnects: u64,
+    acc: f32,
+}
+
+fn run_dist(
+    machines: usize,
+    epochs: usize,
+    scfg: ServerConfig,
+    cfg: RetryCfg,
+    plans: Vec<Option<Arc<FaultPlan>>>,
+) -> DistRun {
+    let mut server = PsServer::start_with(0, machines, updater(machines), scfg).unwrap();
+    let addr = server.addr();
+    let handles: Vec<_> = plans
+        .into_iter()
+        .enumerate()
+        .map(|(m, plan)| {
+            std::thread::spawn(move || train_machine(addr, m as u32, epochs, cfg, plan))
+        })
+        .collect();
+    let mut acc = 1.0f32;
+    let (mut retries, mut reconnects) = (0u64, 0u64);
+    for h in handles {
+        let (a, rt, rc) = h.join().unwrap();
+        acc = acc.min(a);
+        retries += rt;
+        reconnects += rc;
+    }
+    let weights = final_weights(addr);
+    let run = DistRun {
+        weights,
+        applies: server.rounds_applied(),
+        dedup_hits: server.dedup_hits(),
+        lease_expiries: server.lease_expiries(),
+        retries,
+        reconnects,
+        acc,
+    };
+    server.shutdown();
+    run
+}
+
+/// Drops, duplicates, and truncated frames are retried/dedup'd into a
+/// run that ends bitwise identical to the fault-free one, with exactly
+/// the same number of optimizer applies (no double-applied gradients).
+#[test]
+fn faulty_run_is_bitwise_equal_to_fault_free_run() {
+    let clean = run_dist(1, 2, ServerConfig::default(), fast_retry(), vec![None]);
+    assert!(clean.acc > 0.7, "accuracy {}", clean.acc);
+
+    let plan = FaultPlan::new(0xfa17).with_drop(0.04).with_dup(0.06).with_trunc(0.02);
+    let faulty =
+        run_dist(1, 2, ServerConfig::default(), fast_retry(), vec![Some(Arc::new(plan))]);
+    assert!(faulty.retries > 0, "faults were not exercised");
+    assert!(faulty.dedup_hits > 0, "duplicates never reached the dedup filter");
+    assert_eq!(clean.applies, faulty.applies, "a retransmission double-applied");
+    assert_params_bitwise_eq(&clean.weights, &faulty.weights);
+}
+
+/// Killed connections re-dial, replay the un-acked op under the same
+/// sequence number, and the server's dedup filter keeps the math exact.
+#[test]
+fn connection_kills_reconnect_and_stay_bitwise() {
+    let clean = run_dist(1, 2, ServerConfig::default(), fast_retry(), vec![None]);
+    let plan = FaultPlan::new(7).with_kill_every(40);
+    let faulty =
+        run_dist(1, 2, ServerConfig::default(), fast_retry(), vec![Some(Arc::new(plan))]);
+    assert!(faulty.reconnects > 0, "kills were not exercised");
+    assert_eq!(clean.applies, faulty.applies, "a replayed push double-applied");
+    assert_params_bitwise_eq(&clean.weights, &faulty.weights);
+}
+
+/// The acceptance run: a two-machine job with per-machine fault plans,
+/// heartbeat leases held live, zero double-applies, and the exact
+/// weights of the clean run.
+#[test]
+fn two_machine_run_with_faults_has_zero_double_applies() {
+    let scfg = || ServerConfig {
+        lease: Some(Duration::from_millis(5000)),
+        expiry: ExpiryPolicy::Degrade,
+        ..ServerConfig::default()
+    };
+    let cfg = RetryCfg { heartbeat: Some(Duration::from_millis(200)), ..fast_retry() };
+    let clean = run_dist(2, 2, scfg(), cfg, vec![None, None]);
+    assert_eq!(clean.lease_expiries, 0, "heartbeats must hold the lease");
+
+    let plans = vec![
+        Some(Arc::new(FaultPlan::new(0xfa17).with_drop(0.03).with_dup(0.08))),
+        Some(Arc::new(FaultPlan::new(0x5eed).with_drop(0.03).with_trunc(0.03))),
+    ];
+    let faulty = run_dist(2, 2, scfg(), cfg, plans);
+    assert!(faulty.retries > 0, "faults were not exercised");
+    assert!(faulty.dedup_hits > 0, "duplicates never reached the dedup filter");
+    assert_eq!(faulty.lease_expiries, 0, "retries must outpace the 5s lease");
+    assert_eq!(clean.applies, faulty.applies, "a retransmission double-applied");
+    assert_params_bitwise_eq(&clean.weights, &faulty.weights);
+}
+
+/// Under `ExpiryPolicy::FailRound` a machine that never joins poisons
+/// the round: parked barriers error out instead of hanging.
+#[test]
+fn bsp_lease_expiry_fails_the_round() {
+    let scfg = ServerConfig {
+        lease: Some(Duration::from_millis(500)),
+        join_grace: Duration::from_millis(500),
+        expiry: ExpiryPolicy::FailRound,
+        ..ServerConfig::default()
+    };
+    let mut server = PsServer::start_with(0, 2, updater(2), scfg).unwrap();
+    let engine = create(EngineKind::Threaded, 2);
+    let cfg = RetryCfg { heartbeat: Some(Duration::from_millis(100)), ..fast_retry() };
+    let kv = DistKVStore::connect_with(
+        server.addr(),
+        0,
+        1,
+        Consistency::Sequential,
+        engine.clone(),
+        cfg,
+        None,
+    )
+    .unwrap();
+    // Machine 1 never connects; its join grace lapses mid-barrier.  The
+    // init may already observe the poisoned state on a slow runner, so
+    // only the barrier's outcome is asserted.
+    let _ = kv.init("w", &NDArray::from_vec_on(&[2], vec![1.0, 2.0], engine.clone()));
+    let err = kv.barrier().unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("lease"), "unexpected error: {msg}");
+    assert!(server.lease_expiries() >= 1);
+    server.shutdown();
+}
+
+/// Under `ExpiryPolicy::Degrade` the survivors finish the job: the dead
+/// machine's expiry emits a leave event, pending rounds apply without
+/// it, and the remaining machine trains to completion.
+#[test]
+fn elastic_degrade_survivor_completes_after_peer_death() {
+    let scfg = ServerConfig {
+        lease: Some(Duration::from_millis(600)),
+        join_grace: Duration::from_millis(5000),
+        expiry: ExpiryPolicy::Degrade,
+        ..ServerConfig::default()
+    };
+    let mut server = PsServer::start_with(0, 2, updater(2), scfg).unwrap();
+    let addr = server.addr();
+    // Machine 1 joins (registering its lease) and dies silently.
+    {
+        let engine = create(EngineKind::Threaded, 2);
+        let kv = DistKVStore::connect_with(
+            addr,
+            1,
+            1,
+            Consistency::Sequential,
+            engine,
+            fast_retry(),
+            None,
+        )
+        .unwrap();
+        drop(kv);
+    }
+    // Machine 0 heartbeats through the peer's expiry: its first pull
+    // parks until the lease lapses, then every round applies solo.
+    let cfg = RetryCfg { heartbeat: Some(Duration::from_millis(150)), ..fast_retry() };
+    let (acc, _, _) = train_machine(addr, 0, 1, cfg, None);
+    assert!(acc > 0.5, "survivor failed to learn: {acc}");
+    assert!(server.lease_expiries() >= 1, "the dead peer never expired");
+    assert!(
+        server.membership_events().contains(&(1, false)),
+        "no leave event: {:?}",
+        server.membership_events()
+    );
+    assert!(server.rounds_applied() > 0, "no rounds applied by the survivor");
+    server.shutdown();
+}
+
+fn mk_elastic_trainer(engine: EngineRef) -> DataParallelTrainer {
+    let model = mlp(&[32], 16, 4);
+    let shapes = model.param_shapes(8).unwrap();
+    let store = Arc::new(LocalKVStore::new(
+        engine.clone(),
+        4,
+        Arc::new(Sgd::with_momentum(0.5, 0.9, 1e-4).rescale(0.25)),
+        Consistency::Sequential,
+    ));
+    DataParallelTrainer::bind(
+        &model.symbol,
+        engine,
+        8,
+        &[16],
+        &shapes,
+        store,
+        TrainerConfig {
+            devices: 4,
+            shards: 4,
+            sync: SyncMode::Elastic,
+            weights: vec![],
+            seed: 1,
+            overlap: true,
+            bind: BindConfig::default(),
+        },
+    )
+    .unwrap()
+}
+
+fn mk_elastic_iter(engine: EngineRef) -> ArrayDataIter {
+    let ds = synth::class_clusters(512, 4, 16, 0.3, 5);
+    ArrayDataIter::new(ds.features, ds.labels, &[16], 32, true, engine)
+}
+
+/// A killed elastic run restored from its checkpoint reproduces the
+/// uninterrupted run's weights bitwise: parameters, versions, momentum
+/// state, the applied-event log, and the still-pending rejoin all ride
+/// in the checkpoint; the data iterator replays its shuffle schedule by
+/// resetting once per completed epoch.
+#[test]
+fn checkpoint_restore_reproduces_uninterrupted_elastic_run_bitwise() {
+    let engine = create(EngineKind::Threaded, 4);
+    // Uninterrupted reference: 4 epochs (64 rounds), device 3 leaves at
+    // round 5 and rejoins at round 40 — one event on each side of the
+    // epoch-2 checkpoint boundary.
+    let mut full = mk_elastic_trainer(engine.clone());
+    full.leave_at(5, 3).unwrap();
+    full.join_at(40, 3).unwrap();
+    let mut iter = mk_elastic_iter(engine.clone());
+    full.fit(&mut iter, 4).unwrap();
+    let reference = full.pull_params().unwrap();
+
+    // Interrupted twin: 2 epochs, checkpoint, crash (drop everything).
+    let dir = std::env::temp_dir().join(format!("mixnet_ft_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("elastic.ckpt");
+    {
+        let mut t = mk_elastic_trainer(engine.clone());
+        t.leave_at(5, 3).unwrap();
+        t.join_at(40, 3).unwrap();
+        let mut iter = mk_elastic_iter(engine.clone());
+        t.fit(&mut iter, 2).unwrap();
+        t.save_checkpoint(&path, 2).unwrap();
+    }
+
+    // Recovery: a fresh store + trainer, restored from disk.  The
+    // rejoin at round 40 was still pending at the crash and must fire
+    // during the resumed epochs.
+    let mut resumed = mk_elastic_trainer(engine.clone());
+    let done = resumed.resume_from(&path).unwrap();
+    assert_eq!(done, 2, "epochs_done must round-trip");
+    let mut iter = mk_elastic_iter(engine);
+    for _ in 0..done {
+        iter.reset(); // replay the finished epochs' shuffles
+    }
+    resumed.fit(&mut iter, 2).unwrap();
+    assert_params_bitwise_eq(&reference, &resumed.pull_params().unwrap());
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -186,12 +186,26 @@ fn prop_wire_roundtrip() {
             let key: String =
                 (0..rng.below(20)).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
             let value: Vec<f32> = (0..rng.below(64)).map(|_| rng.uniform(-1e6, 1e6)).collect();
-            match rng.below(6) {
+            match rng.below(9) {
                 0 => Msg::Init { key, value },
-                1 => Msg::Push { key, value, machine: rng.below(1024) as u32 },
+                1 => Msg::Push {
+                    key,
+                    value,
+                    machine: rng.below(1024) as u32,
+                    seq: rng.next_u64(),
+                },
                 2 => Msg::Pull { key, after_version: rng.next_u64() },
                 3 => Msg::Value { key, value, version: rng.next_u64() },
                 4 => Msg::Barrier { id: rng.next_u64(), machine: rng.below(64) as u32 },
+                5 => Msg::Hello { machine: rng.below(1024) as u32 },
+                6 => Msg::Heartbeat { machine: rng.below(1024) as u32 },
+                7 => Msg::StatsReply {
+                    msgs: rng.next_u64(),
+                    bytes: rng.next_u64(),
+                    dedup_hits: rng.next_u64(),
+                    lease_expiries: rng.next_u64(),
+                    applies: rng.next_u64(),
+                },
                 _ => Msg::Err { msg: key },
             }
         },
@@ -218,6 +232,7 @@ fn prop_wire_fuzz_no_panic() {
                 key: "weights".into(),
                 value: vec![1.0; 16],
                 machine: 3,
+                seq: 42,
             });
             for _ in 0..1 + rng.below(8) {
                 let i = rng.below(enc.len());

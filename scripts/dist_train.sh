@@ -14,6 +14,12 @@
 # Knobs: QUICK, BENCH_OUT, PORT (base port, default 9731), MODEL,
 # EXAMPLES (per worker), EPOCHS, BATCH (global batch per worker),
 # DEVICES (local replicas per worker), CONSISTENCY (seq|bounded:K|eventual).
+#
+# CHAOS=1 appends a crash-elastic round: 3 workers against a server with
+# degrade-on-expiry leases, one worker killed -9 mid-run.  The survivors
+# must finish (exit 0), the server must log the victim's leave event,
+# and the degraded images/sec lands in BENCH_dist.json.  Extra knobs:
+# CHAOS_EXAMPLES, CHAOS_EPOCHS.
 
 set -euo pipefail
 
@@ -100,6 +106,72 @@ for n in $WORKER_COUNTS; do
   records="$records
     {\"name\": \"dist_train.epoch\", \"case\": \"${n}workers\", \"n\": $n, \"wall_s\": $wall, \"images\": $images, \"images_per_sec\": $ips}"
 done
+
+if [ "${CHAOS:-0}" = "1" ]; then
+  n=3
+  port=$((PORT + 50))
+  if [ "$QUICK" = "1" ]; then
+    chaos_examples="${CHAOS_EXAMPLES:-1024}"
+    chaos_epochs="${CHAOS_EPOCHS:-2}"
+  else
+    chaos_examples="${CHAOS_EXAMPLES:-2048}"
+    chaos_epochs="${CHAOS_EPOCHS:-4}"
+  fi
+  chaos_log="$(mktemp)"
+  echo "== chaos: $n workers, kill -9 one mid-run (port $port) =="
+  PALLAS_KV_LEASE_MS=1500 PALLAS_KV_LEASE_POLICY=degrade \
+    "$BIN" server --port "$port" --machines "$n" --lr 0.2 >/dev/null 2>"$chaos_log" &
+  server_pid=$!
+  trap 'kill "$server_pid" 2>/dev/null || true' EXIT
+  wait_for_port "$port"
+
+  t0="$(now_s)"
+  worker_pids=""
+  for m in $(seq 0 $((n - 1))); do
+    PALLAS_KV_HEARTBEAT_MS=300 "$BIN" worker \
+      --server "127.0.0.1:$port" --machine "$m" \
+      --model "$MODEL" --epochs "$chaos_epochs" --batch "$BATCH" \
+      --examples "$chaos_examples" --devices "$DEVICES" \
+      --consistency "$CONSISTENCY" >/dev/null &
+    worker_pids="$worker_pids $!"
+  done
+  set -- $worker_pids
+  victim="$3"
+  sleep 1
+  echo "   kill -9 worker 2 (pid $victim)"
+  kill -9 "$victim" 2>/dev/null || true
+  fail=0
+  for pid in $1 $2; do
+    wait "$pid" || fail=1
+  done
+  wait "$victim" 2>/dev/null || true
+  t1="$(now_s)"
+  # let the lease checker log the leave before stopping the server
+  sleep 2
+  kill "$server_pid" 2>/dev/null || true
+  wait "$server_pid" 2>/dev/null || true
+  trap - EXIT
+  if [ "$fail" -ne 0 ]; then
+    echo "a surviving worker failed under chaos" >&2
+    cat "$chaos_log" >&2
+    exit 1
+  fi
+  if ! grep -q "leaves" "$chaos_log"; then
+    echo "server never logged the killed worker's leave event" >&2
+    cat "$chaos_log" >&2
+    exit 1
+  fi
+  grep "lease expired" "$chaos_log" || true
+
+  wall="$(awk -v a="$t0" -v b="$t1" 'BEGIN { printf "%.3f", b - a }')"
+  images=$(((n - 1) * chaos_examples * chaos_epochs))
+  ips="$(awk -v i="$images" -v w="$wall" 'BEGIN { printf "%.1f", i / w }')"
+  echo "   chaos: ${wall}s wall, $images survivor images -> $ips img/s (degraded)"
+  [ -n "$records" ] && records="$records,"
+  records="$records
+    {\"name\": \"dist_train.chaos\", \"case\": \"3workers_kill1\", \"n\": $n, \"wall_s\": $wall, \"images\": $images, \"images_per_sec\": $ips}"
+  rm -f "$chaos_log"
+fi
 
 cat > "$BENCH_OUT" <<EOF
 {
