@@ -51,6 +51,25 @@ pub struct TrainState {
     pub pending_events: Vec<(u64, u32, u8)>,
 }
 
+/// Write `bytes` to `path` atomically: a temp file in the same
+/// directory is written, synced, and renamed over the target.  A crash
+/// (or kill -9) mid-save therefore never truncates the previous good
+/// checkpoint — the exact fault the crash-recovery path depends on.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp_name);
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e.into());
+    }
+    Ok(())
+}
+
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
@@ -112,9 +131,7 @@ pub fn save_train_state(path: impl AsRef<Path>, st: &TrainState) -> Result<()> {
     }
     put_events(&mut buf, &st.applied_events);
     put_events(&mut buf, &st.pending_events);
-    let mut f = std::fs::File::create(path)?;
-    f.write_all(&buf)?;
-    Ok(())
+    write_atomic(path.as_ref(), &buf)
 }
 
 struct TrainCursor {
@@ -265,9 +282,7 @@ pub fn save(path: impl AsRef<Path>, params: &HashMap<String, NDArray>) -> Result
             buf.extend_from_slice(&x.to_le_bytes());
         }
     }
-    let mut f = std::fs::File::create(path)?;
-    f.write_all(&buf)?;
-    Ok(())
+    write_atomic(path.as_ref(), &buf)
 }
 
 /// Load a checkpoint into new arrays on `engine`.
@@ -449,6 +464,32 @@ mod tests {
         std::fs::write(&p, &b).unwrap();
         assert!(load_train_state(&p).is_err());
         std::fs::remove_file(p).ok();
+    }
+
+    /// Saves go through a temp-file + rename, so overwriting an existing
+    /// checkpoint can never truncate it in place (a crash mid-save
+    /// leaves the previous good file), and stale temp files from a
+    /// crashed earlier save are harmless.
+    #[test]
+    fn save_train_state_is_atomic_overwrite() {
+        let p = tmp("atomic");
+        let mut tmp_name = p.as_os_str().to_os_string();
+        tmp_name.push(".tmp");
+        let tmp_path = std::path::PathBuf::from(tmp_name);
+        let a = TrainState {
+            params: vec![("w".into(), vec![2], vec![1.0, 2.0])],
+            versions: vec![("w".into(), 1)],
+            step: 1,
+            ..TrainState::default()
+        };
+        save_train_state(&p, &a).unwrap();
+        // a stale temp file left by a crashed save must not interfere
+        std::fs::write(&tmp_path, b"garbage from a crashed save").unwrap();
+        let b = TrainState { step: 2, epochs_done: 1, ..a.clone() };
+        save_train_state(&p, &b).unwrap();
+        assert_eq!(load_train_state(&p).unwrap(), b);
+        assert!(!tmp_path.exists(), "temp file must be renamed over the target");
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

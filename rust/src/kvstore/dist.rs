@@ -12,7 +12,11 @@
 //!
 //! Fault tolerance: every RPC runs under a deadline and a retry loop with
 //! capped exponential backoff + jitter; a failed attempt tears the
-//! connection down and redials (re-announcing the machine with `Hello`).
+//! connection down and redials, re-announcing the machine with `Hello`
+//! (the `HelloAck` reply fast-forwards the local push-seq and barrier
+//! counters above the server's floors, so a restarted worker process
+//! rejoins cleanly instead of colliding with the dedup state its dead
+//! incarnation left behind).
 //! Retries are idempotent — pushes carry per-machine monotonic sequence
 //! numbers and the server deduplicates, barriers are idempotent by
 //! (id, machine), and pulls/inits are naturally re-executable.  Errors
@@ -153,8 +157,13 @@ struct KeyState {
 }
 
 /// Does `reply` pair with `req`?  A mismatch means the stream desynced
-/// (e.g. a duplicated frame left a stale reply queued) — the connection
-/// is torn down and the RPC retried rather than mis-paired.
+/// — the connection is torn down and the RPC retried rather than
+/// mis-paired.  Desync from duplicated request frames is prevented at
+/// the source: `inject_send` reports how many copies it wrote and
+/// `try_rpc` drains one reply per copy.  `Err` is accepted as a reply to
+/// any request (the server can answer anything with it), but `try_rpc`
+/// tears the connection down before surfacing it so a queued stale `Err`
+/// can never be attributed to a later RPC on the same stream.
 fn reply_matches(req: &Msg, reply: &Msg) -> bool {
     if matches!(reply, Msg::Err { .. }) {
         return true;
@@ -177,6 +186,14 @@ struct Conn {
     /// Machine id announced with `Hello` on every (re)dial — registers
     /// the lease and folds a previously-expired machine back in.
     hello: Option<u32>,
+    /// The store's push-seq counter, fast-forwarded from the `HelloAck`
+    /// floor on every dial so a restarted process never reuses sequence
+    /// numbers the server already dedups on.
+    seq: Arc<AtomicU64>,
+    /// The store's barrier-id counter, fast-forwarded likewise so a
+    /// restarted process does not re-issue already-released barrier ids
+    /// (which would ack without synchronizing).
+    barrier: Arc<AtomicU64>,
     stream: Mutex<Option<TcpStream>>,
     jitter: Mutex<Rng>,
     retries: Arc<AtomicU64>,
@@ -190,6 +207,8 @@ impl Conn {
         cfg: RetryCfg,
         plan: Option<Arc<FaultPlan>>,
         hello: Option<u32>,
+        seq: Arc<AtomicU64>,
+        barrier: Arc<AtomicU64>,
         retries: Arc<AtomicU64>,
         reconnects: Arc<AtomicU64>,
     ) -> Conn {
@@ -199,6 +218,8 @@ impl Conn {
             cfg,
             plan,
             hello,
+            seq,
+            barrier,
             stream: Mutex::new(None),
             jitter: Mutex::new(Rng::seed_from_u64(seed)),
             retries,
@@ -223,7 +244,14 @@ impl Conn {
             s.set_read_timeout(Some(self.cfg.op_timeout)).ok();
             write_msg(&mut s, &Msg::Hello { machine })?;
             match read_msg(&mut s)? {
-                Msg::Ack => {}
+                Msg::HelloAck { seq, barrier } => {
+                    // Resume counters above the server's floors.  On a
+                    // live redial these are no-ops (our counters are
+                    // already past them); on a process restart they jump
+                    // the fresh counters past the dead incarnation's.
+                    self.seq.fetch_max(seq, Ordering::Relaxed);
+                    self.barrier.fetch_max(barrier, Ordering::Relaxed);
+                }
                 other => return Err(Error::kv(format!("hello: unexpected reply {other:?}"))),
             }
         }
@@ -241,8 +269,11 @@ impl Conn {
         Ok(())
     }
 
-    /// One attempt: send through the fault layer, read one reply.  Any
-    /// failure poisons the stream so the next attempt redials.
+    /// One attempt: send through the fault layer, then read one reply
+    /// per frame copy actually written (a duplicated request is answered
+    /// twice — draining the extra reply keeps the stream in sync, so no
+    /// stale reply can be mis-paired with a later RPC).  Any failure
+    /// poisons the stream so the next attempt redials.
     fn try_rpc(&self, msg: &Msg, deadline: Duration) -> Result<Msg> {
         let mut slot = lock(&self.stream);
         if slot.is_none() {
@@ -251,16 +282,36 @@ impl Conn {
         let s = slot.as_mut().ok_or_else(|| Error::kv("not connected"))?;
         s.set_write_timeout(Some(self.cfg.op_timeout)).ok();
         s.set_read_timeout(Some(deadline)).ok();
-        let sent = match &self.plan {
+        let copies = match &self.plan {
             Some(p) => inject_send(s, msg, p, true),
-            None => write_msg(s, msg),
+            None => write_msg(s, msg).map(|()| 1),
         };
-        if let Err(e) = sent {
-            *slot = None;
-            return Err(e);
+        let copies = match copies {
+            Ok(n) => n,
+            Err(e) => {
+                *slot = None;
+                return Err(e);
+            }
+        };
+        // A dropped frame (0 copies) still reads once: the read times
+        // out, the stream is torn down, and the retry loop redials.
+        let mut reply = read_msg(s);
+        for _ in 1..copies {
+            if reply.is_err() {
+                break;
+            }
+            reply = read_msg(s); // drain the duplicate's reply; keep the last
         }
-        match read_msg(s) {
-            Ok(reply) if reply_matches(msg, &reply) => Ok(reply),
+        match reply {
+            Ok(reply) if reply_matches(msg, &reply) => {
+                if matches!(reply, Msg::Err { .. }) {
+                    // Semantic error: surface it, but start the next RPC
+                    // on a fresh stream so a desynced/stale Err can never
+                    // leak into a later request's reply slot.
+                    *slot = None;
+                }
+                Ok(reply)
+            }
             Ok(reply) => {
                 *slot = None;
                 Err(Error::kv(format!("desynced reply {reply:?} to {msg:?}")))
@@ -330,10 +381,14 @@ pub struct DistKVStore {
     /// Separate connection for barriers so a parked barrier cannot block
     /// in-flight pull replies.
     barrier_conn: Arc<Conn>,
-    barrier_round: Mutex<u64>,
+    /// Barrier-id counter (shared with the connections so `HelloAck` can
+    /// fast-forward it past already-released generations on redial).
+    barrier_round: Arc<AtomicU64>,
     /// Per-machine monotonic sequence number stamped on every level-2
-    /// push (the server's dedup key for retried frames).
-    seq: AtomicU64,
+    /// push (the server's dedup key for retried frames); shared with the
+    /// connections so `HelloAck` can fast-forward it above the server's
+    /// floor when this process is a restart of a dead worker.
+    seq: Arc<AtomicU64>,
     /// First error raised inside an engine-scheduled push/pull op; taken
     /// and returned by the next public store call.
     async_err: Arc<Mutex<Option<Error>>>,
@@ -384,11 +439,15 @@ impl DistKVStore {
     ) -> Result<DistKVStore> {
         let retries = Arc::new(AtomicU64::new(0));
         let reconnects = Arc::new(AtomicU64::new(0));
+        let seq = Arc::new(AtomicU64::new(0));
+        let barrier_round = Arc::new(AtomicU64::new(0));
         let conn = Arc::new(Conn::new(
             addr,
             cfg,
             plan.clone(),
             Some(machine),
+            Arc::clone(&seq),
+            Arc::clone(&barrier_round),
             Arc::clone(&retries),
             Arc::clone(&reconnects),
         ));
@@ -400,6 +459,8 @@ impl DistKVStore {
             cfg,
             plan,
             Some(machine),
+            Arc::clone(&seq),
+            Arc::clone(&barrier_round),
             Arc::clone(&retries),
             Arc::clone(&reconnects),
         ));
@@ -423,8 +484,8 @@ impl DistKVStore {
             keys: Mutex::new(HashMap::new()),
             conn,
             barrier_conn,
-            barrier_round: Mutex::new(0),
-            seq: AtomicU64::new(0),
+            barrier_round,
+            seq,
             async_err: Arc::new(Mutex::new(None)),
             retries,
             reconnects,
@@ -477,15 +538,12 @@ impl DistKVStore {
         }
     }
 
-    /// Epoch barrier across machines (round-robin id; retransmissions
-    /// after a lost ack are idempotent server-side).
+    /// Epoch barrier across machines (monotonic id; retransmissions
+    /// after a lost ack are idempotent server-side, and a restarted
+    /// process resumes ids above the server's released floor).
     pub fn barrier(&self) -> Result<()> {
         self.take_async_err()?;
-        let id = {
-            let mut r = lock(&self.barrier_round);
-            *r += 1;
-            *r
-        };
+        let id = self.barrier_round.fetch_add(1, Ordering::Relaxed) + 1;
         match self.barrier_conn.rpc_park(&Msg::Barrier { id, machine: self.machine })? {
             Msg::Ack => Ok(()),
             other => Err(Error::kv(format!("barrier: unexpected reply {other:?}"))),

@@ -205,19 +205,23 @@ impl FaultPlan {
 /// sequence number), replies must not be (a doubled reply would desync
 /// the client's request/reply framing rather than model a network fault).
 ///
-/// An `Err` return means the connection must be treated as dead.
+/// Returns the number of complete copies of the frame actually written
+/// (0 = dropped, 2 = duplicated): the peer will answer each copy, so the
+/// sender must read exactly that many replies to keep the stream in
+/// sync.  An `Err` return means the connection must be treated as dead.
 pub fn inject_send<W: Write>(
     w: &mut W,
     msg: &Msg,
     plan: &FaultPlan,
     allow_dup: bool,
-) -> Result<()> {
+) -> Result<usize> {
     let frame = encode(msg);
     let nth = plan.sent.fetch_add(1, Ordering::Relaxed) + 1;
     let kill = plan.kill_every > 0 && nth % plan.kill_every == 0;
-    match plan.decide() {
+    let copies = match plan.decide() {
         Decision::Drop => {
             plan.drops.fetch_add(1, Ordering::Relaxed);
+            0
         }
         Decision::Trunc => {
             plan.truncs.fetch_add(1, Ordering::Relaxed);
@@ -231,23 +235,26 @@ pub fn inject_send<W: Write>(
             w.write_all(&frame)?;
             w.write_all(&frame)?;
             w.flush()?;
+            2
         }
         Decision::Delay => {
             plan.delays.fetch_add(1, Ordering::Relaxed);
             std::thread::sleep(plan.delay);
             w.write_all(&frame)?;
             w.flush()?;
+            1
         }
         Decision::Deliver | Decision::Dup => {
             w.write_all(&frame)?;
             w.flush()?;
+            1
         }
-    }
+    };
     if kill {
         plan.kills.fetch_add(1, Ordering::Relaxed);
         return Err(Error::kv("fault: connection killed"));
     }
-    Ok(())
+    Ok(copies)
 }
 
 #[cfg(test)]

@@ -22,7 +22,11 @@
 //! under [`ExpiryPolicy::Degrade`] the machine is removed from the active
 //! set, in-flight rounds and barriers are re-evaluated against the
 //! survivors, and training continues (elastic semantics).  A rejoining
-//! machine announces itself with `Hello` and is folded back in.
+//! machine announces itself with `Hello` and is folded back in: its
+//! stale pending queue is dropped and the `HelloAck` reply carries the
+//! machine's push-seq and released-barrier high-water marks, so a
+//! restarted process (local counters back at 0) resumes numbering above
+//! them instead of colliding with the dedup floors.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::ErrorKind;
@@ -132,6 +136,12 @@ struct MachineState {
     joined: bool,
     /// Is it part of the active set (rounds + barriers wait on it)?
     active: bool,
+    /// Highest push sequence number ever received from this machine —
+    /// the resume floor returned in `HelloAck` so a restarted worker
+    /// (whose local counter is back at 0) numbers its pushes above every
+    /// seq the dead incarnation used instead of colliding with the
+    /// per-key dedup floors.
+    max_seq: u64,
 }
 
 struct ServerState {
@@ -145,6 +155,10 @@ struct ServerState {
     fault: Option<String>,
     /// Join/leave log, in the order the server observed them.
     membership: Vec<(u32, bool)>,
+    /// Highest barrier id ever released — the resume floor returned in
+    /// `HelloAck` so a restarted worker's barrier counter fast-forwards
+    /// past generations that would otherwise ack without synchronizing.
+    barrier_hwm: u64,
 }
 
 struct Shared {
@@ -191,7 +205,7 @@ impl PsServer {
         let num_machines = num_machines.max(1);
         let now = Instant::now();
         let machines = (0..num_machines)
-            .map(|_| MachineState { last_seen: now, joined: false, active: true })
+            .map(|_| MachineState { last_seen: now, joined: false, active: true, max_seq: 0 })
             .collect();
         let shared = Arc::new(Shared {
             state: Mutex::new(ServerState {
@@ -201,6 +215,7 @@ impl PsServer {
                 machines,
                 fault: None,
                 membership: Vec::new(),
+                barrier_hwm: 0,
             }),
             cv: Condvar::new(),
             updater,
@@ -380,17 +395,31 @@ fn release_ready_barriers(st: &mut ServerState) -> bool {
         if ready {
             st.barriers.remove(&id);
             *st.barrier_gen.entry(id).or_insert(0) += 1;
+            st.barrier_hwm = st.barrier_hwm.max(id);
             released = true;
         }
     }
     released
 }
 
-/// Refresh a machine's lease on any inbound traffic from it.
-fn touch(st: &mut ServerState, machine: u32, num_machines: usize) {
-    let m = machine as usize % num_machines;
+/// Refresh a machine's lease on any inbound traffic from it.  `m` must
+/// already be validated against `num_machines` (see [`check_machine`]).
+fn touch(st: &mut ServerState, m: usize) {
     st.machines[m].last_seen = Instant::now();
     st.machines[m].joined = true;
+}
+
+/// Validate a wire machine id.  Out-of-range ids are rejected with an
+/// error rather than wrapped: a misconfigured worker must not alias
+/// another machine's lease, dedup floor, or pending queue.
+fn check_machine(machine: u32, num_machines: usize) -> std::result::Result<usize, Msg> {
+    let m = machine as usize;
+    if m >= num_machines {
+        return Err(Msg::Err {
+            msg: format!("machine id {machine} out of range (num_machines={num_machines})"),
+        });
+    }
+    Ok(m)
 }
 
 /// Expire machines whose lease lapsed (runs on the accept thread).
@@ -444,7 +473,7 @@ fn check_leases(shared: &Shared) {
 /// when the connection must be torn down.
 fn send_reply(w: &mut TcpStream, msg: &Msg, plan: &Option<Arc<FaultPlan>>) -> bool {
     let res = match plan {
-        Some(p) => inject_send(w, msg, p, false),
+        Some(p) => inject_send(w, msg, p, false).map(|_| ()),
         None => write_msg(w, msg),
     };
     res.is_ok()
@@ -503,12 +532,21 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
             }
             Msg::Push { key, value, machine, seq } => {
                 shared.bytes_in.fetch_add(4 * value.len() as u64, Ordering::Relaxed);
+                let m = match check_machine(machine, shared.num_machines) {
+                    Ok(m) => m,
+                    Err(reply) => {
+                        if !send_reply(&mut writer, &reply, &plan) {
+                            return;
+                        }
+                        continue;
+                    }
+                };
                 let mut st = lock(&shared.state);
-                touch(&mut st, machine, shared.num_machines);
+                touch(&mut st, m);
+                st.machines[m].max_seq = st.machines[m].max_seq.max(seq);
                 let reply = if let Some(f) = st.fault.clone() {
                     Msg::Err { msg: f }
                 } else {
-                    let m = machine as usize % shared.num_machines;
                     match st.keys.get_mut(&key) {
                         None => Msg::Err { msg: format!("unknown key '{key}'") },
                         Some(ks) => {
@@ -586,8 +624,17 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
                 }
             }
             Msg::Barrier { id, machine } => {
+                let m = match check_machine(machine, shared.num_machines) {
+                    Ok(m) => m,
+                    Err(reply) => {
+                        if !send_reply(&mut writer, &reply, &plan) {
+                            return;
+                        }
+                        continue;
+                    }
+                };
                 let mut st = lock(&shared.state);
-                touch(&mut st, machine, shared.num_machines);
+                touch(&mut st, m);
                 if let Some(f) = st.fault.clone() {
                     drop(st);
                     if !send_reply(&mut writer, &Msg::Err { msg: f }, &plan) {
@@ -632,23 +679,51 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
                 }
             }
             Msg::Hello { machine } => {
+                let m = match check_machine(machine, shared.num_machines) {
+                    Ok(m) => m,
+                    Err(reply) => {
+                        if !send_reply(&mut writer, &reply, &plan) {
+                            return;
+                        }
+                        continue;
+                    }
+                };
                 let mut st = lock(&shared.state);
-                let m = machine as usize % shared.num_machines;
-                st.machines[m].last_seen = Instant::now();
-                st.machines[m].joined = true;
+                touch(&mut st, m);
                 if !st.machines[m].active {
+                    // Rejoin after a lease expiry: the old incarnation is
+                    // gone, so drop any gradients it left queued — the
+                    // new incarnation starts its rounds fresh (its seq
+                    // floor is preserved in `max_seq`, which already
+                    // covers every queued seq).
                     st.machines[m].active = true;
+                    for ks in st.keys.values_mut() {
+                        ks.pending[m].clear();
+                    }
                     st.membership.push((machine, true));
                     eprintln!("[mixnet-ps] machine {machine} rejoins");
                 }
+                let reply = Msg::HelloAck {
+                    seq: st.machines[m].max_seq,
+                    barrier: st.barrier_hwm,
+                };
                 drop(st);
-                if !send_reply(&mut writer, &Msg::Ack, &plan) {
+                if !send_reply(&mut writer, &reply, &plan) {
                     return;
                 }
             }
             Msg::Heartbeat { machine } => {
+                let m = match check_machine(machine, shared.num_machines) {
+                    Ok(m) => m,
+                    Err(reply) => {
+                        if !send_reply(&mut writer, &reply, &plan) {
+                            return;
+                        }
+                        continue;
+                    }
+                };
                 let mut st = lock(&shared.state);
-                touch(&mut st, machine, shared.num_machines);
+                touch(&mut st, m);
                 drop(st);
                 if !send_reply(&mut writer, &Msg::Ack, &plan) {
                     return;
@@ -918,6 +993,114 @@ mod tests {
         }
         assert_eq!(srv.lease_expiries(), 1);
         assert_eq!(srv.membership_events(), vec![(1, false)]);
+    }
+
+    /// `Hello` answers with the machine's push-seq and released-barrier
+    /// high-water marks, so a restarted worker (local counters back at
+    /// 0) resumes numbering above the server's dedup floors instead of
+    /// having every push silently swallowed as a retransmission.
+    #[test]
+    fn hello_ack_reports_resume_floors() {
+        let srv = PsServer::start(
+            0,
+            1,
+            ServerUpdater { lr: 1.0, momentum: 0.0, weight_decay: 0.0, rescale: 1.0 },
+        )
+        .unwrap();
+        let mut c = connect(srv.addr());
+        assert_eq!(rpc(&mut c, &Msg::Hello { machine: 0 }), Msg::HelloAck { seq: 0, barrier: 0 });
+        rpc(&mut c, &Msg::Init { key: "w".into(), value: vec![0.0] });
+        rpc(&mut c, &push("w", vec![1.0], 0, 1));
+        rpc(&mut c, &push("w", vec![1.0], 0, 2));
+        rpc(&mut c, &Msg::Barrier { id: 1, machine: 0 });
+        // "kill -9 + restart": a fresh connection's Hello reports the
+        // floors the dead incarnation reached.
+        let mut c2 = connect(srv.addr());
+        assert_eq!(rpc(&mut c2, &Msg::Hello { machine: 0 }), Msg::HelloAck { seq: 2, barrier: 1 });
+        // A push at the floor is still a retransmission; one above it is
+        // fresh work and must apply.
+        assert_eq!(rpc(&mut c2, &push("w", vec![1.0], 0, 2)), Msg::Ack);
+        assert_eq!(srv.dedup_hits(), 1);
+        assert_eq!(rpc(&mut c2, &push("w", vec![1.0], 0, 3)), Msg::Ack);
+        assert_eq!(srv.rounds_applied(), 3);
+    }
+
+    /// An out-of-range machine id is rejected with an error instead of
+    /// wrapping onto another machine's lease/dedup/queue state.
+    #[test]
+    fn out_of_range_machine_id_rejected() {
+        let srv = PsServer::start(0, 2, ServerUpdater::default()).unwrap();
+        let mut c = connect(srv.addr());
+        for msg in [
+            push("w", vec![1.0], 2, 1),
+            Msg::Barrier { id: 1, machine: 7 },
+            Msg::Hello { machine: 2 },
+            Msg::Heartbeat { machine: 99 },
+        ] {
+            match rpc(&mut c, &msg) {
+                Msg::Err { msg } => assert!(msg.contains("out of range"), "{msg}"),
+                other => panic!("{other:?}"),
+            }
+        }
+        // no state was touched on behalf of machine 0 or 1
+        assert_eq!(srv.dedup_hits(), 0);
+        assert_eq!(srv.membership_events(), vec![]);
+    }
+
+    /// After a degrade-policy expiry, rejoining drops the dead
+    /// incarnation's queued pushes: the next round pairs the survivors
+    /// with the NEW incarnation's gradient, not a stale one.
+    #[test]
+    fn rejoin_clears_stale_backlog() {
+        let cfg = ServerConfig {
+            lease: Some(Duration::from_millis(400)),
+            join_grace: Duration::from_millis(800),
+            expiry: ExpiryPolicy::Degrade,
+            fault: None,
+        };
+        let srv = PsServer::start_with(
+            0,
+            2,
+            ServerUpdater { lr: 1.0, momentum: 0.0, weight_decay: 0.0, rescale: 1.0 },
+            cfg,
+        )
+        .unwrap();
+        let mut c0 = connect(srv.addr());
+        let mut c1 = connect(srv.addr());
+        rpc(&mut c0, &Msg::Hello { machine: 0 });
+        rpc(&mut c1, &Msg::Hello { machine: 1 });
+        rpc(&mut c0, &Msg::Init { key: "w".into(), value: vec![0.0] });
+        // machine 1 queues a push that never completes a round, then
+        // dies silently; machine 0 heartbeats through the expiry.
+        rpc(&mut c1, &push("w", vec![5.0], 1, 1));
+        for _ in 0..200 {
+            if srv.lease_expiries() >= 1 {
+                break;
+            }
+            rpc(&mut c0, &Msg::Heartbeat { machine: 0 });
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        assert_eq!(srv.lease_expiries(), 1, "machine 1 never expired");
+        // restart of machine 1: rejoin clears the stale queued gradient
+        // and reports the seq floor to resume above.
+        let mut c1b = connect(srv.addr());
+        assert_eq!(
+            rpc(&mut c1b, &Msg::Hello { machine: 1 }),
+            Msg::HelloAck { seq: 1, barrier: 0 }
+        );
+        rpc(&mut c1b, &push("w", vec![2.0], 1, 2));
+        rpc(&mut c0, &push("w", vec![1.0], 0, 1));
+        match rpc(&mut c0, &Msg::Pull { key: "w".into(), after_version: 1 }) {
+            Msg::Value { value, .. } => {
+                assert_eq!(value, vec![-3.0], "round must use the NEW gradient, not the stale 5.0");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(
+            srv.membership_events(),
+            vec![(1, false), (1, true)],
+            "leave + rejoin must both be logged"
+        );
     }
 
     /// Under the fail-round policy an expired lease poisons the server:

@@ -11,9 +11,10 @@ use std::io::{Read, Write};
 
 use crate::error::{Error, Result};
 
-/// Protocol magic + version (v2: Push carries a sequence number; Hello,
-/// Heartbeat and extended StatsReply added).
-pub const WIRE_MAGIC: u32 = 0x6d78_0002;
+/// Protocol magic + version (v3: Hello is answered by HelloAck carrying
+/// the machine's resume floors; v2 added Push sequence numbers, Hello,
+/// Heartbeat and the extended StatsReply).
+pub const WIRE_MAGIC: u32 = 0x6d78_0003;
 
 /// Hard ceiling on a frame body; `read_msg` rejects larger declared
 /// lengths before allocating the receive buffer.
@@ -100,6 +101,20 @@ pub enum Msg {
         /// Sender machine id.
         machine: u32,
     },
+    /// Reply to [`Msg::Hello`]: the floors a (re)connecting client must
+    /// resume its counters above.  A restarted worker process starts its
+    /// local counters at 0; without these floors its pushes would all
+    /// land at or below the server's dedup floor (silently dropped as
+    /// retransmissions) and its barriers would hit already-released
+    /// generations (acked without synchronizing).
+    HelloAck {
+        /// Highest push sequence number the server has seen from this
+        /// machine; the client's next push must use a larger seq.
+        seq: u64,
+        /// Highest barrier id the server has released; the client's next
+        /// barrier must use a larger id.
+        barrier: u64,
+    },
 }
 
 impl Msg {
@@ -117,6 +132,7 @@ impl Msg {
             Msg::StatsReply { .. } => 9,
             Msg::Hello { .. } => 10,
             Msg::Heartbeat { .. } => 11,
+            Msg::HelloAck { .. } => 12,
         }
     }
 }
@@ -218,6 +234,10 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
         Msg::Hello { machine } | Msg::Heartbeat { machine } => {
             body.extend_from_slice(&machine.to_le_bytes());
         }
+        Msg::HelloAck { seq, barrier } => {
+            body.extend_from_slice(&seq.to_le_bytes());
+            body.extend_from_slice(&barrier.to_le_bytes());
+        }
     }
     let mut out = Vec::with_capacity(12 + body.len());
     out.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
@@ -250,6 +270,7 @@ pub fn decode(body: &[u8]) -> Result<Msg> {
         },
         10 => Msg::Hello { machine: c.u32()? },
         11 => Msg::Heartbeat { machine: c.u32()? },
+        12 => Msg::HelloAck { seq: c.u64()?, barrier: c.u64()? },
         other => return Err(Error::kv(format!("wire: unknown opcode {other}"))),
     })
 }
@@ -310,6 +331,7 @@ mod tests {
         });
         roundtrip(Msg::Hello { machine: 2 });
         roundtrip(Msg::Heartbeat { machine: 0 });
+        roundtrip(Msg::HelloAck { seq: 57, barrier: 12 });
     }
 
     #[test]

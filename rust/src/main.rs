@@ -343,11 +343,23 @@ fn cmd_train(args: &Args) -> Result<()> {
         Some(path) => {
             // Crash-elastic resume: per-epoch checkpoints; an existing
             // file fast-forwards the run (iterator resets replay the
-            // shuffle schedule so the resumed run matches bitwise).
+            // shuffle schedule so the resumed run matches bitwise).  An
+            // unreadable checkpoint (e.g. disk corruption) falls back to
+            // fresh training; validation happens before `resume_from` so
+            // the trainer is never left half-restored.
             let mut done = 0u64;
             if std::path::Path::new(path).exists() {
-                done = trainer.resume_from(path)?;
-                println!("resumed {path}: {done} epoch(s) already done");
+                match mixnet::io::checkpoint::load_train_state(path) {
+                    Ok(_) => {
+                        done = trainer.resume_from(path)?;
+                        println!("resumed {path}: {done} epoch(s) already done");
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "warning: checkpoint {path} unreadable ({e}); starting fresh"
+                        );
+                    }
+                }
             }
             for _ in 0..done {
                 iter.reset();

@@ -220,6 +220,62 @@ fn two_machine_run_with_faults_has_zero_double_applies() {
     assert_params_bitwise_eq(&clean.weights, &faulty.weights);
 }
 
+/// A worker process restarted from scratch (local seq/barrier counters
+/// back at zero) resumes cleanly: the `HelloAck` floors fast-forward its
+/// counters past the dead incarnation's, so fresh pushes apply instead
+/// of being swallowed by the server's dedup filter and fresh barriers
+/// are new generations instead of instant acks against released ones.
+#[test]
+fn restarted_worker_process_resumes_via_hello_floors() {
+    let mut server = PsServer::start_with(0, 1, updater(1), ServerConfig::default()).unwrap();
+    let addr = server.addr();
+    let engine = create(EngineKind::Threaded, 2);
+    // First incarnation: three rounds + a barrier, then kill (drop).
+    {
+        let kv = DistKVStore::connect_with(
+            addr,
+            0,
+            1,
+            Consistency::Sequential,
+            engine.clone(),
+            fast_retry(),
+            None,
+        )
+        .unwrap();
+        kv.init("w", &NDArray::zeros_on(&[1], engine.clone())).unwrap();
+        for _ in 0..3 {
+            kv.push("w", &NDArray::from_vec_on(&[1], vec![1.0], engine.clone()), 0).unwrap();
+        }
+        kv.flush();
+        kv.barrier().unwrap();
+    }
+    assert_eq!(server.rounds_applied(), 3);
+    // Second incarnation: same machine id, fresh counters.
+    let kv = DistKVStore::connect_with(
+        addr,
+        0,
+        1,
+        Consistency::Sequential,
+        engine.clone(),
+        fast_retry(),
+        None,
+    )
+    .unwrap();
+    kv.init("w", &NDArray::zeros_on(&[1], engine.clone())).unwrap();
+    kv.push("w", &NDArray::from_vec_on(&[1], vec![1.0], engine.clone()), 0).unwrap();
+    let out = NDArray::zeros_on(&[1], engine);
+    kv.pull("w", &out, 0).unwrap();
+    kv.flush();
+    kv.barrier().unwrap();
+    assert_eq!(server.rounds_applied(), 4, "the restarted worker's push must apply");
+    assert_eq!(
+        server.dedup_hits(),
+        0,
+        "fresh work after a restart must not be mistaken for retransmissions"
+    );
+    server.shutdown();
+}
+
 /// Under `ExpiryPolicy::FailRound` a machine that never joins poisons
 /// the round: parked barriers error out instead of hanging.
 #[test]

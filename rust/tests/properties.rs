@@ -186,7 +186,7 @@ fn prop_wire_roundtrip() {
             let key: String =
                 (0..rng.below(20)).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
             let value: Vec<f32> = (0..rng.below(64)).map(|_| rng.uniform(-1e6, 1e6)).collect();
-            match rng.below(9) {
+            match rng.below(10) {
                 0 => Msg::Init { key, value },
                 1 => Msg::Push {
                     key,
@@ -199,7 +199,8 @@ fn prop_wire_roundtrip() {
                 4 => Msg::Barrier { id: rng.next_u64(), machine: rng.below(64) as u32 },
                 5 => Msg::Hello { machine: rng.below(1024) as u32 },
                 6 => Msg::Heartbeat { machine: rng.below(1024) as u32 },
-                7 => Msg::StatsReply {
+                7 => Msg::HelloAck { seq: rng.next_u64(), barrier: rng.next_u64() },
+                8 => Msg::StatsReply {
                     msgs: rng.next_u64(),
                     bytes: rng.next_u64(),
                     dedup_hits: rng.next_u64(),
