@@ -22,7 +22,7 @@ use mixnet::engine::{create, EngineKind, EngineRef, PlanOpSpec, RunPlan, VarHand
 use mixnet::executor::{BindConfig, Executor};
 use mixnet::models::mlp;
 use mixnet::ndarray::{pool, NDArray};
-use mixnet::util::bench::{print_table, write_bench_json, BenchRecord, Bencher};
+use mixnet::util::bench::{print_table, standard_meta, write_bench_json, BenchRecord, Bencher};
 use mixnet::util::Rng;
 
 /// Per-op (reads, writes) var sets, in program order.
@@ -295,15 +295,14 @@ fn main() {
 
     print_table("engine microbenchmarks", &["case", "cost"], &rows);
 
-    let meta: Vec<(&str, String)> = vec![
-        ("bench", "engine".to_string()),
-        ("quick", quick.to_string()),
+    let mut meta = standard_meta("engine", quick);
+    meta.extend([
         ("dag", format!("{layers}x{width} noop layered DAG")),
         ("push_ns_per_op", format!("{push_ns:.1}")),
         ("replay_ns_per_op", format!("{replay_ns:.1}")),
         ("replay_speedup_vs_push", format!("{speedup:.2}")),
         ("steady_state_pool_misses_per_step", format!("{misses_per_step:.3}")),
-    ];
+    ]);
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_engine.json".to_string());
     if let Err(e) = write_bench_json(&out, &meta, &records) {
         eprintln!("failed to write {out}: {e}");

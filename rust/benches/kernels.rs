@@ -21,7 +21,7 @@
 //! ```
 
 use mixnet::ndarray::kernels as k;
-use mixnet::util::bench::{print_table, write_bench_json, BenchRecord, Bencher};
+use mixnet::util::bench::{print_table, standard_meta, write_bench_json, BenchRecord, Bencher};
 use mixnet::util::{intra_pool, with_intra_budget, Rng};
 
 fn randv(n: usize, seed: u64) -> Vec<f32> {
@@ -140,14 +140,14 @@ fn main() {
     );
 
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
-    let meta = [
-        ("bench", "kernels".to_string()),
+    let mut meta = standard_meta("kernels", quick);
+    meta.extend([
         ("pool_threads", pool_threads.to_string()),
         (
             "note",
             "blocked GEMM vs seed i-k-j baseline; threads = pinned intra-op budget".to_string(),
         ),
-    ];
+    ]);
     if let Err(e) = write_bench_json(&out, &meta, &records) {
         eprintln!("failed to write {out}: {e}");
     }

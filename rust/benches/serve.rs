@@ -19,7 +19,7 @@ use mixnet::models::servable_mlp;
 use mixnet::module::Module;
 use mixnet::ndarray::NDArray;
 use mixnet::serve::{closed_loop, Servable, ServeConfig, Server};
-use mixnet::util::bench::{print_table, write_bench_json, BenchRecord};
+use mixnet::util::bench::{print_table, standard_meta, write_bench_json, BenchRecord};
 use mixnet::util::Rng;
 
 const IN_DIM: usize = 784;
@@ -167,8 +167,8 @@ fn main() {
     eprintln!("dynamic/batch-1 speedup: {speedup:.2}x (target >= 4x)");
 
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
-    let meta = [
-        ("bench", "serve".to_string()),
+    let mut meta = standard_meta("serve", quick);
+    meta.extend([
         ("model", format!("mlp-{IN_DIM}x128x64x{CLASSES}")),
         ("clients", CLIENTS.to_string()),
         ("per_client", per_client.to_string()),
@@ -181,7 +181,7 @@ fn main() {
              max_delay 2ms; target speedup >= 4x"
                 .to_string(),
         ),
-    ];
+    ]);
     if let Err(e) = write_bench_json(&out, &meta, &records) {
         eprintln!("failed to write {out}: {e}");
     }

@@ -32,7 +32,7 @@ use mixnet::models::mlp;
 use mixnet::module::{DataParallelTrainer, SyncMode, TrainerConfig};
 use mixnet::ndarray::NDArray;
 use mixnet::optimizer::Sgd;
-use mixnet::util::bench::{print_table, write_bench_json, BenchRecord, Bencher};
+use mixnet::util::bench::{print_table, standard_meta, write_bench_json, BenchRecord, Bencher};
 
 const DIM: usize = 256;
 const CLASSES: usize = 8;
@@ -124,13 +124,12 @@ fn main() {
     let threads = default_threads().max(4);
     let mut rows = Vec::new();
     let mut records: Vec<BenchRecord> = Vec::new();
-    let mut meta: Vec<(&str, String)> = vec![
-        ("bench", "train".to_string()),
-        ("quick", quick.to_string()),
+    let mut meta = standard_meta("train", quick);
+    meta.extend([
         ("model", format!("mlp 256-256-128-{CLASSES}")),
         ("global_batch", (SHARDS * SHARD_BATCH).to_string()),
         ("shards", SHARDS.to_string()),
-    ];
+    ]);
 
     // ---- images/sec at devices in {1, 2, 4}, fixed 4-shard math ------
     let mut per_dev: HashMap<usize, f64> = HashMap::new();

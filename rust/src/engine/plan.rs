@@ -408,7 +408,11 @@ impl RunPlan {
         };
         let prev = crate::util::set_intra_budget(budget);
         let step = self.step.load(Ordering::Relaxed);
+        let prof = crate::profile::SpanTimer::start();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (op.body)(step)));
+        // Replay op span: `a` = replay step, `b` = op index — the pair a
+        // well-formedness test uses to assert exactly-once-per-replay.
+        prof.finish(crate::profile::Category::Plan, op.name, 0, step, i as u64);
         crate::util::set_intra_budget(prev);
         if op.heavy {
             heavy_inflight.fetch_sub(1, Ordering::SeqCst);

@@ -32,6 +32,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use super::{Engine, EngineKind, OpFn, RunPlan, VarHandle, VarId, HEAVY_FLOPS};
+use crate::profile::{self, Category, SpanTimer};
 use crate::util::ThreadPool;
 
 /// One queued dependency request: op index + whether it mutates the var.
@@ -82,6 +83,9 @@ struct OpRecord {
     /// thread budget at dispatch time.
     cost: f64,
     name: &'static str,
+    /// Push timestamp (profiling only; 0 when profiling was off at push
+    /// time, in which case the span reports no queue wait).
+    sched_us: u64,
 }
 
 #[derive(Default)]
@@ -204,10 +208,10 @@ impl Inner {
     }
 
     fn dispatch(self: &Arc<Self>, op_idx: usize) {
-        let (func, cost, name) = {
+        let (func, cost, name, sched_us) = {
             let mut state = self.state.lock().unwrap();
             let rec = state.ops[op_idx].as_mut().expect("op alive");
-            (rec.func.take().expect("func present"), rec.cost, rec.name)
+            (rec.func.take().expect("func present"), rec.cost, rec.name, rec.sched_us)
         };
         let heavy = cost >= HEAVY_FLOPS;
         if heavy {
@@ -234,7 +238,14 @@ impl Inner {
                 1
             };
             let prev = crate::util::set_intra_budget(budget);
+            let prof = SpanTimer::start();
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(func));
+            if prof.on() {
+                // queue_us = push→dispatch wait; cost hint rides in `a`.
+                let q = if sched_us > 0 { prof.start_us().saturating_sub(sched_us) } else { 0 };
+                let cost_hint = if cost.is_finite() { cost as u64 } else { 0 };
+                prof.finish(Category::Engine, name, q, cost_hint, 0);
+            }
             crate::util::set_intra_budget(prev);
             if heavy {
                 inner.heavy_inflight.fetch_sub(1, Ordering::SeqCst);
@@ -373,6 +384,9 @@ impl Engine for ThreadedEngine {
         // below needs the lock, keeping the global critical section to
         // Vec indexing.
         let (read_h, write_h) = super::normalize_deps(&read, &write);
+        // Single enabled() load on the disabled path (the overhead
+        // contract); the timestamp feeds the span's queue-wait field.
+        let sched_us = if profile::enabled() { profile::now_us() } else { 0 };
         self.inner.outstanding.fetch_add(1, Ordering::SeqCst);
         let mut ready = Vec::new();
         {
@@ -391,6 +405,7 @@ impl Engine for ThreadedEngine {
                 writes: writes.clone(),
                 cost: cost_flops,
                 name,
+                sched_us,
             };
             let op_idx = if let Some(i) = state.free_ops.pop() {
                 state.ops[i] = Some(rec);

@@ -96,13 +96,18 @@ impl PrefetchIter {
 
 impl DataIter for PrefetchIter {
     fn next_batch(&mut self) -> Option<DataBatch> {
-        loop {
-            let (epoch, item) = self.batch_rx.recv().ok()?;
+        // The span measures how long the consumer blocked on the
+        // prefetch channel — the data-starvation signal in a trace.
+        let prof = crate::profile::SpanTimer::start();
+        let out = loop {
+            let Ok((epoch, item)) = self.batch_rx.recv() else { break None };
             if epoch < self.want_epoch {
                 continue; // stale: produced before the rewind we requested
             }
-            return item;
-        }
+            break item;
+        };
+        prof.finish(crate::profile::Category::Io, "io.prefetch_wait", 0, 0, 0);
+        out
     }
 
     fn reset(&mut self) {

@@ -325,16 +325,19 @@ impl Conn {
 
     /// RPC with retry: transport failures redial with capped exponential
     /// backoff + jitter; a server `Err` reply is semantic and terminal.
+    /// The whole retry loop is one client-RPC span (`a` = attempts
+    /// taken, so redials show up as long spans with `a > 1`).
     fn rpc_deadline(&self, msg: &Msg, deadline: Duration) -> Result<Msg> {
+        let prof = crate::profile::SpanTimer::start();
         let mut attempt = 0u32;
-        loop {
+        let out = loop {
             match self.try_rpc(msg, deadline) {
-                Ok(Msg::Err { msg }) => return Err(Error::kv(format!("server: {msg}"))),
-                Ok(reply) => return Ok(reply),
+                Ok(Msg::Err { msg }) => break Err(Error::kv(format!("server: {msg}"))),
+                Ok(reply) => break Ok(reply),
                 Err(e) => {
                     attempt += 1;
                     if attempt > self.cfg.max_retries {
-                        return Err(Error::kv(format!(
+                        break Err(Error::kv(format!(
                             "rpc failed after {attempt} attempt(s): {e}"
                         )));
                     }
@@ -352,7 +355,10 @@ impl Conn {
                     std::thread::sleep(base + Duration::from_millis(jitter_ms));
                 }
             }
-        }
+        };
+        let name = rpc_span_name(msg);
+        prof.finish(crate::profile::Category::KvClient, name, 0, u64::from(attempt) + 1, 0);
+        out
     }
 
     /// Ordinary RPC (short deadline).
@@ -363,6 +369,21 @@ impl Conn {
     /// RPC that may legitimately park on the server (long deadline).
     fn rpc_park(&self, msg: &Msg) -> Result<Msg> {
         self.rpc_deadline(msg, self.cfg.park_timeout)
+    }
+}
+
+/// Trace-span name for a client RPC, by request kind.
+fn rpc_span_name(msg: &Msg) -> &'static str {
+    match msg {
+        Msg::Init { .. } => "kv.rpc.init",
+        Msg::Push { .. } => "kv.rpc.push",
+        Msg::Pull { .. } => "kv.rpc.pull",
+        Msg::Barrier { .. } => "kv.rpc.barrier",
+        Msg::Stats => "kv.rpc.stats",
+        Msg::Hello { .. } => "kv.rpc.hello",
+        Msg::Heartbeat { .. } => "kv.rpc.heartbeat",
+        Msg::Shutdown => "kv.rpc.shutdown",
+        _ => "kv.rpc.other",
     }
 }
 

@@ -338,6 +338,7 @@ fn round_ready(ks: &KeyState, active: &[bool]) -> bool {
 /// order is deterministic no matter how pushes arrived), apply the
 /// server-side SGD update, and advance the version.
 fn apply_round(upd: &ServerUpdater, ks: &mut KeyState) {
+    let prof = crate::profile::SpanTimer::start();
     let n = ks.weight.len();
     let mut accum = vec![0.0f32; n];
     for m in 0..ks.pending.len() {
@@ -360,6 +361,8 @@ fn apply_round(upd: &ServerUpdater, ks: &mut KeyState) {
         }
     }
     ks.version += 1;
+    // `a` = key length, `b` = resulting version of the applied round.
+    prof.finish(crate::profile::Category::KvServer, "kv.apply_round", 0, n as u64, ks.version);
 }
 
 /// Apply every key round that is ready (cascading: one apply can unblock

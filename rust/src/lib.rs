@@ -54,6 +54,7 @@ pub mod models;
 pub mod module;
 pub mod ndarray;
 pub mod optimizer;
+pub mod profile;
 pub mod runtime;
 pub mod serve;
 pub mod sim;

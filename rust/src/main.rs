@@ -71,6 +71,15 @@ COMMANDS:
   sim          virtual-time Figure 8 replay
                  --machines N  --passes N
   info         version and backend information
+
+OBSERVABILITY (see README 'Observability'):
+  --profile FILE       (train/serve/worker) record a chrome://tracing
+                       timeline to FILE and a metrics snapshot next to it
+                       (PALLAS_PROFILE=FILE does the same)
+  --metrics-every SEC  (train/serve/worker) print a one-line metrics
+                       delta every SEC seconds
+  --stats-every SEC    (server) poll the wire Stats RPC every SEC seconds
+                       and print the server counters
 ";
 
 fn main() {
@@ -92,7 +101,8 @@ const VALUE_KEYS: &[&str] = &[
     "model", "epochs", "batch", "lr", "seed", "classes", "examples", "port", "machines",
     "momentum", "server", "machine", "steps", "artifacts", "mode", "workers", "passes",
     "checkpoint", "clients", "requests", "max-batch", "max-delay-us", "devices", "kv",
-    "consistency", "weights", "lease-ms", "lease-policy",
+    "consistency", "weights", "lease-ms", "lease-policy", "profile", "metrics-every",
+    "stats-every",
 ];
 
 fn run(argv: Vec<String>) -> Result<()> {
@@ -278,6 +288,69 @@ fn parse_consistency(args: &Args) -> Result<Consistency> {
     }
 }
 
+/// Trace destination: `--profile FILE` wins over `PALLAS_PROFILE`.
+/// A `Some` return means profiling was switched on for this run.
+fn trace_path(args: &Args) -> Option<String> {
+    let path = args.options.get("profile").cloned().or_else(mixnet::profile::env_trace_path);
+    if path.is_some() {
+        mixnet::profile::set_enabled(true);
+    }
+    path
+}
+
+/// Write the metrics snapshot next to the trace and print the per-op
+/// aggregate table (the human-readable half of the snapshot).
+fn write_snapshot(trace: &str, snap: &mixnet::profile::MetricsSnapshot) -> Result<()> {
+    let out = mixnet::profile::snapshot_path(trace);
+    std::fs::write(&out, snap.to_json())?;
+    print!("{}", snap.ops_table());
+    println!("profile: trace {trace}, snapshot {out}");
+    Ok(())
+}
+
+/// Background `--metrics-every SEC` printer.  Each tick collects a
+/// process-wide [`mixnet::profile::MetricsSnapshot`] (counters, storage
+/// pool, histograms) and prints the delta since the previous tick; the
+/// thread stops when the ticker is dropped.
+struct MetricsTicker {
+    stop: Option<std::sync::mpsc::Sender<()>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsTicker {
+    fn start(args: &Args) -> Result<Option<MetricsTicker>> {
+        let every: u64 = args.get("metrics-every", 0)?;
+        if every == 0 {
+            return Ok(None);
+        }
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let t0 = std::time::Instant::now();
+        let handle = std::thread::spawn(move || {
+            let mut prev: Option<mixnet::profile::MetricsSnapshot> = None;
+            loop {
+                match rx.recv_timeout(std::time::Duration::from_secs(every)) {
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                    _ => return, // dropped (or an explicit stop): exit
+                }
+                let wall = t0.elapsed().as_micros() as u64;
+                let snap = mixnet::profile::MetricsSnapshot::collect(wall, &[]);
+                println!("[metrics] {}", snap.brief_line(prev.as_ref()));
+                prev = Some(snap);
+            }
+        });
+        Ok(Some(MetricsTicker { stop: Some(tx), handle: Some(handle) }))
+    }
+}
+
+impl Drop for MetricsTicker {
+    fn drop(&mut self) {
+        drop(self.stop.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 fn report(stats: &[mixnet::module::EpochStats]) {
     println!("{:>5} {:>9} {:>9} {:>8} {:>8}", "epoch", "loss", "acc", "sec", "batches");
     for s in stats {
@@ -296,19 +369,28 @@ fn cmd_train(args: &Args) -> Result<()> {
     let default_kv = if args.options.contains_key("server") { "dist" } else { "local" };
     let kv_kind = args.get_str("kv", default_kv);
     let shards = trainer_shards(args, devices)?;
+    let trace = trace_path(args);
+    let _ticker = MetricsTicker::start(args)?;
+    let t0 = std::time::Instant::now();
     let engine = create(EngineKind::Threaded, default_threads());
     let (model, mut iter, shard_batch) = build_training(args, engine.clone(), 0x5eed, shards)?;
+    // Concrete handles survive the trait-object coercion so the final
+    // metrics snapshot can fold in pull/client/server statistics.
+    let mut local_kv: Option<Arc<LocalKVStore>> = None;
+    let mut dist_kv: Option<Arc<DistKVStore>> = None;
     let store: Arc<dyn mixnet::kvstore::KVStore> = match kv_kind.as_str() {
         "local" => {
             // local level-1 store with a registered SGD updater (§2.3);
             // the merged gradient is a sum of per-shard means, so rescale
             // by 1/shards to keep global-batch-mean semantics.
-            Arc::new(LocalKVStore::new(
+            let s = Arc::new(LocalKVStore::new(
                 engine.clone(),
                 shards,
                 Arc::new(Sgd::with_momentum(lr, 0.9, 1e-4).rescale(1.0 / shards as f32)),
                 consistency,
-            ))
+            ));
+            local_kv = Some(s.clone());
+            s
         }
         "dist" => {
             let addr = args
@@ -318,7 +400,9 @@ fn cmd_train(args: &Args) -> Result<()> {
             let addr: std::net::SocketAddr =
                 addr.parse().map_err(|_| Error::Config(format!("bad --server '{addr}'")))?;
             let machine: u32 = args.get("machine", 0)?;
-            Arc::new(dist_store(addr, machine, shards, consistency, engine.clone())?)
+            let s = Arc::new(dist_store(addr, machine, shards, consistency, engine.clone())?);
+            dist_kv = Some(s.clone());
+            s
         }
         other => {
             return Err(Error::Config(format!("--kv must be local|dist, got '{other}'")));
@@ -373,6 +457,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
     };
     report(&stats);
+    if let Some(path) = &trace {
+        let wall = t0.elapsed().as_micros() as u64;
+        let mut snap = mixnet::profile::export(path, wall)?.0;
+        if let Some(kv) = &local_kv {
+            snap = snap.with_pull(kv.pull_stats());
+        }
+        if let Some(kv) = &dist_kv {
+            snap = snap.with_kv_client(kv.client_stats());
+            if let Ok(s) = kv.server_stats() {
+                snap = snap.with_kv_server(s);
+            }
+        }
+        write_snapshot(path, &snap)?;
+    }
     Ok(())
 }
 
@@ -391,6 +489,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.max_batch = args.get("max-batch", cfg.max_batch)?;
     cfg.max_delay_us = args.get("max-delay-us", cfg.max_delay_us)?;
     cfg.workers = args.get("workers", cfg.workers)?;
+    let trace = trace_path(args);
+    let _ticker = MetricsTicker::start(args)?;
+    let t0 = std::time::Instant::now();
 
     let engine = create(EngineKind::Threaded, default_threads());
     let m = by_name(&model_spec)?;
@@ -466,6 +567,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if report.errors > 0 {
         println!("({} request(s) errored)", report.errors);
     }
+    if let Some(path) = &trace {
+        let wall = t0.elapsed().as_micros() as u64;
+        let snap = mixnet::profile::export(path, wall)?.0.with_serve(stats.clone());
+        write_snapshot(path, &snap)?;
+    }
     Ok(())
 }
 
@@ -486,6 +592,9 @@ fn cmd_serve_live(args: &Args) -> Result<()> {
     cfg.max_batch = args.get("max-batch", cfg.max_batch)?;
     cfg.max_delay_us = args.get("max-delay-us", cfg.max_delay_us)?;
     cfg.workers = args.get("workers", cfg.workers)?;
+    let trace = trace_path(args);
+    let _ticker = MetricsTicker::start(args)?;
+    let t0 = std::time::Instant::now();
 
     let engine = create(EngineKind::Threaded, default_threads());
     let m = by_name(&model_spec)?;
@@ -585,6 +694,12 @@ fn cmd_serve_live(args: &Args) -> Result<()> {
     if report.errors > 0 {
         println!("({} request(s) errored)", report.errors);
     }
+    if let Some(path) = &trace {
+        let wall = t0.elapsed().as_micros() as u64;
+        let mut snap = mixnet::profile::export(path, wall)?.0.with_serve(stats.clone());
+        snap = snap.with_pull(store.pull_stats());
+        write_snapshot(path, &snap)?;
+    }
     Ok(())
 }
 
@@ -623,6 +738,31 @@ fn cmd_server(args: &Args) -> Result<()> {
         Some(l) => println!("lease {}ms, expiry {:?}", l.as_millis(), cfg.expiry),
         None => println!("leases disabled (set PALLAS_KV_LEASE_MS or --lease-ms)"),
     }
+    let every: u64 = args.get("stats-every", 0)?;
+    if every > 0 {
+        // Poll our own wire endpoint with the Stats RPC — the same
+        // message a worker's `server_stats()` sends — and print the
+        // counters as one line per tick.
+        let addr = server.addr();
+        std::thread::spawn(move || {
+            use mixnet::kvstore::wire::{read_msg, write_msg, Msg};
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(every));
+                let Ok(mut s) = std::net::TcpStream::connect(addr) else { continue };
+                if write_msg(&mut s, &Msg::Stats).is_err() {
+                    continue;
+                }
+                if let Ok(Msg::StatsReply { msgs, bytes, dedup_hits, lease_expiries, applies }) =
+                    read_msg(&mut s)
+                {
+                    println!(
+                        "[stats] msgs={msgs} bytes={bytes} dedup={dedup_hits} \
+                         lease_expiries={lease_expiries} applies={applies}"
+                    );
+                }
+            }
+        });
+    }
     println!("(ctrl-c to stop)");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -638,6 +778,9 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let devices: usize = args.get("devices", 1)?;
     let consistency = parse_consistency(args)?;
     let shards = trainer_shards(args, devices)?;
+    let trace = trace_path(args);
+    let _ticker = MetricsTicker::start(args)?;
+    let t0 = std::time::Instant::now();
     let engine = create(EngineKind::Threaded, default_threads());
     let (model, mut iter, shard_batch) =
         build_training(args, engine.clone(), 0x5eed + machine as u64, shards)?;
@@ -649,6 +792,14 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let stats = trainer.fit(&mut iter, epochs)?;
     kv.barrier()?;
     report(&stats);
+    if let Some(path) = &trace {
+        let wall = t0.elapsed().as_micros() as u64;
+        let mut snap = mixnet::profile::export(path, wall)?.0.with_kv_client(kv.client_stats());
+        if let Ok(s) = kv.server_stats() {
+            snap = snap.with_kv_server(s);
+        }
+        write_snapshot(path, &snap)?;
+    }
     Ok(())
 }
 

@@ -146,16 +146,48 @@ pub fn timer_s(name: &'static str) -> f64 {
     timers().lock().unwrap().get(name).map(|d| d.as_secs_f64()).unwrap_or(0.0)
 }
 
-/// Snapshot all counters, timers and histograms as a sorted report.
+/// All counters as `(name, value)`, sorted by name — the stable order
+/// both [`report`] and `profile::MetricsSnapshot` serialize.
+pub fn counters_sorted() -> Vec<(String, u64)> {
+    let mut v: Vec<(String, u64)> =
+        registry().lock().unwrap().iter().map(|(k, &n)| (k.to_string(), n)).collect();
+    v.sort();
+    v
+}
+
+/// All timers as `(name, seconds)`, sorted by name.
+pub fn timers_sorted() -> Vec<(String, f64)> {
+    let mut v: Vec<(String, f64)> =
+        timers().lock().unwrap().iter().map(|(k, d)| (k.to_string(), d.as_secs_f64())).collect();
+    v.sort_by(|a, b| a.0.cmp(&b.0));
+    v
+}
+
+/// All histograms as `(name, count, [p50, p95, p99])`, sorted by name.
+/// One lock + one reservoir sort per histogram.
+pub fn histograms_sorted() -> Vec<(String, u64, [u64; 3])> {
+    let mut v: Vec<(String, u64, [u64; 3])> = histograms()
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, h)| {
+            let p = h.percentiles(&[50.0, 95.0, 99.0]);
+            (k.to_string(), h.count(), [p[0], p[1], p[2]])
+        })
+        .collect();
+    v.sort_by(|a, b| a.0.cmp(&b.0));
+    v
+}
+
+/// Snapshot all counters, timers and histograms as a report with lines
+/// in sorted order (reproducible given identical observations — the
+/// reservoir stream is deterministically seeded).
 pub fn report() -> String {
-    let counters = registry().lock().unwrap();
-    let timers = timers().lock().unwrap();
-    let hists = histograms().lock().unwrap();
-    let mut lines: Vec<String> = counters.iter().map(|(k, v)| format!("{k}: {v}")).collect();
-    lines.extend(timers.iter().map(|(k, v)| format!("{k}: {:.6}s", v.as_secs_f64())));
-    lines.extend(hists.iter().map(|(k, h)| {
-        let p = h.percentiles(&[50.0, 95.0, 99.0]);
-        format!("{k}: n={} p50={}us p95={}us p99={}us", h.count(), p[0], p[1], p[2])
+    let mut lines: Vec<String> =
+        counters_sorted().into_iter().map(|(k, v)| format!("{k}: {v}")).collect();
+    lines.extend(timers_sorted().into_iter().map(|(k, s)| format!("{k}: {s:.6}s")));
+    lines.extend(histograms_sorted().into_iter().map(|(k, n, p)| {
+        format!("{k}: n={n} p50={}us p95={}us p99={}us", p[0], p[1], p[2])
     }));
     lines.sort();
     lines.join("\n")

@@ -36,6 +36,7 @@
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, Ordering};
 
+use crate::profile::{Category, SpanTimer};
 use crate::util::parallel_for_cost;
 
 /// When set, the GEMM family runs a deliberately *unoptimized* inner loop
@@ -435,10 +436,13 @@ pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, b
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
+    let prof = SpanTimer::start();
     if reference_kernels() {
-        return gemm_reference(a, b, c, m, k, n, beta, false, false);
+        gemm_reference(a, b, c, m, k, n, beta, false, false);
+    } else {
+        gemm_driver(a, false, b, false, c, m, k, n, beta);
     }
-    gemm_driver(a, false, b, false, c, m, k, n, beta);
+    prof.finish(Category::Kernel, "kernel.gemm", 0, (2 * m * k * n) as u64, 0);
 }
 
 /// Vectorizable dot product: 8 independent accumulator lanes so LLVM can
@@ -469,10 +473,13 @@ pub fn gemm_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(c.len(), m * n);
+    let prof = SpanTimer::start();
     if reference_kernels() {
-        return gemm_reference(a, b, c, m, k, n, beta, false, true);
+        gemm_reference(a, b, c, m, k, n, beta, false, true);
+    } else {
+        gemm_driver(a, false, b, true, c, m, k, n, beta);
     }
-    gemm_driver(a, false, b, true, c, m, k, n, beta);
+    prof.finish(Category::Kernel, "kernel.gemm_nt", 0, (2 * m * k * n) as u64, 0);
 }
 
 /// `c = a^T @ b` where a is `[k,m]`, b is `[k,n]`, c is `[m,n]`.
@@ -480,10 +487,13 @@ pub fn gemm_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
+    let prof = SpanTimer::start();
     if reference_kernels() {
-        return gemm_reference(a, b, c, m, k, n, beta, true, false);
+        gemm_reference(a, b, c, m, k, n, beta, true, false);
+    } else {
+        gemm_driver(a, true, b, false, c, m, k, n, beta);
     }
-    gemm_driver(a, true, b, false, c, m, k, n, beta);
+    prof.finish(Category::Kernel, "kernel.gemm_tn", 0, (2 * m * k * n) as u64, 0);
 }
 
 // ---------------------------------------------------------------------
@@ -867,6 +877,7 @@ pub fn conv2d_forward(
     debug_assert_eq!(bias.len(), num_filter);
     debug_assert_eq!(y.len(), n * num_filter * spatial);
     let flops = 2.0 * (n * num_filter * spatial) as f64 * ckk as f64;
+    let prof = SpanTimer::start();
     let yp = SendMut::new(y);
     parallel_for_cost(n, 1, flops, |imgs| {
         CONV_SCRATCH.with(|sc| {
@@ -896,6 +907,7 @@ pub fn conv2d_forward(
             }
         });
     });
+    prof.finish(Category::Kernel, "kernel.conv2d_fwd", 0, flops as u64, 0);
 }
 
 /// NCHW convolution backward: `(dy, x, w) -> (dx, dw, db)`.
@@ -925,6 +937,7 @@ pub fn conv2d_backward(
     let ow = conv_out(w, kernel, stride, pad);
     let ckk = c * kernel * kernel;
     let spatial = oh * ow;
+    let prof = SpanTimer::start();
     dw.fill(0.0);
     db.fill(0.0);
     for img in 0..n {
@@ -964,6 +977,8 @@ pub fn conv2d_backward(
             pad,
         );
     }
+    let flops = 4.0 * (n * num_filter * spatial) as f64 * ckk as f64;
+    prof.finish(Category::Kernel, "kernel.conv2d_bwd", 0, flops as u64, 0);
 }
 
 // ---------------------------------------------------------------------

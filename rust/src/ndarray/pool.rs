@@ -37,7 +37,7 @@ use std::sync::{Mutex, OnceLock};
 
 /// Snapshot of pool counters (monotonic since process start, except the
 /// `pooled_*` gauges which describe the current shelf contents).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PoolStats {
     /// Acquires served from a shelf (no heap allocation).
     pub hits: u64,

@@ -1,0 +1,828 @@
+//! Process-wide tracing and profiling: near-zero overhead when off.
+//!
+//! The dependency engine's whole pitch is keeping heterogeneous
+//! resources saturated; this layer makes that *visible*. Every
+//! instrumented site pays exactly one relaxed atomic load when
+//! profiling is disabled (see [`SpanTimer::start`]); when enabled,
+//! completed spans go into per-thread lock-free ring buffers
+//! ([`SpanRecorder`]) so the hot path takes no locks and touches no
+//! shared cache lines beyond its own ring.
+//!
+//! Span taxonomy (the `cat` field in the chrome trace):
+//!
+//! - `engine`  — dynamically pushed engine ops (schedule→dispatch→
+//!   complete; `queue_us` is the time between push and dispatch)
+//! - `plan`    — compiled [`RunPlan`](crate::engine::RunPlan) replay
+//!   ops (`a` = replay step, `b` = op index within the plan)
+//! - `kernel`  — BLAS-level regions (GEMM variants, conv2d fwd/bwd)
+//! - `kv_client` — one client RPC incl. every retry/redial (`a` =
+//!   attempts taken)
+//! - `kv_server` — one server-side optimizer round application
+//! - `serve`   — batch lifecycle: queue-wait, scatter, forward, gather
+//! - `io`      — data-iterator prefetch waits
+//!
+//! Lifecycle: [`set_enabled`]`(true)` → run the workload → quiesce
+//! (e.g. `engine.wait_all()`) → [`set_enabled`]`(false)` → [`drain`] →
+//! [`chrome_trace`] / [`MetricsSnapshot::collect`]. Draining while
+//! producers are still recording is memory-safe (only committed spans
+//! are read) but may miss in-flight spans.
+
+pub mod json;
+
+use std::cell::{OnceCell, UnsafeCell};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::kvstore::dist::{ClientStats, ServerStats};
+use crate::kvstore::PullStats;
+use crate::ndarray::pool::PoolStats;
+use crate::serve::ServeStats;
+use json::{escape, Json};
+
+/// Default per-thread span-ring capacity (`PALLAS_PROFILE_CAP` overrides).
+pub const DEFAULT_RING_CAP: usize = 65_536;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the (lazily initialized) process trace epoch.
+#[inline]
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Is span recording currently on? One relaxed load — this is the
+/// entire disabled-path cost at an instrumented site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on or off (also pins the trace epoch on first
+/// enable so timestamps are small).
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch();
+    }
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Trace output path from the `PALLAS_PROFILE` knob (unset, empty or
+/// `0` mean disabled).
+pub fn env_trace_path() -> Option<String> {
+    match std::env::var("PALLAS_PROFILE") {
+        Ok(v) if !v.is_empty() && v != "0" => Some(v),
+        _ => None,
+    }
+}
+
+fn ring_cap() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::env::var("PALLAS_PROFILE_CAP")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(DEFAULT_RING_CAP)
+    })
+}
+
+/// What subsystem a span came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Category {
+    Engine,
+    Plan,
+    Kernel,
+    KvClient,
+    KvServer,
+    Serve,
+    Io,
+}
+
+impl Category {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Category::Engine => "engine",
+            Category::Plan => "plan",
+            Category::Kernel => "kernel",
+            Category::KvClient => "kv_client",
+            Category::KvServer => "kv_server",
+            Category::Serve => "serve",
+            Category::Io => "io",
+        }
+    }
+}
+
+/// One completed region. `a`/`b` are span-kind-specific payloads (cost
+/// hint, RPC attempts, replay step / op index, batch size — see the
+/// module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub cat: Category,
+    pub name: &'static str,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Wait before the work started (push→dispatch for engine ops,
+    /// enqueue→dispatch for serve batches); 0 where not applicable.
+    pub queue_us: u64,
+    /// Recorder thread id (chrome-trace lane). Assigned per thread at
+    /// first record; engine worker threads therefore get stable lanes.
+    pub tid: u32,
+    pub a: u64,
+    pub b: u64,
+}
+
+const EMPTY_SPAN: Span = Span {
+    cat: Category::Engine,
+    name: "",
+    start_us: 0,
+    dur_us: 0,
+    queue_us: 0,
+    tid: 0,
+    a: 0,
+    b: 0,
+};
+
+/// A single-producer span ring. The owning thread appends; [`drain`]
+/// reads the committed prefix from any thread. `len` is the commit
+/// marker: the slot is fully written before the release store, so an
+/// acquire load on the reader side never observes a torn span.
+pub struct SpanRecorder {
+    slots: Box<[UnsafeCell<Span>]>,
+    len: AtomicUsize,
+    dropped: AtomicU64,
+    tid: u32,
+}
+
+// SAFETY: only the owning thread writes `slots`, and only at indexes
+// >= the committed `len`; readers only dereference indexes < `len`
+// (Acquire), which the Release store in `push` has fully initialized.
+unsafe impl Sync for SpanRecorder {}
+unsafe impl Send for SpanRecorder {}
+
+impl SpanRecorder {
+    fn new(cap: usize, tid: u32) -> Self {
+        let slots: Vec<UnsafeCell<Span>> = (0..cap).map(|_| UnsafeCell::new(EMPTY_SPAN)).collect();
+        SpanRecorder {
+            slots: slots.into_boxed_slice(),
+            len: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+            tid,
+        }
+    }
+
+    #[inline]
+    fn push(&self, mut span: Span) {
+        let i = self.len.load(Ordering::Relaxed);
+        if i >= self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        span.tid = self.tid;
+        // SAFETY: single producer; slot `i` is not yet committed, so no
+        // reader dereferences it until the release store below.
+        unsafe { *self.slots[i].get() = span };
+        self.len.store(i + 1, Ordering::Release);
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<SpanRecorder>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<SpanRecorder>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static RECORDER: OnceCell<Arc<SpanRecorder>> = const { OnceCell::new() };
+}
+
+fn with_recorder(f: impl FnOnce(&SpanRecorder)) {
+    RECORDER.with(|cell| {
+        let rec = cell.get_or_init(|| {
+            let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            let rec = Arc::new(SpanRecorder::new(ring_cap(), tid));
+            registry().lock().unwrap().push(rec.clone());
+            rec
+        });
+        f(rec);
+    });
+}
+
+/// The calling thread's trace lane id (registers the thread's ring on
+/// first use). Doubles as the "worker id" in engine spans.
+pub fn current_tid() -> u32 {
+    let mut tid = 0;
+    with_recorder(|r| tid = r.tid);
+    tid
+}
+
+/// Record one completed span ending now (timestamps from [`now_us`]).
+#[inline]
+pub fn record(cat: Category, name: &'static str, start_us: u64, queue_us: u64, a: u64, b: u64) {
+    let end = now_us();
+    let span = Span {
+        cat,
+        name,
+        start_us,
+        dur_us: end.saturating_sub(start_us),
+        queue_us,
+        tid: 0,
+        a,
+        b,
+    };
+    with_recorder(|r| r.push(span));
+}
+
+/// Capture-once span helper: checks [`enabled`] exactly once at
+/// construction (the disabled path's single atomic load) and records on
+/// [`finish`](SpanTimer::finish) only if profiling was on at the start.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanTimer {
+    start_us: u64,
+    on: bool,
+}
+
+impl SpanTimer {
+    #[inline]
+    pub fn start() -> Self {
+        let on = enabled();
+        SpanTimer { start_us: if on { now_us() } else { 0 }, on }
+    }
+
+    /// Whether this timer will record (profiling was on at start).
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.on
+    }
+
+    /// Start timestamp (0 when not recording).
+    #[inline]
+    pub fn start_us(&self) -> u64 {
+        self.start_us
+    }
+
+    #[inline]
+    pub fn finish(self, cat: Category, name: &'static str, queue_us: u64, a: u64, b: u64) {
+        if self.on {
+            record(cat, name, self.start_us, queue_us, a, b);
+        }
+    }
+}
+
+/// Move every committed span out of every registered ring (sorted by
+/// thread, then start time) and reset the rings. Call only after the
+/// workload has quiesced; concurrent producers are memory-safe but
+/// their in-flight spans may land in the next drain.
+pub fn drain() -> Vec<Span> {
+    let regs = registry().lock().unwrap();
+    let mut out = Vec::new();
+    for rec in regs.iter() {
+        let n = rec.len.load(Ordering::Acquire).min(rec.slots.len());
+        for slot in rec.slots.iter().take(n) {
+            // SAFETY: indexes < the acquired `len` are committed and no
+            // longer written by the producer.
+            out.push(unsafe { *slot.get() });
+        }
+        rec.len.store(0, Ordering::Release);
+    }
+    out.sort_by_key(|s| (s.tid, s.start_us, s.start_us + s.dur_us));
+    out
+}
+
+/// Spans lost to ring overflow since the last [`reset`].
+pub fn dropped() -> u64 {
+    registry().lock().unwrap().iter().map(|r| r.dropped.load(Ordering::Relaxed)).sum()
+}
+
+/// Discard all recorded spans and overflow counts (tests / phase reuse).
+pub fn reset() {
+    let regs = registry().lock().unwrap();
+    for rec in regs.iter() {
+        rec.len.store(0, Ordering::Release);
+        rec.dropped.store(0, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exporter 1: chrome://tracing JSON
+// ---------------------------------------------------------------------------
+
+/// Render spans as a chrome://tracing / Perfetto "trace event" document
+/// (complete events, `ph:"X"`; `ts`/`dur` in microseconds).
+pub fn chrome_trace(spans: &[Span]) -> String {
+    let mut out = String::with_capacity(64 + spans.len() * 96);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    for (i, s) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"ph\":\"X\",\"name\":\"{}\",\"cat\":\"{}\",\"pid\":1,\"tid\":{},\"ts\":{},\
+             \"dur\":{},\"args\":{{\"queue_us\":{},\"a\":{},\"b\":{}}}}}",
+            escape(s.name),
+            s.cat.as_str(),
+            s.tid,
+            s.start_us,
+            s.dur_us,
+            s.queue_us,
+            s.a,
+            s.b
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Write [`chrome_trace`] output to a file.
+pub fn write_chrome_trace(path: &str, spans: &[Span]) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace(spans))
+}
+
+// ---------------------------------------------------------------------------
+// Exporter 2: aggregated per-op table + unified MetricsSnapshot
+// ---------------------------------------------------------------------------
+
+/// Per-op aggregate over one drained trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpAgg {
+    pub cat: String,
+    pub name: String,
+    pub count: u64,
+    pub total_us: u64,
+    pub mean_us: f64,
+    pub p95_us: u64,
+    /// Total scheduling/queue wait attributed to this op.
+    pub queue_us: u64,
+}
+
+/// Group spans by (category, name); sorted by descending total time.
+pub fn aggregate(spans: &[Span]) -> Vec<OpAgg> {
+    let mut groups: HashMap<(Category, &'static str), Vec<&Span>> = HashMap::new();
+    for s in spans {
+        groups.entry((s.cat, s.name)).or_default().push(s);
+    }
+    let mut out: Vec<OpAgg> = groups
+        .into_iter()
+        .map(|((cat, name), ss)| {
+            let count = ss.len() as u64;
+            let total_us: u64 = ss.iter().map(|s| s.dur_us).sum();
+            let queue_us: u64 = ss.iter().map(|s| s.queue_us).sum();
+            let mut durs: Vec<u64> = ss.iter().map(|s| s.dur_us).collect();
+            durs.sort_unstable();
+            let rank = ((0.95 * durs.len() as f64).ceil() as usize).clamp(1, durs.len());
+            OpAgg {
+                cat: cat.as_str().to_string(),
+                name: name.to_string(),
+                count,
+                total_us,
+                mean_us: total_us as f64 / count as f64,
+                p95_us: durs[rank - 1],
+                queue_us,
+            }
+        })
+        .collect();
+    out.sort_by(|x, y| y.total_us.cmp(&x.total_us).then_with(|| x.name.cmp(&y.name)));
+    out
+}
+
+/// Aggregated histogram line carried by the snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistAgg {
+    pub name: String,
+    pub count: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+}
+
+/// One JSON artifact answering "where did the time go" — unifies the
+/// span aggregates with `metrics.rs` counters/timers/histograms, the
+/// storage-pool counters, and (when present) kvstore pull stats, serve
+/// stats, and dist client/server stats.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// Snapshot schema version (bump on breaking field changes).
+    pub schema: u64,
+    /// Wall-clock span of the profiled window, microseconds.
+    pub wall_us: u64,
+    /// Distinct threads that executed engine/plan/kernel work.
+    pub workers: u64,
+    /// Total engine+plan execution time across workers, microseconds.
+    pub busy_us: u64,
+    /// Total engine-op queue wait, microseconds.
+    pub queue_us: u64,
+    /// busy / (wall × workers) — how saturated the worker pool was.
+    pub utilization: f64,
+    /// queue / (queue + busy) — share of op lifetime spent waiting.
+    pub queue_share: f64,
+    /// Spans lost to ring overflow (0 means the trace is complete).
+    pub dropped_spans: u64,
+    pub ops: Vec<OpAgg>,
+    pub counters: Vec<(String, u64)>,
+    pub timers_s: Vec<(String, f64)>,
+    pub hists: Vec<HistAgg>,
+    pub pool: PoolStats,
+    pub pull: Option<PullStats>,
+    pub serve: Option<ServeStats>,
+    pub kv_client: Option<ClientStats>,
+    pub kv_server: Option<ServerStats>,
+}
+
+impl MetricsSnapshot {
+    /// Build a snapshot from a drained trace plus every process-global
+    /// stats source (metrics registry, storage pool). Subsystem stats
+    /// that live on instances are attached with the `with_*` builders.
+    pub fn collect(wall_us: u64, spans: &[Span]) -> Self {
+        let exec = |s: &&Span| matches!(s.cat, Category::Engine | Category::Plan);
+        let busy_us: u64 = spans.iter().filter(exec).map(|s| s.dur_us).sum();
+        let queue_us: u64 = spans.iter().filter(exec).map(|s| s.queue_us).sum();
+        let mut tids: Vec<u32> = spans
+            .iter()
+            .filter(|s| matches!(s.cat, Category::Engine | Category::Plan | Category::Kernel))
+            .map(|s| s.tid)
+            .collect();
+        tids.sort_unstable();
+        tids.dedup();
+        let workers = tids.len() as u64;
+        let denom = wall_us.saturating_mul(workers);
+        MetricsSnapshot {
+            schema: 1,
+            wall_us,
+            workers,
+            busy_us,
+            queue_us,
+            utilization: if denom > 0 { busy_us as f64 / denom as f64 } else { 0.0 },
+            queue_share: if busy_us + queue_us > 0 {
+                queue_us as f64 / (busy_us + queue_us) as f64
+            } else {
+                0.0
+            },
+            dropped_spans: dropped(),
+            ops: aggregate(spans),
+            counters: crate::metrics::counters_sorted(),
+            timers_s: crate::metrics::timers_sorted(),
+            hists: crate::metrics::histograms_sorted()
+                .into_iter()
+                .map(|(name, count, p)| HistAgg {
+                    name,
+                    count,
+                    p50_us: p[0],
+                    p95_us: p[1],
+                    p99_us: p[2],
+                })
+                .collect(),
+            pool: crate::ndarray::pool::global().stats(),
+            ..Default::default()
+        }
+    }
+
+    pub fn with_pull(mut self, s: PullStats) -> Self {
+        self.pull = Some(s);
+        self
+    }
+
+    pub fn with_serve(mut self, s: ServeStats) -> Self {
+        self.serve = Some(s);
+        self
+    }
+
+    pub fn with_kv_client(mut self, s: ClientStats) -> Self {
+        self.kv_client = Some(s);
+        self
+    }
+
+    pub fn with_kv_server(mut self, s: ServerStats) -> Self {
+        self.kv_server = Some(s);
+        self
+    }
+
+    /// Serialize to JSON (hand-rolled; schema documented in README).
+    pub fn to_json(&self) -> String {
+        let mut o = String::with_capacity(1024);
+        o.push('{');
+        let _ = write!(
+            o,
+            "\"schema\":{},\"wall_us\":{},\"workers\":{},\"busy_us\":{},\"queue_us\":{},\
+             \"utilization\":{:.4},\"queue_share\":{:.4},\"dropped_spans\":{}",
+            self.schema,
+            self.wall_us,
+            self.workers,
+            self.busy_us,
+            self.queue_us,
+            self.utilization,
+            self.queue_share,
+            self.dropped_spans
+        );
+        o.push_str(",\"ops\":[");
+        for (i, op) in self.ops.iter().enumerate() {
+            if i > 0 {
+                o.push(',');
+            }
+            let _ = write!(
+                o,
+                "{{\"cat\":\"{}\",\"name\":\"{}\",\"count\":{},\"total_us\":{},\
+                 \"mean_us\":{:.3},\"p95_us\":{},\"queue_us\":{}}}",
+                escape(&op.cat),
+                escape(&op.name),
+                op.count,
+                op.total_us,
+                op.mean_us,
+                op.p95_us,
+                op.queue_us
+            );
+        }
+        o.push_str("],\"counters\":{");
+        for (i, (k, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                o.push(',');
+            }
+            let _ = write!(o, "\"{}\":{v}", escape(k));
+        }
+        o.push_str("},\"timers_s\":{");
+        for (i, (k, v)) in self.timers_s.iter().enumerate() {
+            if i > 0 {
+                o.push(',');
+            }
+            let _ = write!(o, "\"{}\":{v:.6}", escape(k));
+        }
+        o.push_str("},\"histograms\":[");
+        for (i, h) in self.hists.iter().enumerate() {
+            if i > 0 {
+                o.push(',');
+            }
+            let _ = write!(
+                o,
+                "{{\"name\":\"{}\",\"count\":{},\"p50_us\":{},\"p95_us\":{},\"p99_us\":{}}}",
+                escape(&h.name),
+                h.count,
+                h.p50_us,
+                h.p95_us,
+                h.p99_us
+            );
+        }
+        o.push_str("],");
+        let _ = write!(
+            o,
+            "\"pool\":{{\"hits\":{},\"misses\":{},\"releases\":{},\"evictions\":{},\
+             \"pooled_buffers\":{},\"pooled_bytes\":{}}}",
+            self.pool.hits,
+            self.pool.misses,
+            self.pool.releases,
+            self.pool.evictions,
+            self.pool.pooled_buffers,
+            self.pool.pooled_bytes
+        );
+        match &self.pull {
+            None => o.push_str(",\"pull\":null"),
+            Some(p) => {
+                let _ = write!(
+                    o,
+                    ",\"pull\":{{\"copies\":{},\"skips\":{},\"last_snap_age\":{},\
+                     \"max_snap_age\":{}}}",
+                    p.copies, p.skips, p.last_snap_age, p.max_snap_age
+                );
+            }
+        }
+        match &self.serve {
+            None => o.push_str(",\"serve\":null"),
+            Some(s) => {
+                let _ = write!(
+                    o,
+                    ",\"serve\":{{\"requests\":{},\"batches\":{},\"rejected\":{},\
+                     \"mean_batch\":{:.3},\"p50_us\":{},\"p95_us\":{},\"p99_us\":{},\
+                     \"uptime_s\":{:.3},\"rps\":{:.3}}}",
+                    s.requests,
+                    s.batches,
+                    s.rejected,
+                    s.mean_batch,
+                    s.p50_us,
+                    s.p95_us,
+                    s.p99_us,
+                    s.uptime_s,
+                    s.rps
+                );
+            }
+        }
+        match &self.kv_client {
+            None => o.push_str(",\"kv_client\":null"),
+            Some(c) => {
+                let _ = write!(
+                    o,
+                    ",\"kv_client\":{{\"retries\":{},\"reconnects\":{}}}",
+                    c.retries, c.reconnects
+                );
+            }
+        }
+        match &self.kv_server {
+            None => o.push_str(",\"kv_server\":null"),
+            Some(s) => {
+                let _ = write!(
+                    o,
+                    ",\"kv_server\":{{\"msgs\":{},\"bytes\":{},\"dedup_hits\":{},\
+                     \"lease_expiries\":{},\"applies\":{}}}",
+                    s.msgs, s.bytes, s.dedup_hits, s.lease_expiries, s.applies
+                );
+            }
+        }
+        o.push('}');
+        o
+    }
+
+    /// Parse a snapshot back from [`to_json`] output.
+    pub fn from_json(text: &str) -> Result<Self, String> {
+        let v = Json::parse(text)?;
+        let mut snap = MetricsSnapshot {
+            schema: req_u64(&v, "schema", "top")?,
+            wall_us: req_u64(&v, "wall_us", "top")?,
+            workers: req_u64(&v, "workers", "top")?,
+            busy_us: req_u64(&v, "busy_us", "top")?,
+            queue_us: req_u64(&v, "queue_us", "top")?,
+            utilization: req_f64(&v, "utilization", "top")?,
+            queue_share: req_f64(&v, "queue_share", "top")?,
+            dropped_spans: req_u64(&v, "dropped_spans", "top")?,
+            ..Default::default()
+        };
+        for op in v.get("ops").ok_or("missing ops")?.items() {
+            snap.ops.push(OpAgg {
+                cat: req_str(op, "cat", "op")?.to_string(),
+                name: req_str(op, "name", "op")?.to_string(),
+                count: req_u64(op, "count", "op")?,
+                total_us: req_u64(op, "total_us", "op")?,
+                mean_us: req_f64(op, "mean_us", "op")?,
+                p95_us: req_u64(op, "p95_us", "op")?,
+                queue_us: req_u64(op, "queue_us", "op")?,
+            });
+        }
+        if let Some(Json::Obj(m)) = v.get("counters") {
+            for (k, val) in m {
+                snap.counters.push((k.clone(), val.as_u64().ok_or("counter value")?));
+            }
+        }
+        if let Some(Json::Obj(m)) = v.get("timers_s") {
+            for (k, val) in m {
+                snap.timers_s.push((k.clone(), val.as_f64().ok_or("timer value")?));
+            }
+        }
+        for h in v.get("histograms").ok_or("missing histograms")?.items() {
+            snap.hists.push(HistAgg {
+                name: req_str(h, "name", "hist")?.to_string(),
+                count: req_u64(h, "count", "hist")?,
+                p50_us: req_u64(h, "p50_us", "hist")?,
+                p95_us: req_u64(h, "p95_us", "hist")?,
+                p99_us: req_u64(h, "p99_us", "hist")?,
+            });
+        }
+        let p = v.get("pool").ok_or("missing pool")?;
+        snap.pool = PoolStats {
+            hits: req_u64(p, "hits", "pool")?,
+            misses: req_u64(p, "misses", "pool")?,
+            releases: req_u64(p, "releases", "pool")?,
+            evictions: req_u64(p, "evictions", "pool")?,
+            pooled_buffers: req_u64(p, "pooled_buffers", "pool")?,
+            pooled_bytes: req_u64(p, "pooled_bytes", "pool")?,
+        };
+        if let Some(p @ Json::Obj(_)) = v.get("pull") {
+            snap.pull = Some(PullStats {
+                copies: req_u64(p, "copies", "pull")?,
+                skips: req_u64(p, "skips", "pull")?,
+                last_snap_age: req_u64(p, "last_snap_age", "pull")?,
+                max_snap_age: req_u64(p, "max_snap_age", "pull")?,
+            });
+        }
+        if let Some(s @ Json::Obj(_)) = v.get("serve") {
+            snap.serve = Some(ServeStats {
+                requests: req_u64(s, "requests", "serve")?,
+                batches: req_u64(s, "batches", "serve")?,
+                rejected: req_u64(s, "rejected", "serve")?,
+                mean_batch: req_f64(s, "mean_batch", "serve")?,
+                p50_us: req_u64(s, "p50_us", "serve")?,
+                p95_us: req_u64(s, "p95_us", "serve")?,
+                p99_us: req_u64(s, "p99_us", "serve")?,
+                uptime_s: req_f64(s, "uptime_s", "serve")?,
+                rps: req_f64(s, "rps", "serve")?,
+            });
+        }
+        if let Some(c @ Json::Obj(_)) = v.get("kv_client") {
+            snap.kv_client = Some(ClientStats {
+                retries: req_u64(c, "retries", "kv_client")?,
+                reconnects: req_u64(c, "reconnects", "kv_client")?,
+            });
+        }
+        if let Some(s @ Json::Obj(_)) = v.get("kv_server") {
+            snap.kv_server = Some(ServerStats {
+                msgs: req_u64(s, "msgs", "kv_server")?,
+                bytes: req_u64(s, "bytes", "kv_server")?,
+                dedup_hits: req_u64(s, "dedup_hits", "kv_server")?,
+                lease_expiries: req_u64(s, "lease_expiries", "kv_server")?,
+                applies: req_u64(s, "applies", "kv_server")?,
+            });
+        }
+        Ok(snap)
+    }
+
+    /// Human-readable per-op table (stdout companion to the JSON dump).
+    pub fn ops_table(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:<11} {:<26} {:>8} {:>12} {:>10} {:>10} {:>12}",
+            "cat", "op", "count", "total_us", "mean_us", "p95_us", "queue_us"
+        );
+        for op in &self.ops {
+            let _ = writeln!(
+                out,
+                "{:<11} {:<26} {:>8} {:>12} {:>10.1} {:>10} {:>12}",
+                op.cat, op.name, op.count, op.total_us, op.mean_us, op.p95_us, op.queue_us
+            );
+        }
+        let _ = write!(
+            out,
+            "workers={} busy={}us queue={}us wall={}us utilization={:.1}% queue_share={:.1}%",
+            self.workers,
+            self.busy_us,
+            self.queue_us,
+            self.wall_us,
+            self.utilization * 100.0,
+            self.queue_share * 100.0
+        );
+        if self.dropped_spans > 0 {
+            let _ = write!(out, " DROPPED_SPANS={}", self.dropped_spans);
+        }
+        out
+    }
+
+    /// One-line delta vs a previous snapshot — what `--metrics-every`
+    /// prints. Only counters that moved are shown.
+    pub fn brief_line(&self, prev: Option<&MetricsSnapshot>) -> String {
+        let mut parts = vec![format!("wall={:.1}s", self.wall_us as f64 / 1e6)];
+        for (k, v) in &self.counters {
+            let d = v.saturating_sub(prev_counter(prev, k));
+            if d > 0 {
+                parts.push(format!("{k}=+{d}"));
+            }
+        }
+        let ph = prev.map(|p| p.pool.hits).unwrap_or(0);
+        let pm = prev.map(|p| p.pool.misses).unwrap_or(0);
+        let dh = self.pool.hits.saturating_sub(ph);
+        let dm = self.pool.misses.saturating_sub(pm);
+        if dh + dm > 0 {
+            parts.push(format!("pool=+{dh}h/+{dm}m"));
+        }
+        if let Some(s) = &self.serve {
+            let prev_s = prev.and_then(|p| p.serve.as_ref());
+            let dr = s.requests.saturating_sub(prev_s.map(|x| x.requests).unwrap_or(0));
+            let db = s.batches.saturating_sub(prev_s.map(|x| x.batches).unwrap_or(0));
+            parts.push(format!("serve=+{dr}req/+{db}batch"));
+        }
+        parts.truncate(12);
+        parts.join(" ")
+    }
+}
+
+fn req_u64(v: &Json, key: &str, ctx: &str) -> Result<u64, String> {
+    v.get(key).and_then(Json::as_u64).ok_or_else(|| format!("missing {ctx}.{key}"))
+}
+
+fn req_f64(v: &Json, key: &str, ctx: &str) -> Result<f64, String> {
+    v.get(key).and_then(Json::as_f64).ok_or_else(|| format!("missing {ctx}.{key}"))
+}
+
+fn req_str<'a>(v: &'a Json, key: &str, ctx: &str) -> Result<&'a str, String> {
+    v.get(key).and_then(Json::as_str).ok_or_else(|| format!("missing {ctx}.{key}"))
+}
+
+fn prev_counter(prev: Option<&MetricsSnapshot>, key: &str) -> u64 {
+    let Some(prev) = prev else { return 0 };
+    prev.counters.iter().find(|(k, _)| k.as_str() == key).map(|(_, v)| *v).unwrap_or(0)
+}
+
+/// Finish a profiled phase: disable recording, drain the rings, write
+/// the chrome trace to `trace_path` and the snapshot JSON to
+/// `metrics_snapshot.json` next to it. Returns the snapshot for the
+/// caller to print or extend.
+pub fn export(trace_path: &str, wall_us: u64) -> std::io::Result<(MetricsSnapshot, Vec<Span>)> {
+    set_enabled(false);
+    let spans = drain();
+    write_chrome_trace(trace_path, &spans)?;
+    let snap = MetricsSnapshot::collect(wall_us, &spans);
+    Ok((snap, spans))
+}
+
+/// Sibling path where the snapshot JSON for `trace_path` is written.
+pub fn snapshot_path(trace_path: &str) -> String {
+    let p = std::path::Path::new(trace_path);
+    match p.parent() {
+        Some(dir) if !dir.as_os_str().is_empty() => {
+            dir.join("metrics_snapshot.json").to_string_lossy().into_owned()
+        }
+        _ => "metrics_snapshot.json".to_string(),
+    }
+}

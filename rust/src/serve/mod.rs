@@ -310,6 +310,15 @@ impl Drop for Server {
 /// not kill the worker loop: queued requests would then park forever in
 /// [`Pending::wait`].  The batch is failed, the worker survives.
 fn serve_batch(pool: &mut ExecPool, batch: Vec<PendingRequest>, shared: &ServerShared) {
+    let prof = crate::profile::SpanTimer::start();
+    // queue_us = the longest any request in this batch sat in the queue
+    // before the batch was picked up.
+    let queue_us = if prof.on() {
+        let now = Instant::now();
+        batch.iter().map(|r| now.duration_since(r.enqueued).as_micros() as u64).max().unwrap_or(0)
+    } else {
+        0
+    };
     let outs = {
         let rows: Vec<&[f32]> = batch.iter().map(|r| r.features.as_slice()).collect();
         std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.run(&rows)))
@@ -317,10 +326,13 @@ fn serve_batch(pool: &mut ExecPool, batch: Vec<PendingRequest>, shared: &ServerS
     let outs = match outs {
         Ok(outs) => outs,
         Err(_) => {
+            let n = batch.len() as u64;
             eprintln!("mixnet serve: worker panicked serving a batch of {}", batch.len());
             for req in batch {
                 let _ = req.tx.send(Err(Error::serve("internal error serving batch")));
             }
+            // b = 1 marks a failed batch in the trace.
+            prof.finish(crate::profile::Category::Serve, "serve.batch", queue_us, n, 1);
             return;
         }
     };
@@ -340,10 +352,13 @@ fn serve_batch(pool: &mut ExecPool, batch: Vec<PendingRequest>, shared: &ServerS
         }
     }
     metrics::observe_us_all("serve.latency_us", &lats);
+    let n = batch.len() as u64;
     for (req, out) in batch.into_iter().zip(outs) {
         // A client that gave up is not an error worth crashing a worker.
         let _ = req.tx.send(Ok(out));
     }
+    // a = batch size; queue_us = worst queue wait in the batch.
+    prof.finish(crate::profile::Category::Serve, "serve.batch", queue_us, n, 0);
 }
 
 /// Closed-loop load report (see [`closed_loop`]).

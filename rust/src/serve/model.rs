@@ -270,6 +270,7 @@ impl BucketExec {
             live.refresh();
         }
         // Zero-filled staging: unused rows never leak a previous batch.
+        let prof = crate::profile::SpanTimer::start();
         let mut staged = crate::ndarray::pool::lease_zeroed(self.batch * self.feat_len);
         for (i, r) in rows.iter().enumerate() {
             assert_eq!(r.len(), self.feat_len, "request row {i} has wrong feature length");
@@ -287,12 +288,21 @@ impl BucketExec {
                 // `staged` drops here: back to the pool for the next batch
             }),
         );
+        // Caller-side phases: scatter = stage + dispatch, forward = graph
+        // push, gather = the one blocking wait on the head output.
+        prof.finish(crate::profile::Category::Serve, "serve.scatter", 0, rows.len() as u64, 0);
+        let prof = crate::profile::SpanTimer::start();
         self.exec.forward();
+        prof.finish(crate::profile::Category::Serve, "serve.forward", 0, rows.len() as u64, 0);
+        let prof = crate::profile::SpanTimer::start();
         let out = self.exec.outputs()[0].to_vec(); // waits for the head
-        rows.iter()
+        let gathered = rows
+            .iter()
             .enumerate()
             .map(|(i, _)| out[i * self.out_len..(i + 1) * self.out_len].to_vec())
-            .collect()
+            .collect();
+        prof.finish(crate::profile::Category::Serve, "serve.gather", 0, rows.len() as u64, 0);
+        gathered
     }
 }
 

@@ -149,6 +149,47 @@ impl BenchRecord {
     }
 }
 
+/// The shared metadata block every `BENCH_*.json` carries: schema
+/// version, bench name, git commit, intra-op thread knob, quick flag,
+/// and a unix timestamp — enough for later PRs to diff bench files
+/// across commits and machines without guessing the context.
+pub fn standard_meta(bench: &str, quick: bool) -> Vec<(&'static str, String)> {
+    let threads = std::env::var("PALLAS_INTRA_THREADS").unwrap_or_else(|_| "default".into());
+    vec![
+        ("schema_version", "1".to_string()),
+        ("bench", bench.to_string()),
+        ("git_sha", git_sha()),
+        ("intra_threads", threads),
+        ("quick", if quick { "1".to_string() } else { "0".to_string() }),
+        ("unix_time", unix_time().to_string()),
+    ]
+}
+
+/// Commit id: `GITHUB_SHA` in CI, `git rev-parse HEAD` locally,
+/// "unknown" outside a checkout.
+fn git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn unix_time() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
 /// Minimal JSON string escaping (the only non-trivial characters our
 /// bench names can contain are quotes and backslashes).
 fn json_escape(s: &str) -> String {

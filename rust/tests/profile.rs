@@ -1,0 +1,321 @@
+//! ISSUE 7 acceptance tests: the unified tracing/profiling layer.
+//!
+//! * **Trace well-formedness** — under a real engine workload the
+//!   drained spans must have monotonic timestamps, per-thread ordering,
+//!   and proper nesting (spans on one thread either nest or are
+//!   disjoint — a stack-shaped trace, which is what chrome://tracing
+//!   renders).  CI reruns this binary under PALLAS_INTRA_THREADS ∈
+//!   {1, 4}.
+//! * **Plan replay coverage** — every compiled plan op is recorded
+//!   exactly once per replay, keyed by the `(step, op index)` payload.
+//! * **Overhead guard** — with profiling disabled a full workload
+//!   records nothing at all (the disabled path is one relaxed atomic
+//!   load per site), and a timer started while disabled never records.
+//! * **Snapshot roundtrip** — `MetricsSnapshot::to_json` output parses
+//!   back via `from_json` into an identical document.
+//! * **Chrome trace schema** — every event carries ph/ts/dur/pid/tid/
+//!   name, parsed with the crate's own JSON reader.
+//!
+//! Profiling state (the enable flag, span rings, metrics registry) is
+//! process-global, so every test takes `PROF_LOCK` and drains residue
+//! before starting.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+use mixnet::engine::{create, EngineKind, PlanOpSpec, RunPlan};
+use mixnet::executor::{BindConfig, Executor};
+use mixnet::kvstore::dist::{ClientStats, ServerStats};
+use mixnet::kvstore::PullStats;
+use mixnet::models::mlp;
+use mixnet::ndarray::NDArray;
+use mixnet::profile::{self, json::Json, Category, MetricsSnapshot, Span, SpanTimer};
+use mixnet::serve::ServeStats;
+use mixnet::util::Rng;
+
+static PROF_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    PROF_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Clear any spans left over from a previous test in this process.
+fn quiesce() {
+    profile::set_enabled(false);
+    profile::drain();
+    profile::reset();
+}
+
+/// A small but real workload: 3 forward/backward/update steps of an
+/// MLP on a 4-worker engine (engine ops + GEMM kernels; plan spans too
+/// when `replay` is set).
+fn run_mlp(replay: bool) {
+    let model = mlp(&[32, 16], 16, 4);
+    let batch = 8;
+    let engine = create(EngineKind::Threaded, 4);
+    let shapes = model.var_shapes(batch).unwrap();
+    let mut names: Vec<String> = shapes.keys().cloned().collect();
+    names.sort();
+    let mut args: HashMap<String, NDArray> = HashMap::new();
+    for (i, name) in names.iter().enumerate() {
+        let n: usize = shapes[name].iter().product();
+        let mut rng = Rng::seed_from_u64(0x0B5E + i as u64);
+        let v: Vec<f32> = if name.ends_with("_label") {
+            (0..n).map(|j| (j % 4) as f32).collect()
+        } else {
+            (0..n).map(|_| rng.normal_with(0.0, 0.15)).collect()
+        };
+        args.insert(name.clone(), NDArray::from_vec_on(&shapes[name], v, engine.clone()));
+    }
+    let params: Vec<String> = names
+        .iter()
+        .filter(|n| n.as_str() != "data" && !n.ends_with("_label"))
+        .cloned()
+        .collect();
+    let grad_names: Vec<&str> = params.iter().map(|s| s.as_str()).collect();
+    let cfg = BindConfig { replay, ..Default::default() };
+    let exec = Executor::bind(&model.symbol, engine.clone(), args, &grad_names, cfg).unwrap();
+    for _ in 0..3 {
+        exec.forward_backward().unwrap();
+        for p in &params {
+            exec.arg(p).unwrap().sub_scaled_(exec.grad(p).unwrap(), 0.05);
+        }
+    }
+    exec.wait();
+    engine.wait_all();
+}
+
+fn end_us(s: &Span) -> u64 {
+    s.start_us + s.dur_us
+}
+
+#[test]
+fn engine_trace_is_well_formed() {
+    let _g = lock();
+    quiesce();
+    profile::set_enabled(true);
+    run_mlp(false);
+    profile::set_enabled(false);
+    let spans = profile::drain();
+    assert_eq!(profile::dropped(), 0, "ring overflow during a small workload");
+    assert!(spans.iter().any(|s| s.cat == Category::Engine), "no engine spans recorded");
+    assert!(spans.iter().any(|s| s.cat == Category::Kernel), "no kernel spans recorded");
+    let now = profile::now_us();
+    let mut by_tid: HashMap<u32, Vec<&Span>> = HashMap::new();
+    for s in &spans {
+        assert!(!s.name.is_empty(), "span with empty name: {s:?}");
+        assert!(end_us(s) <= now, "span ends in the future: {s:?}");
+        by_tid.entry(s.tid).or_default().push(s);
+    }
+    for (tid, ss) in &by_tid {
+        for w in ss.windows(2) {
+            assert!(w[0].start_us <= w[1].start_us, "tid {tid}: drain order not by start time");
+        }
+        // Stack discipline: two spans on one thread either nest or are
+        // disjoint.  Partial overlap would mean a span "finished" on a
+        // different scope than it started — chrome://tracing would
+        // render garbage lanes.
+        for i in 0..ss.len() {
+            for j in (i + 1)..ss.len() {
+                let (a, b) = (ss[i], ss[j]);
+                let disjoint = b.start_us >= end_us(a) || a.start_us >= end_us(b);
+                let nested = (b.start_us >= a.start_us && end_us(b) <= end_us(a))
+                    || (a.start_us >= b.start_us && end_us(a) <= end_us(b));
+                assert!(disjoint || nested, "tid {tid}: partial overlap\n  {a:?}\n  {b:?}");
+            }
+        }
+    }
+    // Engine dispatch spans carry the push→dispatch queue wait; kernels
+    // (recorded inside ops, no scheduler in between) never do.
+    for s in spans.iter().filter(|s| s.cat == Category::Kernel) {
+        assert_eq!(s.queue_us, 0, "kernel span with queue wait: {s:?}");
+    }
+}
+
+#[test]
+fn plan_replay_records_each_op_exactly_once() {
+    let _g = lock();
+    quiesce();
+    let engine = create(EngineKind::Threaded, 4);
+    let v0 = engine.new_var();
+    let v1 = engine.new_var();
+    let specs = vec![
+        PlanOpSpec {
+            name: "plan.test_a",
+            reads: vec![],
+            writes: vec![v0],
+            cost: f64::NAN,
+            body: Arc::new(|_| {}),
+        },
+        PlanOpSpec {
+            name: "plan.test_b",
+            reads: vec![v0],
+            writes: vec![v1],
+            cost: f64::NAN,
+            body: Arc::new(|_| {}),
+        },
+        PlanOpSpec {
+            name: "plan.test_c",
+            reads: vec![v0, v1],
+            writes: vec![],
+            cost: 64.0,
+            body: Arc::new(|_| {}),
+        },
+    ];
+    let plan = Arc::new(RunPlan::compile(specs));
+    profile::set_enabled(true);
+    for step in 1..=3u64 {
+        engine.run_plan(&plan, step);
+        engine.wait_all();
+    }
+    profile::set_enabled(false);
+    let spans = profile::drain();
+    let plan_spans: Vec<&Span> = spans
+        .iter()
+        .filter(|s| s.cat == Category::Plan && s.name.starts_with("plan.test_"))
+        .collect();
+    assert_eq!(plan_spans.len(), 9, "3 ops x 3 replays, each exactly once");
+    let mut seen = HashSet::new();
+    for s in &plan_spans {
+        assert!(seen.insert((s.a, s.b)), "op (step={}, idx={}) recorded twice", s.a, s.b);
+    }
+    for step in 1..=3u64 {
+        for idx in 0..3u64 {
+            assert!(seen.contains(&(step, idx)), "missing span for step {step} op {idx}");
+        }
+    }
+}
+
+#[test]
+fn disabled_profiling_records_nothing() {
+    let _g = lock();
+    quiesce();
+    run_mlp(false);
+    let spans = profile::drain();
+    assert!(spans.is_empty(), "disabled profiling recorded {} spans", spans.len());
+    assert_eq!(profile::dropped(), 0);
+    // A timer started while disabled must stay silent even if profiling
+    // is switched on before it finishes (the capture-once contract).
+    let t = SpanTimer::start();
+    profile::set_enabled(true);
+    t.finish(Category::Engine, "late_enable", 0, 0, 0);
+    profile::set_enabled(false);
+    assert!(profile::drain().is_empty(), "capture-once timer recorded after late enable");
+}
+
+#[test]
+fn chrome_trace_events_have_required_keys() {
+    let _g = lock();
+    quiesce();
+    profile::set_enabled(true);
+    run_mlp(true);
+    profile::set_enabled(false);
+    let spans = profile::drain();
+    assert!(spans.iter().any(|s| s.cat == Category::Plan), "replay bind recorded no plan spans");
+    let doc = profile::chrome_trace(&spans);
+    let v = Json::parse(&doc).unwrap();
+    let events = v.get("traceEvents").expect("traceEvents key").items();
+    assert_eq!(events.len(), spans.len());
+    for e in events {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        for key in ["ts", "dur", "pid", "tid"] {
+            assert!(e.get(key).and_then(Json::as_u64).is_some(), "missing numeric {key}: {e:?}");
+        }
+        let name = e.get("name").and_then(Json::as_str).expect("name key");
+        assert!(!name.is_empty());
+        assert!(e.get("cat").and_then(Json::as_str).is_some(), "missing cat");
+        assert!(e.get("args").and_then(|a| a.get("queue_us")).is_some(), "missing args.queue_us");
+    }
+}
+
+#[test]
+fn metrics_snapshot_json_roundtrips() {
+    let _g = lock();
+    quiesce();
+    mixnet::metrics::incr("test.profile_counter", 3);
+    mixnet::metrics::observe_us_all("test.profile_hist_us", &[100, 200, 300, 400]);
+    profile::set_enabled(true);
+    run_mlp(false);
+    profile::set_enabled(false);
+    let spans = profile::drain();
+    let snap = MetricsSnapshot::collect(1_000_000, &spans)
+        .with_pull(PullStats { copies: 3, skips: 1, last_snap_age: 2, max_snap_age: 5 })
+        .with_serve(ServeStats {
+            requests: 64,
+            batches: 9,
+            rejected: 1,
+            mean_batch: 2.5,
+            p50_us: 800,
+            p95_us: 2100,
+            p99_us: 4000,
+            uptime_s: 1.25,
+            rps: 128.0,
+        })
+        .with_kv_client(ClientStats { retries: 2, reconnects: 1 })
+        .with_kv_server(ServerStats {
+            msgs: 40,
+            bytes: 123_456,
+            dedup_hits: 4,
+            lease_expiries: 0,
+            applies: 12,
+        });
+    assert!(snap.workers > 0, "workload should have produced worker spans");
+    assert!(!snap.ops.is_empty());
+    let js = snap.to_json();
+    let back = MetricsSnapshot::from_json(&js).unwrap();
+    assert_eq!(back.to_json(), js, "snapshot JSON must roundtrip byte-identically");
+    // Snapshots without the optional sections roundtrip too.
+    let bare = MetricsSnapshot::collect(500, &[]);
+    let js2 = bare.to_json();
+    assert_eq!(MetricsSnapshot::from_json(&js2).unwrap().to_json(), js2);
+}
+
+#[test]
+fn snapshot_ops_cover_engine_busy_time() {
+    // The per-op totals are what the acceptance criterion checks against
+    // step time: the engine/plan rows must add up to the snapshot's own
+    // busy_us exactly (they are computed from the same spans).
+    let _g = lock();
+    quiesce();
+    profile::set_enabled(true);
+    run_mlp(false);
+    profile::set_enabled(false);
+    let spans = profile::drain();
+    let snap = MetricsSnapshot::collect(profile::now_us(), &spans);
+    let op_total: u64 = snap
+        .ops
+        .iter()
+        .filter(|o| o.cat == "engine" || o.cat == "plan")
+        .map(|o| o.total_us)
+        .sum();
+    assert_eq!(op_total, snap.busy_us, "per-op totals must account for all busy time");
+    assert_eq!(snap.dropped_spans, 0);
+}
+
+#[test]
+fn snapshot_path_is_sibling_of_trace() {
+    assert_eq!(profile::snapshot_path("trace.json"), "metrics_snapshot.json");
+    assert_eq!(profile::snapshot_path("/tmp/prof/trace.json"), "/tmp/prof/metrics_snapshot.json");
+}
+
+#[test]
+fn histogram_reservoir_is_deterministic_and_report_sorted() {
+    let _g = lock();
+    // Identical observation streams into two reservoirs must agree
+    // exactly: the xorshift state is fixed-seeded, not time-seeded.
+    let mut h1 = mixnet::metrics::Histogram::new(128);
+    let mut h2 = mixnet::metrics::Histogram::new(128);
+    for v in 0..50_000u64 {
+        let x = v.wrapping_mul(2_654_435_761) % 1_000_003;
+        h1.observe(x);
+        h2.observe(x);
+    }
+    assert_eq!(h1.percentiles(&[50.0, 95.0, 99.0]), h2.percentiles(&[50.0, 95.0, 99.0]));
+    mixnet::metrics::incr("zz.profile_test", 1);
+    mixnet::metrics::incr("aa.profile_test", 1);
+    let rep = mixnet::metrics::report();
+    let lines: Vec<&str> = rep.lines().collect();
+    let mut sorted = lines.clone();
+    sorted.sort();
+    assert_eq!(lines, sorted, "report() lines must come out sorted");
+}

@@ -173,9 +173,16 @@ if [ "${CHAOS:-0}" = "1" ]; then
   rm -f "$chaos_log"
 fi
 
+# Shared BENCH_*.json metadata block (same keys util/bench.rs emits).
+git_sha="${GITHUB_SHA:-$(git -C "$ROOT" rev-parse HEAD 2>/dev/null || echo unknown)}"
+intra_threads="${PALLAS_INTRA_THREADS:-default}"
 cat > "$BENCH_OUT" <<EOF
 {
+  "schema_version": "1",
   "bench": "dist_train",
+  "git_sha": "$git_sha",
+  "intra_threads": "$intra_threads",
+  "unix_time": "$(date +%s)",
   "quick": $([ "$QUICK" = "1" ] && echo true || echo false),
   "model": "$MODEL",
   "examples_per_worker": $EXAMPLES,
