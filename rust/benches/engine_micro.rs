@@ -11,8 +11,10 @@
 //!
 //! Emits `BENCH_engine.json` (or `$BENCH_OUT`): per-case records plus
 //! top-level meta with `replay_ns_per_op`, `push_ns_per_op`,
-//! `replay_speedup_vs_push` (acceptance target: >= 5x) and
-//! `steady_state_pool_misses_per_step` (target: 0).
+//! `replay_speedup_vs_push` (acceptance target: >= 5x),
+//! `steady_state_pool_misses_per_step` (target: 0), and (ISSUE 8)
+//! `fused_speedup` — geomean of the fused-vs-unfused forward A/Bs on
+//! AlexNet and a VGG block (CI fails if fused regresses by > 5%).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -20,13 +22,109 @@ use std::sync::Arc;
 
 use mixnet::engine::{create, EngineKind, EngineRef, PlanOpSpec, RunPlan, VarHandle};
 use mixnet::executor::{BindConfig, Executor};
-use mixnet::models::mlp;
+use mixnet::models::{alexnet, mlp, Model};
 use mixnet::ndarray::{pool, NDArray};
+use mixnet::symbol::{Act, Pool, Symbol};
 use mixnet::util::bench::{print_table, standard_meta, write_bench_json, BenchRecord, Bencher};
 use mixnet::util::Rng;
 
 /// Per-op (reads, writes) var sets, in program order.
 type Deps = Vec<(Vec<VarHandle>, Vec<VarHandle>)>;
+
+/// One VGG-style stage (two 3x3 conv+relu, then a 2x2 max-pool) with a
+/// small classifier head — the conv-heavy shape the epilogue-fusion pass
+/// targets without the full VGG parameter bill.
+fn vgg_block(num_classes: usize, hw: usize) -> Model {
+    let sym = Symbol::var("data")
+        .convolution("conv1", 32, 3, 1, 1)
+        .activation("relu1", Act::Relu)
+        .convolution("conv2", 32, 3, 1, 1)
+        .activation("relu2", Act::Relu)
+        .pooling("pool1", Pool::Max, 2, 2, 0)
+        .flatten("flat")
+        .fully_connected("fc", num_classes)
+        .softmax_output("softmax");
+    Model {
+        name: format!("vgg-block@{hw}"),
+        symbol: sym,
+        feat_shape: vec![3, hw, hw],
+        num_classes,
+    }
+}
+
+/// Bind `model` twice (epilogue fusion off / on) with identical weights,
+/// time inference forward passes, and return `unfused / fused` median
+/// speedup.  Fusion is bitwise lossless (property-tested in
+/// `tests/properties.rs`), so this is a pure perf A/B.
+fn fused_forward_ab(
+    b: &Bencher,
+    case: &str,
+    model: &Model,
+    batch: usize,
+    records: &mut Vec<BenchRecord>,
+    rows: &mut Vec<Vec<String>>,
+) -> f64 {
+    let shapes = model.var_shapes(batch).expect("shapes");
+    let feat = model
+        .feat_shape
+        .iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join("x");
+    let shape_label = format!("{batch}x{feat}");
+    let mut medians = [0.0f64; 2];
+    for (i, fuse) in [false, true].into_iter().enumerate() {
+        let engine = create(EngineKind::Threaded, 4);
+        // Re-seeded per bind and drawn in the same (stable per-map)
+        // iteration order, so both sides see identical weights.
+        let mut rng = Rng::seed_from_u64(11);
+        let args: HashMap<String, NDArray> = shapes
+            .iter()
+            .map(|(k, shape)| {
+                let n: usize = shape.iter().product();
+                let data: Vec<f32> = if k.ends_with("_label") {
+                    vec![0.0; n]
+                } else {
+                    (0..n).map(|_| rng.normal_with(0.0, 0.1)).collect()
+                };
+                (k.clone(), NDArray::from_vec_on(shape, data, engine.clone()))
+            })
+            .collect();
+        let exec = Executor::bind(
+            &model.symbol,
+            engine.clone(),
+            args,
+            &[],
+            BindConfig { fuse, ..BindConfig::inference() },
+        )
+        .expect("bind");
+        exec.forward();
+        engine.wait_all();
+        let tag = if fuse { "fused" } else { "unfused" };
+        let stats = b.run(&format!("{case}.{tag}"), || {
+            exec.forward();
+            engine.wait_all();
+        });
+        medians[i] = stats.median_s();
+        records.push(BenchRecord::from_stats(
+            &format!("fusion.{case}_fwd_{tag}"),
+            &shape_label,
+            4,
+            &stats,
+            0.0,
+        ));
+        rows.push(vec![
+            format!("{case} forward, epilogue fusion {}", if fuse { "on" } else { "off" }),
+            format!("{:.2} ms", stats.median_s() * 1e3),
+        ]);
+    }
+    let speedup = medians[0] / medians[1];
+    rows.push(vec![
+        format!("{case} fused speedup (unfused/fused)"),
+        format!("{speedup:.2}x"),
+    ]);
+    speedup
+}
 
 /// A layered dependency DAG shaped like a training step: `layers` levels
 /// of `width` ops, every op reading one var of the previous level and
@@ -293,6 +391,19 @@ fn main() {
         ),
     ]);
 
+    // ---- epilogue fusion: fused vs unfused forward (ISSUE 8) ---------
+    // Same weights, same schedule; the only difference is whether the
+    // graph compiler folds bias/activation/elementwise chains into the
+    // GEMM/conv epilogue (applied while the output tile is cache-hot).
+    let alex_batch = if quick { 1 } else { 4 };
+    let alex = alexnet(4, 64);
+    let alex_speedup = fused_forward_ab(&bh, "alexnet", &alex, alex_batch, &mut records, &mut rows);
+    let vggb_batch = if quick { 2 } else { 8 };
+    let vggb = vgg_block(8, 32);
+    let vggb_speedup =
+        fused_forward_ab(&bh, "vgg_block", &vggb, vggb_batch, &mut records, &mut rows);
+    let fused_speedup = (alex_speedup * vggb_speedup).sqrt();
+
     print_table("engine microbenchmarks", &["case", "cost"], &rows);
 
     let mut meta = standard_meta("engine", quick);
@@ -302,6 +413,9 @@ fn main() {
         ("replay_ns_per_op", format!("{replay_ns:.1}")),
         ("replay_speedup_vs_push", format!("{speedup:.2}")),
         ("steady_state_pool_misses_per_step", format!("{misses_per_step:.3}")),
+        ("alexnet_fused_speedup", format!("{alex_speedup:.3}")),
+        ("vgg_block_fused_speedup", format!("{vggb_speedup:.3}")),
+        ("fused_speedup", format!("{fused_speedup:.3}")),
     ]);
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_engine.json".to_string());
     if let Err(e) = write_bench_json(&out, &meta, &records) {

@@ -33,7 +33,7 @@ use crate::engine::{EngineRef, PlanOpSpec, RunPlan};
 use crate::error::{Error, Result};
 use crate::graph::autodiff::build_backward;
 use crate::graph::memory::{default_external, plan_memory, AllocStrategy, MemPlan};
-use crate::graph::optimize::fuse_elementwise;
+use crate::graph::optimize::{fuse_elementwise, fuse_epilogue};
 use crate::graph::{infer_shapes, Entry, Graph, Op, ShapeMap};
 use crate::ndarray::{NDArray, Storage};
 use crate::symbol::Symbol;
@@ -275,10 +275,17 @@ impl Executor {
         }
 
         // 2. fuse elementwise chains (protect grad entries from being
-        //    swallowed)
+        //    swallowed), then fold surviving chains that trail a GEMM /
+        //    conv into the producer's epilogue so they run while the
+        //    output tile is cache-hot
         if cfg.fuse {
             let protected: Vec<Entry> = grad_entries.values().copied().collect();
             let (fused, emap) = fuse_elementwise(&graph, &protected);
+            for e in grad_entries.values_mut() {
+                *e = emap[e];
+            }
+            let protected: Vec<Entry> = grad_entries.values().copied().collect();
+            let (fused, emap) = fuse_epilogue(&fused, &protected);
             for e in grad_entries.values_mut() {
                 *e = emap[e];
             }
@@ -1017,6 +1024,7 @@ mod tests {
 
     #[test]
     fn fused_and_unfused_agree() {
+        let mut per_mode: Vec<Vec<f32>> = Vec::new();
         for fuse in [false, true] {
             let engine = create(EngineKind::Threaded, 2);
             let exec = Executor::bind(
@@ -1032,6 +1040,38 @@ mod tests {
             // deterministic given seed; compare to self across runs
             exec.forward();
             assert_eq!(p, exec.outputs()[0].to_vec(), "fuse={fuse}");
+            per_mode.push(p);
         }
+        // ... and fusion (elementwise + epilogue) must be lossless:
+        // bitwise-identical outputs across the two binds.
+        let same = per_mode[0]
+            .iter()
+            .zip(&per_mode[1])
+            .all(|(u, f)| u.to_bits() == f.to_bits());
+        assert!(same, "fused output differs bitwise from unfused");
+    }
+
+    #[test]
+    fn epilogue_fusion_reduces_node_count_in_inference_bind() {
+        // fc1+relu must fold into one epilogue-fused node on the
+        // forward-only path; fc2 feeds softmax and stays plain.
+        let engine = create(EngineKind::Threaded, 2);
+        let exec = Executor::bind(
+            &mlp_symbol(),
+            Arc::clone(&engine),
+            mlp_args(4, Arc::clone(&engine), 5),
+            &[],
+            BindConfig::inference(),
+        )
+        .unwrap();
+        let fused = exec
+            .graph()
+            .nodes
+            .iter()
+            .filter(|nd| !nd.op.epilogue().is_empty())
+            .count();
+        assert_eq!(fused, 1, "expected exactly one epilogue-fused node");
+        exec.forward();
+        exec.wait();
     }
 }

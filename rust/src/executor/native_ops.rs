@@ -33,6 +33,27 @@ fn dims2(s: &[usize]) -> (usize, usize) {
     (s[0], s[1..].iter().product())
 }
 
+/// Bind a graph-level epilogue chain to kernel [`k::EpStep`]s, pulling
+/// each `Binary` step's operand from `extras` in order (the fused node's
+/// inputs after x, w, b).  FC/conv nodes have no inplace pairs, so every
+/// operand is present.
+fn ep_steps<'a>(steps: &[FusedStep], extras: &[Option<&'a [f32]>]) -> Vec<k::EpStep<'a>> {
+    let mut extra = 0usize;
+    steps
+        .iter()
+        .map(|st| match st {
+            FusedStep::Act(kind) => k::EpStep::Act(*kind),
+            FusedStep::AddScalar(s) => k::EpStep::AddScalar(*s),
+            FusedStep::MulScalar(s) => k::EpStep::MulScalar(*s),
+            FusedStep::Binary(op) => {
+                let b = extras[extra].expect("epilogue operand");
+                extra += 1;
+                k::EpStep::Binary(*op, b)
+            }
+        })
+        .collect()
+}
+
 fn nchw(s: &[usize]) -> (usize, usize, usize, usize) {
     (s[0], s[1], s[2], s[3])
 }
@@ -44,14 +65,20 @@ fn nchw(s: &[usize]) -> (usize, usize, usize, usize) {
 pub fn execute(op: &Op, mut a: OpArgs<'_>) {
     match op {
         Op::Variable => unreachable!("variables are bound, not executed"),
-        Op::FullyConnected { .. } => {
+        Op::FullyConnected { epilogue, .. } => {
             let (m, kk) = dims2(&a.in_shapes[0]);
             let n = a.in_shapes[1][0]; // weight [n, k]
             let x = a.in_data[0].expect("fc x");
             let w = a.in_data[1].expect("fc w");
             let b = a.in_data[2].expect("fc b");
-            k::gemm_nt(x, w, a.out[0], m, kk, n, 0.0);
-            k::bias_add(a.out[0], b, m, n);
+            if epilogue.is_empty() {
+                k::gemm_nt(x, w, a.out[0], m, kk, n, 0.0);
+                k::bias_add(a.out[0], b, m, n);
+            } else {
+                let steps = ep_steps(epilogue, &a.in_data[3..]);
+                let ep = k::Epilogue { bias: Some(b), bias_per_row: false, steps: &steps };
+                k::gemm_nt_ep(x, w, a.out[0], m, kk, n, 0.0, &ep);
+            }
         }
         Op::FullyConnectedBackward => {
             // (dy, x, w) -> (dx, dw, db)
@@ -66,16 +93,24 @@ pub fn execute(op: &Op, mut a: OpArgs<'_>) {
             k::gemm_tn(dy, x, dw[0], h, m, kk, 0.0); // dw = dy^T @ x
             k::bias_grad(dy, db[0], m, h, 0.0);
         }
-        Op::Convolution { num_filter, kernel, stride, pad } => {
+        Op::Convolution { num_filter, kernel, stride, pad, epilogue } => {
             let (n, c, h, w) = nchw(&a.in_shapes[0]);
             let x = a.in_data[0].expect("conv x");
             let wt = a.in_data[1].expect("conv w");
             let b = a.in_data[2].expect("conv b");
             // Image-parallel path with per-thread im2col scratch; the
             // planner workspace is only needed by the backward pass.
-            k::conv2d_forward(
-                x, wt, b, a.out[0], n, c, h, w, *num_filter, *kernel, *stride, *pad,
-            );
+            if epilogue.is_empty() {
+                k::conv2d_forward(
+                    x, wt, b, a.out[0], n, c, h, w, *num_filter, *kernel, *stride, *pad,
+                );
+            } else {
+                let steps = ep_steps(epilogue, &a.in_data[3..]);
+                k::conv2d_forward_ep(
+                    x, wt, b, a.out[0], n, c, h, w, *num_filter, *kernel, *stride, *pad,
+                    &steps,
+                );
+            }
         }
         Op::ConvolutionBackward { kernel, stride, pad } => {
             // (dy, x, w) -> (dx, dw, db)
@@ -524,7 +559,7 @@ mod tests {
         let b = vec![0.5, -0.5, 0.0];
         let mut y = vec![0.0; 3];
         execute(
-            &Op::FullyConnected { num_hidden: 3 },
+            &Op::FullyConnected { num_hidden: 3, epilogue: vec![] },
             OpArgs {
                 in_data: vec![Some(&x), Some(&w), Some(&b)],
                 in_shapes: vec![vec![1, 2], vec![3, 2], vec![3]],
@@ -536,6 +571,47 @@ mod tests {
             },
         );
         assert_eq!(y, vec![1.5, 1.5, 3.0]);
+    }
+
+    #[test]
+    fn fc_with_epilogue_matches_unfused_dispatch() {
+        // Same node as fc_forward_known_values plus relu and a residual
+        // add in the epilogue: dispatch must agree exactly with running
+        // the unfused op sequence.
+        let x = vec![1.0, 2.0, -3.0, 1.0];
+        let w = vec![1.0, 0.0, 0.0, 1.0, -1.0, -1.0];
+        let b = vec![0.5, -0.5, 0.0];
+        let res = vec![0.25, 0.5, 0.75, 1.0, 1.25, 1.5];
+        let mut y = vec![0.0; 6];
+        execute(
+            &Op::FullyConnected {
+                num_hidden: 3,
+                epilogue: vec![
+                    FusedStep::Act(k::ActKind::Relu),
+                    FusedStep::Binary(k::EwBinary::Add),
+                ],
+            },
+            OpArgs {
+                in_data: vec![Some(&x), Some(&w), Some(&b), Some(&res)],
+                in_shapes: vec![vec![2, 2], vec![3, 2], vec![3], vec![2, 3]],
+                out: vec![&mut y],
+                out_shapes: vec![vec![2, 3]],
+                workspace: None,
+                training: true,
+                step: 0,
+            },
+        );
+        // unfused: gemm_nt + bias, relu, + res
+        let mut want = vec![0.0; 6];
+        k::gemm_nt(&x, &w, &mut want, 2, 2, 3, 0.0);
+        k::bias_add(&mut want, &b, 2, 3);
+        for v in want.iter_mut() {
+            *v = v.max(0.0);
+        }
+        for (v, r) in want.iter_mut().zip(&res) {
+            *v += r;
+        }
+        assert_eq!(y, want);
     }
 
     #[test]
@@ -653,7 +729,7 @@ mod tests {
         let mut y = vec![0.0; 8];
         let mut ws = vec![0.0; 2 * 4];
         execute(
-            &Op::Convolution { num_filter: 2, kernel: 1, stride: 1, pad: 0 },
+            &Op::Convolution { num_filter: 2, kernel: 1, stride: 1, pad: 0, epilogue: vec![] },
             OpArgs {
                 in_data: vec![Some(&x), Some(&w), Some(&b)],
                 in_shapes: vec![vec![1, 2, 2, 2], vec![2, 2, 1, 1], vec![2]],

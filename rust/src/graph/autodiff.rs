@@ -333,7 +333,7 @@ mod tests {
             vec![Entry::new(x), Entry::new(x)],
         );
         let fc = g.add_node(
-            Op::FullyConnected { num_hidden: 4 },
+            Op::FullyConnected { num_hidden: 4, epilogue: vec![] },
             "fc",
             vec![Entry::new(two_x), Entry::new(w), Entry::new(b)],
         );

@@ -40,7 +40,8 @@ impl Entry {
     }
 }
 
-/// One step of a fused elementwise chain (see [`Op::FusedElemwise`]).
+/// One step of a fused elementwise chain (see [`Op::FusedElemwise`] and
+/// the epilogue fields of [`Op::FullyConnected`] / [`Op::Convolution`]).
 #[derive(Debug, Clone, PartialEq)]
 pub enum FusedStep {
     /// Apply an activation.
@@ -51,6 +52,23 @@ pub enum FusedStep {
     MulScalar(f32),
     /// Combine with the next extra input elementwise.
     Binary(EwBinary),
+}
+
+impl FusedStep {
+    /// Short lowercase label for graph dumps (`relu`, `add0.5`, ...).
+    pub fn label(&self) -> String {
+        match self {
+            FusedStep::Act(ActKind::Relu) => "relu".into(),
+            FusedStep::Act(ActKind::Tanh) => "tanh".into(),
+            FusedStep::Act(ActKind::Sigmoid) => "sigmoid".into(),
+            FusedStep::AddScalar(s) => format!("add{s}"),
+            FusedStep::MulScalar(s) => format!("mul{s}"),
+            FusedStep::Binary(EwBinary::Add) => "add".into(),
+            FusedStep::Binary(EwBinary::Sub) => "sub".into(),
+            FusedStep::Binary(EwBinary::Mul) => "mul".into(),
+            FusedStep::Binary(EwBinary::Div) => "div".into(),
+        }
+    }
 }
 
 /// Graph operators.
@@ -64,11 +82,22 @@ pub enum Op {
     /// Free variable (input data, label, or parameter). No inputs, 1 out.
     Variable,
     /// `[b,in] x [hidden,in] x [hidden] -> [b,hidden]` (x, weight, bias).
+    ///
+    /// When `epilogue` is non-empty (set only by
+    /// [`optimize::fuse_epilogue`]) the steps run on each output element
+    /// right after its GEMM accumulation + bias, while the tile is still
+    /// cache-hot; every `Binary` step consumes one extra input (appended
+    /// after x, w, b) of the output shape.
     FullyConnected {
         /// Output width.
         num_hidden: usize,
+        /// Fused post-GEMM elementwise chain (empty = plain FC).
+        epilogue: Vec<FusedStep>,
     },
     /// NCHW convolution: `(x[n,c,h,w], w[f,c,kh,kw], b[f]) -> y[n,f,oh,ow]`.
+    ///
+    /// `epilogue` as on [`Op::FullyConnected`]: a fused per-element chain
+    /// applied per image right after im2col+GEMM+bias.
     Convolution {
         /// Number of output filters.
         num_filter: usize,
@@ -78,6 +107,8 @@ pub enum Op {
         stride: usize,
         /// Zero padding.
         pad: usize,
+        /// Fused post-conv elementwise chain (empty = plain conv).
+        epilogue: Vec<FusedStep>,
     },
     /// Elementwise activation: `x -> y`.
     Activation {
@@ -221,6 +252,8 @@ impl Op {
     pub fn type_name(&self) -> &'static str {
         match self {
             Op::Variable => "Variable",
+            Op::FullyConnected { epilogue, .. } if !epilogue.is_empty() => "FullyConnected+ep",
+            Op::Convolution { epilogue, .. } if !epilogue.is_empty() => "Convolution+ep",
             Op::FullyConnected { .. } => "FullyConnected",
             Op::Convolution { .. } => "Convolution",
             Op::Activation { .. } => "Activation",
@@ -246,6 +279,35 @@ impl Op {
             Op::ConcatBackward => "ConcatBackward",
             Op::DropoutBackward => "DropoutBackward",
         }
+    }
+
+    /// The fused epilogue chain of an epilogue-capable op (empty slice
+    /// for everything else).
+    pub fn epilogue(&self) -> &[FusedStep] {
+        match self {
+            Op::FullyConnected { epilogue, .. } | Op::Convolution { epilogue, .. } => epilogue,
+            _ => &[],
+        }
+    }
+
+    /// Human-readable label: [`Op::type_name`] with the fused epilogue
+    /// chain spelled out (e.g. `FullyConnected+relu`), so dumped graphs
+    /// show what the compiler actually ran.
+    pub fn label(&self) -> String {
+        let ep = self.epilogue();
+        if ep.is_empty() {
+            return self.type_name().to_string();
+        }
+        let base = match self {
+            Op::Convolution { .. } => "Convolution",
+            _ => "FullyConnected",
+        };
+        let mut s = base.to_string();
+        for st in ep {
+            s.push('+');
+            s.push_str(&st.label());
+        }
+        s
     }
 }
 
@@ -368,6 +430,29 @@ impl Graph {
 /// Inferred shapes: `shapes[node][out]` is the dims of that entry.
 pub type ShapeMap = Vec<Vec<Vec<usize>>>;
 
+/// Validate that an epilogue's `Binary` steps line up with a fused
+/// node's extra inputs: exactly one extra per `Binary` step, each of the
+/// node's output shape.
+fn check_epilogue_extras(
+    epilogue: &[FusedStep],
+    extras: &[&Vec<usize>],
+    out: &[usize],
+) -> std::result::Result<(), String> {
+    let binaries = epilogue.iter().filter(|s| matches!(s, FusedStep::Binary(_))).count();
+    if extras.len() != binaries {
+        return Err(format!(
+            "epilogue has {binaries} binary step(s) but {} extra input(s)",
+            extras.len()
+        ));
+    }
+    for (i, s) in extras.iter().enumerate() {
+        if s.as_slice() != out {
+            return Err(format!("epilogue operand {i} shape {s:?} != output {out:?}"));
+        }
+    }
+    Ok(())
+}
+
 /// Infer every entry's shape from the shapes of `Variable` nodes.
 ///
 /// `var_shapes` maps variable *names* to shapes.  Fails if a variable is
@@ -386,8 +471,8 @@ pub fn infer_shapes(graph: &Graph, var_shapes: &HashMap<String, Vec<usize>>) -> 
                     .ok_or_else(|| err(format!("no shape bound for variable '{}'", node.name)))?;
                 vec![s.clone()]
             }
-            Op::FullyConnected { num_hidden } => {
-                if ins.len() != 3 {
+            Op::FullyConnected { num_hidden, epilogue } => {
+                if ins.len() < 3 {
                     return Err(err("FullyConnected needs (x, w, b)".into()));
                 }
                 let b = ins[0][0];
@@ -401,10 +486,12 @@ pub fn infer_shapes(graph: &Graph, var_shapes: &HashMap<String, Vec<usize>>) -> 
                 if ins[2] != &vec![*num_hidden] {
                     return Err(err(format!("bias shape {:?} != [{num_hidden}]", ins[2])));
                 }
-                vec![vec![b, *num_hidden]]
+                let out = vec![b, *num_hidden];
+                check_epilogue_extras(epilogue, &ins[3..], &out).map_err(err)?;
+                vec![out]
             }
-            Op::Convolution { num_filter, kernel, stride, pad } => {
-                if ins.len() != 3 || ins[0].len() != 4 {
+            Op::Convolution { num_filter, kernel, stride, pad, epilogue } => {
+                if ins.len() < 3 || ins[0].len() != 4 {
                     return Err(err("Convolution needs (x[n,c,h,w], w, b)".into()));
                 }
                 let (n, c, h, w) = (ins[0][0], ins[0][1], ins[0][2], ins[0][3]);
@@ -416,7 +503,9 @@ pub fn infer_shapes(graph: &Graph, var_shapes: &HashMap<String, Vec<usize>>) -> 
                 }
                 let oh = conv_out(h, *kernel, *stride, *pad);
                 let ow = conv_out(w, *kernel, *stride, *pad);
-                vec![vec![n, *num_filter, oh, ow]]
+                let out = vec![n, *num_filter, oh, ow];
+                check_epilogue_extras(epilogue, &ins[3..], &out).map_err(err)?;
+                vec![out]
             }
             Op::Activation { .. } | Op::AddScalar { .. } | Op::MulScalar { .. } | Op::Identity => {
                 vec![ins[0].clone()]
@@ -560,7 +649,7 @@ mod tests {
         let w1 = g.add_variable("fc1_weight");
         let b1 = g.add_variable("fc1_bias");
         let fc1 = g.add_node(
-            Op::FullyConnected { num_hidden: 64 },
+            Op::FullyConnected { num_hidden: 64, epilogue: vec![] },
             "fc1",
             vec![Entry::new(data), Entry::new(w1), Entry::new(b1)],
         );
@@ -568,7 +657,7 @@ mod tests {
         let w2 = g.add_variable("fc2_weight");
         let b2 = g.add_variable("fc2_bias");
         let fc2 = g.add_node(
-            Op::FullyConnected { num_hidden: 10 },
+            Op::FullyConnected { num_hidden: 10, epilogue: vec![] },
             "fc2",
             vec![Entry::new(relu), Entry::new(w2), Entry::new(b2)],
         );
@@ -617,7 +706,7 @@ mod tests {
         let w = g.add_variable("w");
         let b = g.add_variable("b");
         let conv = g.add_node(
-            Op::Convolution { num_filter: 8, kernel: 3, stride: 1, pad: 1 },
+            Op::Convolution { num_filter: 8, kernel: 3, stride: 1, pad: 1, epilogue: vec![] },
             "conv",
             vec![Entry::new(data), Entry::new(w), Entry::new(b)],
         );
@@ -635,9 +724,72 @@ mod tests {
         let shapes = infer_shapes(&g, &vs).unwrap();
         assert_eq!(shapes[conv][0], vec![4, 8, 32, 32]);
         assert_eq!(shapes[pool][0], vec![4, 8, 16, 16]);
+        // Forward conv uses per-thread scratch, not planner workspace
+        // (see `workspace_bytes`); only ConvolutionBackward charges it.
         let ws = workspace_bytes(&g, &shapes);
-        assert!(ws[conv] > 0);
+        assert_eq!(ws[conv], 0);
         assert_eq!(ws[pool], 0);
+    }
+
+    #[test]
+    fn conv_backward_charges_workspace() {
+        let mut g = Graph::new();
+        let dy = g.add_variable("dy");
+        let x = g.add_variable("x");
+        let w = g.add_variable("w");
+        let bwd = g.add_node(
+            Op::ConvolutionBackward { kernel: 3, stride: 1, pad: 1 },
+            "conv_bwd",
+            vec![Entry::new(dy), Entry::new(x), Entry::new(w)],
+        );
+        g.outputs = vec![Entry::new(bwd)];
+        g.num_forward = g.nodes.len();
+        let mut vs = HashMap::new();
+        vs.insert("dy".into(), vec![4, 8, 32, 32]);
+        vs.insert("x".into(), vec![4, 3, 32, 32]);
+        vs.insert("w".into(), vec![8, 3, 3, 3]);
+        let shapes = infer_shapes(&g, &vs).unwrap();
+        let ws = workspace_bytes(&g, &shapes);
+        // per-image im2col columns: [c*k*k, oh*ow] f32
+        assert_eq!(ws[bwd], 3 * 3 * 3 * 32 * 32 * 4);
+    }
+
+    #[test]
+    fn fused_epilogue_shapes_and_labels() {
+        // FC with epilogue [relu, Binary(Add)]: extra operand must match
+        // the output shape; the label spells the chain out.
+        let mut g = Graph::new();
+        let data = g.add_variable("data");
+        let w = g.add_variable("w");
+        let b = g.add_variable("b");
+        let res = g.add_variable("res");
+        let op = Op::FullyConnected {
+            num_hidden: 4,
+            epilogue: vec![FusedStep::Act(ActKind::Relu), FusedStep::Binary(EwBinary::Add)],
+        };
+        assert_eq!(op.type_name(), "FullyConnected+ep");
+        assert_eq!(op.label(), "FullyConnected+relu+add");
+        let fc = g.add_node(
+            op,
+            "fc_ep",
+            vec![Entry::new(data), Entry::new(w), Entry::new(b), Entry::new(res)],
+        );
+        g.outputs = vec![Entry::new(fc)];
+        g.num_forward = g.nodes.len();
+        let mut vs = HashMap::new();
+        vs.insert("data".into(), vec![2, 6]);
+        vs.insert("w".into(), vec![4, 6]);
+        vs.insert("b".into(), vec![4]);
+        vs.insert("res".into(), vec![2, 4]);
+        let shapes = infer_shapes(&g, &vs).unwrap();
+        assert_eq!(shapes[fc][0], vec![2, 4]);
+        // wrong operand shape is rejected
+        vs.insert("res".into(), vec![4, 2]);
+        assert!(infer_shapes(&g, &vs).is_err());
+        // missing operand is rejected
+        g.nodes[fc].inputs.pop();
+        vs.insert("res".into(), vec![2, 4]);
+        assert!(infer_shapes(&g, &vs).is_err());
     }
 
     #[test]

@@ -11,6 +11,10 @@
 //!   of elementwise ops (`a * b + 1`, scalar ops, activations) collapse
 //!   into a single [`Op::FusedElemwise`] node, saving kernel dispatches
 //!   and intermediate buffers.
+//! * [`fuse_epilogue`] — runs after `fuse_elementwise` and folds the
+//!   elementwise chain *following* a `FullyConnected` / `Convolution`
+//!   node into the producer's epilogue, so bias+activation run inside
+//!   the GEMM/conv kernel while the output tile is still cache-hot.
 
 use std::collections::{HashMap, HashSet};
 
@@ -260,6 +264,208 @@ pub fn fuse_elementwise(graph: &Graph, protected: &[Entry]) -> (Graph, HashMap<E
     (out, entry_map)
 }
 
+/// The steps an op contributes when absorbed into a producer's epilogue
+/// (`None` = not absorbable).  `FusedElemwise` nodes — produced by the
+/// preceding [`fuse_elementwise`] pass — are absorbed wholesale.
+fn epilogue_steps(op: &Op) -> Option<Vec<FusedStep>> {
+    match op {
+        Op::Activation { kind } => Some(vec![FusedStep::Act(*kind)]),
+        Op::AddScalar { s } => Some(vec![FusedStep::AddScalar(*s)]),
+        Op::MulScalar { s } => Some(vec![FusedStep::MulScalar(*s)]),
+        Op::FusedElemwise { steps } => Some(steps.clone()),
+        _ => None,
+    }
+}
+
+/// Fold the single-consumer chain of elementwise ops following a
+/// `FullyConnected` / `Convolution` node into the producer's `epilogue`
+/// field, so the chain runs inside the producer kernel while each output
+/// tile is cache-hot (the graph-compiler half of the epilogue-fusion
+/// optimization; the kernel half is `ndarray::kernels::Epilogue`).
+///
+/// A chain `P -> f1 -> ... -> fk` folds when `P` is a forward-segment
+/// FC/conv and every intermediate (including `P`'s own output) is
+/// consumed exactly once, by the next op in the chain via its first
+/// input, is not a graph output or `protected`, and does not cross the
+/// forward/backward boundary.  Extra `Binary` operands join the fused
+/// node's inputs after `(x, w, b)`, in step order.
+///
+/// Gradients are unaffected: only refcount-1 intermediates are
+/// rewritten, and the existing activation backwards consume the
+/// *post*-activation output — which becomes the fused node's output.
+/// Returns the rewritten graph and an entry remap for external
+/// bookkeeping (e.g. gradient entries).
+pub fn fuse_epilogue(graph: &Graph, protected: &[Entry]) -> (Graph, HashMap<Entry, Entry>) {
+    let rc = graph.entry_refcounts(&[]);
+    let mut protected_set: HashSet<Entry> = protected.iter().copied().collect();
+    for e in &graph.outputs {
+        protected_set.insert(*e);
+    }
+
+    let n_nodes = graph.nodes.len();
+    let mut consumer: Vec<Option<NodeId>> = vec![None; n_nodes];
+    let mut consumer_count: Vec<usize> = vec![0; n_nodes];
+    for (id, node) in graph.nodes.iter().enumerate() {
+        for e in &node.inputs {
+            consumer_count[e.node] += 1;
+            consumer[e.node] = Some(id);
+        }
+    }
+
+    let segment = |id: NodeId| -> usize {
+        if graph.num_forward == 0 || id < graph.num_forward {
+            0
+        } else {
+            1
+        }
+    };
+
+    // Can `id`'s unique consumer absorb it?  The criteria mirror
+    // fuse_elementwise: single use, consumed via input 0, unprotected,
+    // same segment, absorbable op.
+    let absorbed_by = |id: NodeId| -> Option<NodeId> {
+        let e = Entry::new(id);
+        if rc.get(&e).copied().unwrap_or(0) != 1 || protected_set.contains(&e) {
+            return None;
+        }
+        let next = consumer[id]?;
+        if consumer_count[id] != 1 {
+            return None;
+        }
+        if graph.nodes[next].inputs.first() != Some(&e) {
+            return None;
+        }
+        if epilogue_steps(&graph.nodes[next].op).is_none() {
+            return None;
+        }
+        if segment(id) != segment(next) {
+            return None;
+        }
+        Some(next)
+    };
+
+    // chains[cid] = [producer, member, ...]; producer is an FC/conv in
+    // the forward segment with a (still) empty epilogue.
+    let mut chain_of: Vec<Option<usize>> = vec![None; n_nodes];
+    let mut chains: Vec<Vec<NodeId>> = Vec::new();
+    for id in 0..n_nodes {
+        let is_producer = matches!(
+            graph.nodes[id].op,
+            Op::FullyConnected { .. } | Op::Convolution { .. }
+        ) && graph.nodes[id].op.epilogue().is_empty()
+            && segment(id) == 0;
+        if !is_producer {
+            continue;
+        }
+        let mut chain = vec![id];
+        let mut cur = id;
+        while let Some(next) = absorbed_by(cur) {
+            chain.push(next);
+            cur = next;
+        }
+        if chain.len() >= 2 {
+            let cid = chains.len();
+            for &n in &chain {
+                chain_of[n] = Some(cid);
+            }
+            chains.push(chain);
+        }
+    }
+
+    // Rebuild, emitting each fused producer at its chain *tail*'s
+    // position (every extra operand is produced before the tail).
+    let mut out = Graph::new();
+    let mut entry_map: HashMap<Entry, Entry> = HashMap::new();
+    let mut num_forward_new = 0usize;
+    let map_entry = |m: &HashMap<Entry, Entry>, e: Entry| -> Entry {
+        *m.get(&e).unwrap_or_else(|| panic!("unmapped entry {e:?}"))
+    };
+    for (id, node) in graph.nodes.iter().enumerate() {
+        let emitted: Option<NodeId> = match chain_of[id] {
+            Some(cid) => {
+                let chain = &chains[cid];
+                if *chain.last().unwrap() != id {
+                    None // producer / interior member: emitted with the tail
+                } else {
+                    let pnode = &graph.nodes[chain[0]];
+                    let mut steps: Vec<FusedStep> = Vec::new();
+                    let mut inputs: Vec<Entry> =
+                        pnode.inputs.iter().map(|e| map_entry(&entry_map, *e)).collect();
+                    for &member in &chain[1..] {
+                        let msteps =
+                            epilogue_steps(&graph.nodes[member].op).expect("absorbable");
+                        let mut extra = 1usize;
+                        for st in &msteps {
+                            if let FusedStep::Binary(_) = st {
+                                inputs.push(map_entry(
+                                    &entry_map,
+                                    graph.nodes[member].inputs[extra],
+                                ));
+                                extra += 1;
+                            }
+                        }
+                        steps.extend(msteps);
+                    }
+                    let op = match &pnode.op {
+                        Op::FullyConnected { num_hidden, .. } => {
+                            Op::FullyConnected { num_hidden: *num_hidden, epilogue: steps }
+                        }
+                        Op::Convolution { num_filter, kernel, stride, pad, .. } => Op::Convolution {
+                            num_filter: *num_filter,
+                            kernel: *kernel,
+                            stride: *stride,
+                            pad: *pad,
+                            epilogue: steps,
+                        },
+                        other => unreachable!("non-epilogue producer {:?}", other.type_name()),
+                    };
+                    let nid = out.nodes.len();
+                    out.nodes.push(Node {
+                        op,
+                        name: format!("{}_ep", pnode.name),
+                        inputs,
+                        control_deps: vec![],
+                    });
+                    Some(nid)
+                }
+            }
+            None => {
+                let inputs: Vec<Entry> =
+                    node.inputs.iter().map(|e| map_entry(&entry_map, *e)).collect();
+                let nid = out.nodes.len();
+                out.nodes.push(Node {
+                    op: node.op.clone(),
+                    name: node.name.clone(),
+                    inputs,
+                    control_deps: vec![],
+                });
+                Some(nid)
+            }
+        };
+        if let Some(nid) = emitted {
+            for o in 0..graph.num_outputs_of(id) {
+                entry_map.insert(Entry { node: id, out: o }, Entry { node: nid, out: o });
+            }
+        }
+        if id + 1 == graph.num_forward {
+            num_forward_new = out.nodes.len();
+        }
+    }
+    // Producer and interior members map to the fused node's output.
+    for chain in &chains {
+        let tail = *chain.last().unwrap();
+        let fused_entry = entry_map[&Entry::new(tail)];
+        for &member in chain.iter() {
+            if member != tail {
+                entry_map.insert(Entry::new(member), fused_entry);
+            }
+        }
+    }
+    out.outputs = graph.outputs.iter().map(|e| entry_map[e]).collect();
+    out.num_forward = if graph.num_forward == 0 { 0 } else { num_forward_new };
+    (out, entry_map)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -383,5 +589,128 @@ mod tests {
         fused.validate().unwrap();
         assert!(fused.num_forward > 0);
         assert!(fused.num_forward <= fused.nodes.len());
+    }
+
+    use crate::ndarray::kernels::ActKind;
+
+    #[test]
+    fn fc_relu_folds_into_epilogue() {
+        // The mlp graph's fc1 -> relu1 chain must fold; fc2 feeds the
+        // softmax head (not absorbable) and stays plain.
+        let (g, vs) = mlp_graph(8);
+        let (fused, map) = fuse_epilogue(&g, &[]);
+        fused.validate().unwrap();
+        assert_eq!(fused.nodes.len(), g.nodes.len() - 1);
+        let fc1 = fused.nodes.iter().find(|n| n.name == "fc1_ep").expect("fused fc1");
+        assert_eq!(fc1.op.epilogue(), &[FusedStep::Act(ActKind::Relu)]);
+        assert_eq!(fc1.op.label(), "FullyConnected+relu");
+        assert!(fused.nodes.iter().all(|n| !matches!(n.op, Op::Activation { .. })));
+        let fc2 = fused.nodes.iter().find(|n| n.name == "fc2").expect("plain fc2");
+        assert!(fc2.op.epilogue().is_empty());
+        // shape inference still works and the old relu entry remaps to
+        // the fused node's output
+        let shapes = infer_shapes(&fused, &vs).unwrap();
+        let out = fused.outputs[0];
+        assert_eq!(shapes[out.node][out.out], vec![8, 10]);
+        let relu_old = g.nodes.iter().position(|n| n.name == "relu1").unwrap();
+        let fc1_new = fused.nodes.iter().position(|n| n.name == "fc1_ep").unwrap();
+        assert_eq!(map[&Entry::new(relu_old)], Entry::new(fc1_new));
+    }
+
+    #[test]
+    fn epilogue_absorbs_fused_elemwise_with_binary_operand() {
+        // fc -> (y * res) + 1 : fuse_elementwise first collapses the
+        // chain into FusedElemwise, then fuse_epilogue folds it into the
+        // FC with `res` appended as an extra input.
+        let mut g = Graph::new();
+        let data = g.add_variable("data");
+        let w = g.add_variable("w");
+        let b = g.add_variable("b");
+        let res = g.add_variable("res");
+        let fc = g.add_node(
+            Op::FullyConnected { num_hidden: 4, epilogue: vec![] },
+            "fc",
+            vec![Entry::new(data), Entry::new(w), Entry::new(b)],
+        );
+        let mul = g.add_node(
+            Op::Elemwise { op: EwBinary::Mul },
+            "mul",
+            vec![Entry::new(fc), Entry::new(res)],
+        );
+        let add1 = g.add_node(Op::AddScalar { s: 1.0 }, "plus1", vec![Entry::new(mul)]);
+        g.outputs = vec![Entry::new(add1)];
+        let (ew, _) = fuse_elementwise(&g, &[]);
+        let (fused, _) = fuse_epilogue(&ew, &[]);
+        fused.validate().unwrap();
+        let fc = fused
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Op::FullyConnected { .. }))
+            .expect("fc survives");
+        assert_eq!(
+            fc.op.epilogue(),
+            &[FusedStep::Binary(EwBinary::Mul), FusedStep::AddScalar(1.0)]
+        );
+        assert_eq!(fc.inputs.len(), 4, "extra binary operand appended");
+        // 4 variables + 1 fused node
+        assert_eq!(fused.nodes.len(), 5);
+        let mut vs = std::collections::HashMap::new();
+        vs.insert("data".into(), vec![2, 6]);
+        vs.insert("w".into(), vec![4, 6]);
+        vs.insert("b".into(), vec![4]);
+        vs.insert("res".into(), vec![2, 4]);
+        infer_shapes(&fused, &vs).unwrap();
+    }
+
+    #[test]
+    fn epilogue_respects_fanout_outputs_and_protection() {
+        // fan-out: fc output consumed twice -> no fusion
+        let (mut g, _) = mlp_graph(8);
+        let fc1 = g.nodes.iter().position(|n| n.name == "fc1").unwrap();
+        let tap = g.add_node(Op::Identity, "tap", vec![Entry::new(fc1)]);
+        g.outputs.push(Entry::new(tap));
+        g.num_forward = g.nodes.len();
+        let (fused, _) = fuse_epilogue(&g, &[]);
+        assert!(fused.nodes.iter().all(|n| n.op.epilogue().is_empty()), "fan-out fused");
+
+        // protection: the producer entry listed as protected -> no fusion
+        let (g2, _) = mlp_graph(8);
+        let fc1 = g2.nodes.iter().position(|n| n.name == "fc1").unwrap();
+        let (fused2, _) = fuse_epilogue(&g2, &[Entry::new(fc1)]);
+        assert!(fused2.nodes.iter().all(|n| n.op.epilogue().is_empty()), "protected fused");
+
+        // graph output: a bare fc head must not be swallowed
+        let (g3, _) = mlp_graph(8);
+        let relu = g3.nodes.iter().position(|n| n.name == "relu1").unwrap();
+        let (pruned, _) = prune(&g3, &[Entry::new(relu)]);
+        let (fused3, _) = fuse_epilogue(&pruned, &[]);
+        // relu1 is the output -> still fusable (fc1 itself is interior)
+        assert!(fused3.nodes.iter().any(|n| !n.op.epilogue().is_empty()));
+        let (pruned_fc, _) = prune(&g3, &[Entry::new(fc1)]);
+        let (fused4, _) = fuse_epilogue(&pruned_fc, &[]);
+        assert!(fused4.nodes.iter().all(|n| n.op.epilogue().is_empty()));
+    }
+
+    #[test]
+    fn epilogue_fusion_applies_in_training_graphs() {
+        // After autodiff, fc1's pre-activation output still has refcount
+        // 1 (FullyConnectedBackward consumes (dy, x, w); the activation
+        // backward consumes the *post*-activation output), so the chain
+        // folds and the backward half is untouched.
+        let (mut g, _vs) = mlp_graph(8);
+        let params: Vec<_> = ["fc1_weight", "fc1_bias", "fc2_weight", "fc2_bias"]
+            .iter()
+            .map(|n| g.find_variable(n).unwrap())
+            .collect();
+        build_backward(&mut g, &params).unwrap();
+        let bwd_nodes = g.nodes.len() - g.num_forward;
+        let (fused, map) = fuse_epilogue(&g, &[]);
+        fused.validate().unwrap();
+        assert!(fused.nodes.iter().any(|n| !n.op.epilogue().is_empty()), "no fusion");
+        assert_eq!(fused.nodes.len() - fused.num_forward, bwd_nodes, "backward rewritten");
+        // every original grad-relevant entry remains mapped
+        for e in &g.outputs {
+            assert!(map.contains_key(e));
+        }
     }
 }

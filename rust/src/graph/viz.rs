@@ -15,10 +15,12 @@ pub fn to_dot(graph: &Graph) -> String {
         } else {
             "style=filled, fillcolor=white"
         };
+        // `label()` spells out fused epilogues (e.g. FullyConnected+relu)
+        // so dumped graphs show what the compiler actually ran.
         s.push_str(&format!(
             "  n{id} [label=\"{}\\n{}\", {style}];\n",
             node.name,
-            node.op.type_name()
+            node.op.label()
         ));
     }
     for (id, node) in graph.nodes.iter().enumerate() {
@@ -47,5 +49,16 @@ mod tests {
             assert!(dot.contains(&n.name), "missing {}", n.name);
         }
         assert!(dot.matches(" -> ").count() >= g.nodes.iter().map(|n| n.inputs.len()).sum());
+    }
+
+    #[test]
+    fn dot_renders_fused_epilogue_labels() {
+        // After epilogue fusion the fc1+relu node must render its chain.
+        let (g, _) = mlp_graph(4);
+        let (fused, _) = crate::graph::optimize::fuse_epilogue(&g, &[]);
+        let dot = to_dot(&fused);
+        assert!(dot.contains("FullyConnected+relu"), "{dot}");
+        // the plain head FC keeps its unadorned label
+        assert!(dot.contains("\\nFullyConnected\""), "{dot}");
     }
 }

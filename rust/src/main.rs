@@ -42,7 +42,8 @@ COMMANDS:
                  --model NAME  --epochs N  --batch N  --lr F  --seed N
                  --classes N   --examples N  --devices N
                  --kv local|dist  --consistency seq|bounded:K|eventual
-                 --weights W0,W1,...  --no-overlap  --checkpoint FILE
+                 --weights W0,W1,...  --no-overlap  --no-fuse
+                 --checkpoint FILE
                  (--kv dist needs --server ADDR; --batch is the global
                   batch, split over --devices replica shards; bounded:K
                   lets replicas run K rounds ahead of delivery; --weights
@@ -52,6 +53,8 @@ COMMANDS:
   serve        dynamic-batching inference server + closed-loop demo
                  --model NAME  --checkpoint FILE  --clients N  --requests N
                  --max-batch N  --max-delay-us N  --workers N  --seed N
+                 --no-fuse  (bind bucket executors without graph fusion;
+                  fusion is lossless, so this is a perf A/B knob)
                  --live  (train and serve concurrently: the server answers
                   from the training store's committed snapshots)
                  (no --checkpoint: quick-trains/initializes weights first)
@@ -243,7 +246,7 @@ fn bind_trainer(
             devices,
             shards,
             overlap: !args.has("no-overlap"),
-            bind: BindConfig::default(),
+            bind: BindConfig { fuse: !args.has("no-fuse"), ..Default::default() },
             seed,
             sync,
             weights: weights.unwrap_or_default(),
@@ -509,7 +512,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let bind_batch = if feat_shape.len() == 1 { 32 } else { 4 };
             let shapes = init.param_shapes(bind_batch)?;
             let mut module = Module::new(init.symbol, engine.clone());
-            module.bind(bind_batch, &feat_shape, &shapes, BindConfig::default(), seed)?;
+            let bind = BindConfig { fuse: !args.has("no-fuse"), ..Default::default() };
+            module.bind(bind_batch, &feat_shape, &shapes, bind, seed)?;
             if feat_shape.len() == 1 {
                 let classes = m.num_classes.min(4);
                 let ds = synth::class_clusters(1024, classes, feat_len, 0.3, seed);
@@ -536,6 +540,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Servable::new(m, params, engine.clone())?
         }
     };
+    let mut servable = servable;
+    servable.set_fuse(!args.has("no-fuse"));
 
     let mut server = Server::start(&servable, &cfg)?;
     println!(
@@ -612,8 +618,15 @@ fn cmd_serve_live(args: &Args) -> Result<()> {
 
     // Seed the store with the initial weights; the servable holds its
     // own arrays and follows the store's committed snapshots.
+    let fuse = !args.has("no-fuse");
     let mut module = Module::new(by_name(&model_spec)?.symbol, engine.clone());
-    module.bind(batch, &feat_shape, &shapes, BindConfig::default(), seed)?;
+    module.bind(
+        batch,
+        &feat_shape,
+        &shapes,
+        BindConfig { fuse, ..Default::default() },
+        seed,
+    )?;
     let store = Arc::new(LocalKVStore::new(
         engine.clone(),
         1,
@@ -632,6 +645,7 @@ fn cmd_serve_live(args: &Args) -> Result<()> {
     }
     drop(module); // the trainer thread binds its own executor
     let mut servable = Servable::new(m, sparams, engine.clone())?;
+    servable.set_fuse(fuse);
     servable.attach_live(&store)?;
 
     // Trainer thread: the paper's §2.3 loop pushing into the same store
@@ -643,7 +657,13 @@ fn cmd_serve_live(args: &Args) -> Result<()> {
         let tm = by_name(&t_spec)?;
         let shapes = tm.param_shapes(batch)?;
         let mut module = Module::new(tm.symbol, t_engine.clone());
-        module.bind(batch, &tm.feat_shape.clone(), &shapes, BindConfig::default(), seed)?;
+        module.bind(
+            batch,
+            &tm.feat_shape.clone(),
+            &shapes,
+            BindConfig { fuse, ..Default::default() },
+            seed,
+        )?;
         let ds = synth::class_clusters(examples, classes, feat_len, 0.3, seed);
         let mut iter = ArrayDataIter::new(
             ds.features,

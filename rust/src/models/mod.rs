@@ -196,14 +196,14 @@ pub fn infer_param_shapes(
                     None => vec![], // solved later by a consumer (set_var!)
                 }
             }
-            Op::FullyConnected { num_hidden } => {
+            Op::FullyConnected { num_hidden, .. } => {
                 let x = get!(&node.inputs[0])?;
                 let in_dim: usize = x[1..].iter().product();
                 set_var!(node.inputs[1], vec![*num_hidden, in_dim]);
                 set_var!(node.inputs[2], vec![*num_hidden]);
                 vec![vec![x[0], *num_hidden]]
             }
-            Op::Convolution { num_filter, kernel, stride, pad } => {
+            Op::Convolution { num_filter, kernel, stride, pad, .. } => {
                 let x = get!(&node.inputs[0])?;
                 if x.len() != 4 {
                     return Err(err(id, format!("conv input must be NCHW, got {x:?}")));

@@ -281,12 +281,145 @@ fn microkernel(
     }
 }
 
+/// One step of a kernel-level epilogue chain: the executable mirror of
+/// `graph::FusedStep`, with `Binary` operand slices bound.
+#[derive(Clone, Copy)]
+pub enum EpStep<'a> {
+    /// Apply an activation.
+    Act(ActKind),
+    /// Add a constant.
+    AddScalar(f32),
+    /// Multiply by a constant.
+    MulScalar(f32),
+    /// Combine elementwise with the same-index element of the operand.
+    Binary(EwBinary, &'a [f32]),
+}
+
+/// A fused post-GEMM/conv elementwise chain (graph-compiler epilogue
+/// fusion): an optional broadcast bias followed by [`EpStep`]s, applied
+/// to each output tile right after its accumulation completes — while
+/// the tile is still cache-hot.
+///
+/// **Bitwise contract.**  Per element, the scalar instruction sequence
+/// (bias add, then each step in order) is exactly the one the unfused
+/// kernel pipeline (`bias_add`, `act_forward`, scalar/binary sweeps)
+/// executes, and every step is per-element independent.  An element's
+/// final value therefore never depends on *when* or on *which thread*
+/// the epilogue ran, so fused output is bitwise identical to the
+/// unfused composition for any thread count and any tile schedule —
+/// the same shape-purity argument as the GEMM row dispatch.
+#[derive(Clone, Copy)]
+pub struct Epilogue<'a> {
+    /// Broadcast bias (`None` = no bias).
+    pub bias: Option<&'a [f32]>,
+    /// Bias axis: per output row (`bias[i]`, conv filters) when true,
+    /// per output column (`bias[j]`, FC hidden units) when false.
+    pub bias_per_row: bool,
+    /// Steps applied in order after the bias.
+    pub steps: &'a [EpStep<'a>],
+}
+
+impl Epilogue<'_> {
+    /// Apply the chain to the sub-block `[row0, row0+nrows) x
+    /// [col0, col0+ncols)` of a row-major `[.., n]` output, where
+    /// `crows` holds the rows starting at global row `row0` (row `i`
+    /// lives at `(i - row0) * n`).  `Binary` operands are indexed at
+    /// `operand_base + i * n + j`.
+    pub fn apply_block(
+        &self,
+        crows: &mut [f32],
+        row0: usize,
+        nrows: usize,
+        col0: usize,
+        ncols: usize,
+        n: usize,
+        operand_base: usize,
+    ) {
+        for r in 0..nrows {
+            let gi = row0 + r;
+            let row = &mut crows[r * n + col0..r * n + col0 + ncols];
+            if let Some(bias) = self.bias {
+                if self.bias_per_row {
+                    let bf = bias[gi];
+                    for v in row.iter_mut() {
+                        *v += bf;
+                    }
+                } else {
+                    for (j, v) in row.iter_mut().enumerate() {
+                        *v += bias[col0 + j];
+                    }
+                }
+            }
+            for step in self.steps {
+                match step {
+                    EpStep::Act(ActKind::Relu) => {
+                        for v in row.iter_mut() {
+                            *v = v.max(0.0);
+                        }
+                    }
+                    EpStep::Act(ActKind::Tanh) => {
+                        for v in row.iter_mut() {
+                            *v = v.tanh();
+                        }
+                    }
+                    EpStep::Act(ActKind::Sigmoid) => {
+                        for v in row.iter_mut() {
+                            *v = 1.0 / (1.0 + (-*v).exp());
+                        }
+                    }
+                    EpStep::AddScalar(s) => {
+                        for v in row.iter_mut() {
+                            *v += s;
+                        }
+                    }
+                    EpStep::MulScalar(s) => {
+                        for v in row.iter_mut() {
+                            *v *= s;
+                        }
+                    }
+                    EpStep::Binary(op, operand) => {
+                        let base = operand_base + gi * n + col0;
+                        let o = &operand[base..base + ncols];
+                        match op {
+                            EwBinary::Add => {
+                                for (v, b) in row.iter_mut().zip(o) {
+                                    *v += b;
+                                }
+                            }
+                            EwBinary::Sub => {
+                                for (v, b) in row.iter_mut().zip(o) {
+                                    *v -= b;
+                                }
+                            }
+                            EwBinary::Mul => {
+                                for (v, b) in row.iter_mut().zip(o) {
+                                    *v *= b;
+                                }
+                            }
+                            EwBinary::Div => {
+                                for (v, b) in row.iter_mut().zip(o) {
+                                    *v /= b;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Serial blocked GEMM over the row range `[m0, m1)` of the output:
 /// `crows` holds exactly those rows (row `i` of C lives at
 /// `(i - m0) * n`).  Loop order is jc -> pc -> ic so every output element
 /// accumulates its KC-block contributions in the same order regardless of
 /// how `[0, m)` is split across threads — the bitwise-determinism
 /// invariant.
+///
+/// When `ep` is set, the epilogue runs on each `[m0, m1) x jc-panel`
+/// region right after its last KC block lands, i.e. while the panel is
+/// still L2-resident (per-element order-independent, so bits don't
+/// change — see [`Epilogue`]).
 #[allow(clippy::too_many_arguments)]
 fn gemm_block_rows(
     a: &[f32],
@@ -300,6 +433,7 @@ fn gemm_block_rows(
     m1: usize,
     k: usize,
     n: usize,
+    ep: Option<&Epilogue>,
 ) {
     PACK_BUFS.with(|bufs| {
         let (abuf, bbuf) = &mut *bufs.borrow_mut();
@@ -324,6 +458,9 @@ fn gemm_block_rows(
                         }
                     }
                 }
+            }
+            if let Some(ep) = ep {
+                ep.apply_block(crows, m0, m1 - m0, jc, nc, n, 0);
             }
         }
     });
@@ -393,6 +530,7 @@ fn gemm_driver(
     k: usize,
     n: usize,
     beta: f32,
+    ep: Option<&Epilogue>,
 ) {
     let row_flops = 2.0 * k as f64 * n as f64;
     let flops = row_flops * m as f64;
@@ -412,10 +550,17 @@ fn gemm_driver(
                 let crows = unsafe { cp.slice(rows.start * n, mr * n) };
                 let arows = &a[rows.start * k..rows.end * k];
                 gemm_small(arows, false, b, tb, crows, mr, k, n, beta);
+                if let Some(ep) = ep {
+                    ep.apply_block(crows, rows.start, mr, 0, n, n, 0);
+                }
             });
             return;
         }
-        return gemm_small(a, ta, b, tb, c, m, k, n, beta);
+        gemm_small(a, ta, b, tb, c, m, k, n, beta);
+        if let Some(ep) = ep {
+            ep.apply_block(c, 0, m, 0, n, n, 0);
+        }
+        return;
     }
     let (ras, cas) = if ta { (1, m) } else { (k, 1) };
     let (rbs, cbs) = if tb { (1, k) } else { (n, 1) };
@@ -426,7 +571,7 @@ fn gemm_driver(
         // [lo*n, hi*n).
         let crows = unsafe { cp.slice(rows.start * n, (rows.end - rows.start) * n) };
         scale_inplace(crows, beta);
-        gemm_block_rows(a, ras, cas, b, rbs, cbs, crows, rows.start, rows.end, k, n);
+        gemm_block_rows(a, ras, cas, b, rbs, cbs, crows, rows.start, rows.end, k, n, ep);
     });
 }
 
@@ -440,7 +585,7 @@ pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, b
     if reference_kernels() {
         gemm_reference(a, b, c, m, k, n, beta, false, false);
     } else {
-        gemm_driver(a, false, b, false, c, m, k, n, beta);
+        gemm_driver(a, false, b, false, c, m, k, n, beta, None);
     }
     prof.finish(Category::Kernel, "kernel.gemm", 0, (2 * m * k * n) as u64, 0);
 }
@@ -477,9 +622,38 @@ pub fn gemm_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize
     if reference_kernels() {
         gemm_reference(a, b, c, m, k, n, beta, false, true);
     } else {
-        gemm_driver(a, false, b, true, c, m, k, n, beta);
+        gemm_driver(a, false, b, true, c, m, k, n, beta, None);
     }
     prof.finish(Category::Kernel, "kernel.gemm_nt", 0, (2 * m * k * n) as u64, 0);
+}
+
+/// `c = epilogue(a @ b^T)`: FullyConnected forward with the fused
+/// epilogue (bias/activation/elementwise chain) applied to each output
+/// tile while it is cache-hot instead of in separate full-tensor
+/// sweeps.  Bitwise identical to `gemm_nt` followed by the unfused
+/// elementwise kernels for any thread count (see [`Epilogue`]).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt_ep(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    beta: f32,
+    ep: &Epilogue,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    let prof = SpanTimer::start();
+    if reference_kernels() {
+        gemm_reference(a, b, c, m, k, n, beta, false, true);
+        ep.apply_block(c, 0, m, 0, n, n, 0);
+    } else {
+        gemm_driver(a, false, b, true, c, m, k, n, beta, Some(ep));
+    }
+    prof.finish(Category::Kernel, "kernel.gemm_nt_ep", 0, (2 * m * k * n) as u64, 0);
 }
 
 /// `c = a^T @ b` where a is `[k,m]`, b is `[k,n]`, c is `[m,n]`.
@@ -491,7 +665,7 @@ pub fn gemm_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize
     if reference_kernels() {
         gemm_reference(a, b, c, m, k, n, beta, true, false);
     } else {
-        gemm_driver(a, true, b, false, c, m, k, n, beta);
+        gemm_driver(a, true, b, false, c, m, k, n, beta, None);
     }
     prof.finish(Category::Kernel, "kernel.gemm_tn", 0, (2 * m * k * n) as u64, 0);
 }
@@ -908,6 +1082,76 @@ pub fn conv2d_forward(
         });
     });
     prof.finish(Category::Kernel, "kernel.conv2d_fwd", 0, flops as u64, 0);
+}
+
+/// NCHW convolution forward with a fused epilogue: after each image's
+/// im2col + GEMM, the bias and the absorbed elementwise chain run over
+/// that image's `[num_filter, oh*ow]` output slice while it is still
+/// cache-hot (instead of separate full-tensor sweeps per absorbed op).
+/// Bitwise identical to `conv2d_forward` followed by the unfused
+/// elementwise kernels for any thread count (see [`Epilogue`]).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_forward_ep(
+    x: &[f32],
+    wt: &[f32],
+    bias: &[f32],
+    y: &mut [f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    num_filter: usize,
+    kernel: usize,
+    stride: usize,
+    pad: usize,
+    steps: &[EpStep],
+) {
+    let oh = conv_out(h, kernel, stride, pad);
+    let ow = conv_out(w, kernel, stride, pad);
+    let ckk = c * kernel * kernel;
+    let spatial = oh * ow;
+    debug_assert_eq!(x.len(), n * c * h * w);
+    debug_assert_eq!(wt.len(), num_filter * ckk);
+    debug_assert_eq!(bias.len(), num_filter);
+    debug_assert_eq!(y.len(), n * num_filter * spatial);
+    let flops = 2.0 * (n * num_filter * spatial) as f64 * ckk as f64;
+    let prof = SpanTimer::start();
+    // Per-image the output slice is a [num_filter, spatial] matrix with
+    // a per-row (per-filter) bias; Binary operands index into the full
+    // [n, num_filter, oh, ow] tensor via the image's base offset.
+    let ep = Epilogue { bias: Some(bias), bias_per_row: true, steps };
+    let yp = SendMut::new(y);
+    parallel_for_cost(n, 1, flops, |imgs| {
+        CONV_SCRATCH.with(|sc| {
+            let cols = &mut *sc.borrow_mut();
+            cols.resize(ckk * spatial, 0.0);
+            for img in imgs {
+                im2col(
+                    &x[img * c * h * w..(img + 1) * c * h * w],
+                    cols,
+                    c,
+                    h,
+                    w,
+                    kernel,
+                    kernel,
+                    stride,
+                    pad,
+                );
+                let y_img = unsafe { yp.slice(img * num_filter * spatial, num_filter * spatial) };
+                gemm(wt, cols, y_img, num_filter, ckk, spatial, 0.0);
+                ep.apply_block(
+                    y_img,
+                    0,
+                    num_filter,
+                    0,
+                    spatial,
+                    spatial,
+                    img * num_filter * spatial,
+                );
+            }
+        });
+    });
+    prof.finish(Category::Kernel, "kernel.conv2d_fwd_ep", 0, flops as u64, 0);
 }
 
 /// NCHW convolution backward: `(dy, x, w) -> (dx, dw, db)`.
@@ -1431,6 +1675,87 @@ mod tests {
                     assert!((got - w0).abs() < 1e-3, "img={img} f={ff} sp={sp}");
                 }
             }
+        }
+    }
+
+    /// Fused GEMM epilogue vs the unfused kernel composition: bitwise
+    /// equal across the small-path gate, the blocked path, and every
+    /// thread budget (the epilogue-fusion losslessness contract).
+    #[test]
+    fn gemm_nt_ep_bitwise_matches_unfused_composition() {
+        let mut rng = crate::util::Rng::seed_from_u64(21);
+        // (7,5,9) takes the small row-chunk path, (130,70,96) the
+        // blocked path — both must honour the contract.
+        for &(m, k, n) in &[(7usize, 5usize, 9usize), (130, 70, 96)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let res: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+            for kind in [ActKind::Relu, ActKind::Tanh, ActKind::Sigmoid] {
+                // Unfused: gemm_nt, bias_add, activation, +0.5, * residual.
+                let unfused = with_intra_budget(1, || {
+                    let mut c = vec![0.0; m * n];
+                    gemm_nt(&a, &b, &mut c, m, k, n, 0.0);
+                    bias_add(&mut c, &bias, m, n);
+                    let mut y = vec![0.0; m * n];
+                    act_forward(kind, &c, &mut y);
+                    for v in y.iter_mut() {
+                        *v += 0.5;
+                    }
+                    for (v, r) in y.iter_mut().zip(&res) {
+                        *v *= r;
+                    }
+                    y
+                });
+                let steps = [
+                    EpStep::Act(kind),
+                    EpStep::AddScalar(0.5),
+                    EpStep::Binary(EwBinary::Mul, &res),
+                ];
+                let ep = Epilogue { bias: Some(&bias), bias_per_row: false, steps: &steps };
+                for budget in [1usize, 4, 8] {
+                    let fused = with_intra_budget(budget, || {
+                        let mut c = vec![0.0; m * n];
+                        gemm_nt_ep(&a, &b, &mut c, m, k, n, 0.0, &ep);
+                        c
+                    });
+                    assert!(
+                        unfused.iter().zip(&fused).all(|(u, f)| u.to_bits() == f.to_bits()),
+                        "m={m} k={k} n={n} kind={kind:?} budget={budget}: bits differ"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Fused conv epilogue vs conv2d_forward + separate activation:
+    /// bitwise equal for every thread budget.
+    #[test]
+    fn conv2d_forward_ep_bitwise_matches_unfused() {
+        let (n, c, h, w, f, k, s, p) = (3, 2, 8, 8, 4, 3, 1, 1);
+        let (oh, ow) = (conv_out(h, k, s, p), conv_out(w, k, s, p));
+        let mut rng = crate::util::Rng::seed_from_u64(22);
+        let x: Vec<f32> = (0..n * c * h * w).map(|_| rng.normal()).collect();
+        let wt: Vec<f32> = (0..f * c * k * k).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..f).map(|_| rng.normal()).collect();
+        let unfused = with_intra_budget(1, || {
+            let mut y0 = vec![0.0; n * f * oh * ow];
+            conv2d_forward(&x, &wt, &bias, &mut y0, n, c, h, w, f, k, s, p);
+            let mut y = vec![0.0; n * f * oh * ow];
+            act_forward(ActKind::Relu, &y0, &mut y);
+            y
+        });
+        let steps = [EpStep::Act(ActKind::Relu)];
+        for budget in [1usize, 4] {
+            let fused = with_intra_budget(budget, || {
+                let mut y = vec![0.0; n * f * oh * ow];
+                conv2d_forward_ep(&x, &wt, &bias, &mut y, n, c, h, w, f, k, s, p, &steps);
+                y
+            });
+            assert!(
+                unfused.iter().zip(&fused).all(|(u, g)| u.to_bits() == g.to_bits()),
+                "budget {budget}: conv epilogue bits differ"
+            );
         }
     }
 

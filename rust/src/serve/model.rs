@@ -85,6 +85,9 @@ pub struct Servable {
     label_name: String,
     feat_len: usize,
     live: Option<Arc<LiveRefresher>>,
+    /// Graph fusion (elementwise + GEMM/conv epilogue) for bucket
+    /// executors; on by default, CLI `--no-fuse` turns it off.
+    fuse: bool,
 }
 
 impl Servable {
@@ -124,7 +127,14 @@ impl Servable {
             .find(|n| n.ends_with("_label"))
             .ok_or_else(|| Error::serve("model has no softmax label variable"))?;
         let feat_len = model.feat_shape.iter().product();
-        Ok(Servable { model, engine, params, label_name, feat_len, live: None })
+        Ok(Servable { model, engine, params, label_name, feat_len, live: None, fuse: true })
+    }
+
+    /// Toggle graph fusion for bucket executors bound after this call
+    /// (fusion is lossless — bitwise-identical responses — so this is a
+    /// perf A/B knob, not a correctness one).
+    pub fn set_fuse(&mut self, fuse: bool) {
+        self.fuse = fuse;
     }
 
     /// Attach this servable to a training [`LocalKVStore`]: every bucket
@@ -219,7 +229,7 @@ impl Servable {
             self.engine.clone(),
             args,
             &[],
-            BindConfig::inference(),
+            BindConfig { fuse: self.fuse, ..BindConfig::inference() },
         )?;
         Ok(BucketExec {
             batch,

@@ -16,10 +16,14 @@ pub fn op_flops(op: &Op, in_shapes: &[Vec<usize>], out_shapes: &[Vec<usize>]) ->
         |o: usize| out_shapes.get(o).map_or(0.0, |s| s.iter().product::<usize>() as f64);
     match op {
         Op::Variable => 0.0,
-        Op::FullyConnected { num_hidden } => {
+        Op::FullyConnected { num_hidden, epilogue } => {
             let x = &in_shapes[0];
             let in_dim: f64 = x[1..].iter().product::<usize>() as f64;
+            // GEMM + bias + one FLOP per epilogue step per element, so
+            // the engine's thread budgeting sees the fused node as at
+            // least as heavy as the unfused producer.
             2.0 * x[0] as f64 * in_dim * *num_hidden as f64
+                + out_elems(0) * (1 + epilogue.len()) as f64
         }
         Op::FullyConnectedBackward => {
             // dx = dy.W, dw = dy^T.x, db = sum(dy): ~2x forward matmul
@@ -27,9 +31,10 @@ pub fn op_flops(op: &Op, in_shapes: &[Vec<usize>], out_shapes: &[Vec<usize>]) ->
             let w = &in_shapes[2];
             4.0 * dy[0] as f64 * dy[1] as f64 * w[1] as f64
         }
-        Op::Convolution { kernel, .. } => {
+        Op::Convolution { kernel, epilogue, .. } => {
             let x = &in_shapes[0];
             2.0 * out_elems(0) * (x[1] * kernel * kernel) as f64
+                + out_elems(0) * (1 + epilogue.len()) as f64
         }
         Op::ConvolutionBackward { kernel, .. } => {
             let x = &in_shapes[1];
@@ -159,6 +164,42 @@ mod tests {
             (1.0e9..8.0e9).contains(&f),
             "inception fwd flops {f:.2e} outside sanity range"
         );
+    }
+
+    #[test]
+    fn epilogue_fused_cost_at_least_unfused_producer() {
+        use crate::graph::FusedStep;
+        use crate::ndarray::kernels::ActKind;
+        // FC: [32, 256] @ [128, 256]^T
+        let ins = vec![vec![32, 256], vec![128, 256], vec![128]];
+        let outs = vec![vec![32, 128]];
+        let plain = Op::FullyConnected { num_hidden: 128, epilogue: vec![] };
+        let fused = Op::FullyConnected {
+            num_hidden: 128,
+            epilogue: vec![FusedStep::Act(ActKind::Relu), FusedStep::AddScalar(1.0)],
+        };
+        let fp = op_flops(&plain, &ins, &outs);
+        let ff = op_flops(&fused, &ins, &outs);
+        assert!(ff >= fp, "fused {ff} < unfused {fp}");
+        // ... and covers the absorbed elementwise work too
+        let act_cost = op_flops(&Op::Activation { kind: ActKind::Relu }, &outs, &outs);
+        assert!(ff >= fp + act_cost, "fused {ff} under-counts epilogue");
+
+        // Conv: [4, 3, 32, 32] -> [4, 8, 32, 32], k=3
+        let cins = vec![vec![4, 3, 32, 32], vec![8, 3, 3, 3], vec![8]];
+        let couts = vec![vec![4, 8, 32, 32]];
+        let cplain =
+            Op::Convolution { num_filter: 8, kernel: 3, stride: 1, pad: 1, epilogue: vec![] };
+        let cfused = Op::Convolution {
+            num_filter: 8,
+            kernel: 3,
+            stride: 1,
+            pad: 1,
+            epilogue: vec![FusedStep::Act(ActKind::Tanh)],
+        };
+        let cp = op_flops(&cplain, &cins, &couts);
+        let cf = op_flops(&cfused, &cins, &couts);
+        assert!(cf > cp, "conv fused {cf} <= unfused {cp}");
     }
 
     #[test]

@@ -76,7 +76,7 @@ impl Symbol {
         let w = Symbol::var(format!("{name}_weight"));
         let b = Symbol::var(format!("{name}_bias"));
         Symbol::apply(
-            Op::FullyConnected { num_hidden },
+            Op::FullyConnected { num_hidden, epilogue: vec![] },
             name,
             vec![self.clone(), w, b],
         )
@@ -94,7 +94,7 @@ impl Symbol {
         let w = Symbol::var(format!("{name}_weight"));
         let b = Symbol::var(format!("{name}_bias"));
         Symbol::apply(
-            Op::Convolution { num_filter, kernel, stride, pad },
+            Op::Convolution { num_filter, kernel, stride, pad, epilogue: vec![] },
             name,
             vec![self.clone(), w, b],
         )

@@ -80,6 +80,22 @@ fn run_model(
     vals: &HashMap<String, Vec<f32>>,
     params: &[String],
 ) -> Vec<Vec<u32>> {
+    run_model_fuse(model, batch, workers, replay, true, steps, vals, params)
+}
+
+/// `run_model` with the graph-fusion knob exposed (fused vs unfused
+/// binds must be bitwise identical — the epilogue-fusion contract).
+#[allow(clippy::too_many_arguments)]
+fn run_model_fuse(
+    model: &Model,
+    batch: usize,
+    workers: usize,
+    replay: bool,
+    fuse: bool,
+    steps: usize,
+    vals: &HashMap<String, Vec<f32>>,
+    params: &[String],
+) -> Vec<Vec<u32>> {
     let engine = create(EngineKind::Threaded, workers);
     let shapes = model.var_shapes(batch).unwrap();
     let args: HashMap<String, NDArray> = vals
@@ -87,7 +103,7 @@ fn run_model(
         .map(|(k, v)| (k.clone(), NDArray::from_vec_on(&shapes[k], v.clone(), engine.clone())))
         .collect();
     let grad_names: Vec<&str> = params.iter().map(|s| s.as_str()).collect();
-    let cfg = BindConfig { replay, ..Default::default() };
+    let cfg = BindConfig { replay, fuse, ..Default::default() };
     let exec = Executor::bind(&model.symbol, engine.clone(), args, &grad_names, cfg).unwrap();
     for _ in 0..steps {
         exec.forward_backward().unwrap();
@@ -146,6 +162,66 @@ fn alexnet_replay_matches_push_bitwise() {
             &format!("alexnet workers={workers} replay={replay}"),
         );
     }
+}
+
+#[test]
+fn alexnet_epilogue_fusion_is_bitwise_lossless_fwd_bwd() {
+    let _g = lock();
+    // The graph compiler folds conv+relu / fc+relu chains into GEMM
+    // epilogues on the fused bind; output, every gradient, and every
+    // updated parameter must still match the unfused bind bitwise
+    // (forward AND backward — fusion only rewrites forward nodes).
+    let model = alexnet(4, 64);
+    let (vals, params) = gen_values(&model, 1);
+    let unfused = run_model_fuse(&model, 1, 4, false, false, 1, &vals, &params);
+    let fused = run_model_fuse(&model, 1, 4, false, true, 1, &vals, &params);
+    assert_bits_eq(&fused, &unfused, "alexnet fused-vs-unfused");
+}
+
+#[test]
+fn fused_plan_does_zero_pool_misses_after_warmup() {
+    let _g = lock();
+    // Epilogue-fused AlexNet bind: fewer, heavier ops — and still no
+    // steady-state pool allocation.
+    let model = alexnet(4, 64);
+    let (vals, params) = gen_values(&model, 1);
+    let engine = create(EngineKind::Threaded, 4);
+    let shapes = model.var_shapes(1).unwrap();
+    let args: HashMap<String, NDArray> = vals
+        .iter()
+        .map(|(k, v)| (k.clone(), NDArray::from_vec_on(&shapes[k], v.clone(), engine.clone())))
+        .collect();
+    let grad_names: Vec<&str> = params.iter().map(|s| s.as_str()).collect();
+    let exec =
+        Executor::bind(&model.symbol, engine.clone(), args, &grad_names, BindConfig::default())
+            .unwrap();
+    let fused_nodes = exec
+        .graph()
+        .nodes
+        .iter()
+        .filter(|n| !n.op.epilogue().is_empty())
+        .count();
+    assert!(fused_nodes > 0, "alexnet bind should contain epilogue-fused nodes");
+    let step = |exec: &Executor| {
+        exec.forward_backward().unwrap();
+        for p in &params {
+            exec.arg(p).unwrap().sub_scaled_(exec.grad(p).unwrap(), 0.05);
+        }
+    };
+    for _ in 0..2 {
+        step(&exec); // warmup
+    }
+    exec.wait();
+    let before = pool::global().stats();
+    for _ in 0..3 {
+        step(&exec);
+    }
+    exec.wait();
+    let after = pool::global().stats();
+    assert_eq!(
+        after.misses, before.misses,
+        "a steady-state fused-plan step must not allocate (pool miss counter moved)"
+    );
 }
 
 #[test]

@@ -474,6 +474,134 @@ fn prop_gemm_rows_independent_of_batch() {
     );
 }
 
+/// Fused GEMM epilogues (bias + activation + elementwise chain applied
+/// inside the GEMM while output tiles are cache-hot) are bitwise equal
+/// to the unfused kernel composition across the odd-shape set
+/// {1, 7, 8, 9, 64, 65} (both sides of the small/blocked dispatch
+/// gate), all three activations, and intra-op thread budgets {1, 4, 8}
+/// — the graph compiler's losslessness contract.
+#[test]
+fn prop_gemm_epilogue_bitwise_lossless() {
+    let _mode = GEMM_MODE_LOCK.lock().unwrap();
+    const DIMS: [usize; 6] = [1, 7, 8, 9, 64, 65];
+    const KINDS: [ActKind; 3] = [ActKind::Relu, ActKind::Tanh, ActKind::Sigmoid];
+    check_explain(
+        "gemm-epilogue-bitwise",
+        40,
+        |rng| {
+            let m = DIMS[rng.below(DIMS.len())];
+            let k = DIMS[rng.below(DIMS.len())];
+            let n = DIMS[rng.below(DIMS.len())];
+            let kind = KINDS[rng.below(KINDS.len())];
+            let a: Vec<f32> = (0..m * k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let w: Vec<f32> = (0..n * k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let bias: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let res: Vec<f32> = (0..m * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            (m, k, n, kind, a, w, bias, res)
+        },
+        |(m, k, n, kind, a, w, bias, res)| {
+            let (m, k, n, kind) = (*m, *k, *n, *kind);
+            // Unfused composition (serial): gemm_nt, bias_add,
+            // activation, elementwise-mul with a residual operand.
+            let unfused = mixnet::util::with_intra_budget(1, || {
+                let mut c = vec![0.0; m * n];
+                kernels::gemm_nt(a, w, &mut c, m, k, n, 0.0);
+                kernels::bias_add(&mut c, bias, m, n);
+                let mut y = vec![0.0; m * n];
+                kernels::act_forward(kind, &c, &mut y);
+                for (v, r) in y.iter_mut().zip(res.iter()) {
+                    *v *= r;
+                }
+                y
+            });
+            let steps = [
+                kernels::EpStep::Act(kind),
+                kernels::EpStep::Binary(EwBinary::Mul, res.as_slice()),
+            ];
+            let ep = kernels::Epilogue {
+                bias: Some(bias.as_slice()),
+                bias_per_row: false,
+                steps: &steps,
+            };
+            for budget in [1usize, 4, 8] {
+                let fused = mixnet::util::with_intra_budget(budget, || {
+                    let mut c = vec![0.0; m * n];
+                    kernels::gemm_nt_ep(a, w, &mut c, m, k, n, 0.0, &ep);
+                    c
+                });
+                for i in 0..m * n {
+                    if unfused[i].to_bits() != fused[i].to_bits() {
+                        return Err(format!(
+                            "m={m} k={k} n={n} kind={kind:?} budget={budget} \
+                             [{i}]: {} != {} (bitwise)",
+                            unfused[i], fused[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Conv epilogue fusion is bitwise lossless too: conv2d_forward_ep ==
+/// conv2d_forward + act_forward for random NCHW shapes, kernel sizes,
+/// activations, and thread budgets.
+#[test]
+fn prop_conv_epilogue_bitwise_lossless() {
+    let _mode = GEMM_MODE_LOCK.lock().unwrap();
+    const KINDS: [ActKind; 3] = [ActKind::Relu, ActKind::Tanh, ActKind::Sigmoid];
+    check_explain(
+        "conv-epilogue-bitwise",
+        15,
+        |rng| {
+            let n = 1 + rng.below(3);
+            let c = 1 + rng.below(3);
+            let hw = 4 + rng.below(7);
+            let f = 1 + rng.below(6);
+            let k = [1usize, 3][rng.below(2)];
+            let pad = rng.below(2);
+            let kind = KINDS[rng.below(KINDS.len())];
+            let x: Vec<f32> = (0..n * c * hw * hw).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let wt: Vec<f32> = (0..f * c * k * k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let bias: Vec<f32> = (0..f).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            (n, c, hw, f, k, pad, kind, x, wt, bias)
+        },
+        |(n, c, hw, f, k, pad, kind, x, wt, bias)| {
+            let (n, c, hw, f, k, pad, kind) = (*n, *c, *hw, *f, *k, *pad, *kind);
+            let oh = (hw + 2 * pad - k) + 1; // stride 1
+            let out_len = n * f * oh * oh;
+            let unfused = mixnet::util::with_intra_budget(1, || {
+                let mut y0 = vec![0.0; out_len];
+                kernels::conv2d_forward(x, wt, bias, &mut y0, n, c, hw, hw, f, k, 1, pad);
+                let mut y = vec![0.0; out_len];
+                kernels::act_forward(kind, &y0, &mut y);
+                y
+            });
+            let steps = [kernels::EpStep::Act(kind)];
+            for budget in [1usize, 4, 8] {
+                let fused = mixnet::util::with_intra_budget(budget, || {
+                    let mut y = vec![0.0; out_len];
+                    kernels::conv2d_forward_ep(
+                        x, wt, bias, &mut y, n, c, hw, hw, f, k, 1, pad, &steps,
+                    );
+                    y
+                });
+                for i in 0..out_len {
+                    if unfused[i].to_bits() != fused[i].to_bits() {
+                        return Err(format!(
+                            "n={n} c={c} hw={hw} f={f} k={k} pad={pad} kind={kind:?} \
+                             budget={budget} [{i}]: {} != {} (bitwise)",
+                            unfused[i], fused[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Pruning to a subset of outputs never changes the values of the outputs
 /// that remain (paper §3.1 feature-extraction claim).
 #[test]
