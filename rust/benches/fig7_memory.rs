@@ -1,25 +1,59 @@
 //! Figure 7 — internal memory under the allocation strategies, for
-//! prediction (forward) and training (forward+backward), batch 64.
+//! prediction (forward) and training (forward+backward), batch 64 —
+//! plus the ISSUE 9 `Recompute` series: planned peak bytes AND measured
+//! pool peak for an MLP, AlexNet, the VGG-11 tower and a uniform-depth
+//! conv tower at growing batch sizes, with and without the
+//! recompute-on-backward rewrite.
 //!
-//! Unlike the wall-time benches this is exact, not sampled: the planner
-//! is deterministic.  Also reports planning *time* per graph (the
-//! paper's claim that the heuristics are linear-time).
+//! The planner tables are exact, not sampled: the planner is
+//! deterministic.  The measured section actually binds and trains each
+//! model through the storage pool (pool cleared + peak reset per case)
+//! so the reported peak is checked-out bytes, not a plan estimate.
 //!
 //! ```text
-//! cargo bench --bench fig7_memory           # table + paper deltas
-//! FIG7_FULLRES=1 cargo bench --bench fig7_memory   # 224x224 inputs
+//! cargo bench --bench fig7_memory           # tables + BENCH_memory.json
+//! BENCH_QUICK=1 cargo bench --bench fig7_memory   # CI smoke (small cases)
+//! FIG7_FULLRES=1 cargo bench --bench fig7_memory  # 224x224 planner inputs
+//! BENCH_OUT=/tmp/m.json cargo bench --bench fig7_memory
 //! ```
+//!
+//! Emits `BENCH_memory.json`: one record per measured (model, batch,
+//! series) case — `median_ms` is the steady-state step time, the shape
+//! string carries the measured pool peak and planned peak — plus meta:
+//!
+//! * `recompute_mem_ratio` / `recompute_step_overhead` for the largest
+//!   uniform conv-tower case (CI gates: ratio <= 0.6, overhead <= 1.35
+//!   — the sublinear O(sqrt n) claim, measured where its n-uniform-layer
+//!   premise holds);
+//! * `vgg_mem_ratio` / `vgg_step_overhead` for the largest VGG-11 tower
+//!   case (CI gates ratio <= 0.9: pyramid nets carry an irreducible
+//!   floor — stage-1's activation plus its gradient coexist during
+//!   segment-1 backward, the memopt-off liveness-optimal plan is only
+//!   ~2.8x that tensor, and the constant pooled conv-weight gradients
+//!   dilute further — so recompute trims rather than halves).
 
+use std::sync::Arc;
 use std::time::Instant;
 
+use mixnet::engine::{create, default_threads, EngineKind, EngineRef};
+use mixnet::executor::BindConfig;
 use mixnet::graph::autodiff::build_backward;
 use mixnet::graph::memory::{default_external, plan_memory, validate_plan, AllocStrategy};
+use mixnet::graph::recompute::{apply_recompute, segment_boundaries, MemOpt};
 use mixnet::graph::{infer_shapes, Entry};
-use mixnet::models::by_name;
-use mixnet::util::bench::print_table;
+use mixnet::io::{synth, ArrayDataIter};
+use mixnet::models::{by_name, conv_tower, mlp, Model};
+use mixnet::module::{Module, UpdateMode};
+use mixnet::ndarray::pool;
+use mixnet::optimizer::Sgd;
+use mixnet::util::bench::{print_table, standard_meta, write_bench_json, BenchRecord};
 
-fn main() {
-    let batch = 64usize;
+const MB: f64 = 1024.0 * 1024.0;
+
+/// Planner tables: the original Figure-7 strategy sweep, with a
+/// `recompute` column (planned *peak* under the rewrite, Both strategy)
+/// appended to the training table.
+fn planner_tables(batch: usize) {
     let fullres = std::env::var("FIG7_FULLRES").is_ok();
     let models: Vec<String> = ["alexnet", "inception-bn", "vgg-11", "vgg-16"]
         .iter()
@@ -49,6 +83,7 @@ fn main() {
             let external = default_external(&graph, &extra);
             let mut row = vec![name.clone(), format!("{}", graph.nodes.len())];
             let mut baseline = 0.0f64;
+            let mut both_peak = 0.0f64;
             for strategy in AllocStrategy::all() {
                 let t0 = Instant::now();
                 let plan = plan_memory(&graph, &shapes, &external, strategy);
@@ -58,17 +93,197 @@ fn main() {
                 if strategy == AllocStrategy::None {
                     baseline = mb;
                 }
+                if strategy == AllocStrategy::Both {
+                    both_peak = plan.peak_bytes as f64 / MB;
+                }
                 row.push(format!("{mb:.0} ({:.1}x, {plan_us}us)", baseline / mb.max(1e-9)));
+            }
+            if training {
+                // Recompute series: rewrite at the default sqrt(n)
+                // segmentation, re-plan, report the planned peak.
+                let bounds = segment_boundaries(&graph, &shapes, 0);
+                let (rg, emap, info) = apply_recompute(&graph, &shapes, &bounds).unwrap();
+                let rextra: Vec<Entry> = extra.iter().map(|e| emap[e]).collect();
+                let rshapes = infer_shapes(&rg, &vs).unwrap();
+                let rext = default_external(&rg, &rextra);
+                let rplan = plan_memory(&rg, &rshapes, &rext, AllocStrategy::Both);
+                validate_plan(&rg, &rshapes, &rext, &rplan).expect("recompute plan must be sound");
+                let rpeak = rplan.peak_bytes as f64 / MB;
+                row.push(format!(
+                    "{rpeak:.0} peak ({:.2}x of both-peak {both_peak:.0}, {} clones)",
+                    rpeak / both_peak.max(1e-9),
+                    info.recompute_nodes
+                ));
             }
             rows.push(row);
         }
-        print_table(
-            &format!("Figure 7 — internal MB, batch {batch}, {title}"),
-            &["network", "nodes", "none", "inplace", "co-share", "both"],
-            &rows,
-        );
+        let mut header = vec!["network", "nodes", "none", "inplace", "co-share", "both"];
+        if training {
+            header.push("recompute");
+        }
+        print_table(&format!("Figure 7 — internal MB, batch {batch}, {title}"), &header, &rows);
         println!();
     }
     println!("paper: combined ~2x reduction for training, ~4x for prediction;");
-    println!("planning stays linear: time scales with node count, not node count^2");
+    println!("recompute trades one extra forward segment pass for sublinear activation memory");
+    println!();
+}
+
+/// One measured training case: clear the pool, bind, train a couple of
+/// short epochs, and report (pool peak bytes, planned peak bytes,
+/// steady-state step ms).
+fn measured_case(
+    engine: &EngineRef,
+    model: Model,
+    batch: usize,
+    memopt: MemOpt,
+    steps: usize,
+) -> (u64, usize, f64) {
+    pool::global().clear();
+    pool::global().reset_peak();
+    let feat_shape = model.feat_shape.clone();
+    let classes = model.num_classes;
+    let shapes = model.param_shapes(batch).expect("shapes");
+    let mut module = Module::new(model.symbol, engine.clone());
+    let cfg = BindConfig { memopt, ..Default::default() };
+    module.bind(batch, &feat_shape, &shapes, cfg, 42).expect("bind");
+    let planned = module.executor().expect("bound").planned_peak_bytes();
+
+    let n = batch * steps;
+    let ds = if feat_shape.len() == 1 {
+        synth::class_clusters(n, classes, feat_shape[0], 0.3, 11)
+    } else {
+        synth::images(n, classes, feat_shape[0], feat_shape[1], feat_shape[2], 0.3, 11)
+    };
+    let mut iter =
+        ArrayDataIter::new(ds.features, ds.labels, &feat_shape, batch, false, engine.clone());
+    // Epoch 1 warms the pool (misses + JIT-ish first-touch); epoch 2 is
+    // the steady-state timing sample.
+    let stats = module
+        .fit(&mut iter, &UpdateMode::Local(Arc::new(Sgd::new(0.05))), 2)
+        .expect("fit");
+    let last = stats.last().expect("epoch stats");
+    let step_ms = last.seconds / last.batches.max(1) as f64 * 1e3;
+    let peak = pool::global().stats().peak_bytes;
+    (peak, planned, step_ms)
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    planner_tables(64);
+
+    // Measured section: MLP, AlexNet, the VGG-11 tower and the uniform
+    // conv tower at growing batch sizes, memopt off vs recompute.  Small
+    // spatial inputs keep the bench inside CI budgets; both towers still
+    // make activations dominate the pooled footprint.
+    let cases: Vec<(&str, Vec<usize>)> = if quick {
+        vec![
+            ("mlp", vec![64]),
+            ("alexnet@64", vec![16]),
+            ("vgg11-tower@64", vec![32]),
+            ("conv-tower", vec![8]),
+        ]
+    } else {
+        vec![
+            ("mlp", vec![64, 256]),
+            ("alexnet@64", vec![32, 64]),
+            ("vgg11-tower@64", vec![16, 32, 64]),
+            ("conv-tower", vec![8, 16]),
+        ]
+    };
+    let steps = if quick { 3 } else { 4 };
+    let engine = create(EngineKind::Threaded, default_threads());
+
+    let mut records = Vec::new();
+    let mut rows = Vec::new();
+    // (pool peak off, pool peak rc, step off, step rc) per gated model =
+    // its largest measured batch.  The 0.6 sublinear gate rides on the
+    // uniform conv tower; the VGG-11 tower gets the pyramid-floor bound.
+    let mut gate: Option<(u64, u64, f64, f64)> = None;
+    let mut gate_case = String::new();
+    let mut vgg: Option<(u64, u64, f64, f64)> = None;
+    let mut vgg_case = String::new();
+    for (name, batches) in &cases {
+        for &batch in batches {
+            let build = |spec: &str| -> Model {
+                match spec {
+                    "mlp" => mlp(&[512, 256], 784, 10),
+                    // Deep enough that sqrt(n) segmentation leaves the
+                    // per-segment live set far below the n-layer total.
+                    "conv-tower" => conv_tower(24, 64, 10, 32),
+                    _ => by_name(spec).unwrap(),
+                }
+            };
+            let (peak_off, planned_off, ms_off) =
+                measured_case(&engine, build(name), batch, MemOpt::Off, steps);
+            let rc = MemOpt::Recompute { segments: 0 };
+            let (peak_rc, planned_rc, ms_rc) =
+                measured_case(&engine, build(name), batch, rc, steps);
+            for (series, peak, planned, ms) in [
+                ("off", peak_off, planned_off, ms_off),
+                ("recompute", peak_rc, planned_rc, ms_rc),
+            ] {
+                records.push(BenchRecord {
+                    op: format!("fig7/{name}/{series}"),
+                    shape: format!(
+                        "b{batch} pool_peak={:.1}mb planned_peak={:.1}mb",
+                        peak as f64 / MB,
+                        planned as f64 / MB
+                    ),
+                    threads: default_threads(),
+                    median_ms: ms,
+                    gflops: 0.0,
+                });
+            }
+            rows.push(vec![
+                format!("{name} b{batch}"),
+                format!("{:.1}", peak_off as f64 / MB),
+                format!("{:.1}", peak_rc as f64 / MB),
+                format!("{:.2}x", peak_rc as f64 / (peak_off as f64).max(1.0)),
+                format!("{:.1}", planned_off as f64 / MB),
+                format!("{:.1}", planned_rc as f64 / MB),
+                format!("{:.2}x", ms_rc / ms_off.max(1e-9)),
+            ]);
+            if *name == "conv-tower" {
+                gate = Some((peak_off, peak_rc, ms_off, ms_rc));
+                gate_case = format!("{name} b{batch}");
+            } else if name.starts_with("vgg11-tower") {
+                vgg = Some((peak_off, peak_rc, ms_off, ms_rc));
+                vgg_case = format!("{name} b{batch}");
+            }
+        }
+    }
+    print_table(
+        "Measured pool peak (MB) & step overhead, memopt off vs recompute",
+        &["case", "pool off", "pool rc", "ratio", "plan off", "plan rc", "step overhead"],
+        &rows,
+    );
+
+    let mut meta = standard_meta("memory", quick);
+    if let Some((po, pr, so, sr)) = gate {
+        let mem_ratio = pr as f64 / (po as f64).max(1.0);
+        let overhead = sr / so.max(1e-9);
+        meta.push(("gate_case", gate_case.clone()));
+        meta.push(("recompute_mem_ratio", format!("{mem_ratio:.3}")));
+        meta.push(("recompute_step_overhead", format!("{overhead:.3}")));
+        println!();
+        println!(
+            "gate [{gate_case}]: recompute_mem_ratio={mem_ratio:.3} (<= 0.6 expected), \
+             recompute_step_overhead={overhead:.3} (<= 1.35 expected)"
+        );
+    }
+    if let Some((po, pr, so, sr)) = vgg {
+        let mem_ratio = pr as f64 / (po as f64).max(1.0);
+        let overhead = sr / so.max(1e-9);
+        meta.push(("vgg_case", vgg_case.clone()));
+        meta.push(("vgg_mem_ratio", format!("{mem_ratio:.3}")));
+        meta.push(("vgg_step_overhead", format!("{overhead:.3}")));
+        println!(
+            "bound [{vgg_case}]: vgg_mem_ratio={mem_ratio:.3} (<= 0.9 expected; \
+             pyramid stage-1 floor), vgg_step_overhead={overhead:.3}"
+        );
+    }
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_memory.json".to_string());
+    write_bench_json(&out, &meta, &records).expect("write bench json");
+    eprintln!("wrote {out}");
 }

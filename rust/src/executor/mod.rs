@@ -34,6 +34,7 @@ use crate::error::{Error, Result};
 use crate::graph::autodiff::build_backward;
 use crate::graph::memory::{default_external, plan_memory, AllocStrategy, MemPlan};
 use crate::graph::optimize::{fuse_elementwise, fuse_epilogue};
+use crate::graph::recompute::{self, MemOpt, RecomputeInfo};
 use crate::graph::{infer_shapes, Entry, Graph, Op, ShapeMap};
 use crate::ndarray::{NDArray, Storage};
 use crate::symbol::Symbol;
@@ -60,6 +61,11 @@ pub struct BindConfig {
     /// Scheduling-equivalent — results are bitwise identical; `false`
     /// keeps the per-op dynamic path (benches, equivalence tests).
     pub replay: bool,
+    /// Sublinear-memory training: `MemOpt::Recompute` drops interior
+    /// activations after forward and recomputes them during backward
+    /// ([`crate::graph::recompute`]).  Bitwise-identical to `Off`; only
+    /// peak memory and step time change.  Ignored on inference binds.
+    pub memopt: MemOpt,
 }
 
 impl Default for BindConfig {
@@ -70,6 +76,7 @@ impl Default for BindConfig {
             grads: true,
             fuse: true,
             replay: true,
+            memopt: MemOpt::Off,
         }
     }
 }
@@ -83,6 +90,7 @@ impl BindConfig {
             grads: false,
             fuse: true,
             replay: true,
+            memopt: MemOpt::Off,
         }
     }
 }
@@ -212,6 +220,12 @@ pub struct Executor {
     step: AtomicU64,
     plan: MemPlan,
     num_forward: usize,
+    /// What the recompute rewrite did (`None` when `memopt` is off or the
+    /// rewrite was an identity on this graph).
+    recompute_info: Option<RecomputeInfo>,
+    /// Planned `(total, peak)` internal bytes of the memopt-off bind,
+    /// kept when a recompute bind wants to report its saving.
+    baseline_bytes: Option<(usize, usize)>,
     /// Static run-plans compiled at bind time (`cfg.replay`); `None`
     /// falls back to pushing one engine op per node.
     fwd_plan: Option<Arc<RunPlan>>,
@@ -293,7 +307,8 @@ impl Executor {
             graph.validate()?;
         }
 
-        // 3. shapes
+        // 3. shapes (the variable set is fixed from here on: the
+        //    recompute rewrite below never adds or renames variables)
         let var_shapes: HashMap<String, Vec<usize>> = graph
             .variables()
             .into_iter()
@@ -305,6 +320,31 @@ impl Executor {
                 Ok((name, arr.shape().to_vec()))
             })
             .collect::<Result<_>>()?;
+
+        // 3b. sublinear-memory rewrite: runs after fusion so recompute
+        //     clones carry their epilogues, and before planning so the
+        //     planner frees dropped activations at their last forward
+        //     reader.  The pre-rewrite plan is kept for baseline
+        //     reporting (what memopt-off would have used).
+        let mut recompute_info: Option<RecomputeInfo> = None;
+        let mut baseline_bytes: Option<(usize, usize)> = None;
+        if training {
+            if let MemOpt::Recompute { segments } = cfg.memopt {
+                let pre_shapes = infer_shapes(&graph, &var_shapes)?;
+                let extra: Vec<Entry> = grad_entries.values().copied().collect();
+                let ext = default_external(&graph, &extra);
+                let base = plan_memory(&graph, &pre_shapes, &ext, cfg.strategy);
+                baseline_bytes = Some((base.total_internal_bytes, base.peak_bytes));
+                let bounds = recompute::segment_boundaries(&graph, &pre_shapes, segments);
+                let (rewritten, emap, info) =
+                    recompute::apply_recompute(&graph, &pre_shapes, &bounds)?;
+                for e in grad_entries.values_mut() {
+                    *e = emap[e];
+                }
+                graph = rewritten;
+                recompute_info = if info.recompute_nodes > 0 { Some(info) } else { None };
+            }
+        }
         let shapes = infer_shapes(&graph, &var_shapes)?;
 
         // 4. memory plan
@@ -398,7 +438,14 @@ impl Executor {
             let cost = crate::sim::cost::op_flops(&node.op, &in_shapes, &out_shapes);
             templates.push(Some(Arc::new(NodeTemplate {
                 op: node.op.clone(),
-                name: node.op.type_name(),
+                // Recompute clones get their own span/metrics name so
+                // timelines show the extra backward-side forward work
+                // ("plan.recompute" on the replay path).
+                name: if recompute::is_recompute_name(&node.name) {
+                    "recompute"
+                } else {
+                    node.op.type_name()
+                },
                 cost,
                 in_storages: ins.iter().map(|a| a.storage()).collect(),
                 in_sizes: ins.iter().map(|a| a.size()).collect(),
@@ -510,6 +557,8 @@ impl Executor {
             step: AtomicU64::new(0),
             plan,
             num_forward,
+            recompute_info,
+            baseline_bytes,
             fwd_plan,
             bwd_plan,
             grad_hook,
@@ -645,6 +694,24 @@ impl Executor {
     /// Planned internal-variable bytes (the Figure 7 metric).
     pub fn internal_bytes(&self) -> usize {
         self.plan.total_internal_bytes
+    }
+
+    /// Planned peak of simultaneously-live internal bytes — the metric
+    /// the recompute rewrite shrinks.
+    pub fn planned_peak_bytes(&self) -> usize {
+        self.plan.peak_bytes
+    }
+
+    /// Planned `(total, peak)` internal bytes the same bind would have
+    /// used with `MemOpt::Off` (only recorded on recompute binds).
+    pub fn baseline_bytes(&self) -> Option<(usize, usize)> {
+        self.baseline_bytes
+    }
+
+    /// What the recompute rewrite did, when `memopt` was on and the graph
+    /// had something to drop.
+    pub fn recompute_info(&self) -> Option<&RecomputeInfo> {
+        self.recompute_info.as_ref()
     }
 
     /// The bound graph (post autodiff/fusion).

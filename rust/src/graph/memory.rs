@@ -76,6 +76,12 @@ pub struct MemPlan {
     /// Total bytes across storage blocks — the Figure 7 metric
     /// ("internal variables except for the outputs").
     pub total_internal_bytes: usize,
+    /// Maximum bytes of simultaneously-occupied storage blocks during the
+    /// planned walk.  With recompute rewrites this is the headline metric:
+    /// dropped activations leave tenancy at their last forward reader, so
+    /// the peak shrinks even though `total_internal_bytes` counts every
+    /// block once.
+    pub peak_bytes: usize,
     /// Extra ordering constraints implied by sharing: `(later, earlier)`.
     pub control_deps: Vec<(NodeId, NodeId)>,
 }
@@ -124,6 +130,9 @@ pub fn plan_memory(
     let mut control_deps: Vec<(NodeId, NodeId)> = Vec::new();
     // Free pool: (bytes, storage id); kept sorted by bytes for best-fit.
     let mut pool: Vec<(usize, usize)> = Vec::new();
+    // High-water mark of simultaneously-occupied block bytes.
+    let mut occupied: usize = 0;
+    let mut peak_bytes: usize = 0;
 
     let is_internal =
         |e: &Entry, graph: &Graph| !external.contains(e) && !graph.nodes[e.node].op.is_variable();
@@ -239,6 +248,8 @@ pub fn plan_memory(
                 strategy.coshare(),
             );
             storage_of.insert(out_e, sid);
+            occupied += storage_bytes[sid];
+            peak_bytes = peak_bytes.max(occupied);
         }
 
         // 3. workspace for this node (lifetime = the node itself)
@@ -254,11 +265,14 @@ pub fn plan_memory(
                 strategy.coshare(),
             );
             workspace_of.insert(nid, sid);
+            occupied += storage_bytes[sid];
+            peak_bytes = peak_bytes.max(occupied);
             // released immediately after the node runs
             storage_refs[sid] -= 1;
             if storage_refs[sid] == 0 {
                 last_releaser[sid] = Some(nid);
                 pool.push((storage_bytes[sid], sid));
+                occupied -= storage_bytes[sid];
             }
         }
 
@@ -276,6 +290,7 @@ pub fn plan_memory(
                         if storage_refs[sid] == 0 {
                             last_releaser[sid] = Some(nid);
                             pool.push((storage_bytes[sid], sid));
+                            occupied -= storage_bytes[sid];
                         }
                     }
                 }
@@ -295,6 +310,7 @@ pub fn plan_memory(
                     if storage_refs[sid] == 0 {
                         last_releaser[sid] = Some(nid);
                         pool.push((storage_bytes[sid], sid));
+                        occupied -= storage_bytes[sid];
                     }
                 }
             }
@@ -302,7 +318,14 @@ pub fn plan_memory(
     }
 
     let total_internal_bytes = storage_bytes.iter().sum();
-    MemPlan { storage_of, storage_bytes, workspace_of, total_internal_bytes, control_deps }
+    MemPlan {
+        storage_of,
+        storage_bytes,
+        workspace_of,
+        total_internal_bytes,
+        peak_bytes,
+        control_deps,
+    }
 }
 
 /// The default external set for an executor: all variable outputs, all

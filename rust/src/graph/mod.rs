@@ -14,6 +14,7 @@
 pub mod autodiff;
 pub mod memory;
 pub mod optimize;
+pub mod recompute;
 pub mod viz;
 
 use std::collections::HashMap;

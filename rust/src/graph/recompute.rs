@@ -1,0 +1,628 @@
+//! Gradient checkpointing (MXNet §3.1 "mirror" nodes): sublinear-memory
+//! training by recompute-on-backward.
+//!
+//! The forward graph is cut into K contiguous segments.  Entries produced
+//! strictly inside a segment (not a graph output, not consumed by a later
+//! forward segment) are *droppable*: after the forward pass their storage
+//! can be reused, because the rewritten graph recomputes them during the
+//! backward pass from the segment's boundary checkpoints.  With the
+//! default K ≈ √n split over per-entry bytes this keeps only O(√n) of the
+//! activation footprint live across the forward/backward boundary, at the
+//! cost of roughly one extra forward pass.
+//!
+//! The rewrite runs at bind time *after* the fusion passes
+//! ([`crate::graph::optimize`]), so recompute clones of fused nodes carry
+//! their epilogues and replay at full speed.  Clones are ordinary graph
+//! nodes appended to the backward region (segment-k clones are emitted
+//! immediately before the first backward node that needs them), so the
+//! RunPlan compiler, the storage planner, and the engine need no special
+//! cases: dropped activations simply lose their backward consumers and the
+//! existing liveness co-share frees them at their last forward reader.
+//!
+//! Determinism: a clone runs the identical op at the identical step, so
+//! stochastic ops that derive their draw from `(seed, step)` (Dropout)
+//! reproduce bitwise, and training with recompute is bitwise identical to
+//! training without it for any thread count and any segment count.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::error::{Error, Result};
+
+use super::{entry_bytes, Entry, Graph, Node, NodeId, ShapeMap};
+
+/// Name suffix marking recompute clones.  The rewrite runs after every
+/// renaming pass, so the suffix survives into viz / profiler spans.
+pub const RC_SUFFIX: &str = "_rc";
+
+/// True if `name` names a recompute clone synthesized by [`apply_recompute`].
+pub fn is_recompute_name(name: &str) -> bool {
+    name.ends_with(RC_SUFFIX)
+}
+
+/// Memory-optimization mode for a bind (`BindConfig.memopt`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MemOpt {
+    /// Keep every activation live until its backward consumer (baseline).
+    #[default]
+    Off,
+    /// Drop interior activations after forward and recompute them during
+    /// backward.  `segments == 0` means the automatic √n heuristic.
+    Recompute { segments: usize },
+}
+
+impl MemOpt {
+    /// Parse a CLI/env spec: `off` | `recompute` | `recompute:K`.
+    pub fn parse(spec: &str) -> Result<MemOpt> {
+        let s = spec.trim();
+        match s {
+            "off" | "none" => Ok(MemOpt::Off),
+            "recompute" => Ok(MemOpt::Recompute { segments: 0 }),
+            _ => {
+                if let Some(k) = s.strip_prefix("recompute:") {
+                    let segments: usize = k
+                        .parse()
+                        .map_err(|_| Error::graph(format!("bad --memopt segment count '{k}'")))?;
+                    if segments == 1 {
+                        return Err(Error::graph(
+                            "--memopt recompute:1 is a no-op; use 'off' or >= 2 segments",
+                        ));
+                    }
+                    Ok(MemOpt::Recompute { segments })
+                } else {
+                    Err(Error::graph(format!(
+                        "bad --memopt '{s}' (expected off | recompute | recompute:K)"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Read the `PALLAS_MEMOPT` knob; `None` when unset or empty.
+    /// Malformed values are reported on stderr and ignored.
+    pub fn from_env() -> Option<MemOpt> {
+        let v = std::env::var("PALLAS_MEMOPT").ok()?;
+        if v.trim().is_empty() {
+            return None;
+        }
+        match MemOpt::parse(&v) {
+            Ok(m) => Some(m),
+            Err(e) => {
+                eprintln!("warning: ignoring PALLAS_MEMOPT: {e}");
+                None
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for MemOpt {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MemOpt::Off => write!(f, "off"),
+            MemOpt::Recompute { segments: 0 } => write!(f, "recompute"),
+            MemOpt::Recompute { segments } => write!(f, "recompute:{segments}"),
+        }
+    }
+}
+
+/// What the rewrite did, for reporting and tests.
+#[derive(Debug, Clone, Default)]
+pub struct RecomputeInfo {
+    /// Number of checkpoint segments the forward graph was cut into.
+    pub segments: usize,
+    /// Last forward node id of each segment (the checkpoint boundaries).
+    pub boundaries: Vec<NodeId>,
+    /// Recompute clone nodes appended to the backward region.
+    pub recompute_nodes: usize,
+    /// Forward entries whose originals no longer reach the backward pass.
+    pub dropped_entries: usize,
+    /// Bytes of those entries: activation memory no longer live across the
+    /// forward/backward boundary.
+    pub dropped_bytes: usize,
+}
+
+/// Cut the forward compute nodes into `segments` contiguous runs of
+/// roughly equal output bytes and return the last node id of each run.
+/// `segments == 0` selects K = max(2, round(√n)) over the n compute nodes.
+/// Returns fewer than 2 boundaries when the graph is too small to cut (in
+/// which case [`apply_recompute`] is an identity).
+///
+/// Each cut minimizes `bytes(node) + |cum(node) - quantile|`: a boundary
+/// node's outputs become checkpoints that stay live until their segment's
+/// backward runs, so its bytes are pure retained cost, while deviation
+/// from the 1/K quantile grows some segment's recompute live-set by the
+/// same number of bytes.  The additive score lets a pyramid's cut skip
+/// past a huge conv output to the max-pool right after it, without
+/// drifting to a far-away tiny head node and unbalancing the segments.
+pub fn segment_boundaries(graph: &Graph, shapes: &ShapeMap, segments: usize) -> Vec<NodeId> {
+    let nf = graph.num_forward;
+    let ids: Vec<NodeId> = (0..nf).filter(|&id| !graph.nodes[id].op.is_variable()).collect();
+    let n = ids.len();
+    if n < 2 {
+        return Vec::new();
+    }
+    let k = if segments == 0 {
+        ((n as f64).sqrt().round() as usize).max(2)
+    } else {
+        segments
+    }
+    .min(n);
+    if k < 2 {
+        return Vec::new();
+    }
+    // Per-node weight: bytes of everything the node writes.  Weight floor 1
+    // keeps zero-byte nodes from collapsing a segment.
+    let weights: Vec<f64> = ids
+        .iter()
+        .map(|&id| {
+            let b: usize = (0..graph.num_outputs_of(id))
+                .map(|o| entry_bytes(&shapes[id][o]))
+                .sum();
+            (b.max(1)) as f64
+        })
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let cums: Vec<f64> = weights
+        .iter()
+        .scan(0.0, |acc, w| {
+            *acc += w;
+            Some(*acc)
+        })
+        .collect();
+    let mut bounds = Vec::with_capacity(k);
+    let mut prev: Option<usize> = None;
+    for j in 1..k {
+        let target = total * j as f64 / k as f64;
+        // Feasible cut indices: strictly after the previous cut, leaving
+        // one node for each remaining cut plus the final segment.
+        let lo = prev.map_or(0, |p| p + 1);
+        let hi = n - 1 - (k - j);
+        // Checkpoint bytes and quantile deviation both land in the retained
+        // set byte-for-byte, so one additive score trades them off directly
+        // (deviation breaks exact ties toward balance).
+        let score = |i: usize| weights[i] + (cums[i] - target).abs();
+        let mut best = lo;
+        for i in lo + 1..=hi {
+            let better = score(i) < score(best)
+                || (score(i) == score(best)
+                    && (cums[i] - target).abs() < (cums[best] - target).abs());
+            if better {
+                best = i;
+            }
+        }
+        bounds.push(ids[best]);
+        prev = Some(best);
+    }
+    bounds.push(*ids.last().unwrap());
+    bounds
+}
+
+/// Rewrite `graph` so that interior activations of every segment except the
+/// last are dropped after forward and recomputed during backward.
+///
+/// `boundaries` holds the last forward node id of each segment (from
+/// [`segment_boundaries`] or an explicit per-node override).  Forward nodes
+/// keep their ids; backward nodes are re-emitted with segment-k recompute
+/// clones spliced in immediately before the first backward node that reads
+/// a dropped entry of segment k.
+///
+/// Returns the rewritten graph, a map from every old entry to its new
+/// entry (callers must remap gradient entries through it), and a
+/// [`RecomputeInfo`] summary.  With fewer than 2 boundaries, no backward
+/// region, or nothing droppable, the rewrite is an identity.
+pub fn apply_recompute(
+    graph: &Graph,
+    shapes: &ShapeMap,
+    boundaries: &[NodeId],
+) -> Result<(Graph, HashMap<Entry, Entry>, RecomputeInfo)> {
+    let nf = graph.num_forward;
+    let n = graph.nodes.len();
+    let identity = |g: &Graph| {
+        let mut emap = HashMap::new();
+        for id in 0..n {
+            for o in 0..g.num_outputs_of(id) {
+                let e = Entry { node: id, out: o };
+                emap.insert(e, e);
+            }
+        }
+        (g.clone(), emap, RecomputeInfo::default())
+    };
+    if nf == 0 || nf >= n || boundaries.len() < 2 {
+        return Ok(identity(graph));
+    }
+    for w in boundaries.windows(2) {
+        if w[1] <= w[0] {
+            return Err(Error::graph("recompute boundaries must be strictly increasing"));
+        }
+    }
+    if *boundaries.last().unwrap() >= nf {
+        return Err(Error::graph("recompute boundary beyond the forward region"));
+    }
+
+    let nseg = boundaries.len();
+    // seg_of[id]: which segment a forward node falls in (boundary = last
+    // node of its segment; anything after the final boundary joins it).
+    let mut seg_of = vec![0usize; nf];
+    let mut s = 0usize;
+    for (id, slot) in seg_of.iter_mut().enumerate() {
+        *slot = s.min(nseg - 1);
+        if s < nseg && id == boundaries[s.min(nseg - 1)] {
+            s += 1;
+        }
+    }
+
+    let outputs_set: HashSet<Entry> = graph.outputs.iter().copied().collect();
+    // Which forward entries are read by the backward region, and which are
+    // read by a *later* forward segment (those are checkpoints: kept).
+    let mut bwd_used: HashSet<Entry> = HashSet::new();
+    let mut later_fwd: HashSet<Entry> = HashSet::new();
+    for (cid, node) in graph.nodes.iter().enumerate() {
+        for e in &node.inputs {
+            if e.node >= nf {
+                continue;
+            }
+            if cid >= nf {
+                bwd_used.insert(*e);
+            } else if seg_of[cid] > seg_of[e.node] {
+                later_fwd.insert(*e);
+            }
+        }
+    }
+    // Droppable: interior to a non-final segment.  The final segment is
+    // never recomputed — its activations feed backward immediately, so
+    // dropping them buys nothing.
+    let droppable = |e: &Entry| -> bool {
+        e.node < nf
+            && !graph.nodes[e.node].op.is_variable()
+            && seg_of[e.node] + 1 < nseg
+            && !outputs_set.contains(e)
+            && !later_fwd.contains(e)
+    };
+
+    // Clone set: nodes with a dropped-and-backward-needed output, closed
+    // over droppable same-segment inputs (a clone can only read originals
+    // that are still live at backward time — checkpoints and variables).
+    let mut in_clone = vec![false; nf];
+    for (id, node) in graph.nodes.iter().enumerate().take(nf) {
+        if node.op.is_variable() {
+            continue;
+        }
+        in_clone[id] = (0..graph.num_outputs_of(id)).any(|o| {
+            let e = Entry { node: id, out: o };
+            droppable(&e) && bwd_used.contains(&e)
+        });
+    }
+    for id in (0..nf).rev() {
+        if !in_clone[id] {
+            continue;
+        }
+        for e in &graph.nodes[id].inputs {
+            if droppable(e) {
+                in_clone[e.node] = true;
+            }
+        }
+    }
+    let mut seg_nodes: Vec<Vec<NodeId>> = vec![Vec::new(); nseg];
+    for (id, &m) in in_clone.iter().enumerate() {
+        if m {
+            seg_nodes[seg_of[id]].push(id);
+        }
+    }
+
+    let mut info = RecomputeInfo {
+        segments: nseg,
+        boundaries: boundaries.to_vec(),
+        ..RecomputeInfo::default()
+    };
+    for id in 0..nf {
+        for o in 0..graph.num_outputs_of(id) {
+            let e = Entry { node: id, out: o };
+            if droppable(&e) && bwd_used.contains(&e) {
+                info.dropped_entries += 1;
+                info.dropped_bytes += entry_bytes(&shapes[id][o]);
+            }
+        }
+    }
+    if info.dropped_entries == 0 {
+        return Ok(identity(graph));
+    }
+
+    // Rebuild: forward verbatim (ids preserved), then old backward nodes in
+    // order with recompute blocks faulted in on first use of a dropped
+    // entry from their segment.
+    let mut out = Graph::new();
+    out.nodes.extend(graph.nodes[..nf].iter().cloned());
+    out.num_forward = nf;
+    let mut emap: HashMap<Entry, Entry> = HashMap::new();
+    for id in 0..nf {
+        for o in 0..graph.num_outputs_of(id) {
+            let e = Entry { node: id, out: o };
+            emap.insert(e, e);
+        }
+    }
+    // Old node id -> new node id (identity for forward, shifted for bwd).
+    let mut node_map: Vec<NodeId> = (0..n).collect();
+    // Old dropped entry -> its recompute clone's entry.
+    let mut rcmap: HashMap<Entry, Entry> = HashMap::new();
+    let mut emitted = vec![false; nseg];
+    for id in nf..n {
+        for e in &graph.nodes[id].inputs {
+            if e.node >= nf || !droppable(e) {
+                continue;
+            }
+            let k = seg_of[e.node];
+            if emitted[k] {
+                continue;
+            }
+            emitted[k] = true;
+            for &fid in &seg_nodes[k] {
+                let src = &graph.nodes[fid];
+                let inputs: Vec<Entry> = src
+                    .inputs
+                    .iter()
+                    .map(|ie| rcmap.get(ie).copied().unwrap_or(*ie))
+                    .collect();
+                let nid =
+                    out.add_node(src.op.clone(), format!("{}{}", src.name, RC_SUFFIX), inputs);
+                info.recompute_nodes += 1;
+                for o in 0..graph.num_outputs_of(fid) {
+                    let oe = Entry { node: fid, out: o };
+                    if droppable(&oe) {
+                        rcmap.insert(oe, Entry { node: nid, out: o });
+                    }
+                }
+            }
+        }
+        let src = &graph.nodes[id];
+        let inputs: Vec<Entry> = src
+            .inputs
+            .iter()
+            .map(|ie| match rcmap.get(ie) {
+                Some(&r) => r,
+                None => emap[ie],
+            })
+            .collect();
+        let control_deps: Vec<NodeId> = src.control_deps.iter().map(|&c| node_map[c]).collect();
+        let nid = out.nodes.len();
+        out.nodes.push(Node {
+            op: src.op.clone(),
+            name: src.name.clone(),
+            inputs,
+            control_deps,
+        });
+        node_map[id] = nid;
+        for o in 0..graph.num_outputs_of(id) {
+            emap.insert(Entry { node: id, out: o }, Entry { node: nid, out: o });
+        }
+    }
+    out.outputs = graph.outputs.iter().map(|e| emap[e]).collect();
+    out.validate()?;
+    Ok((out, emap, info))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::autodiff::build_backward;
+    use crate::graph::infer_shapes;
+    use crate::graph::memory::{default_external, plan_memory, validate_plan, AllocStrategy};
+    use crate::symbol::{Act, Symbol};
+    use std::collections::HashMap as Map;
+
+    /// Deep MLP: enough fc+relu pairs that interior activations are
+    /// dropped (FullyConnectedBackward reads x = the previous activation).
+    fn deep_mlp(batch: usize) -> (Graph, Vec<NodeId>, Map<String, Vec<usize>>) {
+        let dims = [32usize, 64, 48, 32, 16];
+        let mut x = Symbol::var("data");
+        for i in 0..4 {
+            x = x
+                .fully_connected(&format!("fc{i}"), dims[i + 1])
+                .activation(&format!("relu{i}"), Act::Relu);
+        }
+        let net = x.fully_connected("out", 10).softmax_output("softmax");
+        let graph = Symbol::to_graph(&[net]);
+        let wrt: Vec<NodeId> = graph
+            .variables()
+            .into_iter()
+            .filter(|&id| {
+                let n = &graph.nodes[id].name;
+                n != "data" && n != "softmax_label"
+            })
+            .collect();
+        let mut vars = Map::new();
+        vars.insert("data".to_string(), vec![batch, dims[0]]);
+        vars.insert("softmax_label".to_string(), vec![batch]);
+        for i in 0..4 {
+            vars.insert(format!("fc{i}_weight"), vec![dims[i + 1], dims[i]]);
+            vars.insert(format!("fc{i}_bias"), vec![dims[i + 1]]);
+        }
+        vars.insert("out_weight".to_string(), vec![10, dims[4]]);
+        vars.insert("out_bias".to_string(), vec![10]);
+        (graph, wrt, vars)
+    }
+
+    /// Graph with backward appended + gradient entries + shapes.
+    fn trainable(batch: usize) -> (Graph, Vec<Entry>, ShapeMap, Map<String, Vec<usize>>) {
+        let (mut g, wrt, vars) = deep_mlp(batch);
+        let gi = build_backward(&mut g, &wrt).expect("backward");
+        let grads: Vec<Entry> = gi.var_grads.values().copied().collect();
+        let shapes = infer_shapes(&g, &vars).expect("shapes");
+        (g, grads, shapes, vars)
+    }
+
+    #[test]
+    fn parse_memopt_specs() {
+        assert_eq!(MemOpt::parse("off").unwrap(), MemOpt::Off);
+        assert_eq!(MemOpt::parse("none").unwrap(), MemOpt::Off);
+        assert_eq!(MemOpt::parse("recompute").unwrap(), MemOpt::Recompute { segments: 0 });
+        assert_eq!(MemOpt::parse(" recompute:4 ").unwrap(), MemOpt::Recompute { segments: 4 });
+        assert!(MemOpt::parse("recompute:1").is_err());
+        assert!(MemOpt::parse("recompute:x").is_err());
+        assert!(MemOpt::parse("mirrors").is_err());
+        assert_eq!(MemOpt::Recompute { segments: 3 }.to_string(), "recompute:3");
+        assert_eq!(MemOpt::Recompute { segments: 0 }.to_string(), "recompute");
+    }
+
+    #[test]
+    fn boundaries_are_strict_and_sized() {
+        let (g, _, shapes, _) = trainable(8);
+        // 10 forward compute nodes: 5 fc, 4 relu, softmax.
+        for k in [0usize, 2, 3, 4, 10, 64] {
+            let b = segment_boundaries(&g, &shapes, k);
+            assert!(b.len() >= 2, "k={k} gave {b:?}");
+            for w in b.windows(2) {
+                assert!(w[1] > w[0], "k={k}: {b:?}");
+            }
+            assert!(*b.last().unwrap() < g.num_forward);
+            if (2..=10).contains(&k) {
+                assert_eq!(b.len(), k, "k={k}: {b:?}");
+            }
+            if k > 10 {
+                assert_eq!(b.len(), 10, "clamped to compute-node count: {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rewrite_validates_and_marks_clones() {
+        let (g, grads, shapes, _) = trainable(8);
+        let b = segment_boundaries(&g, &shapes, 3);
+        let (rg, emap, info) = apply_recompute(&g, &shapes, &b).expect("rewrite");
+        rg.validate().expect("valid");
+        assert_eq!(rg.num_forward, g.num_forward);
+        assert!(info.recompute_nodes > 0, "{info:?}");
+        assert!(info.dropped_bytes > 0, "{info:?}");
+        let rc = rg.nodes.iter().filter(|n| is_recompute_name(&n.name)).count();
+        assert_eq!(rc, info.recompute_nodes);
+        for (id, node) in rg.nodes.iter().enumerate() {
+            if is_recompute_name(&node.name) {
+                assert!(id >= rg.num_forward, "clone {id} in forward region");
+            }
+        }
+        for e in &grads {
+            let m = emap[e];
+            assert!(m.node < rg.nodes.len());
+            // Gradients are produced by backward math nodes, never clones.
+            assert!(!is_recompute_name(&rg.nodes[m.node].name));
+        }
+    }
+
+    #[test]
+    fn dropped_entries_have_no_backward_readers() {
+        let (g, _, shapes, _) = trainable(8);
+        let b = segment_boundaries(&g, &shapes, 3);
+        let (rg, _, info) = apply_recompute(&g, &shapes, &b).expect("rewrite");
+        assert!(info.dropped_entries > 0);
+        // Reconstruct droppability on the rewritten graph (forward region
+        // is id-identical): no node at or past num_forward may read a
+        // dropped forward entry — it must read the clone instead.
+        let nf = rg.num_forward;
+        let nseg = info.boundaries.len();
+        let mut seg_of = vec![0usize; nf];
+        let mut s = 0usize;
+        for (id, slot) in seg_of.iter_mut().enumerate() {
+            *slot = s.min(nseg - 1);
+            if s < nseg && id == info.boundaries[s.min(nseg - 1)] {
+                s += 1;
+            }
+        }
+        let outputs: HashSet<Entry> = rg.outputs.iter().copied().collect();
+        let mut later_fwd: HashSet<Entry> = HashSet::new();
+        for (cid, node) in rg.nodes.iter().enumerate().take(nf) {
+            for e in &node.inputs {
+                if e.node < nf && seg_of[cid] > seg_of[e.node] {
+                    later_fwd.insert(*e);
+                }
+            }
+        }
+        for (cid, node) in rg.nodes.iter().enumerate().skip(nf) {
+            for e in &node.inputs {
+                if e.node >= nf {
+                    continue;
+                }
+                let dropped = !rg.nodes[e.node].op.is_variable()
+                    && seg_of[e.node] + 1 < nseg
+                    && !outputs.contains(e)
+                    && !later_fwd.contains(e);
+                assert!(
+                    !dropped,
+                    "backward node {cid} ({}) reads dropped forward entry {e:?}",
+                    node.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn planned_peak_shrinks_under_recompute() {
+        let (g, grads, shapes, vars) = trainable(64);
+        let ext = default_external(&g, &grads);
+        let base = plan_memory(&g, &shapes, &ext, AllocStrategy::Both);
+        validate_plan(&g, &shapes, &ext, &base).expect("baseline plan");
+        assert!(base.peak_bytes > 0 && base.peak_bytes <= base.total_internal_bytes);
+        for k in [2usize, 3, 4, 5] {
+            let b = segment_boundaries(&g, &shapes, k);
+            let (rg, emap, _) = apply_recompute(&g, &shapes, &b).expect("rewrite");
+            let grads2: Vec<Entry> = grads.iter().map(|e| emap[e]).collect();
+            let shapes2 = infer_shapes(&rg, &vars).expect("shapes");
+            let ext2 = default_external(&rg, &grads2);
+            let plan = plan_memory(&rg, &shapes2, &ext2, AllocStrategy::Both);
+            validate_plan(&rg, &shapes2, &ext2, &plan).expect("recompute plan");
+            // Monotone bound: never worse than keeping everything live.
+            assert!(
+                plan.peak_bytes <= base.total_internal_bytes,
+                "k={k}: peak {} > dedicated total {}",
+                plan.peak_bytes,
+                base.total_internal_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn identity_when_nothing_droppable() {
+        // fc -> softmax: everything is a checkpoint, an output, or final
+        // segment, so the rewrite must be an identity.
+        let net = Symbol::var("data").fully_connected("fc", 4).softmax_output("softmax");
+        let mut g = Symbol::to_graph(&[net]);
+        let wrt: Vec<NodeId> = g
+            .variables()
+            .into_iter()
+            .filter(|&id| {
+                let n = &g.nodes[id].name;
+                n != "data" && n != "softmax_label"
+            })
+            .collect();
+        build_backward(&mut g, &wrt).expect("backward");
+        let mut vars = Map::new();
+        vars.insert("data".to_string(), vec![2, 8]);
+        vars.insert("softmax_label".to_string(), vec![2]);
+        vars.insert("fc_weight".to_string(), vec![4, 8]);
+        vars.insert("fc_bias".to_string(), vec![4]);
+        let shapes = infer_shapes(&g, &vars).expect("shapes");
+        let b = segment_boundaries(&g, &shapes, 2);
+        let (rg, _, info) = apply_recompute(&g, &shapes, &b).expect("rewrite");
+        assert_eq!(info.recompute_nodes, 0);
+        assert_eq!(rg.nodes.len(), g.nodes.len());
+    }
+
+    #[test]
+    fn clones_preserve_op_kind() {
+        let (g, _, shapes, _) = trainable(8);
+        let b = segment_boundaries(&g, &shapes, 4);
+        let (rg, _, _) = apply_recompute(&g, &shapes, &b).expect("rewrite");
+        for node in &rg.nodes {
+            if let Some(orig) = node.name.strip_suffix(RC_SUFFIX) {
+                let src = rg
+                    .nodes
+                    .iter()
+                    .find(|n| n.name == orig)
+                    .unwrap_or_else(|| panic!("clone {} has no source", node.name));
+                assert_eq!(
+                    std::mem::discriminant(&src.op),
+                    std::mem::discriminant(&node.op),
+                    "clone {} changed op kind",
+                    node.name
+                );
+            }
+        }
+    }
+}

@@ -4,12 +4,16 @@
 use super::Graph;
 
 /// Render the graph in Graphviz dot format.  Backward nodes get a gray
-/// fill like Figure 4's shading.
+/// fill like Figure 4's shading; recompute clones (the checkpointing
+/// rewrite's mirror nodes) are dashed and labelled.
 pub fn to_dot(graph: &Graph) -> String {
     let mut s = String::from("digraph mixnet {\n  rankdir=BT;\n  node [shape=box, fontsize=10];\n");
     for (id, node) in graph.nodes.iter().enumerate() {
+        let recompute = crate::graph::recompute::is_recompute_name(&node.name);
         let style = if node.op.is_variable() {
             "shape=ellipse, style=filled, fillcolor=lightblue"
+        } else if recompute {
+            "style=\"filled,dashed\", fillcolor=lightyellow"
         } else if graph.num_forward > 0 && id >= graph.num_forward {
             "style=filled, fillcolor=lightgray"
         } else {
@@ -18,9 +22,10 @@ pub fn to_dot(graph: &Graph) -> String {
         // `label()` spells out fused epilogues (e.g. FullyConnected+relu)
         // so dumped graphs show what the compiler actually ran.
         s.push_str(&format!(
-            "  n{id} [label=\"{}\\n{}\", {style}];\n",
+            "  n{id} [label=\"{}\\n{}{}\", {style}];\n",
             node.name,
-            node.op.label()
+            node.op.label(),
+            if recompute { "\\n(recompute)" } else { "" }
         ));
     }
     for (id, node) in graph.nodes.iter().enumerate() {
@@ -49,6 +54,34 @@ mod tests {
             assert!(dot.contains(&n.name), "missing {}", n.name);
         }
         assert!(dot.matches(" -> ").count() >= g.nodes.iter().map(|n| n.inputs.len()).sum());
+    }
+
+    #[test]
+    fn dot_renders_recompute_clones_dashed() {
+        use crate::graph::autodiff::build_backward;
+        use crate::graph::recompute::{apply_recompute, segment_boundaries};
+        let (mut g, vs) = mlp_graph(4);
+        let wrt: Vec<_> = g
+            .variables()
+            .into_iter()
+            .filter(|&id| {
+                let n = &g.nodes[id].name;
+                n != "data" && n != "label"
+            })
+            .collect();
+        build_backward(&mut g, &wrt).unwrap();
+        let shapes = crate::graph::infer_shapes(&g, &vs).unwrap();
+        let b = segment_boundaries(&g, &shapes, 2);
+        let (rg, _, info) = apply_recompute(&g, &shapes, &b).unwrap();
+        let dot = to_dot(&rg);
+        if info.recompute_nodes > 0 {
+            assert!(dot.contains("(recompute)"), "{dot}");
+            assert!(dot.contains("style=\"filled,dashed\""), "{dot}");
+        } else {
+            // Tiny MLP may have nothing droppable; the dot must then be
+            // clone-free.
+            assert!(!dot.contains("(recompute)"));
+        }
     }
 
     #[test]

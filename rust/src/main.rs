@@ -43,7 +43,12 @@ COMMANDS:
                  --classes N   --examples N  --devices N
                  --kv local|dist  --consistency seq|bounded:K|eventual
                  --weights W0,W1,...  --no-overlap  --no-fuse
-                 --checkpoint FILE
+                 --memopt off|recompute[:K]  --checkpoint FILE
+                 (--memopt recompute drops interior activations after
+                  forward and recomputes them during backward — sublinear
+                  activation memory, bitwise-identical results; K picks
+                  the segment count, default √n; PALLAS_MEMOPT sets the
+                  same knob when the flag is absent)
                  (--kv dist needs --server ADDR; --batch is the global
                   batch, split over --devices replica shards; bounded:K
                   lets replicas run K rounds ahead of delivery; --weights
@@ -71,6 +76,8 @@ COMMANDS:
                  --steps N  --artifacts DIR  --mode sgd|kvstore  --workers N
   memplan      print the Figure 7 memory table for one model
                  --model NAME  --batch N  [--training]
+                 (with --training, also prints the sublinear-memory
+                  recompute row: planned peak vs the memopt-off peak)
   sim          virtual-time Figure 8 replay
                  --machines N  --passes N
   info         version and backend information
@@ -105,7 +112,7 @@ const VALUE_KEYS: &[&str] = &[
     "momentum", "server", "machine", "steps", "artifacts", "mode", "workers", "passes",
     "checkpoint", "clients", "requests", "max-batch", "max-delay-us", "devices", "kv",
     "consistency", "weights", "lease-ms", "lease-policy", "profile", "metrics-every",
-    "stats-every",
+    "stats-every", "memopt",
 ];
 
 fn run(argv: Vec<String>) -> Result<()> {
@@ -221,6 +228,7 @@ fn bind_trainer(
     store: Arc<dyn mixnet::kvstore::KVStore>,
 ) -> Result<DataParallelTrainer> {
     let seed: u64 = args.get("seed", 7)?;
+    let memopt = parse_memopt(args)?;
     let weights = parse_weights(args, devices)?;
     let sync = match (&weights, parse_consistency(args)?) {
         (Some(_), Consistency::BoundedDelay(_)) => {
@@ -246,12 +254,23 @@ fn bind_trainer(
             devices,
             shards,
             overlap: !args.has("no-overlap"),
-            bind: BindConfig { fuse: !args.has("no-fuse"), ..Default::default() },
+            bind: BindConfig { fuse: !args.has("no-fuse"), memopt, ..Default::default() },
             seed,
             sync,
             weights: weights.unwrap_or_default(),
         },
     )
+}
+
+/// `--memopt off|recompute[:K]`, falling back to the `PALLAS_MEMOPT`
+/// env knob when the flag is absent.
+fn parse_memopt(args: &Args) -> Result<mixnet::graph::recompute::MemOpt> {
+    use mixnet::graph::recompute::MemOpt;
+    let spec = args.get_str("memopt", "");
+    if spec.is_empty() {
+        return Ok(MemOpt::from_env().unwrap_or(MemOpt::Off));
+    }
+    MemOpt::parse(&spec)
 }
 
 /// Connect a distributed store for `shards` local parts per round,
@@ -875,6 +894,25 @@ fn cmd_memplan(args: &Args) -> Result<()> {
         let plan = plan_memory(&graph, &shapes, &external, strategy);
         println!("  {strategy:>8}: {:>8.1} MB internal", plan.bytes_mb());
     }
+    if args.has("training") {
+        // Sublinear-memory row: the recompute rewrite at auto √n segments.
+        use mixnet::graph::recompute::{apply_recompute, segment_boundaries};
+        let base = plan_memory(&graph, &shapes, &external, AllocStrategy::Both);
+        let bounds = segment_boundaries(&graph, &shapes, 0);
+        let (rg, emap, info) = apply_recompute(&graph, &shapes, &bounds)?;
+        let extra2: Vec<_> = extra.iter().map(|e| emap[e]).collect();
+        let shapes2 = infer_shapes(&rg, &vs)?;
+        let ext2 = default_external(&rg, &extra2);
+        let plan = plan_memory(&rg, &shapes2, &ext2, AllocStrategy::Both);
+        println!(
+            "  recompute: {:>7.1} MB peak vs {:.1} MB off-peak ({} segments, {} clones, {:.1} MB dropped)",
+            mixnet::util::mb(plan.peak_bytes),
+            mixnet::util::mb(base.peak_bytes),
+            info.segments,
+            info.recompute_nodes,
+            mixnet::util::mb(info.dropped_bytes)
+        );
+    }
     Ok(())
 }
 
@@ -908,6 +946,9 @@ fn cmd_info() -> Result<()> {
         Ok(rt) => println!("pjrt: {} backend available", rt.platform()),
         Err(e) => println!("pjrt: unavailable ({e})"),
     }
-    println!("models: mlp, simple-cnn, alexnet, vgg-11, vgg-16, inception-bn (@HW scales input)");
+    println!(
+        "models: mlp, simple-cnn, alexnet, vgg-11, vgg11-tower, vgg-16, conv-tower, \
+         inception-bn (@HW scales input)"
+    );
     Ok(())
 }

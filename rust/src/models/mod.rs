@@ -22,7 +22,7 @@ use crate::symbol::Symbol;
 pub use alexnet::alexnet;
 pub use inception::inception_bn;
 pub use mlp::{mlp, simple_cnn};
-pub use vgg::{vgg, VggDepth};
+pub use vgg::{conv_tower, vgg, vgg11_tower, VggDepth};
 
 /// A network architecture: its symbol plus the per-example input shape it
 /// expects (`feat_shape`, without the batch axis).
@@ -79,10 +79,11 @@ impl Model {
 
 /// Look up a model by name (used by the CLI and benches).
 ///
-/// Known names: `mlp`, `alexnet`, `vgg-11`, `vgg-16`, `inception-bn`,
-/// `simple-cnn`.  An optional `@HxW` suffix scales the spatial input
-/// (e.g. `alexnet@64` builds AlexNet topology on 64x64 input) — the
-/// substitution knob the benches use to fit CPU budgets.
+/// Known names: `mlp`, `alexnet`, `vgg-11`, `vgg11-tower`, `vgg-16`,
+/// `conv-tower`, `inception-bn`, `simple-cnn`.  An optional `@HxW`
+/// suffix scales the spatial input (e.g. `alexnet@64` builds AlexNet
+/// topology on 64x64 input) — the substitution knob the benches use to
+/// fit CPU budgets.
 pub fn by_name(spec: &str) -> Result<Model> {
     let (name, hw) = match spec.split_once('@') {
         Some((n, s)) => {
@@ -97,6 +98,8 @@ pub fn by_name(spec: &str) -> Result<Model> {
         "mlp" => Ok(mlp(&[128, 64], 784, 10)),
         "alexnet" => Ok(alexnet(1000, hw.unwrap_or(224))),
         "vgg-11" => Ok(vgg(VggDepth::Vgg11, 1000, hw.unwrap_or(224))),
+        "vgg11-tower" => Ok(vgg11_tower(10, hw.unwrap_or(64))),
+        "conv-tower" => Ok(conv_tower(16, 64, 10, hw.unwrap_or(32))),
         "vgg-16" => Ok(vgg(VggDepth::Vgg16, 1000, hw.unwrap_or(224))),
         "inception-bn" => Ok(inception_bn(1000, hw.unwrap_or(224))),
         "simple-cnn" => Ok(simple_cnn(10, hw.unwrap_or(28))),

@@ -60,6 +60,76 @@ pub fn vgg(depth: VggDepth, num_classes: usize, hw: usize) -> Model {
     }
 }
 
+/// The VGG-11 *convolutional tower* with a small classifier head: the
+/// full five conv stages (where the activation memory lives) but a
+/// 256-wide fc in place of the 4096-wide pair, so activations — not
+/// parameters/gradients — dominate the footprint.  One of the two
+/// sublinear-memory benchmark workloads (CI bounds its measured
+/// peak-pool ratio).  Note the pyramid geometry puts a floor under that
+/// ratio: stage 1's activation and its gradient (2 x the largest tensor)
+/// must coexist during segment-1 backward whatever the checkpoint
+/// placement, and the whole memopt-off footprint is only ~2.8 x that
+/// tensor — the full 0.6 x sublinear win needs the uniform-depth
+/// [`conv_tower`] shape instead.
+pub fn vgg11_tower(num_classes: usize, hw: usize) -> Model {
+    assert!(hw >= 32 && hw % 32 == 0, "vgg needs input divisible by 32, got {hw}");
+    let widths = [64usize, 128, 256, 512, 512];
+    let mut x = Symbol::var("data");
+    for (stage, (&n_convs, &width)) in stages(VggDepth::Vgg11).iter().zip(&widths).enumerate() {
+        for c in 0..n_convs {
+            let name = format!("conv{}_{}", stage + 1, c + 1);
+            x = x
+                .convolution(&name, width, 3, 1, 1)
+                .activation(&format!("relu{}_{}", stage + 1, c + 1), Act::Relu);
+        }
+        x = x.pooling(&format!("pool{}", stage + 1), Pool::Max, 2, 2, 0);
+    }
+    let out = x
+        .flatten("flat")
+        .fully_connected("fc6", 256)
+        .activation("relu6", Act::Relu)
+        .dropout("drop6", 0.5)
+        .fully_connected("fc7", num_classes)
+        .softmax_output("softmax");
+    Model {
+        name: format!("vgg11-tower@{hw}"),
+        symbol: out,
+        feat_shape: vec![3, hw, hw],
+        num_classes,
+    }
+}
+
+/// A plain `depth`-layer convolutional tower at constant spatial
+/// resolution — conv(3x3, `width`) + relu stacked `depth` times, one 2x2
+/// max-pool, and a small softmax head.  Uniform per-layer activations
+/// are exactly the n-layer setting of the sublinear-memory analysis
+/// (§3.1 mirror nodes): memopt-off must hold all n activations across
+/// the forward/backward boundary while the recompute rewrite holds
+/// K checkpoints plus one segment, so the measured peak-pool ratio
+/// approaches (2√n)/n with no pyramid floor.  This is the workload CI
+/// gates at `recompute_mem_ratio <= 0.6`.
+pub fn conv_tower(depth: usize, width: usize, num_classes: usize, hw: usize) -> Model {
+    assert!(depth >= 2, "conv_tower needs depth >= 2, got {depth}");
+    assert!(hw >= 4 && hw % 2 == 0, "conv_tower needs even input >= 4, got {hw}");
+    let mut x = Symbol::var("data");
+    for i in 0..depth {
+        x = x
+            .convolution(&format!("conv{}", i + 1), width, 3, 1, 1)
+            .activation(&format!("relu{}", i + 1), Act::Relu);
+    }
+    let out = x
+        .pooling("pool", Pool::Max, 2, 2, 0)
+        .flatten("flat")
+        .fully_connected("fc", num_classes)
+        .softmax_output("softmax");
+    Model {
+        name: format!("conv-tower@{hw}x{depth}"),
+        symbol: out,
+        feat_shape: vec![3, hw, hw],
+        num_classes,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,5 +156,18 @@ mod tests {
     #[should_panic(expected = "divisible by 32")]
     fn vgg_rejects_odd_input() {
         vgg(VggDepth::Vgg11, 10, 100);
+    }
+
+    #[test]
+    fn conv_tower_is_uniform_depth() {
+        let m = conv_tower(12, 64, 10, 32);
+        assert_eq!(m.name, "conv-tower@32x12");
+        let ps = m.param_shapes(8).unwrap();
+        let convs = ps.keys().filter(|k| k.starts_with("conv") && k.ends_with("_weight")).count();
+        assert_eq!(convs, 12);
+        assert_eq!(ps["conv1_weight"], vec![64, 3, 3, 3]);
+        assert_eq!(ps["conv12_weight"], vec![64, 64, 3, 3]);
+        // constant resolution until the single head pool: 32 / 2 = 16
+        assert_eq!(ps["fc_weight"], vec![10, 64 * 16 * 16]);
     }
 }

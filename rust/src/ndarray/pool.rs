@@ -52,12 +52,24 @@ pub struct PoolStats {
     pub pooled_buffers: u64,
     /// Bytes currently shelved.
     pub pooled_bytes: u64,
+    /// Bytes currently checked out of the pool (acquired, not yet
+    /// released) — live buffers, the complement of the `pooled_*` gauges.
+    pub live_bytes: u64,
+    /// High-water mark of `live_bytes` since process start (or the last
+    /// [`StoragePool::reset_peak`]) — the measured counterpart of the
+    /// planner's `MemPlan::peak_bytes`.
+    pub peak_bytes: u64,
 }
 
 struct Shelves {
     by_len: HashMap<usize, Vec<Box<[f32]>>>,
     bytes: usize,
     buffers: usize,
+    /// Bytes currently checked out (live) and their high-water mark.
+    live_bytes: usize,
+    peak_bytes: usize,
+    /// Per-size live buffer counts: len -> (current, peak).
+    live_by_len: HashMap<usize, (usize, usize)>,
 }
 
 /// A recycling allocator for `f32` buffers, bucketed by exact length.
@@ -84,7 +96,14 @@ impl StoragePool {
             enabled,
             max_bytes,
             max_per_size,
-            shelves: Mutex::new(Shelves { by_len: HashMap::new(), bytes: 0, buffers: 0 }),
+            shelves: Mutex::new(Shelves {
+                by_len: HashMap::new(),
+                bytes: 0,
+                buffers: 0,
+                live_bytes: 0,
+                peak_bytes: 0,
+                live_by_len: HashMap::new(),
+            }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             releases: AtomicU64::new(0),
@@ -105,16 +124,26 @@ impl StoragePool {
         if len == 0 {
             return None;
         }
+        let bytes = len * 4;
+        let mut sh = self.shelves.lock().unwrap();
+        // Live accounting runs on every acquire (hit, miss, or disabled
+        // pool): `live_bytes` tracks checked-out buffers, and its
+        // high-water mark is the measured peak-memory gauge.
+        sh.live_bytes += bytes;
+        sh.peak_bytes = sh.peak_bytes.max(sh.live_bytes);
+        let e = sh.live_by_len.entry(len).or_insert((0, 0));
+        e.0 += 1;
+        e.1 = e.1.max(e.0);
         if self.enabled {
-            let mut sh = self.shelves.lock().unwrap();
             if let Some(buf) = sh.by_len.get_mut(&len).and_then(|v| v.pop()) {
-                sh.bytes -= len * 4;
+                sh.bytes -= bytes;
                 sh.buffers -= 1;
                 drop(sh);
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return Some(buf);
             }
         }
+        drop(sh);
         self.misses.fetch_add(1, Ordering::Relaxed);
         None
     }
@@ -148,12 +177,19 @@ impl StoragePool {
             return;
         }
         self.releases.fetch_add(1, Ordering::Relaxed);
+        let bytes = len * 4;
+        let mut sh = self.shelves.lock().unwrap();
+        // Saturating: a buffer can be released here without having been
+        // acquired here (e.g. constructed from a Vec and handed over).
+        sh.live_bytes = sh.live_bytes.saturating_sub(bytes);
+        if let Some(e) = sh.live_by_len.get_mut(&len) {
+            e.0 = e.0.saturating_sub(1);
+        }
         if !self.enabled {
+            drop(sh);
             self.evictions.fetch_add(1, Ordering::Relaxed);
             return;
         }
-        let bytes = len * 4;
-        let mut sh = self.shelves.lock().unwrap();
         let over_bytes = sh.bytes + bytes > self.max_bytes;
         let shelf = sh.by_len.entry(len).or_default();
         if over_bytes || shelf.len() >= self.max_per_size {
@@ -167,9 +203,9 @@ impl StoragePool {
 
     /// Snapshot the counters.
     pub fn stats(&self) -> PoolStats {
-        let (pooled_buffers, pooled_bytes) = {
+        let (pooled_buffers, pooled_bytes, live_bytes, peak_bytes) = {
             let sh = self.shelves.lock().unwrap();
-            (sh.buffers as u64, sh.bytes as u64)
+            (sh.buffers as u64, sh.bytes as u64, sh.live_bytes as u64, sh.peak_bytes as u64)
         };
         PoolStats {
             hits: self.hits.load(Ordering::Relaxed),
@@ -178,7 +214,35 @@ impl StoragePool {
             evictions: self.evictions.load(Ordering::Relaxed),
             pooled_buffers,
             pooled_bytes,
+            live_bytes,
+            peak_bytes,
         }
+    }
+
+    /// Reset the byte high-water marks (total and per-size) to the
+    /// current live level, so the next window's peak can be measured in
+    /// isolation (benches measure one bind+train window at a time).
+    pub fn reset_peak(&self) {
+        let mut sh = self.shelves.lock().unwrap();
+        sh.peak_bytes = sh.live_bytes;
+        for e in sh.live_by_len.values_mut() {
+            e.1 = e.0;
+        }
+    }
+
+    /// Per-size high-water marks: `(elements, peak bytes)` for every
+    /// buffer size ever acquired, largest first.  Sizes whose peak fell
+    /// to zero after a [`StoragePool::reset_peak`] are omitted.
+    pub fn peak_by_size(&self) -> Vec<(usize, u64)> {
+        let sh = self.shelves.lock().unwrap();
+        let mut v: Vec<(usize, u64)> = sh
+            .live_by_len
+            .iter()
+            .filter(|(_, &(_, peak))| peak > 0)
+            .map(|(&len, &(_, peak))| (len, (peak * len * 4) as u64))
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(b.0.cmp(&a.0)));
+        v
     }
 
     /// Drop every shelved buffer (tests and memory-pressure hooks).
@@ -341,6 +405,75 @@ mod tests {
         assert_eq!(s.pooled_buffers, 0);
         // zero-length buffers never heap-allocate: no miss, no release
         assert_eq!((s.hits, s.misses, s.releases), (0, 0, 0));
+    }
+
+    #[test]
+    fn live_and_peak_bytes_track_checkouts() {
+        let p = StoragePool::new(true);
+        let a = p.acquire_uninit(100); // 400 B live
+        let b = p.acquire_uninit(50); // 600 B live  <- peak
+        assert_eq!(p.stats().live_bytes, 600);
+        assert_eq!(p.stats().peak_bytes, 600);
+        p.release(a);
+        assert_eq!(p.stats().live_bytes, 200);
+        assert_eq!(p.stats().peak_bytes, 600, "peak is a high-water mark");
+        // Re-acquiring the shelved 100-elem buffer counts as live again
+        // but does not exceed the old peak.
+        let c = p.acquire_uninit(100);
+        let s = p.stats();
+        assert_eq!((s.live_bytes, s.peak_bytes), (600, 600));
+        p.release(b);
+        p.release(c);
+        assert_eq!(p.stats().live_bytes, 0);
+    }
+
+    #[test]
+    fn peak_resets_to_current_live() {
+        let p = StoragePool::new(true);
+        let a = p.acquire_uninit(256);
+        p.release(a);
+        assert_eq!(p.stats().peak_bytes, 1024);
+        p.reset_peak();
+        let s = p.stats();
+        assert_eq!((s.live_bytes, s.peak_bytes), (0, 0));
+        let b = p.acquire_uninit(8);
+        assert_eq!(p.stats().peak_bytes, 32);
+        p.release(b);
+    }
+
+    #[test]
+    fn per_size_peaks_report_bytes_largest_first() {
+        let p = StoragePool::new(true);
+        let a = p.acquire_uninit(10);
+        let b = p.acquire_uninit(10);
+        let c = p.acquire_uninit(100);
+        let peaks = p.peak_by_size();
+        assert_eq!(peaks, vec![(100, 400), (10, 80)]);
+        p.release(a);
+        p.release(b);
+        p.release(c);
+        p.reset_peak();
+        assert!(p.peak_by_size().is_empty(), "reset drops zero-live sizes");
+    }
+
+    #[test]
+    fn disabled_pool_still_tracks_live_bytes() {
+        let p = StoragePool::new(false);
+        let a = p.acquire_uninit(16);
+        assert_eq!(p.stats().live_bytes, 64);
+        assert_eq!(p.stats().peak_bytes, 64);
+        p.release(a);
+        assert_eq!(p.stats().live_bytes, 0);
+    }
+
+    #[test]
+    fn foreign_release_saturates_instead_of_underflowing() {
+        let p = StoragePool::new(true);
+        // A buffer that was never acquired from this pool.
+        p.release(vec![0.0f32; 32].into_boxed_slice());
+        let s = p.stats();
+        assert_eq!(s.live_bytes, 0);
+        assert_eq!(s.releases, 1);
     }
 
     #[test]

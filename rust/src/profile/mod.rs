@@ -454,7 +454,8 @@ impl MetricsSnapshot {
         let workers = tids.len() as u64;
         let denom = wall_us.saturating_mul(workers);
         MetricsSnapshot {
-            schema: 1,
+            // v2: pool gained the live_bytes/peak_bytes gauges (ISSUE 9).
+            schema: 2,
             wall_us,
             workers,
             busy_us,
@@ -572,13 +573,15 @@ impl MetricsSnapshot {
         let _ = write!(
             o,
             "\"pool\":{{\"hits\":{},\"misses\":{},\"releases\":{},\"evictions\":{},\
-             \"pooled_buffers\":{},\"pooled_bytes\":{}}}",
+             \"pooled_buffers\":{},\"pooled_bytes\":{},\"live_bytes\":{},\"peak_bytes\":{}}}",
             self.pool.hits,
             self.pool.misses,
             self.pool.releases,
             self.pool.evictions,
             self.pool.pooled_buffers,
-            self.pool.pooled_bytes
+            self.pool.pooled_bytes,
+            self.pool.live_bytes,
+            self.pool.peak_bytes
         );
         match &self.pull {
             None => o.push_str(",\"pull\":null"),
@@ -688,6 +691,9 @@ impl MetricsSnapshot {
             evictions: req_u64(p, "evictions", "pool")?,
             pooled_buffers: req_u64(p, "pooled_buffers", "pool")?,
             pooled_bytes: req_u64(p, "pooled_bytes", "pool")?,
+            // Schema-1 snapshots predate the live/peak gauges.
+            live_bytes: req_u64(p, "live_bytes", "pool").unwrap_or(0),
+            peak_bytes: req_u64(p, "peak_bytes", "pool").unwrap_or(0),
         };
         if let Some(p @ Json::Obj(_)) = v.get("pull") {
             snap.pull = Some(PullStats {
@@ -775,6 +781,12 @@ impl MetricsSnapshot {
         let dm = self.pool.misses.saturating_sub(pm);
         if dh + dm > 0 {
             parts.push(format!("pool=+{dh}h/+{dm}m"));
+        }
+        if self.pool.peak_bytes > 0 {
+            parts.push(format!(
+                "pool_peak={:.1}mb",
+                self.pool.peak_bytes as f64 / (1024.0 * 1024.0)
+            ));
         }
         if let Some(s) = &self.serve {
             let prev_s = prev.and_then(|p| p.serve.as_ref());

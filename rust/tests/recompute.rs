@@ -1,0 +1,324 @@
+//! ISSUE 9 acceptance tests: sublinear-memory training via
+//! recompute-on-backward checkpoint segments.
+//!
+//! * **Bitwise equivalence** — an executor bound with
+//!   `memopt: Recompute` must produce *bitwise* identical loss curves,
+//!   gradients and updated parameters to a `memopt: Off` bind, for MLP
+//!   and AlexNet (dropout included: recompute clones re-derive the mask
+//!   from the same (seed, step) pair), fused and unfused, at any
+//!   segment count, across engine worker counts.  The intra-op thread
+//!   pool is a process-wide OnceLock, so CI reruns this binary under
+//!   `PALLAS_INTRA_THREADS` ∈ {1, 4}.
+//! * **Memory actually shrinks** — the rewritten bind must report
+//!   recompute clones, dropped activation bytes, and a planned peak
+//!   strictly below the memopt-off planned peak on a deep enough net.
+//! * **Pool discipline** — steady-state recompute training steps do
+//!   zero pool misses after warmup, same bar as the memopt-off plan.
+//!
+//! Tests serialize on `POOL_LOCK` where they read the process-global
+//! pool counters.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use mixnet::engine::{create, EngineKind};
+use mixnet::executor::{BindConfig, Executor};
+use mixnet::graph::recompute::MemOpt;
+use mixnet::models::{alexnet, conv_tower, mlp, vgg11_tower, Model};
+use mixnet::ndarray::{pool, NDArray};
+use mixnet::util::Rng;
+
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Deterministic values for every variable (data, label, params) of a
+/// model — generated once, shared verbatim by every bind under test.
+fn gen_values(model: &Model, batch: usize) -> (HashMap<String, Vec<f32>>, Vec<String>) {
+    let shapes = model.var_shapes(batch).unwrap();
+    let mut names: Vec<String> = shapes.keys().cloned().collect();
+    names.sort();
+    let mut vals = HashMap::new();
+    for (i, name) in names.iter().enumerate() {
+        let n: usize = shapes[name].iter().product();
+        let mut rng = Rng::seed_from_u64(0x5EC + i as u64);
+        let v: Vec<f32> = if name.ends_with("_label") {
+            (0..n).map(|j| (j % model.num_classes) as f32).collect()
+        } else {
+            (0..n).map(|_| rng.normal_with(0.0, 0.15)).collect()
+        };
+        vals.insert(name.clone(), v);
+    }
+    let params = names
+        .iter()
+        .filter(|n| n.as_str() != "data" && !n.ends_with("_label"))
+        .cloned()
+        .collect();
+    (vals, params)
+}
+
+/// Bind with the given memopt/fuse knobs, run `steps` of
+/// forward/backward + imperative SGD, and return the bit patterns of
+/// the per-step loss curve, the head output, every gradient and every
+/// updated parameter.
+#[allow(clippy::too_many_arguments)]
+fn run_model(
+    model: &Model,
+    batch: usize,
+    workers: usize,
+    memopt: MemOpt,
+    fuse: bool,
+    steps: usize,
+    vals: &HashMap<String, Vec<f32>>,
+    params: &[String],
+) -> Vec<Vec<u32>> {
+    let engine = create(EngineKind::Threaded, workers);
+    let shapes = model.var_shapes(batch).unwrap();
+    let args: HashMap<String, NDArray> = vals
+        .iter()
+        .map(|(k, v)| (k.clone(), NDArray::from_vec_on(&shapes[k], v.clone(), engine.clone())))
+        .collect();
+    let grad_names: Vec<&str> = params.iter().map(|s| s.as_str()).collect();
+    let cfg = BindConfig { memopt, fuse, ..Default::default() };
+    let exec = Executor::bind(&model.symbol, engine.clone(), args, &grad_names, cfg).unwrap();
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        exec.forward_backward().unwrap();
+        let (loss, _acc) = exec.softmax_metrics().unwrap();
+        losses.push(loss);
+        for p in params {
+            exec.arg(p).unwrap().sub_scaled_(exec.grad(p).unwrap(), 0.05);
+        }
+    }
+    exec.wait();
+    let mut out = vec![bits(&losses), bits(&exec.outputs()[0].to_vec())];
+    for p in params {
+        out.push(bits(&exec.grad(p).unwrap().to_vec()));
+        out.push(bits(&exec.arg(p).unwrap().to_vec()));
+    }
+    out
+}
+
+fn assert_bits_eq(got: &[Vec<u32>], want: &[Vec<u32>], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: section count");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.len(), w.len(), "{ctx}: length of section {i}");
+        let diff = g.iter().zip(w).filter(|(a, b)| a != b).count();
+        assert!(diff == 0, "{ctx}: section {i} differs in {diff}/{} words", g.len());
+    }
+}
+
+#[test]
+fn mlp_recompute_is_bitwise_identical_across_segments_and_workers() {
+    // Deep enough that sqrt(n) segmentation has interior activations to
+    // drop on every segment-count choice below.
+    let model = mlp(&[48, 40, 32, 24, 16], 16, 4);
+    let (vals, params) = gen_values(&model, 8);
+    let reference = run_model(&model, 8, 1, MemOpt::Off, true, 3, &vals, &params);
+    for workers in [1usize, 4] {
+        for segments in [0usize, 2, 3, 5] {
+            let got = run_model(
+                &model,
+                8,
+                workers,
+                MemOpt::Recompute { segments },
+                true,
+                3,
+                &vals,
+                &params,
+            );
+            assert_bits_eq(
+                &got,
+                &reference,
+                &format!("mlp workers={workers} segments={segments}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn alexnet_recompute_is_bitwise_identical_fused_and_unfused() {
+    // Full AlexNet topology on a 64x64 input; dropout is live in
+    // training mode, so clone nodes must re-derive the identical mask,
+    // and under `fuse` the clones inherit the GEMM epilogues.
+    let model = alexnet(4, 64);
+    let (vals, params) = gen_values(&model, 1);
+    for fuse in [true, false] {
+        let auto = MemOpt::Recompute { segments: 0 };
+        let off = run_model(&model, 1, 4, MemOpt::Off, fuse, 2, &vals, &params);
+        let rc = run_model(&model, 1, 4, auto, fuse, 2, &vals, &params);
+        assert_bits_eq(&rc, &off, &format!("alexnet fuse={fuse}"));
+    }
+}
+
+#[test]
+fn vgg_tower_recompute_is_bitwise_identical() {
+    // The CI-gated benchmark workload itself: five conv stages plus a
+    // dropout head.  One step at batch 2 keeps the test CPU-cheap.
+    let model = vgg11_tower(4, 64);
+    let (vals, params) = gen_values(&model, 2);
+    let off = run_model(&model, 2, 4, MemOpt::Off, true, 1, &vals, &params);
+    let rc = run_model(&model, 2, 4, MemOpt::Recompute { segments: 0 }, true, 1, &vals, &params);
+    assert_bits_eq(&rc, &off, "vgg11-tower");
+}
+
+#[test]
+fn conv_tower_recompute_is_bitwise_identical() {
+    // The uniform-depth CI gate workload, tiny edition: same-width convs
+    // at constant resolution, where the sqrt(n) segmentation drops the
+    // bulk of the interior activations.
+    let model = conv_tower(8, 16, 4, 8);
+    let (vals, params) = gen_values(&model, 2);
+    let off = run_model(&model, 2, 4, MemOpt::Off, true, 2, &vals, &params);
+    for segments in [0usize, 3] {
+        let rc = MemOpt::Recompute { segments };
+        let got = run_model(&model, 2, 4, rc, true, 2, &vals, &params);
+        assert_bits_eq(&got, &off, &format!("conv-tower segments={segments}"));
+    }
+}
+
+#[test]
+fn conv_tower_planned_peak_hits_sublinear_ratio() {
+    // On n uniform layers the rewrite's planned walk peak must land well
+    // below memopt-off — the property the 0.6x measured CI gate relies
+    // on (pyramid nets have a stage-1 floor; this shape does not).
+    let model = conv_tower(16, 16, 4, 8);
+    let (vals, params) = gen_values(&model, 4);
+    let engine = create(EngineKind::Threaded, 2);
+    let shapes = model.var_shapes(4).unwrap();
+    let args: HashMap<String, NDArray> = vals
+        .iter()
+        .map(|(k, v)| (k.clone(), NDArray::from_vec_on(&shapes[k], v.clone(), engine.clone())))
+        .collect();
+    let grad_names: Vec<&str> = params.iter().map(|s| s.as_str()).collect();
+    let cfg = BindConfig { memopt: MemOpt::Recompute { segments: 0 }, ..Default::default() };
+    let exec = Executor::bind(&model.symbol, engine.clone(), args, &grad_names, cfg).unwrap();
+    let (_base_total, base_peak) = exec.baseline_bytes().expect("baseline recorded");
+    let planned = exec.planned_peak_bytes();
+    assert!(
+        planned * 10 < base_peak * 7,
+        "uniform tower: planned peak {planned} not below 0.7x of memopt-off peak {base_peak}"
+    );
+}
+
+#[test]
+fn recompute_bind_reports_clones_and_smaller_planned_peak() {
+    let model = vgg11_tower(4, 64);
+    let (vals, params) = gen_values(&model, 4);
+    let engine = create(EngineKind::Threaded, 2);
+    let shapes = model.var_shapes(4).unwrap();
+    let args: HashMap<String, NDArray> = vals
+        .iter()
+        .map(|(k, v)| (k.clone(), NDArray::from_vec_on(&shapes[k], v.clone(), engine.clone())))
+        .collect();
+    let grad_names: Vec<&str> = params.iter().map(|s| s.as_str()).collect();
+    let cfg = BindConfig { memopt: MemOpt::Recompute { segments: 0 }, ..Default::default() };
+    let exec = Executor::bind(&model.symbol, engine.clone(), args, &grad_names, cfg).unwrap();
+    let info = exec.recompute_info().expect("deep conv net must have droppable activations");
+    assert!(info.recompute_nodes > 0, "no clone nodes emitted");
+    assert!(info.dropped_entries > 0, "no activations dropped");
+    assert!(info.dropped_bytes > 0, "dropped entries must carry bytes");
+    assert!(info.segments >= 2, "expected at least 2 segments, got {}", info.segments);
+    let (_base_total, base_peak) = exec.baseline_bytes().expect("baseline recorded on rewrite");
+    assert!(
+        exec.planned_peak_bytes() < base_peak,
+        "planned peak {} must shrink below memopt-off peak {}",
+        exec.planned_peak_bytes(),
+        base_peak
+    );
+    // And the rewritten bind must still run.
+    exec.forward_backward().unwrap();
+    exec.wait();
+}
+
+#[test]
+fn off_bind_reports_no_recompute_info() {
+    let model = mlp(&[32, 16], 16, 4);
+    let (vals, params) = gen_values(&model, 8);
+    let engine = create(EngineKind::Threaded, 2);
+    let shapes = model.var_shapes(8).unwrap();
+    let args: HashMap<String, NDArray> = vals
+        .iter()
+        .map(|(k, v)| (k.clone(), NDArray::from_vec_on(&shapes[k], v.clone(), engine.clone())))
+        .collect();
+    let grad_names: Vec<&str> = params.iter().map(|s| s.as_str()).collect();
+    let exec =
+        Executor::bind(&model.symbol, engine.clone(), args, &grad_names, BindConfig::default())
+            .unwrap();
+    assert!(exec.recompute_info().is_none());
+    assert!(exec.baseline_bytes().is_none());
+}
+
+#[test]
+fn recompute_steps_do_zero_pool_misses_after_warmup() {
+    let _g = lock();
+    // Same "no steady-state heap allocation" bar the memopt-off plan
+    // meets in tests/plan_pool.rs — recompute segments replay through
+    // the same pooled plan blocks.
+    let model = alexnet(4, 64);
+    let (vals, params) = gen_values(&model, 1);
+    let engine = create(EngineKind::Threaded, 4);
+    let shapes = model.var_shapes(1).unwrap();
+    let args: HashMap<String, NDArray> = vals
+        .iter()
+        .map(|(k, v)| (k.clone(), NDArray::from_vec_on(&shapes[k], v.clone(), engine.clone())))
+        .collect();
+    let grad_names: Vec<&str> = params.iter().map(|s| s.as_str()).collect();
+    let cfg = BindConfig { memopt: MemOpt::Recompute { segments: 0 }, ..Default::default() };
+    let exec = Executor::bind(&model.symbol, engine.clone(), args, &grad_names, cfg).unwrap();
+    let step = |exec: &Executor| {
+        exec.forward_backward().unwrap();
+        for p in &params {
+            exec.arg(p).unwrap().sub_scaled_(exec.grad(p).unwrap(), 0.05);
+        }
+    };
+    for _ in 0..2 {
+        step(&exec); // warmup
+    }
+    exec.wait();
+    let before = pool::global().stats();
+    for _ in 0..3 {
+        step(&exec);
+    }
+    exec.wait();
+    let after = pool::global().stats();
+    assert_eq!(
+        after.misses, before.misses,
+        "a steady-state recompute step must not allocate (pool miss counter moved)"
+    );
+}
+
+#[test]
+fn pool_peak_gauge_moves_during_training() {
+    let _g = lock();
+    // The measured-memory story the bench relies on: live/peak gauges
+    // must actually register a training bind's pooled working set.
+    pool::global().clear();
+    pool::global().reset_peak();
+    let model = mlp(&[32, 16], 16, 4);
+    let (vals, params) = gen_values(&model, 8);
+    let engine = create(EngineKind::Threaded, 2);
+    let shapes = model.var_shapes(8).unwrap();
+    let args: HashMap<String, NDArray> = vals
+        .iter()
+        .map(|(k, v)| (k.clone(), NDArray::from_vec_on(&shapes[k], v.clone(), engine.clone())))
+        .collect();
+    let grad_names: Vec<&str> = params.iter().map(|s| s.as_str()).collect();
+    let exec =
+        Executor::bind(&model.symbol, engine.clone(), args, &grad_names, BindConfig::default())
+            .unwrap();
+    exec.forward_backward().unwrap();
+    exec.wait();
+    let stats = pool::global().stats();
+    assert!(
+        stats.peak_bytes > 0,
+        "training through the pool must raise the peak gauge"
+    );
+    assert!(stats.peak_bytes >= stats.live_bytes, "peak below live is impossible");
+}
