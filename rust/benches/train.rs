@@ -18,7 +18,11 @@
 //! one slow replica shard under BSP vs `BoundedDelay(2)`
 //! (`straggler_bsp_ms`, `straggler_bounded_ms`, `straggler_speedup`;
 //! expected > 1: the bounded pipeline hides the straggler's wire tail
-//! under the next rounds' compute).
+//! under the next rounds' compute), and the ISSUE 10 sharded-fleet
+//! curve — images/sec at server-shard counts {1, 2, 4} under one
+//! serialized wire per shard (`shard_wire_ips_{1,2,4}`; expected to
+//! rise with the shard count: the router spreads keys across
+//! independent wires).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -27,6 +31,7 @@ use std::time::Duration;
 use mixnet::engine::{create, default_threads, EngineKind, EngineRef};
 use mixnet::executor::BindConfig;
 use mixnet::io::{synth, ArrayDataIter};
+use mixnet::kvstore::shard::ShardRouter;
 use mixnet::kvstore::{Consistency, KVStore, LocalKVStore};
 use mixnet::models::mlp;
 use mixnet::module::{DataParallelTrainer, SyncMode, TrainerConfig};
@@ -63,6 +68,46 @@ impl KVStore for SlowWire {
             let _nic = self.wire.lock().unwrap();
             std::thread::sleep(self.delay);
         }
+        self.inner.push_part(key, grad, part)
+    }
+    fn pull(&self, key: &str, out: &NDArray, device: usize) -> mixnet::Result<()> {
+        self.inner.pull(key, out, device)
+    }
+    fn flush(&self) {
+        self.inner.flush()
+    }
+    fn num_devices(&self) -> usize {
+        self.inner.num_devices()
+    }
+    fn consistency(&self) -> Consistency {
+        self.inner.consistency()
+    }
+}
+
+/// The sharded-fleet wire model (ISSUE 10): every gradient transfer
+/// routes through its key's home shard "NIC" — one serialized wire per
+/// server shard, each delivery paying `delay` while holding that
+/// shard's wire lock.  With one shard every key queues behind one NIC
+/// (the straggler case); with N shards the router spreads the keys and
+/// the transfers overlap.  The math underneath is the same
+/// LocalKVStore, so throughput differences are pure wire scheduling.
+struct ShardWire {
+    inner: LocalKVStore,
+    router: ShardRouter,
+    wires: Vec<Mutex<()>>,
+    delay: Duration,
+}
+
+impl KVStore for ShardWire {
+    fn init(&self, key: &str, value: &NDArray) -> mixnet::Result<()> {
+        self.inner.init(key, value)
+    }
+    fn push(&self, key: &str, grad: &NDArray, device: usize) -> mixnet::Result<()> {
+        self.inner.push(key, grad, device)
+    }
+    fn push_part(&self, key: &str, grad: &[f32], part: usize) -> mixnet::Result<()> {
+        let _nic = self.wires[self.router.home(key)].lock().unwrap();
+        std::thread::sleep(self.delay);
         self.inner.push_part(key, grad, part)
     }
     fn pull(&self, key: &str, out: &NDArray, device: usize) -> mixnet::Result<()> {
@@ -279,6 +324,60 @@ fn main() {
     rows.push(vec![
         "straggler speedup (bsp/bounded step time)".into(),
         format!("{s_speedup:.2}x"),
+        String::new(),
+    ]);
+
+    // ---- sharded parameter server: images/sec vs shard count ---------
+    // ISSUE 10's serialized-wire curve: 400us per gradient transfer
+    // through the owning shard's NIC.  One shard = every key behind one
+    // wire (the straggler); 2 and 4 shards spread the keys across
+    // independent wires and the per-layer pushes overlap across shards.
+    let mut shard_ips: HashMap<usize, f64> = HashMap::new();
+    for nsrv in [1usize, 2, 4] {
+        let engine = create(EngineKind::Threaded, threads);
+        let store = Arc::new(ShardWire {
+            inner: LocalKVStore::new(
+                engine.clone(),
+                SHARDS,
+                Arc::new(Sgd::new(0.1).rescale(1.0 / SHARDS as f32)),
+                Consistency::Sequential,
+            ),
+            router: ShardRouter::new(nsrv),
+            wires: (0..nsrv).map(|_| Mutex::new(())).collect(),
+            delay: Duration::from_micros(400),
+        });
+        let mut trainer = build_trainer(&engine, 2, true, SyncMode::Bsp, store);
+        let small = if quick { 256 } else { 512 };
+        let mut iter = dataset(small, &engine);
+        let stats = b.run(&format!("shard-wire x{nsrv}"), || {
+            trainer.fit(&mut iter, 1).expect("fit");
+        });
+        let ips = small as f64 / stats.median_s();
+        rows.push(vec![
+            format!("{nsrv} server shard(s), 400us/key per-shard wire"),
+            format!("{:.1} ms", stats.median_ms()),
+            format!("{ips:.0} img/s"),
+        ]);
+        records.push(BenchRecord::from_stats(
+            "train.shard_wire",
+            &format!("{nsrv}shards+wire"),
+            nsrv,
+            &stats,
+            0.0,
+        ));
+        shard_ips.insert(nsrv, ips);
+    }
+    for nsrv in [1usize, 2, 4] {
+        let key: &'static str = match nsrv {
+            1 => "shard_wire_ips_1",
+            2 => "shard_wire_ips_2",
+            _ => "shard_wire_ips_4",
+        };
+        meta.push((key, format!("{:.1}", shard_ips[&nsrv])));
+    }
+    rows.push(vec![
+        "shard-wire speedup (2 shards / 1 shard)".into(),
+        format!("{:.2}x", shard_ips[&2] / shard_ips[&1]),
         String::new(),
     ]);
 

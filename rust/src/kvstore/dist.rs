@@ -1,10 +1,23 @@
-//! The two-level distributed KVStore client (paper §3.3, Figure 5).
+//! The two-level distributed KVStore client (paper §3.3, Figure 5),
+//! sharded across N parameter-server processes (ISSUE 10).
 //!
 //! Each *machine* (process or thread group) owns one [`DistKVStore`]: a
 //! level-1 aggregator for its local devices whose **merged** gradient is
-//! forwarded to the level-2 [`PsServer`](super::server::PsServer) — one
-//! message per round instead of one per device, the bandwidth reduction
-//! the paper credits to the two-level structure.
+//! forwarded to the level-2 [`PsServer`](super::server::PsServer) fleet —
+//! one message per round *per shard* instead of one per device, the
+//! bandwidth reduction the paper credits to the two-level structure.
+//!
+//! Sharding: a static [`ShardRouter`] maps every key to its home shard
+//! (or, for oversized keys, to one contiguous sub-range per shard), and
+//! the store holds one connection pair per shard.  Pushes, pulls, and
+//! barriers fan out to the shards concurrently: each shard has its own
+//! engine connection var, so the engine schedules cross-shard wire ops
+//! independently while keeping per-shard round order.  All of the
+//! fault-tolerance machinery below is **per shard** — each shard
+//! connection has its own seq/barrier counters, retry/reconnect
+//! counters, and (under chaos testing) its own forked fault plan, so a
+//! retry storm on shard 1 cannot stall shard 0 and a killed shard under
+//! the Degrade policy degrades only its own key range.
 //!
 //! Network I/O runs inside engine operations, so pushes and pulls overlap
 //! with compute exactly like any other scheduled op (§3.3: *"the strategy
@@ -16,12 +29,14 @@
 //! (the `HelloAck` reply fast-forwards the local push-seq and barrier
 //! counters above the server's floors, so a restarted worker process
 //! rejoins cleanly instead of colliding with the dedup state its dead
-//! incarnation left behind).
+//! incarnation left behind).  The `HelloAck` also carries the server's
+//! shard identity, so a client dialing a misconfigured address list
+//! fails at connect instead of silently routing keys to the wrong shard.
 //! Retries are idempotent — pushes carry per-machine monotonic sequence
 //! numbers and the server deduplicates, barriers are idempotent by
 //! (id, machine), and pulls/inits are naturally re-executable.  Errors
 //! inside engine-scheduled ops are captured in a slot and surface from
-//! the next store call instead of being silently dropped.
+//! the next public store call instead of being silently dropped.
 
 use std::collections::HashMap;
 use std::net::TcpStream;
@@ -31,6 +46,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::fault::{inject_send, FaultPlan};
+use super::shard::{KeyPlacement, ShardRouter};
 use super::wire::{read_msg, write_msg, Msg};
 use super::{lock, Consistency, KVStore, PartStage};
 use crate::engine::EngineRef;
@@ -109,13 +125,31 @@ impl RetryCfg {
     }
 }
 
-/// Client-side transport counters.
+/// Per-shard client transport counters (see [`ClientStats::shards`]).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct ClientStats {
-    /// RPC attempts repeated after a transport failure.
+pub struct ShardStats {
+    /// Last heartbeat round-trip to this shard succeeded (always `true`
+    /// when no heartbeat thread runs — liveness is then only probed by
+    /// the data path itself).
+    pub alive: bool,
+    /// Successful heartbeat round-trips to this shard.
+    pub heartbeats: u64,
+    /// RPC attempts repeated after a transport failure, this shard only.
     pub retries: u64,
-    /// Connections re-established after the first dial.
+    /// Connections re-established after the first dial, this shard only.
     pub reconnects: u64,
+}
+
+/// Client-side transport counters: fleet-wide sums plus the per-shard
+/// breakdown (so a retry storm is attributable to the shard causing it).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ClientStats {
+    /// RPC attempts repeated after a transport failure (all shards).
+    pub retries: u64,
+    /// Connections re-established after the first dial (all shards).
+    pub reconnects: u64,
+    /// Per-shard liveness/retry/reconnect counters, in shard order.
+    pub shards: Vec<ShardStats>,
 }
 
 /// Server-side counters fetched over the wire (see `Msg::StatsReply`).
@@ -133,11 +167,23 @@ pub struct ServerStats {
     pub applies: u64,
 }
 
+impl ServerStats {
+    fn add(&mut self, o: &ServerStats) {
+        self.msgs += o.msgs;
+        self.bytes += o.bytes;
+        self.dedup_hits += o.dedup_hits;
+        self.lease_expiries += o.lease_expiries;
+        self.applies += o.applies;
+    }
+}
+
 /// Last fetched weight per key (version-stamped): within one round every
 /// device pulls the same watermark, so only the first pull pays an RPC
 /// — the rest copy from this cache (the distributed analogue of
-/// `LocalKVStore`'s version-stamped pulls).  Sequential and
-/// bounded-delay only; eventual pulls always refetch for freshness.
+/// `LocalKVStore`'s version-stamped pulls).  For split keys the cache
+/// holds the *assembled* full value at the minimum shard version.
+/// Sequential and bounded-delay only; eventual pulls always refetch for
+/// freshness.
 struct PullCache {
     /// Server version of the cached bytes (`u64::MAX` = empty).
     version: u64,
@@ -153,6 +199,9 @@ struct KeyState {
     /// Number of completed level-2 push rounds (the pull watermark).
     rounds: u64,
     shape: Vec<usize>,
+    /// Static placement from the router: home shard, or per-shard
+    /// sub-ranges for oversized keys.
+    placement: KeyPlacement,
     cache: Arc<Mutex<PullCache>>,
 }
 
@@ -178,6 +227,33 @@ fn reply_matches(req: &Msg, reply: &Msg) -> bool {
     }
 }
 
+/// Counters and resume floors shared by the connection pair of one
+/// shard.  Deliberately per-shard (not per-store): each shard server
+/// keeps its own dedup floors and barrier generations, so the local
+/// counters that mirror them must be independent too — that is what
+/// isolates a retry storm or a restart on one shard from the others.
+#[derive(Clone)]
+struct ConnShared {
+    /// Push sequence counter for this shard, fast-forwarded from its
+    /// `HelloAck` floor on every dial.
+    seq: Arc<AtomicU64>,
+    /// Barrier-id counter for this shard, fast-forwarded likewise.
+    barrier: Arc<AtomicU64>,
+    retries: Arc<AtomicU64>,
+    reconnects: Arc<AtomicU64>,
+}
+
+impl ConnShared {
+    fn new() -> ConnShared {
+        ConnShared {
+            seq: Arc::new(AtomicU64::new(0)),
+            barrier: Arc::new(AtomicU64::new(0)),
+            retries: Arc::new(AtomicU64::new(0)),
+            reconnects: Arc::new(AtomicU64::new(0)),
+        }
+    }
+}
+
 /// One client connection with reconnect + retry.
 struct Conn {
     addr: std::net::SocketAddr,
@@ -186,18 +262,16 @@ struct Conn {
     /// Machine id announced with `Hello` on every (re)dial — registers
     /// the lease and folds a previously-expired machine back in.
     hello: Option<u32>,
-    /// The store's push-seq counter, fast-forwarded from the `HelloAck`
-    /// floor on every dial so a restarted process never reuses sequence
-    /// numbers the server already dedups on.
-    seq: Arc<AtomicU64>,
-    /// The store's barrier-id counter, fast-forwarded likewise so a
-    /// restarted process does not re-issue already-released barrier ids
-    /// (which would ack without synchronizing).
-    barrier: Arc<AtomicU64>,
+    /// The `(slot, total)` shard identity this connection expects the
+    /// server to advertise in its `HelloAck`.  Enforced only when the
+    /// server reports running sharded (`shards > 1`): a harness that
+    /// wires shard addresses in the wrong order then fails at connect
+    /// instead of silently scattering the key space.
+    expect_shard: Option<(u32, u32)>,
+    /// Per-shard counters shared with the sibling connection.
+    shared: ConnShared,
     stream: Mutex<Option<TcpStream>>,
     jitter: Mutex<Rng>,
-    retries: Arc<AtomicU64>,
-    reconnects: Arc<AtomicU64>,
     ever_connected: AtomicBool,
 }
 
@@ -207,23 +281,23 @@ impl Conn {
         cfg: RetryCfg,
         plan: Option<Arc<FaultPlan>>,
         hello: Option<u32>,
-        seq: Arc<AtomicU64>,
-        barrier: Arc<AtomicU64>,
-        retries: Arc<AtomicU64>,
-        reconnects: Arc<AtomicU64>,
+        expect_shard: Option<(u32, u32)>,
+        shared: ConnShared,
     ) -> Conn {
-        let seed = 0xbac0_0ff ^ u64::from(hello.unwrap_or(0));
+        // Decorrelate backoff jitter across machines *and* shards, so a
+        // fleet-wide stall does not retry in lockstep.
+        let seed = 0xbac0_0ff
+            ^ u64::from(hello.unwrap_or(0))
+            ^ (u64::from(expect_shard.map_or(0, |(i, _)| i)) << 32);
         Conn {
             addr,
             cfg,
             plan,
             hello,
-            seq,
-            barrier,
+            expect_shard,
+            shared,
             stream: Mutex::new(None),
             jitter: Mutex::new(Rng::seed_from_u64(seed)),
-            retries,
-            reconnects,
             ever_connected: AtomicBool::new(false),
         }
     }
@@ -234,7 +308,7 @@ impl Conn {
         let mut s = TcpStream::connect_timeout(&self.addr, self.cfg.connect_timeout)?;
         s.set_nodelay(true).ok();
         if self.ever_connected.swap(true, Ordering::Relaxed) {
-            self.reconnects.fetch_add(1, Ordering::Relaxed);
+            self.shared.reconnects.fetch_add(1, Ordering::Relaxed);
         }
         if let Some(machine) = self.hello {
             // Registration is sent clean (never through the fault plan):
@@ -244,13 +318,23 @@ impl Conn {
             s.set_read_timeout(Some(self.cfg.op_timeout)).ok();
             write_msg(&mut s, &Msg::Hello { machine })?;
             match read_msg(&mut s)? {
-                Msg::HelloAck { seq, barrier } => {
+                Msg::HelloAck { seq, barrier, shard, shards } => {
+                    if shards > 1 {
+                        let want = self.expect_shard.unwrap_or((0, 1));
+                        if (shard, shards) != want {
+                            return Err(Error::kv(format!(
+                                "shard mismatch at {}: dialed as slot {}/{} but server \
+                                 reports {shard}/{shards} — shard address list misordered?",
+                                self.addr, want.0, want.1
+                            )));
+                        }
+                    }
                     // Resume counters above the server's floors.  On a
                     // live redial these are no-ops (our counters are
                     // already past them); on a process restart they jump
                     // the fresh counters past the dead incarnation's.
-                    self.seq.fetch_max(seq, Ordering::Relaxed);
-                    self.barrier.fetch_max(barrier, Ordering::Relaxed);
+                    self.shared.seq.fetch_max(seq, Ordering::Relaxed);
+                    self.shared.barrier.fetch_max(barrier, Ordering::Relaxed);
                 }
                 other => return Err(Error::kv(format!("hello: unexpected reply {other:?}"))),
             }
@@ -341,7 +425,7 @@ impl Conn {
                             "rpc failed after {attempt} attempt(s): {e}"
                         )));
                     }
-                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    self.shared.retries.fetch_add(1, Ordering::Relaxed);
                     let base = self
                         .cfg
                         .backoff_base
@@ -387,7 +471,45 @@ fn rpc_span_name(msg: &Msg) -> &'static str {
     }
 }
 
-/// Client-side two-level KVStore.
+/// Heartbeat-observed liveness of one shard, updated by the multiplexed
+/// heartbeat loop and read by [`DistKVStore::client_stats`].
+struct ShardHealth {
+    alive: AtomicBool,
+    beats: AtomicU64,
+}
+
+impl ShardHealth {
+    fn new() -> ShardHealth {
+        // The store only constructs after every shard dialed
+        // successfully, so "alive until proven otherwise" is accurate.
+        ShardHealth { alive: AtomicBool::new(true), beats: AtomicU64::new(0) }
+    }
+}
+
+/// Everything the client holds for one shard: the data/barrier
+/// connection pair, the shard's own counters, its heartbeat-observed
+/// health, and the engine var that orders this shard's wire ops.
+struct ShardConn {
+    /// Connection used by engine ops (push/pull).
+    conn: Arc<Conn>,
+    /// Separate connection for barriers so a parked barrier cannot block
+    /// in-flight pull replies.
+    barrier_conn: Arc<Conn>,
+    /// Per-shard seq/barrier/retry/reconnect counters (shared by the
+    /// connection pair, fast-forwarded from this shard's `HelloAck`).
+    shared: ConnShared,
+    health: Arc<ShardHealth>,
+    /// Engine tag owning this shard's wire connection: every push/pull
+    /// op touching the shard *writes* it, so the shard's network ops
+    /// execute in issue order — while ops bound for different shards
+    /// (different vars) schedule freely in parallel.  Without this a
+    /// later pull (which the server may park until the round completes)
+    /// could run before the push that completes the round — holding the
+    /// connection mutex and deadlocking the machine against itself.
+    conn_var: crate::engine::VarHandle,
+}
+
+/// Client-side two-level KVStore over a sharded server fleet.
 pub struct DistKVStore {
     engine: EngineRef,
     machine: u32,
@@ -395,39 +517,29 @@ pub struct DistKVStore {
     /// Factor applied to the level-1 merged gradient before it is
     /// shipped (see [`DistKVStore::with_grad_rescale`]).
     grad_rescale: f32,
+    /// Simulated per-message wire transfer time, paid inside each push
+    /// op while it holds its shard's connection var
+    /// (`PALLAS_KV_WIRE_DELAY_US`, default 0).  Transfers to the SAME
+    /// shard serialize behind it, transfers to different shards overlap
+    /// — the serialized-wire model `scripts/dist_train.sh` uses to
+    /// measure the shard-scaling curve deterministically.
+    wire_delay: Duration,
     consistency: Consistency,
+    /// Static key -> shard map, identical on every worker.
+    router: ShardRouter,
     keys: Mutex<HashMap<String, KeyState>>,
-    /// Connection used by engine ops (push/pull).
-    conn: Arc<Conn>,
-    /// Separate connection for barriers so a parked barrier cannot block
-    /// in-flight pull replies.
-    barrier_conn: Arc<Conn>,
-    /// Barrier-id counter (shared with the connections so `HelloAck` can
-    /// fast-forward it past already-released generations on redial).
-    barrier_round: Arc<AtomicU64>,
-    /// Per-machine monotonic sequence number stamped on every level-2
-    /// push (the server's dedup key for retried frames); shared with the
-    /// connections so `HelloAck` can fast-forward it above the server's
-    /// floor when this process is a restart of a dead worker.
-    seq: Arc<AtomicU64>,
+    /// One connection pair + counters per shard, in shard order.
+    shards: Vec<ShardConn>,
     /// First error raised inside an engine-scheduled push/pull op; taken
     /// and returned by the next public store call.
     async_err: Arc<Mutex<Option<Error>>>,
-    retries: Arc<AtomicU64>,
-    reconnects: Arc<AtomicU64>,
     hb_stop: Arc<AtomicBool>,
     hb_thread: Option<JoinHandle<()>>,
-    /// Engine tag owning the wire connection: every push/pull engine op
-    /// *writes* it, so network ops execute in issue order.  Without this
-    /// a later pull (which the server may park until the round completes)
-    /// could run before the push that completes the round — holding the
-    /// connection mutex and deadlocking the machine against itself.
-    conn_var: crate::engine::VarHandle,
 }
 
 impl DistKVStore {
-    /// Connect to the level-2 server with retry/fault behavior from the
-    /// environment (see [`RetryCfg::from_env`] and
+    /// Connect to a single level-2 server with retry/fault behavior from
+    /// the environment (see [`RetryCfg::from_env`] and
     /// [`FaultPlan::from_env`]).
     pub fn connect(
         addr: std::net::SocketAddr,
@@ -436,19 +548,40 @@ impl DistKVStore {
         consistency: Consistency,
         engine: EngineRef,
     ) -> Result<DistKVStore> {
-        DistKVStore::connect_with(
-            addr,
+        DistKVStore::connect_multi(&[addr], machine, num_devices, consistency, engine)
+    }
+
+    /// Connect to a sharded server fleet: `addrs[i]` must be shard `i`
+    /// of `addrs.len()` (the ordered list *is* the router contract the
+    /// harness and every worker share).  Retry/fault/split knobs come
+    /// from the environment; under chaos testing each shard gets its own
+    /// deterministic fork of the fault plan (salted by shard index, so
+    /// one shard's chaos schedule is independent of its neighbours' —
+    /// and a 1-shard fleet replays the unsharded schedule exactly).
+    pub fn connect_multi(
+        addrs: &[std::net::SocketAddr],
+        machine: u32,
+        num_devices: usize,
+        consistency: Consistency,
+        engine: EngineRef,
+    ) -> Result<DistKVStore> {
+        let plans = (0..addrs.len())
+            .map(|i| FaultPlan::from_env().map(|p| Arc::new(p.fork(i as u64))))
+            .collect();
+        DistKVStore::connect_sharded(
+            addrs,
             machine,
             num_devices,
             consistency,
             engine,
             RetryCfg::from_env(),
-            FaultPlan::from_env(),
+            plans,
+            ShardRouter::from_env(addrs.len()),
         )
     }
 
     /// [`DistKVStore::connect`] with explicit retry config and fault
-    /// plan (the chaos-test entry point).
+    /// plan (the single-shard chaos-test entry point).
     pub fn connect_with(
         addr: std::net::SocketAddr,
         machine: u32,
@@ -458,61 +591,111 @@ impl DistKVStore {
         cfg: RetryCfg,
         plan: Option<Arc<FaultPlan>>,
     ) -> Result<DistKVStore> {
-        let retries = Arc::new(AtomicU64::new(0));
-        let reconnects = Arc::new(AtomicU64::new(0));
-        let seq = Arc::new(AtomicU64::new(0));
-        let barrier_round = Arc::new(AtomicU64::new(0));
-        let conn = Arc::new(Conn::new(
-            addr,
+        DistKVStore::connect_sharded(
+            &[addr],
+            machine,
+            num_devices,
+            consistency,
+            engine,
             cfg,
-            plan.clone(),
-            Some(machine),
-            Arc::clone(&seq),
-            Arc::clone(&barrier_round),
-            Arc::clone(&retries),
-            Arc::clone(&reconnects),
-        ));
-        // Barriers park by design; their connection is kept clean of
-        // fault injection on dial (hello) but shares the plan for
-        // request frames.
-        let barrier_conn = Arc::new(Conn::new(
-            addr,
-            cfg,
-            plan,
-            Some(machine),
-            Arc::clone(&seq),
-            Arc::clone(&barrier_round),
-            Arc::clone(&retries),
-            Arc::clone(&reconnects),
-        ));
-        conn.ensure_connected()?;
-        barrier_conn.ensure_connected()?;
+            vec![plan],
+            ShardRouter::new(1),
+        )
+    }
+
+    /// Fully explicit constructor: one address and one optional fault
+    /// plan per shard, plus the router (which must agree on the shard
+    /// count).  Every connection is established eagerly so a dead or
+    /// misordered shard fails here, not mid-epoch.
+    #[allow(clippy::too_many_arguments)] // the per-shard chaos-test entry point
+    pub fn connect_sharded(
+        addrs: &[std::net::SocketAddr],
+        machine: u32,
+        num_devices: usize,
+        consistency: Consistency,
+        engine: EngineRef,
+        cfg: RetryCfg,
+        plans: Vec<Option<Arc<FaultPlan>>>,
+        router: ShardRouter,
+    ) -> Result<DistKVStore> {
+        if addrs.is_empty() {
+            return Err(Error::kv("connect_sharded: empty shard address list"));
+        }
+        if plans.len() != addrs.len() {
+            return Err(Error::kv(format!(
+                "connect_sharded: {} fault plan(s) for {} shard(s)",
+                plans.len(),
+                addrs.len()
+            )));
+        }
+        if router.shards() != addrs.len() {
+            return Err(Error::kv(format!(
+                "connect_sharded: router spans {} shard(s), address list has {}",
+                router.shards(),
+                addrs.len()
+            )));
+        }
+        let total = addrs.len() as u32;
+        let mut shards = Vec::with_capacity(addrs.len());
+        for (i, (&addr, plan)) in addrs.iter().zip(plans.into_iter()).enumerate() {
+            let shared = ConnShared::new();
+            let expect = Some((i as u32, total));
+            let conn = Arc::new(Conn::new(
+                addr,
+                cfg,
+                plan.clone(),
+                Some(machine),
+                expect,
+                shared.clone(),
+            ));
+            // Barriers park by design; their connection is kept clean of
+            // fault injection on dial (hello) but shares the plan for
+            // request frames.
+            let barrier_conn =
+                Arc::new(Conn::new(addr, cfg, plan, Some(machine), expect, shared.clone()));
+            conn.ensure_connected()?;
+            barrier_conn.ensure_connected()?;
+            shards.push(ShardConn {
+                conn,
+                barrier_conn,
+                shared,
+                health: Arc::new(ShardHealth::new()),
+                conn_var: engine.new_var(),
+            });
+        }
         let hb_stop = Arc::new(AtomicBool::new(false));
-        let hb_thread = cfg.heartbeat.map(|interval| {
-            let stop = Arc::clone(&hb_stop);
-            std::thread::Builder::new()
-                .name("mixnet-kv-heartbeat".into())
-                .spawn(move || heartbeat_loop(addr, machine, interval, stop))
-                .ok()
-        });
-        let conn_var = engine.new_var();
+        let hb_thread = cfg
+            .heartbeat
+            .map(|interval| {
+                let stop = Arc::clone(&hb_stop);
+                let targets: Vec<_> = addrs
+                    .iter()
+                    .copied()
+                    .zip(shards.iter().map(|s| Arc::clone(&s.health)))
+                    .collect();
+                std::thread::Builder::new()
+                    .name("mixnet-kv-heartbeat".into())
+                    .spawn(move || heartbeat_loop(targets, machine, interval, stop))
+                    .ok()
+            })
+            .flatten();
+        let wire_delay = std::env::var("PALLAS_KV_WIRE_DELAY_US")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .map_or(Duration::ZERO, Duration::from_micros);
         Ok(DistKVStore {
             engine,
             machine,
             num_devices: num_devices.max(1),
             grad_rescale: 1.0,
+            wire_delay,
             consistency,
+            router,
             keys: Mutex::new(HashMap::new()),
-            conn,
-            barrier_conn,
-            barrier_round,
-            seq,
+            shards,
             async_err: Arc::new(Mutex::new(None)),
-            retries,
-            reconnects,
             hb_stop,
-            hb_thread: hb_thread.flatten(),
-            conn_var,
+            hb_thread,
         })
     }
 
@@ -529,24 +712,60 @@ impl DistKVStore {
         self
     }
 
-    /// The server's receive/dedup/lease counters — harness observability
-    /// (uses the barrier connection: a plain synchronous RPC that must
-    /// not interleave with engine-scheduled push/pull frames on the main
-    /// connection).
-    pub fn server_stats(&self) -> Result<ServerStats> {
-        match self.barrier_conn.rpc(&Msg::Stats)? {
-            Msg::StatsReply { msgs, bytes, dedup_hits, lease_expiries, applies } => {
-                Ok(ServerStats { msgs, bytes, dedup_hits, lease_expiries, applies })
-            }
-            other => Err(Error::kv(format!("stats: unexpected reply {other:?}"))),
-        }
+    /// Number of server shards this store fans out to.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
     }
 
-    /// Client-side retry/reconnect counters.
+    /// The static key -> shard map in effect.
+    pub fn router(&self) -> &ShardRouter {
+        &self.router
+    }
+
+    /// Per-shard server receive/dedup/lease counters, in shard order —
+    /// one `Msg::Stats` RPC per shard (uses the barrier connections:
+    /// plain synchronous RPCs that must not interleave with
+    /// engine-scheduled push/pull frames on the data connections).
+    pub fn server_stats_sharded(&self) -> Result<Vec<ServerStats>> {
+        self.shards
+            .iter()
+            .map(|sh| match sh.barrier_conn.rpc(&Msg::Stats)? {
+                Msg::StatsReply { msgs, bytes, dedup_hits, lease_expiries, applies } => {
+                    Ok(ServerStats { msgs, bytes, dedup_hits, lease_expiries, applies })
+                }
+                other => Err(Error::kv(format!("stats: unexpected reply {other:?}"))),
+            })
+            .collect()
+    }
+
+    /// Fleet-wide server counters: the sum over every shard's
+    /// `StatsReply` — so harness observability and `--stats-every`
+    /// report the whole fleet, not one shard posing as it.
+    pub fn server_stats(&self) -> Result<ServerStats> {
+        let mut sum = ServerStats::default();
+        for s in self.server_stats_sharded()? {
+            sum.add(&s);
+        }
+        Ok(sum)
+    }
+
+    /// Client-side transport counters: fleet sums plus the per-shard
+    /// breakdown (liveness, heartbeats, retries, reconnects).
     pub fn client_stats(&self) -> ClientStats {
+        let shards: Vec<ShardStats> = self
+            .shards
+            .iter()
+            .map(|sh| ShardStats {
+                alive: sh.health.alive.load(Ordering::Relaxed),
+                heartbeats: sh.health.beats.load(Ordering::Relaxed),
+                retries: sh.shared.retries.load(Ordering::Relaxed),
+                reconnects: sh.shared.reconnects.load(Ordering::Relaxed),
+            })
+            .collect();
         ClientStats {
-            retries: self.retries.load(Ordering::Relaxed),
-            reconnects: self.reconnects.load(Ordering::Relaxed),
+            retries: shards.iter().map(|s| s.retries).sum(),
+            reconnects: shards.iter().map(|s| s.reconnects).sum(),
+            shards,
         }
     }
 
@@ -559,16 +778,41 @@ impl DistKVStore {
         }
     }
 
-    /// Epoch barrier across machines (monotonic id; retransmissions
-    /// after a lost ack are idempotent server-side, and a restarted
-    /// process resumes ids above the server's released floor).
+    /// Epoch barrier across machines, fanned out to every shard
+    /// concurrently (each shard's id counter is its own — monotonic,
+    /// idempotent server-side on retransmission, and fast-forwarded past
+    /// that shard's released floor on restart).  Returns once *all*
+    /// shards released their barrier; the first failure wins.
     pub fn barrier(&self) -> Result<()> {
         self.take_async_err()?;
-        let id = self.barrier_round.fetch_add(1, Ordering::Relaxed) + 1;
-        match self.barrier_conn.rpc_park(&Msg::Barrier { id, machine: self.machine })? {
-            Msg::Ack => Ok(()),
-            other => Err(Error::kv(format!("barrier: unexpected reply {other:?}"))),
-        }
+        let machine = self.machine;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .shards
+                .iter()
+                .map(|sh| {
+                    scope.spawn(move || -> Result<()> {
+                        let id = sh.shared.barrier.fetch_add(1, Ordering::Relaxed) + 1;
+                        match sh.barrier_conn.rpc_park(&Msg::Barrier { id, machine })? {
+                            Msg::Ack => Ok(()),
+                            other => {
+                                Err(Error::kv(format!("barrier: unexpected reply {other:?}")))
+                            }
+                        }
+                    })
+                })
+                .collect();
+            let mut first = Ok(());
+            for h in handles {
+                let r = h
+                    .join()
+                    .unwrap_or_else(|_| Err(Error::kv("barrier fan-out thread panicked")));
+                if first.is_ok() {
+                    first = r;
+                }
+            }
+            first
+        })
     }
 }
 
@@ -581,16 +825,19 @@ impl Drop for DistKVStore {
     }
 }
 
-/// Lease keep-alive loop: its own connection (never fault-injected, so
+/// Multiplexed lease keep-alive loop: ONE thread round-robins every
+/// shard on its own connection per shard (never fault-injected, so
 /// injected chaos on the data path cannot spuriously expire a live
-/// machine), reconnecting on failure at heartbeat cadence.
+/// machine), reconnecting per shard on failure at heartbeat cadence.
+/// Updates each shard's [`ShardHealth`] so `client_stats()` reports
+/// per-shard liveness.
 fn heartbeat_loop(
-    addr: std::net::SocketAddr,
+    targets: Vec<(std::net::SocketAddr, Arc<ShardHealth>)>,
     machine: u32,
     interval: Duration,
     stop: Arc<AtomicBool>,
 ) {
-    let mut stream: Option<TcpStream> = None;
+    let mut streams: Vec<Option<TcpStream>> = targets.iter().map(|_| None).collect();
     let mut elapsed = Duration::ZERO;
     let tick = Duration::from_millis(10);
     while !stop.load(Ordering::SeqCst) {
@@ -600,22 +847,28 @@ fn heartbeat_loop(
             continue;
         }
         elapsed = Duration::ZERO;
-        if stream.is_none() {
-            if let Ok(s) = TcpStream::connect_timeout(&addr, interval) {
-                s.set_nodelay(true).ok();
-                s.set_read_timeout(Some(interval)).ok();
-                s.set_write_timeout(Some(interval)).ok();
-                stream = Some(s);
-            } else {
-                continue;
+        for ((addr, health), slot) in targets.iter().zip(streams.iter_mut()) {
+            if slot.is_none() {
+                if let Ok(s) = TcpStream::connect_timeout(addr, interval) {
+                    s.set_nodelay(true).ok();
+                    s.set_read_timeout(Some(interval)).ok();
+                    s.set_write_timeout(Some(interval)).ok();
+                    *slot = Some(s);
+                } else {
+                    health.alive.store(false, Ordering::Relaxed);
+                    continue;
+                }
             }
-        }
-        if let Some(s) = stream.as_mut() {
-            let ok = write_msg(s, &Msg::Heartbeat { machine })
-                .and_then(|_| read_msg(s))
-                .is_ok();
-            if !ok {
-                stream = None;
+            if let Some(s) = slot.as_mut() {
+                let ok = write_msg(s, &Msg::Heartbeat { machine })
+                    .and_then(|_| read_msg(s))
+                    .is_ok();
+                health.alive.store(ok, Ordering::Relaxed);
+                if ok {
+                    health.beats.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    *slot = None;
+                }
             }
         }
     }
@@ -624,6 +877,7 @@ fn heartbeat_loop(
 impl KVStore for DistKVStore {
     fn init(&self, key: &str, value: &NDArray) -> Result<()> {
         self.take_async_err()?;
+        let placement = self.router.place(key, value.size());
         {
             let mut keys = lock(&self.keys);
             if keys.contains_key(key) {
@@ -637,6 +891,7 @@ impl KVStore for DistKVStore {
                     stage: PartStage::new(self.num_devices),
                     rounds: 0,
                     shape: value.shape().to_vec(),
+                    placement: placement.clone(),
                     cache: Arc::new(Mutex::new(PullCache {
                         version: u64::MAX,
                         data: Vec::new(),
@@ -644,10 +899,38 @@ impl KVStore for DistKVStore {
                 },
             );
         }
-        // Synchronous init (first writer wins on the server).
-        match self.conn.rpc(&Msg::Init { key: key.to_string(), value: value.to_vec() })? {
-            Msg::Ack => Ok(()),
-            other => Err(Error::kv(format!("init: unexpected reply {other:?}"))),
+        // Synchronous init (first writer wins on each server).  A split
+        // key initializes each shard with exactly its sub-range.
+        let data = value.to_vec();
+        match &placement {
+            KeyPlacement::Whole(home) => {
+                match self.shards[*home].conn.rpc(&Msg::Init { key: key.to_string(), value: data })?
+                {
+                    Msg::Ack => Ok(()),
+                    other => Err(Error::kv(format!("init: unexpected reply {other:?}"))),
+                }
+            }
+            KeyPlacement::Split(ranges) => {
+                for rg in ranges {
+                    if rg.len == 0 {
+                        continue; // same skip as placement_ranges
+                    }
+                    let slice = data[rg.offset..rg.offset + rg.len].to_vec();
+                    match self.shards[rg.shard]
+                        .conn
+                        .rpc(&Msg::Init { key: key.to_string(), value: slice })?
+                    {
+                        Msg::Ack => {}
+                        other => {
+                            return Err(Error::kv(format!(
+                                "init '{key}' shard {}: unexpected reply {other:?}",
+                                rg.shard
+                            )))
+                        }
+                    }
+                }
+                Ok(())
+            }
         }
     }
 
@@ -666,33 +949,44 @@ impl KVStore for DistKVStore {
         if st.pushed == self.num_devices {
             st.pushed = 0;
             st.rounds += 1;
-            // level-2: ship ONE aggregated message, inside an engine op
-            // reading the accumulation buffer.
-            let conn = Arc::clone(&self.conn);
-            let err_slot = Arc::clone(&self.async_err);
-            let key = key.to_string();
-            let machine = self.machine;
-            let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+            // level-2: ship ONE aggregated message per involved shard,
+            // inside engine ops reading the accumulation buffer.  Seqs
+            // are taken here, on the caller thread, so per-shard wire
+            // order equals program order whatever the engine does.
             let rescale = self.grad_rescale;
-            let accum = st.accum.clone();
-            let storage = accum.storage();
-            self.engine.push(
-                "kv.dist_push",
-                vec![accum.var()],
-                vec![self.conn_var],
-                Box::new(move || {
-                    let mut value = unsafe { storage.slice() }.to_vec();
-                    if rescale != 1.0 {
-                        for v in value.iter_mut() {
-                            *v *= rescale;
+            let machine = self.machine;
+            let wire = self.wire_delay;
+            let ranges = placement_ranges(&st.placement, st.shape.iter().product());
+            for (shard, off, len) in ranges {
+                let sh = &self.shards[shard];
+                let conn = Arc::clone(&sh.conn);
+                let err_slot = Arc::clone(&self.async_err);
+                let key = key.to_string();
+                let seq = sh.shared.seq.fetch_add(1, Ordering::Relaxed) + 1;
+                let accum = st.accum.clone();
+                let storage = accum.storage();
+                self.engine.push(
+                    "kv.dist_push",
+                    vec![accum.var()],
+                    vec![sh.conn_var],
+                    Box::new(move || {
+                        let mut value =
+                            unsafe { storage.slice() }[off..off + len].to_vec();
+                        if rescale != 1.0 {
+                            for v in value.iter_mut() {
+                                *v *= rescale;
+                            }
                         }
-                    }
-                    if let Err(e) = conn.rpc(&Msg::Push { key, value, machine, seq }) {
-                        let mut g = lock(&err_slot);
-                        g.get_or_insert(e);
-                    }
-                }),
-            );
+                        if wire > Duration::ZERO {
+                            std::thread::sleep(wire);
+                        }
+                        if let Err(e) = conn.rpc(&Msg::Push { key, value, machine, seq }) {
+                            let mut g = lock(&err_slot);
+                            g.get_or_insert(e);
+                        }
+                    }),
+                );
+            }
         }
         Ok(())
     }
@@ -710,49 +1004,70 @@ impl KVStore for DistKVStore {
             Some(parts) => parts,
         };
         st.rounds += 1;
-        // Round complete: ship ONE aggregated message, reduced in part
-        // order inside the wire op (writes only the connection var, so
-        // the transfer overlaps whatever backward is still running —
-        // there is no dependency on any gradient var).
-        let conn = Arc::clone(&self.conn);
-        let err_slot = Arc::clone(&self.async_err);
-        let key = key.to_string();
-        let machine = self.machine;
-        let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        // Round complete: ship ONE aggregated message per involved
+        // shard, each reducing its own sub-range of the staged parts in
+        // part-index order — bitwise identical to reducing the whole
+        // array and slicing it, because the reduce is elementwise.  The
+        // ops write only their shard's connection var, so the transfers
+        // overlap whatever backward is still running AND each other.
         let rescale = self.grad_rescale;
-        self.engine.push(
-            "kv.dist_push_parts",
-            vec![],
-            vec![self.conn_var],
-            Box::new(move || {
-                let mut value: Vec<f32> = Vec::new();
-                for (i, part) in parts.into_iter().enumerate() {
-                    if i == 0 {
-                        value = part.to_vec();
-                    } else {
-                        for (d, s) in value.iter_mut().zip(part.iter()) {
-                            *d += *s;
+        let machine = self.machine;
+        let wire = self.wire_delay;
+        let ranges = placement_ranges(&st.placement, n);
+        let parts = Arc::new(parts);
+        for (shard, off, len) in ranges {
+            let sh = &self.shards[shard];
+            let conn = Arc::clone(&sh.conn);
+            let err_slot = Arc::clone(&self.async_err);
+            let key = key.to_string();
+            let seq = sh.shared.seq.fetch_add(1, Ordering::Relaxed) + 1;
+            let parts = Arc::clone(&parts);
+            self.engine.push(
+                "kv.dist_push_parts",
+                vec![],
+                vec![sh.conn_var],
+                Box::new(move || {
+                    let mut value = vec![0.0f32; len];
+                    for (i, part) in parts.iter().enumerate() {
+                        let src = &part[off..off + len];
+                        if i == 0 {
+                            value.copy_from_slice(src);
+                        } else {
+                            for (d, s) in value.iter_mut().zip(src.iter()) {
+                                *d += *s;
+                            }
                         }
                     }
-                    crate::ndarray::pool::global().release(part);
-                }
-                if rescale != 1.0 {
-                    for v in value.iter_mut() {
-                        *v *= rescale;
+                    if rescale != 1.0 {
+                        for v in value.iter_mut() {
+                            *v *= rescale;
+                        }
                     }
-                }
-                if let Err(e) = conn.rpc(&Msg::Push { key, value, machine, seq }) {
-                    let mut g = lock(&err_slot);
-                    g.get_or_insert(e);
-                }
-            }),
-        );
+                    if wire > Duration::ZERO {
+                        std::thread::sleep(wire);
+                    }
+                    if let Err(e) = conn.rpc(&Msg::Push { key, value, machine, seq }) {
+                        let mut g = lock(&err_slot);
+                        g.get_or_insert(e);
+                    }
+                    // The last shard op holding the staged buffers
+                    // returns them to the pool.  If two finishers race
+                    // the unwrap both fail and the buffers drop to the
+                    // allocator instead — a benign missed recycle.
+                    if let Ok(parts) = Arc::try_unwrap(parts) {
+                        for p in parts {
+                            crate::ndarray::pool::global().release(p);
+                        }
+                    }
+                }),
+            );
+        }
         Ok(())
     }
 
     fn pull(&self, key: &str, out: &NDArray, _device: usize) -> Result<()> {
         self.take_async_err()?;
-        let (after_version, shape, cache) = {
+        let (after_version, shape, placement, cache) = {
             let keys = lock(&self.keys);
             let st = keys.get(key).ok_or_else(|| Error::kv(format!("unknown key '{key}'")))?;
             let v = match self.consistency {
@@ -763,7 +1078,7 @@ impl KVStore for DistKVStore {
                 Consistency::BoundedDelay(k) => st.rounds.saturating_sub(k),
                 Consistency::Eventual => 0,
             };
-            (v, st.shape.clone(), Arc::clone(&st.cache))
+            (v, st.shape.clone(), st.placement.clone(), Arc::clone(&st.cache))
         };
         if out.shape() != shape.as_slice() {
             return Err(Error::kv(format!(
@@ -776,17 +1091,31 @@ impl KVStore for DistKVStore {
         // the same watermark: serve repeats (other devices' pulls of
         // this round) from the version-stamped cache when the cached
         // server version already satisfies the watermark, so only one
-        // RPC crosses the wire per (key, round).  Eventual pulls always
-        // refetch — their whole point is best-effort freshness.
+        // RPC per shard crosses the wire per (key, round).  Eventual
+        // pulls always refetch — their whole point is best-effort
+        // freshness.
         let use_cache = self.consistency != Consistency::Eventual;
-        let conn = Arc::clone(&self.conn);
         let err_slot = Arc::clone(&self.async_err);
         let key = key.to_string();
         let storage = out.storage();
+        let n: usize = shape.iter().product();
+        // (offset, len, conn) for every sub-range; whole keys are one
+        // full-width range on the home shard.  The op writes the
+        // destination var plus every involved shard's connection var, so
+        // it is ordered after the pushes that complete the round on each
+        // of those shards.
+        let mut writes = vec![out.var()];
+        let targets: Vec<(usize, usize, Arc<Conn>)> = placement_ranges(&placement, n)
+            .into_iter()
+            .map(|(shard, off, len)| {
+                writes.push(self.shards[shard].conn_var);
+                (off, len, Arc::clone(&self.shards[shard].conn))
+            })
+            .collect();
         self.engine.push(
             "kv.dist_pull",
             vec![],
-            vec![out.var(), self.conn_var],
+            writes,
             Box::new(move || {
                 if use_cache {
                     let c = lock(&cache);
@@ -798,37 +1127,68 @@ impl KVStore for DistKVStore {
                         return;
                     }
                 }
-                match conn.rpc_park(&Msg::Pull { key: key.clone(), after_version }) {
-                    Ok(Msg::Value { value, version, .. }) => {
-                        let dst = unsafe { storage.slice_mut() };
-                        if dst.len() == value.len() {
-                            dst.copy_from_slice(&value);
-                            if use_cache {
-                                let mut c = lock(&cache);
-                                c.version = version;
-                                c.data = value;
-                            }
-                        } else {
+                // Fan the per-shard pulls out concurrently; each thread
+                // returns its sub-range so the copy into the destination
+                // happens sequentially after every join (no aliasing).
+                type Fetched = Result<(usize, usize, Vec<f32>, u64)>;
+                let results: Vec<Fetched> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = targets
+                        .iter()
+                        .map(|(off, len, conn)| {
+                            let key = key.clone();
+                            let (off, len) = (*off, *len);
+                            let conn = Arc::clone(conn);
+                            scope.spawn(move || -> Fetched {
+                                match conn
+                                    .rpc_park(&Msg::Pull { key: key.clone(), after_version })?
+                                {
+                                    Msg::Value { value, version, .. } => {
+                                        if value.len() != len {
+                                            return Err(Error::kv(format!(
+                                                "pull '{key}': got {} values, expected {len}",
+                                                value.len()
+                                            )));
+                                        }
+                                        Ok((off, len, value, version))
+                                    }
+                                    other => Err(Error::kv(format!(
+                                        "pull '{key}': unexpected reply {other:?}"
+                                    ))),
+                                }
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| {
+                            h.join().unwrap_or_else(|_| {
+                                Err(Error::kv("pull fan-out thread panicked"))
+                            })
+                        })
+                        .collect()
+                });
+                let mut full = vec![0.0f32; storage.len()];
+                let mut version = u64::MAX;
+                for r in results {
+                    match r {
+                        Ok((off, len, value, v)) => {
+                            full[off..off + len].copy_from_slice(&value);
+                            version = version.min(v);
+                        }
+                        Err(e) => {
+                            // Connection failure after retries: leave
+                            // the buffer untouched, surface the error.
                             let mut g = lock(&err_slot);
-                            g.get_or_insert(Error::kv(format!(
-                                "pull '{key}': got {} values, expected {}",
-                                value.len(),
-                                dst.len()
-                            )));
+                            g.get_or_insert(e);
+                            return;
                         }
                     }
-                    Ok(other) => {
-                        let mut g = lock(&err_slot);
-                        g.get_or_insert(Error::kv(format!(
-                            "pull '{key}': unexpected reply {other:?}"
-                        )));
-                    }
-                    Err(e) => {
-                        // Connection failure after retries: leave the
-                        // buffer untouched and surface the error.
-                        let mut g = lock(&err_slot);
-                        g.get_or_insert(e);
-                    }
+                }
+                unsafe { storage.slice_mut() }.copy_from_slice(&full);
+                if use_cache {
+                    let mut c = lock(&cache);
+                    c.version = version;
+                    c.data = full;
                 }
             }),
         );
@@ -848,14 +1208,35 @@ impl KVStore for DistKVStore {
     }
 }
 
+/// Flatten a placement into `(shard, offset, len)` wire targets: a whole
+/// key is one full-width range on its home shard; a split key is its
+/// per-shard sub-ranges.
+fn placement_ranges(placement: &KeyPlacement, len: usize) -> Vec<(usize, usize, usize)> {
+    match placement {
+        KeyPlacement::Whole(home) => vec![(*home, 0, len)],
+        // Drop empty sub-ranges (key smaller than the shard count):
+        // init/push/pull all route through here, so the uninvolved
+        // shards consistently never hear about the key.
+        KeyPlacement::Split(ranges) => ranges
+            .iter()
+            .filter(|rg| rg.len > 0)
+            .map(|rg| (rg.shard, rg.offset, rg.len))
+            .collect(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::engine::{create, EngineKind};
-    use crate::kvstore::server::{PsServer, ServerUpdater};
+    use crate::kvstore::server::{PsServer, ServerConfig, ServerUpdater};
 
     fn plain_updater() -> ServerUpdater {
         ServerUpdater { lr: 1.0, momentum: 0.0, weight_decay: 0.0, rescale: 1.0 }
+    }
+
+    fn shard_cfg(i: u32, n: u32) -> ServerConfig {
+        ServerConfig { shard: Some((i, n)), ..ServerConfig::default() }
     }
 
     #[test]
@@ -1105,5 +1486,166 @@ mod tests {
         let err = kv.barrier();
         assert!(err.is_err(), "barrier against a dead server must error");
         assert!(kv.client_stats().retries > 0, "the client must have retried first");
+    }
+
+    /// Whole keys route to their home shards only; values stay correct
+    /// and the fleet sum of messages matches the unsharded count.
+    #[test]
+    fn sharded_whole_keys_route_to_home_shards() {
+        let s0 = PsServer::start_with(0, 1, plain_updater(), shard_cfg(0, 2)).unwrap();
+        let s1 = PsServer::start_with(0, 1, plain_updater(), shard_cfg(1, 2)).unwrap();
+        let engine = create(EngineKind::Threaded, 4);
+        let router = ShardRouter::new(2).with_split_elems(0); // never split
+        let kv = DistKVStore::connect_sharded(
+            &[s0.addr(), s1.addr()],
+            0,
+            1,
+            Consistency::Sequential,
+            engine.clone(),
+            RetryCfg::default(),
+            vec![None, None],
+            router.clone(),
+        )
+        .unwrap();
+        assert_eq!(kv.num_shards(), 2);
+        let keys = ["fc1_weight", "fc1_bias", "fc2_weight", "fc2_bias", "conv1_weight"];
+        for key in keys {
+            kv.init(key, &NDArray::zeros_on(&[2], engine.clone())).unwrap();
+            kv.push(key, &NDArray::from_vec_on(&[2], vec![1.0, 2.0], engine.clone()), 0)
+                .unwrap();
+            let out = NDArray::zeros_on(&[2], engine.clone());
+            kv.pull(key, &out, 0).unwrap();
+            kv.flush();
+            assert_eq!(out.to_vec(), vec![-1.0, -2.0], "{key}");
+        }
+        // Each key cost init + push + pull = 3 messages on its home
+        // shard and zero on the other.
+        let per_home: usize = keys.iter().map(|_| 3).sum();
+        let (m0, m1) = (s0.messages_received() as usize, s1.messages_received() as usize);
+        assert_eq!(m0 + m1, per_home, "no duplicate traffic across the fleet");
+        let on_home: usize =
+            keys.iter().map(|k| if router.home(k) == 0 { 3 } else { 0 }).sum();
+        assert_eq!(m0, on_home, "traffic must follow the router's home map");
+    }
+
+    /// An oversized key splits across shards: each shard sees exactly
+    /// one message per round carrying only its sub-range, and pull
+    /// reassembles the full value transparently.
+    #[test]
+    fn split_key_roundtrip_one_message_per_shard() {
+        let s0 = PsServer::start_with(0, 1, plain_updater(), shard_cfg(0, 2)).unwrap();
+        let s1 = PsServer::start_with(0, 1, plain_updater(), shard_cfg(1, 2)).unwrap();
+        let engine = create(EngineKind::Threaded, 4);
+        let router = ShardRouter::new(2).with_split_elems(4); // tiny threshold
+        let kv = DistKVStore::connect_sharded(
+            &[s0.addr(), s1.addr()],
+            0,
+            2,
+            Consistency::Sequential,
+            engine.clone(),
+            RetryCfg::default(),
+            vec![None, None],
+            router,
+        )
+        .unwrap();
+        let init: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        kv.init("big", &NDArray::from_vec_on(&[6], init, engine.clone())).unwrap();
+        // Two devices push 1.0 each -> merged gradient 2.0 per element.
+        for d in 0..2 {
+            kv.push("big", &NDArray::from_vec_on(&[6], vec![1.0; 6], engine.clone()), d)
+                .unwrap();
+        }
+        let out = NDArray::zeros_on(&[6], engine);
+        kv.pull("big", &out, 0).unwrap();
+        kv.flush();
+        // lr=1: w[i] = i - 2
+        assert_eq!(out.to_vec(), vec![-2.0, -1.0, 0.0, 1.0, 2.0, 3.0]);
+        // Per shard: 1 init + 1 aggregated push + 1 pull = 3 messages.
+        assert_eq!(s0.messages_received(), 3, "shard 0: one message per round");
+        assert_eq!(s1.messages_received(), 3, "shard 1: one message per round");
+    }
+
+    /// Split keys through the staged `push_part` path reduce each
+    /// sub-range in part order — the value matches the unsharded merge.
+    #[test]
+    fn split_key_push_part_matches_whole_merge() {
+        let s0 = PsServer::start_with(0, 1, plain_updater(), shard_cfg(0, 2)).unwrap();
+        let s1 = PsServer::start_with(0, 1, plain_updater(), shard_cfg(1, 2)).unwrap();
+        let engine = create(EngineKind::Threaded, 4);
+        let router = ShardRouter::new(2).with_split_elems(2);
+        let kv = DistKVStore::connect_sharded(
+            &[s0.addr(), s1.addr()],
+            0,
+            3,
+            Consistency::Sequential,
+            engine.clone(),
+            RetryCfg::default(),
+            vec![None, None],
+            router,
+        )
+        .unwrap();
+        kv.init("big", &NDArray::zeros_on(&[4], engine.clone())).unwrap();
+        // Rounding-sensitive parts delivered out of order: the per-shard
+        // part-order reduce must still produce (1e8 + 1) - 1e8 = 0.
+        let vals = [1.0e8f32, 1.0, -1.0e8];
+        for part in [2usize, 0, 1] {
+            kv.push_part("big", &vec![vals[part]; 4], part).unwrap();
+        }
+        let out = NDArray::zeros_on(&[4], engine);
+        kv.pull("big", &out, 0).unwrap();
+        kv.flush();
+        assert_eq!(out.to_vec(), vec![0.0; 4], "part-order reduce per sub-range");
+        assert_eq!(s0.messages_received(), 3);
+        assert_eq!(s1.messages_received(), 3);
+    }
+
+    /// A client dialing shard addresses in the wrong order must fail at
+    /// connect (the server advertises its identity in `HelloAck`).
+    #[test]
+    fn misordered_shard_list_fails_at_connect() {
+        let s0 = PsServer::start_with(0, 1, plain_updater(), shard_cfg(0, 2)).unwrap();
+        let s1 = PsServer::start_with(0, 1, plain_updater(), shard_cfg(1, 2)).unwrap();
+        let engine = create(EngineKind::Threaded, 2);
+        let res = DistKVStore::connect_sharded(
+            &[s1.addr(), s0.addr()], // swapped
+            0,
+            1,
+            Consistency::Sequential,
+            engine,
+            RetryCfg::default(),
+            vec![None, None],
+            ShardRouter::new(2),
+        );
+        let err = format!("{:?}", res.err().expect("misordered list must be rejected"));
+        assert!(err.contains("shard mismatch"), "{err}");
+    }
+
+    /// Barriers fan out to every shard: both shards must observe the
+    /// barrier generation (fleet sum of stats proves each was reached).
+    #[test]
+    fn sharded_barrier_reaches_every_shard() {
+        let s0 = PsServer::start_with(0, 1, plain_updater(), shard_cfg(0, 2)).unwrap();
+        let s1 = PsServer::start_with(0, 1, plain_updater(), shard_cfg(1, 2)).unwrap();
+        let engine = create(EngineKind::Threaded, 2);
+        let kv = DistKVStore::connect_sharded(
+            &[s0.addr(), s1.addr()],
+            0,
+            1,
+            Consistency::Sequential,
+            engine,
+            RetryCfg::default(),
+            vec![None, None],
+            ShardRouter::new(2),
+        )
+        .unwrap();
+        kv.barrier().unwrap();
+        let per = kv.server_stats_sharded().unwrap();
+        assert_eq!(per.len(), 2);
+        assert!(per.iter().all(|s| s.msgs >= 1), "every shard saw its barrier: {per:?}");
+        let sum = kv.server_stats().unwrap();
+        assert_eq!(sum.msgs, per[0].msgs + per[1].msgs, "summed stats");
+        let cs = kv.client_stats();
+        assert_eq!(cs.shards.len(), 2, "per-shard client stats");
+        assert!(cs.shards.iter().all(|s| s.alive), "both shards alive");
     }
 }

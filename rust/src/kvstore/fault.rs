@@ -67,6 +67,7 @@ enum Decision {
 
 /// A seeded, shareable fault-injection plan (see module docs).
 pub struct FaultPlan {
+    seed: u64,
     drop_p: f32,
     dup_p: f32,
     trunc_p: f32,
@@ -86,6 +87,7 @@ impl FaultPlan {
     /// A plan that injects nothing until probabilities are configured.
     pub fn new(seed: u64) -> FaultPlan {
         FaultPlan {
+            seed,
             drop_p: 0.0,
             dup_p: 0.0,
             trunc_p: 0.0,
@@ -131,6 +133,22 @@ impl FaultPlan {
     pub fn with_kill_every(mut self, n: u64) -> Self {
         self.kill_every = n;
         self
+    }
+
+    /// A fresh plan with the same probabilities but a seed derived from
+    /// `salt` — one independent draw sequence per shard connection, so
+    /// a sharded client's injection schedule on shard `i` depends only
+    /// on shard `i`'s frame count, never on cross-shard interleaving.
+    /// `fork(0)` reproduces the original plan exactly (counters reset),
+    /// keeping 1-shard chaos runs bit-for-bit compatible.
+    pub fn fork(&self, salt: u64) -> FaultPlan {
+        let seed = self.seed ^ salt.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        FaultPlan::new(seed)
+            .with_drop(self.drop_p)
+            .with_dup(self.dup_p)
+            .with_trunc(self.trunc_p)
+            .with_delay(self.delay_p, self.delay)
+            .with_kill_every(self.kill_every)
     }
 
     /// Build a plan from `PALLAS_FAULT_*` environment knobs; `None` when
@@ -280,6 +298,29 @@ mod tests {
         assert_eq!(s1, s2);
         let (o3, _) = run(43);
         assert_ne!(o1, o3, "different seeds should diverge");
+    }
+
+    /// `fork(0)` replays the original plan; nonzero salts diverge (one
+    /// independent schedule per shard connection).
+    #[test]
+    fn fork_is_deterministic_per_salt() {
+        let run = |plan: FaultPlan| {
+            let mut sink = Vec::new();
+            let mut outcomes = Vec::new();
+            for i in 0..50u64 {
+                let msg = Msg::Barrier { id: i, machine: 0 };
+                outcomes.push(inject_send(&mut sink, &msg, &plan, true).is_ok());
+            }
+            outcomes
+        };
+        let base = FaultPlan::new(42).with_drop(0.3).with_dup(0.2).with_kill_every(5);
+        let o0a = run(base.fork(0));
+        let o0b = run(base.fork(0));
+        let o1 = run(base.fork(1));
+        let orig = run(base);
+        assert_eq!(o0a, orig, "fork(0) must replay the original plan");
+        assert_eq!(o0a, o0b);
+        assert_ne!(o0a, o1, "different salts should diverge");
     }
 
     #[test]

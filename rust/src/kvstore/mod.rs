@@ -24,6 +24,7 @@
 pub mod dist;
 pub mod fault;
 pub mod server;
+pub mod shard;
 pub mod wire;
 
 use std::collections::HashMap;

@@ -86,6 +86,12 @@ pub struct ServerConfig {
     /// Optional fault plan injected into server replies (drops, delays,
     /// truncations; duplicates are suppressed on replies).
     pub fault: Option<Arc<FaultPlan>>,
+    /// Shard identity `(index, total)` when this server is one shard of
+    /// a partitioned key space (`server --shard I/N`).  Advertised in
+    /// every `HelloAck` so a client dialing the wrong slot fails at
+    /// connect, and prefixed to log lines so a fleet's interleaved
+    /// stderr stays attributable.  `None` = unsharded (reports `0/1`).
+    pub shard: Option<(u32, u32)>,
 }
 
 impl Default for ServerConfig {
@@ -95,6 +101,7 @@ impl Default for ServerConfig {
             join_grace: Duration::from_secs(10),
             expiry: ExpiryPolicy::FailRound,
             fault: None,
+            shard: None,
         }
     }
 }
@@ -116,7 +123,29 @@ impl ServerConfig {
             Ok("degrade") => ExpiryPolicy::Degrade,
             _ => ExpiryPolicy::FailRound,
         };
-        ServerConfig { lease, join_grace, expiry, fault: FaultPlan::from_env() }
+        let shard = std::env::var("PALLAS_KV_SHARD").ok().and_then(|v| parse_shard(&v).ok());
+        ServerConfig { lease, join_grace, expiry, fault: FaultPlan::from_env(), shard }
+    }
+}
+
+/// Log-line prefix carrying the shard identity, so N shard processes
+/// interleaving on one stderr stay attributable.
+fn log_tag(cfg: &ServerConfig) -> String {
+    match cfg.shard {
+        Some((i, n)) => format!("[mixnet-ps {i}/{n}]"),
+        None => "[mixnet-ps]".to_string(),
+    }
+}
+
+/// Parse a shard spec of the form `I/N` (e.g. `1/4`), validating
+/// `I < N` and `N >= 1`.  Shared by `ServerConfig::from_env`
+/// (`PALLAS_KV_SHARD`) and the CLI (`server --shard I/N`).
+pub fn parse_shard(spec: &str) -> Result<(u32, u32)> {
+    let mut it = spec.trim().splitn(2, '/');
+    let parse = |s: Option<&str>| -> Option<u32> { s?.trim().parse().ok() };
+    match (parse(it.next()), parse(it.next())) {
+        (Some(i), Some(n)) if n >= 1 && i < n => Ok((i, n)),
+        _ => Err(Error::kv(format!("bad shard spec '{spec}' (want I/N with I < N)"))),
     }
 }
 
@@ -449,14 +478,18 @@ fn check_leases(shared: &Shared) {
         changed = true;
         match shared.cfg.expiry {
             ExpiryPolicy::FailRound => {
-                eprintln!("[mixnet-ps] lease expired: machine {m}; failing round (bsp)");
+                eprintln!(
+                    "{} lease expired: machine {m}; failing round (bsp)",
+                    log_tag(&shared.cfg)
+                );
                 st.fault = Some(format!("machine {m} lease expired; round failed"));
             }
             ExpiryPolicy::Degrade => {
                 st.membership.push((m as u32, false));
                 let left = st.machines.iter().filter(|x| x.active).count();
                 eprintln!(
-                    "[mixnet-ps] lease expired: machine {m} leaves; {left} machine(s) remain"
+                    "{} lease expired: machine {m} leaves; {left} machine(s) remain",
+                    log_tag(&shared.cfg)
                 );
                 if left == 0 {
                     st.fault = Some("all machines lost their lease".into());
@@ -704,11 +737,14 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
                         ks.pending[m].clear();
                     }
                     st.membership.push((machine, true));
-                    eprintln!("[mixnet-ps] machine {machine} rejoins");
+                    eprintln!("{} machine {machine} rejoins", log_tag(&shared.cfg));
                 }
+                let (shard, shards) = shared.cfg.shard.unwrap_or((0, 1));
                 let reply = Msg::HelloAck {
                     seq: st.machines[m].max_seq,
                     barrier: st.barrier_hwm,
+                    shard,
+                    shards,
                 };
                 drop(st);
                 if !send_reply(&mut writer, &reply, &plan) {
@@ -973,6 +1009,7 @@ mod tests {
             join_grace: Duration::from_millis(300),
             expiry: ExpiryPolicy::Degrade,
             fault: None,
+            shard: None,
         };
         let srv = PsServer::start_with(
             0,
@@ -1011,7 +1048,10 @@ mod tests {
         )
         .unwrap();
         let mut c = connect(srv.addr());
-        assert_eq!(rpc(&mut c, &Msg::Hello { machine: 0 }), Msg::HelloAck { seq: 0, barrier: 0 });
+        assert_eq!(
+            rpc(&mut c, &Msg::Hello { machine: 0 }),
+            Msg::HelloAck { seq: 0, barrier: 0, shard: 0, shards: 1 }
+        );
         rpc(&mut c, &Msg::Init { key: "w".into(), value: vec![0.0] });
         rpc(&mut c, &push("w", vec![1.0], 0, 1));
         rpc(&mut c, &push("w", vec![1.0], 0, 2));
@@ -1019,7 +1059,10 @@ mod tests {
         // "kill -9 + restart": a fresh connection's Hello reports the
         // floors the dead incarnation reached.
         let mut c2 = connect(srv.addr());
-        assert_eq!(rpc(&mut c2, &Msg::Hello { machine: 0 }), Msg::HelloAck { seq: 2, barrier: 1 });
+        assert_eq!(
+            rpc(&mut c2, &Msg::Hello { machine: 0 }),
+            Msg::HelloAck { seq: 2, barrier: 1, shard: 0, shards: 1 }
+        );
         // A push at the floor is still a retransmission; one above it is
         // fresh work and must apply.
         assert_eq!(rpc(&mut c2, &push("w", vec![1.0], 0, 2)), Msg::Ack);
@@ -1060,6 +1103,7 @@ mod tests {
             join_grace: Duration::from_millis(800),
             expiry: ExpiryPolicy::Degrade,
             fault: None,
+            shard: None,
         };
         let srv = PsServer::start_with(
             0,
@@ -1089,7 +1133,7 @@ mod tests {
         let mut c1b = connect(srv.addr());
         assert_eq!(
             rpc(&mut c1b, &Msg::Hello { machine: 1 }),
-            Msg::HelloAck { seq: 1, barrier: 0 }
+            Msg::HelloAck { seq: 1, barrier: 0, shard: 0, shards: 1 }
         );
         rpc(&mut c1b, &push("w", vec![2.0], 1, 2));
         rpc(&mut c0, &push("w", vec![1.0], 0, 1));
@@ -1115,6 +1159,7 @@ mod tests {
             join_grace: Duration::from_millis(300),
             expiry: ExpiryPolicy::FailRound,
             fault: None,
+            shard: None,
         };
         let srv = PsServer::start_with(0, 2, ServerUpdater::default(), cfg).unwrap();
         let mut c = connect(srv.addr());

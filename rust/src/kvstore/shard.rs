@@ -1,0 +1,250 @@
+//! Key-space partitioning for the sharded parameter server (ISSUE 10).
+//!
+//! A [`ShardRouter`] is the *static* contract between a training client
+//! and the fleet of [`PsServer`](super::server::PsServer) shard
+//! processes: given only a key name, its element count, and the shard
+//! count, it answers "which shard(s) own this key" — deterministically,
+//! with no negotiation, no rebalancing, and no server-side state.  The
+//! client ([`DistKVStore`](super::dist::DistKVStore)) and the launch
+//! harness (`scripts/dist_train.sh`) share it implicitly through the
+//! *ordered shard address list*: shard `i` of `N` is the `i`-th address,
+//! every worker computes the same placement, and the servers themselves
+//! stay key-agnostic (they store whatever is initialized on them).
+//!
+//! Placement has two regimes:
+//!
+//! - **Whole keys** go to one *home* shard chosen by a stable 64-bit
+//!   FNV-1a hash of the key name modulo the shard count.  The hash is
+//!   part of the protocol: it must never change, or a running fleet and
+//!   its clients would disagree about ownership.
+//! - **Oversized keys** (vgg's fc6 is ~103M parameters — bigger than
+//!   everything else in the net combined) are *split* into one
+//!   contiguous element sub-range per shard, using the same first-ranges
+//!   -get-the-remainder geometry as the trainer's batch sharding.  Every
+//!   shard carries an equal slice of the hot key instead of one shard
+//!   carrying the whole straggler — the groundwork for intra-layer model
+//!   parallelism.  The split is invisible above the store: `push_part`
+//!   and `pull` slice and reassemble transparently.
+//!
+//! Determinism: placement is a pure function of
+//! `(key, len, shards, split_elems)`.  Per-key update order on a shard
+//! is machine-index-ordered (see `server::apply_round`), and elementwise
+//! SGD on a sub-range is bitwise identical to the same elements updated
+//! inside the whole array — so training is **bitwise identical for any
+//! shard count** (`tests/sharded.rs` asserts it for shards {1, 2, 4}).
+
+/// Default split threshold in f32 elements: keys at or above this size
+/// are range-split across all shards (16 MiB of weights).  Far above
+/// every conv/fc layer we train except the vgg-class fc giants, so the
+/// common case stays "one key, one shard, one message".
+pub const DEFAULT_SPLIT_ELEMS: usize = 1 << 22;
+
+/// One shard's slice of a split key: `len` elements starting at
+/// `offset` in the flat f32 array, owned by `shard`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubRange {
+    /// Owning shard index.
+    pub shard: usize,
+    /// Element offset of the slice in the full array.
+    pub offset: usize,
+    /// Element count of the slice.
+    pub len: usize,
+}
+
+/// Where a key lives.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KeyPlacement {
+    /// The whole key lives on one home shard.
+    Whole(usize),
+    /// The key is range-split: one contiguous sub-range per shard, in
+    /// shard order, covering `[0, len)` exactly.
+    Split(Vec<SubRange>),
+}
+
+/// Deterministic, static key -> shard map (see the module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardRouter {
+    shards: usize,
+    split_elems: usize,
+}
+
+/// Stable FNV-1a 64-bit hash of the key name.  Protocol-stable: changing
+/// this function changes every key's home shard.
+fn fnv1a(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl ShardRouter {
+    /// Router over `shards` shards with the default split threshold.
+    pub fn new(shards: usize) -> ShardRouter {
+        ShardRouter { shards: shards.max(1), split_elems: DEFAULT_SPLIT_ELEMS }
+    }
+
+    /// Override the split threshold (`0` disables splitting entirely).
+    /// Tests use tiny thresholds to exercise the split path on small
+    /// models.
+    pub fn with_split_elems(mut self, elems: usize) -> ShardRouter {
+        self.split_elems = elems;
+        self
+    }
+
+    /// Router from the environment: `PALLAS_KV_SPLIT_ELEMS` overrides
+    /// the split threshold (every worker must agree on it, like every
+    /// other `PALLAS_KV_*` knob the harness exports fleet-wide).
+    pub fn from_env(shards: usize) -> ShardRouter {
+        let mut r = ShardRouter::new(shards);
+        if let Some(n) = std::env::var("PALLAS_KV_SPLIT_ELEMS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+        {
+            r.split_elems = n;
+        }
+        r
+    }
+
+    /// Shard count.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Split threshold in elements (`0` = never split).
+    pub fn split_elems(&self) -> usize {
+        self.split_elems
+    }
+
+    /// The home shard of `key` (ignoring size-based splitting).
+    pub fn home(&self, key: &str) -> usize {
+        (fnv1a(key) % self.shards as u64) as usize
+    }
+
+    /// Would a key of `len` elements be range-split?
+    pub fn splits(&self, len: usize) -> bool {
+        self.shards > 1 && self.split_elems > 0 && len >= self.split_elems
+    }
+
+    /// Place a key of `len` f32 elements: its home shard, or its
+    /// per-shard sub-ranges when oversized.  Pure and static — every
+    /// client computes the same answer for the same inputs.
+    pub fn place(&self, key: &str, len: usize) -> KeyPlacement {
+        if !self.splits(len) {
+            return KeyPlacement::Whole(self.home(key));
+        }
+        // Same geometry as the trainer's `shard_ranges`: base elements
+        // per shard, the first `rem` shards carry one extra.
+        let base = len / self.shards;
+        let rem = len % self.shards;
+        let mut ranges = Vec::with_capacity(self.shards);
+        let mut off = 0usize;
+        for s in 0..self.shards {
+            let n = base + usize::from(s < rem);
+            ranges.push(SubRange { shard: s, offset: off, len: n });
+            off += n;
+        }
+        debug_assert_eq!(off, len);
+        KeyPlacement::Split(ranges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_explain;
+
+    #[test]
+    fn home_is_deterministic_and_protocol_stable() {
+        let r = ShardRouter::new(4);
+        for key in ["fc1_weight", "fc1_bias", "conv3_weight", "w"] {
+            assert_eq!(r.home(key), r.home(key));
+        }
+        // Pinned values: the FNV-1a mapping is part of the wire contract
+        // between workers — a silent change here would scatter a running
+        // fleet's keys.
+        assert_eq!(fnv1a(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a("a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn one_shard_never_splits() {
+        let r = ShardRouter::new(1).with_split_elems(8);
+        assert_eq!(r.place("huge", 1 << 30), KeyPlacement::Whole(0));
+    }
+
+    #[test]
+    fn small_keys_stay_whole_and_spread() {
+        let r = ShardRouter::new(4).with_split_elems(1024);
+        let mut seen = [false; 4];
+        for i in 0..64 {
+            match r.place(&format!("layer{i}_weight"), 100) {
+                KeyPlacement::Whole(s) => seen[s] = true,
+                p => panic!("small key split: {p:?}"),
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "64 keys should touch all 4 shards: {seen:?}");
+    }
+
+    #[test]
+    fn split_ranges_tile_the_key_exactly() {
+        check_explain(
+            "shard-split-tiles",
+            300,
+            |r| {
+                let shards = 1 + r.below(7);
+                let thresh = 1 + r.below(64);
+                let len = thresh + r.below(4096);
+                (shards, thresh, len)
+            },
+            |&(shards, thresh, len)| {
+                let router = ShardRouter::new(shards).with_split_elems(thresh);
+                match router.place("k", len) {
+                    KeyPlacement::Whole(s) => {
+                        if shards > 1 {
+                            return Err(format!("len {len} >= {thresh} must split, got Whole({s})"));
+                        }
+                        Ok(())
+                    }
+                    KeyPlacement::Split(ranges) => {
+                        if ranges.len() != shards {
+                            return Err(format!("{} ranges for {shards} shards", ranges.len()));
+                        }
+                        let mut off = 0usize;
+                        for (s, rg) in ranges.iter().enumerate() {
+                            if rg.shard != s {
+                                return Err(format!("range {s} owned by shard {}", rg.shard));
+                            }
+                            if rg.offset != off {
+                                return Err(format!(
+                                    "range {s} starts at {} expected {off}",
+                                    rg.offset
+                                ));
+                            }
+                            off += rg.len;
+                        }
+                        if off != len {
+                            return Err(format!("ranges cover {off} of {len} elements"));
+                        }
+                        // Balanced to within one element.
+                        let min = ranges.iter().map(|r| r.len).min().unwrap();
+                        let max = ranges.iter().map(|r| r.len).max().unwrap();
+                        if max - min > 1 {
+                            return Err(format!("imbalanced split: min {min} max {max}"));
+                        }
+                        Ok(())
+                    }
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn env_threshold_is_read() {
+        // from_env without the knob equals new()
+        if std::env::var("PALLAS_KV_SPLIT_ELEMS").is_err() {
+            assert_eq!(ShardRouter::from_env(2), ShardRouter::new(2));
+        }
+    }
+}

@@ -11,10 +11,12 @@ use std::io::{Read, Write};
 
 use crate::error::{Error, Result};
 
-/// Protocol magic + version (v3: Hello is answered by HelloAck carrying
-/// the machine's resume floors; v2 added Push sequence numbers, Hello,
-/// Heartbeat and the extended StatsReply).
-pub const WIRE_MAGIC: u32 = 0x6d78_0003;
+/// Protocol magic + version (v4: HelloAck carries the server's shard
+/// identity so a misconfigured client fails loudly instead of silently
+/// routing keys to the wrong shard; v3 added the HelloAck resume
+/// floors; v2 added Push sequence numbers, Hello, Heartbeat and the
+/// extended StatsReply).
+pub const WIRE_MAGIC: u32 = 0x6d78_0004;
 
 /// Hard ceiling on a frame body; `read_msg` rejects larger declared
 /// lengths before allocating the receive buffer.
@@ -114,6 +116,14 @@ pub enum Msg {
         /// Highest barrier id the server has released; the client's next
         /// barrier must use a larger id.
         barrier: u64,
+        /// This server's shard index (`0` when unsharded).
+        shard: u32,
+        /// Total shards in the fleet this server was launched for
+        /// (`1` when unsharded).  A client dialing shard `i` of `N`
+        /// verifies `(shard, shards) == (i, N)` whenever `shards > 1`,
+        /// so a harness that wires an address to the wrong slot fails
+        /// at connect instead of scattering keys.
+        shards: u32,
     },
 }
 
@@ -234,9 +244,11 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
         Msg::Hello { machine } | Msg::Heartbeat { machine } => {
             body.extend_from_slice(&machine.to_le_bytes());
         }
-        Msg::HelloAck { seq, barrier } => {
+        Msg::HelloAck { seq, barrier, shard, shards } => {
             body.extend_from_slice(&seq.to_le_bytes());
             body.extend_from_slice(&barrier.to_le_bytes());
+            body.extend_from_slice(&shard.to_le_bytes());
+            body.extend_from_slice(&shards.to_le_bytes());
         }
     }
     let mut out = Vec::with_capacity(12 + body.len());
@@ -270,7 +282,12 @@ pub fn decode(body: &[u8]) -> Result<Msg> {
         },
         10 => Msg::Hello { machine: c.u32()? },
         11 => Msg::Heartbeat { machine: c.u32()? },
-        12 => Msg::HelloAck { seq: c.u64()?, barrier: c.u64()? },
+        12 => Msg::HelloAck {
+            seq: c.u64()?,
+            barrier: c.u64()?,
+            shard: c.u32()?,
+            shards: c.u32()?,
+        },
         other => return Err(Error::kv(format!("wire: unknown opcode {other}"))),
     })
 }
@@ -331,7 +348,7 @@ mod tests {
         });
         roundtrip(Msg::Hello { machine: 2 });
         roundtrip(Msg::Heartbeat { machine: 0 });
-        roundtrip(Msg::HelloAck { seq: 57, barrier: 12 });
+        roundtrip(Msg::HelloAck { seq: 57, barrier: 12, shard: 2, shards: 4 });
     }
 
     #[test]

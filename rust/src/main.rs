@@ -49,7 +49,9 @@ COMMANDS:
                   activation memory, bitwise-identical results; K picks
                   the segment count, default √n; PALLAS_MEMOPT sets the
                   same knob when the flag is absent)
-                 (--kv dist needs --server ADDR; --batch is the global
+                 (--kv dist needs --server ADDR[,ADDR...] — one address
+                  per server shard, shard i at position i; --kv-shards N
+                  asserts the expected shard count; --batch is the global
                   batch, split over --devices replica shards; bounded:K
                   lets replicas run K rounds ahead of delivery; --weights
                   sizes each replica's share of the round — elastic sync;
@@ -63,15 +65,19 @@ COMMANDS:
                  --live  (train and serve concurrently: the server answers
                   from the training store's committed snapshots)
                  (no --checkpoint: quick-trains/initializes weights first)
-  server       run the level-2 parameter server
+  server       run the level-2 parameter server (one shard of it)
                  --port N  --machines N  --lr F  --momentum F
-                 --lease-ms N  --lease-policy fail|degrade
-                 (lease knobs also read PALLAS_KV_LEASE_MS /
-                  PALLAS_KV_LEASE_POLICY; see README 'Fault tolerance')
+                 --shard I/N  --lease-ms N  --lease-policy fail|degrade
+                 (--shard I/N marks this process as shard I of an N-way
+                  sharded key space; workers must list all N addresses
+                  in shard order. Lease knobs also read
+                  PALLAS_KV_LEASE_MS / PALLAS_KV_LEASE_POLICY; --shard
+                  reads PALLAS_KV_SHARD; see README 'Sharded parameter
+                  server' and 'Fault tolerance')
   worker       join distributed training as one machine (same Trainer as
                `train`, N local devices aggregated before the wire)
-                 --server ADDR  --machine ID  --machines N  --devices N
-                 [train opts]
+                 --server ADDR[,ADDR...]  --kv-shards N  --machine ID
+                 --machines N  --devices N  [train opts]
   transformer  run the AOT three-layer transformer driver
                  --steps N  --artifacts DIR  --mode sgd|kvstore  --workers N
   memplan      print the Figure 7 memory table for one model
@@ -112,7 +118,7 @@ const VALUE_KEYS: &[&str] = &[
     "momentum", "server", "machine", "steps", "artifacts", "mode", "workers", "passes",
     "checkpoint", "clients", "requests", "max-batch", "max-delay-us", "devices", "kv",
     "consistency", "weights", "lease-ms", "lease-policy", "profile", "metrics-every",
-    "stats-every", "memopt",
+    "stats-every", "memopt", "shard", "kv-shards",
 ];
 
 fn run(argv: Vec<String>) -> Result<()> {
@@ -275,16 +281,54 @@ fn parse_memopt(args: &Args) -> Result<mixnet::graph::recompute::MemOpt> {
 
 /// Connect a distributed store for `shards` local parts per round,
 /// shipping the global-batch mean (mirrors the local path's updater
-/// rescale).
+/// rescale).  `addrs` lists every server shard in shard order (shard i
+/// at position i); one address is the classic unsharded setup.
 fn dist_store(
-    addr: std::net::SocketAddr,
+    addrs: &[std::net::SocketAddr],
     machine: u32,
     shards: usize,
     consistency: Consistency,
     engine: mixnet::engine::EngineRef,
 ) -> Result<DistKVStore> {
-    Ok(DistKVStore::connect(addr, machine, shards, consistency, engine)?
+    Ok(DistKVStore::connect_multi(addrs, machine, shards, consistency, engine)?
         .with_grad_rescale(1.0 / shards as f32))
+}
+
+/// `--server ADDR[,ADDR...]` — the ordered server-shard address list.
+/// `--kv-shards N`, when present, asserts the list length so a
+/// mistyped list fails before any connection is attempted.
+fn parse_server_addrs(args: &Args) -> Result<Vec<std::net::SocketAddr>> {
+    let spec = args
+        .options
+        .get("server")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:9700".into());
+    let mut addrs = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let addr: std::net::SocketAddr = part
+            .parse()
+            .map_err(|_| Error::Config(format!("bad --server '{part}'")))?;
+        addrs.push(addr);
+    }
+    if addrs.is_empty() {
+        return Err(Error::Config(format!("--server '{spec}': no addresses")));
+    }
+    if let Some(n) = args.options.get("kv-shards") {
+        let n: usize = n
+            .parse()
+            .map_err(|_| Error::Config(format!("--kv-shards: bad value '{n}'")))?;
+        if n != addrs.len() {
+            return Err(Error::Config(format!(
+                "--kv-shards {n} but --server lists {} address(es)",
+                addrs.len()
+            )));
+        }
+    }
+    Ok(addrs)
 }
 
 /// `--consistency seq|bounded:K|eventual` (with `--eventual` kept as an
@@ -415,14 +459,12 @@ fn cmd_train(args: &Args) -> Result<()> {
             s
         }
         "dist" => {
-            let addr = args
-                .options
-                .get("server")
-                .ok_or_else(|| Error::Config("--kv dist needs --server ADDR".into()))?;
-            let addr: std::net::SocketAddr =
-                addr.parse().map_err(|_| Error::Config(format!("bad --server '{addr}'")))?;
+            if !args.options.contains_key("server") {
+                return Err(Error::Config("--kv dist needs --server ADDR[,ADDR...]".into()));
+            }
+            let addrs = parse_server_addrs(args)?;
             let machine: u32 = args.get("machine", 0)?;
-            let s = Arc::new(dist_store(addr, machine, shards, consistency, engine.clone())?);
+            let s = Arc::new(dist_store(&addrs, machine, shards, consistency, engine.clone())?);
             dist_kv = Some(s.clone());
             s
         }
@@ -754,6 +796,9 @@ fn cmd_server(args: &Args) -> Result<()> {
         rescale: 1.0,
     };
     let mut cfg = ServerConfig::from_env();
+    if let Some(spec) = args.options.get("shard") {
+        cfg.shard = Some(mixnet::kvstore::server::parse_shard(spec)?);
+    }
     if let Some(ms) = args.options.get("lease-ms") {
         let ms: u64 = ms
             .parse()
@@ -772,7 +817,16 @@ fn cmd_server(args: &Args) -> Result<()> {
         };
     }
     let server = PsServer::start_with(port, machines, updater, cfg.clone())?;
-    println!("level-2 parameter server on {} for {machines} machine(s)", server.addr());
+    match cfg.shard {
+        Some((i, n)) => println!(
+            "level-2 parameter server shard {i}/{n} on {} for {machines} machine(s)",
+            server.addr()
+        ),
+        None => println!(
+            "level-2 parameter server on {} for {machines} machine(s)",
+            server.addr()
+        ),
+    }
     match cfg.lease {
         Some(l) => println!("lease {}ms, expiry {:?}", l.as_millis(), cfg.expiry),
         None => println!("leases disabled (set PALLAS_KV_LEASE_MS or --lease-ms)"),
@@ -809,9 +863,7 @@ fn cmd_server(args: &Args) -> Result<()> {
 }
 
 fn cmd_worker(args: &Args) -> Result<()> {
-    let addr = args.get_str("server", "127.0.0.1:9700");
-    let addr: std::net::SocketAddr =
-        addr.parse().map_err(|_| Error::Config(format!("bad --server '{addr}'")))?;
+    let addrs = parse_server_addrs(args)?;
     let machine: u32 = args.get("machine", 0)?;
     let epochs: usize = args.get("epochs", 4)?;
     let devices: usize = args.get("devices", 1)?;
@@ -825,7 +877,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         build_training(args, engine.clone(), 0x5eed + machine as u64, shards)?;
     // The same Trainer as `mixnet train`: N local device shards, level-1
     // aggregated by the DistKVStore before one wire message per round.
-    let kv = Arc::new(dist_store(addr, machine, shards, consistency, engine.clone())?);
+    let kv = Arc::new(dist_store(&addrs, machine, shards, consistency, engine.clone())?);
     let store: Arc<dyn mixnet::kvstore::KVStore> = kv.clone();
     let mut trainer = bind_trainer(args, engine, &model, shard_batch, devices, shards, store)?;
     let stats = trainer.fit(&mut iter, epochs)?;

@@ -434,7 +434,13 @@ pub(crate) fn fit_rounds(
             }
             batches += 1;
         }
-        engine.wait_all();
+        // Epoch-end drain through the *store*: for a distributed store
+        // this is the per-shard drain point — every shard's in-flight
+        // wire ops (each serialized on its own engine connection var)
+        // must land before the epoch metric is read or an inter-machine
+        // barrier is issued.  For a local store it degenerates to the
+        // old `engine.wait_all()`.
+        store.flush();
         ledger.wait_all()?;
         if batches == 0 {
             return Err(Error::Bind("iterator produced no batches".into()));

@@ -720,6 +720,10 @@ impl MetricsSnapshot {
             snap.kv_client = Some(ClientStats {
                 retries: req_u64(c, "retries", "kv_client")?,
                 reconnects: req_u64(c, "reconnects", "kv_client")?,
+                // The per-shard breakdown is live-only diagnostics; the
+                // persisted snapshot keeps the fleet sums (and stays
+                // byte-identical across a roundtrip).
+                shards: Vec::new(),
             });
         }
         if let Some(s @ Json::Obj(_)) = v.get("kv_server") {

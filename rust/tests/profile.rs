@@ -251,7 +251,7 @@ fn metrics_snapshot_json_roundtrips() {
             uptime_s: 1.25,
             rps: 128.0,
         })
-        .with_kv_client(ClientStats { retries: 2, reconnects: 1 })
+        .with_kv_client(ClientStats { retries: 2, reconnects: 1, ..Default::default() })
         .with_kv_server(ServerStats {
             msgs: 40,
             bytes: 123_456,

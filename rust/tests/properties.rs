@@ -199,7 +199,12 @@ fn prop_wire_roundtrip() {
                 4 => Msg::Barrier { id: rng.next_u64(), machine: rng.below(64) as u32 },
                 5 => Msg::Hello { machine: rng.below(1024) as u32 },
                 6 => Msg::Heartbeat { machine: rng.below(1024) as u32 },
-                7 => Msg::HelloAck { seq: rng.next_u64(), barrier: rng.next_u64() },
+                7 => Msg::HelloAck {
+                    seq: rng.next_u64(),
+                    barrier: rng.next_u64(),
+                    shard: rng.below(16) as u32,
+                    shards: 1 + rng.below(16) as u32,
+                },
                 8 => Msg::StatsReply {
                     msgs: rng.next_u64(),
                     bytes: rng.next_u64(),

@@ -1,0 +1,371 @@
+//! Sharded parameter-server acceptance (ISSUE 10).
+//!
+//! The determinism contract extends the data-parallel one: the *shard
+//! count of the server fleet* must not change the math.  Whole keys move
+//! to their home shard wholesale; oversized keys are range-split into
+//! per-shard contiguous slices, and elementwise SGD on a slice is
+//! bitwise identical to the same elements updated inside the whole
+//! array — so N-shard Sequential training is **bitwise identical** to
+//! 1-shard training (asserted below for the MLP and AlexNet, devices
+//! {1, 2}, shards {1, 2, 4}, with a split threshold small enough to
+//! force the split path on these small models).  Fault injection scoped
+//! to a single shard must not change a bit either: PR 6's per-machine
+//! seq/dedup/retry machinery holds per shard.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use mixnet::engine::{create, EngineKind};
+use mixnet::io::{synth, ArrayDataIter};
+use mixnet::kvstore::dist::{DistKVStore, RetryCfg};
+use mixnet::kvstore::fault::FaultPlan;
+use mixnet::kvstore::server::{PsServer, ServerConfig, ServerUpdater};
+use mixnet::kvstore::shard::ShardRouter;
+use mixnet::kvstore::{Consistency, KVStore};
+use mixnet::models::{alexnet, mlp};
+use mixnet::module::{DataParallelTrainer, EpochStats, TrainerConfig};
+use mixnet::ndarray::NDArray;
+
+/// One shard process of an `n`-way fleet (all in-process, ephemeral
+/// ports).  Returns the servers and the ordered address list — the
+/// ordered list IS the router contract.
+fn start_fleet(
+    n: usize,
+    machines: usize,
+    up: ServerUpdater,
+) -> (Vec<PsServer>, Vec<std::net::SocketAddr>) {
+    let mut servers = Vec::with_capacity(n);
+    let mut addrs = Vec::with_capacity(n);
+    for i in 0..n {
+        let cfg = ServerConfig { shard: Some((i as u32, n as u32)), ..ServerConfig::default() };
+        let s = PsServer::start_with(0, machines, up, cfg).unwrap();
+        addrs.push(s.addr());
+        servers.push(s);
+    }
+    (servers, addrs)
+}
+
+fn fast_retry() -> RetryCfg {
+    RetryCfg {
+        connect_timeout: Duration::from_millis(2000),
+        op_timeout: Duration::from_millis(400),
+        park_timeout: Duration::from_millis(8000),
+        max_retries: 20,
+        backoff_base: Duration::from_millis(2),
+        backoff_cap: Duration::from_millis(20),
+        heartbeat: None,
+    }
+}
+
+fn assert_params_bitwise_eq(a: &HashMap<String, Vec<f32>>, b: &HashMap<String, Vec<f32>>) {
+    assert_eq!(a.len(), b.len());
+    for (name, va) in a {
+        let vb = &b[name];
+        assert_eq!(va.len(), vb.len(), "{name}: length");
+        for (i, (x, y)) in va.iter().zip(vb).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{name}[{i}]: {x} vs {y} — shard count changed the math"
+            );
+        }
+    }
+}
+
+/// Train the Figure 2 MLP against an `nsrv`-shard fleet and return
+/// (master weights, epoch stats).  `split_elems` is tiny so even this
+/// small model exercises the range-split path; `plans[i]` injects
+/// faults on the connection to shard `i` only.
+fn train_mlp_sharded(
+    devices: usize,
+    nsrv: usize,
+    split_elems: usize,
+    epochs: usize,
+    plans: Option<Vec<Option<Arc<FaultPlan>>>>,
+) -> (HashMap<String, Vec<f32>>, Vec<EpochStats>, Vec<u64>) {
+    let shards = 2usize; // local device shards (level-1), fixed
+    let up = ServerUpdater { lr: 0.5, momentum: 0.9, weight_decay: 1e-4, rescale: 1.0 };
+    let (mut servers, addrs) = start_fleet(nsrv, 1, up);
+    let engine = create(EngineKind::Threaded, 4);
+    let plans = plans.unwrap_or_else(|| vec![None; nsrv]);
+    let router = ShardRouter::new(nsrv).with_split_elems(split_elems);
+    let kv = Arc::new(
+        DistKVStore::connect_sharded(
+            &addrs,
+            0,
+            shards,
+            Consistency::Sequential,
+            engine.clone(),
+            fast_retry(),
+            plans,
+            router,
+        )
+        .unwrap()
+        .with_grad_rescale(1.0 / shards as f32),
+    );
+    let store: Arc<dyn KVStore> = kv.clone();
+    let model = mlp(&[32], 16, 4);
+    let shard_batch = 8usize;
+    let shapes = model.param_shapes(shard_batch).unwrap();
+    let ds = synth::class_clusters(512, 4, 16, 0.3, 5);
+    let mut iter = ArrayDataIter::new(
+        ds.features,
+        ds.labels,
+        &[16],
+        shards * shard_batch,
+        true,
+        engine.clone(),
+    );
+    let mut t = DataParallelTrainer::bind(
+        &model.symbol,
+        engine,
+        shard_batch,
+        &[16],
+        &shapes,
+        store,
+        TrainerConfig { devices, shards, seed: 1, ..Default::default() },
+    )
+    .unwrap();
+    let stats = t.fit(&mut iter, epochs).unwrap();
+    kv.barrier().unwrap();
+    let params = t.pull_params().unwrap();
+    let cs = kv.client_stats();
+    assert_eq!(cs.shards.len(), nsrv, "one stats row per shard");
+    let per_shard_retries = cs.shards.iter().map(|s| s.retries).collect();
+    drop(t);
+    drop(kv);
+    for s in &mut servers {
+        s.shutdown();
+    }
+    (params, stats, per_shard_retries)
+}
+
+/// The tentpole assertion: MLP Sequential training is bitwise identical
+/// for server-shard counts {1, 2, 4} and device counts {1, 2}, split
+/// path forced (threshold 64 splits every fc weight in this model).
+#[test]
+fn mlp_bitwise_identical_across_shard_counts() {
+    let (ref_p, ref_s, _) = train_mlp_sharded(1, 1, 64, 3, None);
+    for devices in [1usize, 2] {
+        for nsrv in [1usize, 2, 4] {
+            if devices == 1 && nsrv == 1 {
+                continue;
+            }
+            let (p, s, _) = train_mlp_sharded(devices, nsrv, 64, 3, None);
+            assert_params_bitwise_eq(&ref_p, &p);
+            for (a, b) in ref_s.iter().zip(&s) {
+                assert_eq!(
+                    a.loss.to_bits(),
+                    b.loss.to_bits(),
+                    "epoch {} loss ({devices} devices, {nsrv} shards)",
+                    a.epoch
+                );
+                assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+            }
+        }
+    }
+    // and it actually learns the task
+    assert!(ref_s.last().unwrap().accuracy > 0.85, "{:?}", ref_s.last());
+}
+
+/// Whole-key regime (splitting disabled): keys scatter to their home
+/// shards and the math is still bitwise stable.
+#[test]
+fn mlp_bitwise_identical_whole_key_regime() {
+    let (p1, _, _) = train_mlp_sharded(1, 1, 0, 2, None);
+    let (p4, _, _) = train_mlp_sharded(2, 4, 0, 2, None);
+    assert_params_bitwise_eq(&p1, &p4);
+}
+
+/// AlexNet (full topology incl. step-seeded Dropout): shard count and
+/// device count both invariant, split path forced on the fc layers.
+fn train_alexnet_sharded(devices: usize, nsrv: usize) -> HashMap<String, Vec<f32>> {
+    let shards = 2usize;
+    let up = ServerUpdater { lr: 0.01, momentum: 0.9, weight_decay: 1e-4, rescale: 1.0 };
+    let (mut servers, addrs) = start_fleet(nsrv, 1, up);
+    let engine = create(EngineKind::Threaded, 4);
+    let router = ShardRouter::new(nsrv).with_split_elems(4096);
+    let kv = Arc::new(
+        DistKVStore::connect_sharded(
+            &addrs,
+            0,
+            shards,
+            Consistency::Sequential,
+            engine.clone(),
+            fast_retry(),
+            vec![None; nsrv],
+            router,
+        )
+        .unwrap()
+        .with_grad_rescale(1.0 / shards as f32),
+    );
+    let store: Arc<dyn KVStore> = kv.clone();
+    let model = alexnet(4, 64);
+    let shard_batch = 2usize;
+    let shapes = model.param_shapes(shard_batch).unwrap();
+    let ds = synth::images(2 * shards * shard_batch, 4, 3, 64, 64, 0.3, 9);
+    let mut iter = ArrayDataIter::new(
+        ds.features,
+        ds.labels,
+        &[3, 64, 64],
+        shards * shard_batch,
+        false,
+        engine.clone(),
+    );
+    let mut t = DataParallelTrainer::bind(
+        &model.symbol,
+        engine,
+        shard_batch,
+        &[3, 64, 64],
+        &shapes,
+        store,
+        TrainerConfig { devices, shards, seed: 3, ..Default::default() },
+    )
+    .unwrap();
+    t.fit(&mut iter, 1).unwrap();
+    kv.barrier().unwrap();
+    let params = t.pull_params().unwrap();
+    drop(t);
+    drop(kv);
+    for s in &mut servers {
+        s.shutdown();
+    }
+    params
+}
+
+#[test]
+fn alexnet_bitwise_identical_across_shard_counts() {
+    let p1 = train_alexnet_sharded(1, 1);
+    let p2 = train_alexnet_sharded(2, 2);
+    let p4 = train_alexnet_sharded(1, 4);
+    assert_params_bitwise_eq(&p1, &p2);
+    assert_params_bitwise_eq(&p1, &p4);
+}
+
+/// Big-key split/reassembly property: a key far above the split
+/// threshold pushes per-shard sub-range messages and pulls back
+/// reassembled bitwise — for lengths that are exact multiples of the
+/// shard count, off-by-one remainders, primes, and length < shards.
+#[test]
+fn big_key_split_reassembly_roundtrip() {
+    let up = ServerUpdater { lr: 1.0, momentum: 0.0, weight_decay: 0.0, rescale: 1.0 };
+    let nsrv = 4usize;
+    let (mut servers, addrs) = start_fleet(nsrv, 1, up);
+    let engine = create(EngineKind::Threaded, 4);
+    let kv = DistKVStore::connect_sharded(
+        &addrs,
+        0,
+        1,
+        Consistency::Sequential,
+        engine.clone(),
+        fast_retry(),
+        vec![None; nsrv],
+        ShardRouter::new(nsrv).with_split_elems(8),
+    )
+    .unwrap();
+    // Deterministic xorshift data, fresh key per case.
+    let mut state = 0x2545_f491_4f6c_dd1du64;
+    let mut rng = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        (state >> 40) as f32 / 256.0 - 32.0
+    };
+    for (case, len) in [8usize, 16, 17, 31, 97, 3, 1000].into_iter().enumerate() {
+        let key = format!("big{case}");
+        let init: Vec<f32> = (0..len).map(|_| rng()).collect();
+        let grad: Vec<f32> = (0..len).map(|_| rng()).collect();
+        kv.init(&key, &NDArray::from_vec_on(&[len], init.clone(), engine.clone())).unwrap();
+        kv.push(&key, &NDArray::from_vec_on(&[len], grad.clone(), engine.clone()), 0).unwrap();
+        let out = NDArray::zeros_on(&[len], engine.clone());
+        kv.pull(&key, &out, 0).unwrap();
+        kv.flush();
+        let got = out.to_vec();
+        // lr=1, no momentum/decay: w = init - grad, elementwise — the
+        // split must reassemble to exactly the unsharded SGD result.
+        for i in 0..len {
+            let want = init[i] - grad[i];
+            assert_eq!(
+                got[i].to_bits(),
+                want.to_bits(),
+                "len {len} elem {i}: {} vs {want}",
+                got[i]
+            );
+        }
+    }
+    kv.barrier().unwrap();
+    // Satellite: server_stats fans out to every shard and sums.
+    let per = kv.server_stats_sharded().unwrap();
+    assert_eq!(per.len(), nsrv);
+    let sum = kv.server_stats().unwrap();
+    assert_eq!(sum.msgs, per.iter().map(|s| s.msgs).sum::<u64>());
+    assert_eq!(sum.applies, per.iter().map(|s| s.applies).sum::<u64>());
+    // Every shard saw traffic: lengths >= 8 split across all 4 shards.
+    for (i, s) in per.iter().enumerate() {
+        assert!(s.msgs > 0, "shard {i} never saw a message");
+        assert!(s.applies > 0, "shard {i} never applied a round");
+    }
+    drop(kv);
+    for s in &mut servers {
+        s.shutdown();
+    }
+}
+
+/// Fault injection scoped to ONE shard of a 2-shard fleet: retries land
+/// on that shard alone (per-shard seq/dedup/retry isolation) and the
+/// run stays bitwise identical to the fault-free sharded run.
+#[test]
+fn single_shard_faults_stay_bitwise() {
+    let (clean_p, _, _) = train_mlp_sharded(2, 2, 64, 2, None);
+
+    let plan = FaultPlan::new(0xfa17).with_drop(0.05).with_dup(0.05);
+    let plans = vec![None, Some(Arc::new(plan))];
+    let (faulty_p, _, rt) = train_mlp_sharded(2, 2, 64, 2, Some(plans));
+    // Per-shard attribution: the chaos is on shard 1's connection, so
+    // its retry counter must move (shard 0 may log the odd timeout
+    // retry on a loaded runner, but the injected faults land on 1).
+    assert!(rt[1] > 0, "faults on shard 1 were not exercised: {rt:?}");
+    assert_params_bitwise_eq(&clean_p, &faulty_p);
+}
+
+/// One multiplexed heartbeat loop serves every shard: liveness and beat
+/// counters tick per shard in `client_stats()`.
+#[test]
+fn heartbeat_multiplexes_across_shards() {
+    let up = ServerUpdater { lr: 1.0, momentum: 0.0, weight_decay: 0.0, rescale: 1.0 };
+    let nsrv = 3usize;
+    let (mut servers, addrs) = start_fleet(nsrv, 1, up);
+    let engine = create(EngineKind::Threaded, 2);
+    let cfg = RetryCfg { heartbeat: Some(Duration::from_millis(50)), ..fast_retry() };
+    let kv = DistKVStore::connect_sharded(
+        &addrs,
+        0,
+        1,
+        Consistency::Sequential,
+        engine,
+        cfg,
+        vec![None; nsrv],
+        ShardRouter::new(nsrv),
+    )
+    .unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let cs = kv.client_stats();
+        assert_eq!(cs.shards.len(), nsrv);
+        if cs.shards.iter().all(|s| s.heartbeats > 0) {
+            assert!(cs.shards.iter().all(|s| s.alive), "a heartbeating shard reads dead");
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "heartbeats never reached every shard: {:?}",
+            cs.shards
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    drop(kv);
+    for s in &mut servers {
+        s.shutdown();
+    }
+}

@@ -1,17 +1,26 @@
 #!/usr/bin/env bash
-# Multi-process distributed training harness (ISSUE 5 / ROADMAP item 1).
+# Multi-process distributed training harness (ISSUE 5 / ROADMAP item 1,
+# sharded fleet per ISSUE 10).
 #
-# Launches ONE `mixnet server` (the level-2 parameter server) plus N
-# `mixnet worker` processes talking to it over real TCP, for N in
-# $WORKER_COUNTS, and records a Figure 8-style images/sec-vs-workers
+# Launches a fleet of SHARDS `mixnet server` processes (shard i/N each,
+# the ordered address list IS the key router contract) plus N
+# `mixnet worker` processes talking to all of them over real TCP, for N
+# in $WORKER_COUNTS, and records a Figure 8-style images/sec-vs-workers
 # curve into BENCH_dist.json — the measured counterpart of the
-# `sim/cluster.rs` virtual curve.
+# `sim/cluster.rs` virtual curve.  A second loop fixes the worker count
+# and sweeps the SHARD count under a serialized per-shard wire
+# (PALLAS_KV_WIRE_DELAY_US), recording the `shard_scaling` object CI
+# gates on (2-shard throughput must beat 1-shard when the wire is the
+# bottleneck).
 #
 #   scripts/dist_train.sh                 # full run: 1, 2 and 4 workers
 #   QUICK=1 scripts/dist_train.sh         # CI smoke: 2 workers, tiny run
+#   SHARDS=2 scripts/dist_train.sh        # 2-shard server fleet
 #   BENCH_OUT=/tmp/d.json scripts/dist_train.sh
 #
 # Knobs: QUICK, BENCH_OUT, PORT (base port, default 9731), MODEL,
+# SHARDS (server shards, default 1), SHARD_COUNTS (shard-scaling sweep),
+# WIRE_US (simulated per-message wire time for the sweep, default 500),
 # EXAMPLES (per worker), EPOCHS, BATCH (global batch per worker),
 # DEVICES (local replicas per worker), CONSISTENCY (seq|bounded:K|eventual).
 #
@@ -29,16 +38,20 @@ QUICK="${QUICK:-0}"
 PORT="${PORT:-9731}"
 MODEL="${MODEL:-mlp}"
 DEVICES="${DEVICES:-1}"
+SHARDS="${SHARDS:-1}"
+WIRE_US="${WIRE_US:-500}"
 CONSISTENCY="${CONSISTENCY:-seq}"
 BENCH_OUT="${BENCH_OUT:-$ROOT/BENCH_dist.json}"
 
 if [ "$QUICK" = "1" ]; then
   WORKER_COUNTS="${WORKER_COUNTS:-2}"
+  SHARD_COUNTS="${SHARD_COUNTS:-1 2}"
   EXAMPLES="${EXAMPLES:-512}"
   EPOCHS="${EPOCHS:-1}"
   BATCH="${BATCH:-32}"
 else
   WORKER_COUNTS="${WORKER_COUNTS:-1 2 4}"
+  SHARD_COUNTS="${SHARD_COUNTS:-1 2 4}"
   EXAMPLES="${EXAMPLES:-2048}"
   EPOCHS="${EPOCHS:-2}"
   BATCH="${BATCH:-32}"
@@ -64,22 +77,54 @@ wait_for_port() {
 
 now_s() { date +%s.%N; }
 
+# Start an $2-shard server fleet at base port $1 for $3 machines.  Sets
+# `fleet_pids` (space-joined) and `fleet_addrs` (comma-joined, shard
+# order — the ordered address list IS the ShardRouter contract every
+# worker shares).
+start_fleet() {
+  local base="$1" nshards="$2" machines="$3" i p
+  fleet_pids=""
+  fleet_addrs=""
+  for i in $(seq 0 $((nshards - 1))); do
+    p=$((base + i))
+    if [ "$nshards" -gt 1 ]; then
+      "$BIN" server --port "$p" --machines "$machines" --lr 0.2 \
+        --shard "$i/$nshards" >/dev/null 2>&1 &
+    else
+      "$BIN" server --port "$p" --machines "$machines" --lr 0.2 >/dev/null 2>&1 &
+    fi
+    fleet_pids="$fleet_pids $!"
+    [ -n "$fleet_addrs" ] && fleet_addrs="$fleet_addrs,"
+    fleet_addrs="${fleet_addrs}127.0.0.1:$p"
+  done
+  trap 'kill $fleet_pids 2>/dev/null || true' EXIT
+  for i in $(seq 0 $((nshards - 1))); do
+    wait_for_port $((base + i))
+  done
+}
+
+stop_fleet() {
+  local pid
+  for pid in $fleet_pids; do
+    kill "$pid" 2>/dev/null || true
+    wait "$pid" 2>/dev/null || true
+  done
+  trap - EXIT
+}
+
 records=""
 idx=0
 for n in $WORKER_COUNTS; do
   port=$((PORT + idx))
-  idx=$((idx + 1))
-  echo "== $n worker(s) over TCP (port $port) =="
-  "$BIN" server --port "$port" --machines "$n" --lr 0.2 >/dev/null 2>&1 &
-  server_pid=$!
-  trap 'kill "$server_pid" 2>/dev/null || true' EXIT
-  wait_for_port "$port"
+  idx=$((idx + SHARDS))
+  echo "== $n worker(s) x $SHARDS shard(s) over TCP (base port $port) =="
+  start_fleet "$port" "$SHARDS" "$n"
 
   t0="$(now_s)"
   worker_pids=""
   for m in $(seq 0 $((n - 1))); do
     "$BIN" worker \
-      --server "127.0.0.1:$port" --machine "$m" \
+      --server "$fleet_addrs" --kv-shards "$SHARDS" --machine "$m" \
       --model "$MODEL" --epochs "$EPOCHS" --batch "$BATCH" \
       --examples "$EXAMPLES" --devices "$DEVICES" \
       --consistency "$CONSISTENCY" >/dev/null &
@@ -90,9 +135,7 @@ for n in $WORKER_COUNTS; do
     wait "$pid" || fail=1
   done
   t1="$(now_s)"
-  kill "$server_pid" 2>/dev/null || true
-  wait "$server_pid" 2>/dev/null || true
-  trap - EXIT
+  stop_fleet
   if [ "$fail" -ne 0 ]; then
     echo "a worker failed at n=$n" >&2
     exit 1
@@ -104,7 +147,55 @@ for n in $WORKER_COUNTS; do
   echo "   $n worker(s): ${wall}s wall, $images images -> $ips img/s"
   [ -n "$records" ] && records="$records,"
   records="$records
-    {\"name\": \"dist_train.epoch\", \"case\": \"${n}workers\", \"n\": $n, \"wall_s\": $wall, \"images\": $images, \"images_per_sec\": $ips}"
+    {\"name\": \"dist_train.epoch\", \"case\": \"${n}workers_${SHARDS}shards\", \"n\": $n, \"wall_s\": $wall, \"images\": $images, \"images_per_sec\": $ips}"
+done
+
+# ---- shard scaling: images/sec vs server-shard count -----------------
+# Fixed worker count, serialized per-shard wire: every push pays
+# WIRE_US while holding its shard's connection slot, so with 1 shard
+# the whole round's transfers queue behind one wire (the straggler
+# case) and with N shards they overlap.  This is the curve the CI jq
+# gate checks: ips_2 >= ips_1 whenever the wire is the bottleneck.
+shard_scaling=""
+sweep_workers=1
+sweep_examples=$((EXAMPLES / 2))
+[ "$sweep_examples" -lt 256 ] && sweep_examples=256
+for s in $SHARD_COUNTS; do
+  port=$((PORT + 100 + idx))
+  idx=$((idx + s))
+  echo "== shard scaling: $s shard(s), $sweep_workers worker, ${WIRE_US}us wire =="
+  start_fleet "$port" "$s" "$sweep_workers"
+
+  t0="$(now_s)"
+  worker_pids=""
+  for m in $(seq 0 $((sweep_workers - 1))); do
+    PALLAS_KV_WIRE_DELAY_US="$WIRE_US" "$BIN" worker \
+      --server "$fleet_addrs" --kv-shards "$s" --machine "$m" \
+      --model "$MODEL" --epochs "$EPOCHS" --batch "$BATCH" \
+      --examples "$sweep_examples" --devices "$DEVICES" \
+      --consistency "$CONSISTENCY" >/dev/null &
+    worker_pids="$worker_pids $!"
+  done
+  fail=0
+  for pid in $worker_pids; do
+    wait "$pid" || fail=1
+  done
+  t1="$(now_s)"
+  stop_fleet
+  if [ "$fail" -ne 0 ]; then
+    echo "a worker failed at $s shard(s)" >&2
+    exit 1
+  fi
+
+  wall="$(awk -v a="$t0" -v b="$t1" 'BEGIN { printf "%.3f", b - a }')"
+  images=$((sweep_workers * sweep_examples * EPOCHS))
+  ips="$(awk -v i="$images" -v w="$wall" 'BEGIN { printf "%.1f", i / w }')"
+  echo "   $s shard(s): ${wall}s wall, $images images -> $ips img/s"
+  [ -n "$records" ] && records="$records,"
+  records="$records
+    {\"name\": \"dist_train.shard_scaling\", \"case\": \"${s}shards_wire\", \"n\": $s, \"wall_s\": $wall, \"images\": $images, \"images_per_sec\": $ips}"
+  [ -n "$shard_scaling" ] && shard_scaling="$shard_scaling,"
+  shard_scaling="$shard_scaling \"ips_$s\": $ips"
 done
 
 if [ "${CHAOS:-0}" = "1" ]; then
@@ -190,7 +281,10 @@ cat > "$BENCH_OUT" <<EOF
   "global_batch_per_worker": $BATCH,
   "devices_per_worker": $DEVICES,
   "consistency": "$CONSISTENCY",
-  "note": "Figure 8-style measured scaling: 1 mixnet server + N mixnet workers over real TCP loopback; compare against sim/cluster.rs. Weak scaling: each worker holds its own $EXAMPLES-example synthetic shard.",
+  "server_shards": $SHARDS,
+  "shard_wire_us": $WIRE_US,
+  "shard_scaling": {$shard_scaling },
+  "note": "Figure 8-style measured scaling: a SHARDS-process mixnet server fleet + N mixnet workers over real TCP loopback; compare against sim/cluster.rs. Weak scaling: each worker holds its own $EXAMPLES-example synthetic shard. shard_scaling holds the serialized-wire shard sweep (PALLAS_KV_WIRE_DELAY_US): images/sec at each server-shard count.",
   "records": [$records
   ]
 }
